@@ -1,0 +1,72 @@
+//! Serving demo: start the coordinator in-process, register a corpus of
+//! vectors over TCP, then run similarity and kNN queries — the full L3
+//! request path (router → dynamic batcher → projector → packed store).
+//!
+//! ```bash
+//! cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+
+use crp::coordinator::server::{serve, ServerConfig};
+use crp::coordinator::SketchClient;
+use crp::projection::{ProjectionConfig, Projector};
+
+fn main() -> crp::Result<()> {
+    // Start the service on an ephemeral port.
+    let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+        k: 512,
+        seed: 0,
+        ..Default::default()
+    }));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    let addr = rx.recv()?.to_string();
+    println!("sketch service listening on {addr}");
+
+    // Register a corpus with planted similarity structure.
+    let mut client = SketchClient::connect(&addr)?;
+    let dim = 256;
+    let (anchor, near) = crp::data::pairs::unit_pair_with_rho(dim, 0.92, 5);
+    let (_, mid) = crp::data::pairs::unit_pair_with_rho(dim, 0.5, 5);
+    client.register("anchor", anchor.clone())?;
+    client.register("near", near)?;
+    client.register("mid", mid)?;
+    for i in 0..200 {
+        let (r, _) = crp::data::pairs::unit_pair_with_rho(dim, 0.0, 100 + i);
+        client.register(&format!("noise-{i}"), r)?;
+    }
+    println!("registered 203 vectors (codes only are stored)\n");
+
+    // Pairwise similarity estimates from the packed sketches.
+    for other in ["near", "mid", "noise-0"] {
+        let (rho, err) = client.estimate("anchor", other)?;
+        println!("rho(anchor, {other:<8}) = {rho:>6.3} ± {err:.3}");
+    }
+
+    // kNN over the sketch store.
+    let hits = client.knn(anchor, 5)?;
+    println!("\ntop-5 neighbors of anchor:");
+    for h in &hits {
+        println!("  {:<10} rho ≈ {:.3}", h.id, h.rho);
+    }
+    assert_eq!(hits[0].id, "anchor");
+    assert_eq!(hits[1].id, "near");
+
+    let stats = client.stats()?;
+    println!(
+        "\nstats: {} registered, {} estimates, {} knn, mean batch {:.1}, p50 register {}us",
+        stats.registered,
+        stats.estimates,
+        stats.knn_queries,
+        stats.mean_batch_size,
+        stats.p50_register_us
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! End-to-end driver (the headline E2E validation): generate the
+//! URL-like corpus, random-project every example, code with all four
+//! schemes, expand to sparse binary features (Section 6), train the
+//! linear SVM with dual coordinate descent, and report test accuracy —
+//! reproducing the shape of the paper's Figures 11, 12 and 14.
+//!
+//! ```bash
+//! cargo run --release --example svm_pipeline            # quick scale
+//! CRP_SCALE=1.0 cargo run --release --example svm_pipeline  # paper scale
+//! ```
+
+use crp::coding::{CodingParams, Scheme};
+use crp::data::synth::{SynthKind, SynthSpec};
+use crp::projection::{ProjectionConfig, Projector};
+use crp::svm::sweep::{project_dataset, run_coded_svm, SvmTask};
+
+fn main() {
+    let scale: f64 = std::env::var("CRP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15);
+    let mut spec = SynthSpec::paper(SynthKind::UrlLike);
+    if scale < 1.0 {
+        spec.train_n = ((spec.train_n as f64 * scale) as usize).max(200);
+        spec.test_n = ((spec.test_n as f64 * scale) as usize).max(200);
+        spec.dim = ((spec.dim as f64 * scale.max(0.1)) as usize).max(2000);
+        spec.n_informative = (spec.n_informative as f64 * scale.max(0.1)) as usize + 50;
+    }
+    println!(
+        "URL-like corpus: {} train / {} test, D = {}, ~{} nnz/row",
+        spec.train_n, spec.test_n, spec.dim, spec.avg_nnz
+    );
+    let t0 = std::time::Instant::now();
+    let (train, test) = spec.generate();
+    println!("generated in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let k_max = 256;
+    let projector = Projector::new_cpu(ProjectionConfig {
+        k: k_max,
+        seed: 11,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let ptr = project_dataset(&train, &projector);
+    let pte = project_dataset(&test, &projector);
+    println!(
+        "projected {} rows to k = {k_max} in {:.2}s\n",
+        train.len() + test.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    println!(
+        "{:>5} {:>6} {:<10} {:>9} {:>9} {:>8}",
+        "k", "w", "scheme", "train", "test", "sec"
+    );
+    for &k in &[16usize, 64, 256] {
+        // Slice the k-prefix out of the shared k_max projection.
+        let slice = |buf: &[f32], n: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; n * k];
+            for r in 0..n {
+                out[r * k..(r + 1) * k]
+                    .copy_from_slice(&buf[r * k_max..r * k_max + k]);
+            }
+            out
+        };
+        let (str_, ste) = (slice(&ptr, train.len()), slice(&pte, test.len()));
+        let tasks: Vec<(String, SvmTask)> = vec![
+            ("orig".into(), SvmTask::Orig),
+            ("h_w".into(), SvmTask::Coded(CodingParams::new(Scheme::Uniform, 0.75))),
+            ("h_wq".into(), SvmTask::Coded(CodingParams::new(Scheme::WindowOffset, 0.75))),
+            ("h_w2".into(), SvmTask::Coded(CodingParams::new(Scheme::TwoBit, 0.75))),
+            ("h_1".into(), SvmTask::Coded(CodingParams::new(Scheme::OneBit, 0.0))),
+            // Large-w contrast: the regime where the offset scheme breaks.
+            ("h_w(w=4)".into(), SvmTask::Coded(CodingParams::new(Scheme::Uniform, 4.0))),
+            ("h_wq(w=4)".into(), SvmTask::Coded(CodingParams::new(Scheme::WindowOffset, 4.0))),
+        ];
+        for (name, task) in &tasks {
+            let r = run_coded_svm(&str_, &train.y, &ste, &test.y, k, task, 1.0);
+            println!(
+                "{:>5} {:>6.2} {:<10} {:>9.4} {:>9.4} {:>8.2}",
+                k, r.w, name, r.train_acc, r.test_acc, r.train_seconds
+            );
+        }
+        println!();
+    }
+    println!("Expected shape (paper Figs 11/12/14): h_w ≈ h_w2 ≈ orig at");
+    println!("w ≈ 0.75 and k = 256; h_1 trails; h_wq collapses at w = 4");
+    println!("while h_w holds — the random offset is what hurts.");
+}

@@ -1,0 +1,108 @@
+"""AOT driver: lower the Layer-2 graphs to HLO **text** artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Re-running is cheap and idempotent; a manifest records shapes + content
+hashes so the Makefile can skip rebuilds.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Artifact shape table. Names must match rust/src/runtime/artifact.rs.
+BATCHES = (64, 256)
+D_TILE = 1024
+K = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_plan():
+    """(name, function, example-arg specs) for every exported graph."""
+    plan = []
+    for b in BATCHES:
+        plan.append(
+            (
+                f"proj_acc_b{b}_d{D_TILE}_k{K}",
+                model.proj_acc,
+                (spec((b, D_TILE)), spec((D_TILE, K)), spec((b, K))),
+            )
+        )
+    plan.append(
+        (
+            f"quantize_all_b{BATCHES[0]}_k{K}",
+            model.quantize_all,
+            (spec((BATCHES[0], K)), spec(()), spec((K,))),
+        )
+    )
+    plan.append(
+        (
+            f"collision_b{BATCHES[0]}_k{K}",
+            model.collision,
+            (
+                spec((BATCHES[0], K), jnp.int32),
+                spec((BATCHES[0], K), jnp.int32),
+            ),
+        )
+    )
+    plan.append(
+        (
+            f"proj_code_b{BATCHES[0]}_d{D_TILE}_k{K}",
+            model.proj_code,
+            (spec((BATCHES[0], D_TILE)), spec((D_TILE, K)), spec(())),
+        )
+    )
+    return plan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {}
+    for name, fn, specs in artifact_plan():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": [list(map(int, s.shape)) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

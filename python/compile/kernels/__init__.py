@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; never on the request path).
+
+* :mod:`project`   -- D-tiled projection matmul-accumulate + fused
+  project-and-code.
+* :mod:`quantize`  -- the four coding schemes in one fused pass.
+* :mod:`collision` -- per-pair collision counting.
+* :mod:`ref`       -- pure-jnp oracle for all of the above.
+"""
+
+from . import collision, project, quantize, ref  # noqa: F401

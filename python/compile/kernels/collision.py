@@ -1,0 +1,34 @@
+"""Layer-1 Pallas kernel: per-pair collision counting.
+
+Given two coded blocks (i32[B, K]), count per row how many coordinates
+agree — the sufficient statistic of the paper's linear estimator
+(`P̂ = collisions / k`). Row-parallel VPU reduction.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _collision_kernel(a_ref, b_ref, o_ref):
+    eq = (a_ref[...] == b_ref[...]).astype(jnp.int32)
+    # Keep the reduced axis as a (B, 1) block: TPU-friendly 2-D layout.
+    o_ref[...] = jnp.sum(eq, axis=1, keepdims=True)
+
+
+@jax.jit
+def collision_counts(a, b):
+    """Per-row collision counts: i32[B, K] × i32[B, K] → i32[B]."""
+    bb, k = a.shape
+    assert a.shape == b.shape
+    out = pl.pallas_call(
+        _collision_kernel,
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda: (0, 0)),
+            pl.BlockSpec((bb, k), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bb, 1), jnp.int32),
+        interpret=True,
+    )(a, b)
+    return out[:, 0]

@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: the D-tiled projection matmul-accumulate.
+
+The paper's compute hot-spot (Eq. 1) is the contraction
+``x[B,K] = u[B,D] @ R[D,K]``. On TPU this tiles as a 3-level loop with
+the MXU doing ``(bm, bd) x (bd, bn)`` block products and VMEM holding
+one tile of ``u``, one tile of ``R``, and the f32 accumulator. Here the
+grid iterates the contraction dimension; the output block is revisited
+every step (its index map ignores the grid axis), which expresses the
+accumulation the way a TPU pipeline would keep the accumulator resident
+in VMEM while streaming ``u``/``R`` tiles from HBM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+bridge ships to the Rust runtime. The BlockSpec structure is still the
+real TPU schedule — DESIGN.md §Perf derives the VMEM/MXU occupancy
+estimate from these shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Contraction tile. 256 divides every artifact D (1024) and keeps the
+# interpret-mode working set small; on real TPU this would be the bd of
+# the MXU pipeline (128-multiple).
+BD = 256
+
+
+def _proj_acc_kernel(u_ref, r_ref, acc_ref, o_ref):
+    """One grid step: o += u_tile @ r_tile (init from acc on step 0)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = acc_ref[...]
+
+    o_ref[...] += jnp.dot(
+        u_ref[...], r_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bd",))
+def project_acc(u, r, acc, *, bd=BD):
+    """``acc + u @ r`` via the Pallas kernel.
+
+    Args:
+      u:   f32[B, D] data tile (D must be a multiple of ``bd``).
+      r:   f32[D, K] projection tile.
+      acc: f32[B, K] running accumulator.
+    """
+    b, d = u.shape
+    d2, k = r.shape
+    assert d == d2 and acc.shape == (b, k)
+    assert d % bd == 0, f"D={d} not a multiple of bd={bd}"
+    grid = (d // bd,)
+    return pl.pallas_call(
+        _proj_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bd), lambda i: (0, i)),
+            pl.BlockSpec((bd, k), lambda i: (i, 0)),
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(u, r, acc)
+
+
+def _proj_code2_kernel(u_ref, r_ref, w_ref, acc_ref, o_ref):
+    """Fused projection + 2-bit coding epilogue.
+
+    The accumulator lives in the (revisited) ``acc_ref`` output-scratch
+    block; on the final contraction step the epilogue quantizes it into
+    the i32 code block — codes never round-trip through HBM as floats.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        u_ref[...], r_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _epilogue():
+        x = acc_ref[...]
+        w = w_ref[0, 0]
+        o_ref[...] = jnp.where(
+            x < -w, 0, jnp.where(x < 0.0, 1, jnp.where(x < w, 2, 3))
+        ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bd",))
+def project_code_two_bit(u, r, w, *, bd=BD):
+    """2-bit codes of ``u @ r`` with bin width ``w`` (f32 scalar array).
+
+    Returns i32[B, K] codes in {0,1,2,3}.
+    """
+    b, d = u.shape
+    d2, k = r.shape
+    assert d == d2
+    assert d % bd == 0
+    w2d = jnp.asarray(w, jnp.float32).reshape(1, 1)
+    grid = (d // bd,)
+    _, codes = pl.pallas_call(
+        _proj_code2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bd), lambda i: (0, i)),
+            pl.BlockSpec((bd, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),  # accumulator
+            jax.ShapeDtypeStruct((b, k), jnp.int32),  # codes
+        ],
+        interpret=True,
+    )(u, r, w2d)
+    return codes

@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernels: the four coding schemes of the paper, fused
+into one element-wise pass over the projected block.
+
+Quantization is pure VPU work (compares, floor, clip) on a block already
+resident in VMEM — on TPU it fuses behind the projection matmul; here it
+is also exported standalone (`quantize_all_*`) so the Rust runtime can
+re-code a cached projection under a new bin width without reprojecting.
+
+All kernels take the bin width ``w`` as a runtime (1,1) f32 block, so a
+single compiled artifact serves every w — the bin count ``B = ceil(6/w)``
+is computed inside the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CUTOFF = 6.0
+
+
+def _quantize_all_kernel(x_ref, w_ref, q_ref, hw_ref, hwq_ref, hw2_ref, h1_ref):
+    x = x_ref[...]
+    w = w_ref[0, 0]
+    q = q_ref[...]  # (1, K) offsets, broadcast over rows
+    b = jnp.ceil(CUTOFF / w)
+    clamped = jnp.clip(x, -CUTOFF, CUTOFF)
+    # h_w: floor + clamp to [-B, B-1], shift to start at 0.
+    hw = jnp.clip(jnp.floor(clamped / w), -b, b - 1.0) + b
+    hw_ref[...] = hw.astype(jnp.int32)
+    # h_{w,q}: random offset shifts the lattice; one extra bin.
+    hwq = jnp.clip(jnp.floor((clamped + q) / w), -b, b) + b
+    hwq_ref[...] = hwq.astype(jnp.int32)
+    # h_{w,2}: four fixed regions.
+    hw2_ref[...] = jnp.where(
+        x < -w, 0, jnp.where(x < 0.0, 1, jnp.where(x < w, 2, 3))
+    ).astype(jnp.int32)
+    # h_1: sign.
+    h1_ref[...] = (x >= 0.0).astype(jnp.int32)
+
+
+@jax.jit
+def quantize_all(x, w, q):
+    """All four codings of a projected block.
+
+    Args:
+      x: f32[B, K] projected values.
+      w: f32 scalar (bin width).
+      q: f32[K] per-coordinate offsets for ``h_{w,q}``.
+
+    Returns:
+      (hw, hwq, hw2, h1), each i32[B, K].
+    """
+    b, k = x.shape
+    w2d = jnp.asarray(w, jnp.float32).reshape(1, 1)
+    q2d = jnp.asarray(q, jnp.float32).reshape(1, k)
+    out = jax.ShapeDtypeStruct((b, k), jnp.int32)
+    return pl.pallas_call(
+        _quantize_all_kernel,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda: (0, 0)),
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+            pl.BlockSpec((1, k), lambda: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((b, k), lambda: (0, 0))] * 4,
+        out_shape=[out, out, out, out],
+        interpret=True,
+    )(x, w2d, q2d)

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracle for the Pallas kernels.
+
+Every kernel in this package has an exact reference here; pytest asserts
+``allclose`` (exact equality for the integer coding outputs). The coding
+semantics mirror ``rust/src/coding/schemes.rs`` at the level of code
+*values* (bins are shifted to start at 0):
+
+* uniform  ``h_w``     : clamp(x, ±cutoff) → floor(x/w) → clamp to
+                         [-B, B-1] → +B,  B = ceil(cutoff/w)
+* offset   ``h_{w,q}`` : clamp(x, ±cutoff) → floor((x+q)/w) → clamp to
+                         [-B, B] → +B
+* two-bit  ``h_{w,2}`` : regions (-inf,-w), [-w,0), [0,w), [w,inf) → 0..3
+* one-bit  ``h_1``     : x >= 0
+"""
+
+import jax.numpy as jnp
+
+CUTOFF = 6.0
+
+
+def project_acc(u, r, acc):
+    """acc + u @ r, f32 accumulate (matches the proj_acc kernel)."""
+    return acc + jnp.dot(u, r, preferred_element_type=jnp.float32)
+
+
+def encode_uniform(x, w):
+    b = jnp.ceil(CUTOFF / w)
+    clamped = jnp.clip(x, -CUTOFF, CUTOFF)
+    code = jnp.floor(clamped / w)
+    return (jnp.clip(code, -b, b - 1.0) + b).astype(jnp.int32)
+
+
+def encode_offset(x, w, q):
+    """q has shape (k,) and broadcasts over the batch dimension of x."""
+    b = jnp.ceil(CUTOFF / w)
+    clamped = jnp.clip(x, -CUTOFF, CUTOFF)
+    code = jnp.floor((clamped + q) / w)
+    return (jnp.clip(code, -b, b) + b).astype(jnp.int32)
+
+
+def encode_two_bit(x, w):
+    return jnp.where(
+        x < -w, 0, jnp.where(x < 0.0, 1, jnp.where(x < w, 2, 3))
+    ).astype(jnp.int32)
+
+
+def encode_one_bit(x):
+    return (x >= 0.0).astype(jnp.int32)
+
+
+def quantize_all(x, w, q):
+    return (
+        encode_uniform(x, w),
+        encode_offset(x, w, q),
+        encode_two_bit(x, w),
+        encode_one_bit(x),
+    )
+
+
+def collision_counts(a, b):
+    """Per-row count of equal codes: (B, K) i32 pairs → (B,) i32."""
+    return jnp.sum((a == b).astype(jnp.int32), axis=1)
+
+
+def project_code_two_bit(u, r, w):
+    """Fused projection + 2-bit coding (matches the proj_code kernel)."""
+    x = jnp.dot(u, r, preferred_element_type=jnp.float32)
+    return encode_two_bit(x, w)

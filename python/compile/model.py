@@ -1,0 +1,39 @@
+"""Layer-2 JAX graphs: the exported computations, composed from the
+Layer-1 Pallas kernels.
+
+Each function here is AOT-lowered by :mod:`compile.aot` at a fixed shape
+and shipped to the Rust runtime as HLO text. Python never runs at serve
+time — these exist only to define the dataflow the coordinator executes.
+
+Exported graphs (shapes baked at AOT time, names in
+``rust/src/runtime/artifact.rs``):
+
+* ``proj_acc``     — ``(u[B,D], r[D,K], acc[B,K]) → (acc + u·r,)``
+  The D-tiled projection step; Rust loops it over tiles of the virtual
+  projection matrix, so any data dimensionality runs through one shape.
+* ``quantize_all`` — ``(x[B,K], w, offs[K]) → (hw, hwq, hw2, h1)``
+  All four codings of a projected block in one dispatch.
+* ``collision``    — ``(a[B,K], b[B,K]) → (counts[B],)``
+* ``proj_code``    — ``(u[B,D], r[D,K], w) → (codes2bit[B,K],)``
+  Fused project + 2-bit code: the recommended-scheme fast path.
+"""
+
+from .kernels import collision as kcollision
+from .kernels import project as kproject
+from .kernels import quantize as kquantize
+
+
+def proj_acc(u, r, acc):
+    return (kproject.project_acc(u, r, acc),)
+
+
+def quantize_all(x, w, offs):
+    return tuple(kquantize.quantize_all(x, w, offs))
+
+
+def collision(a, b):
+    return (kcollision.collision_counts(a, b),)
+
+
+def proj_code(u, r, w):
+    return (kproject.project_code_two_bit(u, r, w),)

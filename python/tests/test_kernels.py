@@ -1,0 +1,224 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Every Pallas kernel is checked against the pure-jnp oracle in
+``compile.kernels.ref`` — exact equality for integer codes, allclose for
+float accumulations — over fixed shapes and hypothesis-driven sweeps of
+shapes, widths, and value ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import collision, project, quantize, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- project
+
+
+class TestProjectAcc:
+    def test_matches_ref_basic(self):
+        u = rand(0, (8, 512))
+        r = rand(1, (512, 32))
+        acc = rand(2, (8, 32))
+        got = project.project_acc(u, r, acc)
+        want = ref.project_acc(u, r, acc)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_acc_is_plain_matmul(self):
+        u = rand(3, (4, 256))
+        r = rand(4, (256, 16))
+        got = project.project_acc(u, r, jnp.zeros((4, 16), jnp.float32))
+        np.testing.assert_allclose(got, u @ r, rtol=1e-4, atol=1e-4)
+
+    def test_accumulation_chains_over_tiles(self):
+        # Chaining two D-tiles == projecting the concatenated input.
+        u1, u2 = rand(5, (4, 256)), rand(6, (4, 256))
+        r1, r2 = rand(7, (256, 16)), rand(8, (256, 16))
+        acc = jnp.zeros((4, 16), jnp.float32)
+        acc = project.project_acc(u1, r1, acc)
+        acc = project.project_acc(u2, r2, acc)
+        full = jnp.concatenate([u1, u2], axis=1) @ jnp.concatenate([r1, r2], axis=0)
+        np.testing.assert_allclose(acc, full, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 16),
+        d_tiles=st.integers(1, 4),
+        k=st.integers(1, 64),
+        seed=st.integers(0, 2**30),
+    )
+    def test_matches_ref_hypothesis(self, b, d_tiles, k, seed):
+        d = d_tiles * 256
+        u = rand(seed, (b, d))
+        r = rand(seed + 1, (d, k))
+        acc = rand(seed + 2, (b, k))
+        got = project.project_acc(u, r, acc)
+        want = ref.project_acc(u, r, acc)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_rejects_non_multiple_d(self):
+        with pytest.raises(AssertionError):
+            project.project_acc(
+                rand(0, (2, 100)), rand(1, (100, 8)), jnp.zeros((2, 8))
+            )
+
+
+class TestProjectCode:
+    def test_matches_ref(self):
+        u = rand(10, (8, 512))
+        r = rand(11, (512, 32))
+        for w in (0.25, 0.75, 1.5):
+            got = project.project_code_two_bit(u, r, jnp.float32(w))
+            want = ref.project_code_two_bit(u, r, jnp.float32(w))
+            np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 8),
+        k=st.integers(1, 32),
+        w=st.floats(0.05, 4.0),
+        seed=st.integers(0, 2**30),
+    )
+    def test_hypothesis(self, b, k, w, seed):
+        u = rand(seed, (b, 512))
+        r = rand(seed + 9, (512, k))
+        got = project.project_code_two_bit(u, r, jnp.float32(w))
+        want = ref.project_code_two_bit(u, r, jnp.float32(w))
+        # Codes are integers; matmul rounding can flip values that sit
+        # exactly on a bin boundary — allow a vanishing fraction.
+        mismatch = np.mean(np.asarray(got) != np.asarray(want))
+        assert mismatch < 1e-3, f"mismatch fraction {mismatch}"
+
+    def test_codes_in_range(self):
+        u = rand(12, (4, 256), scale=3.0)
+        r = rand(13, (256, 16))
+        codes = np.asarray(project.project_code_two_bit(u, r, jnp.float32(0.75)))
+        assert codes.min() >= 0 and codes.max() <= 3
+
+
+# --------------------------------------------------------------- quantize
+
+
+class TestQuantizeAll:
+    def encode_all(self, x, w, q):
+        return quantize.quantize_all(x, jnp.float32(w), q)
+
+    def test_matches_ref_fixed(self):
+        x = rand(20, (16, 64), scale=2.0)
+        q = jax.random.uniform(jax.random.PRNGKey(21), (64,), jnp.float32) * 0.75
+        got = self.encode_all(x, 0.75, q)
+        want = ref.quantize_all(x, jnp.float32(0.75), q)
+        for g, wv, name in zip(got, want, ["hw", "hwq", "hw2", "h1"]):
+            np.testing.assert_array_equal(g, wv, err_msg=name)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 16),
+        k=st.integers(1, 96),
+        w=st.floats(0.1, 8.0),
+        scale=st.floats(0.1, 4.0),
+        seed=st.integers(0, 2**30),
+    )
+    def test_matches_ref_hypothesis(self, b, k, w, scale, seed):
+        x = rand(seed, (b, k), scale=scale)
+        q = (
+            jax.random.uniform(jax.random.PRNGKey(seed + 1), (k,), jnp.float32)
+            * w
+        )
+        got = self.encode_all(x, w, q)
+        want = ref.quantize_all(x, jnp.float32(w), q)
+        for g, wv in zip(got, want):
+            np.testing.assert_array_equal(g, wv)
+
+    def test_uniform_code_range(self):
+        # w = 2 ⇒ cardinality 6 (paper Section 1.1 example).
+        x = jnp.linspace(-10, 10, 101).reshape(1, -1)
+        q = jnp.zeros((101,), jnp.float32)
+        hw, hwq, hw2, h1 = self.encode_all(x, 2.0, q)
+        assert int(jnp.min(hw)) == 0
+        assert int(jnp.max(hw)) == 5
+        assert int(jnp.max(hwq)) <= 6
+        assert set(np.unique(np.asarray(hw2))) <= {0, 1, 2, 3}
+        assert set(np.unique(np.asarray(h1))) <= {0, 1}
+
+    def test_one_bit_is_sign(self):
+        x = jnp.array([[-1.0, -0.0, 0.0, 2.0]])
+        q = jnp.zeros((4,), jnp.float32)
+        _, _, _, h1 = self.encode_all(x, 1.0, q)
+        np.testing.assert_array_equal(np.asarray(h1)[0], [0, 1, 1, 1])
+
+    def test_offsets_shift_lattice(self):
+        x = jnp.full((1, 8), 0.9, jnp.float32)
+        q0 = jnp.zeros((8,), jnp.float32)
+        q1 = jnp.full((8,), 0.2, jnp.float32)
+        _, a, _, _ = self.encode_all(x, 1.0, q0)
+        _, b, _, _ = self.encode_all(x, 1.0, q1)
+        assert int(np.asarray(b)[0, 0]) == int(np.asarray(a)[0, 0]) + 1
+
+
+# --------------------------------------------------------------- collision
+
+
+class TestCollision:
+    def test_matches_ref(self):
+        key = jax.random.PRNGKey(30)
+        a = jax.random.randint(key, (8, 128), 0, 4, jnp.int32)
+        b = jax.random.randint(jax.random.PRNGKey(31), (8, 128), 0, 4, jnp.int32)
+        got = collision.collision_counts(a, b)
+        want = ref.collision_counts(a, b)
+        np.testing.assert_array_equal(got, want)
+
+    def test_identical_rows_full_count(self):
+        a = jax.random.randint(jax.random.PRNGKey(32), (4, 64), 0, 12, jnp.int32)
+        got = np.asarray(collision.collision_counts(a, a))
+        np.testing.assert_array_equal(got, np.full(4, 64))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 12),
+        k=st.integers(1, 200),
+        card=st.integers(2, 24),
+        seed=st.integers(0, 2**30),
+    )
+    def test_hypothesis(self, b, k, card, seed):
+        a = jax.random.randint(jax.random.PRNGKey(seed), (b, k), 0, card, jnp.int32)
+        c = jax.random.randint(
+            jax.random.PRNGKey(seed + 1), (b, k), 0, card, jnp.int32
+        )
+        np.testing.assert_array_equal(
+            collision.collision_counts(a, c), ref.collision_counts(a, c)
+        )
+
+
+# --------------------------------------------- statistical (end-to-end L1)
+
+
+class TestCollisionStatistics:
+    """Monte-Carlo check that kernel codes reproduce the paper's P(ρ)."""
+
+    def p1(self, rho):
+        return 1.0 - np.arccos(rho) / np.pi
+
+    def test_one_bit_collision_probability(self):
+        rho = 0.6
+        k = 200_000
+        key1, key2 = jax.random.split(jax.random.PRNGKey(40))
+        z1 = jax.random.normal(key1, (1, k), jnp.float32)
+        z2 = jax.random.normal(key2, (1, k), jnp.float32)
+        x = z1
+        y = rho * z1 + np.sqrt(1 - rho * rho) * z2
+        q = jnp.zeros((k,), jnp.float32)
+        _, _, _, h1x = quantize.quantize_all(x, jnp.float32(1.0), q)
+        _, _, _, h1y = quantize.quantize_all(y, jnp.float32(1.0), q)
+        rate = float(collision.collision_counts(h1x, h1y)[0]) / k
+        want = self.p1(rho)
+        assert abs(rate - want) < 5e-3, f"{rate} vs {want}"

@@ -1,0 +1,68 @@
+//! Hot-path microbenchmarks: encoding, packing, collision counting —
+//! the per-sketch operations on the serving path.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use crp::coding::{
+    collision_count, collision_count_packed, pack_codes, CodingParams, Scheme,
+};
+use crp::data::pairs::bivariate_normal_batch;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let k = 4096;
+    let (x, y) = bivariate_normal_batch(k, 0.7, 1);
+
+    for (scheme, w) in [
+        (Scheme::Uniform, 0.75),
+        (Scheme::WindowOffset, 0.75),
+        (Scheme::TwoBit, 0.75),
+        (Scheme::OneBit, 0.0),
+    ] {
+        let params = CodingParams::new(scheme, w);
+        let offsets = match scheme {
+            Scheme::WindowOffset => Some(params.offsets(k)),
+            _ => None,
+        };
+        let mut out = vec![0u16; k];
+        b.run(
+            &format!("encode/{}/k{k}", scheme.label()),
+            k as u64,
+            || {
+                params.encode_into(&x, offsets.as_deref(), &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+    }
+
+    let params = CodingParams::new(Scheme::TwoBit, 0.75);
+    let cu = params.encode(&x);
+    let cv = params.encode(&y);
+    b.run("pack/2bit/k4096", k as u64, || {
+        std::hint::black_box(pack_codes(&cu, 2));
+    });
+
+    let pu = pack_codes(&cu, 2);
+    let pv = pack_codes(&cv, 2);
+    b.run("collision/scalar/k4096", k as u64, || {
+        std::hint::black_box(collision_count(&cu, &cv));
+    });
+    b.run("collision/packed-2bit/k4096", k as u64, || {
+        std::hint::black_box(collision_count_packed(&pu, &pv));
+    });
+
+    let p1 = CodingParams::new(Scheme::OneBit, 0.0);
+    let b1u = pack_codes(&p1.encode(&x), 1);
+    let b1v = pack_codes(&p1.encode(&y), 1);
+    b.run("collision/packed-1bit/k4096", k as u64, || {
+        std::hint::black_box(collision_count_packed(&b1u, &b1v));
+    });
+
+    // One-hot expansion (Section 6 feature building).
+    b.run("expand/2bit/k4096", k as u64, || {
+        std::hint::black_box(crp::coding::expand_to_sparse(&cu, 4));
+    });
+
+    b.finish();
+}

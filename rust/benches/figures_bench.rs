@@ -1,0 +1,26 @@
+//! Per-figure regeneration benchmarks: one entry per paper figure, so
+//! `cargo bench figures` measures the cost of reproducing the paper's
+//! whole evaluation. SVM figures run at reduced scale (0.05) here; the
+//! CLI (`crp figures --scale 1.0`) does the paper-scale runs.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use crp::figures::run_figure;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    // Theory figures: exact curves (Figures 1-10).
+    for fig in [1u32, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
+        b.run(&format!("figure/{fig:02}"), 1, || {
+            std::hint::black_box(run_figure(fig, 1.0).unwrap());
+        });
+    }
+    // SVM figures at smoke scale (Figures 11-14).
+    for fig in [11u32, 12, 13, 14] {
+        b.run(&format!("figure/{fig:02}-scale0.05"), 1, || {
+            std::hint::black_box(run_figure(fig, 0.05).unwrap());
+        });
+    }
+    b.finish();
+}

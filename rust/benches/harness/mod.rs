@@ -1,0 +1,85 @@
+//! Minimal benchmark harness (criterion is not vendored in this
+//! environment). Adaptive iteration count targeting a fixed measurement
+//! window, warmup, and median-of-samples reporting. Honors the standard
+//! `--bench` flag cargo passes and an optional substring filter.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    filter: Option<String>,
+    results: Vec<(String, f64, f64)>, // name, median ns/iter, throughput
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let mut filter = None;
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--bench" || a.starts_with("--") {
+                continue;
+            }
+            filter = Some(a);
+        }
+        Bench {
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs `items` logical units of work per call
+    /// (used for the throughput column; pass 1 for latency-style runs).
+    pub fn run<F: FnMut()>(&mut self, name: &str, items: u64, mut f: F) {
+        if let Some(fil) = &self.filter {
+            if !name.contains(fil.as_str()) {
+                return;
+            }
+        }
+        // Warmup + calibration: find iters/sample for ~30ms samples.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((Duration::from_millis(30).as_nanos() / once.as_nanos()).max(1)) as u64;
+        let samples = if once > Duration::from_millis(300) { 3 } else { 10 };
+        let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = per_iter[per_iter.len() / 2];
+        let throughput = items as f64 / (median / 1e9);
+        println!(
+            "{name:<52} {:>14} ns/iter {:>16} items/s",
+            fmt_thousands(median as u64),
+            fmt_thousands(throughput as u64)
+        );
+        self.results.push((name.to_string(), median, throughput));
+    }
+
+    pub fn finish(&self) {
+        println!("\n{} benchmarks run", self.results.len());
+    }
+}
+
+pub fn fmt_thousands(mut v: u64) -> String {
+    let mut parts = Vec::new();
+    loop {
+        if v < 1000 {
+            parts.push(v.to_string());
+            break;
+        }
+        parts.push(format!("{:03}", v % 1000));
+        v /= 1000;
+    }
+    parts.reverse();
+    parts.join(",")
+}

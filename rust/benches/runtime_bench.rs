@@ -1,0 +1,57 @@
+//! PJRT runtime benchmarks: artifact dispatch overhead and projection
+//! throughput on the AOT path vs the pure-Rust path. Skips (with a
+//! message) when `make artifacts` has not been run.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use crp::projection::{ProjectionConfig, Projector};
+use crp::runtime::{ArtifactId, ArtifactRegistry, PjrtRuntime};
+use std::sync::Arc;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let reg = ArtifactRegistry::default_location();
+    if !reg.exists(&ArtifactId::proj_acc(64, 1024, 256)) {
+        println!("SKIP runtime_bench: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Arc::new(PjrtRuntime::cpu(reg).expect("PJRT runtime"));
+
+    let cfg = ProjectionConfig {
+        k: 256,
+        seed: 1,
+        d_tile: 1024,
+        b_tile: 64,
+        max_cached_tiles: 8,
+    };
+    let pure = Projector::new_cpu(cfg.clone());
+    let pjrt = Projector::new_pjrt(cfg, rt.clone());
+    assert!(pjrt.pjrt_active());
+
+    let (bsz, d) = (64usize, 1024usize);
+    let mut g = crp::mathx::Pcg64::new(9, 0);
+    let u: Vec<f32> = (0..bsz * d).map(|_| g.next_f64() as f32 - 0.5).collect();
+
+    b.run("project/pure/b64-d1024-k256", (bsz * d * 256) as u64, || {
+        std::hint::black_box(pure.project_batch(&u, bsz, d));
+    });
+    b.run("project/pjrt/b64-d1024-k256", (bsz * d * 256) as u64, || {
+        std::hint::black_box(pjrt.project_batch(&u, bsz, d));
+    });
+
+    // Dispatch overhead: smallest artifact (collision count).
+    let id = ArtifactId::collision(64, 256);
+    let a: Vec<i32> = (0..64 * 256).map(|_| g.next_below(4) as i32).collect();
+    let la = PjrtRuntime::literal_i32(&a, &[64, 256]).unwrap();
+    let lb = PjrtRuntime::literal_i32(&a, &[64, 256]).unwrap();
+    // Pre-compile.
+    rt.executable(&id).unwrap();
+    b.run("pjrt-dispatch/collision-b64-k256", (64 * 256) as u64, || {
+        let la2 = la.clone();
+        let lb2 = lb.clone();
+        std::hint::black_box(rt.execute(&id, &[la2, lb2]).unwrap());
+    });
+
+    b.finish();
+}

@@ -1,0 +1,153 @@
+//! Coordinator end-to-end benchmark: request RTT and throughput through
+//! the full TCP → router → batcher → projector → store path.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use crp::coordinator::server::{serve, ServerConfig};
+use crp::coordinator::SketchClient;
+use crp::projection::{ProjectionConfig, Projector};
+use std::sync::Arc;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+        k: 256,
+        seed: 1,
+        ..Default::default()
+    }));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    let addr = rx.recv().unwrap().to_string();
+
+    let mut client = SketchClient::connect(&addr).unwrap();
+    let dim = 256;
+    let mut g = crp::mathx::Pcg64::new(5, 0);
+    let v: Vec<f32> = (0..dim).map(|_| g.next_f64() as f32 - 0.5).collect();
+
+    // Single-connection register RTT (includes the 2ms batching window
+    // when traffic is sparse — this is the latency a lone client sees).
+    let mut i = 0u64;
+    b.run("serve/register-rtt/dim256", 1, || {
+        i += 1;
+        client.register(&format!("bench-{i}"), v.clone()).unwrap();
+    });
+
+    client.register("q", v.clone()).unwrap();
+    b.run("serve/estimate-rtt", 1, || {
+        std::hint::black_box(client.estimate("q", "bench-1").unwrap());
+    });
+
+    b.run("serve/knn-10-rtt", 1, || {
+        std::hint::black_box(client.knn(v.clone(), 10).unwrap());
+    });
+
+    // Concurrent throughput: 8 closed-loop clients.
+    let n_clients = 8;
+    let per = 200;
+    let t = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cl = SketchClient::connect(&addr).unwrap();
+            let mut g = crp::mathx::Pcg64::new(100 + c, 0);
+            for i in 0..per {
+                let v: Vec<f32> = (0..256).map(|_| g.next_f64() as f32).collect();
+                cl.register(&format!("t{c}-{i}"), v).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = t.elapsed().as_secs_f64();
+    println!(
+        "{:<52} {:>14.0} req/s ({} clients x {} registers in {:.2}s)",
+        "serve/register-throughput/8conn",
+        (n_clients * per) as f64 / total,
+        n_clients,
+        per,
+        total
+    );
+
+    let mut cl = SketchClient::connect(&addr).unwrap();
+    let stats = cl.stats().unwrap();
+    println!(
+        "{:<52} {:>14.1} vectors/batch",
+        "serve/mean-batch-size", stats.mean_batch_size
+    );
+
+    // Ablation: batching policy (max_batch × idle_flush) vs throughput
+    // under 8 closed-loop clients — the design-choice sweep behind the
+    // coordinator defaults (DESIGN.md §7 / EXPERIMENTS.md §Perf).
+    println!("
+batching-policy ablation (8 closed-loop clients, dim 256):");
+    println!(
+        "{:<16} {:>12} {:>12} {:>12}",
+        "max_batch", "idle_us", "req/s", "mean_batch"
+    );
+    for &(max_batch, idle_us) in &[
+        (1usize, 0u64),
+        (16, 150),
+        (64, 150),
+        (64, 2000), // no early flush (idle == deadline)
+        (256, 150),
+    ] {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 256,
+            seed: 1,
+            ..Default::default()
+        }));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: crp::coordinator::BatcherConfig {
+                max_batch,
+                max_delay: std::time::Duration::from_millis(2),
+                idle_flush: std::time::Duration::from_micros(idle_us.max(1)),
+            },
+            ..Default::default()
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = serve(projector, cfg, Some(tx));
+        });
+        let addr = rx.recv().unwrap().to_string();
+        let n_clients = 8;
+        let per = 150;
+        let t = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut cl = SketchClient::connect(&addr).unwrap();
+                let mut g = crp::mathx::Pcg64::new(200 + c, 0);
+                for i in 0..per {
+                    let v: Vec<f32> = (0..256).map(|_| g.next_f64() as f32).collect();
+                    cl.register(&format!("t{c}-{i}"), v).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = t.elapsed().as_secs_f64();
+        let mut cl = SketchClient::connect(&addr).unwrap();
+        let stats = cl.stats().unwrap();
+        println!(
+            "{:<16} {:>12} {:>12.0} {:>12.1}",
+            max_batch,
+            idle_us,
+            (n_clients * per) as f64 / total,
+            stats.mean_batch_size
+        );
+    }
+
+    b.finish();
+}

@@ -1,0 +1,72 @@
+//! Section-6 pipeline benchmarks: projection of sparse datasets, feature
+//! expansion, and DCD training epochs (Figures 11–14's compute).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use crp::coding::{CodingParams, Scheme};
+use crp::data::synth::{SynthKind, SynthSpec};
+use crp::projection::{ProjectionConfig, Projector};
+use crp::svm::dcd::{train_dcd, DcdConfig};
+use crp::svm::sweep::{project_dataset, run_coded_svm, SvmTask};
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let spec = SynthSpec::small(SynthKind::FarmLike);
+    let (train, test) = spec.generate();
+    let k = 128;
+    let projector = Projector::new_cpu(ProjectionConfig {
+        k,
+        seed: 3,
+        ..Default::default()
+    });
+
+    b.run(
+        &format!("project/sparse-dataset/{}rows-k{k}", train.len()),
+        train.len() as u64,
+        || {
+            std::hint::black_box(project_dataset(&train, &projector));
+        },
+    );
+
+    let ptr = project_dataset(&train, &projector);
+    let pte = project_dataset(&test, &projector);
+
+    for (name, task) in [
+        ("orig", SvmTask::Orig),
+        (
+            "h_w2",
+            SvmTask::Coded(CodingParams::new(Scheme::TwoBit, 0.75)),
+        ),
+    ] {
+        b.run(
+            &format!("svm-e2e/{name}/k{k}"),
+            train.len() as u64,
+            || {
+                std::hint::black_box(run_coded_svm(
+                    &ptr, &train.y, &pte, &test.y, k, &task, 1.0,
+                ));
+            },
+        );
+    }
+
+    // Raw DCD on the expanded features (training only).
+    let params = CodingParams::new(Scheme::TwoBit, 0.75);
+    let card = params.cardinality();
+    let mut x = crp::data::CsrMatrix::with_capacity(train.len(), train.len() * k, k * card);
+    let mut codes = vec![0u16; k];
+    for r in 0..train.len() {
+        params.encode_into(&ptr[r * k..(r + 1) * k], None, &mut codes);
+        let (idx, val) = crp::coding::expand_to_sparse(&codes, card);
+        x.push_row(&idx, &val);
+    }
+    b.run(
+        &format!("dcd-train/{}x{}nnz", train.len(), train.len() * k),
+        (train.len() * k) as u64,
+        || {
+            std::hint::black_box(train_dcd(&x, &train.y, &DcdConfig::default()));
+        },
+    );
+
+    b.finish();
+}

@@ -1,0 +1,42 @@
+//! Theory-layer benchmarks: collision probabilities, variance factors,
+//! inversion tables — the analysis code behind Figures 1–10.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use crp::theory::{p_w, p_w2, p_wq, v_w, v_w2, v_wq, InversionTable, SchemeKind};
+
+fn main() {
+    let mut b = harness::Bench::new();
+
+    b.run("collision/p_w(0.5, 0.75)", 1, || {
+        std::hint::black_box(p_w(0.5, 0.75));
+    });
+    b.run("collision/p_wq(0.5, 0.75)", 1, || {
+        std::hint::black_box(p_wq(0.5, 0.75));
+    });
+    b.run("collision/p_w2(0.5, 0.75)", 1, || {
+        std::hint::black_box(p_w2(0.5, 0.75));
+    });
+    b.run("variance/v_w(0.5, 0.75)", 1, || {
+        std::hint::black_box(v_w(0.5, 0.75));
+    });
+    b.run("variance/v_wq(0.5, 0.75)", 1, || {
+        std::hint::black_box(v_wq(0.5, 0.75));
+    });
+    b.run("variance/v_w2(0.5, 0.75)", 1, || {
+        std::hint::black_box(v_w2(0.5, 0.75));
+    });
+    b.run("optimum/argmin_w V_w(rho=0.9)", 1, || {
+        std::hint::black_box(crp::theory::optimum_w(SchemeKind::Uniform, 0.9));
+    });
+    b.run("invert/table-build/2bit-2048pt", 2048, || {
+        std::hint::black_box(InversionTable::build(SchemeKind::TwoBit, 0.75, 2048));
+    });
+    let table = InversionTable::build_default(SchemeKind::TwoBit, 0.75);
+    b.run("invert/table-lookup", 1, || {
+        std::hint::black_box(table.rho(0.6123));
+    });
+
+    b.finish();
+}

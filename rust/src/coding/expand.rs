@@ -1,0 +1,127 @@
+//! The Section-6 one-hot expansion: turn `k` codes into a sparse binary
+//! feature vector for the linear SVM.
+//!
+//! With cardinality `m` codes, projected coordinate `j` with code `c_j`
+//! contributes a single 1 at index `j·m + c_j`, giving a vector of length
+//! `k·m` with exactly `k` ones. The paper normalizes inputs to unit norm
+//! before LIBLINEAR, so values are `1/√k`.
+//!
+//! The expansion makes the linear kernel equal (up to scale) to the
+//! collision count: `⟨x̃_u, x̃_v⟩ = (1/k) Σ_j 1{c_u[j] = c_v[j]} = P̂`,
+//! which is why an inner-product machine can exploit the coded data.
+
+/// Dimensionality of the expanded feature space.
+pub fn expanded_dim(k: usize, cardinality: usize) -> usize {
+    k * cardinality
+}
+
+/// Expand codes to sorted sparse (index, value) pairs with unit norm.
+pub fn expand_to_sparse(codes: &[u16], cardinality: usize) -> (Vec<u32>, Vec<f32>) {
+    let k = codes.len();
+    let val = if k == 0 { 0.0 } else { 1.0 / (k as f32).sqrt() };
+    let mut idx = Vec::with_capacity(k);
+    for (j, &c) in codes.iter().enumerate() {
+        debug_assert!((c as usize) < cardinality, "code out of range");
+        idx.push((j * cardinality + c as usize) as u32);
+    }
+    (idx, vec![val; k])
+}
+
+/// Expand into caller-provided buffers (allocation-free hot path).
+/// Buffers must have length `codes.len()`.
+pub fn expand_into(codes: &[u16], cardinality: usize, idx: &mut [u32], val: &mut [f32]) {
+    let k = codes.len();
+    assert_eq!(idx.len(), k);
+    assert_eq!(val.len(), k);
+    let v = if k == 0 { 0.0 } else { 1.0 / (k as f32).sqrt() };
+    for (j, &c) in codes.iter().enumerate() {
+        idx[j] = (j * cardinality + c as usize) as u32;
+        val[j] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodingParams, Scheme};
+
+    #[test]
+    fn paper_section6_example() {
+        // h_{w,2}, w = 0.75: x = -2 ⇒ [1 0 0 0]; x = -0.3 ⇒ [0 1 0 0];
+        // x = 0.1 ⇒ [0 0 1 0]; x = 1.0 ⇒ [0 0 0 1].
+        let p = CodingParams::new(Scheme::TwoBit, 0.75);
+        let codes = p.encode(&[-2.0, -0.3, 0.1, 1.0]);
+        let (idx, val) = expand_to_sparse(&codes, 4);
+        assert_eq!(idx, vec![0, 4 + 1, 8 + 2, 12 + 3]);
+        let v = 1.0 / 2.0; // 1/√4
+        assert!(val.iter().all(|&x| (x - v).abs() < 1e-7));
+    }
+
+    #[test]
+    fn exactly_k_ones_unit_norm() {
+        let p = CodingParams::new(Scheme::Uniform, 0.5);
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.1).collect();
+        let codes = p.encode(&xs);
+        let (idx, val) = expand_to_sparse(&codes, p.cardinality());
+        assert_eq!(idx.len(), 64);
+        let norm: f32 = val.iter().map(|v| v * v).sum();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // Indices strictly increasing (one per block).
+        for w in idx.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(*idx.last().unwrap() < expanded_dim(64, p.cardinality()) as u32);
+    }
+
+    #[test]
+    fn inner_product_equals_collision_rate() {
+        // ⟨expand(u), expand(v)⟩ = collision_rate — the linear-estimator
+        // identity the whole Section 6 construction rests on.
+        let p = CodingParams::new(Scheme::TwoBit, 0.75);
+        let xu: Vec<f32> = (0..128).map(|i| ((i * 37) % 64) as f32 * 0.05 - 1.6).collect();
+        let xv: Vec<f32> = (0..128).map(|i| ((i * 53) % 64) as f32 * 0.05 - 1.6).collect();
+        let cu = p.encode(&xu);
+        let cv = p.encode(&xv);
+        let (iu, vu) = expand_to_sparse(&cu, 4);
+        let (iv, vv) = expand_to_sparse(&cv, 4);
+        // Sparse dot product (both sorted).
+        let mut dot = 0.0f64;
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < iu.len() && b < iv.len() {
+            match iu[a].cmp(&iv[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    dot += (vu[a] * vv[b]) as f64;
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        let collisions = crate::coding::collision_count(&cu, &cv);
+        assert!(
+            (dot - collisions as f64 / 128.0).abs() < 1e-6,
+            "dot={dot} rate={}",
+            collisions as f64 / 128.0
+        );
+    }
+
+    #[test]
+    fn expand_into_matches_alloc() {
+        let p = CodingParams::new(Scheme::OneBit, 0.0);
+        let xs: Vec<f32> = (0..33).map(|i| (i as f32) - 16.0).collect();
+        let codes = p.encode(&xs);
+        let (i1, v1) = expand_to_sparse(&codes, 2);
+        let mut i2 = vec![0u32; 33];
+        let mut v2 = vec![0f32; 33];
+        expand_into(&codes, 2, &mut i2, &mut v2);
+        assert_eq!(i1, i2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn empty_input() {
+        let (i, v) = expand_to_sparse(&[], 4);
+        assert!(i.is_empty() && v.is_empty());
+    }
+}

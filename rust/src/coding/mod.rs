@@ -1,0 +1,19 @@
+//! Coding of projected values — the paper's contribution, operational side.
+//!
+//! * [`schemes`] — the four encoders (`h_w`, `h_{w,q}`, `h_{w,2}`, `h_1`)
+//!   over slices of projected values, with the Section-1.1 cutoff
+//!   convention (values beyond ±cutoff are clamped; cutoff = 6 loses
+//!   `1 − Φ(6) ≈ 1e-9` of mass).
+//! * [`packing`] — dense bit-packing of codes into `u64` words and fast
+//!   per-coordinate collision counting (the estimator hot path).
+//! * [`expand`] — the Section-6 one-hot expansion that turns `k` codes
+//!   into a sparse binary feature vector of length `k · cardinality` with
+//!   exactly `k` ones, unit-normalized for the linear SVM.
+
+pub mod schemes;
+pub mod packing;
+pub mod expand;
+
+pub use expand::{expand_to_sparse, expanded_dim};
+pub use packing::{collision_count, collision_count_packed, pack_codes, unpack_codes, PackedCodes};
+pub use schemes::{CodingParams, Scheme};

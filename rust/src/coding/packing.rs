@@ -1,0 +1,253 @@
+//! Bit-packing of codes and fast collision counting.
+//!
+//! The whole point of the paper is that a projected value needs only a
+//! few bits. This module stores `k` codes of `b` bits densely in `u64`
+//! words and counts per-coordinate collisions between two packed vectors
+//! — the estimator's hot inner loop (`Σ_j 1{c_u[j] = c_v[j]}`).
+//!
+//! Specialized SWAR paths exist for `b = 1` (XOR + popcount) and `b = 2`
+//! (nibble-wise equality), which cover the paper's recommended schemes.
+
+/// Codes packed at a fixed bit width. Codes never straddle word
+/// boundaries (we only allow widths dividing 64), keeping extraction
+/// branch-free.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedCodes {
+    /// Bit width per code; one of 1, 2, 4, 8, 16.
+    pub bits: u32,
+    /// Number of codes.
+    pub len: usize,
+    words: Vec<u64>,
+}
+
+/// Round a requested width up to a supported divisor of 64.
+pub fn supported_width(bits: u32) -> u32 {
+    match bits {
+        0 | 1 => 1,
+        2 => 2,
+        3 | 4 => 4,
+        5..=8 => 8,
+        _ => 16,
+    }
+}
+
+/// Pack `codes` at `bits` per code (rounded up to a supported width).
+pub fn pack_codes(codes: &[u16], bits: u32) -> PackedCodes {
+    let bits = supported_width(bits);
+    let per_word = (64 / bits) as usize;
+    let n_words = codes.len().div_ceil(per_word);
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut words = vec![0u64; n_words];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(
+            (c as u64) <= mask,
+            "code {c} does not fit in {bits} bits"
+        );
+        let w = i / per_word;
+        let off = (i % per_word) as u32 * bits;
+        words[w] |= ((c as u64) & mask) << off;
+    }
+    PackedCodes {
+        bits,
+        len: codes.len(),
+        words,
+    }
+}
+
+/// Unpack back to a `u16` vector.
+pub fn unpack_codes(p: &PackedCodes) -> Vec<u16> {
+    let per_word = (64 / p.bits) as usize;
+    let mask = (1u64 << p.bits) - 1;
+    (0..p.len)
+        .map(|i| {
+            let w = p.words[i / per_word];
+            ((w >> ((i % per_word) as u32 * p.bits)) & mask) as u16
+        })
+        .collect()
+}
+
+impl PackedCodes {
+    /// Raw words (e.g. for hashing into LSH buckets).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Extract the code at position `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u16 {
+        let per_word = (64 / self.bits) as usize;
+        let mask = (1u64 << self.bits) - 1;
+        ((self.words[i / per_word] >> ((i % per_word) as u32 * self.bits)) & mask) as u16
+    }
+
+    /// Storage bytes used.
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Count positions where two unpacked code slices agree.
+pub fn collision_count(a: &[u16], b: &[u16]) -> usize {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x == y).count()
+}
+
+/// Count positions where two packed code vectors agree. Requires equal
+/// length and bit width.
+pub fn collision_count_packed(a: &PackedCodes, b: &PackedCodes) -> usize {
+    assert_eq!(a.bits, b.bits, "bit width mismatch");
+    assert_eq!(a.len, b.len, "length mismatch");
+    match a.bits {
+        1 => collisions_b1(a, b),
+        2 => collisions_b2(a, b),
+        4 => collisions_swar(a, b, 4, 0x1111_1111_1111_1111),
+        8 => collisions_swar(a, b, 8, 0x0101_0101_0101_0101),
+        16 => collisions_swar(a, b, 16, 0x0001_0001_0001_0001),
+        _ => unreachable!("unsupported width"),
+    }
+}
+
+/// 1-bit: agreement = NOT(XOR); popcount, with tail masking.
+fn collisions_b1(a: &PackedCodes, b: &PackedCodes) -> usize {
+    let mut total = 0usize;
+    let full = a.len / 64;
+    for i in 0..full {
+        total += (!(a.words[i] ^ b.words[i])).count_ones() as usize;
+    }
+    let rem = a.len % 64;
+    if rem > 0 {
+        let mask = (1u64 << rem) - 1;
+        total += ((!(a.words[full] ^ b.words[full])) & mask).count_ones() as usize;
+    }
+    total
+}
+
+/// 2-bit SWAR: a 2-bit lane is equal iff both of its bits match.
+fn collisions_b2(a: &PackedCodes, b: &PackedCodes) -> usize {
+    const LO: u64 = 0x5555_5555_5555_5555; // low bit of each 2-bit lane
+    let mut total = 0usize;
+    let per_word = 32;
+    let full = a.len / per_word;
+    for i in 0..full {
+        let eq = !(a.words[i] ^ b.words[i]);
+        // lane equal iff both bits equal: AND the two bits of each lane.
+        let lanes = eq & (eq >> 1) & LO;
+        total += lanes.count_ones() as usize;
+    }
+    let rem = a.len % per_word;
+    if rem > 0 {
+        let eq = !(a.words[full] ^ b.words[full]);
+        let lanes = eq & (eq >> 1) & LO & ((1u64 << (2 * rem)) - 1);
+        total += lanes.count_ones() as usize;
+    }
+    total
+}
+
+/// Generic SWAR equality count for lane widths 4/8/16: a lane is equal
+/// iff `xor` restricted to the lane is zero. Zero lanes are detected by
+/// OR-collapsing each lane onto its low bit (no cross-lane borrows,
+/// unlike the subtract-based trick).
+fn collisions_swar(a: &PackedCodes, b: &PackedCodes, bits: u32, lo_mask: u64) -> usize {
+    let per_word = (64 / bits) as usize;
+    let mut total = 0usize;
+    let full = a.len / per_word;
+    for i in 0..full {
+        let x = a.words[i] ^ b.words[i];
+        // Collapse every bit of a lane onto the lane's low bit.
+        let mut y = x;
+        let mut shift = bits / 2;
+        while shift > 0 {
+            y |= y >> shift;
+            shift /= 2;
+        }
+        let nonzero = (y & lo_mask).count_ones() as usize;
+        total += per_word - nonzero;
+    }
+    let rem = a.len % per_word;
+    if rem > 0 {
+        for j in 0..rem {
+            total += usize::from(a.get(full * per_word + j) == b.get(full * per_word + j));
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::Pcg64;
+
+    fn random_codes(n: usize, card: u16, seed: u64) -> Vec<u16> {
+        let mut rng = Pcg64::new(seed, 0);
+        (0..n).map(|_| rng.next_below(card as u64) as u16).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_widths() {
+        for &(bits, card) in &[(1u32, 2u16), (2, 4), (4, 16), (8, 200), (16, 5000)] {
+            for &n in &[0usize, 1, 7, 63, 64, 65, 257] {
+                let codes = random_codes(n, card, 42 + bits as u64);
+                let packed = pack_codes(&codes, bits);
+                assert_eq!(unpack_codes(&packed), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn width_rounding() {
+        assert_eq!(supported_width(3), 4);
+        assert_eq!(supported_width(5), 8);
+        assert_eq!(supported_width(9), 16);
+        assert_eq!(supported_width(1), 1);
+    }
+
+    #[test]
+    fn packed_collision_matches_scalar_all_widths() {
+        for &(bits, card) in &[(1u32, 2u16), (2, 4), (4, 16), (8, 200), (16, 1000)] {
+            for &n in &[1usize, 31, 64, 100, 513] {
+                let a = random_codes(n, card, 1000 + bits as u64);
+                let b = random_codes(n, card, 2000 + bits as u64);
+                let pa = pack_codes(&a, bits);
+                let pb = pack_codes(&b, bits);
+                assert_eq!(
+                    collision_count_packed(&pa, &pb),
+                    collision_count(&a, &b),
+                    "bits={bits} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identical_vectors_collide_everywhere() {
+        let a = random_codes(777, 4, 5);
+        let pa = pack_codes(&a, 2);
+        assert_eq!(collision_count_packed(&pa, &pa), 777);
+    }
+
+    #[test]
+    fn storage_is_compact() {
+        // 256 2-bit codes = 64 bytes — the paper's economy argument.
+        let a = random_codes(256, 4, 6);
+        let p = pack_codes(&a, 2);
+        assert_eq!(p.storage_bytes(), 64);
+        // vs 1 KiB for f32 storage of the raw projections.
+    }
+
+    #[test]
+    fn get_matches_unpack() {
+        let a = random_codes(130, 16, 9);
+        let p = pack_codes(&a, 4);
+        for (i, &c) in a.iter().enumerate() {
+            assert_eq!(p.get(i), c);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let a = pack_codes(&random_codes(10, 4, 1), 2);
+        let b = pack_codes(&random_codes(11, 4, 2), 2);
+        collision_count_packed(&a, &b);
+    }
+}

@@ -1,0 +1,331 @@
+//! The four coding schemes as concrete encoders.
+//!
+//! All encoders map a projected value `x` (marginally `N(0,1)` for
+//! unit-norm inputs) to a small non-negative integer code suitable for
+//! bit-packing and one-hot expansion. Bin numbering is shifted so codes
+//! start at 0; the *collision structure* (which pairs of values share a
+//! code) is exactly the paper's.
+
+use crate::mathx::Pcg64;
+use crate::theory::SchemeKind;
+
+/// Re-export under the operational name used by the serving layer.
+pub type Scheme = SchemeKind;
+
+/// Parameters of a concrete coder: scheme, bin width `w`, tail cutoff,
+/// and the seed for the `h_{w,q}` offsets `q_j ~ U(0, w)`.
+#[derive(Clone, Debug)]
+pub struct CodingParams {
+    pub scheme: Scheme,
+    /// Bin width `w` (ignored by `OneBit`).
+    pub w: f64,
+    /// Tail cutoff (paper uses 6: `1 − Φ(6) = 9.9e-10`). Values beyond
+    /// `±cutoff` clamp to the extreme bins.
+    pub cutoff: f64,
+    /// Seed for the per-coordinate random offsets of `h_{w,q}`. The same
+    /// seed must be used for every vector in a dataset (offsets are part
+    /// of the hash function, shared across vectors).
+    pub offset_seed: u64,
+}
+
+impl CodingParams {
+    /// Standard construction with the paper's cutoff of 6.
+    pub fn new(scheme: Scheme, w: f64) -> Self {
+        CodingParams {
+            scheme,
+            w,
+            cutoff: 6.0,
+            offset_seed: 0x0FF5E7,
+        }
+    }
+
+    pub fn with_cutoff(mut self, cutoff: f64) -> Self {
+        self.cutoff = cutoff;
+        self
+    }
+
+    pub fn with_offset_seed(mut self, seed: u64) -> Self {
+        self.offset_seed = seed;
+        self
+    }
+
+    /// Number of distinct code values (the one-hot expansion width).
+    ///
+    /// * `h_w`: `2·ceil(cutoff/w)` bins cover `[-cutoff, cutoff)` —
+    ///   Section 1.1's `1 + log2(ceil(6/w))` bits.
+    /// * `h_{w,q}`: the offset shifts the lattice by up to `w`, adding
+    ///   one more bin: `2·ceil(cutoff/w) + 1`.
+    /// * `h_{w,2}`: 4. `h_1`: 2.
+    pub fn cardinality(&self) -> usize {
+        match self.scheme {
+            Scheme::Uniform => 2 * (self.cutoff / self.w).ceil() as usize,
+            Scheme::WindowOffset => 2 * (self.cutoff / self.w).ceil() as usize + 1,
+            Scheme::TwoBit => 4,
+            Scheme::OneBit => 2,
+        }
+    }
+
+    /// Bits needed per code (`ceil(log2(cardinality))`).
+    pub fn bits_per_code(&self) -> u32 {
+        let m = self.cardinality();
+        (usize::BITS - (m - 1).leading_zeros()).max(1)
+    }
+
+    /// The `h_{w,q}` offsets `q_j ~ U(0, w)` for coordinates `0..k`,
+    /// deterministic in `(offset_seed, k)` — part of the hash function.
+    pub fn offsets(&self, k: usize) -> Vec<f64> {
+        let mut rng = Pcg64::new(self.offset_seed, Q_STREAM);
+        (0..k).map(|_| rng.next_f64() * self.w).collect()
+    }
+
+    /// Bins per side for the lattice schemes: `B = ceil(cutoff/w)`.
+    #[inline]
+    pub fn bins_per_side(&self) -> i64 {
+        (self.cutoff / self.w).ceil() as i64
+    }
+
+    /// Encode one projected coordinate `x` at position `j`.
+    ///
+    /// `offset` is the precomputed `q_j` (only read by `WindowOffset`).
+    /// Convenience wrapper — the batch paths precompute the lattice
+    /// constants once (see `encode_into`).
+    #[inline]
+    pub fn encode_one(&self, x: f64, offset: f64) -> u16 {
+        self.encode_one_with(x, offset, self.bins_per_side(), 1.0 / self.w)
+    }
+
+    /// Core encoder with hoisted per-vector constants (`b`, `1/w`).
+    #[inline(always)]
+    fn encode_one_with(&self, x: f64, offset: f64, b: i64, inv_w: f64) -> u16 {
+        match self.scheme {
+            Scheme::Uniform => {
+                let clamped = x.clamp(-self.cutoff, self.cutoff);
+                let code = (clamped * inv_w).floor() as i64;
+                (code.clamp(-b, b - 1) + b) as u16
+            }
+            Scheme::WindowOffset => {
+                let clamped = x.clamp(-self.cutoff, self.cutoff);
+                let code = ((clamped + offset) * inv_w).floor() as i64;
+                (code.clamp(-b, b) + b) as u16
+            }
+            Scheme::TwoBit => {
+                // Regions (-∞,-w), [-w,0), [0,w), [w,∞) → 0,1,2,3.
+                if x < -self.w {
+                    0
+                } else if x < 0.0 {
+                    1
+                } else if x < self.w {
+                    2
+                } else {
+                    3
+                }
+            }
+            Scheme::OneBit => u16::from(x >= 0.0),
+        }
+    }
+
+    /// Encode a whole projected vector.
+    pub fn encode(&self, x: &[f32]) -> Vec<u16> {
+        let mut out = vec![0u16; x.len()];
+        match self.scheme {
+            Scheme::WindowOffset => {
+                let q = self.offsets(x.len());
+                self.encode_into(x, Some(&q), &mut out);
+            }
+            _ => self.encode_into(x, None, &mut out),
+        }
+        out
+    }
+
+    /// Encode into a caller-provided buffer (allocation-free hot path;
+    /// lattice constants hoisted out of the element loop).
+    pub fn encode_into(&self, x: &[f32], offsets: Option<&[f64]>, out: &mut [u16]) {
+        assert_eq!(x.len(), out.len());
+        let b = self.bins_per_side();
+        let inv_w = 1.0 / self.w;
+        match self.scheme {
+            Scheme::WindowOffset => {
+                let q = offsets.expect("WindowOffset requires precomputed offsets");
+                assert_eq!(q.len(), x.len());
+                for ((o, &xi), &qi) in out.iter_mut().zip(x).zip(q) {
+                    *o = self.encode_one_with(xi as f64, qi, b, inv_w);
+                }
+            }
+            _ => {
+                for (o, &xi) in out.iter_mut().zip(x) {
+                    *o = self.encode_one_with(xi as f64, 0.0, b, inv_w);
+                }
+            }
+        }
+    }
+}
+
+/// PRNG stream id reserved for the `h_{w,q}` offsets.
+const Q_STREAM: u64 = 0x71;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(s: Scheme, w: f64) -> CodingParams {
+        CodingParams::new(s, w)
+    }
+
+    #[test]
+    fn uniform_floor_semantics() {
+        // Paper Section 1.1: floor(3.1)=3, floor(4.99)=4, floor(-3.1)=-4.
+        let p = params(Scheme::Uniform, 1.0);
+        let b = 6; // ceil(6/1)
+        assert_eq!(p.encode_one(3.1, 0.0) as i64 - b, 3);
+        assert_eq!(p.encode_one(4.99, 0.0) as i64 - b, 4);
+        assert_eq!(p.encode_one(-3.1, 0.0) as i64 - b, -4);
+    }
+
+    #[test]
+    fn uniform_cardinality_matches_bit_count() {
+        // w = 2 ⇒ codes in {-3..2}, 6 values (paper's Section 1.1 example).
+        let p = params(Scheme::Uniform, 2.0);
+        assert_eq!(p.cardinality(), 6);
+        let p = params(Scheme::Uniform, 6.0);
+        assert_eq!(p.cardinality(), 2); // one-bit regime
+        let p = params(Scheme::Uniform, 0.5);
+        assert_eq!(p.cardinality(), 24);
+        assert_eq!(p.bits_per_code(), 5);
+    }
+
+    #[test]
+    fn uniform_clamps_tails() {
+        let p = params(Scheme::Uniform, 1.0);
+        let lo = p.encode_one(-100.0, 0.0);
+        let hi = p.encode_one(100.0, 0.0);
+        assert_eq!(lo, 0);
+        assert_eq!(hi as usize, p.cardinality() - 1);
+    }
+
+    #[test]
+    fn two_bit_regions() {
+        let p = params(Scheme::TwoBit, 0.75);
+        assert_eq!(p.encode_one(-2.0, 0.0), 0);
+        assert_eq!(p.encode_one(-0.5, 0.0), 1);
+        assert_eq!(p.encode_one(0.0, 0.0), 2);
+        assert_eq!(p.encode_one(0.5, 0.0), 2);
+        assert_eq!(p.encode_one(0.75, 0.0), 3);
+        assert_eq!(p.cardinality(), 4);
+        assert_eq!(p.bits_per_code(), 2);
+    }
+
+    #[test]
+    fn one_bit_signs() {
+        let p = params(Scheme::OneBit, 0.0);
+        assert_eq!(p.encode_one(-0.001, 0.0), 0);
+        assert_eq!(p.encode_one(0.0, 0.0), 1);
+        assert_eq!(p.encode_one(3.0, 0.0), 1);
+        assert_eq!(p.bits_per_code(), 1);
+    }
+
+    #[test]
+    fn offset_scheme_shares_offsets_across_vectors() {
+        let p = params(Scheme::WindowOffset, 1.0);
+        let x = vec![0.4f32; 8];
+        let y = vec![0.4f32; 8];
+        assert_eq!(p.encode(&x), p.encode(&y));
+        // Different seed ⇒ (almost surely) different codes somewhere.
+        let p2 = p.clone().with_offset_seed(99);
+        let mut varied = false;
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32) * 0.09 - 3.0).collect();
+        if p.encode(&xs) != p2.encode(&xs) {
+            varied = true;
+        }
+        assert!(varied, "offset seed had no effect");
+    }
+
+    #[test]
+    fn offset_collision_rate_matches_theory() {
+        // Monte-Carlo: encode correlated normal pairs, compare collision
+        // rate with P_{w,q}(ρ).
+        use crate::mathx::NormalSampler;
+        use crate::theory::p_wq;
+        let rho: f64 = 0.5;
+        let w = 1.0;
+        let p = params(Scheme::WindowOffset, w);
+        let k = 200_000;
+        let mut ns = NormalSampler::new(2024, 1);
+        let mut x = vec![0f32; k];
+        let mut y = vec![0f32; k];
+        let c = (1.0 - rho * rho).sqrt();
+        for i in 0..k {
+            let z1 = ns.next();
+            let z2 = ns.next();
+            x[i] = z1 as f32;
+            y[i] = (rho * z1 + c * z2) as f32;
+        }
+        let cx = p.encode(&x);
+        let cy = p.encode(&y);
+        let rate =
+            cx.iter().zip(&cy).filter(|(a, b)| a == b).count() as f64 / k as f64;
+        let want = p_wq(rho, w);
+        assert!((rate - want).abs() < 5e-3, "rate={rate} want={want}");
+    }
+
+    #[test]
+    fn uniform_collision_rate_matches_theory() {
+        use crate::mathx::NormalSampler;
+        use crate::theory::p_w;
+        let rho: f64 = 0.75;
+        let w = 0.75;
+        let p = params(Scheme::Uniform, w);
+        let k = 200_000;
+        let mut ns = NormalSampler::new(7, 3);
+        let c = (1.0 - rho * rho).sqrt();
+        let mut hits = 0usize;
+        for _ in 0..k {
+            let z1 = ns.next();
+            let z2 = ns.next();
+            let a = p.encode_one(z1, 0.0);
+            let b = p.encode_one(rho * z1 + c * z2, 0.0);
+            hits += usize::from(a == b);
+        }
+        let rate = hits as f64 / k as f64;
+        let want = p_w(rho, w);
+        assert!((rate - want).abs() < 5e-3, "rate={rate} want={want}");
+    }
+
+    #[test]
+    fn two_bit_collision_rate_matches_theory() {
+        use crate::mathx::NormalSampler;
+        use crate::theory::p_w2;
+        let rho: f64 = 0.6;
+        let w = 0.75;
+        let p = params(Scheme::TwoBit, w);
+        let k = 200_000;
+        let mut ns = NormalSampler::new(11, 4);
+        let c = (1.0 - rho * rho).sqrt();
+        let mut hits = 0usize;
+        for _ in 0..k {
+            let z1 = ns.next();
+            let z2 = ns.next();
+            hits += usize::from(
+                p.encode_one(z1, 0.0) == p.encode_one(rho * z1 + c * z2, 0.0),
+            );
+        }
+        let rate = hits as f64 / k as f64;
+        let want = p_w2(rho, w);
+        assert!((rate - want).abs() < 5e-3, "rate={rate} want={want}");
+    }
+
+    #[test]
+    fn encode_into_matches_encode() {
+        let p = params(Scheme::Uniform, 0.5);
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.13).collect();
+        let a = p.encode(&xs);
+        let mut b = vec![0u16; xs.len()];
+        p.encode_into(&xs, None, &mut b);
+        assert_eq!(a, b);
+        let pq = params(Scheme::WindowOffset, 0.5);
+        let a = pq.encode(&xs);
+        let q = pq.offsets(xs.len());
+        let mut b = vec![0u16; xs.len()];
+        pq.encode_into(&xs, Some(&q), &mut b);
+        assert_eq!(a, b);
+    }
+}

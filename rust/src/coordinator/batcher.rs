@@ -1,0 +1,273 @@
+//! Dynamic batcher: groups incoming projection requests into batches of
+//! up to `max_batch` vectors or `max_delay`, whichever comes first, then
+//! executes one batched projection + encode per flush.
+//!
+//! This is the standard serving-system batching policy (vLLM-style
+//! size-or-deadline): the AOT artifact has a fixed batch dimension, so
+//! filling it amortizes dispatch overhead; the deadline bounds tail
+//! latency when traffic is sparse. Implemented on std threads + channels
+//! (no async runtime is vendored in this environment); each request
+//! parks on its own rendezvous channel until the batch executes.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coding::{pack_codes, CodingParams, PackedCodes, Scheme};
+use crate::coordinator::metrics::Metrics;
+use crate::projection::Projector;
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many vectors are queued (align with the artifact
+    /// batch dimension for best PJRT utilization).
+    pub max_batch: usize,
+    /// Flush after this long even if the batch is not full.
+    pub max_delay: Duration,
+    /// Opportunistic flush: if no new work arrives within this window,
+    /// flush immediately instead of waiting out `max_delay`. Keeps lone
+    /// clients at projection latency while bursts still coalesce.
+    pub idle_flush: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            idle_flush: Duration::from_micros(150),
+        }
+    }
+}
+
+struct Job {
+    vector: Vec<f32>,
+    resp: mpsc::SyncSender<PackedCodes>,
+}
+
+/// Handle for submitting vectors to the batched sketch pipeline.
+/// Clone-cheap; every clone feeds the same worker thread.
+#[derive(Clone)]
+pub struct SketchBatcher {
+    tx: mpsc::Sender<Job>,
+    pub coding: CodingParams,
+    pub k: usize,
+}
+
+impl SketchBatcher {
+    /// Spawn the batcher worker thread.
+    pub fn spawn(
+        projector: Arc<Projector>,
+        coding: CodingParams,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let k = projector.cfg.k;
+        let coding_worker = coding.clone();
+        std::thread::Builder::new()
+            .name("crp-batcher".into())
+            .spawn(move || batch_loop(rx, projector, coding_worker, cfg, metrics))
+            .expect("spawn batcher thread");
+        SketchBatcher { tx, coding, k }
+    }
+
+    /// Submit a vector; blocks until its batch has been projected and
+    /// coded. Dimension may vary per call (padded internally).
+    pub fn sketch(&self, vector: Vec<f32>) -> crate::Result<PackedCodes> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Job {
+                vector,
+                resp: resp_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("batcher worker gone"))?;
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher dropped job"))
+    }
+}
+
+fn batch_loop(
+    rx: mpsc::Receiver<Job>,
+    projector: Arc<Projector>,
+    coding: CodingParams,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut pending: Vec<Job> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        // Wait for the first job of a batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        pending.push(first);
+        let deadline = std::time::Instant::now() + cfg.max_delay;
+        // Fill until size, hard deadline, or an idle window with no new
+        // arrivals (opportunistic early flush).
+        while pending.len() < cfg.max_batch {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let wait = cfg.idle_flush.min(deadline - now);
+            match rx.recv_timeout(wait) {
+                Ok(j) => pending.push(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => break, // idle
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        flush(&mut pending, &projector, &coding, &metrics);
+    }
+}
+
+/// Execute one batch synchronously.
+fn flush(pending: &mut Vec<Job>, projector: &Projector, coding: &CodingParams, metrics: &Metrics) {
+    if pending.is_empty() {
+        return;
+    }
+    let b = pending.len();
+    let d = pending.iter().map(|j| j.vector.len()).max().unwrap_or(1).max(1);
+    let k = projector.cfg.k;
+    // Assemble the (padded) batch.
+    let mut u = vec![0.0f32; b * d];
+    for (row, job) in pending.iter().enumerate() {
+        u[row * d..row * d + job.vector.len()].copy_from_slice(&job.vector);
+    }
+    let x = projector.project_batch(&u, b, d);
+    let offsets = match coding.scheme {
+        Scheme::WindowOffset => Some(coding.offsets(k)),
+        _ => None,
+    };
+    // Count the batch before releasing waiters so a client that reads
+    // stats immediately after its response sees its own work reflected.
+    metrics
+        .batches_executed
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    metrics
+        .vectors_projected
+        .fetch_add(b as u64, std::sync::atomic::Ordering::Relaxed);
+    let bits = coding.bits_per_code();
+    let mut codes = vec![0u16; k];
+    for (row, job) in pending.drain(..).enumerate() {
+        coding.encode_into(&x[row * k..(row + 1) * k], offsets.as_deref(), &mut codes);
+        let packed = pack_codes(&codes, bits);
+        let _ = job.resp.send(packed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::ProjectionConfig;
+
+    fn mk(k: usize, max_batch: usize, delay_ms: u64) -> (SketchBatcher, Arc<Metrics>) {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k,
+            seed: 3,
+            ..Default::default()
+        }));
+        let metrics = Arc::new(Metrics::default());
+        let b = SketchBatcher::spawn(
+            projector,
+            CodingParams::new(Scheme::TwoBit, 0.75),
+            BatcherConfig {
+                max_batch,
+                max_delay: Duration::from_millis(delay_ms),
+                idle_flush: Duration::from_micros(500),
+            },
+            metrics.clone(),
+        );
+        (b, metrics)
+    }
+
+    #[test]
+    fn single_job_flushes_on_deadline() {
+        let (b, m) = mk(32, 64, 1);
+        let codes = b.sketch(vec![0.5; 100]).unwrap();
+        assert_eq!(codes.len, 32);
+        assert_eq!(
+            m.batches_executed
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn batch_fills_up() {
+        let (b, m) = mk(16, 8, 100);
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                b.sketch(vec![i as f32 * 0.1; 64]).unwrap()
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // All 8 should have flown in a small number of batches.
+        let batches = m
+            .batches_executed
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches <= 3, "batches {batches}");
+        assert_eq!(
+            m.vectors_projected
+                .load(std::sync::atomic::Ordering::Relaxed),
+            8
+        );
+    }
+
+    #[test]
+    fn batched_result_matches_direct_projection() {
+        let (b, _) = mk(24, 4, 1);
+        let v: Vec<f32> = (0..80).map(|i| (i as f32) * 0.01 - 0.4).collect();
+        let got = b.sketch(v.clone()).unwrap();
+        // Direct: same projector config + coding.
+        let projector = Projector::new_cpu(ProjectionConfig {
+            k: 24,
+            seed: 3,
+            ..Default::default()
+        });
+        let coding = CodingParams::new(Scheme::TwoBit, 0.75);
+        let x = projector.project_dense(&v);
+        let want = pack_codes(&coding.encode(&x), coding.bits_per_code());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mixed_dimensions_in_one_batch() {
+        let (b, _) = mk(16, 4, 30);
+        let b1 = b.clone();
+        let h1 = std::thread::spawn(move || b1.sketch(vec![1.0; 10]).unwrap());
+        let b2 = b.clone();
+        let h2 = std::thread::spawn(move || b2.sketch(vec![1.0; 200]).unwrap());
+        let (a, c) = (h1.join().unwrap(), h2.join().unwrap());
+        // Short vector padded with zeros ≡ projecting it alone.
+        let projector = Projector::new_cpu(ProjectionConfig {
+            k: 16,
+            seed: 3,
+            ..Default::default()
+        });
+        let coding = CodingParams::new(Scheme::TwoBit, 0.75);
+        let want_a = pack_codes(
+            &coding.encode(&projector.project_dense(&vec![1.0; 10])),
+            coding.bits_per_code(),
+        );
+        let want_c = pack_codes(
+            &coding.encode(&projector.project_dense(&vec![1.0; 200])),
+            coding.bits_per_code(),
+        );
+        assert_eq!(a, want_a);
+        assert_eq!(c, want_c);
+    }
+
+    #[test]
+    fn empty_vector_ok() {
+        let (b, _) = mk(8, 2, 1);
+        let codes = b.sketch(vec![]).unwrap();
+        assert_eq!(codes.len, 8);
+    }
+}

@@ -1,0 +1,164 @@
+//! Blocking client for the sketch service (used by examples, integration
+//! tests, the CLI, and the load generator).
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+use super::protocol::{self, KnnHit, Request, Response, StatsSnapshot};
+
+/// A connected client. One in-flight request at a time per connection
+/// (the protocol is strictly request/response).
+pub struct SketchClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl SketchClient {
+    pub fn connect(addr: &str) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(SketchClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: &Request) -> crate::Result<Response> {
+        protocol::write_frame(&mut self.writer, &req.encode())?;
+        let frame = protocol::read_frame(&mut self.reader)?;
+        Response::decode(&frame)
+    }
+
+    fn bail(resp: Response) -> anyhow::Error {
+        match resp {
+            Response::Error { message } => anyhow::anyhow!("server error: {message}"),
+            other => anyhow::anyhow!("unexpected response: {other:?}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> crate::Result<()> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    pub fn register(&mut self, id: &str, vector: Vec<f32>) -> crate::Result<()> {
+        match self.call(&Request::Register {
+            id: id.to_string(),
+            vector,
+        })? {
+            Response::Registered { .. } => Ok(()),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// Returns `(rho, std_err)`.
+    pub fn estimate(&mut self, a: &str, b: &str) -> crate::Result<(f64, f64)> {
+        match self.call(&Request::Estimate {
+            a: a.to_string(),
+            b: b.to_string(),
+        })? {
+            Response::Estimate { rho, std_err, .. } => Ok((rho, std_err)),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    pub fn estimate_vec(&mut self, id: &str, vector: Vec<f32>) -> crate::Result<(f64, f64)> {
+        match self.call(&Request::EstimateVec {
+            id: id.to_string(),
+            vector,
+        })? {
+            Response::Estimate { rho, std_err, .. } => Ok((rho, std_err)),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    pub fn knn(&mut self, vector: Vec<f32>, n: u32) -> crate::Result<Vec<KnnHit>> {
+        match self.call(&Request::Knn { vector, n })? {
+            Response::Knn { hits } => Ok(hits),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    pub fn stats(&mut self) -> crate::Result<StatsSnapshot> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(Self::bail(other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{serve, ServerConfig};
+    use crate::projection::{ProjectionConfig, Projector};
+    use std::sync::Arc;
+
+    fn spawn_server(k: usize) -> String {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k,
+            seed: 1,
+            ..Default::default()
+        }));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..Default::default()
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = serve(projector, cfg, Some(tx));
+        });
+        rx.recv().unwrap().to_string()
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let addr = spawn_server(512);
+        let mut c = SketchClient::connect(&addr).unwrap();
+        c.ping().unwrap();
+        let (u, v) = crate::data::pairs::unit_pair_with_rho(64, 0.8, 21);
+        c.register("u", u.clone()).unwrap();
+        c.register("v", v).unwrap();
+        let (rho, err) = c.estimate("u", "v").unwrap();
+        assert!((rho - 0.8).abs() < 4.0 * err + 0.05, "rho {rho} err {err}");
+        let hits = c.knn(u, 2).unwrap();
+        assert_eq!(hits[0].id, "u"); // itself
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.registered, 2);
+        assert_eq!(stats.knn_queries, 1);
+    }
+
+    #[test]
+    fn server_error_propagates() {
+        let addr = spawn_server(64);
+        let mut c = SketchClient::connect(&addr).unwrap();
+        let e = c.estimate("ghost", "ghost2");
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let addr = spawn_server(128);
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = SketchClient::connect(&addr).unwrap();
+                for i in 0..10 {
+                    let v: Vec<f32> = (0..32)
+                        .map(|j| ((t * 100 + i * 10 + j) as f32).sin())
+                        .collect();
+                    c.register(&format!("t{t}-{i}"), v).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut c = SketchClient::connect(&addr).unwrap();
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.registered, 60);
+    }
+}

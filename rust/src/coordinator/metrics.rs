@@ -1,0 +1,118 @@
+//! Service metrics: lock-free counters and a fixed-bucket latency
+//! histogram (microsecond resolution, powers-of-two buckets).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram with 32 power-of-two microsecond buckets
+/// (`[1us, 2us) ... [2^31 us, ∞)`), plus count/sum for means.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, micros: u64) {
+        let b = (64 - micros.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate percentile (upper bucket bound).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// All service counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub registered: AtomicU64,
+    pub estimates: AtomicU64,
+    pub knn_queries: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub vectors_projected: AtomicU64,
+    pub register_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> super::protocol::StatsSnapshot {
+        let batches = self.batches_executed.load(Ordering::Relaxed);
+        let vectors = self.vectors_projected.load(Ordering::Relaxed);
+        super::protocol::StatsSnapshot {
+            registered: self.registered.load(Ordering::Relaxed),
+            estimates: self.estimates.load(Ordering::Relaxed),
+            knn_queries: self.knn_queries.load(Ordering::Relaxed),
+            batches_executed: batches,
+            vectors_projected: vectors,
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                vectors as f64 / batches as f64
+            },
+            p50_register_us: self.register_latency.percentile_us(0.50),
+            p99_register_us: self.register_latency.percentile_us(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 30, 40, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_us() > 0.0);
+        let p50 = h.percentile_us(0.5);
+        assert!((16..=64).contains(&p50), "p50 bucket {p50}");
+        let p99 = h.percentile_us(0.99);
+        assert!(p99 >= 1024, "p99 bucket {p99}");
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_mean_batch() {
+        let m = Metrics::default();
+        m.batches_executed.store(4, Ordering::Relaxed);
+        m.vectors_projected.store(100, Ordering::Relaxed);
+        assert!((m.snapshot().mean_batch_size - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,34 @@
+//! The Layer-3 coordinator: a sketch/similarity service.
+//!
+//! Clients register raw vectors; the service projects them (dynamic
+//! batching onto the fixed AOT artifact shapes), codes them with the
+//! configured scheme, and stores only the packed codes — the paper's
+//! storage story made operational. Queries then estimate similarities or
+//! scan for near neighbors purely over the compact codes.
+//!
+//! ```text
+//!  TCP (length-prefixed JSON)
+//!   └── server  — connection loop, frame codec
+//!        └── router — request dispatch
+//!             ├── batcher — groups projection work into (b_tile)-sized
+//!             │             batches with a deadline, executes on the
+//!             │             Projector (PJRT artifact or pure Rust)
+//!             ├── store   — sharded map: id → PackedCodes
+//!             └── metrics — counters + latency histograms
+//! ```
+//!
+//! Python never runs here; the Projector executes AOT artifacts via PJRT.
+
+pub mod protocol;
+pub mod store;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod client;
+pub mod persist;
+
+pub use batcher::{BatcherConfig, SketchBatcher};
+pub use client::SketchClient;
+pub use protocol::{Request, Response};
+pub use server::{serve, ServerConfig};
+pub use store::SketchStore;

@@ -1,0 +1,161 @@
+//! Sketch-store persistence: snapshot the packed codes to disk and
+//! restore them on restart. Sketches are tiny (2 bits/projection), so a
+//! full-store snapshot is cheap; the format is a versioned binary file:
+//!
+//! ```text
+//! magic "CRPSNAP1" | u32 k | u32 bits | u64 count |
+//!   repeated: u32 id_len | id bytes | u32 n_words | u64 words...
+//! ```
+//!
+//! All sketches in one store share `(k, bits)` — enforced on save.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::coding::{pack_codes, PackedCodes};
+use crate::coordinator::store::SketchStore;
+
+const MAGIC: &[u8; 8] = b"CRPSNAP1";
+
+/// Write a snapshot of every sketch in the store.
+pub fn save_store(store: &SketchStore, path: impl AsRef<Path>) -> crate::Result<u64> {
+    let mut entries: Vec<(String, PackedCodes)> = Vec::new();
+    store.for_each(|id, codes| entries.push((id.to_string(), codes.clone())));
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    let (k, bits) = match entries.first() {
+        Some((_, c)) => (c.len as u32, c.bits),
+        None => (0, 0),
+    };
+    for (id, c) in &entries {
+        anyhow::ensure!(
+            c.len as u32 == k && c.bits == bits,
+            "heterogeneous sketch shapes in store (id {id:?})"
+        );
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&k.to_le_bytes())?;
+    w.write_all(&bits.to_le_bytes())?;
+    w.write_all(&(entries.len() as u64).to_le_bytes())?;
+    for (id, codes) in &entries {
+        w.write_all(&(id.len() as u32).to_le_bytes())?;
+        w.write_all(id.as_bytes())?;
+        let words = codes.words();
+        w.write_all(&(words.len() as u32).to_le_bytes())?;
+        for word in words {
+            w.write_all(&word.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(entries.len() as u64)
+}
+
+/// Load a snapshot into a fresh store. Returns `(store, k, bits)`.
+pub fn load_store(path: impl AsRef<Path>) -> crate::Result<(SketchStore, usize, u32)> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a CRP snapshot");
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let k = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4)?;
+    let bits = u32::from_le_bytes(b4);
+    r.read_exact(&mut b8)?;
+    let count = u64::from_le_bytes(b8);
+    anyhow::ensure!(count < 1 << 40, "implausible snapshot count");
+    let store = SketchStore::new();
+    for _ in 0..count {
+        r.read_exact(&mut b4)?;
+        let id_len = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(id_len <= 1 << 20, "implausible id length");
+        let mut id = vec![0u8; id_len];
+        r.read_exact(&mut id)?;
+        let id = String::from_utf8(id)?;
+        r.read_exact(&mut b4)?;
+        let n_words = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(n_words <= 1 << 26, "implausible word count");
+        let mut codes_words = vec![0u64; n_words];
+        for wslot in codes_words.iter_mut() {
+            r.read_exact(&mut b8)?;
+            *wslot = u64::from_le_bytes(b8);
+        }
+        // Reconstruct through unpack/pack so PackedCodes' internal
+        // invariants stay owned by the packing module.
+        let codes = unpack_words(bits, k, &codes_words);
+        store.put(id, pack_codes(&codes, bits));
+    }
+    Ok((store, k, bits))
+}
+
+fn unpack_words(bits: u32, len: usize, words: &[u64]) -> Vec<u16> {
+    let per_word = (64 / bits) as usize;
+    let mask = (1u64 << bits) - 1;
+    (0..len)
+        .map(|i| ((words[i / per_word] >> ((i % per_word) as u32 * bits)) & mask) as u16)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::Pcg64;
+
+    fn filled_store(n: usize, k: usize) -> SketchStore {
+        let store = SketchStore::new();
+        let mut g = Pcg64::new(5, 0);
+        for i in 0..n {
+            let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+            store.put(format!("vec-{i}"), pack_codes(&codes, 2));
+        }
+        store
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let store = filled_store(50, 256);
+        let path = std::env::temp_dir().join(format!("crp_snap_{}.bin", std::process::id()));
+        let n = save_store(&store, &path).unwrap();
+        assert_eq!(n, 50);
+        let (back, k, bits) = load_store(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(k, 256);
+        assert_eq!(bits, 2);
+        assert_eq!(back.len(), 50);
+        for i in 0..50 {
+            let id = format!("vec-{i}");
+            assert_eq!(back.get(&id), store.get(&id), "{id}");
+        }
+    }
+
+    #[test]
+    fn empty_store_roundtrip() {
+        let store = SketchStore::new();
+        let path = std::env::temp_dir().join(format!("crp_snap_e_{}.bin", std::process::id()));
+        save_store(&store, &path).unwrap();
+        let (back, _, _) = load_store(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let path = std::env::temp_dir().join(format!("crp_snap_c_{}.bin", std::process::id()));
+        std::fs::write(&path, b"garbage data").unwrap();
+        assert!(load_store(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn heterogeneous_store_rejected_on_save() {
+        let store = SketchStore::new();
+        store.put("a".into(), pack_codes(&[1, 2, 3], 2));
+        store.put("b".into(), pack_codes(&[1, 2], 2)); // different k
+        let path = std::env::temp_dir().join(format!("crp_snap_h_{}.bin", std::process::id()));
+        assert!(save_store(&store, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,404 @@
+//! Wire protocol: length-prefixed binary frames over TCP.
+//!
+//! Frame = `u32` little-endian payload length + payload. Payloads are a
+//! compact hand-rolled binary encoding (this environment vendors no
+//! serde): a one-byte message tag followed by fields in declaration
+//! order. Strings are `u32`-length-prefixed UTF-8; `Vec<f32>` is a
+//! `u32` count + raw little-endian f32s. Round-trip tests pin the format.
+
+use std::io::{Read, Write};
+
+/// Maximum accepted frame size (guards the server against bad clients).
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// Client → server requests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Store a vector's sketch under `id` (vector is projected, coded,
+    /// and discarded — only the codes are kept).
+    Register { id: String, vector: Vec<f32> },
+    /// Estimate similarity between two registered ids.
+    Estimate { a: String, b: String },
+    /// Estimate similarity between a query vector and a registered id.
+    EstimateVec { id: String, vector: Vec<f32> },
+    /// Top-n most similar registered ids to the query vector.
+    Knn { vector: Vec<f32>, n: u32 },
+    /// Service statistics.
+    Stats,
+    /// Health check.
+    Ping,
+}
+
+/// Server → client responses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Registered { id: String },
+    Estimate { rho: f64, std_err: f64, p_hat: f64 },
+    Knn { hits: Vec<KnnHit> },
+    Stats(StatsSnapshot),
+    Pong,
+    Error { message: String },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct KnnHit {
+    pub id: String,
+    pub rho: f64,
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub registered: u64,
+    pub estimates: u64,
+    pub knn_queries: u64,
+    pub batches_executed: u64,
+    pub vectors_projected: u64,
+    pub mean_batch_size: f64,
+    pub p50_register_us: u64,
+    pub p99_register_us: u64,
+}
+
+// ---- encoding primitives ----------------------------------------------
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn new(tag: u8) -> Self {
+        Enc(vec![tag])
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "truncated message");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> crate::Result<String> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= self.buf.len(), "bad string length");
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+    fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n * 4 <= self.buf.len(), "bad vector length");
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn done(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.pos == self.buf.len(), "trailing bytes");
+        Ok(())
+    }
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::Register { id, vector } => {
+                let mut e = Enc::new(0);
+                e.str(id);
+                e.f32s(vector);
+                e.0
+            }
+            Request::Estimate { a, b } => {
+                let mut e = Enc::new(1);
+                e.str(a);
+                e.str(b);
+                e.0
+            }
+            Request::EstimateVec { id, vector } => {
+                let mut e = Enc::new(2);
+                e.str(id);
+                e.f32s(vector);
+                e.0
+            }
+            Request::Knn { vector, n } => {
+                let mut e = Enc::new(3);
+                e.f32s(vector);
+                e.u32(*n);
+                e.0
+            }
+            Request::Stats => Enc::new(4).0,
+            Request::Ping => Enc::new(5).0,
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> crate::Result<Self> {
+        let mut d = Dec::new(buf);
+        let tag = d.u8()?;
+        let req = match tag {
+            0 => Request::Register {
+                id: d.str()?,
+                vector: d.f32s()?,
+            },
+            1 => Request::Estimate {
+                a: d.str()?,
+                b: d.str()?,
+            },
+            2 => Request::EstimateVec {
+                id: d.str()?,
+                vector: d.f32s()?,
+            },
+            3 => Request::Knn {
+                vector: d.f32s()?,
+                n: d.u32()?,
+            },
+            4 => Request::Stats,
+            5 => Request::Ping,
+            t => anyhow::bail!("unknown request tag {t}"),
+        };
+        d.done()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Registered { id } => {
+                let mut e = Enc::new(0);
+                e.str(id);
+                e.0
+            }
+            Response::Estimate {
+                rho,
+                std_err,
+                p_hat,
+            } => {
+                let mut e = Enc::new(1);
+                e.f64(*rho);
+                e.f64(*std_err);
+                e.f64(*p_hat);
+                e.0
+            }
+            Response::Knn { hits } => {
+                let mut e = Enc::new(2);
+                e.u32(hits.len() as u32);
+                for h in hits {
+                    e.str(&h.id);
+                    e.f64(h.rho);
+                }
+                e.0
+            }
+            Response::Stats(s) => {
+                let mut e = Enc::new(3);
+                e.u64(s.registered);
+                e.u64(s.estimates);
+                e.u64(s.knn_queries);
+                e.u64(s.batches_executed);
+                e.u64(s.vectors_projected);
+                e.f64(s.mean_batch_size);
+                e.u64(s.p50_register_us);
+                e.u64(s.p99_register_us);
+                e.0
+            }
+            Response::Pong => Enc::new(4).0,
+            Response::Error { message } => {
+                let mut e = Enc::new(5);
+                e.str(message);
+                e.0
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> crate::Result<Self> {
+        let mut d = Dec::new(buf);
+        let tag = d.u8()?;
+        let resp = match tag {
+            0 => Response::Registered { id: d.str()? },
+            1 => Response::Estimate {
+                rho: d.f64()?,
+                std_err: d.f64()?,
+                p_hat: d.f64()?,
+            },
+            2 => {
+                let n = d.u32()? as usize;
+                let mut hits = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    hits.push(KnnHit {
+                        id: d.str()?,
+                        rho: d.f64()?,
+                    });
+                }
+                Response::Knn { hits }
+            }
+            3 => Response::Stats(StatsSnapshot {
+                registered: d.u64()?,
+                estimates: d.u64()?,
+                knn_queries: d.u64()?,
+                batches_executed: d.u64()?,
+                vectors_projected: d.u64()?,
+                mean_batch_size: d.f64()?,
+                p50_register_us: d.u64()?,
+                p99_register_us: d.u64()?,
+            }),
+            4 => Response::Pong,
+            5 => Response::Error { message: d.str()? },
+            t => anyhow::bail!("unknown response tag {t}"),
+        };
+        d.done()?;
+        Ok(resp)
+    }
+}
+
+// ---- framing ------------------------------------------------------------
+
+/// Read one frame from a blocking reader.
+pub fn read_frame<R: Read>(r: &mut R) -> crate::Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf);
+    anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Write one frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> crate::Result<()> {
+    anyhow::ensure!(payload.len() <= MAX_FRAME as usize, "frame too large");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        let enc = r.encode();
+        let back = Request::decode(&enc).unwrap();
+        assert_eq!(r, back);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        let enc = r.encode();
+        let back = Response::decode(&enc).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(Request::Register {
+            id: "vec-α".into(),
+            vector: vec![0.1, -0.5, f32::MIN_POSITIVE],
+        });
+        roundtrip_req(Request::Estimate {
+            a: "a".into(),
+            b: "b".into(),
+        });
+        roundtrip_req(Request::EstimateVec {
+            id: "q".into(),
+            vector: vec![],
+        });
+        roundtrip_req(Request::Knn {
+            vector: vec![1.0; 100],
+            n: 5,
+        });
+        roundtrip_req(Request::Stats);
+        roundtrip_req(Request::Ping);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(Response::Registered { id: "x".into() });
+        roundtrip_resp(Response::Estimate {
+            rho: 0.87,
+            std_err: 0.01,
+            p_hat: 0.9,
+        });
+        roundtrip_resp(Response::Knn {
+            hits: vec![
+                KnnHit {
+                    id: "a".into(),
+                    rho: 0.9,
+                },
+                KnnHit {
+                    id: "b".into(),
+                    rho: 0.1,
+                },
+            ],
+        });
+        roundtrip_resp(Response::Stats(StatsSnapshot {
+            registered: 10,
+            mean_batch_size: 3.5,
+            ..Default::default()
+        }));
+        roundtrip_resp(Response::Pong);
+        roundtrip_resp(Response::Error {
+            message: "boom".into(),
+        });
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[200]).is_err());
+        assert!(Request::decode(&[0, 1, 0, 0]).is_err()); // truncated string
+        // Trailing bytes rejected.
+        let mut enc = Request::Ping.encode();
+        enc.push(0);
+        assert!(Request::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_in_memory() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let got = read_frame(&mut cursor).unwrap();
+        assert_eq!(got, b"hello");
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let hdr = u32::MAX.to_le_bytes();
+        let mut cursor = std::io::Cursor::new(hdr.to_vec());
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

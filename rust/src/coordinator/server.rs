@@ -1,0 +1,334 @@
+//! TCP server: thread-per-connection loop + request router.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coding::CodingParams;
+use crate::coordinator::batcher::{BatcherConfig, SketchBatcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::protocol::{self, KnnHit, Request, Response};
+use crate::coordinator::store::SketchStore;
+use crate::estimator::CollisionEstimator;
+use crate::projection::Projector;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub coding: CodingParams,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7474".to_string(),
+            coding: CodingParams::new(crate::coding::Scheme::TwoBit, 0.75),
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Shared service state.
+pub struct ServiceState {
+    pub store: SketchStore,
+    pub batcher: SketchBatcher,
+    pub estimator: CollisionEstimator,
+    pub metrics: Arc<Metrics>,
+    pub k: usize,
+}
+
+impl ServiceState {
+    pub fn new(projector: Arc<Projector>, cfg: &ServerConfig) -> Arc<Self> {
+        let metrics = Arc::new(Metrics::default());
+        let batcher = SketchBatcher::spawn(
+            projector,
+            cfg.coding.clone(),
+            cfg.batcher.clone(),
+            metrics.clone(),
+        );
+        let k = batcher.k;
+        Arc::new(ServiceState {
+            store: SketchStore::new(),
+            estimator: CollisionEstimator::new(cfg.coding.clone()),
+            batcher,
+            metrics,
+            k,
+        })
+    }
+
+    /// As [`ServiceState::new`], seeding the store from a snapshot file
+    /// (see [`crate::coordinator::persist`]). The snapshot's sketch
+    /// shape must match the projector/coding configuration.
+    pub fn with_snapshot(
+        projector: Arc<Projector>,
+        cfg: &ServerConfig,
+        snapshot: &std::path::Path,
+    ) -> crate::Result<Arc<Self>> {
+        let state = Self::new(projector, cfg);
+        if snapshot.is_file() {
+            let (store, k, bits) = crate::coordinator::persist::load_store(snapshot)?;
+            anyhow::ensure!(
+                store.is_empty() || (k == state.k && bits == cfg.coding.bits_per_code()),
+                "snapshot shape (k={k}, bits={bits}) does not match service                  (k={}, bits={})",
+                state.k,
+                cfg.coding.bits_per_code()
+            );
+            let mut n = 0u64;
+            store.for_each(|id, codes| {
+                state.store.put(id.to_string(), codes.clone());
+                n += 1;
+            });
+            state
+                .metrics
+                .registered
+                .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+        }
+        Ok(state)
+    }
+
+    fn estimate_response(&self, collisions: usize) -> Response {
+        let rho = self.estimator.estimate_from_count(collisions, self.k);
+        let v = self
+            .estimator
+            .params
+            .scheme
+            .variance_factor(rho.min(0.999), self.estimator.params.w);
+        Response::Estimate {
+            rho,
+            std_err: (v / self.k as f64).sqrt(),
+            p_hat: collisions as f64 / self.k as f64,
+        }
+    }
+
+    /// Handle one request (the router).
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Stats => Response::Stats(self.metrics.snapshot()),
+            Request::Register { id, vector } => {
+                let t0 = Instant::now();
+                match self.batcher.sketch(vector) {
+                    Ok(codes) => {
+                        self.store.put(id.clone(), codes);
+                        self.metrics
+                            .registered
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        self.metrics
+                            .register_latency
+                            .record(t0.elapsed().as_micros() as u64);
+                        Response::Registered { id }
+                    }
+                    Err(e) => Response::Error {
+                        message: format!("sketch failed: {e}"),
+                    },
+                }
+            }
+            Request::Estimate { a, b } => {
+                let (sa, sb) = (self.store.get(&a), self.store.get(&b));
+                match (sa, sb) {
+                    (Some(sa), Some(sb)) => {
+                        self.metrics
+                            .estimates
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let collisions = crate::coding::collision_count_packed(&sa, &sb);
+                        self.estimate_response(collisions)
+                    }
+                    (None, _) => Response::Error {
+                        message: format!("unknown id {a:?}"),
+                    },
+                    (_, None) => Response::Error {
+                        message: format!("unknown id {b:?}"),
+                    },
+                }
+            }
+            Request::EstimateVec { id, vector } => {
+                let Some(stored) = self.store.get(&id) else {
+                    return Response::Error {
+                        message: format!("unknown id {id:?}"),
+                    };
+                };
+                match self.batcher.sketch(vector) {
+                    Ok(q) => {
+                        self.metrics
+                            .estimates
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let collisions = crate::coding::collision_count_packed(&q, &stored);
+                        self.estimate_response(collisions)
+                    }
+                    Err(e) => Response::Error {
+                        message: format!("sketch failed: {e}"),
+                    },
+                }
+            }
+            Request::Knn { vector, n } => match self.batcher.sketch(vector) {
+                Ok(q) => {
+                    self.metrics
+                        .knn_queries
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let mut hits: Vec<(String, usize)> = Vec::new();
+                    self.store.for_each(|id, codes| {
+                        let c = crate::coding::collision_count_packed(&q, codes);
+                        hits.push((id.to_string(), c));
+                    });
+                    hits.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+                    hits.truncate(n as usize);
+                    Response::Knn {
+                        hits: hits
+                            .into_iter()
+                            .map(|(id, c)| KnnHit {
+                                id,
+                                rho: self.estimator.estimate_from_count(c, self.k),
+                            })
+                            .collect(),
+                    }
+                }
+                Err(e) => Response::Error {
+                    message: format!("sketch failed: {e}"),
+                },
+            },
+        }
+    }
+}
+
+/// Run the server until the listener errors. Binds, then reports the
+/// bound address through `ready` (useful for ephemeral-port tests).
+pub fn serve(
+    projector: Arc<Projector>,
+    cfg: ServerConfig,
+    ready: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
+) -> crate::Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    if let Some(tx) = ready {
+        let _ = tx.send(addr);
+    }
+    let state = ServiceState::new(projector, &cfg);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let state = state.clone();
+        std::thread::Builder::new()
+            .name("crp-conn".into())
+            .spawn(move || {
+                let _ = handle_connection(stream, state);
+            })?;
+    }
+    Ok(())
+}
+
+fn handle_connection(stream: TcpStream, state: Arc<ServiceState>) -> crate::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    loop {
+        let frame = match protocol::read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // client closed
+        };
+        let resp = match Request::decode(&frame) {
+            Ok(req) => state.handle(req),
+            Err(e) => Response::Error {
+                message: format!("bad request: {e}"),
+            },
+        };
+        protocol::write_frame(&mut writer, &resp.encode())?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::ProjectionConfig;
+
+    fn state(k: usize) -> Arc<ServiceState> {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k,
+            seed: 7,
+            ..Default::default()
+        }));
+        ServiceState::new(projector, &ServerConfig::default())
+    }
+
+    #[test]
+    fn register_then_estimate() {
+        let s = state(512);
+        let (u, v) = crate::data::pairs::unit_pair_with_rho(128, 0.85, 3);
+        let r1 = s.handle(Request::Register {
+            id: "u".into(),
+            vector: u,
+        });
+        assert!(matches!(r1, Response::Registered { .. }));
+        let r2 = s.handle(Request::Register {
+            id: "v".into(),
+            vector: v,
+        });
+        assert!(matches!(r2, Response::Registered { .. }));
+        match s.handle(Request::Estimate {
+            a: "u".into(),
+            b: "v".into(),
+        }) {
+            Response::Estimate { rho, std_err, .. } => {
+                assert!(
+                    (rho - 0.85).abs() < 4.0 * std_err + 0.05,
+                    "rho {rho} err {std_err}"
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        let s = state(64);
+        match s.handle(Request::Estimate {
+            a: "nope".into(),
+            b: "nada".into(),
+        }) {
+            Response::Error { message } => assert!(message.contains("nope")),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn knn_orders_by_similarity() {
+        let s = state(512);
+        let (base, near) = crate::data::pairs::unit_pair_with_rho(96, 0.95, 11);
+        let (_, far) = crate::data::pairs::unit_pair_with_rho(96, 0.1, 12);
+        s.handle(Request::Register {
+            id: "near".into(),
+            vector: near,
+        });
+        s.handle(Request::Register {
+            id: "far".into(),
+            vector: far,
+        });
+        match s.handle(Request::Knn {
+            vector: base,
+            n: 2,
+        }) {
+            Response::Knn { hits } => {
+                assert_eq!(hits.len(), 2);
+                assert_eq!(hits[0].id, "near");
+                assert!(hits[0].rho > hits[1].rho);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_track_activity() {
+        let s = state(64);
+        s.handle(Request::Register {
+            id: "a".into(),
+            vector: vec![1.0; 32],
+        });
+        match s.handle(Request::Stats) {
+            Response::Stats(st) => {
+                assert_eq!(st.registered, 1);
+                assert!(st.vectors_projected >= 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

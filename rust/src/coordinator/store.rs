@@ -1,0 +1,150 @@
+//! Sharded sketch store: `id → PackedCodes`. Only the coded sketches
+//! live here — raw vectors are dropped after projection, which is the
+//! paper's storage-compression story in operational form.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::coding::PackedCodes;
+
+const N_SHARDS: usize = 16;
+
+/// Thread-safe sharded map from string ids to packed code sketches.
+#[derive(Debug)]
+pub struct SketchStore {
+    shards: Vec<RwLock<HashMap<String, PackedCodes>>>,
+}
+
+impl Default for SketchStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SketchStore {
+    pub fn new() -> Self {
+        SketchStore {
+            shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, id: &str) -> &RwLock<HashMap<String, PackedCodes>> {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in id.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        &self.shards[(h as usize) % N_SHARDS]
+    }
+
+    /// Insert or replace a sketch.
+    pub fn put(&self, id: String, codes: PackedCodes) {
+        self.shard(&id).write().unwrap().insert(id, codes);
+    }
+
+    /// Fetch a clone of a sketch.
+    pub fn get(&self, id: &str) -> Option<PackedCodes> {
+        self.shard(id).read().unwrap().get(id).cloned()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.shard(id).read().unwrap().contains_key(id)
+    }
+
+    pub fn remove(&self, id: &str) -> bool {
+        self.shard(id).write().unwrap().remove(id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit every `(id, sketch)` pair (used by the kNN scan). The
+    /// visitor runs under each shard's read lock in turn.
+    pub fn for_each<F: FnMut(&str, &PackedCodes)>(&self, mut f: F) {
+        for s in &self.shards {
+            let guard = s.read().unwrap();
+            for (id, codes) in guard.iter() {
+                f(id, codes);
+            }
+        }
+    }
+
+    /// Total bytes of packed sketch storage.
+    pub fn storage_bytes(&self) -> usize {
+        let mut total = 0;
+        self.for_each(|_, c| total += c.storage_bytes());
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+
+    fn sketch(seed: u16) -> PackedCodes {
+        let codes: Vec<u16> = (0..64).map(|i| ((i as u16 + seed) % 4)).collect();
+        pack_codes(&codes, 2)
+    }
+
+    #[test]
+    fn put_get_remove() {
+        let s = SketchStore::new();
+        assert!(s.is_empty());
+        s.put("a".into(), sketch(0));
+        s.put("b".into(), sketch(1));
+        assert_eq!(s.len(), 2);
+        assert!(s.contains("a"));
+        assert_eq!(s.get("a").unwrap(), sketch(0));
+        assert!(s.get("zzz").is_none());
+        assert!(s.remove("a"));
+        assert!(!s.remove("a"));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let s = SketchStore::new();
+        s.put("x".into(), sketch(0));
+        s.put("x".into(), sketch(9));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get("x").unwrap(), sketch(9));
+    }
+
+    #[test]
+    fn for_each_sees_all() {
+        let s = SketchStore::new();
+        for i in 0..100 {
+            s.put(format!("id{i}"), sketch(i as u16));
+        }
+        let mut n = 0;
+        s.for_each(|_, _| n += 1);
+        assert_eq!(n, 100);
+        assert!(s.storage_bytes() >= 100 * 16);
+    }
+
+    #[test]
+    fn concurrent_access() {
+        use std::sync::Arc;
+        let s = Arc::new(SketchStore::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    s.put(format!("t{t}-{i}"), sketch(i));
+                    let _ = s.get(&format!("t{t}-{i}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 400);
+    }
+}

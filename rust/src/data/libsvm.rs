@@ -1,0 +1,150 @@
+//! libsvm/svmlight format I/O (`label idx:val idx:val ...`, 1-based
+//! indices) — the format the paper's datasets ship in. Lets users run
+//! the Section-6 experiments on the real ARCENE/FARM/URL files when
+//! available; our synthetic substitutes use the same loader in tests.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use super::sparse::{CsrMatrix, Dataset};
+
+/// Parse a libsvm file. Labels are coerced to ±1 (`> 0 → +1`).
+/// `cols` may force a dimensionality (0 = infer from max index).
+pub fn read_libsvm(path: impl AsRef<Path>, cols: usize) -> crate::Result<Dataset> {
+    let file = std::fs::File::open(path.as_ref())
+        .map_err(|e| anyhow::anyhow!("open {:?}: {e}", path.as_ref()))?;
+    let reader = std::io::BufReader::new(file);
+    parse_libsvm(reader, cols, path.as_ref().display().to_string())
+}
+
+/// Parse libsvm-format text from any reader.
+pub fn parse_libsvm(reader: impl BufRead, cols: usize, name: String) -> crate::Result<Dataset> {
+    let mut rows: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+    let mut labels = Vec::new();
+    let mut max_idx = 0u32;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f32 = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad label: {e}", lineno + 1))?;
+        labels.push(if label > 0.0 { 1.0 } else { -1.0 });
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad token {tok:?}", lineno + 1))?;
+            let i: u32 = i
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad index: {e}", lineno + 1))?;
+            anyhow::ensure!(i >= 1, "line {}: libsvm indices are 1-based", lineno + 1);
+            let v: f32 = v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad value: {e}", lineno + 1))?;
+            idx.push(i - 1);
+            val.push(v);
+        }
+        // Sort by index (libsvm files are usually sorted; be tolerant).
+        let mut order: Vec<usize> = (0..idx.len()).collect();
+        order.sort_by_key(|&p| idx[p]);
+        let idx: Vec<u32> = order.iter().map(|&p| idx[p]).collect();
+        let val: Vec<f32> = order.iter().map(|&p| val[p]).collect();
+        if let Some(&m) = idx.last() {
+            max_idx = max_idx.max(m);
+        }
+        rows.push((idx, val));
+    }
+    let cols = if cols > 0 {
+        cols
+    } else {
+        max_idx as usize + 1
+    };
+    let nnz = rows.iter().map(|(i, _)| i.len()).sum();
+    let mut x = CsrMatrix::with_capacity(rows.len(), nnz, cols);
+    for (idx, val) in &rows {
+        x.push_row(idx, val);
+    }
+    let ds = Dataset { x, y: labels, name };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Write a dataset in libsvm format.
+pub fn write_libsvm(ds: &Dataset, path: impl AsRef<Path>) -> crate::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    for r in 0..ds.len() {
+        let label = if ds.y[r] > 0.0 { "+1" } else { "-1" };
+        write!(w, "{label}")?;
+        let (idx, val) = ds.x.row(r);
+        for (&i, &v) in idx.iter().zip(val) {
+            write!(w, " {}:{}", i + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n# comment\n\n+1 1:1.0\n";
+        let ds = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.x.cols, 3);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.row(0), (&[0u32, 2][..], &[0.5f32, 1.5][..]));
+    }
+
+    #[test]
+    fn unsorted_indices_tolerated() {
+        let text = "+1 5:1.0 2:2.0\n";
+        let ds = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap();
+        assert_eq!(ds.x.row(0).0, &[1u32, 4][..]);
+        assert_eq!(ds.x.row(0).1, &[2.0f32, 1.0][..]);
+    }
+
+    #[test]
+    fn rejects_zero_based() {
+        let text = "+1 0:1.0\n";
+        assert!(parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_libsvm(std::io::Cursor::new("+1 abc\n"), 0, "t".into()).is_err());
+        assert!(parse_libsvm(std::io::Cursor::new("xyz 1:1\n"), 0, "t".into()).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let text = "+1 1:0.25 4:1\n-1 2:3\n";
+        let ds = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap();
+        let path = std::env::temp_dir().join(format!("crp_libsvm_{}.txt", std::process::id()));
+        write_libsvm(&ds, &path).unwrap();
+        let back = read_libsvm(&path, 0).unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.x.indices, ds.x.indices);
+        assert_eq!(back.x.values, ds.x.values);
+        assert_eq!(back.y, ds.y);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn forced_cols() {
+        let text = "+1 1:1.0\n";
+        let ds = parse_libsvm(std::io::Cursor::new(text), 100, "t".into()).unwrap();
+        assert_eq!(ds.x.cols, 100);
+    }
+}

@@ -1,0 +1,18 @@
+//! Datasets: sparse matrices, libsvm-format I/O, synthetic corpora
+//! calibrated to the paper's three evaluation datasets, and controlled
+//! similarity-pair samplers for the estimation experiments.
+//!
+//! The paper evaluates on *ARCENE* (100×10000, dense-ish), *FARM*
+//! (2059×54877, sparse text) and *URL* day-0 (10000×3231961, extremely
+//! sparse) from UCI. Those downloads are not available offline, so
+//! [`synth`] generates corpora with the same statistical shape (see
+//! DESIGN.md §4 for the substitution argument); [`libsvm`] can load the
+//! real files if the user drops them in.
+
+pub mod sparse;
+pub mod libsvm;
+pub mod synth;
+pub mod pairs;
+
+pub use sparse::{CsrMatrix, Dataset};
+pub use synth::{SynthSpec, SynthKind};

@@ -1,0 +1,108 @@
+//! Controlled-similarity vector pairs for the estimation experiments.
+//!
+//! The paper's theory is stated for a pair `(u, v)` of unit-norm vectors
+//! with inner product ρ (Eq. 2). These samplers construct pairs whose
+//! inner product is *exactly* ρ, so Monte-Carlo collision rates can be
+//! compared against `P(ρ)` with no data-side slack.
+
+use crate::mathx::NormalSampler;
+
+/// A random unit pair `(u, v)` in `R^d` with `⟨u, v⟩ = ρ` exactly
+/// (up to f32 rounding): `v = ρ·u + √(1−ρ²)·u⊥`.
+pub fn unit_pair_with_rho(d: usize, rho: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    assert!(d >= 2, "need d >= 2 to build an orthogonal direction");
+    assert!((-1.0..=1.0).contains(&rho));
+    let mut ns = NormalSampler::new(seed, 0xBAD5EED);
+    // u: random direction, normalized.
+    let mut u: Vec<f64> = (0..d).map(|_| ns.next()).collect();
+    normalize(&mut u);
+    // g orthogonalized against u, normalized.
+    let mut g: Vec<f64> = (0..d).map(|_| ns.next()).collect();
+    let dot: f64 = g.iter().zip(&u).map(|(a, b)| a * b).sum();
+    for (gi, ui) in g.iter_mut().zip(&u) {
+        *gi -= dot * ui;
+    }
+    normalize(&mut g);
+    let c = (1.0 - rho * rho).sqrt();
+    let v: Vec<f32> = u
+        .iter()
+        .zip(&g)
+        .map(|(&ui, &gi)| (rho * ui + c * gi) as f32)
+        .collect();
+    let u: Vec<f32> = u.iter().map(|&x| x as f32).collect();
+    (u, v)
+}
+
+fn normalize(v: &mut [f64]) {
+    let n: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    assert!(n > 0.0);
+    for x in v.iter_mut() {
+        *x /= n;
+    }
+}
+
+/// Correlated standard-normal coordinate pairs `(x_j, y_j)` drawn
+/// directly from the bivariate normal of Eq. (2) — the *projected*
+/// distribution, bypassing the projection step. Used by the Monte-Carlo
+/// variance experiments where only the marginal law matters.
+pub fn bivariate_normal_batch(k: usize, rho: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut ns = NormalSampler::new(seed, 0xB1AA);
+    let c = (1.0 - rho * rho).sqrt();
+    let mut x = Vec::with_capacity(k);
+    let mut y = Vec::with_capacity(k);
+    for _ in 0..k {
+        let z1 = ns.next();
+        let z2 = ns.next();
+        x.push(z1 as f32);
+        y.push((rho * z1 + c * z2) as f32);
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_rho_and_unit_norms() {
+        for &rho in &[0.0, 0.25, 0.56, 0.9, 0.99, 1.0] {
+            let (u, v) = unit_pair_with_rho(128, rho, 7);
+            let nu: f64 = u.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            let nv: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            let dot: f64 = u.iter().zip(&v).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+            assert!((nu - 1.0).abs() < 1e-5, "‖u‖ = {nu}");
+            assert!((nv - 1.0).abs() < 1e-5, "‖v‖ = {nv}");
+            assert!((dot - rho).abs() < 1e-5, "ρ = {dot}, want {rho}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_pairs() {
+        let (u1, _) = unit_pair_with_rho(32, 0.5, 1);
+        let (u2, _) = unit_pair_with_rho(32, 0.5, 2);
+        assert_ne!(u1, u2);
+    }
+
+    #[test]
+    fn bivariate_batch_correlation() {
+        let k = 200_000;
+        let rho = 0.6;
+        let (x, y) = bivariate_normal_batch(k, rho, 3);
+        let mut sxy = 0.0f64;
+        let mut sxx = 0.0f64;
+        let mut syy = 0.0f64;
+        for (&a, &b) in x.iter().zip(&y) {
+            sxy += (a as f64) * (b as f64);
+            sxx += (a as f64) * (a as f64);
+            syy += (b as f64) * (b as f64);
+        }
+        let corr = sxy / (sxx.sqrt() * syy.sqrt());
+        assert!((corr - rho).abs() < 0.01, "corr {corr}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn d1_rejected() {
+        unit_pair_with_rho(1, 0.5, 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Compressed sparse row matrices and labeled datasets.
+
+/// CSR matrix with f32 values and u32 column indices.
+#[derive(Clone, Debug, Default)]
+pub struct CsrMatrix {
+    /// Row start offsets, length `rows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<u32>,
+    /// Values, parallel to `indices`.
+    pub values: Vec<f32>,
+    /// Number of columns (dimensionality `D`).
+    pub cols: usize,
+}
+
+impl CsrMatrix {
+    pub fn with_capacity(rows: usize, nnz: usize, cols: usize) -> Self {
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0);
+        CsrMatrix {
+            indptr,
+            indices: Vec::with_capacity(nnz),
+            values: Vec::with_capacity(nnz),
+            cols,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Append a row given as sorted (indices, values).
+    pub fn push_row(&mut self, idx: &[u32], val: &[f32]) {
+        assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted");
+        if let Some(&last) = idx.last() {
+            assert!((last as usize) < self.cols, "index {last} >= cols {}", self.cols);
+        }
+        self.indices.extend_from_slice(idx);
+        self.values.extend_from_slice(val);
+        self.indptr.push(self.indices.len());
+    }
+
+    /// Row view as (indices, values).
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// L2 norm of a row.
+    pub fn row_norm(&self, r: usize) -> f32 {
+        let (_, v) = self.row(r);
+        v.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Normalize every row to unit L2 norm (the paper's standing
+    /// assumption ‖u‖ = 1; zero rows are left as-is).
+    pub fn normalize_rows(&mut self) {
+        for r in 0..self.rows() {
+            let n = self.row_norm(r);
+            if n > 0.0 {
+                let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+                for v in &mut self.values[s..e] {
+                    *v /= n;
+                }
+            }
+        }
+    }
+
+    /// Dense inner product of two rows (both index-sorted).
+    pub fn row_dot(&self, a: usize, b: usize) -> f64 {
+        let (ia, va) = self.row(a);
+        let (ib, vb) = self.row(b);
+        let mut dot = 0.0f64;
+        let (mut p, mut q) = (0usize, 0usize);
+        while p < ia.len() && q < ib.len() {
+            match ia[p].cmp(&ib[q]) {
+                std::cmp::Ordering::Less => p += 1,
+                std::cmp::Ordering::Greater => q += 1,
+                std::cmp::Ordering::Equal => {
+                    dot += (va[p] * vb[q]) as f64;
+                    p += 1;
+                    q += 1;
+                }
+            }
+        }
+        dot
+    }
+
+    /// Materialize a row densely (for the dense projection path).
+    pub fn row_dense(&self, r: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        let (idx, val) = self.row(r);
+        for (&i, &v) in idx.iter().zip(val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+/// A labeled dataset: features + ±1 labels.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub x: CsrMatrix,
+    pub y: Vec<f32>,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Consistency check: label count matches row count, labels are ±1.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.x.rows() == self.y.len(),
+            "rows {} != labels {}",
+            self.x.rows(),
+            self.y.len()
+        );
+        anyhow::ensure!(
+            self.y.iter().all(|&l| l == 1.0 || l == -1.0),
+            "labels must be ±1"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        let mut m = CsrMatrix::with_capacity(3, 6, 10);
+        m.push_row(&[0, 3, 7], &[1.0, 2.0, 2.0]);
+        m.push_row(&[3, 9], &[3.0, 4.0]);
+        m.push_row(&[], &[]);
+        m
+    }
+
+    #[test]
+    fn shape_and_rows() {
+        let m = sample();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row(0), (&[0u32, 3, 7][..], &[1.0f32, 2.0, 2.0][..]));
+        assert_eq!(m.row(2).0.len(), 0);
+    }
+
+    #[test]
+    fn norms_and_normalization() {
+        let mut m = sample();
+        assert!((m.row_norm(0) - 3.0).abs() < 1e-6);
+        m.normalize_rows();
+        assert!((m.row_norm(0) - 1.0).abs() < 1e-6);
+        assert!((m.row_norm(1) - 1.0).abs() < 1e-6);
+        assert_eq!(m.row_norm(2), 0.0); // zero row untouched
+    }
+
+    #[test]
+    fn dot_product_sparse() {
+        let m = sample();
+        // rows 0 and 1 share only index 3: 2.0 * 3.0 = 6.
+        assert!((m.row_dot(0, 1) - 6.0).abs() < 1e-9);
+        assert_eq!(m.row_dot(0, 2), 0.0);
+    }
+
+    #[test]
+    fn row_dense_roundtrip() {
+        let m = sample();
+        let d = m.row_dense(0);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[3], 2.0);
+        assert_eq!(d[7], 2.0);
+        assert_eq!(d[1], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "index")]
+    fn out_of_range_index_rejected() {
+        let mut m = CsrMatrix::with_capacity(1, 1, 5);
+        m.push_row(&[5], &[1.0]);
+    }
+
+    #[test]
+    fn dataset_validation() {
+        let mut ds = Dataset {
+            x: sample(),
+            y: vec![1.0, -1.0, 1.0],
+            name: "t".into(),
+        };
+        ds.validate().unwrap();
+        ds.y[0] = 0.5;
+        assert!(ds.validate().is_err());
+        ds.y = vec![1.0, -1.0];
+        assert!(ds.validate().is_err());
+    }
+}

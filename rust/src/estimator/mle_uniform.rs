@@ -1,0 +1,206 @@
+//! Contingency-table MLE for the *uniform* scheme `h_w` — the second
+//! half of the paper's Section-7 program ("we can substantially improve
+//! linear estimators by solving nonlinear MLE equations"), here for the
+//! scheme with more than four cells.
+//!
+//! With bins `I_c = [l_c, l_{c+1})` (the clamped uniform lattice of
+//! `h_w`), the pair `(c_u[j], c_v[j])` lands in an `m×m` table with
+//! `π_ab(ρ) = Pr(x ∈ I_a, y ∈ I_b)` — bivariate-normal rectangle
+//! masses. The linear estimator keeps only `Σ_a π_aa`; the MLE uses the
+//! full table. Cell probabilities are tabulated on a ρ grid once per
+//! `(w, cutoff)` and interpolated.
+
+use crate::coding::CodingParams;
+use crate::mathx::golden_section_min;
+use crate::mathx::normal::bvn_rect;
+
+/// MLE estimator over the full `h_w` contingency table.
+#[derive(Clone, Debug)]
+pub struct UniformMle {
+    pub params: CodingParams,
+    m: usize,
+    grid: Vec<f64>,
+    /// `tables[g][a * m + b]` = π_ab at grid ρ `g`.
+    tables: Vec<Vec<f64>>,
+}
+
+impl UniformMle {
+    /// Build for uniform-scheme params (`scheme` must be `Uniform`).
+    /// `n_grid` controls the ρ-grid resolution (≥ 16).
+    pub fn new(params: CodingParams, n_grid: usize) -> Self {
+        assert_eq!(
+            params.scheme,
+            crate::coding::Scheme::Uniform,
+            "UniformMle requires the uniform scheme"
+        );
+        assert!(n_grid >= 16);
+        let m = params.cardinality();
+        let grid: Vec<f64> = (0..n_grid)
+            .map(|i| i as f64 / (n_grid - 1) as f64 * (1.0 - 1e-6))
+            .collect();
+        let tables = grid
+            .iter()
+            .map(|&rho| Self::cell_probs(&params, rho))
+            .collect();
+        UniformMle {
+            params,
+            m,
+            grid,
+            tables,
+        }
+    }
+
+    pub fn new_default(w: f64) -> Self {
+        Self::new(CodingParams::new(crate::coding::Scheme::Uniform, w), 128)
+    }
+
+    /// Bin boundaries of code `c` (the clamped uniform lattice: extreme
+    /// codes absorb the tails).
+    fn bin(params: &CodingParams, c: usize) -> (f64, f64) {
+        let b = (params.cutoff / params.w).ceil() as i64;
+        let lo_code = c as i64 - b;
+        let lo = if c == 0 {
+            f64::NEG_INFINITY
+        } else {
+            lo_code as f64 * params.w
+        };
+        let hi = if c as i64 == 2 * b - 1 {
+            f64::INFINITY
+        } else {
+            (lo_code + 1) as f64 * params.w
+        };
+        (lo, hi)
+    }
+
+    /// Exact `m×m` cell probabilities at ρ.
+    pub fn cell_probs(params: &CodingParams, rho: f64) -> Vec<f64> {
+        let m = params.cardinality();
+        let mut t = vec![0.0; m * m];
+        for a in 0..m {
+            let (s0, s1) = Self::bin(params, a);
+            // Symmetry π_ab = π_ba: fill the upper triangle only.
+            for b in a..m {
+                let (t0, t1) = Self::bin(params, b);
+                let p = bvn_rect(s0, s1, t0, t1, rho).max(1e-300);
+                t[a * m + b] = p;
+                t[b * m + a] = p;
+            }
+        }
+        t
+    }
+
+    fn cells_at(&self, rho: f64) -> Vec<f64> {
+        let n = self.grid.len();
+        let t = rho.clamp(0.0, self.grid[n - 1]) / self.grid[n - 1] * (n - 1) as f64;
+        let i = (t.floor() as usize).min(n - 2);
+        let frac = t - i as f64;
+        self.tables[i]
+            .iter()
+            .zip(&self.tables[i + 1])
+            .map(|(&a, &b)| a * (1.0 - frac) + b * frac)
+            .collect()
+    }
+
+    /// Tally the contingency table from code vectors.
+    pub fn tally(&self, cu: &[u16], cv: &[u16]) -> Vec<u64> {
+        assert_eq!(cu.len(), cv.len());
+        let mut n = vec![0u64; self.m * self.m];
+        for (&a, &b) in cu.iter().zip(cv) {
+            n[(a as usize).min(self.m - 1) * self.m + (b as usize).min(self.m - 1)] += 1;
+        }
+        n
+    }
+
+    /// Negative log-likelihood at ρ.
+    pub fn nll(&self, counts: &[u64], rho: f64) -> f64 {
+        let pi = self.cells_at(rho);
+        let mut ll = 0.0;
+        for (c, p) in counts.iter().zip(&pi) {
+            if *c > 0 {
+                ll += *c as f64 * p.max(1e-300).ln();
+            }
+        }
+        -ll
+    }
+
+    /// MLE ρ̂ by golden-section on [0, 1).
+    pub fn estimate(&self, cu: &[u16], cv: &[u16]) -> f64 {
+        let counts = self.tally(cu, cv);
+        let hi = *self.grid.last().unwrap();
+        golden_section_min(|r| self.nll(&counts, r), 0.0, hi, 1e-9).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::Scheme;
+    use crate::data::pairs::bivariate_normal_batch;
+
+    #[test]
+    fn cells_sum_to_one() {
+        let params = CodingParams::new(Scheme::Uniform, 1.0);
+        for &rho in &[0.0, 0.5, 0.9] {
+            let t = UniformMle::cell_probs(&params, rho);
+            let sum: f64 = t.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-7, "rho={rho}: {sum}");
+        }
+    }
+
+    #[test]
+    fn diagonal_mass_equals_p_w() {
+        // Σ_a π_aa must equal the Theorem-1 collision probability (up to
+        // tail clamping: the extreme bins absorb |x| > cutoff, which P_w
+        // treats as separate bins — mass beyond 6 is ~1e-9).
+        use crate::theory::p_w;
+        let params = CodingParams::new(Scheme::Uniform, 0.75);
+        let m = params.cardinality();
+        for &rho in &[0.1, 0.5, 0.8] {
+            let t = UniformMle::cell_probs(&params, rho);
+            let diag: f64 = (0..m).map(|a| t[a * m + a]).sum();
+            let want = p_w(rho, 0.75);
+            assert!((diag - want).abs() < 1e-6, "rho={rho}: {diag} vs {want}");
+        }
+    }
+
+    #[test]
+    fn mle_recovers_rho() {
+        let mle = UniformMle::new_default(0.75);
+        let params = mle.params.clone();
+        for &rho in &[0.3, 0.6, 0.9] {
+            let (x, y) = bivariate_normal_batch(30_000, rho, 11);
+            let est = mle.estimate(&params.encode(&x), &params.encode(&y));
+            assert!((est - rho).abs() < 0.02, "rho={rho}: mle {est}");
+        }
+    }
+
+    #[test]
+    fn mle_at_least_as_good_as_linear() {
+        use crate::estimator::CollisionEstimator;
+        let w = 0.75;
+        let rho = 0.5;
+        let k = 512;
+        let mle = UniformMle::new_default(w);
+        let params = mle.params.clone();
+        let lin = CollisionEstimator::new(params.clone());
+        let reps = 200;
+        let (mut mse_l, mut mse_m) = (0.0, 0.0);
+        for r in 0..reps {
+            let (x, y) = bivariate_normal_batch(k, rho, 7000 + r);
+            let cu = params.encode(&x);
+            let cv = params.encode(&y);
+            mse_l += (lin.estimate(&cu, &cv) - rho).powi(2);
+            mse_m += (mle.estimate(&cu, &cv) - rho).powi(2);
+        }
+        assert!(
+            mse_m <= mse_l * 1.05,
+            "uniform MLE mse {mse_m:.5} vs linear {mse_l:.5}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "uniform scheme")]
+    fn rejects_wrong_scheme() {
+        UniformMle::new(CodingParams::new(Scheme::TwoBit, 0.75), 32);
+    }
+}

@@ -1,0 +1,16 @@
+//! Similarity estimation from coded projections.
+//!
+//! * [`collision`] — the paper's linear estimator: invert the empirical
+//!   collision rate through the monotone `P(ρ)` map (Section 3), with
+//!   asymptotic standard errors from Theorems 2–4.
+//! * [`mle`] — the contingency-table maximum-likelihood estimator the
+//!   paper defers to future work (Section 5/7): for `h_{w,2}`, use all
+//!   16 cell counts, not just the diagonal collision mass.
+
+pub mod collision;
+pub mod mle;
+pub mod mle_uniform;
+
+pub use collision::CollisionEstimator;
+pub use mle::TwoBitMle;
+pub use mle_uniform::UniformMle;

@@ -1,0 +1,99 @@
+//! Monte-Carlo validation of the variance theorems (Theorems 2–4,
+//! Eq. 20) and of the MLE extension — the "extra" experiments listed in
+//! DESIGN.md's per-experiment index.
+
+use super::table::Table;
+use crate::coding::{CodingParams, Scheme};
+use crate::data::pairs::bivariate_normal_batch;
+use crate::estimator::{CollisionEstimator, TwoBitMle};
+use crate::theory::SchemeKind;
+
+/// Empirical `k · Var(ρ̂)` vs the theoretical variance factor `V`, per
+/// scheme, across ρ. Validates the delta-method asymptotics end to end
+/// (sampling → coding → inversion).
+pub fn mc_variance_table(k: usize, reps: u64, w: f64, seed: u64) -> Table {
+    let mut t = Table::new(
+        "mc_variance",
+        "Monte-Carlo k*Var(rho_hat) vs theory V (Theorems 2-4, Eq 20)",
+        &[
+            "rho", "scheme", "w", "k", "empirical_kvar", "theory_v", "ratio",
+        ],
+    );
+    let rhos = [0.1, 0.25, 0.5, 0.75, 0.9];
+    for (si, scheme) in SchemeKind::ALL.into_iter().enumerate() {
+        let wv = if scheme == SchemeKind::OneBit { 0.0 } else { w };
+        let params = CodingParams::new(scheme, wv);
+        let est = CollisionEstimator::new(params.clone());
+        for &rho in &rhos {
+            let mut sum = 0.0;
+            let mut sumsq = 0.0;
+            for r in 0..reps {
+                let (x, y) = bivariate_normal_batch(k, rho, seed + r * 31 + si as u64 * 7777);
+                let e = est.estimate(&params.encode(&x), &params.encode(&y));
+                sum += e;
+                sumsq += e * e;
+            }
+            let mean = sum / reps as f64;
+            let var = (sumsq / reps as f64 - mean * mean).max(0.0);
+            let kvar = var * k as f64;
+            let v = scheme.variance_factor(rho, wv);
+            t.push(vec![rho, si as f64, wv, k as f64, kvar, v, kvar / v]);
+        }
+    }
+    t
+}
+
+/// MLE vs linear estimator for `h_{w,2}`: MSE ratio over ρ.
+pub fn mc_mle_table(k: usize, reps: u64, w: f64, seed: u64) -> Table {
+    let mut t = Table::new(
+        "mc_mle",
+        "2-bit contingency-table MLE vs linear estimator (paper Section 7 future work)",
+        &["rho", "k", "mse_linear", "mse_mle", "mse_ratio"],
+    );
+    let params = CodingParams::new(Scheme::TwoBit, w);
+    let lin = CollisionEstimator::new(params.clone());
+    let mle = TwoBitMle::new_default(w);
+    for &rho in &[0.1, 0.3, 0.5, 0.7, 0.9] {
+        let (mut mse_l, mut mse_m) = (0.0, 0.0);
+        for r in 0..reps {
+            let (x, y) = bivariate_normal_batch(k, rho, seed + r * 17);
+            let cu = params.encode(&x);
+            let cv = params.encode(&y);
+            let el = lin.estimate(&cu, &cv);
+            let em = mle.estimate(&cu, &cv);
+            mse_l += (el - rho) * (el - rho);
+            mse_m += (em - rho) * (em - rho);
+        }
+        mse_l /= reps as f64;
+        mse_m /= reps as f64;
+        t.push(vec![rho, k as f64, mse_l, mse_m, mse_m / mse_l]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mc_variance_ratios_near_one() {
+        let t = mc_variance_table(1024, 120, 0.75, 77);
+        for row in &t.rows {
+            let ratio = row[6];
+            assert!(
+                (0.45..2.2).contains(&ratio),
+                "rho={} scheme={} ratio {ratio}",
+                row[0],
+                row[1]
+            );
+        }
+    }
+
+    #[test]
+    fn mle_never_much_worse() {
+        let t = mc_mle_table(512, 60, 0.75, 5);
+        for row in &t.rows {
+            assert!(row[4] < 1.3, "rho={}: mse ratio {}", row[0], row[4]);
+        }
+    }
+}

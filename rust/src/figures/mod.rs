@@ -1,0 +1,41 @@
+//! Regeneration of every figure in the paper's evaluation.
+//!
+//! Each `figN()` produces a [`Table`] containing the same series the
+//! paper plots; the CLI writes them as CSV under `results/` and prints
+//! aligned summaries. Figures 1–10 are pure theory (exact curves);
+//! Figures 11–14 run the Section-6 SVM pipeline on the synthetic
+//! stand-in corpora; the `mc_*` extras validate the variance theorems by
+//! Monte-Carlo and benchmark the MLE extension.
+
+pub mod table;
+pub mod theory_figs;
+pub mod svm_figs;
+pub mod mc;
+
+pub use table::Table;
+
+/// Run a figure by number with default parameters, returning its tables.
+/// SVM figures accept a `scale` in (0,1] shrinking the dataset/grid for
+/// quick runs.
+pub fn run_figure(fig: u32, scale: f64) -> crate::Result<Vec<Table>> {
+    Ok(match fig {
+        1 => vec![theory_figs::fig1_collision_probabilities()],
+        2 => vec![theory_figs::fig2_vwq_scale_free()],
+        3 => vec![theory_figs::fig3_vw_rho0()],
+        4 => vec![theory_figs::fig4_vw_vs_vwq()],
+        5 => theory_figs::fig5_optimized(),
+        6 => vec![theory_figs::fig6_pw2_vs_pw()],
+        7 => vec![theory_figs::fig7_vw2_vs_vw()],
+        8 => theory_figs::fig8_optimized_2bit(),
+        9 => vec![theory_figs::fig9_onebit_ratio_max()],
+        10 => vec![theory_figs::fig10_onebit_ratio_fixed_w()],
+        11 => vec![svm_figs::fig11_url_hw_vs_hwq(scale)],
+        12 => vec![svm_figs::fig12_url_four_schemes(scale)],
+        13 => vec![svm_figs::fig13_farm_four_schemes(scale)],
+        14 => svm_figs::fig14_summary(scale),
+        _ => anyhow::bail!("unknown figure {fig} (paper has figures 1–14)"),
+    })
+}
+
+/// All figure numbers in the paper.
+pub const ALL_FIGURES: [u32; 14] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14];

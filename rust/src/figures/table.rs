@@ -1,0 +1,154 @@
+//! Minimal tabular result container with CSV and aligned-text output.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Format with ~`sig` significant digits, trimming trailing zeros
+/// (`printf %g`-style; Rust's formatter has no `g` conversion).
+pub fn fmt_sig(v: f64, sig: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let mag = v.abs().log10().floor() as i32;
+    if !(-4..=9).contains(&mag) {
+        return format!("{v:.*e}", sig.saturating_sub(1));
+    }
+    let decimals = (sig as i32 - 1 - mag).max(0) as usize;
+    let s = format!("{v:.decimals$}");
+    if s.contains('.') {
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        s
+    }
+}
+
+/// A named table of f64 columns (NaN marks missing cells).
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Identifier, used as the CSV file stem (e.g. `fig5_left`).
+    pub name: String,
+    /// Human description (printed as a comment header).
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Write `results/<name>.csv`.
+    pub fn write_csv(&self, dir: impl AsRef<Path>) -> crate::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let path = dir.as_ref().join(format!("{}.csv", self.name));
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "# {}", self.title)?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .map(|v| {
+                    if v.is_nan() {
+                        String::new()
+                    } else {
+                        fmt_sig(*v, 7)
+                    }
+                })
+                .collect();
+            writeln!(f, "{}", cells.join(","))?;
+        }
+        f.flush()?;
+        Ok(path)
+    }
+
+    /// Aligned text rendering (first/last rows if long).
+    pub fn render_text(&self, max_rows: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {}\n", self.name, self.title));
+        let widths: Vec<usize> = self.columns.iter().map(|c| c.len().max(10)).collect();
+        for (c, w) in self.columns.iter().zip(&widths) {
+            out.push_str(&format!("{c:>w$} ", w = w));
+        }
+        out.push('\n');
+        let n = self.rows.len();
+        let show: Vec<usize> = if n <= max_rows {
+            (0..n).collect()
+        } else {
+            let head = max_rows / 2;
+            let tail = max_rows - head;
+            (0..head).chain(n - tail..n).collect()
+        };
+        let mut last = 0usize;
+        for &i in &show {
+            if i > last + 1 {
+                out.push_str("   ...\n");
+            }
+            for (v, w) in self.rows[i].iter().zip(&widths) {
+                if v.is_nan() {
+                    out.push_str(&format!("{:>w$} ", "-", w = w));
+                } else {
+                    out.push_str(&format!("{v:>w$.4} ", w = w));
+                }
+            }
+            out.push('\n');
+            last = i;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_render() {
+        let mut t = Table::new("test_fig", "a test", &["x", "y"]);
+        t.push(vec![1.0, 2.0]);
+        t.push(vec![3.0, f64::NAN]);
+        let text = t.render_text(10);
+        assert!(text.contains("test_fig"));
+        assert!(text.contains('-'));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", "t", &["x", "y"]);
+        t.push(vec![1.0]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("csv_test", "desc", &["a", "b"]);
+        t.push(vec![0.5, 1.5]);
+        let dir = std::env::temp_dir().join(format!("crp_fig_{}", std::process::id()));
+        let path = t.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("a,b"));
+        assert!(text.contains("0.5,1.5"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn render_truncates_long_tables() {
+        let mut t = Table::new("long", "long", &["x"]);
+        for i in 0..100 {
+            t.push(vec![i as f64]);
+        }
+        let text = t.render_text(6);
+        assert!(text.contains("..."));
+        assert!(text.lines().count() < 15);
+    }
+}

@@ -1,0 +1,326 @@
+//! Figures 1–10: the paper's theory curves, computed exactly.
+
+use super::table::Table;
+use crate::theory::{
+    optimum_w, p_w, p_w2, p_wq, v_1, v_w, v_w2, v_wq, SchemeKind,
+};
+use crate::theory::variance::v_wq_scale_free;
+
+/// ρ values the paper uses in the collision-probability panels.
+pub const PANEL_RHOS: [f64; 6] = [0.0, 0.25, 0.5, 0.75, 0.9, 0.99];
+/// ρ values in the variance panels (Figures 4 & 7 have 8 panels).
+pub const VAR_RHOS: [f64; 8] = [0.0, 0.1, 0.25, 0.5, 0.56, 0.75, 0.9, 0.99];
+
+fn w_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Figure 1: `P_w` vs `P_{w,q}` over w for six ρ values.
+pub fn fig1_collision_probabilities() -> Table {
+    let mut cols = vec!["w".to_string()];
+    for r in PANEL_RHOS {
+        cols.push(format!("Pw_rho{r}"));
+        cols.push(format!("Pwq_rho{r}"));
+    }
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "fig01_collision",
+        "Fig 1: collision probabilities P_w (proposed) vs P_{w,q} (Datar et al.)",
+        &cols_ref,
+    );
+    for w in w_grid(0.1, 10.0, 100) {
+        let mut row = vec![w];
+        for r in PANEL_RHOS {
+            row.push(p_w(r, w));
+            row.push(p_wq(r, w));
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// Figure 2: the scale-free variance factor `V_{w,q}·4/d²` against
+/// `t = w/√d`; minimum 7.6797 at t = 1.6476.
+pub fn fig2_vwq_scale_free() -> Table {
+    let mut t = Table::new(
+        "fig02_vwq_scale_free",
+        "Fig 2: V_{w,q} x 4/d^2 vs w/sqrt(d); min 7.6797 at 1.6476",
+        &["t", "v"],
+    );
+    for x in w_grid(0.2, 8.0, 160) {
+        t.push(vec![x, v_wq_scale_free(x)]);
+    }
+    t
+}
+
+/// Figure 3: `V_w|ρ=0` over w, approaching π²/4.
+pub fn fig3_vw_rho0() -> Table {
+    let mut t = Table::new(
+        "fig03_vw_rho0",
+        "Fig 3: V_w at rho=0 vs w -> pi^2/4 = 2.4674",
+        &["w", "v_w", "pi2_over_4"],
+    );
+    let limit = std::f64::consts::PI.powi(2) / 4.0;
+    for w in w_grid(0.2, 12.0, 120) {
+        t.push(vec![w, v_w(0.0, w), limit]);
+    }
+    t
+}
+
+/// Figure 4: `V_w` vs `V_{w,q}` over w at fixed ρ panels.
+pub fn fig4_vw_vs_vwq() -> Table {
+    let mut cols = vec!["w".to_string()];
+    for r in VAR_RHOS {
+        cols.push(format!("Vw_rho{r}"));
+        cols.push(format!("Vwq_rho{r}"));
+    }
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "fig04_vw_vs_vwq",
+        "Fig 4: variance factors V_w vs V_{w,q} at fixed w",
+        &cols_ref,
+    );
+    for w in w_grid(0.1, 8.0, 80) {
+        let mut row = vec![w];
+        for r in VAR_RHOS {
+            row.push(v_w(r, w));
+            row.push(v_wq(r, w));
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// Figure 5: optimized (over w) variance factors and the optimizing w,
+/// per ρ. Two tables: left (best V) and right (argmin w).
+pub fn fig5_optimized() -> Vec<Table> {
+    let mut left = Table::new(
+        "fig05_left_best_v",
+        "Fig 5 left: min_w V_w vs min_w V_{w,q}",
+        &["rho", "Vw_best", "Vwq_best"],
+    );
+    let mut right = Table::new(
+        "fig05_right_opt_w",
+        "Fig 5 right: argmin_w V_w vs argmin_w V_{w,q} (cap = 20 marks divergence)",
+        &["rho", "w_opt_hw", "w_opt_hwq", "hw_at_cap"],
+    );
+    for i in 1..=49 {
+        let rho = i as f64 / 50.0;
+        let rw = optimum_w(SchemeKind::Uniform, rho);
+        let rq = optimum_w(SchemeKind::WindowOffset, rho);
+        left.push(vec![rho, rw.v, rq.v]);
+        right.push(vec![rho, rw.w, rq.w, f64::from(u8::from(rw.at_cap))]);
+    }
+    vec![left, right]
+}
+
+/// Figure 6: `P_{w,2}` vs `P_w` over w at the six panel ρ values.
+pub fn fig6_pw2_vs_pw() -> Table {
+    let mut cols = vec!["w".to_string()];
+    for r in PANEL_RHOS {
+        cols.push(format!("Pw2_rho{r}"));
+        cols.push(format!("Pw_rho{r}"));
+    }
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "fig06_pw2_vs_pw",
+        "Fig 6: collision probabilities of h_{w,2} vs h_w",
+        &cols_ref,
+    );
+    for w in w_grid(0.05, 5.0, 100) {
+        let mut row = vec![w];
+        for r in PANEL_RHOS {
+            row.push(p_w2(r, w));
+            row.push(p_w(r, w));
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// Figure 7: `V_{w,2}` vs `V_w` over w at the eight variance ρ panels.
+pub fn fig7_vw2_vs_vw() -> Table {
+    let mut cols = vec!["w".to_string()];
+    for r in VAR_RHOS {
+        cols.push(format!("Vw2_rho{r}"));
+        cols.push(format!("Vw_rho{r}"));
+    }
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "fig07_vw2_vs_vw",
+        "Fig 7: variance factors V_{w,2} vs V_w",
+        &cols_ref,
+    );
+    for w in w_grid(0.05, 5.0, 100) {
+        let mut row = vec![w];
+        for r in VAR_RHOS {
+            row.push(v_w2(r, w));
+            row.push(v_w(r, w));
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// Figure 8: smallest `V_{w,2}` (and `V_w`) and the optimizing w, per ρ.
+pub fn fig8_optimized_2bit() -> Vec<Table> {
+    let mut left = Table::new(
+        "fig08_left_best_v",
+        "Fig 8 left: min_w V_{w,2} vs min_w V_w",
+        &["rho", "Vw2_best", "Vw_best"],
+    );
+    let mut right = Table::new(
+        "fig08_right_opt_w",
+        "Fig 8 right: argmin_w V_{w,2} vs argmin_w V_w",
+        &["rho", "w_opt_hw2", "w_opt_hw"],
+    );
+    for i in 1..=49 {
+        let rho = i as f64 / 50.0;
+        let r2 = optimum_w(SchemeKind::TwoBit, rho);
+        let rw = optimum_w(SchemeKind::Uniform, rho);
+        left.push(vec![rho, r2.v, rw.v]);
+        right.push(vec![rho, r2.w, rw.w]);
+    }
+    vec![left, right]
+}
+
+/// Figure 9: max-over-w variance ratios `V_1/V_w` and `V_1/V_{w,2}`
+/// against `1 − ρ` (log scale in the paper; we emit 1−ρ as a column).
+pub fn fig9_onebit_ratio_max() -> Table {
+    let mut t = Table::new(
+        "fig09_onebit_ratio_max",
+        "Fig 9: max-over-w Var(rho1)/Var(rho_w) and /Var(rho_w2) vs 1-rho",
+        &["one_minus_rho", "rho", "ratio_hw", "ratio_hw2"],
+    );
+    // Log-spaced 1−ρ from 1 down to 10^-3 (ρ up to 0.999).
+    let n = 60;
+    for i in 0..n {
+        let log1m = -3.0 * i as f64 / (n - 1) as f64; // 0 .. −3
+        let one_m = 10f64.powf(log1m);
+        let rho = 1.0 - one_m;
+        let v1 = v_1(rho);
+        let rw = optimum_w(SchemeKind::Uniform, rho);
+        let r2 = optimum_w(SchemeKind::TwoBit, rho);
+        t.push(vec![one_m, rho, v1 / rw.v, v1 / r2.v]);
+    }
+    t
+}
+
+/// Figure 10: the same ratios at fixed w ∈ {0.25, 0.5, 0.75, 1}.
+pub fn fig10_onebit_ratio_fixed_w() -> Table {
+    let ws = [0.25, 0.5, 0.75, 1.0];
+    let mut cols = vec!["one_minus_rho".to_string(), "rho".to_string()];
+    for w in ws {
+        cols.push(format!("ratio_hw_w{w}"));
+        cols.push(format!("ratio_hw2_w{w}"));
+    }
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "fig10_onebit_ratio_fixed_w",
+        "Fig 10: Var(rho1)/Var(rho_w) and /Var(rho_w2) at fixed w",
+        &cols_ref,
+    );
+    let n = 60;
+    for i in 0..n {
+        let log1m = -3.0 * i as f64 / (n - 1) as f64;
+        let one_m = 10f64.powf(log1m);
+        let rho = 1.0 - one_m;
+        let v1 = v_1(rho);
+        let mut row = vec![one_m, rho];
+        for w in ws {
+            row.push(v1 / v_w(rho, w));
+            row.push(v1 / v_w2(rho, w));
+        }
+        t.push(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_has_expected_shape() {
+        let t = fig1_collision_probabilities();
+        assert_eq!(t.columns.len(), 13);
+        assert_eq!(t.rows.len(), 100);
+        // At rho=0 (cols 1,2): P_w plateaus near 0.5, P_wq → 1.
+        let last = t.rows.last().unwrap();
+        assert!((last[1] - 0.5).abs() < 0.01, "P_w(0, 10) = {}", last[1]);
+        assert!(last[2] > 0.85, "P_wq(0, 10) = {}", last[2]);
+    }
+
+    #[test]
+    fn fig2_min_matches_paper_constant() {
+        let t = fig2_vwq_scale_free();
+        let min = t
+            .rows
+            .iter()
+            .map(|r| r[1])
+            .fold(f64::INFINITY, f64::min);
+        assert!((min - 7.6797).abs() < 0.01, "min {min}");
+    }
+
+    #[test]
+    fn fig3_approaches_limit() {
+        let t = fig3_vw_rho0();
+        let last = t.rows.last().unwrap();
+        assert!((last[1] - last[2]).abs() < 0.01);
+    }
+
+    #[test]
+    fn fig5_shapes() {
+        let ts = fig5_optimized();
+        assert_eq!(ts.len(), 2);
+        // ρ = 0.02 row: h_w optimum at cap, h_wq around 2.
+        let right = &ts[1];
+        let first = &right.rows[0];
+        assert!(first[1] > 6.0, "h_w optimum {first:?}");
+        assert!(first[2] < 4.0);
+        // High ρ row: h_w optimum small.
+        let last = right.rows.last().unwrap();
+        assert!(last[1] < 2.0, "{last:?}");
+    }
+
+    #[test]
+    fn fig9_monotone_advantage_at_high_rho() {
+        let t = fig9_onebit_ratio_max();
+        // ratio_hw at the highest ρ (last row) should be large (>3);
+        // at ρ=0 (first row) ≈ 1.
+        let first = &t.rows[0];
+        let last = t.rows.last().unwrap();
+        assert!((first[2] - 1.0).abs() < 0.05, "rho=0 ratio {}", first[2]);
+        assert!(last[2] > 3.0, "rho→1 ratio {}", last[2]);
+    }
+
+    #[test]
+    fn fig10_recommended_regime() {
+        // Paper: at w = 0.75 and high ρ, V_1/V_{w,2} is between 2 and 3.
+        let t = fig10_onebit_ratio_fixed_w();
+        let hi = t
+            .rows
+            .iter()
+            .find(|r| (r[1] - 0.99).abs() < 0.005)
+            .expect("rho=0.99 row");
+        // columns: [1-rho, rho, (hw,hw2) x {0.25,0.5,0.75,1.0}]
+        let ratio_hw2_w075 = hi[2 + 2 * 2 + 1];
+        assert!(
+            (1.5..4.0).contains(&ratio_hw2_w075),
+            "V1/Vw2 at w=0.75, rho=0.99: {ratio_hw2_w075}"
+        );
+    }
+
+    #[test]
+    fn all_theory_figs_render() {
+        for f in [1u32, 2, 3, 4, 6, 7, 9, 10] {
+            let ts = crate::figures::run_figure(f, 1.0).unwrap();
+            for t in ts {
+                assert!(!t.rows.is_empty());
+                let _ = t.render_text(8);
+            }
+        }
+    }
+}

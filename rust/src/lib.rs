@@ -1,0 +1,79 @@
+//! # `crp` — Coding for Random Projections
+//!
+//! A production-grade reproduction of *Coding for Random Projections*
+//! (Ping Li, Michael Mitzenmacher, Anshumali Shrivastava; ICML 2014) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The paper studies **coding schemes** for Gaussian random projections:
+//! project unit-norm vectors `u, v ∈ R^D` with `R ∈ R^{D×k}`,
+//! `r_ij ~ N(0,1)`, then quantize each projected coordinate to a small
+//! number of bits. Four schemes are analyzed and implemented here:
+//!
+//! * [`coding::Scheme::Uniform`] — `h_w(x) = floor(x/w)`, the paper's
+//!   proposed uniform quantization (Section 1.1, Theorem 1/3).
+//! * [`coding::Scheme::WindowOffset`] — `h_{w,q}(x) = floor((x+q)/w)`,
+//!   `q ~ U(0,w)`, the prior scheme of Datar et al. (SCG 2004) used as the
+//!   baseline throughout the paper (Theorem 2).
+//! * [`coding::Scheme::TwoBit`] — the paper's non-uniform 2-bit scheme
+//!   `h_{w,2}` over the regions `(-∞,-w), [-w,0), [0,w), [w,∞)`
+//!   (Section 4, Theorem 4).
+//! * [`coding::Scheme::OneBit`] — `h_1(x) = sign(x)`, SimHash-style
+//!   (Section 5).
+//!
+//! ## Layer map
+//!
+//! * **Layer 1/2 (build-time Python, `python/compile/`)** — Pallas kernels
+//!   for the blocked projection matmul and fused quantization, composed
+//!   into JAX graphs and AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 3 (this crate)** — the runtime system. [`runtime`] loads the
+//!   AOT artifacts via PJRT; [`projection`] tiles arbitrary workloads onto
+//!   the fixed artifact shapes; [`coordinator`] serves sketch/similarity
+//!   requests over TCP with dynamic batching. Python never runs on the
+//!   request path.
+//!
+//! ## Analysis stack
+//!
+//! [`theory`] implements every closed form in the paper — collision
+//! probabilities `P_w, P_{w,q}, P_{w,2}, P_1` and asymptotic variance
+//! factors `V_w, V_{w,q}, V_{w,2}, V_1` (Theorems 1–4) — on top of the
+//! self-contained numerics in [`mathx`]. [`estimator`] inverts empirical
+//! collision rates into similarity estimates (plus the contingency-table
+//! MLE the paper leaves as future work), and [`figures`] regenerates every
+//! figure of the paper's evaluation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use crp::coding::{CodingParams, Scheme};
+//! use crp::projection::{ProjectionConfig, Projector};
+//! use crp::estimator::CollisionEstimator;
+//!
+//! // Project two unit vectors with k = 1024 shared Gaussian projections
+//! // and estimate their inner-product similarity from 2-bit codes.
+//! let cfg = ProjectionConfig { k: 1024, seed: 7, ..Default::default() };
+//! let projector = Projector::new_cpu(cfg);
+//! let (u, v) = crp::data::pairs::unit_pair_with_rho(256, 0.8, 42);
+//! let xu = projector.project_dense(&u);
+//! let xv = projector.project_dense(&v);
+//! let params = CodingParams::new(Scheme::TwoBit, 0.75);
+//! let cu = params.encode(&xu);
+//! let cv = params.encode(&xv);
+//! let est = CollisionEstimator::new(params);
+//! let rho_hat = est.estimate(&cu, &cv);
+//! assert!((rho_hat - 0.8).abs() < 0.1);
+//! ```
+
+pub mod mathx;
+pub mod theory;
+pub mod coding;
+pub mod projection;
+pub mod runtime;
+pub mod estimator;
+pub mod data;
+pub mod svm;
+pub mod lsh;
+pub mod coordinator;
+pub mod figures;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,18 @@
+//! LSH near-neighbor search over coded projections (Section 1.1's
+//! motivating application).
+//!
+//! With `k_per_table` projections and bin width `w`, each table hashes a
+//! vector to the concatenation of its codes — `(2·ceil(6/w))^{k_per_table}`
+//! logical buckets, stored in a hash map. Multiple independent tables
+//! boost recall, exactly the classic LSH construction of Indyk–Motwani /
+//! Datar et al. The same machinery runs with any of the four schemes, so
+//! the `h_w` vs `h_{w,q}` comparison the paper defers to a tech report
+//! can be measured empirically here ([`eval`]).
+
+pub mod table;
+pub mod search;
+pub mod eval;
+pub mod model;
+
+pub use search::{LshIndex, LshParams};
+pub use table::LshTable;

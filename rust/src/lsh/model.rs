@@ -1,0 +1,117 @@
+//! Analytical LSH recall model: predicted retrieval probability from the
+//! paper's collision probabilities.
+//!
+//! For a query at similarity ρ to its target, one table of `k` codes
+//! collides with probability `P(ρ)^k`, and `L` independent tables
+//! retrieve the target with probability `1 − (1 − P(ρ)^k)^L` — the
+//! classic LSH amplification, driven entirely by the per-coordinate
+//! `P(ρ)` each coding scheme provides. This closes the loop between the
+//! theory layer and the measured recall of [`super::eval`].
+
+use crate::theory::SchemeKind;
+
+/// Predicted single-table collision probability at similarity ρ.
+pub fn table_collision(scheme: SchemeKind, w: f64, rho: f64, k_per_table: usize) -> f64 {
+    scheme
+        .collision_probability(rho, w)
+        .powi(k_per_table as i32)
+}
+
+/// Predicted recall (target retrieved by ≥ 1 of `n_tables`).
+pub fn predicted_recall(
+    scheme: SchemeKind,
+    w: f64,
+    rho: f64,
+    k_per_table: usize,
+    n_tables: usize,
+) -> f64 {
+    let p = table_collision(scheme, w, rho, k_per_table);
+    1.0 - (1.0 - p).powi(n_tables as i32)
+}
+
+/// Predicted fraction of a *random* corpus (ρ ≈ 0 pairs) that lands in
+/// the query's buckets — the candidate-cost model.
+pub fn predicted_candidate_frac(
+    scheme: SchemeKind,
+    w: f64,
+    k_per_table: usize,
+    n_tables: usize,
+) -> f64 {
+    predicted_recall(scheme, w, 0.0, k_per_table, n_tables)
+}
+
+/// Solve for the number of tables needed to hit `target_recall` at ρ.
+pub fn tables_for_recall(
+    scheme: SchemeKind,
+    w: f64,
+    rho: f64,
+    k_per_table: usize,
+    target_recall: f64,
+) -> usize {
+    assert!((0.0..1.0).contains(&target_recall));
+    let p = table_collision(scheme, w, rho, k_per_table);
+    if p <= 0.0 {
+        return usize::MAX;
+    }
+    if p >= 1.0 {
+        return 1;
+    }
+    ((1.0 - target_recall).ln() / (1.0 - p).ln()).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodingParams, Scheme};
+    use crate::lsh::eval::evaluate_lsh_noise;
+    use crate::lsh::LshParams;
+
+    #[test]
+    fn amplification_monotone() {
+        let p1 = predicted_recall(SchemeKind::TwoBit, 0.75, 0.9, 4, 2);
+        let p2 = predicted_recall(SchemeKind::TwoBit, 0.75, 0.9, 4, 8);
+        assert!(p2 > p1);
+        let q1 = predicted_recall(SchemeKind::TwoBit, 0.75, 0.9, 4, 8);
+        let q2 = predicted_recall(SchemeKind::TwoBit, 0.75, 0.9, 10, 8);
+        assert!(q2 < q1, "longer keys are more selective");
+    }
+
+    #[test]
+    fn tables_for_recall_solves_inverse() {
+        let n = tables_for_recall(SchemeKind::TwoBit, 0.75, 0.9, 4, 0.9);
+        let achieved = predicted_recall(SchemeKind::TwoBit, 0.75, 0.9, 4, n);
+        assert!(achieved >= 0.9, "{n} tables give {achieved}");
+        let under = predicted_recall(SchemeKind::TwoBit, 0.75, 0.9, 4, n - 1);
+        assert!(under < 0.9);
+    }
+
+    #[test]
+    fn model_matches_measured_recall() {
+        // The empirical eval at ρ ≈ 0.95 should track the prediction
+        // within Monte-Carlo noise — theory ↔ system closure.
+        let (kpt, tables) = (4usize, 8usize);
+        let dim = 48;
+        let noise = 0.05;
+        let rho = 1.0 / (1.0 + dim as f64 * noise * noise).sqrt();
+        let predicted = predicted_recall(SchemeKind::TwoBit, 0.75, rho, kpt, tables);
+        let params = LshParams {
+            coding: CodingParams::new(Scheme::TwoBit, 0.75),
+            k_per_table: kpt,
+            n_tables: tables,
+            seed: 5,
+        };
+        let measured = evaluate_lsh_noise(params, 200, dim, 60, 9, noise).recall_at_10;
+        assert!(
+            (measured - predicted).abs() < 0.15,
+            "measured {measured} vs predicted {predicted}"
+        );
+    }
+
+    #[test]
+    fn candidate_frac_model_reasonable() {
+        let f = predicted_candidate_frac(SchemeKind::OneBit, 0.0, 8, 4);
+        // 1-bit keys of length 8: random pair collides 0.5^8 per table.
+        let want = 1.0 - (1.0 - 0.5f64.powi(8)).powi(4);
+        assert!((f - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,240 @@
+//! Multi-table LSH index over coded random projections.
+
+use super::table::LshTable;
+use crate::coding::CodingParams;
+use crate::projection::{ProjectionConfig, Projector};
+
+/// Index parameters.
+#[derive(Clone, Debug)]
+pub struct LshParams {
+    /// Coding scheme + bin width used for bucketing.
+    pub coding: CodingParams,
+    /// Projections concatenated per table.
+    pub k_per_table: usize,
+    /// Number of independent tables.
+    pub n_tables: usize,
+    /// Seed for the projection matrices (table `t` uses `seed + t`).
+    pub seed: u64,
+}
+
+impl Default for LshParams {
+    fn default() -> Self {
+        LshParams {
+            coding: CodingParams::new(crate::coding::Scheme::TwoBit, 0.75),
+            k_per_table: 8,
+            n_tables: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// A multi-table LSH index storing dense vectors.
+pub struct LshIndex {
+    pub params: LshParams,
+    projectors: Vec<Projector>,
+    tables: Vec<LshTable>,
+    /// Stored vectors (dense), for exact re-ranking of candidates.
+    data: Vec<Vec<f32>>,
+}
+
+impl LshIndex {
+    pub fn new(params: LshParams) -> Self {
+        let projectors = (0..params.n_tables)
+            .map(|t| {
+                Projector::new_cpu(ProjectionConfig {
+                    k: params.k_per_table,
+                    seed: params.seed + t as u64,
+                    ..Default::default()
+                })
+            })
+            .collect();
+        let tables = (0..params.n_tables).map(|_| LshTable::new()).collect();
+        LshIndex {
+            params,
+            projectors,
+            tables,
+            data: Vec::new(),
+        }
+    }
+
+    fn codes_for(&self, t: usize, v: &[f32]) -> Vec<u16> {
+        // The paper's analysis assumes unit-norm inputs (projected values
+        // marginally N(0,1)); normalize so queries with different norms
+        // hash consistently (LSH for cosine similarity).
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let x = if norm > 0.0 && (norm - 1.0).abs() > 1e-6 {
+            let scaled: Vec<f32> = v.iter().map(|x| x / norm).collect();
+            self.projectors[t].project_dense(&scaled)
+        } else {
+            self.projectors[t].project_dense(v)
+        };
+        self.params.coding.encode(&x)
+    }
+
+    /// Insert a vector; returns its id.
+    pub fn insert(&mut self, v: &[f32]) -> u32 {
+        let id = self.data.len() as u32;
+        for t in 0..self.params.n_tables {
+            let codes = self.codes_for(t, v);
+            self.tables[t].insert(&codes, id);
+        }
+        self.data.push(v.to_vec());
+        id
+    }
+
+    /// Number of stored vectors.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Candidate ids across all tables (deduplicated), plus the number
+    /// of bucket probes performed.
+    pub fn candidates(&self, q: &[f32]) -> (Vec<u32>, usize) {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for t in 0..self.params.n_tables {
+            let codes = self.codes_for(t, q);
+            for &id in self.tables[t].probe(&codes) {
+                if seen.insert(id) {
+                    out.push(id);
+                }
+            }
+        }
+        (out, self.params.n_tables)
+    }
+
+    /// Top-`n` near neighbors by exact cosine over the candidate set.
+    /// Returns `(id, similarity)` sorted descending.
+    pub fn query(&self, q: &[f32], n: usize) -> Vec<(u32, f64)> {
+        let (cands, _) = self.candidates(q);
+        let mut scored: Vec<(u32, f64)> = cands
+            .into_iter()
+            .map(|id| (id, cosine(q, &self.data[id as usize])))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(n);
+        scored
+    }
+
+    /// Exact (brute-force) top-`n`, for recall evaluation.
+    pub fn brute_force(&self, q: &[f32], n: usize) -> Vec<(u32, f64)> {
+        let mut scored: Vec<(u32, f64)> = self
+            .data
+            .iter()
+            .enumerate()
+            .map(|(id, v)| (id as u32, cosine(q, v)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(n);
+        scored
+    }
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += (x as f64) * (x as f64);
+        nb += (y as f64) * (y as f64);
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::pairs::unit_pair_with_rho;
+    use crate::mathx::NormalSampler;
+
+    fn random_unit(d: usize, seed: u64) -> Vec<f32> {
+        let mut ns = NormalSampler::new(seed, 1);
+        let mut v: Vec<f32> = (0..d).map(|_| ns.next() as f32).collect();
+        let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        for x in &mut v {
+            *x /= n;
+        }
+        v
+    }
+
+    #[test]
+    fn finds_exact_duplicate() {
+        let mut idx = LshIndex::new(LshParams::default());
+        let d = 64;
+        for s in 0..50 {
+            idx.insert(&random_unit(d, s));
+        }
+        let target = random_unit(d, 7);
+        let hits = idx.query(&target, 1);
+        assert_eq!(hits[0].0, 7);
+        assert!(hits[0].1 > 0.999);
+    }
+
+    #[test]
+    fn finds_near_neighbor_with_high_probability() {
+        let mut idx = LshIndex::new(LshParams {
+            n_tables: 12,
+            k_per_table: 6,
+            ..Default::default()
+        });
+        let d = 64;
+        for s in 0..200 {
+            idx.insert(&random_unit(d, 1000 + s));
+        }
+        // Plant a pair with ρ = 0.95 and query with its twin.
+        let (u, v) = unit_pair_with_rho(d, 0.95, 5);
+        let planted = idx.insert(&u);
+        let hits = idx.query(&v, 3);
+        assert!(
+            hits.iter().any(|&(id, _)| id == planted),
+            "planted neighbor not found: {hits:?}"
+        );
+    }
+
+    #[test]
+    fn candidates_fraction_small_for_random_queries() {
+        // LSH must prune: a random query should touch far fewer
+        // candidates than the corpus.
+        let mut idx = LshIndex::new(LshParams {
+            n_tables: 4,
+            k_per_table: 10,
+            ..Default::default()
+        });
+        let d = 64;
+        for s in 0..300 {
+            idx.insert(&random_unit(d, 2000 + s));
+        }
+        let q = random_unit(d, 1);
+        let (cands, _) = idx.candidates(&q);
+        assert!(
+            cands.len() < 150,
+            "no pruning: {} candidates of 300",
+            cands.len()
+        );
+    }
+
+    #[test]
+    fn brute_force_is_ground_truth() {
+        let mut idx = LshIndex::new(LshParams::default());
+        let d = 32;
+        for s in 0..20 {
+            idx.insert(&random_unit(d, 3000 + s));
+        }
+        let q = random_unit(d, 3005);
+        let bf = idx.brute_force(&q, 20);
+        assert_eq!(bf.len(), 20);
+        assert_eq!(bf[0].0, 5); // itself
+        for w in bf.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! A single LSH hash table keyed by concatenated codes.
+
+use std::collections::HashMap;
+
+/// One hash table: bucket key = the packed code words of a vector's
+/// `k_per_table` projections (hashed through a 64-bit mix).
+#[derive(Clone, Debug, Default)]
+pub struct LshTable {
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+/// Mix a slice of code values into a 64-bit bucket key (FNV-1a over the
+/// code stream; collisions across distinct code tuples are harmless —
+/// they only add candidates, never lose them).
+pub fn bucket_key(codes: &[u16]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &c in codes {
+        h ^= c as u64;
+        h = h.wrapping_mul(0x100000001b3);
+        h ^= (c >> 8) as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl LshTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert item `id` under its codes.
+    pub fn insert(&mut self, codes: &[u16], id: u32) {
+        self.buckets.entry(bucket_key(codes)).or_default().push(id);
+    }
+
+    /// Candidates sharing the query's bucket.
+    pub fn probe(&self, codes: &[u16]) -> &[u32] {
+        self.buckets
+            .get(&bucket_key(codes))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.buckets.values().map(|v| v.len()).sum()
+    }
+
+    /// Occupancy histogram (bucket sizes), for diagnostics.
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.buckets.values().map(|b| b.len()).collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_probe() {
+        let mut t = LshTable::new();
+        t.insert(&[1, 2, 3], 7);
+        t.insert(&[1, 2, 3], 9);
+        t.insert(&[4, 5, 6], 11);
+        assert_eq!(t.probe(&[1, 2, 3]), &[7, 9]);
+        assert_eq!(t.probe(&[4, 5, 6]), &[11]);
+        assert!(t.probe(&[0, 0, 0]).is_empty());
+        assert_eq!(t.n_buckets(), 2);
+        assert_eq!(t.n_items(), 3);
+    }
+
+    #[test]
+    fn key_sensitivity() {
+        // Different tuples (including order) get different keys.
+        assert_ne!(bucket_key(&[1, 2]), bucket_key(&[2, 1]));
+        assert_ne!(bucket_key(&[1]), bucket_key(&[1, 0]));
+        assert_eq!(bucket_key(&[3, 7]), bucket_key(&[3, 7]));
+    }
+
+    #[test]
+    fn histogram_sorted_desc() {
+        let mut t = LshTable::new();
+        for i in 0..5 {
+            t.insert(&[1], i);
+        }
+        t.insert(&[2], 99);
+        let h = t.bucket_sizes();
+        assert_eq!(h, vec![5, 1]);
+    }
+}

@@ -1,0 +1,335 @@
+//! `crp` — CLI for the Coding-for-Random-Projections system.
+//!
+//! Subcommands map onto DESIGN.md's per-experiment index:
+//!
+//! * `figures`     — regenerate paper figures 1–14 (CSV + text)
+//! * `mc-variance` — Monte-Carlo validation of Theorems 2–4 (+ `--mle`)
+//! * `lsh-eval`    — recall/probe-cost comparison of coding schemes
+//! * `serve`       — run the sketch service (Layer-3 coordinator)
+//! * `bench-serve` — loadgen against a running service
+//! * `artifacts`   — list/verify AOT artifacts
+//! * `estimate`    — one-shot similarity estimation demo
+//!
+//! Flags are `--name value` (no external CLI crate is vendored in this
+//! environment; parsing is in [`args`]).
+
+use std::sync::Arc;
+
+use crp::coding::{CodingParams, Scheme};
+use crp::figures::{run_figure, ALL_FIGURES};
+use crp::projection::{ProjectionConfig, Projector};
+
+/// Minimal `--flag value` argument parser.
+mod args {
+    use std::collections::HashMap;
+
+    pub struct Args {
+        pub cmd: String,
+        flags: HashMap<String, String>,
+        bools: std::collections::HashSet<String>,
+    }
+
+    impl Args {
+        pub fn parse(bool_flags: &[&str]) -> anyhow::Result<Self> {
+            let mut argv = std::env::args().skip(1);
+            let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+            let mut flags = HashMap::new();
+            let mut bools = std::collections::HashSet::new();
+            while let Some(a) = argv.next() {
+                let name = a
+                    .strip_prefix("--")
+                    .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?
+                    .to_string();
+                if bool_flags.contains(&name.as_str()) {
+                    bools.insert(name);
+                } else {
+                    let v = argv
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?;
+                    flags.insert(name, v);
+                }
+            }
+            Ok(Args { cmd, flags, bools })
+        }
+
+        pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            match self.flags.get(name) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --{name} {v:?}: {e}")),
+            }
+        }
+
+        pub fn get_str(&self, name: &str, default: &str) -> String {
+            self.flags
+                .get(name)
+                .cloned()
+                .unwrap_or_else(|| default.to_string())
+        }
+
+        pub fn get_opt(&self, name: &str) -> Option<&str> {
+            self.flags.get(name).map(|s| s.as_str())
+        }
+
+        pub fn flag(&self, name: &str) -> bool {
+            self.bools.contains(name)
+        }
+    }
+}
+
+fn parse_scheme(s: &str) -> crp::Result<Scheme> {
+    Ok(match s {
+        "uniform" | "hw" | "h_w" => Scheme::Uniform,
+        "offset" | "hwq" | "h_wq" | "window-offset" => Scheme::WindowOffset,
+        "two-bit" | "hw2" | "h_w2" | "2bit" => Scheme::TwoBit,
+        "one-bit" | "h1" | "h_1" | "1bit" | "sign" => Scheme::OneBit,
+        other => anyhow::bail!("unknown scheme {other:?} (uniform|offset|two-bit|one-bit)"),
+    })
+}
+
+const HELP: &str = "\
+crp — Coding for Random Projections (ICML 2014) reproduction
+
+USAGE: crp <command> [--flag value ...]
+
+COMMANDS:
+  figures      --fig N --scale S --out DIR      regenerate paper figures (default: all)
+  mc-variance  --k K --reps R --w W [--mle]     Monte-Carlo check of Theorems 2-4
+  lsh-eval     --corpus N --dim D --tables T --k-per-table K --queries Q
+  serve        --addr A --k K --scheme S --w W [--pjrt] [--snapshot F]
+  bench-serve  --addr A --n N --dim D --connections C
+  artifacts                                      list + compile-check AOT artifacts
+  estimate     --rho R --k K --w W --dim D       one-shot estimation demo
+  bit-budget   --rho R                            optimized V per bit budget
+  help
+";
+
+fn main() -> crp::Result<()> {
+    let a = args::Args::parse(&["mle", "pjrt"])?;
+    match a.cmd.as_str() {
+        "figures" => {
+            let scale: f64 = a.get("scale", 0.25)?;
+            let out = a.get_str("out", "results");
+            let figs: Vec<u32> = match a.get_opt("fig") {
+                Some(f) => vec![f.parse()?],
+                None => ALL_FIGURES.to_vec(),
+            };
+            for f in figs {
+                eprintln!("-- figure {f}");
+                for t in run_figure(f, scale)? {
+                    let path = t.write_csv(&out)?;
+                    println!("{}", t.render_text(12));
+                    eprintln!("   wrote {}", path.display());
+                }
+            }
+        }
+        "mc-variance" => {
+            let k: usize = a.get("k", 1024)?;
+            let reps: u64 = a.get("reps", 400)?;
+            let w: f64 = a.get("w", 0.75)?;
+            let out = a.get_str("out", "results");
+            let t = crp::figures::mc::mc_variance_table(k, reps, w, 20140601);
+            t.write_csv(&out)?;
+            println!("{}", t.render_text(24));
+            if a.flag("mle") {
+                let t = crp::figures::mc::mc_mle_table(k, reps.min(200), w, 20140602);
+                t.write_csv(&out)?;
+                println!("{}", t.render_text(12));
+            }
+        }
+        "lsh-eval" => {
+            let corpus: usize = a.get("corpus", 2000)?;
+            let dim: usize = a.get("dim", 64)?;
+            let tables: usize = a.get("tables", 8)?;
+            let kpt: usize = a.get("k-per-table", 8)?;
+            let queries: usize = a.get("queries", 100)?;
+            println!(
+                "{:<14} {:>6} {:>12} {:>16}",
+                "scheme", "w", "recall@10", "candidate_frac"
+            );
+            for (scheme, w) in [
+                (Scheme::Uniform, 1.0),
+                (Scheme::WindowOffset, 1.0),
+                (Scheme::TwoBit, 0.75),
+                (Scheme::OneBit, 0.0),
+            ] {
+                let params = crp::lsh::LshParams {
+                    coding: CodingParams::new(scheme, w),
+                    k_per_table: kpt,
+                    n_tables: tables,
+                    seed: 7,
+                };
+                let r = crp::lsh::eval::evaluate_lsh(params, corpus, dim, queries, 99);
+                println!(
+                    "{:<14} {:>6.2} {:>12.3} {:>16.4}",
+                    r.scheme, r.w, r.recall_at_10, r.candidate_frac
+                );
+            }
+        }
+        "serve" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let k: usize = a.get("k", 256)?;
+            let scheme = parse_scheme(&a.get_str("scheme", "two-bit"))?;
+            let w: f64 = a.get("w", 0.75)?;
+            let cfg = ProjectionConfig {
+                k,
+                seed: 0,
+                ..Default::default()
+            };
+            let projector = if a.flag("pjrt") {
+                let rt = Arc::new(crp::runtime::PjrtRuntime::cpu_default()?);
+                eprintln!("PJRT platform: {}", rt.platform_name());
+                Projector::new_pjrt(cfg, rt)
+            } else {
+                Projector::new_cpu(cfg)
+            };
+            eprintln!(
+                "serving on {addr} (k={k}, scheme={}, w={w}, pjrt_active={})",
+                scheme.label(),
+                projector.pjrt_active()
+            );
+            let server_cfg = crp::coordinator::ServerConfig {
+                addr,
+                coding: CodingParams::new(scheme, w),
+                ..Default::default()
+            };
+            if let Some(snap) = a.get_opt("snapshot") {
+                // Validate the snapshot shape up-front (serve() builds its
+                // own state; this check fails fast on mismatches).
+                let st = crp::coordinator::server::ServiceState::with_snapshot(
+                    Arc::new(Projector::new_cpu(ProjectionConfig {
+                        k,
+                        seed: 0,
+                        ..Default::default()
+                    })),
+                    &server_cfg,
+                    std::path::Path::new(snap),
+                )?;
+                eprintln!("snapshot {snap}: {} sketches validated", st.store.len());
+            }
+            crp::coordinator::serve(Arc::new(projector), server_cfg, None)?;
+        }
+        "bench-serve" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let n: usize = a.get("n", 1000)?;
+            let dim: usize = a.get("dim", 128)?;
+            let connections: usize = a.get("connections", 4)?;
+            bench_serve(&addr, n, dim, connections)?;
+        }
+        "artifacts" => {
+            let reg = crp::runtime::ArtifactRegistry::default_location();
+            let list = reg.list();
+            if list.is_empty() {
+                println!("no artifacts in {:?} — run `make artifacts`", reg.dir());
+            } else {
+                let rt = crp::runtime::PjrtRuntime::cpu(reg)?;
+                println!("PJRT platform: {}", rt.platform_name());
+                for id in list {
+                    let ok = rt.executable(&id).map(|_| "compiles").unwrap_or("BROKEN");
+                    println!("  {:<40} {}", id.0, ok);
+                }
+            }
+        }
+        "estimate" => {
+            let rho: f64 = a.get("rho", 0.8)?;
+            let k: usize = a.get("k", 1024)?;
+            let w: f64 = a.get("w", 0.75)?;
+            let dim: usize = a.get("dim", 256)?;
+            let (u, v) = crp::data::pairs::unit_pair_with_rho(dim, rho, 42);
+            let proj = Projector::new_cpu(ProjectionConfig {
+                k,
+                seed: 0,
+                ..Default::default()
+            });
+            let xu = proj.project_dense(&u);
+            let xv = proj.project_dense(&v);
+            println!("true rho = {rho}, k = {k}, w = {w}");
+            println!(
+                "{:<14} {:>10} {:>12} {:>10}",
+                "scheme", "rho_hat", "std_err", "bits"
+            );
+            for scheme in [
+                Scheme::Uniform,
+                Scheme::WindowOffset,
+                Scheme::TwoBit,
+                Scheme::OneBit,
+            ] {
+                let params = CodingParams::new(scheme, w);
+                let est = crp::estimator::CollisionEstimator::new(params.clone());
+                let e = est.estimate_with_error(&params.encode(&xu), &params.encode(&xv));
+                println!(
+                    "{:<14} {:>10.4} {:>12.4} {:>10}",
+                    scheme.label(),
+                    e.rho,
+                    e.std_err,
+                    params.bits_per_code()
+                );
+            }
+        }
+        "bit-budget" => {
+            let rho: f64 = a.get("rho", 0.9)?;
+            println!("optimized variance factor per bit budget at rho = {rho}:");
+            println!("{:<44} {:>5} {:>12}", "scheme", "bits", "V");
+            for (name, bits, v) in crp::theory::nonuniform::bit_budget_table(rho) {
+                println!("{name:<44} {bits:>5} {v:>12.5}");
+            }
+        }
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => {
+            eprint!("{HELP}");
+            anyhow::bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}
+
+/// Closed-loop load generator: register `n` vectors across `connections`
+/// concurrent clients, then report latency percentiles.
+fn bench_serve(addr: &str, n: usize, dim: usize, connections: usize) -> crp::Result<()> {
+    use crp::coordinator::SketchClient;
+    use crp::mathx::NormalSampler;
+    let t0 = std::time::Instant::now();
+    let per = n / connections.max(1);
+    let mut handles = Vec::new();
+    for c in 0..connections {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> crp::Result<Vec<u64>> {
+            let mut client = SketchClient::connect(&addr)?;
+            let mut ns = NormalSampler::new(c as u64, 1);
+            let mut lat_us: Vec<u64> = Vec::with_capacity(per);
+            for i in 0..per {
+                let v: Vec<f32> = (0..dim).map(|_| ns.next() as f32).collect();
+                let t = std::time::Instant::now();
+                client.register(&format!("c{c}-{i}"), v)?;
+                lat_us.push(t.elapsed().as_micros() as u64);
+            }
+            Ok(lat_us)
+        }));
+    }
+    let mut all: Vec<u64> = Vec::new();
+    for h in handles {
+        all.extend(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+    }
+    anyhow::ensure!(!all.is_empty(), "no requests completed");
+    all.sort_unstable();
+    let total = t0.elapsed().as_secs_f64();
+    let pct = |p: f64| all[((all.len() as f64 - 1.0) * p) as usize];
+    println!(
+        "registered {} vectors in {:.2}s  ({:.0} req/s)",
+        all.len(),
+        total,
+        all.len() as f64 / total
+    );
+    println!(
+        "latency us: p50={} p90={} p99={} max={}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        all.last().unwrap()
+    );
+    Ok(())
+}

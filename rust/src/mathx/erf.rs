@@ -1,0 +1,164 @@
+//! Error function to near machine precision via the regularized
+//! incomplete gamma function: `erf(x) = P(1/2, x²)` for `x ≥ 0`.
+//!
+//! We use the classic series / continued-fraction split (Numerical-Recipes
+//! style `gser`/`gcf`): the power series converges quickly for `x² < 1.5`
+//! and the Lentz continued fraction elsewhere. Both iterate to relative
+//! tolerance `3e-16`, giving |erf| accurate to ~1 ulp over the whole range —
+//! accurate enough that the paper's analytic constants (e.g. the
+//! `V_{w,q}` minimum `7.6797` and `V_w|ρ=0 → π²/4`) reproduce to every
+//! printed digit.
+
+const EPS: f64 = 3.0e-16;
+const ITMAX: usize = 400;
+/// ln Γ(1/2) = ln √π.
+const LN_GAMMA_HALF: f64 = 0.5723649429247000870717136756765293558;
+
+/// Regularized lower incomplete gamma `P(a, x)` by power series.
+/// Converges for `x < a + 1`.
+fn gamma_p_series(a: f64, x: f64, ln_gamma_a: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..ITMAX {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * EPS {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma_a).exp()
+}
+
+/// Regularized upper incomplete gamma `Q(a, x)` by modified Lentz
+/// continued fraction. Converges for `x ≥ a + 1`.
+fn gamma_q_contfrac(a: f64, x: f64, ln_gamma_a: f64) -> f64 {
+    const FPMIN: f64 = 1.0e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / FPMIN;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..=ITMAX {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = b + an / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma_a).exp() * h
+}
+
+/// Error function, `erf(x) = 2/√π ∫_0^x e^{-t²} dt`.
+pub fn erf(x: f64) -> f64 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x2 = x * x;
+    let p = if x2 < 1.5 {
+        gamma_p_series(0.5, x2, LN_GAMMA_HALF)
+    } else {
+        1.0 - gamma_q_contfrac(0.5, x2, LN_GAMMA_HALF)
+    };
+    sign * p
+}
+
+/// Complementary error function, `erfc(x) = 1 - erf(x)`, computed without
+/// cancellation for large positive `x` (down to ~1e-300).
+pub fn erfc(x: f64) -> f64 {
+    if x == 0.0 {
+        return 1.0;
+    }
+    let x2 = x * x;
+    if x > 0.0 {
+        if x2 < 1.5 {
+            1.0 - gamma_p_series(0.5, x2, LN_GAMMA_HALF)
+        } else {
+            gamma_q_contfrac(0.5, x2, LN_GAMMA_HALF)
+        }
+    } else {
+        2.0 - erfc(-x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference values computed with mpmath at 30 digits.
+    const CASES: &[(f64, f64)] = &[
+        (0.1, 0.112462916018284892203275071744),
+        (0.5, 0.520499877813046537682746653892),
+        (1.0, 0.842700792949714869341220635083),
+        (1.5, 0.966105146475310727066976261646),
+        (2.0, 0.995322265018952734162069256367),
+        (3.0, 0.999977909503001414558627223870),
+        (4.0, 0.999999984582742099719981147840),
+    ];
+
+    #[test]
+    fn erf_matches_reference() {
+        for &(x, want) in CASES {
+            let got = erf(x);
+            assert!(
+                (got - want).abs() < 1e-14,
+                "erf({x}) = {got}, want {want}"
+            );
+            assert!((erf(-x) + want).abs() < 1e-14, "erf odd symmetry at {x}");
+        }
+    }
+
+    #[test]
+    fn erfc_complements_erf_midrange() {
+        for &(x, want) in CASES {
+            let got = erfc(x);
+            assert!(
+                (got - (1.0 - want)).abs() < 1e-14,
+                "erfc({x}) = {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn erfc_large_tail_no_cancellation() {
+        // erfc(6) = 2.1519736712498913116593350399e-17 (mpmath)
+        let got = erfc(6.0);
+        let want = 2.1519736712498913116593350399e-17;
+        assert!(
+            ((got - want) / want).abs() < 1e-12,
+            "erfc(6) rel err too big: {got}"
+        );
+        // erfc(10) = 2.0884875837625447570007862949e-45
+        let got = erfc(10.0);
+        let want = 2.0884875837625447570007862949e-45;
+        assert!(((got - want) / want).abs() < 1e-12, "erfc(10): {got}");
+    }
+
+    #[test]
+    fn erfc_negative_arg() {
+        assert!((erfc(-1.0) - (2.0 - erfc(1.0))).abs() < 1e-15);
+        assert!((erfc(-6.0) - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn erf_limits() {
+        assert_eq!(erf(0.0), 0.0);
+        assert!((erf(30.0) - 1.0).abs() < 1e-15);
+        assert!((erf(-30.0) + 1.0).abs() < 1e-15);
+    }
+}

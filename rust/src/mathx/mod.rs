@@ -1,0 +1,21 @@
+//! Self-contained numerical substrate.
+//!
+//! The paper's analysis (Theorems 1–4) needs the standard normal pdf/cdf,
+//! bivariate-normal rectangle probabilities, numerical quadrature, 1-D
+//! minimization and root finding, and a reproducible Gaussian sampler for
+//! the projection matrices. Nothing here depends on external math crates —
+//! every routine is implemented and unit-tested in this module tree.
+
+pub mod erf;
+pub mod normal;
+pub mod quad;
+pub mod optimize;
+pub mod roots;
+pub mod rng;
+
+pub use erf::{erf, erfc};
+pub use normal::{inv_phi_cdf, phi_cdf, phi_pdf, PHI0, SQRT_2PI};
+pub use optimize::{golden_section_min, grid_then_golden_min};
+pub use quad::{adaptive_simpson, gauss_legendre, GaussLegendre};
+pub use roots::{bisect, newton_bisect_fallback};
+pub use rng::{NormalSampler, Pcg64, SplitMix64};

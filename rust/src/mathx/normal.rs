@@ -1,0 +1,179 @@
+//! Standard normal pdf `φ`, cdf `Φ`, inverse cdf `Φ⁻¹`, and the
+//! bivariate-normal rectangle probability used throughout the paper's
+//! collision-probability derivations (Lemma 1 and its generalization).
+
+use super::erf::erfc;
+use super::quad::adaptive_simpson;
+
+/// `√(2π)`.
+pub const SQRT_2PI: f64 = 2.5066282746310005024157652848110;
+/// `φ(0) = 1/√(2π)`.
+pub const PHI0: f64 = 0.3989422804014326779399460599344;
+
+/// Standard normal density `φ(x)`.
+#[inline]
+pub fn phi_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / SQRT_2PI
+}
+
+/// Standard normal cdf `Φ(x) = ½ erfc(-x/√2)`, accurate in both tails.
+#[inline]
+pub fn phi_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Upper tail `1 - Φ(x)` without cancellation.
+#[inline]
+pub fn phi_sf(x: f64) -> f64 {
+    0.5 * erfc(x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Inverse standard normal cdf by Newton iteration seeded with a
+/// logit-style initial guess; converges to ~1e-14 in a handful of steps.
+/// Not on any hot path (used for tables and tests).
+pub fn inv_phi_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "inv_phi_cdf domain: 0 < p < 1, got {p}");
+    // Initial guess: crude rational logit approximation.
+    let mut x = {
+        let t = (p.min(1.0 - p)).max(1e-300);
+        let s = (-2.0 * t.ln()).sqrt();
+        let g = s - (2.30753 + 0.27061 * s) / (1.0 + 0.99229 * s + 0.04481 * s * s);
+        if p < 0.5 {
+            -g
+        } else {
+            g
+        }
+    };
+    for _ in 0..60 {
+        let f = phi_cdf(x) - p;
+        let d = phi_pdf(x);
+        if d == 0.0 {
+            break;
+        }
+        let step = f / d;
+        x -= step;
+        if step.abs() < 1e-15 * (1.0 + x.abs()) {
+            break;
+        }
+    }
+    x
+}
+
+/// `Pr(X ∈ [a,b], Y ∈ [c,d])` for `(X,Y)` standard bivariate normal with
+/// correlation `ρ` — the rectangle probability behind Lemma 1:
+///
+/// ```text
+/// ∫_a^b φ(z) [ Φ((d−ρz)/√(1−ρ²)) − Φ((c−ρz)/√(1−ρ²)) ] dz
+/// ```
+///
+/// Intervals may be infinite (use `f64::INFINITY` / `NEG_INFINITY`). The
+/// finite integration range is clipped to `[-TAIL, TAIL]` with
+/// `TAIL = 9` (`1 − Φ(9) ≈ 1e-19`, negligible at our tolerances).
+pub fn bvn_rect(a: f64, b: f64, c: f64, d: f64, rho: f64) -> f64 {
+    assert!(b >= a && d >= c, "bvn_rect: empty rectangle");
+    assert!((-1.0..=1.0).contains(&rho), "bvn_rect: |rho| <= 1");
+    const TAIL: f64 = 9.0;
+    if rho.abs() >= 1.0 - 1e-13 {
+        // Degenerate: Y = ±X exactly.
+        let (lo, hi) = if rho > 0.0 {
+            (a.max(c), b.min(d))
+        } else {
+            (a.max(-d), b.min(-c))
+        };
+        if hi <= lo {
+            return 0.0;
+        }
+        return phi_cdf(hi) - phi_cdf(lo);
+    }
+    let s = (1.0 - rho * rho).sqrt();
+    let lo = a.max(-TAIL);
+    let hi = b.min(TAIL);
+    if hi <= lo {
+        return 0.0;
+    }
+    let f = |z: f64| {
+        let upper = if d.is_infinite() {
+            1.0
+        } else {
+            phi_cdf((d - rho * z) / s)
+        };
+        let lower = if c.is_infinite() {
+            0.0
+        } else {
+            phi_cdf((c - rho * z) / s)
+        };
+        phi_pdf(z) * (upper - lower)
+    };
+    adaptive_simpson(f, lo, hi, 1e-12, 40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::{INFINITY, NEG_INFINITY};
+
+    #[test]
+    fn cdf_reference_values() {
+        assert!((phi_cdf(0.0) - 0.5).abs() < 1e-15);
+        // Φ(1) = 0.841344746068542948585232545632 (mpmath)
+        assert!((phi_cdf(1.0) - 0.841344746068542948585232545632).abs() < 1e-14);
+        // Φ(-2) = 0.0227501319481792072002826011927
+        assert!((phi_cdf(-2.0) - 0.0227501319481792072002826011927).abs() < 1e-14);
+        // paper: 1 - Φ(3) ≈ 1.35e-3 (paper rounds to 10^-3)
+        assert!((phi_sf(3.0) - 1.349898031630094526651814767e-3).abs() < 1e-15);
+        // paper: 1 - Φ(6) = 9.9e-10
+        let t = phi_sf(6.0);
+        assert!((t / 9.865876450376946e-10 - 1.0).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for &p in &[1e-10, 1e-4, 0.01, 0.3, 0.5, 0.7, 0.99, 1.0 - 1e-6] {
+            let x = inv_phi_cdf(p);
+            assert!(
+                (phi_cdf(x) - p).abs() < 1e-12 * (1.0 + 1.0 / p.min(1.0 - p)),
+                "roundtrip at p={p}: x={x}"
+            );
+        }
+    }
+
+    #[test]
+    fn bvn_rect_independent_factorizes() {
+        // ρ = 0 ⇒ P = (Φ(b)-Φ(a)) (Φ(d)-Φ(c)).
+        let got = bvn_rect(-0.5, 1.0, 0.2, 2.0, 0.0);
+        let want = (phi_cdf(1.0) - phi_cdf(-0.5)) * (phi_cdf(2.0) - phi_cdf(0.2));
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+
+    #[test]
+    fn bvn_rect_quadrant_sheppard() {
+        // Sheppard: Pr(X>0, Y>0) = 1/4 + asin(ρ)/(2π).
+        for &rho in &[0.0, 0.3, 0.7, 0.95] {
+            let got = bvn_rect(0.0, INFINITY, 0.0, INFINITY, rho);
+            let want = 0.25 + rho.asin() / (2.0 * std::f64::consts::PI);
+            assert!((got - want).abs() < 1e-9, "rho={rho}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn bvn_rect_full_plane_is_one() {
+        for &rho in &[0.0, 0.5, 0.9] {
+            let got = bvn_rect(NEG_INFINITY, INFINITY, NEG_INFINITY, INFINITY, rho);
+            assert!((got - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bvn_rect_degenerate_rho_one() {
+        let got = bvn_rect(0.0, 1.0, 0.5, 2.0, 1.0);
+        let want = phi_cdf(1.0) - phi_cdf(0.5);
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bvn_rect_symmetry_in_coords() {
+        let p1 = bvn_rect(-0.3, 0.9, 0.1, 1.4, 0.6);
+        let p2 = bvn_rect(0.1, 1.4, -0.3, 0.9, 0.6);
+        assert!((p1 - p2).abs() < 1e-10);
+    }
+}

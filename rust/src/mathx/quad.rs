@@ -1,0 +1,178 @@
+//! Numerical quadrature: adaptive Simpson (general-purpose, used for the
+//! collision-probability integrals) and Gauss–Legendre with runtime node
+//! computation (used where fixed-order speed matters, e.g. tabulating
+//! ρ ↔ P inversion grids).
+
+/// Adaptive Simpson's rule with Richardson error control.
+///
+/// `tol` is an absolute tolerance for the whole interval; `max_depth`
+/// bounds recursion (40 is effectively "until machine precision").
+pub fn adaptive_simpson<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, tol: f64, max_depth: u32) -> f64 {
+    if a == b {
+        return 0.0;
+    }
+    let fa = f(a);
+    let fb = f(b);
+    let m = 0.5 * (a + b);
+    let fm = f(m);
+    let whole = (b - a) / 6.0 * (fa + 4.0 * fm + fb);
+    simpson_rec(&f, a, b, fa, fb, fm, whole, tol, max_depth)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simpson_rec<F: Fn(f64) -> f64>(
+    f: &F,
+    a: f64,
+    b: f64,
+    fa: f64,
+    fb: f64,
+    fm: f64,
+    whole: f64,
+    tol: f64,
+    depth: u32,
+) -> f64 {
+    let m = 0.5 * (a + b);
+    let lm = 0.5 * (a + m);
+    let rm = 0.5 * (m + b);
+    let flm = f(lm);
+    let frm = f(rm);
+    let left = (m - a) / 6.0 * (fa + 4.0 * flm + fm);
+    let right = (b - m) / 6.0 * (fm + 4.0 * frm + fb);
+    let delta = left + right - whole;
+    if depth == 0 || delta.abs() <= 15.0 * tol {
+        left + right + delta / 15.0
+    } else {
+        simpson_rec(f, a, m, fa, fm, flm, left, 0.5 * tol, depth - 1)
+            + simpson_rec(f, m, b, fm, fb, frm, right, 0.5 * tol, depth - 1)
+    }
+}
+
+/// Precomputed Gauss–Legendre rule of order `n` on `[-1, 1]`.
+///
+/// Nodes are the roots of the Legendre polynomial `P_n`, found by Newton
+/// iteration from the Chebyshev-like initial guess
+/// `cos(π (i − 1/4)/(n + 1/2))`; weights are `2 / ((1−x²) P_n'(x)²)`.
+pub struct GaussLegendre {
+    nodes: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl GaussLegendre {
+    /// Build an `n`-point rule. `n ≥ 1`.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let mut nodes = vec![0.0; n];
+        let mut weights = vec![0.0; n];
+        let m = (n + 1) / 2;
+        for i in 0..m {
+            // Initial guess for the i-th root (descending order).
+            let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+            let mut pp = 0.0;
+            for _ in 0..100 {
+                // Evaluate P_n(x) and P_n'(x) by the three-term recurrence.
+                let mut p0 = 1.0;
+                let mut p1 = 0.0;
+                for j in 0..n {
+                    let p2 = p1;
+                    p1 = p0;
+                    p0 = ((2.0 * j as f64 + 1.0) * x * p1 - j as f64 * p2) / (j as f64 + 1.0);
+                }
+                pp = n as f64 * (x * p0 - p1) / (x * x - 1.0);
+                let dx = p0 / pp;
+                x -= dx;
+                if dx.abs() < 1e-15 {
+                    break;
+                }
+            }
+            nodes[i] = -x;
+            nodes[n - 1 - i] = x;
+            let w = 2.0 / ((1.0 - x * x) * pp * pp);
+            weights[i] = w;
+            weights[n - 1 - i] = w;
+        }
+        GaussLegendre { nodes, weights }
+    }
+
+    /// Integrate `f` over `[a, b]` with this rule.
+    pub fn integrate<F: Fn(f64) -> f64>(&self, f: F, a: f64, b: f64) -> f64 {
+        let half = 0.5 * (b - a);
+        let mid = 0.5 * (a + b);
+        let mut acc = 0.0;
+        for (&x, &w) in self.nodes.iter().zip(&self.weights) {
+            acc += w * f(mid + half * x);
+        }
+        acc * half
+    }
+}
+
+/// One-shot Gauss–Legendre integration (builds the rule each call; prefer
+/// caching a [`GaussLegendre`] when integrating many times).
+pub fn gauss_legendre<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, n: usize) -> f64 {
+    GaussLegendre::new(n).integrate(f, a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simpson_polynomial_exact() {
+        // Simpson is exact for cubics.
+        let got = adaptive_simpson(|x| x * x * x - 2.0 * x + 1.0, -1.0, 3.0, 1e-12, 10);
+        // ∫ = x⁴/4 − x² + x | = (81/4 − 9 + 3) − (1/4 − 1 − 1) = 20.25 − 6 + 1.75 = 16
+        assert!((got - 16.0).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn simpson_oscillatory() {
+        let got = adaptive_simpson(|x| (10.0 * x).sin(), 0.0, std::f64::consts::PI, 1e-12, 40);
+        let want = (1.0 - (10.0 * std::f64::consts::PI).cos()) / 10.0;
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+
+    #[test]
+    fn simpson_gaussian_integral() {
+        let got = adaptive_simpson(
+            |x| (-0.5 * x * x).exp(),
+            -9.0,
+            9.0,
+            1e-13,
+            40,
+        );
+        assert!((got - crate::mathx::SQRT_2PI).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn gl_nodes_symmetric_weights_sum() {
+        for &n in &[1usize, 2, 5, 16, 41, 64] {
+            let gl = GaussLegendre::new(n);
+            let sum: f64 = gl.weights.iter().sum();
+            assert!((sum - 2.0).abs() < 1e-12, "n={n} weight sum {sum}");
+            for i in 0..n {
+                assert!(
+                    (gl.nodes[i] + gl.nodes[n - 1 - i]).abs() < 1e-12,
+                    "n={n} node symmetry"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gl_exact_for_degree_2n_minus_1() {
+        // 5-point GL integrates degree-9 polynomials exactly.
+        let gl = GaussLegendre::new(5);
+        let got = gl.integrate(|x| x.powi(9) + 3.0 * x.powi(8), -1.0, 1.0);
+        let want = 2.0 * 3.0 / 9.0; // odd term vanishes; ∫x⁸ = 2/9
+        assert!((got - want).abs() < 1e-13, "{got} vs {want}");
+    }
+
+    #[test]
+    fn gl_matches_simpson_on_smooth() {
+        let f = |x: f64| (x.sin() + 2.0).ln();
+        let a = 0.3;
+        let b = 2.7;
+        let s = adaptive_simpson(f, a, b, 1e-13, 40);
+        let g = gauss_legendre(f, a, b, 41);
+        assert!((s - g).abs() < 1e-11, "{s} vs {g}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Reproducible random number generation.
+//!
+//! The projection matrix `R` (Eq. 1 of the paper, `r_ij ~ N(0,1)` i.i.d.)
+//! must be *identical* across the pure-Rust path, the PJRT-artifact path,
+//! and test oracles, and must be generatable chunk-by-chunk (the engine
+//! streams D-tiles of `R` without materializing the whole matrix). We use
+//! SplitMix64 for seeding, PCG64 (XSL-RR 128/64) as the base generator,
+//! and a Box–Muller polar transform for normals.
+
+/// SplitMix64 — used to expand a single `u64` seed into independent
+/// stream seeds (Vigna's standard recommendation).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG64 (XSL-RR 128/64): 128-bit LCG state, 64-bit output.
+/// Supports independent streams via the odd increment.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Seed with `(seed, stream)`; distinct streams are independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ 0xA02BDBF7BB3C0A7);
+        let s_lo = sm.next_u64();
+        let s_hi = sm.next_u64();
+        let mut sm2 = SplitMix64::new(stream.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x5851F42D4C957F2D);
+        let i_lo = sm2.next_u64();
+        let i_hi = sm2.next_u64();
+        let mut g = Pcg64 {
+            state: 0,
+            inc: (((i_hi as u128) << 64 | i_lo as u128) << 1) | 1,
+        };
+        g.state = g.state.wrapping_mul(PCG_MULT).wrapping_add(g.inc);
+        g.state = g.state.wrapping_add((s_hi as u128) << 64 | s_lo as u128);
+        g.state = g.state.wrapping_mul(PCG_MULT).wrapping_add(g.inc);
+        g
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `(0, 1)` (never exactly 0 — safe for `ln`).
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift (unbiased
+    /// enough for our workloads; exact rejection for small `n`).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // widening multiply rejection
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as u64;
+            }
+            // low slice: reject the biased region
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+}
+
+/// Standard-normal sampler (Marsaglia polar method) over a [`Pcg64`].
+#[derive(Clone, Debug)]
+pub struct NormalSampler {
+    rng: Pcg64,
+    cached: Option<f64>,
+}
+
+impl NormalSampler {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        NormalSampler {
+            rng: Pcg64::new(seed, stream),
+            cached: None,
+        }
+    }
+
+    /// One `N(0,1)` draw.
+    #[inline]
+    pub fn next(&mut self) -> f64 {
+        if let Some(v) = self.cached.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.rng.next_f64() - 1.0;
+            let v = 2.0 * self.rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.cached = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Fill `out` with i.i.d. `N(0,1)` as f32 (the artifact dtype).
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = self.next() as f32;
+        }
+    }
+
+    /// Access the underlying uniform generator (e.g. for the `h_{w,q}`
+    /// offsets `q_j ~ U(0, w)`).
+    pub fn rng_mut(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        let mut c = Pcg64::new(42, 1);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut g = Pcg64::new(1, 7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut g = Pcg64::new(3, 3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = g.next_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut s = NormalSampler::new(9, 0);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = s.next();
+            m1 += x;
+            m2 += x * x;
+            m4 += x * x * x * x;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.01, "mean {}", m1 / nf);
+        assert!((m2 / nf - 1.0).abs() < 0.02, "var {}", m2 / nf);
+        assert!((m4 / nf - 3.0).abs() < 0.15, "kurt {}", m4 / nf);
+    }
+
+    #[test]
+    fn normal_cdf_agreement() {
+        // Empirical CDF at a few points vs Φ — a crude K-S style check.
+        let mut s = NormalSampler::new(123, 5);
+        let n = 100_000;
+        let draws: Vec<f64> = (0..n).map(|_| s.next()).collect();
+        for &t in &[-2.0, -1.0, 0.0, 0.5, 1.5] {
+            let emp = draws.iter().filter(|&&x| x <= t).count() as f64 / n as f64;
+            let want = crate::mathx::phi_cdf(t);
+            assert!((emp - want).abs() < 0.01, "t={t}: {emp} vs {want}");
+        }
+    }
+}

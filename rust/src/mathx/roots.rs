@@ -1,0 +1,107 @@
+//! Root finding for the monotone ρ ↔ collision-probability inversions.
+//! All collision probabilities in the paper are strictly increasing in ρ
+//! (Lemma 1), so bracketing methods are exact-fit here.
+
+/// Bisection on `[a, b]`; requires `f(a)` and `f(b)` to straddle zero.
+/// Returns the midpoint after the bracket shrinks below `tol`.
+pub fn bisect<F: Fn(f64) -> f64>(f: F, mut a: f64, mut b: f64, tol: f64) -> f64 {
+    let mut fa = f(a);
+    let fb = f(b);
+    assert!(
+        fa * fb <= 0.0,
+        "bisect: no sign change on [{a}, {b}] (f(a)={fa}, f(b)={fb})"
+    );
+    if fa == 0.0 {
+        return a;
+    }
+    if fb == 0.0 {
+        return b;
+    }
+    for _ in 0..200 {
+        let m = 0.5 * (a + b);
+        let fm = f(m);
+        if fm == 0.0 || (b - a) < tol {
+            return m;
+        }
+        if fa * fm < 0.0 {
+            b = m;
+        } else {
+            a = m;
+            fa = fm;
+        }
+    }
+    0.5 * (a + b)
+}
+
+/// Newton iteration with a bisection safety net: falls back to bisection
+/// whenever the Newton step leaves the bracket or the derivative is tiny.
+/// `fdf` returns `(f(x), f'(x))`.
+pub fn newton_bisect_fallback<F: Fn(f64) -> (f64, f64)>(
+    fdf: F,
+    mut a: f64,
+    mut b: f64,
+    x0: f64,
+    tol: f64,
+) -> f64 {
+    let mut x = x0.clamp(a, b);
+    for _ in 0..100 {
+        let (fx, dfx) = fdf(x);
+        if fx == 0.0 {
+            return x;
+        }
+        // Maintain the bracket.
+        let (fa, _) = fdf(a);
+        if fa * fx < 0.0 {
+            b = x;
+        } else {
+            a = x;
+        }
+        let newton_ok = dfx.abs() > 1e-300;
+        let xn = if newton_ok { x - fx / dfx } else { f64::NAN };
+        let next = if newton_ok && xn > a && xn < b {
+            xn
+        } else {
+            0.5 * (a + b)
+        };
+        if (next - x).abs() < tol * (1.0 + x.abs()) {
+            return next;
+        }
+        x = next;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisect_sqrt2() {
+        let r = bisect(|x| x * x - 2.0, 0.0, 2.0, 1e-13);
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bisect_endpoint_root() {
+        assert_eq!(bisect(|x| x, 0.0, 1.0, 1e-12), 0.0);
+    }
+
+    #[test]
+    fn newton_converges_fast() {
+        let r = newton_bisect_fallback(|x| (x * x - 2.0, 2.0 * x), 0.0, 2.0, 1.0, 1e-14);
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn newton_falls_back_on_flat_derivative() {
+        // f(x) = x³ has f'(0) = 0; start right at the flat point.
+        let r = newton_bisect_fallback(|x| (x * x * x, 3.0 * x * x), -1.0, 2.0, 0.0, 1e-12);
+        assert!(r.abs() < 1e-6, "{r}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no sign change")]
+    fn bisect_rejects_bad_bracket() {
+        bisect(|x| x * x + 1.0, -1.0, 1.0, 1e-12);
+    }
+}

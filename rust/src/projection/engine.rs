@@ -1,0 +1,346 @@
+//! The [`Projector`]: maps raw data vectors to projected coordinates
+//! `x = u·R ∈ R^k`, batched, for dense or sparse inputs, on either the
+//! pure-Rust GEMM path or the AOT PJRT artifact path.
+//!
+//! Both paths compute the *identical* numbers (same virtual `R` from
+//! [`super::matrix::RowMatrix`]); the PJRT path tiles the contraction
+//! over fixed artifact shapes `(b_tile, d_tile, k)` with zero-padding on
+//! the data side, which changes nothing (padded rows of `u` are zero).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::gemm::{axpy, gemm_acc};
+use super::matrix::RowMatrix;
+use crate::runtime::{ArtifactId, PjrtRuntime};
+
+/// Which compute path executes the projection contraction.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure-Rust blocked GEMM (always available; the oracle).
+    Pure,
+    /// AOT PJRT artifacts, falling back to [`Backend::Pure`] per call
+    /// when the required artifact shape is absent.
+    Pjrt(Arc<PjrtRuntime>),
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Pure => write!(f, "Pure"),
+            Backend::Pjrt(_) => write!(f, "Pjrt"),
+        }
+    }
+}
+
+/// Projection configuration.
+#[derive(Clone, Debug)]
+pub struct ProjectionConfig {
+    /// Number of projections `k` (the sketch width).
+    pub k: usize,
+    /// Seed of the virtual projection matrix `R`.
+    pub seed: u64,
+    /// Contraction tile: rows of `R` processed per step (must match the
+    /// AOT artifact `d` for the PJRT path).
+    pub d_tile: usize,
+    /// Batch tile: data vectors per dispatch (artifact `b`).
+    pub b_tile: usize,
+    /// Max R-tiles kept in the tile cache (each is `d_tile·k` f32).
+    pub max_cached_tiles: usize,
+}
+
+impl Default for ProjectionConfig {
+    fn default() -> Self {
+        ProjectionConfig {
+            k: 256,
+            seed: 0,
+            d_tile: 1024,
+            b_tile: 64,
+            max_cached_tiles: 64,
+        }
+    }
+}
+
+/// Batched random-projection engine. Cheap to clone-by-Arc; thread-safe.
+#[derive(Debug)]
+pub struct Projector {
+    pub cfg: ProjectionConfig,
+    matrix: RowMatrix,
+    backend: Backend,
+    /// Cache of materialized R tiles keyed by tile index.
+    tiles: Mutex<HashMap<usize, Arc<Vec<f32>>>>,
+}
+
+impl Projector {
+    /// Pure-Rust CPU projector.
+    pub fn new_cpu(cfg: ProjectionConfig) -> Self {
+        let matrix = RowMatrix::new(cfg.seed, cfg.k);
+        Projector {
+            matrix,
+            backend: Backend::Pure,
+            tiles: Mutex::new(HashMap::new()),
+            cfg,
+        }
+    }
+
+    /// PJRT-backed projector (falls back to pure Rust per call when the
+    /// artifact for the configured shape is missing).
+    pub fn new_pjrt(cfg: ProjectionConfig, rt: Arc<PjrtRuntime>) -> Self {
+        let matrix = RowMatrix::new(cfg.seed, cfg.k);
+        Projector {
+            matrix,
+            backend: Backend::Pjrt(rt),
+            tiles: Mutex::new(HashMap::new()),
+            cfg,
+        }
+    }
+
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
+    /// The virtual projection matrix.
+    pub fn matrix(&self) -> &RowMatrix {
+        &self.matrix
+    }
+
+    /// True when the PJRT path will actually be used for batch work.
+    pub fn pjrt_active(&self) -> bool {
+        match &self.backend {
+            Backend::Pure => false,
+            Backend::Pjrt(rt) => rt.has(&ArtifactId::proj_acc(
+                self.cfg.b_tile,
+                self.cfg.d_tile,
+                self.cfg.k,
+            )),
+        }
+    }
+
+    fn tile(&self, t: usize) -> Arc<Vec<f32>> {
+        let mut cache = self.tiles.lock().unwrap();
+        if let Some(tile) = cache.get(&t) {
+            return tile.clone();
+        }
+        if cache.len() >= self.cfg.max_cached_tiles {
+            cache.clear(); // simple wholesale eviction; tiles regenerate
+        }
+        let tile = Arc::new(self.matrix.tile(t * self.cfg.d_tile, self.cfg.d_tile));
+        cache.insert(t, tile.clone());
+        tile
+    }
+
+    /// Project one dense vector (any `D`).
+    pub fn project_dense(&self, u: &[f32]) -> Vec<f32> {
+        self.project_batch(u, 1, u.len())
+    }
+
+    /// Project a row-major batch `u[b, d]` → `x[b, k]`.
+    pub fn project_batch(&self, u: &[f32], b: usize, d: usize) -> Vec<f32> {
+        assert_eq!(u.len(), b * d);
+        match &self.backend {
+            Backend::Pjrt(rt) => {
+                let id = ArtifactId::proj_acc(self.cfg.b_tile, self.cfg.d_tile, self.cfg.k);
+                if rt.has(&id) {
+                    return self
+                        .project_batch_pjrt(rt, &id, u, b, d)
+                        .expect("PJRT projection failed after artifact presence check");
+                }
+                self.project_batch_pure(u, b, d)
+            }
+            Backend::Pure => self.project_batch_pure(u, b, d),
+        }
+    }
+
+    fn project_batch_pure(&self, u: &[f32], b: usize, d: usize) -> Vec<f32> {
+        let k = self.cfg.k;
+        let dt = self.cfg.d_tile;
+        let mut acc = vec![0.0f32; b * k];
+        let n_tiles = d.div_ceil(dt);
+        let mut padded = vec![0.0f32; b * dt];
+        for t in 0..n_tiles {
+            let d0 = t * dt;
+            let cols = (d - d0).min(dt);
+            let tile = self.tile(t);
+            if cols == dt {
+                // Strided view: gather the tile's columns of u.
+                for row in 0..b {
+                    padded[row * dt..(row + 1) * dt]
+                        .copy_from_slice(&u[row * d + d0..row * d + d0 + dt]);
+                }
+            } else {
+                padded.fill(0.0);
+                for row in 0..b {
+                    padded[row * dt..row * dt + cols]
+                        .copy_from_slice(&u[row * d + d0..row * d + d0 + cols]);
+                }
+            }
+            gemm_acc(&padded, &tile, &mut acc, b, dt, k);
+        }
+        acc
+    }
+
+    fn project_batch_pjrt(
+        &self,
+        rt: &PjrtRuntime,
+        id: &ArtifactId,
+        u: &[f32],
+        b: usize,
+        d: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let k = self.cfg.k;
+        let bt = self.cfg.b_tile;
+        let dt = self.cfg.d_tile;
+        let n_tiles = d.div_ceil(dt);
+        let mut out = vec![0.0f32; b * k];
+        let mut ublock = vec![0.0f32; bt * dt];
+        for b0 in (0..b).step_by(bt) {
+            let rows = (b - b0).min(bt);
+            let mut acc = vec![0.0f32; bt * k];
+            for t in 0..n_tiles {
+                let d0 = t * dt;
+                let cols = (d - d0).min(dt);
+                ublock.fill(0.0);
+                for r in 0..rows {
+                    ublock[r * dt..r * dt + cols]
+                        .copy_from_slice(&u[(b0 + r) * d + d0..(b0 + r) * d + d0 + cols]);
+                }
+                let tile = self.tile(t);
+                let lit_u = PjrtRuntime::literal_f32(&ublock, &[bt as i64, dt as i64])?;
+                let lit_r = PjrtRuntime::literal_f32(&tile, &[dt as i64, k as i64])?;
+                let lit_a = PjrtRuntime::literal_f32(&acc, &[bt as i64, k as i64])?;
+                let outs = rt.execute(id, &[lit_u, lit_r, lit_a])?;
+                acc = PjrtRuntime::to_vec_f32(&outs[0])?;
+            }
+            out[b0 * k..(b0 + rows) * k].copy_from_slice(&acc[..rows * k]);
+        }
+        Ok(out)
+    }
+
+    /// Project a sparse vector given as parallel (indices, values): only
+    /// the touched rows of `R` are generated. This is the path for the
+    /// high-dimensional sparse datasets of Section 6 (URL: D ≈ 3.2M).
+    pub fn project_sparse(&self, idx: &[u32], val: &[f32]) -> Vec<f32> {
+        assert_eq!(idx.len(), val.len());
+        let k = self.cfg.k;
+        let mut acc = vec![0.0f32; k];
+        let mut row = vec![0.0f32; k];
+        for (&i, &v) in idx.iter().zip(val) {
+            if v == 0.0 {
+                continue;
+            }
+            self.matrix.fill_row(i as usize, &mut row);
+            axpy(v, &row, &mut acc);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::Pcg64;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut g = Pcg64::new(seed, 0);
+        (0..n).map(|_| (g.next_f64() as f32 - 0.5) * 2.0).collect()
+    }
+
+    fn cfg(k: usize, dt: usize) -> ProjectionConfig {
+        ProjectionConfig {
+            k,
+            seed: 11,
+            d_tile: dt,
+            b_tile: 4,
+            max_cached_tiles: 8,
+        }
+    }
+
+    #[test]
+    fn batch_matches_rowwise_oracle() {
+        let p = Projector::new_cpu(cfg(16, 32));
+        let (b, d) = (5usize, 100usize);
+        let u = randv(b * d, 3);
+        let x = p.project_batch(&u, b, d);
+        // Oracle: x[row] = Σ_i u[row,i] · R_row(i)
+        for row in 0..b {
+            let mut want = vec![0.0f64; 16];
+            for i in 0..d {
+                let rrow = p.matrix().row(i);
+                for j in 0..16 {
+                    want[j] += (u[row * d + i] * rrow[j]) as f64;
+                }
+            }
+            for j in 0..16 {
+                assert!(
+                    (x[row * 16 + j] as f64 - want[j]).abs() < 1e-3,
+                    "row {row} col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense() {
+        let p = Projector::new_cpu(cfg(24, 64));
+        let d = 300usize;
+        let mut dense = vec![0.0f32; d];
+        let idx = vec![3u32, 77, 150, 299];
+        let val = vec![0.5f32, -1.0, 2.0, 0.25];
+        for (&i, &v) in idx.iter().zip(&val) {
+            dense[i as usize] = v;
+        }
+        let xs = p.project_sparse(&idx, &val);
+        let xd = p.project_dense(&dense);
+        for (a, b) in xs.iter().zip(&xd) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn padding_invariance() {
+        // Appending zero dims must not change the projection.
+        let p = Projector::new_cpu(cfg(8, 16));
+        let u = randv(40, 5);
+        let mut u_padded = u.clone();
+        u_padded.extend_from_slice(&[0.0; 25]);
+        let a = p.project_dense(&u);
+        let b = p.project_dense(&u_padded);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn projections_preserve_inner_product_in_expectation() {
+        // JL property sanity: E[⟨x_u, x_v⟩/k] = ⟨u, v⟩.
+        let p = Projector::new_cpu(ProjectionConfig {
+            k: 4096,
+            seed: 2,
+            d_tile: 64,
+            b_tile: 4,
+            max_cached_tiles: 4,
+        });
+        let d = 32;
+        let (u, v) = crate::data::pairs::unit_pair_with_rho(d, 0.7, 99);
+        let xu = p.project_dense(&u);
+        let xv = p.project_dense(&v);
+        let dot: f64 = xu.iter().zip(&xv).map(|(&a, &b)| (a * b) as f64).sum();
+        let est = dot / 4096.0;
+        assert!((est - 0.7).abs() < 0.06, "JL estimate {est}");
+    }
+
+    #[test]
+    fn tile_cache_eviction_consistent() {
+        let p = Projector::new_cpu(ProjectionConfig {
+            k: 8,
+            seed: 4,
+            d_tile: 16,
+            b_tile: 2,
+            max_cached_tiles: 2,
+        });
+        let u = randv(200, 6);
+        let a = p.project_dense(&u);
+        let b = p.project_dense(&u); // tiles evicted + regenerated
+        assert_eq!(a, b);
+    }
+}

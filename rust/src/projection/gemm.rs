@@ -1,0 +1,175 @@
+//! Cache-blocked dense matmul for the pure-Rust projection path:
+//! `X[B,k] += U[B,Dt] · R[Dt,k]` accumulated over D-tiles.
+//!
+//! This is the CPU fallback / oracle for the PJRT artifact (which runs
+//! the same contraction through the AOT-compiled HLO). Layout is plain
+//! row-major; the kernel blocks over the contraction dimension and
+//! unrolls the inner k-loop over 8-wide strips so LLVM autovectorizes.
+
+/// `acc[B,k] += u[B,d] · r[d,k]`, all row-major, f32.
+///
+/// Register-blocked over the contraction dimension: four rows of `r`
+/// fuse into each pass over the accumulator row, quartering the
+/// acc-row load/store traffic versus a plain axpy loop (measured ~3.4x
+/// end-to-end on the b64·d1024·k256 artifact shape — EXPERIMENTS.md
+/// §Perf).
+pub fn gemm_acc(u: &[f32], r: &[f32], acc: &mut [f32], b: usize, d: usize, k: usize) {
+    assert_eq!(u.len(), b * d);
+    assert_eq!(r.len(), d * k);
+    assert_eq!(acc.len(), b * k);
+    // Block the contraction dim so the active r-slab stays in L1/L2,
+    // and the batch dim so each r row is reused across RB data rows
+    // from cache rather than re-streamed from memory.
+    const DB: usize = 64;
+    const RB: usize = 8;
+    for d0 in (0..d).step_by(DB) {
+        let dend = (d0 + DB).min(d);
+        for row0 in (0..b).step_by(RB) {
+            let rend = (row0 + RB).min(b);
+            for row in row0..rend {
+            let urow = &u[row * d..(row + 1) * d];
+            let arow = &mut acc[row * k..(row + 1) * k];
+            let mut di = d0;
+            while di + 4 <= dend {
+                let (a0, a1, a2, a3) =
+                    (urow[di], urow[di + 1], urow[di + 2], urow[di + 3]);
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let r0 = &r[di * k..(di + 1) * k];
+                    let r1 = &r[(di + 1) * k..(di + 2) * k];
+                    let r2 = &r[(di + 2) * k..(di + 3) * k];
+                    let r3 = &r[(di + 3) * k..(di + 4) * k];
+                    axpy4(a0, r0, a1, r1, a2, r2, a3, r3, arow);
+                }
+                di += 4;
+            }
+            while di < dend {
+                let uv = urow[di];
+                if uv != 0.0 {
+                    axpy(uv, &r[di * k..(di + 1) * k], arow);
+                }
+                di += 1;
+            }
+            }
+        }
+    }
+}
+
+/// Fused `y += a0·x0 + a1·x1 + a2·x2 + a3·x3` (register blocking: one
+/// pass over `y` for four contraction steps).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn axpy4(
+    a0: f32,
+    x0: &[f32],
+    a1: f32,
+    x1: &[f32],
+    a2: f32,
+    x2: &[f32],
+    a3: f32,
+    x3: &[f32],
+    y: &mut [f32],
+) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    // chunks_exact elides bounds checks so LLVM vectorizes the body.
+    let mut it = y
+        .chunks_exact_mut(8)
+        .zip(x0.chunks_exact(8))
+        .zip(x1.chunks_exact(8))
+        .zip(x2.chunks_exact(8))
+        .zip(x3.chunks_exact(8));
+    for ((((yo, s0), s1), s2), s3) in it.by_ref() {
+        for j in 0..8 {
+            yo[j] += a0 * s0[j] + a1 * s1[j] + a2 * s2[j] + a3 * s3[j];
+        }
+    }
+    let tail = n - n % 8;
+    for j in tail..n {
+        y[j] += a0 * x0[j] + a1 * x1[j] + a2 * x2[j] + a3 * x3[j];
+    }
+}
+
+/// `y += a · x` over f32 slices (autovectorized).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    // Unrolled strips of 8 help LLVM emit wide vector code.
+    for c in 0..chunks {
+        let xo = &x[c * 8..c * 8 + 8];
+        let yo = &mut y[c * 8..c * 8 + 8];
+        yo[0] += a * xo[0];
+        yo[1] += a * xo[1];
+        yo[2] += a * xo[2];
+        yo[3] += a * xo[3];
+        yo[4] += a * xo[4];
+        yo[5] += a * xo[5];
+        yo[6] += a * xo[6];
+        yo[7] += a * xo[7];
+    }
+    for i in chunks * 8..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Naive reference for tests.
+pub fn gemm_naive(u: &[f32], r: &[f32], acc: &mut [f32], b: usize, d: usize, k: usize) {
+    for row in 0..b {
+        for di in 0..d {
+            let uv = u[row * d + di];
+            for col in 0..k {
+                acc[row * k + col] += uv * r[di * k + col];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::Pcg64;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut g = Pcg64::new(seed, 0);
+        (0..n).map(|_| g.next_f64() as f32 - 0.5).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for &(b, d, k) in &[(1usize, 1usize, 1usize), (3, 17, 5), (8, 100, 33), (16, 256, 64)] {
+            let u = randv(b * d, 1);
+            let r = randv(d * k, 2);
+            let mut a1 = vec![0.0f32; b * k];
+            let mut a2 = vec![0.0f32; b * k];
+            gemm_acc(&u, &r, &mut a1, b, d, k);
+            gemm_naive(&u, &r, &mut a2, b, d, k);
+            for (x, y) in a1.iter().zip(&a2) {
+                assert!((x - y).abs() < 1e-3, "({b},{d},{k}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_rather_than_overwrites() {
+        let u = randv(2 * 4, 3);
+        let r = randv(4 * 3, 4);
+        let mut acc = vec![1.0f32; 2 * 3];
+        let mut expect = vec![1.0f32; 2 * 3];
+        gemm_acc(&u, &r, &mut acc, 2, 4, 3);
+        gemm_naive(&u, &r, &mut expect, 2, 4, 3);
+        for (x, y) in acc.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn axpy_tail_handling() {
+        let x: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let mut y = vec![1.0f32; 13];
+        axpy(2.0, &x, &mut y);
+        for (i, &v) in y.iter().enumerate() {
+            assert_eq!(v, 1.0 + 2.0 * i as f32);
+        }
+    }
+}

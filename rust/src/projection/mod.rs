@@ -1,0 +1,20 @@
+//! Random projection engine.
+//!
+//! Implements Eq. (1) of the paper: `x = u × R`, `R ∈ R^{D×k}`,
+//! `r_ij ~ N(0,1)` i.i.d. The projection matrix is never materialized
+//! whole — [`matrix::RowMatrix`] regenerates any row of `R`
+//! deterministically from `(seed, row)`, so the same logical `R` is
+//! shared by the pure-Rust path, the PJRT-artifact path, sparse and
+//! dense inputs, and test oracles, for any `D`.
+//!
+//! * [`matrix`] — seeded row-wise generation of `R`, tile assembly.
+//! * [`gemm`] — cache-blocked dense `U[B,D] · R[D,k]` (pure Rust).
+//! * [`engine`] — the [`Projector`]: dense/sparse/batched projection,
+//!   optionally dispatching D-tiles to the AOT PJRT artifact.
+
+pub mod matrix;
+pub mod gemm;
+pub mod engine;
+
+pub use engine::{Backend, ProjectionConfig, Projector};
+pub use matrix::RowMatrix;

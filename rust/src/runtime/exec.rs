@@ -1,0 +1,209 @@
+//! The PJRT executor: one CPU client, each artifact compiled once and
+//! cached, typed execute helpers for the shapes the engine dispatches.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context};
+
+use super::artifact::{ArtifactId, ArtifactRegistry};
+
+/// A PJRT client plus a cache of compiled executables, keyed by artifact
+/// id. Compilation happens on first use; execution is thread-safe (the
+/// cache is behind a mutex, execution itself goes through `&self` on the
+/// cached executable).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: Mutex<HashMap<ArtifactId, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Serializes `execute` calls: the wrapper crate's handles hold
+    /// non-atomic `Rc`s that may be cloned inside execute, so concurrent
+    /// execution on shared handles is confined to one thread at a time.
+    exec_lock: Mutex<()>,
+}
+
+// SAFETY: the `xla` crate wraps its C++ handles in `Rc`/raw pointers and
+// therefore derives neither Send nor Sync, but the underlying PJRT CPU
+// client and loaded executables are thread-safe by the PJRT API contract
+// (XLA documents `PJRT_Client` / `PJRT_LoadedExecutable_Execute` as
+// thread-safe; the CPU plugin serializes internally where required). We
+// never hand out interior `Rc` clones: the client and executables live
+// for the runtime's lifetime inside this struct, the compile cache is
+// guarded by a `Mutex`, and the only Rc-refcount mutation (cloning the
+// cached executable handle) happens under that mutex.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("registry", &self.registry)
+            .finish_non_exhaustive()
+    }
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-backed runtime over the given artifact directory.
+    pub fn cpu(registry: ArtifactRegistry) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            registry,
+            cache: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+        })
+    }
+
+    /// Create a CPU runtime over the default `artifacts/` directory.
+    pub fn cpu_default() -> crate::Result<Self> {
+        Self::cpu(ArtifactRegistry::default_location())
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// True when the artifact exists on disk (compilable on demand).
+    pub fn has(&self, id: &ArtifactId) -> bool {
+        self.registry.exists(id)
+    }
+
+    /// Get (compiling and caching on first use) the executable for `id`.
+    pub fn executable(
+        &self,
+        id: &ArtifactId,
+    ) -> crate::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(id) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.registry.path_of(id);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("load HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {id:?}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(id.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the tuple elements
+    /// of the (always `return_tuple=True`-lowered) result.
+    pub fn execute(
+        &self,
+        id: &ArtifactId,
+        inputs: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self.executable(id)?;
+        let _guard = self.exec_lock.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {id:?}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {id:?}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {id:?}: {e:?}"))
+    }
+
+    /// Helper: f32 literal of shape `dims` from a row-major slice.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+            .context("literal_f32")
+    }
+
+    /// Helper: i32 literal of shape `dims`.
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Helper: scalar f32 literal.
+    pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+        xla::Literal::from(v)
+    }
+
+    /// Extract an f32 vector from a literal.
+    pub fn to_vec_f32(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+
+    /// Extract an i32 vector from a literal.
+    pub fn to_vec_i32(lit: &xla::Literal) -> crate::Result<Vec<i32>> {
+        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write a tiny hand-rolled HLO module and round-trip it through the
+    /// runtime — validates load → compile → execute → untuple without
+    /// requiring `make artifacts`.
+    #[test]
+    fn hand_rolled_hlo_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("crp_rt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let hlo = r#"
+HloModule add_two, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  p = f32[4]{0} parameter(0)
+  c = f32[] constant(2)
+  cb = f32[4]{0} broadcast(c), dimensions={}
+  s = f32[4]{0} add(p, cb)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+        let id = ArtifactId("add_two".to_string());
+        std::fs::write(dir.join(id.file_name()), hlo).unwrap();
+        let rt = PjrtRuntime::cpu(ArtifactRegistry::new(&dir)).unwrap();
+        assert!(rt.has(&id));
+        let input = PjrtRuntime::literal_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let out = rt.execute(&id, &[input]).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = PjrtRuntime::to_vec_f32(&out[0]).unwrap();
+        assert_eq!(v, vec![3.0, 4.0, 5.0, 6.0]);
+        // Second execution hits the compile cache.
+        let input = PjrtRuntime::literal_f32(&[0.0, 0.0, 0.0, 0.0], &[4]).unwrap();
+        let v = PjrtRuntime::to_vec_f32(&rt.execute(&id, &[input]).unwrap()[0]).unwrap();
+        assert_eq!(v, vec![2.0; 4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let dir = std::env::temp_dir().join(format!("crp_rt_missing_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = PjrtRuntime::cpu(ArtifactRegistry::new(&dir)).unwrap();
+        let id = ArtifactId("nope".to_string());
+        assert!(!rt.has(&id));
+        assert!(rt.execute(&id, &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(PjrtRuntime::literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(PjrtRuntime::literal_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT-compiled artifacts.
+//!
+//! `make artifacts` runs the build-time Python (`python/compile/aot.py`)
+//! once, lowering the JAX/Pallas computations to **HLO text** in
+//! `artifacts/*.hlo.txt`. This module wraps the `xla` crate to load the
+//! text (`HloModuleProto::from_text_file` — the text parser reassigns
+//! instruction ids, which is why text, not serialized protos, is the
+//! interchange format), compile each module once on the PJRT CPU client,
+//! and execute from the Layer-3 hot path. Python never runs at serve time.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{artifacts_dir, ArtifactId, ArtifactRegistry};
+pub use exec::PjrtRuntime;

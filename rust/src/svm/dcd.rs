@@ -1,0 +1,265 @@
+//! Dual coordinate descent for L2-regularized linear SVM
+//! (Hsieh et al., ICML 2008; Algorithm 1 of the LIBLINEAR paper).
+//!
+//! Solves `min_w ½‖w‖² + C Σ_i ξ(w; x_i, y_i)` with hinge (`L1`) or
+//! squared hinge (`L2`) loss via its dual: coordinate updates on
+//! `α_i ∈ [0, U]` with `U = C` (L1) or `U = ∞`, `Q_ii += 1/(2C)` (L2),
+//! maintaining `w = Σ_i α_i y_i x_i` incrementally. Random permutations
+//! each epoch and the projected-gradient stopping rule follow the paper.
+
+use super::model::LinearModel;
+use crate::data::sparse::CsrMatrix;
+use crate::mathx::Pcg64;
+
+/// Loss variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// Hinge loss (L1-SVM).
+    L1,
+    /// Squared hinge loss (L2-SVM; LIBLINEAR's default solver `-s 1`).
+    L2,
+}
+
+/// Solver configuration.
+#[derive(Clone, Debug)]
+pub struct DcdConfig {
+    pub c: f64,
+    pub loss: Loss,
+    /// Stop when the projected-gradient range falls below this.
+    pub tol: f64,
+    pub max_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for DcdConfig {
+    fn default() -> Self {
+        DcdConfig {
+            c: 1.0,
+            loss: Loss::L2,
+            tol: 0.1,
+            max_epochs: 200,
+            seed: 1,
+        }
+    }
+}
+
+/// Train on CSR features with ±1 labels. Returns the primal weights.
+pub fn train_dcd(x: &CsrMatrix, y: &[f32], cfg: &DcdConfig) -> LinearModel {
+    let n = x.rows();
+    assert_eq!(n, y.len());
+    let dim = x.cols;
+    let c = cfg.c;
+    let (u_bound, diag) = match cfg.loss {
+        Loss::L1 => (c, 0.0),
+        Loss::L2 => (f64::INFINITY, 1.0 / (2.0 * c)),
+    };
+    // Q_ii = x_i·x_i (+ diag).
+    let qii: Vec<f64> = (0..n)
+        .map(|i| {
+            let (_, v) = x.row(i);
+            v.iter().map(|&a| (a as f64) * (a as f64)).sum::<f64>() + diag
+        })
+        .collect();
+    let mut alpha = vec![0.0f64; n];
+    let mut w = vec![0.0f64; dim];
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(cfg.seed, 0xDCD);
+
+    // Shrinking-free DCD with the PG stopping criterion.
+    for _epoch in 0..cfg.max_epochs {
+        // Fisher–Yates shuffle.
+        for i in (1..n).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        let mut pg_max = f64::NEG_INFINITY;
+        let mut pg_min = f64::INFINITY;
+        for &i in &order {
+            if qii[i] <= 0.0 {
+                continue; // empty row
+            }
+            let (idx, val) = x.row(i);
+            let yi = y[i] as f64;
+            // G = y_i w·x_i − 1 + diag·α_i
+            let mut wx = 0.0f64;
+            for (&j, &v) in idx.iter().zip(val) {
+                wx += w[j as usize] * v as f64;
+            }
+            let g = yi * wx - 1.0 + diag * alpha[i];
+            // Projected gradient.
+            let pg = if alpha[i] <= 0.0 {
+                g.min(0.0)
+            } else if alpha[i] >= u_bound {
+                g.max(0.0)
+            } else {
+                g
+            };
+            pg_max = pg_max.max(pg);
+            pg_min = pg_min.min(pg);
+            if pg.abs() > 1e-12 {
+                let old = alpha[i];
+                alpha[i] = (old - g / qii[i]).clamp(0.0, u_bound);
+                let delta = (alpha[i] - old) * yi;
+                if delta != 0.0 {
+                    for (&j, &v) in idx.iter().zip(val) {
+                        w[j as usize] += delta * v as f64;
+                    }
+                }
+            }
+        }
+        if pg_max - pg_min < cfg.tol {
+            break;
+        }
+    }
+    LinearModel {
+        w: w.iter().map(|&v| v as f32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::CsrMatrix;
+    use crate::mathx::NormalSampler;
+
+    /// Linearly separable 2-D toy data.
+    fn toy(n: usize, seed: u64, margin: f32) -> (CsrMatrix, Vec<f32>) {
+        let mut ns = NormalSampler::new(seed, 0);
+        let mut x = CsrMatrix::with_capacity(n, 2 * n, 2);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let label: f32 = if i % 2 == 0 { 1.0 } else { -1.0 };
+            let a = ns.next() as f32 + label * margin;
+            let b = ns.next() as f32 * 0.3;
+            x.push_row(&[0, 1], &[a, b]);
+            y.push(label);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn separable_data_fits() {
+        let (x, y) = toy(200, 1, 2.0);
+        for loss in [Loss::L1, Loss::L2] {
+            let m = train_dcd(
+                &x,
+                &y,
+                &DcdConfig {
+                    loss,
+                    ..Default::default()
+                },
+            );
+            let acc = m.accuracy(&x, &y);
+            assert!(acc > 0.97, "{loss:?}: acc {acc}");
+        }
+    }
+
+    #[test]
+    fn noisy_data_reasonable() {
+        let (x, y) = toy(400, 2, 0.7);
+        let m = train_dcd(&x, &y, &DcdConfig::default());
+        let acc = m.accuracy(&x, &y);
+        assert!(acc > 0.70, "acc {acc} (Bayes rate at margin 0.7 is ~0.76)");
+    }
+
+    #[test]
+    fn c_controls_regularization() {
+        // Tiny C ⇒ heavily regularized ⇒ small weights.
+        let (x, y) = toy(100, 3, 1.0);
+        let m_small = train_dcd(
+            &x,
+            &y,
+            &DcdConfig {
+                c: 1e-4,
+                ..Default::default()
+            },
+        );
+        let m_big = train_dcd(
+            &x,
+            &y,
+            &DcdConfig {
+                c: 10.0,
+                ..Default::default()
+            },
+        );
+        let n_small: f32 = m_small.w.iter().map(|v| v * v).sum();
+        let n_big: f32 = m_big.w.iter().map(|v| v * v).sum();
+        assert!(n_small < n_big, "‖w‖ small-C {n_small} vs big-C {n_big}");
+    }
+
+    #[test]
+    fn dual_feasibility_l1() {
+        // For L1 loss all alphas must stay in [0, C]; verify via KKT-ish
+        // sanity: the trained model misclassifies at most the noise.
+        let (x, y) = toy(300, 4, 1.5);
+        let m = train_dcd(
+            &x,
+            &y,
+            &DcdConfig {
+                loss: Loss::L1,
+                c: 1.0,
+                ..Default::default()
+            },
+        );
+        assert!(m.accuracy(&x, &y) > 0.95);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = toy(150, 5, 1.0);
+        let cfg = DcdConfig::default();
+        let a = train_dcd(&x, &y, &cfg);
+        let b = train_dcd(&x, &y, &cfg);
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let mut x = CsrMatrix::with_capacity(3, 2, 2);
+        x.push_row(&[0], &[1.0]);
+        x.push_row(&[], &[]);
+        x.push_row(&[0], &[-1.0]);
+        let y = vec![1.0, 1.0, -1.0];
+        let m = train_dcd(&x, &y, &DcdConfig::default());
+        assert!(m.w[0] > 0.0);
+    }
+
+    #[test]
+    fn matches_primal_objective_sanity() {
+        // The dual solution should achieve a lower primal objective than
+        // a few arbitrary alternatives.
+        let (x, y) = toy(100, 6, 1.0);
+        let cfg = DcdConfig {
+            c: 1.0,
+            loss: Loss::L2,
+            tol: 1e-3,
+            max_epochs: 2000,
+            seed: 1,
+        };
+        let m = train_dcd(&x, &y, &cfg);
+        let primal = |w: &[f32]| -> f64 {
+            let reg: f64 = w.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() * 0.5;
+            let mut loss = 0.0f64;
+            for i in 0..x.rows() {
+                let (idx, val) = x.row(i);
+                let wx: f64 = idx
+                    .iter()
+                    .zip(val)
+                    .map(|(&j, &v)| w[j as usize] as f64 * v as f64)
+                    .sum();
+                let xi = (1.0 - y[i] as f64 * wx).max(0.0);
+                loss += xi * xi;
+            }
+            reg + cfg.c * loss
+        };
+        let obj = primal(&m.w);
+        for scale in [0.5f32, 1.5, 2.0, 0.0] {
+            let alt: Vec<f32> = m.w.iter().map(|&v| v * scale).collect();
+            assert!(
+                obj <= primal(&alt) + 1e-6,
+                "scaled-{scale} model beats DCD: {obj} vs {}",
+                primal(&alt)
+            );
+        }
+    }
+}

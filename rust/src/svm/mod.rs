@@ -1,0 +1,16 @@
+//! L2-regularized linear SVM, reimplementing what the paper runs through
+//! LIBLINEAR [9] for its Section-6 experiments.
+//!
+//! * [`dcd`] — dual coordinate descent (Hsieh et al., ICML 2008 — the
+//!   algorithm inside LIBLINEAR for L1-/L2-loss linear SVM).
+//! * [`model`] — the trained linear model: predict, score, accuracy.
+//! * [`sweep`] — the Section-6 experiment pipeline: project → code →
+//!   expand → train → test, swept over `(k, w, C, scheme)`.
+
+pub mod dcd;
+pub mod model;
+pub mod sweep;
+
+pub use dcd::{train_dcd, DcdConfig, Loss};
+pub use model::LinearModel;
+pub use sweep::{run_coded_svm, CodedSvmResult, SvmTask};

@@ -1,0 +1,78 @@
+//! Trained linear model: scoring and evaluation.
+
+use crate::data::sparse::CsrMatrix;
+
+/// A linear classifier `sign(w·x)` (no bias, matching the paper's setup
+/// of unit-normalized inputs fed to LIBLINEAR without an explicit bias).
+#[derive(Clone, Debug, Default)]
+pub struct LinearModel {
+    pub w: Vec<f32>,
+}
+
+impl LinearModel {
+    /// Decision value `w·x` for a sparse row.
+    pub fn score_sparse(&self, idx: &[u32], val: &[f32]) -> f64 {
+        idx.iter()
+            .zip(val)
+            .map(|(&i, &v)| self.w[i as usize] as f64 * v as f64)
+            .sum()
+    }
+
+    /// Decision value for a dense vector.
+    pub fn score_dense(&self, x: &[f32]) -> f64 {
+        assert_eq!(x.len(), self.w.len());
+        x.iter()
+            .zip(&self.w)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
+    }
+
+    /// Predicted label (±1) for a sparse row.
+    pub fn predict_sparse(&self, idx: &[u32], val: &[f32]) -> f32 {
+        if self.score_sparse(idx, val) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Classification accuracy over a CSR matrix.
+    pub fn accuracy(&self, x: &CsrMatrix, y: &[f32]) -> f64 {
+        assert_eq!(x.rows(), y.len());
+        let mut correct = 0usize;
+        for r in 0..x.rows() {
+            let (idx, val) = x.row(r);
+            if self.predict_sparse(idx, val) == y[r].signum() {
+                correct += 1;
+            }
+        }
+        correct as f64 / y.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoring_and_prediction() {
+        let m = LinearModel {
+            w: vec![1.0, -2.0, 0.5],
+        };
+        assert!((m.score_sparse(&[0, 2], &[2.0, 4.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(m.predict_sparse(&[1], &[1.0]), -1.0);
+        assert_eq!(m.predict_sparse(&[0], &[1.0]), 1.0);
+        assert!((m.score_dense(&[1.0, 1.0, 1.0]) + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let mut x = CsrMatrix::with_capacity(2, 2, 1);
+        x.push_row(&[0], &[1.0]);
+        x.push_row(&[0], &[-1.0]);
+        let m = LinearModel { w: vec![1.0] };
+        assert_eq!(m.accuracy(&x, &[1.0, -1.0]), 1.0);
+        assert_eq!(m.accuracy(&x, &[-1.0, 1.0]), 0.0);
+        assert_eq!(m.accuracy(&x, &[1.0, 1.0]), 0.5);
+    }
+}

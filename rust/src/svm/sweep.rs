@@ -1,0 +1,219 @@
+//! The Section-6 experiment pipeline: random-project a dataset, code the
+//! projections with one of the four schemes, expand to the sparse binary
+//! representation, train the linear SVM, report test accuracy.
+//!
+//! This is the machinery behind Figures 11–14 and the `svm_pipeline`
+//! example. "Orig" (uncoded) uses the raw projected values, unit-
+//! normalized, as dense features — the paper's reference curve.
+
+use crate::coding::{expand_to_sparse, CodingParams, Scheme};
+use crate::data::sparse::{CsrMatrix, Dataset};
+use crate::projection::Projector;
+use crate::svm::dcd::{train_dcd, DcdConfig};
+
+/// What to train on.
+#[derive(Clone, Debug)]
+pub enum SvmTask {
+    /// Coded projections with the given scheme and bin width.
+    Coded(CodingParams),
+    /// Raw (uncoded) projections, unit-normalized — the "Orig" curves.
+    Orig,
+}
+
+/// Result of one (task, k, C) cell.
+#[derive(Clone, Debug)]
+pub struct CodedSvmResult {
+    pub scheme: String,
+    pub w: f64,
+    pub k: usize,
+    pub c: f64,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    pub train_seconds: f64,
+}
+
+/// Project every row of a dataset (sparse path) into `x[rows, k]`.
+pub fn project_dataset(ds: &Dataset, proj: &Projector) -> Vec<f32> {
+    let k = proj.cfg.k;
+    let mut out = vec![0.0f32; ds.len() * k];
+    for r in 0..ds.len() {
+        let (idx, val) = ds.x.row(r);
+        let x = proj.project_sparse(idx, val);
+        out[r * k..(r + 1) * k].copy_from_slice(&x);
+    }
+    out
+}
+
+/// Build the feature matrix for a task from projected values.
+fn featurize(projected: &[f32], rows: usize, k: usize, task: &SvmTask) -> CsrMatrix {
+    match task {
+        SvmTask::Coded(params) => {
+            let card = params.cardinality();
+            let mut m = CsrMatrix::with_capacity(rows, rows * k, k * card);
+            let offsets = match params.scheme {
+                Scheme::WindowOffset => Some(params.offsets(k)),
+                _ => None,
+            };
+            let mut codes = vec![0u16; k];
+            for r in 0..rows {
+                params.encode_into(
+                    &projected[r * k..(r + 1) * k],
+                    offsets.as_deref(),
+                    &mut codes,
+                );
+                let (idx, val) = expand_to_sparse(&codes, card);
+                m.push_row(&idx, &val);
+            }
+            m
+        }
+        SvmTask::Orig => {
+            // Dense projected features, unit-normalized per row.
+            let idx: Vec<u32> = (0..k as u32).collect();
+            let mut m = CsrMatrix::with_capacity(rows, rows * k, k);
+            for r in 0..rows {
+                let row = &projected[r * k..(r + 1) * k];
+                let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+                let scale = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+                let vals: Vec<f32> = row.iter().map(|&v| v * scale).collect();
+                m.push_row(&idx, &vals);
+            }
+            m
+        }
+    }
+}
+
+/// Run the full project → code → expand → train → test pipeline.
+///
+/// `projected_*` are the precomputed projections (so the expensive
+/// projection step is shared across the (w, C, scheme) sweep, exactly as
+/// the paper's experiments reuse one set of projections).
+pub fn run_coded_svm(
+    projected_train: &[f32],
+    y_train: &[f32],
+    projected_test: &[f32],
+    y_test: &[f32],
+    k: usize,
+    task: &SvmTask,
+    c: f64,
+) -> CodedSvmResult {
+    let n_train = y_train.len();
+    let n_test = y_test.len();
+    assert_eq!(projected_train.len(), n_train * k);
+    assert_eq!(projected_test.len(), n_test * k);
+    let x_train = featurize(projected_train, n_train, k, task);
+    let x_test = featurize(projected_test, n_test, k, task);
+    let t0 = std::time::Instant::now();
+    let model = train_dcd(
+        &x_train,
+        y_train,
+        &DcdConfig {
+            c,
+            ..Default::default()
+        },
+    );
+    let train_seconds = t0.elapsed().as_secs_f64();
+    let (scheme, w) = match task {
+        SvmTask::Coded(p) => (p.scheme.label().to_string(), p.w),
+        SvmTask::Orig => ("orig".to_string(), 0.0),
+    };
+    CodedSvmResult {
+        scheme,
+        w,
+        k,
+        c,
+        train_acc: model.accuracy(&x_train, y_train),
+        test_acc: model.accuracy(&x_test, y_test),
+        train_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthKind, SynthSpec};
+    use crate::projection::{ProjectionConfig, Projector};
+
+    fn setup(k: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let spec = SynthSpec::small(SynthKind::FarmLike);
+        let (tr, te) = spec.generate();
+        let proj = Projector::new_cpu(ProjectionConfig {
+            k,
+            seed: 5,
+            ..Default::default()
+        });
+        (
+            project_dataset(&tr, &proj),
+            tr.y.clone(),
+            project_dataset(&te, &proj),
+            te.y.clone(),
+        )
+    }
+
+    #[test]
+    fn coded_svm_learns_signal() {
+        let k = 128;
+        let (ptr, ytr, pte, yte) = setup(k);
+        for task in [
+            SvmTask::Orig,
+            SvmTask::Coded(CodingParams::new(Scheme::Uniform, 1.0)),
+            SvmTask::Coded(CodingParams::new(Scheme::TwoBit, 0.75)),
+            SvmTask::Coded(CodingParams::new(Scheme::OneBit, 0.0)),
+            SvmTask::Coded(CodingParams::new(Scheme::WindowOffset, 1.0)),
+        ] {
+            let r = run_coded_svm(&ptr, &ytr, &pte, &yte, k, &task, 1.0);
+            assert!(
+                r.test_acc > 0.62,
+                "{} w={} only {:.3}",
+                r.scheme,
+                r.w,
+                r.test_acc
+            );
+        }
+    }
+
+    #[test]
+    fn fig11_shape_large_w_hurts_offset_scheme() {
+        // The paper's Figure 11 finding: at large w, h_{w,q} degrades
+        // while h_w holds up (collisions of dissimilar points).
+        let k = 128;
+        let (ptr, ytr, pte, yte) = setup(k);
+        let w = 8.0;
+        let hw = run_coded_svm(
+            &ptr,
+            &ytr,
+            &pte,
+            &yte,
+            k,
+            &SvmTask::Coded(CodingParams::new(Scheme::Uniform, w)),
+            1.0,
+        );
+        let hwq = run_coded_svm(
+            &ptr,
+            &ytr,
+            &pte,
+            &yte,
+            k,
+            &SvmTask::Coded(CodingParams::new(Scheme::WindowOffset, w)),
+            1.0,
+        );
+        assert!(
+            hw.test_acc >= hwq.test_acc - 0.02,
+            "h_w {:.3} should not trail h_wq {:.3} at large w",
+            hw.test_acc,
+            hwq.test_acc
+        );
+    }
+
+    #[test]
+    fn expanded_dims_correct() {
+        let k = 16;
+        let (ptr, ytr, _, _) = setup(k);
+        let params = CodingParams::new(Scheme::TwoBit, 0.75);
+        let x = featurize(&ptr, ytr.len(), k, &SvmTask::Coded(params));
+        assert_eq!(x.cols, k * 4);
+        // exactly k ones per row
+        for r in 0..x.rows() {
+            assert_eq!(x.row(r).0.len(), k);
+        }
+    }
+}

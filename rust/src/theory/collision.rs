@@ -1,0 +1,283 @@
+//! Collision probabilities for the four coding schemes.
+//!
+//! Notation follows the paper: `ρ ∈ [0, 1)` is the inner-product
+//! similarity of unit-norm `u, v`; `d = ||u−v||² = 2(1−ρ)`; `w > 0` is
+//! the quantization bin width.
+
+use crate::mathx::{adaptive_simpson, phi_cdf, phi_pdf, SQRT_2PI};
+
+/// Integration cutoff: `1 − Φ(9) ≈ 1.1e-19`, far below our tolerances.
+const TAIL: f64 = 9.0;
+/// Quadrature tolerance for the bin integrals.
+const QTOL: f64 = 1e-12;
+
+/// `Q_{s,t}(ρ) = Pr(x ∈ [s,t], y ∈ [s,t])` for standard bivariate normal
+/// with correlation ρ — Lemma 1, Eq. (8).
+pub fn q_interval(s: f64, t: f64, rho: f64) -> f64 {
+    debug_assert!(t >= s);
+    if rho >= 1.0 - 1e-13 {
+        return phi_cdf(t) - phi_cdf(s);
+    }
+    let sigma = (1.0 - rho * rho).sqrt();
+    let lo = s.max(-TAIL);
+    let hi = t.min(TAIL);
+    if hi <= lo {
+        return 0.0;
+    }
+    adaptive_simpson(
+        |z| {
+            phi_pdf(z)
+                * (phi_cdf((t - rho * z) / sigma) - phi_cdf((s - rho * z) / sigma))
+        },
+        lo,
+        hi,
+        QTOL,
+        40,
+    )
+}
+
+/// `∂Q_{s,t}/∂ρ` — Lemma 1, Eq. (9). Always ≥ 0 (monotonicity).
+pub fn dq_interval_drho(s: f64, t: f64, rho: f64) -> f64 {
+    let rho = rho.min(1.0 - 1e-12);
+    let one_m_r2 = 1.0 - rho * rho;
+    let a = (-t * t / (1.0 + rho)).exp();
+    let b = (-s * s / (1.0 + rho)).exp();
+    let c = (-(t * t + s * s - 2.0 * s * t * rho) / (2.0 * one_m_r2)).exp();
+    (a + b - 2.0 * c) / (2.0 * std::f64::consts::PI * one_m_r2.sqrt())
+}
+
+/// `P_w(ρ)` — collision probability of uniform quantization `h_w`
+/// (Theorem 1, Eq. 10): `2 Σ_{i≥0} Q_{iw,(i+1)w}(ρ)`.
+///
+/// The series is truncated once the bin leaves `[−TAIL, TAIL]`.
+pub fn p_w(rho: f64, w: f64) -> f64 {
+    assert!(w > 0.0, "p_w: w must be positive");
+    assert!((0.0..=1.0).contains(&rho), "p_w: rho in [0,1]");
+    if rho >= 1.0 - 1e-13 {
+        return 1.0;
+    }
+    let imax = (TAIL / w).ceil() as usize;
+    let mut acc = 0.0;
+    for i in 0..=imax {
+        let s = i as f64 * w;
+        let t = (i as f64 + 1.0) * w;
+        acc += q_interval(s, t, rho);
+        if s > TAIL {
+            break;
+        }
+    }
+    (2.0 * acc).min(1.0)
+}
+
+/// `P_{w,q}(ρ)` — collision probability of the window-and-offset scheme
+/// `h_{w,q}` of Datar et al., closed form (Eq. 7):
+///
+/// ```text
+/// P_{w,q} = 2Φ(t) − 1 − 2/(√(2π) t) + (2/t) φ(t),   t = w/√d,  d = 2(1−ρ)
+/// ```
+pub fn p_wq(rho: f64, w: f64) -> f64 {
+    assert!(w > 0.0, "p_wq: w must be positive");
+    assert!((0.0..=1.0).contains(&rho), "p_wq: rho in [0,1]");
+    let d = 2.0 * (1.0 - rho);
+    if d <= 0.0 {
+        return 1.0;
+    }
+    let t = w / d.sqrt();
+    (2.0 * phi_cdf(t) - 1.0 - 2.0 / (SQRT_2PI * t) + 2.0 / t * phi_pdf(t)).clamp(0.0, 1.0)
+}
+
+/// `P_{w,2}(ρ)` — collision probability of the 2-bit non-uniform scheme
+/// `h_{w,2}` (Theorem 4, Eq. 17):
+///
+/// ```text
+/// P_{w,2} = 1 − acos(ρ)/π − 4 ∫_0^w φ(z) Φ((−w + ρz)/√(1−ρ²)) dz
+/// ```
+pub fn p_w2(rho: f64, w: f64) -> f64 {
+    assert!(w >= 0.0, "p_w2: w must be non-negative");
+    assert!((0.0..=1.0).contains(&rho), "p_w2: rho in [0,1]");
+    if rho >= 1.0 - 1e-13 {
+        return 1.0;
+    }
+    let base = 1.0 - rho.acos() / std::f64::consts::PI;
+    if w == 0.0 {
+        return base;
+    }
+    let sigma = (1.0 - rho * rho).sqrt();
+    let hi = w.min(TAIL);
+    let integral = adaptive_simpson(
+        |z| phi_pdf(z) * phi_cdf((-w + rho * z) / sigma),
+        0.0,
+        hi,
+        QTOL,
+        40,
+    );
+    (base - 4.0 * integral).clamp(0.0, 1.0)
+}
+
+/// `P_1(ρ) = 1 − acos(ρ)/π` — the 1-bit (sign) collision probability
+/// (Eq. 19; Goemans–Williamson).
+pub fn p_1(rho: f64) -> f64 {
+    assert!((-1.0..=1.0).contains(&rho));
+    1.0 - rho.acos() / std::f64::consts::PI
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn p_w_rho0_closed_form() {
+        // Theorem 1, Eq. (11): P_w|ρ=0 = 2 Σ (Φ((i+1)w) − Φ(iw))².
+        for &w in &[0.25, 0.5, 1.0, 2.0, 4.0] {
+            let want: f64 = 2.0
+                * (0..200)
+                    .map(|i| {
+                        let a = phi_cdf((i + 1) as f64 * w) - phi_cdf(i as f64 * w);
+                        a * a
+                    })
+                    .sum::<f64>();
+            let got = p_w(0.0, w);
+            assert!((got - want).abs() < 1e-9, "w={w}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn p_w_limits() {
+        // As w→∞, h_w degenerates to sign coding ⇒ P_w → P_1.
+        for &rho in &[0.0, 0.3, 0.7, 0.9] {
+            let got = p_w(rho, 50.0);
+            assert!((got - p_1(rho)).abs() < 1e-9, "rho={rho}");
+        }
+        // ρ = 1 ⇒ always collide.
+        assert_eq!(p_w(1.0, 1.0), 1.0);
+        // w → 0 ⇒ collisions vanish (for ρ < 1).
+        assert!(p_w(0.5, 1e-3) < 2e-3);
+    }
+
+    #[test]
+    fn p_w_monotone_in_rho() {
+        for &w in &[0.5, 1.0, 3.0] {
+            let mut prev = -1.0;
+            for i in 0..=20 {
+                let rho = i as f64 / 20.0 * 0.99;
+                let p = p_w(rho, w);
+                assert!(p >= prev - 1e-12, "w={w} rho={rho}");
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn p_w_rho0_limit_half() {
+        // Figure 1: at ρ=0, P_w approaches 1/2 quickly as w grows.
+        assert!((p_w(0.0, 6.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p_wq_matches_integral_form() {
+        // Eq. (6): P_{w,q} = ∫_0^w (2/√d) φ(t/√d)(1 − t/w) dt.
+        for &(rho, w) in &[(0.0, 0.5), (0.25, 1.0), (0.5, 2.0), (0.9, 4.0)] {
+            let d: f64 = 2.0 * (1.0 - rho);
+            let sd = d.sqrt();
+            let want = adaptive_simpson(
+                |t| 2.0 / sd * phi_pdf(t / sd) * (1.0 - t / w),
+                0.0,
+                w,
+                1e-12,
+                40,
+            );
+            let got = p_wq(rho, w);
+            assert!((got - want).abs() < 1e-9, "rho={rho} w={w}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn p_wq_to_one_as_w_grows() {
+        // The paper's critique: even at ρ=0 the offset scheme collides
+        // with probability → 1 for large w.
+        assert!(p_wq(0.0, 50.0) > 0.97);
+        assert!(p_wq(0.0, 500.0) > 0.997);
+    }
+
+    #[test]
+    fn p_w2_limits_are_one_bit() {
+        // Theorem 4 remark: w=0 and w=∞ both reduce to the sign scheme.
+        for &rho in &[0.0, 0.4, 0.8, 0.95] {
+            assert!((p_w2(rho, 0.0) - p_1(rho)).abs() < 1e-12);
+            assert!((p_w2(rho, 30.0) - p_1(rho)).abs() < 1e-9, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn p_w2_equals_quadrant_sum() {
+        // Cross-check against bivariate rectangle probabilities:
+        // P_{w,2} = Σ over the 4 regions of Pr(both in region).
+        use crate::mathx::normal::bvn_rect;
+        use std::f64::{INFINITY, NEG_INFINITY};
+        for &(rho, w) in &[(0.0, 0.75), (0.5, 0.75), (0.8, 1.5), (0.3, 0.25)] {
+            let regions = [
+                (NEG_INFINITY, -w),
+                (-w, 0.0),
+                (0.0, w),
+                (w, INFINITY),
+            ];
+            let want: f64 = regions
+                .iter()
+                .map(|&(a, b)| bvn_rect(a, b, a, b, rho))
+                .sum();
+            let got = p_w2(rho, w);
+            assert!(
+                (got - want).abs() < 1e-8,
+                "rho={rho} w={w}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn p_1_reference() {
+        assert!((p_1(0.0) - 0.5).abs() < 1e-15);
+        assert!((p_1(1.0) - 1.0).abs() < 1e-15);
+        assert!((p_1(0.5) - (1.0 - (0.5f64).acos() / PI)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn monotonicity_all_schemes() {
+        for scheme in crate::theory::SchemeKind::ALL {
+            let mut prev = -1.0;
+            for i in 0..=30 {
+                let rho = i as f64 / 30.0 * 0.995;
+                let p = scheme.collision_probability(rho, 0.75);
+                assert!(
+                    p >= prev - 1e-10,
+                    "{:?} not monotone at rho={rho}",
+                    scheme
+                );
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn dq_nonnegative() {
+        for &(s, t) in &[(0.0, 0.5), (0.5, 1.0), (2.0, 3.0)] {
+            for i in 0..10 {
+                let rho = i as f64 / 10.0;
+                assert!(dq_interval_drho(s, t, rho) >= -1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn dq_matches_numeric_derivative() {
+        for &(s, t, rho) in &[(0.0, 1.0, 0.3), (1.0, 2.0, 0.6), (0.5, 1.5, 0.1)] {
+            let h = 1e-5;
+            let num = (q_interval(s, t, rho + h) - q_interval(s, t, rho - h)) / (2.0 * h);
+            let ana = dq_interval_drho(s, t, rho);
+            assert!(
+                (num - ana).abs() < 1e-6,
+                "s={s} t={t} rho={rho}: {num} vs {ana}"
+            );
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Monotone ρ ↔ collision-probability inversion.
+//!
+//! Section 3 of the paper: "Since there is a one-to-one mapping between
+//! ρ and P_w, we can tabulate P_w for each ρ (for example, at a precision
+//! of 10⁻³). From k independent projections, we can compute the empirical
+//! P̂ and find the estimate from the tables." This module provides both
+//! the tabulated fast path (used on the serving hot path) and an
+//! on-demand bisection fallback (used for tests and one-off estimates).
+
+use super::SchemeKind;
+use crate::mathx::bisect;
+
+/// Invert `P(ρ) = p_hat` for ρ by bisection over `[0, 1]`.
+///
+/// The empirical collision rate is clamped into the feasible range
+/// `[P(0), P(1)]` first — with finite `k` the empirical rate can fall
+/// outside it (e.g. `P̂ < P(0)` when ρ ≈ 0 and the sample is unlucky).
+pub fn rho_from_p(scheme: SchemeKind, w: f64, p_hat: f64) -> f64 {
+    let p_lo = scheme.collision_probability(0.0, w);
+    let p_hi = scheme.collision_probability(1.0 - 1e-12, w);
+    let p = p_hat.clamp(p_lo.min(p_hi), p_lo.max(p_hi));
+    if (p - p_lo).abs() < 1e-14 {
+        return 0.0;
+    }
+    if (p - p_hi).abs() < 1e-14 {
+        return 1.0;
+    }
+    bisect(
+        |rho| scheme.collision_probability(rho, w) - p,
+        0.0,
+        1.0 - 1e-12,
+        1e-10,
+    )
+}
+
+/// Precomputed inversion table: `P` sampled on a uniform ρ grid, inverted
+/// by binary search + linear interpolation. This is the hot-path
+/// estimator backend — one table per `(scheme, w)` pair, built once.
+#[derive(Clone, Debug)]
+pub struct InversionTable {
+    pub scheme: SchemeKind,
+    pub w: f64,
+    rhos: Vec<f64>,
+    ps: Vec<f64>,
+}
+
+impl InversionTable {
+    /// Build with `n` grid points (the paper suggests 10⁻³ precision;
+    /// `n = 2048` comfortably exceeds that).
+    pub fn build(scheme: SchemeKind, w: f64, n: usize) -> Self {
+        assert!(n >= 8);
+        let rhos: Vec<f64> = (0..n)
+            .map(|i| i as f64 / (n - 1) as f64 * (1.0 - 1e-9))
+            .collect();
+        let ps: Vec<f64> = rhos
+            .iter()
+            .map(|&r| scheme.collision_probability(r, w))
+            .collect();
+        // Collision probabilities are non-decreasing in ρ (Lemma 1); make
+        // that exact under floating-point so binary search is safe.
+        let mut ps = ps;
+        for i in 1..ps.len() {
+            if ps[i] < ps[i - 1] {
+                ps[i] = ps[i - 1];
+            }
+        }
+        InversionTable { scheme, w, rhos, ps }
+    }
+
+    /// Default table size used across the system.
+    pub fn build_default(scheme: SchemeKind, w: f64) -> Self {
+        Self::build(scheme, w, 2048)
+    }
+
+    /// ρ̂ from an empirical collision rate (clamped into range).
+    pub fn rho(&self, p_hat: f64) -> f64 {
+        let n = self.ps.len();
+        let p = p_hat.clamp(self.ps[0], self.ps[n - 1]);
+        // Binary search for the bracketing segment.
+        let idx = self.ps.partition_point(|&q| q < p);
+        if idx == 0 {
+            return self.rhos[0];
+        }
+        if idx >= n {
+            return self.rhos[n - 1];
+        }
+        let (p0, p1) = (self.ps[idx - 1], self.ps[idx]);
+        let (r0, r1) = (self.rhos[idx - 1], self.rhos[idx]);
+        if p1 <= p0 {
+            return r0;
+        }
+        r0 + (p - p0) / (p1 - p0) * (r1 - r0)
+    }
+
+    /// Forward lookup `P(ρ)` by interpolation (for tests/metrics).
+    pub fn p(&self, rho: f64) -> f64 {
+        let n = self.rhos.len();
+        let r = rho.clamp(0.0, self.rhos[n - 1]);
+        let t = r / self.rhos[n - 1] * (n - 1) as f64;
+        let i = (t.floor() as usize).min(n - 2);
+        let frac = t - i as f64;
+        self.ps[i] * (1.0 - frac) + self.ps[i + 1] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisection_roundtrip_all_schemes() {
+        for scheme in SchemeKind::ALL {
+            for &rho in &[0.05, 0.3, 0.56, 0.8, 0.95] {
+                let w = 0.75;
+                let p = scheme.collision_probability(rho, w);
+                let back = rho_from_p(scheme, w, p);
+                assert!(
+                    (back - rho).abs() < 1e-7,
+                    "{scheme:?} rho={rho}: back={back}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table_roundtrip_accuracy() {
+        for scheme in SchemeKind::ALL {
+            let t = InversionTable::build(scheme, 1.0, 2048);
+            for &rho in &[0.02, 0.2, 0.5, 0.77, 0.93] {
+                let p = scheme.collision_probability(rho, 1.0);
+                let back = t.rho(p);
+                assert!(
+                    (back - rho).abs() < 2e-3,
+                    "{scheme:?} rho={rho}: table gives {back}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clamping_out_of_range() {
+        let t = InversionTable::build_default(SchemeKind::OneBit, 0.0);
+        assert!(t.rho(0.0) <= 1e-9); // below P(0)=0.5 clamps to ρ=0
+        assert!((t.rho(1.0) - 1.0).abs() < 1e-6);
+        assert_eq!(rho_from_p(SchemeKind::OneBit, 0.0, 0.1), 0.0);
+        assert_eq!(rho_from_p(SchemeKind::OneBit, 0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn forward_lookup_matches_exact() {
+        let t = InversionTable::build(SchemeKind::Uniform, 0.75, 2048);
+        for &rho in &[0.1, 0.5, 0.9] {
+            let exact = SchemeKind::Uniform.collision_probability(rho, 0.75);
+            assert!((t.p(rho) - exact).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn table_monotone_nondecreasing() {
+        let t = InversionTable::build(SchemeKind::TwoBit, 0.5, 512);
+        for i in 1..t.ps.len() {
+            assert!(t.ps[i] >= t.ps[i - 1]);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! The paper's analysis, implemented exactly.
+//!
+//! * [`collision`] — collision probabilities: `P_w` (Theorem 1), `P_{w,q}`
+//!   (Eq. 7, Datar et al.), `P_{w,2}` (Theorem 4), `P_1` (Eq. 19).
+//! * [`variance`] — asymptotic variance factors of the collision-inversion
+//!   estimators: `V_w` (Theorem 3), `V_{w,q}` (Theorem 2), `V_{w,2}`
+//!   (Theorem 4), `V_1` (Eq. 20), plus the `∂P/∂ρ` derivatives they are
+//!   built from (Lemma 1 / Appendices B–D).
+//! * [`optimum`] — per-ρ optimum bin width `argmin_w V(w; ρ)` for each
+//!   scheme (Figures 5, 8, 9).
+//! * [`invert`] — monotone ρ ↔ P inversion (tables + on-demand bisection),
+//!   the estimator backend.
+
+pub mod collision;
+pub mod variance;
+pub mod optimum;
+pub mod invert;
+pub mod nonuniform;
+
+pub use collision::{p_1, p_w, p_w2, p_wq, q_interval};
+pub use nonuniform::NonUniformScheme;
+pub use invert::{InversionTable, rho_from_p};
+pub use optimum::{optimum_w, OptimumResult};
+pub use variance::{dp_drho_w, dp_drho_w2, v_1, v_w, v_w2, v_wq};
+
+/// The four coding schemes analyzed in the paper. Carried through the
+/// theory, estimator, figure, and serving layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// `h_w` — uniform quantization `floor(x/w)` (proposed, Section 1.1).
+    Uniform,
+    /// `h_{w,q}` — window + random offset `floor((x+q)/w)` (Datar et al.).
+    WindowOffset,
+    /// `h_{w,2}` — non-uniform 2-bit over `(-∞,-w),[-w,0),[0,w),[w,∞)`.
+    TwoBit,
+    /// `h_1` — 1-bit sign coding.
+    OneBit,
+}
+
+impl SchemeKind {
+    pub const ALL: [SchemeKind; 4] = [
+        SchemeKind::Uniform,
+        SchemeKind::WindowOffset,
+        SchemeKind::TwoBit,
+        SchemeKind::OneBit,
+    ];
+
+    /// Collision probability of this scheme at similarity `rho`, bin
+    /// width `w` (ignored for `OneBit`).
+    pub fn collision_probability(self, rho: f64, w: f64) -> f64 {
+        match self {
+            SchemeKind::Uniform => p_w(rho, w),
+            SchemeKind::WindowOffset => p_wq(rho, w),
+            SchemeKind::TwoBit => p_w2(rho, w),
+            SchemeKind::OneBit => p_1(rho),
+        }
+    }
+
+    /// Asymptotic variance factor `V` such that
+    /// `Var(ρ̂) = V/k + O(1/k²)`.
+    pub fn variance_factor(self, rho: f64, w: f64) -> f64 {
+        match self {
+            SchemeKind::Uniform => v_w(rho, w),
+            SchemeKind::WindowOffset => v_wq(rho, w),
+            SchemeKind::TwoBit => v_w2(rho, w),
+            SchemeKind::OneBit => v_1(rho),
+        }
+    }
+
+    /// Paper-style display name.
+    pub fn label(self) -> &'static str {
+        match self {
+            SchemeKind::Uniform => "h_w",
+            SchemeKind::WindowOffset => "h_wq",
+            SchemeKind::TwoBit => "h_w2",
+            SchemeKind::OneBit => "h_1",
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Generalized non-uniform coding — the extension the paper's Section 4
+//! sets up: `h_{w,2}` partitions R into 4 regions at `{-w, 0, w}`; here
+//! we allow any symmetric boundary set `0 < w_1 < … < w_m`, giving
+//! `2(m+1)` regions (`b = log2(2m+2)` bits). `m = 1` recovers `h_{w,2}`
+//! exactly; larger `m` interpolates toward uniform quantization while
+//! keeping the paper's "spend resolution where the density is" design.
+//!
+//! Collision probabilities come from bivariate-normal rectangle masses
+//! (Lemma 1's generalization), `∂P/∂ρ` numerically, and the variance
+//! factor by the same delta-method as Theorems 2–4. A coordinate-descent
+//! optimizer finds boundaries minimizing the variance at a target ρ.
+
+use crate::mathx::normal::bvn_rect;
+use crate::mathx::golden_section_min;
+
+/// A symmetric non-uniform scheme with regions split at `±boundaries`
+/// (sorted ascending) and at 0.
+#[derive(Clone, Debug)]
+pub struct NonUniformScheme {
+    boundaries: Vec<f64>,
+}
+
+impl NonUniformScheme {
+    pub fn new(mut boundaries: Vec<f64>) -> Self {
+        assert!(!boundaries.is_empty());
+        boundaries.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(boundaries[0] > 0.0, "boundaries must be positive");
+        NonUniformScheme { boundaries }
+    }
+
+    /// The paper's `h_{w,2}` as the m = 1 special case.
+    pub fn two_bit(w: f64) -> Self {
+        Self::new(vec![w])
+    }
+
+    pub fn boundaries(&self) -> &[f64] {
+        &self.boundaries
+    }
+
+    /// Number of regions: `2(m + 1)`.
+    pub fn cardinality(&self) -> usize {
+        2 * (self.boundaries.len() + 1)
+    }
+
+    /// Bits per code.
+    pub fn bits_per_code(&self) -> u32 {
+        (usize::BITS - (self.cardinality() - 1).leading_zeros()).max(1)
+    }
+
+    /// Region edges, ascending, including ±∞ and 0:
+    /// `[-∞, -w_m, …, -w_1, 0, w_1, …, w_m, +∞]`.
+    fn edges(&self) -> Vec<f64> {
+        let m = self.boundaries.len();
+        let mut e = Vec::with_capacity(2 * m + 3);
+        e.push(f64::NEG_INFINITY);
+        for &w in self.boundaries.iter().rev() {
+            e.push(-w);
+        }
+        e.push(0.0);
+        e.extend(self.boundaries.iter().copied());
+        e.push(f64::INFINITY);
+        e
+    }
+
+    /// Encode one value to its region index (0-based from the left).
+    pub fn encode_one(&self, x: f64) -> u16 {
+        let edges = self.edges();
+        // Regions are [e_i, e_{i+1}); linear scan (m is tiny).
+        for i in 1..edges.len() {
+            if x < edges[i] {
+                return (i - 1) as u16;
+            }
+        }
+        (edges.len() - 2) as u16
+    }
+
+    /// Encode a slice of projected values.
+    pub fn encode(&self, xs: &[f32]) -> Vec<u16> {
+        xs.iter().map(|&x| self.encode_one(x as f64)).collect()
+    }
+
+    /// Collision probability `P(ρ) = Σ_regions Pr(x, y both in region)`.
+    pub fn collision_probability(&self, rho: f64) -> f64 {
+        let edges = self.edges();
+        let mut p = 0.0;
+        for i in 0..edges.len() - 1 {
+            p += bvn_rect(edges[i], edges[i + 1], edges[i], edges[i + 1], rho);
+        }
+        p.clamp(0.0, 1.0)
+    }
+
+    /// `∂P/∂ρ` by central difference (the closed form exists via
+    /// Lemma 1's Eq. 9 summed over regions; numeric keeps this generic).
+    pub fn dp_drho(&self, rho: f64) -> f64 {
+        let h = 1e-5;
+        let lo = (rho - h).max(0.0);
+        let hi = (rho + h).min(1.0 - 1e-9);
+        (self.collision_probability(hi) - self.collision_probability(lo)) / (hi - lo)
+    }
+
+    /// Delta-method variance factor `V = P(1−P)/(∂P/∂ρ)²`.
+    pub fn variance_factor(&self, rho: f64) -> f64 {
+        let p = self.collision_probability(rho);
+        let dp = self.dp_drho(rho);
+        p * (1.0 - p) / (dp * dp)
+    }
+
+    /// Optimize the boundaries for a target ρ by cyclic coordinate
+    /// descent (each boundary minimized by golden-section within its
+    /// neighbors' bracket). Returns the optimized scheme and its V.
+    pub fn optimize_for(m: usize, rho: f64) -> (Self, f64) {
+        assert!(m >= 1 && m <= 4, "supported m: 1..=4");
+        // Initialize: equally spaced quantiles of |N(0,1)| up to ~2.
+        let mut b: Vec<f64> = (1..=m).map(|i| i as f64 * 2.0 / (m as f64 + 0.5)).collect();
+        let mut best_v = NonUniformScheme::new(b.clone()).variance_factor(rho);
+        for _sweep in 0..6 {
+            let mut improved = false;
+            for i in 0..m {
+                let lo = if i == 0 { 0.02 } else { b[i - 1] + 0.02 };
+                let hi = if i + 1 < m { b[i + 1] - 0.02 } else { 8.0 };
+                if hi <= lo {
+                    continue;
+                }
+                let b_clone = b.clone();
+                let (x, v) = golden_section_min(
+                    |w| {
+                        let mut cand = b_clone.clone();
+                        cand[i] = w;
+                        NonUniformScheme::new(cand).variance_factor(rho)
+                    },
+                    lo,
+                    hi,
+                    1e-5,
+                );
+                if v < best_v - 1e-12 {
+                    best_v = v;
+                    b[i] = x;
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        (NonUniformScheme::new(b), best_v)
+    }
+}
+
+/// Bit-budget ablation row: the best variance factor achievable per
+/// scheme family at a given ρ, alongside the bits spent.
+pub fn bit_budget_table(rho: f64) -> Vec<(String, u32, f64)> {
+    use super::optimum::optimum_w;
+    use super::variance::v_1;
+    use super::SchemeKind;
+    let mut rows = Vec::new();
+    rows.push(("h_1 (1 bit)".to_string(), 1, v_1(rho)));
+    let (s2, v2) = NonUniformScheme::optimize_for(1, rho);
+    rows.push((
+        format!("h_w2* (2 bit, w={:.3})", s2.boundaries()[0]),
+        2,
+        v2,
+    ));
+    let (s3, v3) = NonUniformScheme::optimize_for(3, rho);
+    rows.push((
+        format!(
+            "nonuniform-3bit* (w={:.2},{:.2},{:.2})",
+            s3.boundaries()[0],
+            s3.boundaries()[1],
+            s3.boundaries()[2]
+        ),
+        3,
+        v3,
+    ));
+    let rw = optimum_w(SchemeKind::Uniform, rho);
+    let bits = crate::coding::CodingParams::new(crate::coding::Scheme::Uniform, rw.w)
+        .bits_per_code();
+    rows.push((format!("h_w* (w={:.2})", rw.w), bits, rw.v));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::{p_w2, v_w2};
+
+    #[test]
+    fn m1_matches_two_bit_theory() {
+        // The generalized machinery must reproduce Theorem 4 exactly.
+        for &(rho, w) in &[(0.1, 0.75), (0.5, 0.75), (0.8, 1.2)] {
+            let s = NonUniformScheme::two_bit(w);
+            let p = s.collision_probability(rho);
+            let want = p_w2(rho, w);
+            assert!((p - want).abs() < 1e-7, "P at rho={rho}: {p} vs {want}");
+            let v = s.variance_factor(rho);
+            let want_v = v_w2(rho, w);
+            assert!(
+                ((v - want_v) / want_v).abs() < 1e-3,
+                "V at rho={rho}: {v} vs {want_v}"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_regions_and_cardinality() {
+        let s = NonUniformScheme::new(vec![0.5, 1.5]);
+        assert_eq!(s.cardinality(), 6);
+        assert_eq!(s.bits_per_code(), 3);
+        assert_eq!(s.encode_one(-2.0), 0);
+        assert_eq!(s.encode_one(-1.0), 1);
+        assert_eq!(s.encode_one(-0.2), 2);
+        assert_eq!(s.encode_one(0.2), 3);
+        assert_eq!(s.encode_one(1.0), 4);
+        assert_eq!(s.encode_one(2.0), 5);
+    }
+
+    #[test]
+    fn collision_matches_monte_carlo() {
+        use crate::data::pairs::bivariate_normal_batch;
+        let s = NonUniformScheme::new(vec![0.4, 1.1]);
+        let rho = 0.6;
+        let (x, y) = bivariate_normal_batch(200_000, rho, 3);
+        let cx = s.encode(&x);
+        let cy = s.encode(&y);
+        let rate = cx.iter().zip(&cy).filter(|(a, b)| a == b).count() as f64 / cx.len() as f64;
+        let want = s.collision_probability(rho);
+        assert!((rate - want).abs() < 5e-3, "{rate} vs {want}");
+    }
+
+    #[test]
+    fn more_bits_never_hurt_at_optimum() {
+        // Optimized 3-boundary (3-bit) variance ≤ optimized 1-boundary
+        // (2-bit) variance: extra regions are free to collapse.
+        for &rho in &[0.3, 0.7, 0.9] {
+            let (_, v2) = NonUniformScheme::optimize_for(1, rho);
+            let (_, v3) = NonUniformScheme::optimize_for(3, rho);
+            assert!(
+                v3 <= v2 * 1.02,
+                "rho={rho}: 3-bit {v3} worse than 2-bit {v2}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimized_two_bit_matches_fig8() {
+        // optimize_for(1, ρ) must agree with the Figure-8 grid search.
+        use crate::theory::{optimum_w, SchemeKind};
+        // ρ = 0.9: the 2-bit optimum is interior (Figure 8 right shows
+        // w* ≈ 0.6-0.9 at high ρ); at mid ρ the curve is flat in w and
+        // only V is comparable.
+        let rho = 0.9;
+        let (s, v) = NonUniformScheme::optimize_for(1, rho);
+        let grid = optimum_w(SchemeKind::TwoBit, rho);
+        assert!(
+            (v - grid.v).abs() / grid.v < 0.02,
+            "V: {v} vs grid {}",
+            grid.v
+        );
+        assert!(
+            (s.boundaries()[0] - grid.w).abs() < 0.2,
+            "w: {} vs grid {}",
+            s.boundaries()[0],
+            grid.w
+        );
+        // Mid-ρ: V must still agree even though w* is non-identifiable.
+        let (_, v5) = NonUniformScheme::optimize_for(1, 0.5);
+        let g5 = optimum_w(SchemeKind::TwoBit, 0.5);
+        assert!((v5 - g5.v).abs() / g5.v < 0.02, "V@0.5: {v5} vs {}", g5.v);
+    }
+
+    #[test]
+    fn bit_budget_table_shape() {
+        // At high ρ the hierarchy should be: more (well-spent) bits ⇒
+        // smaller variance; the uniform scheme with optimal small w is
+        // the many-bit frontier.
+        let rows = bit_budget_table(0.9);
+        assert_eq!(rows.len(), 4);
+        let v1 = rows[0].2;
+        let v2 = rows[1].2;
+        let v3 = rows[2].2;
+        assert!(v2 < v1, "2-bit {v2} should beat 1-bit {v1}");
+        assert!(v3 <= v2 * 1.02, "3-bit {v3} vs 2-bit {v2}");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_boundary() {
+        NonUniformScheme::new(vec![0.0, 1.0]);
+    }
+}

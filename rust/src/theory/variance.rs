@@ -1,0 +1,247 @@
+//! Asymptotic variance factors `V` of the collision-inversion estimators:
+//! `Var(ρ̂) = V/k + O(1/k²)` for `k` projections (Theorems 2–4, Eq. 20).
+//!
+//! Each `V` is `P(1−P) / (∂P/∂ρ)²` by the delta method; the paper gives
+//! the `∂P/∂ρ` in closed form (Appendices B–D) and we implement those
+//! forms directly, with series truncation matched to `collision.rs`.
+
+use super::collision::{p_1, p_w, p_w2, p_wq};
+use crate::mathx::{phi_pdf, PHI0};
+
+const TAIL: f64 = 9.0;
+const PI: f64 = std::f64::consts::PI;
+
+/// `∂P_w/∂ρ` — Appendix C:
+///
+/// ```text
+/// (1/π) (1−ρ²)^{-1/2} Σ_{i≥0} ( e^{-(i+1)²w²/(1+ρ)} + e^{-i²w²/(1+ρ)}
+///                               − 2 e^{-w²/(2(1−ρ²))} e^{-i(i+1)w²/(1+ρ)} )
+/// ```
+pub fn dp_drho_w(rho: f64, w: f64) -> f64 {
+    let rho = rho.min(1.0 - 1e-12);
+    let one_m_r2 = 1.0 - rho * rho;
+    let imax = (TAIL / w).ceil().max(4.0) as usize + 2;
+    let cross = (-w * w / (2.0 * one_m_r2)).exp();
+    let mut sum = 0.0;
+    for i in 0..=imax {
+        let i = i as f64;
+        let term = (-(i + 1.0) * (i + 1.0) * w * w / (1.0 + rho)).exp()
+            + (-i * i * w * w / (1.0 + rho)).exp()
+            - 2.0 * cross * (-i * (i + 1.0) * w * w / (1.0 + rho)).exp();
+        sum += term;
+        if i * w > TAIL {
+            break;
+        }
+    }
+    sum / (PI * one_m_r2.sqrt())
+}
+
+/// `V_w(ρ, w)` — Theorem 3, Eq. (15).
+pub fn v_w(rho: f64, w: f64) -> f64 {
+    let p = p_w(rho, w);
+    let dp = dp_drho_w(rho, w);
+    p * (1.0 - p) / (dp * dp)
+}
+
+/// `V_{w,q}(ρ, w)` — Theorem 2, Eq. (13):
+///
+/// ```text
+/// V_{w,q} = (d²/4) ( t / (φ(t) − 1/√(2π)) )² P_{w,q}(1−P_{w,q}),  t = w/√d
+/// ```
+pub fn v_wq(rho: f64, w: f64) -> f64 {
+    let d = 2.0 * (1.0 - rho);
+    let t = w / d.sqrt();
+    let p = p_wq(rho, w);
+    let denom = phi_pdf(t) - PHI0;
+    let g = t / denom;
+    d * d / 4.0 * g * g * p * (1.0 - p)
+}
+
+/// `V_{w,q}` expressed against the scale-free variable `t = w/√d`, with
+/// the `d²/4` factor removed — exactly what the paper plots in Figure 2.
+/// Its minimum is `7.6797` at `t = 1.6476`.
+pub fn v_wq_scale_free(t: f64) -> f64 {
+    // P_{w,q} depends on (ρ, w) only through t.
+    let p = {
+        use crate::mathx::{phi_cdf, SQRT_2PI};
+        (2.0 * phi_cdf(t) - 1.0 - 2.0 / (SQRT_2PI * t) + 2.0 / t * phi_pdf(t)).clamp(0.0, 1.0)
+    };
+    let denom = phi_pdf(t) - PHI0;
+    let g = t / denom;
+    g * g * p * (1.0 - p)
+}
+
+/// `∂P_{w,2}/∂ρ` — Appendix D:
+///
+/// ```text
+/// (1/π)(1−ρ²)^{-1/2} [ 1 − 2 e^{-w²/(2(1−ρ²))} + 2 e^{-w²/(1+ρ)} ]
+/// ```
+pub fn dp_drho_w2(rho: f64, w: f64) -> f64 {
+    let rho = rho.min(1.0 - 1e-12);
+    let one_m_r2 = 1.0 - rho * rho;
+    (1.0 - 2.0 * (-w * w / (2.0 * one_m_r2)).exp() + 2.0 * (-w * w / (1.0 + rho)).exp())
+        / (PI * one_m_r2.sqrt())
+}
+
+/// `V_{w,2}(ρ, w)` — Theorem 4, Eq. (18).
+pub fn v_w2(rho: f64, w: f64) -> f64 {
+    let p = p_w2(rho, w);
+    let one_m_r2 = 1.0 - rho * rho;
+    let bracket =
+        1.0 - 2.0 * (-w * w / (2.0 * one_m_r2)).exp() + 2.0 * (-w * w / (1.0 + rho)).exp();
+    PI * PI * one_m_r2 * p * (1.0 - p) / (bracket * bracket)
+}
+
+/// `V_1(ρ) = π²(1−ρ²) P_1(1−P_1)` — Eq. (20).
+pub fn v_1(rho: f64) -> f64 {
+    let p = p_1(rho);
+    PI * PI * (1.0 - rho * rho) * p * (1.0 - p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::{grid_then_golden_min, phi_cdf};
+
+    #[test]
+    fn fig2_minimum_constant() {
+        // Paper: min of V_{w,q}·4/d² is 7.6797 at w/√d = 1.6476.
+        let (t, v) = grid_then_golden_min(v_wq_scale_free, 0.2, 6.0, 300, false, 1e-10);
+        assert!((t - 1.6476).abs() < 5e-4, "argmin t = {t}");
+        assert!((v - 7.6797).abs() < 5e-4, "min = {v}");
+    }
+
+    #[test]
+    fn vw_rho0_limit_pi2_over_4() {
+        // Theorem 3 remark: V_w|ρ=0 → π²/4 = 2.4674 as w → ∞.
+        let v = v_w(0.0, 30.0);
+        assert!(
+            (v - std::f64::consts::PI.powi(2) / 4.0).abs() < 1e-6,
+            "V_w(0, 30) = {v}"
+        );
+    }
+
+    #[test]
+    fn vw_rho0_closed_form_eq16() {
+        // Eq. (16): explicit ratio form at ρ = 0.
+        for &w in &[0.5, 1.0, 2.0, 4.0] {
+            let num: f64 = (0..200)
+                .map(|i| {
+                    let a = phi_cdf((i + 1) as f64 * w) - phi_cdf(i as f64 * w);
+                    a * a
+                })
+                .sum();
+            let den: f64 = (0..200)
+                .map(|i| {
+                    let a = phi_pdf((i + 1) as f64 * w) - phi_pdf(i as f64 * w);
+                    a * a
+                })
+                .sum();
+            let want = num * (0.5 - num) / (den * den);
+            let got = v_w(0.0, w);
+            assert!(
+                ((got - want) / want).abs() < 1e-6,
+                "w={w}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn v1_reference_values() {
+        // V_1(0) = π² · 1 · 1/2 · 1/2 = π²/4.
+        assert!((v_1(0.0) - std::f64::consts::PI.powi(2) / 4.0).abs() < 1e-12);
+        // V_1 → 0 as ρ → 1.
+        assert!(v_1(0.9999) < 1e-2);
+    }
+
+    #[test]
+    fn vwq_at_rho0_bigger_than_vw_limit() {
+        // The remark after Theorem 3: optimized V_{w,q}(ρ=0) = 7.6797 vs
+        // V_w's π²/4 = 2.4674 — our scheme is ~3.1× more accurate there.
+        let (_, vwq_best) = grid_then_golden_min(|w| v_wq(0.0, w), 0.2, 12.0, 300, false, 1e-9);
+        assert!((vwq_best - 7.6797).abs() < 5e-4, "{vwq_best}");
+        assert!(vwq_best / (std::f64::consts::PI.powi(2) / 4.0) > 3.0);
+    }
+
+    #[test]
+    fn dp_w_matches_numeric() {
+        for &(rho, w) in &[(0.1, 0.5), (0.5, 1.0), (0.8, 2.0), (0.0, 0.75)] {
+            let h = 1e-5;
+            // Symmetric difference inside the domain, forward at ρ = 0.
+            let num = if rho >= h {
+                (p_w(rho + h, w) - p_w(rho - h, w)) / (2.0 * h)
+            } else {
+                (p_w(rho + h, w) - p_w(rho, w)) / h
+            };
+            let ana = dp_drho_w(rho, w);
+            assert!(
+                ((num - ana) / ana).abs() < 1e-3,
+                "rho={rho} w={w}: {num} vs {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn dp_w2_matches_numeric() {
+        for &(rho, w) in &[(0.1, 0.75), (0.5, 0.75), (0.8, 1.5), (0.3, 0.25)] {
+            let h = 1e-5;
+            let num = (p_w2(rho + h, w) - p_w2(rho - h, w)) / (2.0 * h);
+            let ana = dp_drho_w2(rho, w);
+            assert!(
+                ((num - ana) / ana).abs() < 1e-4,
+                "rho={rho} w={w}: {num} vs {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn vw2_limits_equal_v1() {
+        // h_{w,2} degenerates to the sign scheme at w = 0 and w = ∞.
+        for &rho in &[0.1, 0.5, 0.9] {
+            let v0 = v_w2(rho, 1e-9);
+            let vinf = v_w2(rho, 40.0);
+            let v1 = v_1(rho);
+            assert!(((v0 - v1) / v1).abs() < 1e-5, "rho={rho} w→0: {v0} vs {v1}");
+            assert!(
+                ((vinf - v1) / v1).abs() < 1e-5,
+                "rho={rho} w→∞: {vinf} vs {v1}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_shape_vw_beats_vwq_for_large_w() {
+        // Figure 4: V_w < V_{w,q} especially when w > 2.
+        for &rho in &[0.0, 0.25, 0.5, 0.75] {
+            for &w in &[2.5, 4.0, 6.0] {
+                assert!(
+                    v_w(rho, w) < v_wq(rho, w),
+                    "rho={rho} w={w}: V_w={} V_wq={}",
+                    v_w(rho, w),
+                    v_wq(rho, w)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig7_shape_vw2_beats_vw_small_w_low_rho() {
+        // Figure 7: for ρ ≤ 0.5 and small w, V_{w,2} ≪ V_w; at high ρ
+        // V_{w,2} is somewhat higher.
+        assert!(v_w2(0.25, 0.3) < v_w(0.25, 0.3));
+        assert!(v_w2(0.5, 0.3) < v_w(0.5, 0.3));
+        assert!(v_w2(0.95, 0.75) > v_w(0.95, 0.75) * 0.8);
+    }
+
+    #[test]
+    fn variance_positive_finite() {
+        for scheme in crate::theory::SchemeKind::ALL {
+            for &rho in &[0.0, 0.3, 0.6, 0.9, 0.99] {
+                for &w in &[0.25, 0.75, 1.5, 4.0] {
+                    let v = scheme.variance_factor(rho, w);
+                    assert!(v.is_finite() && v >= 0.0, "{scheme:?} rho={rho} w={w}: {v}");
+                }
+            }
+        }
+    }
+}

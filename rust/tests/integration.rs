@@ -1,0 +1,192 @@
+//! Cross-module integration tests: the full pipelines the paper's
+//! experiments exercise, composed exactly as the CLI/examples compose
+//! them (no PJRT requirement — see `pjrt_roundtrip.rs` for that axis).
+
+use crp::coding::{CodingParams, Scheme};
+use crp::data::synth::{SynthKind, SynthSpec};
+use crp::estimator::CollisionEstimator;
+use crp::projection::{ProjectionConfig, Projector};
+use crp::svm::sweep::{project_dataset, run_coded_svm, SvmTask};
+use crp::theory::SchemeKind;
+
+/// End-to-end estimation through real projections (not the bivariate
+/// shortcut): data pair → R → codes → collision inversion, against the
+/// true ρ, for every scheme. This is the paper's core claim in one test.
+#[test]
+fn projection_coding_estimation_pipeline() {
+    let k = 8192;
+    let proj = Projector::new_cpu(ProjectionConfig {
+        k,
+        seed: 3,
+        ..Default::default()
+    });
+    for &rho in &[0.2, 0.56, 0.9] {
+        let (u, v) = crp::data::pairs::unit_pair_with_rho(300, rho, 7);
+        let xu = proj.project_dense(&u);
+        let xv = proj.project_dense(&v);
+        for scheme in SchemeKind::ALL {
+            let w = if scheme == SchemeKind::OneBit { 0.0 } else { 0.75 };
+            let params = CodingParams::new(scheme, w);
+            let est = CollisionEstimator::new(params.clone());
+            let e = est.estimate_with_error(&params.encode(&xu), &params.encode(&xv));
+            assert!(
+                (e.rho - rho).abs() < 4.0 * e.std_err + 0.02,
+                "{scheme:?} rho={rho}: est {} ± {}",
+                e.rho,
+                e.std_err
+            );
+        }
+    }
+}
+
+/// Theory ↔ empirics: with fixed w, the error ordering across schemes
+/// must match the variance factors V at that (ρ, w) — the measurable
+/// content of Figures 4/7/10.
+#[test]
+fn variance_ordering_matches_theory_at_fixed_w() {
+    let rho = 0.5;
+    let w = 5.0; // the regime where V_wq blows up (Figure 4): ratio ≈ 3.2
+    let k = 2048;
+    let reps = 150;
+    let mse = |scheme: Scheme| -> f64 {
+        let params = CodingParams::new(scheme, w);
+        let est = CollisionEstimator::new(params.clone());
+        let mut acc = 0.0;
+        for r in 0..reps {
+            let (x, y) = crp::data::pairs::bivariate_normal_batch(k, rho, 40_000 + r);
+            let e = est.estimate(&params.encode(&x), &params.encode(&y));
+            acc += (e - rho) * (e - rho);
+        }
+        acc / reps as f64
+    };
+    let mse_hw = mse(Scheme::Uniform);
+    let mse_hwq = mse(Scheme::WindowOffset);
+    // Theory: V_w(0.5, 2.5) << V_wq(0.5, 2.5).
+    let vw = SchemeKind::Uniform.variance_factor(rho, w);
+    let vwq = SchemeKind::WindowOffset.variance_factor(rho, w);
+    assert!(vwq / vw > 2.5, "theory gap missing: {vw} vs {vwq}");
+    assert!(
+        mse_hwq > mse_hw * 1.3,
+        "empirical ordering violated: h_w {mse_hw:.2e} vs h_wq {mse_hwq:.2e}"
+    );
+}
+
+/// The Section-6 SVM experiment at smoke scale, on all three corpora —
+/// coded features must carry the class signal on every dataset shape.
+#[test]
+fn svm_pipeline_all_three_datasets() {
+    for kind in [SynthKind::UrlLike, SynthKind::FarmLike, SynthKind::ArceneLike] {
+        let spec = SynthSpec::small(kind);
+        let (train, test) = spec.generate();
+        let k = 128;
+        let proj = Projector::new_cpu(ProjectionConfig {
+            k,
+            seed: 5,
+            ..Default::default()
+        });
+        let ptr = project_dataset(&train, &proj);
+        let pte = project_dataset(&test, &proj);
+        let r = run_coded_svm(
+            &ptr,
+            &train.y,
+            &pte,
+            &test.y,
+            k,
+            &SvmTask::Coded(CodingParams::new(Scheme::TwoBit, 0.75)),
+            1.0,
+        );
+        assert!(
+            r.test_acc > 0.6,
+            "{kind:?}: 2-bit coded SVM only {:.3}",
+            r.test_acc
+        );
+    }
+}
+
+/// libsvm round-trip through the real pipeline: write a synthetic
+/// dataset, re-read it, and verify the projections agree.
+#[test]
+fn libsvm_roundtrip_preserves_projections() {
+    let (train, _) = SynthSpec::small(SynthKind::FarmLike).generate();
+    let path = std::env::temp_dir().join(format!("crp_it_{}.libsvm", std::process::id()));
+    crp::data::libsvm::write_libsvm(&train, &path).unwrap();
+    let back = crp::data::libsvm::read_libsvm(&path, train.x.cols).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.len(), train.len());
+    let proj = Projector::new_cpu(ProjectionConfig {
+        k: 32,
+        seed: 1,
+        ..Default::default()
+    });
+    for r in (0..train.len()).step_by(17) {
+        let (i1, v1) = train.x.row(r);
+        let (i2, v2) = back.x.row(r);
+        let a = proj.project_sparse(i1, v1);
+        let b = proj.project_sparse(i2, v2);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+}
+
+/// Sketch-service consistency: similarity estimated over the wire equals
+/// similarity estimated locally from the same projector + coding.
+#[test]
+fn service_estimates_match_local_pipeline() {
+    use crp::coordinator::server::{ServerConfig, ServiceState};
+    use crp::coordinator::protocol::{Request, Response};
+    use std::sync::Arc;
+
+    let cfg = ServerConfig::default();
+    let proj_cfg = ProjectionConfig {
+        k: 1024,
+        seed: 0,
+        ..Default::default()
+    };
+    let state = ServiceState::new(Arc::new(Projector::new_cpu(proj_cfg.clone())), &cfg);
+    let (u, v) = crp::data::pairs::unit_pair_with_rho(200, 0.7, 9);
+    state.handle(Request::Register {
+        id: "u".into(),
+        vector: u.clone(),
+    });
+    state.handle(Request::Register {
+        id: "v".into(),
+        vector: v.clone(),
+    });
+    let remote = match state.handle(Request::Estimate {
+        a: "u".into(),
+        b: "v".into(),
+    }) {
+        Response::Estimate { rho, .. } => rho,
+        other => panic!("unexpected {other:?}"),
+    };
+    // Local replica of the same computation.
+    let proj = Projector::new_cpu(proj_cfg);
+    let params = cfg.coding.clone();
+    let est = CollisionEstimator::new(params.clone());
+    let local = est.estimate(
+        &params.encode(&proj.project_dense(&u)),
+        &params.encode(&proj.project_dense(&v)),
+    );
+    assert!(
+        (remote - local).abs() < 1e-9,
+        "remote {remote} vs local {local}"
+    );
+}
+
+/// Figure machinery smoke: every figure renders and writes CSV.
+#[test]
+fn all_figures_generate_and_write() {
+    let dir = std::env::temp_dir().join(format!("crp_figs_{}", std::process::id()));
+    for fig in crp::figures::ALL_FIGURES {
+        let scale = if fig >= 11 { 0.03 } else { 1.0 };
+        let tables = crp::figures::run_figure(fig, scale)
+            .unwrap_or_else(|e| panic!("figure {fig}: {e}"));
+        assert!(!tables.is_empty());
+        for t in tables {
+            assert!(!t.rows.is_empty(), "figure {fig} table {} empty", t.name);
+            t.write_csv(&dir).unwrap();
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,240 @@
+//! Integration: the real AOT artifacts (built by `make artifacts`) load,
+//! compile, and execute through the PJRT runtime, and their numerics
+//! match the pure-Rust oracle — the full Python→HLO→Rust bridge.
+//!
+//! These tests are skipped (with a message) when `artifacts/` has not
+//! been built, so `cargo test` stays runnable before `make artifacts`.
+
+use crp::coding::{CodingParams, Scheme};
+use crp::projection::{ProjectionConfig, Projector};
+use crp::runtime::{ArtifactId, ArtifactRegistry, PjrtRuntime};
+use std::sync::Arc;
+
+fn runtime_or_skip() -> Option<Arc<PjrtRuntime>> {
+    let reg = ArtifactRegistry::default_location();
+    if !reg.exists(&ArtifactId::proj_acc(64, 1024, 256)) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(PjrtRuntime::cpu(reg).expect("PJRT runtime")))
+}
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut g = crp::mathx::Pcg64::new(seed, 0);
+    (0..n).map(|_| (g.next_f64() as f32 - 0.5) * 2.0).collect()
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for id in rt.registry().list() {
+        rt.executable(&id)
+            .unwrap_or_else(|e| panic!("artifact {} failed to compile: {e}", id.0));
+    }
+}
+
+#[test]
+fn proj_acc_artifact_matches_rust_gemm() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (b, d, k) = (64usize, 1024usize, 256usize);
+    let u = randv(b * d, 1);
+    let r = randv(d * k, 2);
+    let acc = randv(b * k, 3);
+    let id = ArtifactId::proj_acc(b, d, k);
+    let out = rt
+        .execute(
+            &id,
+            &[
+                PjrtRuntime::literal_f32(&u, &[b as i64, d as i64]).unwrap(),
+                PjrtRuntime::literal_f32(&r, &[d as i64, k as i64]).unwrap(),
+                PjrtRuntime::literal_f32(&acc, &[b as i64, k as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = PjrtRuntime::to_vec_f32(&out[0]).unwrap();
+    let mut want = acc.clone();
+    crp::projection::gemm::gemm_acc(&u, &r, &mut want, b, d, k);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-2 * (1.0 + w.abs()),
+            "mismatch at {i}: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn quantize_artifact_matches_rust_encoders() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (b, k) = (64usize, 256usize);
+    let x = randv(b * k, 5);
+    let w = 0.75f32;
+    let params_hw = CodingParams::new(Scheme::Uniform, w as f64);
+    let params_hwq = CodingParams::new(Scheme::WindowOffset, w as f64);
+    let params_h2 = CodingParams::new(Scheme::TwoBit, w as f64);
+    let params_h1 = CodingParams::new(Scheme::OneBit, 0.0);
+    let offsets: Vec<f64> = params_hwq.offsets(k);
+    let offs_f32: Vec<f32> = offsets.iter().map(|&q| q as f32).collect();
+    let id = ArtifactId::quantize_all(b, k);
+    let out = rt
+        .execute(
+            &id,
+            &[
+                PjrtRuntime::literal_f32(&x, &[b as i64, k as i64]).unwrap(),
+                PjrtRuntime::literal_scalar_f32(w),
+                PjrtRuntime::literal_f32(&offs_f32, &[k as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    let hw = PjrtRuntime::to_vec_i32(&out[0]).unwrap();
+    let hwq = PjrtRuntime::to_vec_i32(&out[1]).unwrap();
+    let hw2 = PjrtRuntime::to_vec_i32(&out[2]).unwrap();
+    let h1 = PjrtRuntime::to_vec_i32(&out[3]).unwrap();
+    let mut mismatches = 0usize;
+    for row in 0..b {
+        let xs = &x[row * k..(row + 1) * k];
+        let want_hw = params_hw.encode(xs);
+        let want_h2 = params_h2.encode(xs);
+        let want_h1 = params_h1.encode(xs);
+        let mut want_hwq = vec![0u16; k];
+        params_hwq.encode_into(xs, Some(&offsets), &mut want_hwq);
+        for j in 0..k {
+            // f32 (kernel) vs f64 (Rust) floor can differ exactly on a
+            // bin boundary; count and bound rather than require equality.
+            mismatches += usize::from(hw[row * k + j] != want_hw[j] as i32);
+            mismatches += usize::from(hwq[row * k + j] != want_hwq[j] as i32);
+            mismatches += usize::from(hw2[row * k + j] != want_h2[j] as i32);
+            mismatches += usize::from(h1[row * k + j] != want_h1[j] as i32);
+        }
+    }
+    let frac = mismatches as f64 / (4 * b * k) as f64;
+    assert!(frac < 1e-3, "code mismatch fraction {frac}");
+}
+
+#[test]
+fn collision_artifact_matches_rust_counts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (b, k) = (64usize, 256usize);
+    let mut g = crp::mathx::Pcg64::new(77, 0);
+    let a: Vec<i32> = (0..b * k).map(|_| g.next_below(4) as i32).collect();
+    let c: Vec<i32> = (0..b * k).map(|_| g.next_below(4) as i32).collect();
+    let id = ArtifactId::collision(b, k);
+    let out = rt
+        .execute(
+            &id,
+            &[
+                PjrtRuntime::literal_i32(&a, &[b as i64, k as i64]).unwrap(),
+                PjrtRuntime::literal_i32(&c, &[b as i64, k as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let counts = PjrtRuntime::to_vec_i32(&out[0]).unwrap();
+    assert_eq!(counts.len(), b);
+    for row in 0..b {
+        let want = (0..k)
+            .filter(|&j| a[row * k + j] == c[row * k + j])
+            .count() as i32;
+        assert_eq!(counts[row], want, "row {row}");
+    }
+}
+
+#[test]
+fn proj_code_artifact_matches_fused_pipeline() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (b, d, k) = (64usize, 1024usize, 256usize);
+    let u = randv(b * d, 9);
+    let r = randv(d * k, 10);
+    let w = 0.75f32;
+    let id = ArtifactId::proj_code(b, d, k);
+    let out = rt
+        .execute(
+            &id,
+            &[
+                PjrtRuntime::literal_f32(&u, &[b as i64, d as i64]).unwrap(),
+                PjrtRuntime::literal_f32(&r, &[d as i64, k as i64]).unwrap(),
+                PjrtRuntime::literal_scalar_f32(w),
+            ],
+        )
+        .unwrap();
+    let codes = PjrtRuntime::to_vec_i32(&out[0]).unwrap();
+    // Oracle: Rust GEMM then Rust 2-bit encoder.
+    let mut x = vec![0.0f32; b * k];
+    crp::projection::gemm::gemm_acc(&u, &r, &mut x, b, d, k);
+    let params = CodingParams::new(Scheme::TwoBit, w as f64);
+    let mut mismatches = 0usize;
+    for row in 0..b {
+        let want = params.encode(&x[row * k..(row + 1) * k]);
+        for j in 0..k {
+            mismatches += usize::from(codes[row * k + j] != want[j] as i32);
+        }
+    }
+    let frac = mismatches as f64 / (b * k) as f64;
+    assert!(frac < 2e-3, "fused code mismatch fraction {frac}");
+}
+
+#[test]
+fn pjrt_projector_matches_pure_backend() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = ProjectionConfig {
+        k: 256,
+        seed: 4,
+        d_tile: 1024,
+        b_tile: 64,
+        max_cached_tiles: 4,
+    };
+    let pure = Projector::new_cpu(cfg.clone());
+    let pjrt = Projector::new_pjrt(cfg, rt);
+    assert!(pjrt.pjrt_active(), "PJRT path should engage");
+    let (bsz, d) = (10usize, 2500usize); // non-multiples: exercises padding
+    let u = randv(bsz * d, 11);
+    let a = pure.project_batch(&u, bsz, d);
+    let b = pjrt.project_batch(&u, bsz, d);
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-2 * (1.0 + x.abs()),
+            "mismatch at {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn serving_stack_over_pjrt_end_to_end() {
+    let Some(rt) = runtime_or_skip() else { return };
+    use crp::coordinator::server::{ServerConfig, ServiceState};
+    use crp::coordinator::protocol::{Request, Response};
+    let projector = Arc::new(Projector::new_pjrt(
+        ProjectionConfig {
+            k: 256,
+            seed: 0,
+            d_tile: 1024,
+            b_tile: 64,
+            max_cached_tiles: 4,
+        },
+        rt,
+    ));
+    assert!(projector.pjrt_active());
+    let state = ServiceState::new(projector, &ServerConfig::default());
+    let (u, v) = crp::data::pairs::unit_pair_with_rho(128, 0.9, 2);
+    state.handle(Request::Register {
+        id: "u".into(),
+        vector: u,
+    });
+    state.handle(Request::Register {
+        id: "v".into(),
+        vector: v,
+    });
+    match state.handle(Request::Estimate {
+        a: "u".into(),
+        b: "v".into(),
+    }) {
+        Response::Estimate { rho, std_err, .. } => {
+            assert!(
+                (rho - 0.9).abs() < 4.0 * std_err + 0.08,
+                "rho {rho} err {std_err}"
+            );
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}

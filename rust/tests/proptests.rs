@@ -1,0 +1,381 @@
+//! Property-based tests (proptest is not vendored; these use the crate's
+//! own PCG64 to drive randomized cases — shrinkless, but seeds print on
+//! failure so cases reproduce exactly).
+//!
+//! Invariants covered, per the coordinator/coding contract:
+//! * routing: estimates are symmetric, identical-input ⇒ ρ̂ = 1
+//! * batching: batched execution ≡ one-at-a-time execution
+//! * state: packed store round-trips codes exactly
+//! * coding: pack/unpack identity, collision count symmetry + bounds,
+//!   monotone inversion, expansion inner-product identity
+
+use crp::coding::{
+    collision_count, collision_count_packed, expand_to_sparse, pack_codes, unpack_codes,
+    CodingParams, Scheme,
+};
+use crp::mathx::Pcg64;
+use crp::theory::{InversionTable, SchemeKind};
+
+const CASES: u64 = 60;
+
+fn rng(case: u64) -> Pcg64 {
+    Pcg64::new(0xC0FFEE ^ case, case)
+}
+
+fn rand_codes(g: &mut Pcg64, n: usize, card: u16) -> Vec<u16> {
+    (0..n).map(|_| g.next_below(card as u64) as u16).collect()
+}
+
+fn rand_f32s(g: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n)
+        .map(|_| (g.next_f64() as f32 - 0.5) * 2.0 * scale)
+        .collect()
+}
+
+#[test]
+fn prop_pack_unpack_identity() {
+    for case in 0..CASES {
+        let mut g = rng(case);
+        let n = g.next_below(700) as usize;
+        let bits = [1u32, 2, 4, 8, 16][g.next_below(5) as usize];
+        let card = 1u16 << bits.min(10);
+        let codes = rand_codes(&mut g, n, card);
+        let packed = pack_codes(&codes, bits);
+        assert_eq!(unpack_codes(&packed), codes, "case {case}");
+    }
+}
+
+#[test]
+fn prop_collision_count_invariants() {
+    for case in 0..CASES {
+        let mut g = rng(case);
+        let n = 1 + g.next_below(900) as usize;
+        let bits = [1u32, 2, 4, 8][g.next_below(4) as usize];
+        let card = 1u16 << bits;
+        let a = rand_codes(&mut g, n, card);
+        let b = rand_codes(&mut g, n, card);
+        let c = collision_count(&a, &b);
+        // Symmetry.
+        assert_eq!(c, collision_count(&b, &a), "case {case}");
+        // Bounds.
+        assert!(c <= n);
+        // Identity.
+        assert_eq!(collision_count(&a, &a), n);
+        // Packed agrees with scalar.
+        let pa = pack_codes(&a, bits);
+        let pb = pack_codes(&b, bits);
+        assert_eq!(collision_count_packed(&pa, &pb), c, "case {case}");
+    }
+}
+
+#[test]
+fn prop_encode_code_range() {
+    for case in 0..CASES {
+        let mut g = rng(case);
+        let scheme = SchemeKind::ALL[g.next_below(4) as usize];
+        let w = 0.05 + g.next_f64() * 6.0;
+        let params = CodingParams::new(scheme, w);
+        let xs = rand_f32s(&mut g, 200, 8.0);
+        let codes = params.encode(&xs);
+        let card = params.cardinality() as u16;
+        for &c in &codes {
+            assert!(c < card, "case {case}: code {c} >= cardinality {card}");
+        }
+    }
+}
+
+#[test]
+fn prop_encode_monotone_in_x_for_interval_schemes() {
+    // All four schemes are monotone step functions of x (given fixed
+    // offsets) — codes must be non-decreasing along increasing inputs.
+    for case in 0..CASES {
+        let mut g = rng(case);
+        let scheme = SchemeKind::ALL[g.next_below(4) as usize];
+        let w = 0.1 + g.next_f64() * 4.0;
+        let params = CodingParams::new(scheme, w);
+        let mut xs = rand_f32s(&mut g, 100, 7.0);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let offs = vec![0.3 * w; xs.len()];
+        let mut codes = vec![0u16; xs.len()];
+        params.encode_into(&xs, Some(&offs), &mut codes);
+        for win in codes.windows(2) {
+            assert!(win[1] >= win[0], "case {case}: non-monotone");
+        }
+    }
+}
+
+#[test]
+fn prop_expansion_inner_product_is_collision_rate() {
+    for case in 0..CASES / 2 {
+        let mut g = rng(case);
+        let k = 1 + g.next_below(300) as usize;
+        let card = 2 + g.next_below(14) as usize;
+        let a = rand_codes(&mut g, k, card as u16);
+        let b = rand_codes(&mut g, k, card as u16);
+        let (ia, va) = expand_to_sparse(&a, card);
+        let (ib, vb) = expand_to_sparse(&b, card);
+        let mut dot = 0.0f64;
+        let (mut p, mut q) = (0usize, 0usize);
+        while p < ia.len() && q < ib.len() {
+            match ia[p].cmp(&ib[q]) {
+                std::cmp::Ordering::Less => p += 1,
+                std::cmp::Ordering::Greater => q += 1,
+                std::cmp::Ordering::Equal => {
+                    dot += (va[p] * vb[q]) as f64;
+                    p += 1;
+                    q += 1;
+                }
+            }
+        }
+        let rate = collision_count(&a, &b) as f64 / k as f64;
+        assert!((dot - rate).abs() < 1e-5, "case {case}: {dot} vs {rate}");
+    }
+}
+
+#[test]
+fn prop_inversion_table_monotone_and_inverse() {
+    for case in 0..16 {
+        let mut g = rng(case);
+        let scheme = SchemeKind::ALL[g.next_below(4) as usize];
+        let w = 0.2 + g.next_f64() * 3.0;
+        let table = InversionTable::build(scheme, w, 512);
+        // Monotone: ρ̂ non-decreasing in the empirical rate.
+        let mut prev = -1.0;
+        for i in 0..=50 {
+            let p = i as f64 / 50.0;
+            let rho = table.rho(p);
+            assert!(rho >= prev - 1e-12, "case {case}");
+            assert!((0.0..=1.0).contains(&rho));
+            prev = rho;
+        }
+        // Inverse: table(P(ρ)) ≈ ρ.
+        for i in 1..10 {
+            let rho = i as f64 / 10.0;
+            let p = scheme.collision_probability(rho, w);
+            assert!(
+                (table.rho(p) - rho).abs() < 5e-3,
+                "case {case} scheme {scheme:?} rho {rho}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_service_routing_invariants() {
+    use crp::coordinator::protocol::{Request, Response};
+    use crp::coordinator::server::{ServerConfig, ServiceState};
+    use crp::projection::{ProjectionConfig, Projector};
+    use std::sync::Arc;
+
+    let state = ServiceState::new(
+        Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 256,
+            seed: 2,
+            ..Default::default()
+        })),
+        &ServerConfig::default(),
+    );
+    let mut g = rng(1);
+    for case in 0..10 {
+        let v = rand_f32s(&mut g, 64, 1.0);
+        let w = rand_f32s(&mut g, 64, 1.0);
+        state.handle(Request::Register {
+            id: format!("a{case}"),
+            vector: v.clone(),
+        });
+        state.handle(Request::Register {
+            id: format!("b{case}"),
+            vector: w,
+        });
+        // Symmetry of estimates.
+        let ab = match state.handle(Request::Estimate {
+            a: format!("a{case}"),
+            b: format!("b{case}"),
+        }) {
+            Response::Estimate { rho, .. } => rho,
+            other => panic!("{other:?}"),
+        };
+        let ba = match state.handle(Request::Estimate {
+            a: format!("b{case}"),
+            b: format!("a{case}"),
+        }) {
+            Response::Estimate { rho, .. } => rho,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(ab, ba, "case {case}");
+        // Self-similarity: re-register the identical vector.
+        state.handle(Request::Register {
+            id: format!("a{case}-dup"),
+            vector: v,
+        });
+        let self_rho = match state.handle(Request::Estimate {
+            a: format!("a{case}"),
+            b: format!("a{case}-dup"),
+        }) {
+            Response::Estimate { rho, .. } => rho,
+            other => panic!("{other:?}"),
+        };
+        assert!(self_rho > 0.999, "case {case}: self rho {self_rho}");
+    }
+}
+
+#[test]
+fn prop_batched_equals_sequential() {
+    use crp::coordinator::batcher::{BatcherConfig, SketchBatcher};
+    use crp::coordinator::metrics::Metrics;
+    use crp::projection::{ProjectionConfig, Projector};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let cfg = ProjectionConfig {
+        k: 64,
+        seed: 8,
+        ..Default::default()
+    };
+    let direct_proj = Projector::new_cpu(cfg.clone());
+    let coding = CodingParams::new(Scheme::TwoBit, 0.75);
+    let batcher = SketchBatcher::spawn(
+        Arc::new(Projector::new_cpu(cfg)),
+        coding.clone(),
+        BatcherConfig {
+            max_batch: 7, // deliberately odd to force mixed batch sizes
+            max_delay: Duration::from_millis(4),
+            idle_flush: Duration::from_micros(500),
+        },
+        Arc::new(Metrics::default()),
+    );
+    let mut g = rng(7);
+    let vecs: Vec<Vec<f32>> = (0..23)
+        .map(|_| {
+            let n = 50 + g.next_below(100) as usize;
+            rand_f32s(&mut g, n, 1.0)
+        })
+        .collect();
+    // Concurrent submission (mixed into shared batches)...
+    let handles: Vec<_> = vecs
+        .iter()
+        .map(|v| {
+            let b = batcher.clone();
+            let v = v.clone();
+            std::thread::spawn(move || b.sketch(v).unwrap())
+        })
+        .collect();
+    let batched: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // ...must equal isolated projection + coding.
+    for (v, got) in vecs.iter().zip(&batched) {
+        let x = direct_proj.project_dense(v);
+        let want = pack_codes(&coding.encode(&x), coding.bits_per_code());
+        assert_eq!(*got, want);
+    }
+}
+
+#[test]
+fn prop_store_roundtrip_exact() {
+    use crp::coordinator::store::SketchStore;
+    let store = SketchStore::new();
+    let mut g = rng(3);
+    let mut originals = Vec::new();
+    for i in 0..200 {
+        let n = 1 + g.next_below(300) as usize;
+        let codes = rand_codes(&mut g, n, 4);
+        let packed = pack_codes(&codes, 2);
+        store.put(format!("id-{i}"), packed.clone());
+        originals.push((format!("id-{i}"), packed));
+    }
+    for (id, want) in &originals {
+        assert_eq!(store.get(id).as_ref(), Some(want));
+    }
+    assert_eq!(store.len(), 200);
+}
+
+#[test]
+fn prop_protocol_decode_never_panics_on_garbage() {
+    use crp::coordinator::protocol::{Request, Response};
+    let mut g = rng(99);
+    for case in 0..400 {
+        let n = g.next_below(200) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| g.next_below(256) as u8).collect();
+        // Must return Err or Ok — never panic.
+        let _ = Request::decode(&bytes);
+        let _ = Response::decode(&bytes);
+        // Truncations of valid messages must also be handled.
+        let valid = Request::Register {
+            id: format!("id-{case}"),
+            vector: vec![1.0; (case % 7) as usize],
+        }
+        .encode();
+        for cut in 0..valid.len() {
+            let _ = Request::decode(&valid[..cut]);
+        }
+    }
+}
+
+#[test]
+fn prop_snapshot_roundtrip_via_service() {
+    use crp::coordinator::persist::{load_store, save_store};
+    use crp::coordinator::protocol::{Request, Response};
+    use crp::coordinator::server::{ServerConfig, ServiceState};
+    use crp::projection::{ProjectionConfig, Projector};
+    use std::sync::Arc;
+
+    let cfg = ServerConfig::default();
+    let mk_state = || {
+        ServiceState::new(
+            Arc::new(Projector::new_cpu(ProjectionConfig {
+                k: 128,
+                seed: 4,
+                ..Default::default()
+            })),
+            &cfg,
+        )
+    };
+    let state = mk_state();
+    let mut g = rng(13);
+    for i in 0..40 {
+        let v = rand_f32s(&mut g, 64, 1.0);
+        state.handle(Request::Register {
+            id: format!("s{i}"),
+            vector: v,
+        });
+    }
+    let path = std::env::temp_dir().join(format!("crp_svc_snap_{}.bin", std::process::id()));
+    save_store(&state.store, &path).unwrap();
+    // Restore into a fresh service; estimates must be identical since
+    // the sketches (not the raw vectors) are the state.
+    let restored = ServiceState::with_snapshot(
+        Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 128,
+            seed: 4,
+            ..Default::default()
+        })),
+        &cfg,
+        &path,
+    )
+    .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(restored.store.len(), 40);
+    for (a, b) in [("s0", "s1"), ("s5", "s17"), ("s30", "s39")] {
+        let before = match state.handle(Request::Estimate {
+            a: a.into(),
+            b: b.into(),
+        }) {
+            Response::Estimate { rho, .. } => rho,
+            other => panic!("{other:?}"),
+        };
+        let after = match restored.handle(Request::Estimate {
+            a: a.into(),
+            b: b.into(),
+        }) {
+            Response::Estimate { rho, .. } => rho,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(before, after, "{a}/{b}");
+    }
+    // Sanity: load_store agrees on shape metadata.
+    let p2 = std::env::temp_dir().join(format!("crp_svc_snap2_{}.bin", std::process::id()));
+    save_store(&restored.store, &p2).unwrap();
+    let (_, k, bits) = load_store(&p2).unwrap();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(k, 128);
+    assert_eq!(bits, cfg.coding.bits_per_code());
+}
