@@ -1,0 +1,128 @@
+//! Scan-engine throughput: the arena + SWAR + top-k path against the
+//! seed's HashMap-walk Knn loop, at 10⁵ sketches of 1024 one-bit codes
+//! (the acceptance configuration) plus a 2-bit variant and batched
+//! fan-out. Set `SCAN_BENCH_LARGE=1` to add a 10⁶-sketch run.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use crp::coding::{collision_count_packed, PackedCodes};
+use crp::coordinator::SketchStore;
+use crp::mathx::Pcg64;
+use crp::scan::{scan_topk, scan_topk_batch, CodeArena};
+
+/// Random one-bit sketches are random words.
+fn random_sketch(g: &mut Pcg64, k: usize, bits: u32) -> PackedCodes {
+    let per_word = (64 / bits) as usize;
+    let n_words = k.div_ceil(per_word);
+    let mut words: Vec<u64> = (0..n_words).map(|_| g.next_u64()).collect();
+    // Zero the padding bits of the last word (packing invariant).
+    let rem = k % per_word;
+    if rem > 0 {
+        words[n_words - 1] &= (1u64 << (rem as u32 * bits)) - 1;
+    }
+    PackedCodes::from_words(bits, k, words)
+}
+
+struct Corpus {
+    store: SketchStore,
+    arena: CodeArena,
+    query: PackedCodes,
+}
+
+fn build(n: usize, k: usize, bits: u32, seed: u64) -> Corpus {
+    let mut g = Pcg64::new(seed, 0);
+    let store = SketchStore::new(); // map-only: the seed's layout
+    let mut arena = CodeArena::new(k, bits);
+    for i in 0..n {
+        let p = random_sketch(&mut g, k, bits);
+        arena.insert(&format!("{i:07}"), &p);
+        store.put(format!("{i:07}"), p);
+    }
+    let query = random_sketch(&mut g, k, bits);
+    Corpus {
+        store,
+        arena,
+        query,
+    }
+}
+
+/// The seed coordinator's Knn loop, verbatim: walk every shard, allocate
+/// an id per row, score pair-by-pair, full sort, truncate.
+fn seed_knn(c: &Corpus, top: usize) -> Vec<(String, usize)> {
+    let mut hits: Vec<(String, usize)> = Vec::new();
+    c.store.for_each(|id, codes| {
+        hits.push((id.to_string(), collision_count_packed(&c.query, codes)));
+    });
+    hits.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    hits.truncate(top);
+    hits
+}
+
+/// Median seconds per call over `samples` timed calls.
+fn median_secs<F: FnMut()>(samples: usize, mut f: F) -> f64 {
+    let mut times: Vec<f64> = (0..samples)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let (n, k) = (100_000usize, 1024usize);
+    let c1 = build(n, k, 1, 42);
+
+    b.run("scan/seed-hashmap-knn10/100k-1bit-1024", n as u64, || {
+        std::hint::black_box(seed_knn(&c1, 10));
+    });
+    b.run("scan/arena-serial-top10/100k-1bit-1024", n as u64, || {
+        std::hint::black_box(scan_topk(&c1.arena, &c1.query, 10, 1));
+    });
+    b.run("scan/arena-parallel-top10/100k-1bit-1024", n as u64, || {
+        std::hint::black_box(scan_topk(&c1.arena, &c1.query, 10, 0));
+    });
+
+    // Batched fan-out: 16 queries answered in one call.
+    let mut g = Pcg64::new(7, 7);
+    let queries: Vec<PackedCodes> = (0..16).map(|_| random_sketch(&mut g, k, 1)).collect();
+    b.run("scan/arena-batch16-top10/100k-1bit-1024", (16 * n) as u64, || {
+        std::hint::black_box(scan_topk_batch(&c1.arena, &queries, 10, 0));
+    });
+
+    // The acceptance headline: arena scan vs the seed loop.
+    let seed_s = median_secs(5, || {
+        std::hint::black_box(seed_knn(&c1, 10));
+    });
+    let scan_s = median_secs(5, || {
+        std::hint::black_box(scan_topk(&c1.arena, &c1.query, 10, 0));
+    });
+    println!(
+        "\nscan speedup over seed HashMap Knn loop (100k x 1024 one-bit): {:.1}x",
+        seed_s / scan_s
+    );
+
+    // 2-bit codes — the paper's recommended scheme for estimation.
+    let c2 = build(50_000, k, 2, 43);
+    b.run("scan/seed-hashmap-knn10/50k-2bit-1024", 50_000, || {
+        std::hint::black_box(seed_knn(&c2, 10));
+    });
+    b.run("scan/arena-parallel-top10/50k-2bit-1024", 50_000, || {
+        std::hint::black_box(scan_topk(&c2.arena, &c2.query, 10, 0));
+    });
+
+    if std::env::var("SCAN_BENCH_LARGE").is_ok() {
+        let c3 = build(1_000_000, k, 1, 44);
+        b.run("scan/arena-parallel-top10/1m-1bit-1024", 1_000_000, || {
+            std::hint::black_box(scan_topk(&c3.arena, &c3.query, 10, 0));
+        });
+    }
+
+    b.finish();
+}

@@ -15,5 +15,7 @@ pub mod packing;
 pub mod expand;
 
 pub use expand::{expand_to_sparse, expanded_dim};
-pub use packing::{collision_count, collision_count_packed, pack_codes, unpack_codes, PackedCodes};
+pub use packing::{
+    collision_count, collision_count_packed, pack_codes, supported_width, unpack_codes, PackedCodes,
+};
 pub use schemes::{CodingParams, Scheme};

@@ -17,6 +17,10 @@ pub struct PackedCodes {
     pub bits: u32,
     /// Number of codes.
     pub len: usize,
+    /// Codes per word (`64 / bits`), hoisted so `get` stays division-free.
+    per_word: usize,
+    /// Per-code mask (`(1 << bits) - 1`), hoisted likewise.
+    mask: u64,
     words: Vec<u64>,
 }
 
@@ -36,7 +40,8 @@ pub fn pack_codes(codes: &[u16], bits: u32) -> PackedCodes {
     let bits = supported_width(bits);
     let per_word = (64 / bits) as usize;
     let n_words = codes.len().div_ceil(per_word);
-    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    // `supported_width` caps widths at 16, so the shift never overflows.
+    let mask = (1u64 << bits) - 1;
     let mut words = vec![0u64; n_words];
     for (i, &c) in codes.iter().enumerate() {
         debug_assert!(
@@ -50,23 +55,40 @@ pub fn pack_codes(codes: &[u16], bits: u32) -> PackedCodes {
     PackedCodes {
         bits,
         len: codes.len(),
+        per_word,
+        mask,
         words,
     }
 }
 
 /// Unpack back to a `u16` vector.
 pub fn unpack_codes(p: &PackedCodes) -> Vec<u16> {
-    let per_word = (64 / p.bits) as usize;
-    let mask = (1u64 << p.bits) - 1;
-    (0..p.len)
-        .map(|i| {
-            let w = p.words[i / per_word];
-            ((w >> ((i % per_word) as u32 * p.bits)) & mask) as u16
-        })
-        .collect()
+    (0..p.len).map(|i| p.get(i)).collect()
 }
 
 impl PackedCodes {
+    /// Reassemble packed codes from raw storage words (e.g. rows of a
+    /// [`crate::scan::CodeArena`] or a snapshot). `bits` must already be
+    /// a supported width and `words` must hold exactly
+    /// `len.div_ceil(64 / bits)` words with all padding bits zero (as
+    /// produced by [`pack_codes`]).
+    pub fn from_words(bits: u32, len: usize, words: Vec<u64>) -> PackedCodes {
+        assert_eq!(bits, supported_width(bits), "unsupported width {bits}");
+        let per_word = (64 / bits) as usize;
+        assert_eq!(
+            words.len(),
+            len.div_ceil(per_word),
+            "word count does not match len={len} at {bits} bits"
+        );
+        PackedCodes {
+            bits,
+            len,
+            per_word,
+            mask: (1u64 << bits) - 1,
+            words,
+        }
+    }
+
     /// Raw words (e.g. for hashing into LSH buckets).
     pub fn words(&self) -> &[u64] {
         &self.words
@@ -75,9 +97,8 @@ impl PackedCodes {
     /// Extract the code at position `i`.
     #[inline]
     pub fn get(&self, i: usize) -> u16 {
-        let per_word = (64 / self.bits) as usize;
-        let mask = (1u64 << self.bits) - 1;
-        ((self.words[i / per_word] >> ((i % per_word) as u32 * self.bits)) & mask) as u16
+        ((self.words[i / self.per_word] >> ((i % self.per_word) as u32 * self.bits)) & self.mask)
+            as u16
     }
 
     /// Storage bytes used.
@@ -232,6 +253,23 @@ mod tests {
         let p = pack_codes(&a, 2);
         assert_eq!(p.storage_bytes(), 64);
         // vs 1 KiB for f32 storage of the raw projections.
+    }
+
+    #[test]
+    fn from_words_rebuilds_exactly() {
+        for &(bits, card) in &[(1u32, 2u16), (2, 4), (4, 16), (16, 5000)] {
+            let codes = random_codes(130, card, 11 + bits as u64);
+            let p = pack_codes(&codes, bits);
+            let q = PackedCodes::from_words(bits, p.len, p.words().to_vec());
+            assert_eq!(p, q);
+            assert_eq!(unpack_codes(&q), codes);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "word count")]
+    fn from_words_rejects_bad_word_count() {
+        PackedCodes::from_words(2, 100, vec![0u64; 1]);
     }
 
     #[test]

@@ -81,6 +81,14 @@ impl SketchClient {
         }
     }
 
+    /// Batched top-k: one result list per query vector, in order.
+    pub fn topk(&mut self, vectors: Vec<Vec<f32>>, n: u32) -> crate::Result<Vec<Vec<KnnHit>>> {
+        match self.call(&Request::TopK { vectors, n })? {
+            Response::TopK { results } => Ok(results),
+            other => Err(Self::bail(other)),
+        }
+    }
+
     pub fn stats(&mut self) -> crate::Result<StatsSnapshot> {
         match self.call(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
@@ -123,11 +131,14 @@ mod tests {
         c.register("v", v).unwrap();
         let (rho, err) = c.estimate("u", "v").unwrap();
         assert!((rho - 0.8).abs() < 4.0 * err + 0.05, "rho {rho} err {err}");
-        let hits = c.knn(u, 2).unwrap();
+        let hits = c.knn(u.clone(), 2).unwrap();
         assert_eq!(hits[0].id, "u"); // itself
+        let results = c.topk(vec![u], 2).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0], hits);
         let stats = c.stats().unwrap();
         assert_eq!(stats.registered, 2);
-        assert_eq!(stats.knn_queries, 1);
+        assert_eq!(stats.knn_queries, 2);
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //!             ├── batcher — groups projection work into (b_tile)-sized
 //!             │             batches with a deadline, executes on the
 //!             │             Projector (PJRT artifact or pure Rust)
-//!             ├── store   — sharded map: id → PackedCodes
+//!             ├── store   — sharded map: id → PackedCodes, mirrored
+//!             │             into a columnar scan arena (crate::scan)
+//!             │             that serves Knn/TopK as sequential sweeps
 //!             └── metrics — counters + latency histograms
 //! ```
 //!

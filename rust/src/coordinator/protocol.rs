@@ -23,6 +23,9 @@ pub enum Request {
     EstimateVec { id: String, vector: Vec<f32> },
     /// Top-n most similar registered ids to the query vector.
     Knn { vector: Vec<f32>, n: u32 },
+    /// Batched top-n: one scan fan-out over the code arena per query
+    /// vector, answered in request order.
+    TopK { vectors: Vec<Vec<f32>>, n: u32 },
     /// Service statistics.
     Stats,
     /// Health check.
@@ -35,6 +38,7 @@ pub enum Response {
     Registered { id: String },
     Estimate { rho: f64, std_err: f64, p_hat: f64 },
     Knn { hits: Vec<KnnHit> },
+    TopK { results: Vec<Vec<KnnHit>> },
     Stats(StatsSnapshot),
     Pong,
     Error { message: String },
@@ -163,6 +167,15 @@ impl Request {
             }
             Request::Stats => Enc::new(4).0,
             Request::Ping => Enc::new(5).0,
+            Request::TopK { vectors, n } => {
+                let mut e = Enc::new(6);
+                e.u32(vectors.len() as u32);
+                for v in vectors {
+                    e.f32s(v);
+                }
+                e.u32(*n);
+                e.0
+            }
         }
     }
 
@@ -188,6 +201,18 @@ impl Request {
             },
             4 => Request::Stats,
             5 => Request::Ping,
+            6 => {
+                let n_vecs = d.u32()? as usize;
+                anyhow::ensure!(n_vecs * 4 <= buf.len(), "bad batch size");
+                let mut vectors = Vec::with_capacity(n_vecs);
+                for _ in 0..n_vecs {
+                    vectors.push(d.f32s()?);
+                }
+                Request::TopK {
+                    vectors,
+                    n: d.u32()?,
+                }
+            }
             t => anyhow::bail!("unknown request tag {t}"),
         };
         d.done()?;
@@ -241,6 +266,18 @@ impl Response {
                 e.str(message);
                 e.0
             }
+            Response::TopK { results } => {
+                let mut e = Enc::new(6);
+                e.u32(results.len() as u32);
+                for hits in results {
+                    e.u32(hits.len() as u32);
+                    for h in hits {
+                        e.str(&h.id);
+                        e.f64(h.rho);
+                    }
+                }
+                e.0
+            }
         }
     }
 
@@ -277,6 +314,24 @@ impl Response {
             }),
             4 => Response::Pong,
             5 => Response::Error { message: d.str()? },
+            6 => {
+                let n_results = d.u32()? as usize;
+                anyhow::ensure!(n_results * 4 <= buf.len(), "bad result count");
+                let mut results = Vec::with_capacity(n_results);
+                for _ in 0..n_results {
+                    let n_hits = d.u32()? as usize;
+                    anyhow::ensure!(n_hits * 12 <= buf.len(), "bad hit count");
+                    let mut hits = Vec::with_capacity(n_hits);
+                    for _ in 0..n_hits {
+                        hits.push(KnnHit {
+                            id: d.str()?,
+                            rho: d.f64()?,
+                        });
+                    }
+                    results.push(hits);
+                }
+                Response::TopK { results }
+            }
             t => anyhow::bail!("unknown response tag {t}"),
         };
         d.done()?;
@@ -340,6 +395,14 @@ mod tests {
             vector: vec![1.0; 100],
             n: 5,
         });
+        roundtrip_req(Request::TopK {
+            vectors: vec![vec![0.5; 16], vec![], vec![-1.0, 2.0]],
+            n: 7,
+        });
+        roundtrip_req(Request::TopK {
+            vectors: vec![],
+            n: 0,
+        });
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Ping);
     }
@@ -362,6 +425,21 @@ mod tests {
                     id: "b".into(),
                     rho: 0.1,
                 },
+            ],
+        });
+        roundtrip_resp(Response::TopK {
+            results: vec![
+                vec![
+                    KnnHit {
+                        id: "x".into(),
+                        rho: 0.99,
+                    },
+                    KnnHit {
+                        id: "y".into(),
+                        rho: 0.42,
+                    },
+                ],
+                vec![],
             ],
         });
         roundtrip_resp(Response::Stats(StatsSnapshot {

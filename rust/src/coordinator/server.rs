@@ -4,13 +4,14 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coding::CodingParams;
+use crate::coding::{CodingParams, PackedCodes};
 use crate::coordinator::batcher::{BatcherConfig, SketchBatcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::{self, KnnHit, Request, Response};
 use crate::coordinator::store::SketchStore;
 use crate::estimator::CollisionEstimator;
 use crate::projection::Projector;
+use crate::scan::{scan_topk, scan_topk_batch};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -50,7 +51,8 @@ impl ServiceState {
         );
         let k = batcher.k;
         Arc::new(ServiceState {
-            store: SketchStore::new(),
+            // Arena-backed: Knn/TopK run as columnar scans, not map walks.
+            store: SketchStore::with_arena(k, cfg.coding.bits_per_code()),
             estimator: CollisionEstimator::new(cfg.coding.clone()),
             batcher,
             metrics,
@@ -69,11 +71,14 @@ impl ServiceState {
         let state = Self::new(projector, cfg);
         if snapshot.is_file() {
             let (store, k, bits) = crate::coordinator::persist::load_store(snapshot)?;
+            // Stored sketches carry the width-rounded packing bits, so
+            // compare against the rounded width, not the raw bit count.
+            let want_bits = crate::coding::supported_width(cfg.coding.bits_per_code());
             anyhow::ensure!(
-                store.is_empty() || (k == state.k && bits == cfg.coding.bits_per_code()),
+                store.is_empty() || (k == state.k && bits == want_bits),
                 "snapshot shape (k={k}, bits={bits}) does not match service                  (k={}, bits={})",
                 state.k,
-                cfg.coding.bits_per_code()
+                want_bits
             );
             let mut n = 0u64;
             store.for_each(|id, codes| {
@@ -100,6 +105,30 @@ impl ServiceState {
             std_err: (v / self.k as f64).sqrt(),
             p_hat: collisions as f64 / self.k as f64,
         }
+    }
+
+    /// Map scan results to wire hits (ρ̂ from the collision count).
+    fn to_knn_hits(&self, hits: Vec<crate::scan::ScanHit>) -> Vec<KnnHit> {
+        hits.into_iter()
+            .map(|h| KnnHit {
+                id: h.id,
+                rho: self.estimator.estimate_from_count(h.collisions, self.k),
+            })
+            .collect()
+    }
+
+    /// Exact top-`n` hits for one query sketch, ranked
+    /// `(collisions desc, id asc)`. The service store is always
+    /// arena-backed (both constructors build it that way), so the scan
+    /// engine is the one authoritative ranking path.
+    fn topk_hits(&self, q: &PackedCodes, n: usize) -> Vec<KnnHit> {
+        let arena = self
+            .store
+            .arena()
+            .expect("service store is arena-backed")
+            .read()
+            .unwrap();
+        self.to_knn_hits(scan_topk(&arena, q, n, 0))
     }
 
     /// Handle one request (the router).
@@ -167,27 +196,41 @@ impl ServiceState {
                     self.metrics
                         .knn_queries
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let mut hits: Vec<(String, usize)> = Vec::new();
-                    self.store.for_each(|id, codes| {
-                        let c = crate::coding::collision_count_packed(&q, codes);
-                        hits.push((id.to_string(), c));
-                    });
-                    hits.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
-                    hits.truncate(n as usize);
                     Response::Knn {
-                        hits: hits
-                            .into_iter()
-                            .map(|(id, c)| KnnHit {
-                                id,
-                                rho: self.estimator.estimate_from_count(c, self.k),
-                            })
-                            .collect(),
+                        hits: self.topk_hits(&q, n as usize),
                     }
                 }
                 Err(e) => Response::Error {
                     message: format!("sketch failed: {e}"),
                 },
             },
+            Request::TopK { vectors, n } => {
+                let mut queries = Vec::with_capacity(vectors.len());
+                for vector in vectors {
+                    match self.batcher.sketch(vector) {
+                        Ok(q) => queries.push(q),
+                        Err(e) => {
+                            return Response::Error {
+                                message: format!("sketch failed: {e}"),
+                            }
+                        }
+                    }
+                }
+                self.metrics
+                    .knn_queries
+                    .fetch_add(queries.len() as u64, std::sync::atomic::Ordering::Relaxed);
+                let arena = self
+                    .store
+                    .arena()
+                    .expect("service store is arena-backed")
+                    .read()
+                    .unwrap();
+                let results = scan_topk_batch(&arena, &queries, n as usize, 0)
+                    .into_iter()
+                    .map(|hits| self.to_knn_hits(hits))
+                    .collect();
+                Response::TopK { results }
+            }
         }
     }
 }
@@ -313,6 +356,77 @@ mod tests {
                 assert!(hits[0].rho > hits[1].rho);
             }
             other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn knn_scan_is_byte_identical_to_bruteforce() {
+        let s = state(256);
+        let mut g = crate::mathx::Pcg64::new(77, 0);
+        for i in 0..60 {
+            let v: Vec<f32> = (0..48).map(|_| g.next_f64() as f32 - 0.5).collect();
+            s.handle(Request::Register {
+                id: format!("v{i:02}"),
+                vector: v,
+            });
+        }
+        let q: Vec<f32> = (0..48).map(|_| g.next_f64() as f32 - 0.5).collect();
+        // Register the query too: the batcher is deterministic, so its
+        // stored sketch equals the sketch Knn computes internally.
+        s.handle(Request::Register {
+            id: "query".into(),
+            vector: q.clone(),
+        });
+        let qs = s.store.get("query").unwrap();
+        let mut want: Vec<(String, usize)> = Vec::new();
+        s.store.for_each(|id, codes| {
+            want.push((
+                id.to_string(),
+                crate::coding::collision_count_packed(&qs, codes),
+            ));
+        });
+        want.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        want.truncate(10);
+        match s.handle(Request::Knn { vector: q, n: 10 }) {
+            Response::Knn { hits } => {
+                assert_eq!(hits.len(), 10);
+                assert_eq!(hits[0].id, "query");
+                for (hit, (id, c)) in hits.iter().zip(&want) {
+                    assert_eq!(&hit.id, id);
+                    assert_eq!(hit.rho, s.estimator.estimate_from_count(*c, s.k));
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn topk_batch_matches_per_query_knn() {
+        let s = state(128);
+        let mut g = crate::mathx::Pcg64::new(5, 5);
+        for i in 0..40 {
+            let v: Vec<f32> = (0..32).map(|_| g.next_f64() as f32 - 0.5).collect();
+            s.handle(Request::Register {
+                id: format!("c{i}"),
+                vector: v,
+            });
+        }
+        let queries: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..32).map(|_| g.next_f64() as f32 - 0.5).collect())
+            .collect();
+        let batched = match s.handle(Request::TopK {
+            vectors: queries.clone(),
+            n: 3,
+        }) {
+            Response::TopK { results } => results,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(batched.len(), queries.len());
+        for (q, want) in queries.into_iter().zip(&batched) {
+            match s.handle(Request::Knn { vector: q, n: 3 }) {
+                Response::Knn { hits } => assert_eq!(&hits, want),
+                other => panic!("unexpected {other:?}"),
+            }
         }
     }
 

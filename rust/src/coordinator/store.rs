@@ -1,11 +1,22 @@
 //! Sharded sketch store: `id → PackedCodes`. Only the coded sketches
 //! live here — raw vectors are dropped after projection, which is the
 //! paper's storage-compression story in operational form.
+//!
+//! Two storage modes:
+//!
+//! * **Map-only** ([`SketchStore::new`]) — the sharded `HashMap` alone;
+//!   sketches of any shape.
+//! * **Arena-backed** ([`SketchStore::with_arena`]) — every put/remove is
+//!   mirrored into a columnar [`CodeArena`] so `Knn`/`TopK` queries run
+//!   as sequential scans ([`crate::scan`]) instead of pointer-chasing the
+//!   map. All sketches must then share one `(k, bits)` shape.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::RwLock;
 
 use crate::coding::PackedCodes;
+use crate::scan::CodeArena;
 
 const N_SHARDS: usize = 16;
 
@@ -13,6 +24,11 @@ const N_SHARDS: usize = 16;
 #[derive(Debug)]
 pub struct SketchStore {
     shards: Vec<RwLock<HashMap<String, PackedCodes>>>,
+    /// Live sketch count, maintained on put/remove so `len` never has to
+    /// sweep all shard locks (it sits on the metrics path).
+    count: AtomicUsize,
+    /// Columnar mirror for the scan engine (arena-backed mode only).
+    arena: Option<RwLock<CodeArena>>,
 }
 
 impl Default for SketchStore {
@@ -22,10 +38,30 @@ impl Default for SketchStore {
 }
 
 impl SketchStore {
+    /// Map-only store.
     pub fn new() -> Self {
         SketchStore {
             shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            count: AtomicUsize::new(0),
+            arena: None,
         }
+    }
+
+    /// Arena-backed store for sketches of `k` codes at `bits` per code
+    /// (rounded up to a supported packing width). Every sketch put into
+    /// this store must match that shape.
+    pub fn with_arena(k: usize, bits: u32) -> Self {
+        let mut s = Self::new();
+        s.arena = Some(RwLock::new(CodeArena::new(k, bits)));
+        s
+    }
+
+    /// The columnar mirror, when in arena-backed mode. Writers (`put`,
+    /// `remove`) take the arena lock *before* any shard lock, so it is
+    /// safe to call this store's read methods while holding the arena
+    /// read lock; do not call `put`/`remove` while holding it.
+    pub fn arena(&self) -> Option<&RwLock<CodeArena>> {
+        self.arena.as_ref()
     }
 
     fn shard(&self, id: &str) -> &RwLock<HashMap<String, PackedCodes>> {
@@ -39,7 +75,19 @@ impl SketchStore {
 
     /// Insert or replace a sketch.
     pub fn put(&self, id: String, codes: PackedCodes) {
-        self.shard(&id).write().unwrap().insert(id, codes);
+        // Lock order: arena (outer) before shard (inner). Shard locks
+        // are only ever written under the arena write lock, so a caller
+        // holding the arena *read* lock (from [`SketchStore::arena`])
+        // may safely call any read method here without deadlocking, and
+        // the two views stay consistent under concurrent writers.
+        let mut arena_guard = self.arena.as_ref().map(|a| a.write().unwrap());
+        let mut guard = self.shard(&id).write().unwrap();
+        if let Some(arena) = arena_guard.as_deref_mut() {
+            arena.insert(&id, &codes);
+        }
+        if guard.insert(id, codes).is_none() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Fetch a clone of a sketch.
@@ -52,11 +100,22 @@ impl SketchStore {
     }
 
     pub fn remove(&self, id: &str) -> bool {
-        self.shard(id).write().unwrap().remove(id).is_some()
+        // Same lock order as `put`: arena before shard.
+        let mut arena_guard = self.arena.as_ref().map(|a| a.write().unwrap());
+        let mut guard = self.shard(id).write().unwrap();
+        if let Some(arena) = arena_guard.as_deref_mut() {
+            arena.remove(id);
+        }
+        let removed = guard.remove(id).is_some();
+        if removed {
+            self.count.fetch_sub(1, Ordering::Relaxed);
+        }
+        removed
     }
 
+    /// Live sketch count (lock-free; one atomic load).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.count.load(Ordering::Relaxed)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -146,5 +205,47 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(s.len(), 400);
+    }
+
+    #[test]
+    fn arena_mode_mirrors_map() {
+        let s = SketchStore::with_arena(64, 2);
+        for i in 0..30 {
+            s.put(format!("id{i}"), sketch(i));
+        }
+        s.put("id7".into(), sketch(99)); // overwrite
+        assert!(s.remove("id3"));
+        assert_eq!(s.len(), 29);
+        let arena = s.arena().unwrap().read().unwrap();
+        assert_eq!(arena.len(), 29);
+        assert_eq!(arena.get("id7").unwrap(), sketch(99));
+        assert!(arena.get("id3").is_none());
+        for i in [0u16, 1, 2, 4, 5, 28, 29] {
+            assert_eq!(arena.get(&format!("id{i}")), s.get(&format!("id{i}")));
+        }
+    }
+
+    #[test]
+    fn concurrent_arena_mode_stays_consistent() {
+        use std::sync::Arc;
+        let s = Arc::new(SketchStore::with_arena(64, 2));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..40 {
+                    s.put(format!("t{t}-{i}"), sketch(i));
+                }
+                for i in (0..40).step_by(3) {
+                    s.remove(&format!("t{t}-{i}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let live = 4 * (40 - 14);
+        assert_eq!(s.len(), live);
+        assert_eq!(s.arena().unwrap().read().unwrap().len(), live);
     }
 }

@@ -28,8 +28,10 @@
 //! * **Layer 3 (this crate)** — the runtime system. [`runtime`] loads the
 //!   AOT artifacts via PJRT; [`projection`] tiles arbitrary workloads onto
 //!   the fixed artifact shapes; [`coordinator`] serves sketch/similarity
-//!   requests over TCP with dynamic batching. Python never runs on the
-//!   request path.
+//!   requests over TCP with dynamic batching; [`scan`] answers `Knn` and
+//!   batched `TopK` queries with a columnar code arena swept by SWAR
+//!   collision kernels into an exact top-k selection, sharded across
+//!   threads. Python never runs on the request path.
 //!
 //! ## Analysis stack
 //!
@@ -72,6 +74,7 @@ pub mod estimator;
 pub mod data;
 pub mod svm;
 pub mod lsh;
+pub mod scan;
 pub mod coordinator;
 pub mod figures;
 

@@ -1,8 +1,11 @@
 //! Multi-table LSH index over coded random projections.
 
 use super::table::LshTable;
-use crate::coding::CodingParams;
+use crate::coding::{pack_codes, CodingParams};
+use crate::estimator::CollisionEstimator;
 use crate::projection::{ProjectionConfig, Projector};
+use crate::scan::kernels::collisions_words;
+use crate::scan::{CodeArena, TopK};
 
 /// Index parameters.
 #[derive(Clone, Debug)]
@@ -35,6 +38,13 @@ pub struct LshIndex {
     tables: Vec<LshTable>,
     /// Stored vectors (dense), for exact re-ranking of candidates.
     data: Vec<Vec<f32>>,
+    /// Full-resolution packed sketches — every table's codes
+    /// concatenated — in a columnar arena (row = insertion id), for
+    /// code-only candidate re-ranking through the scan kernels.
+    sketches: CodeArena,
+    /// Collision-rate inverter over the `n_tables · k_per_table`
+    /// concatenated projections.
+    est: CollisionEstimator,
 }
 
 impl LshIndex {
@@ -49,11 +59,18 @@ impl LshIndex {
             })
             .collect();
         let tables = (0..params.n_tables).map(|_| LshTable::new()).collect();
+        let sketches = CodeArena::new(
+            params.n_tables * params.k_per_table,
+            params.coding.bits_per_code(),
+        );
+        let est = CollisionEstimator::new(params.coding.clone());
         LshIndex {
             params,
             projectors,
             tables,
             data: Vec::new(),
+            sketches,
+            est,
         }
     }
 
@@ -74,10 +91,14 @@ impl LshIndex {
     /// Insert a vector; returns its id.
     pub fn insert(&mut self, v: &[f32]) -> u32 {
         let id = self.data.len() as u32;
+        let mut all = Vec::with_capacity(self.params.n_tables * self.params.k_per_table);
         for t in 0..self.params.n_tables {
             let codes = self.codes_for(t, v);
             self.tables[t].insert(&codes, id);
+            all.extend(codes);
         }
+        let sketch = pack_codes(&all, self.params.coding.bits_per_code());
+        self.sketches.insert(&format!("{id:08}"), &sketch);
         self.data.push(v.to_vec());
         id
     }
@@ -91,11 +112,13 @@ impl LshIndex {
         self.data.is_empty()
     }
 
-    /// Candidate ids across all tables (deduplicated), plus the number
-    /// of bucket probes performed.
-    pub fn candidates(&self, q: &[f32]) -> (Vec<u32>, usize) {
+    /// One projection pass over all tables: deduplicated candidate ids
+    /// plus the query's concatenated codes (the same per-table codes
+    /// both probe the buckets and form the full-resolution sketch).
+    fn probe_with_codes(&self, q: &[f32]) -> (Vec<u32>, Vec<u16>) {
         let mut seen = std::collections::HashSet::new();
         let mut out = Vec::new();
+        let mut all = Vec::with_capacity(self.params.n_tables * self.params.k_per_table);
         for t in 0..self.params.n_tables {
             let codes = self.codes_for(t, q);
             for &id in self.tables[t].probe(&codes) {
@@ -103,8 +126,15 @@ impl LshIndex {
                     out.push(id);
                 }
             }
+            all.extend(codes);
         }
-        (out, self.params.n_tables)
+        (out, all)
+    }
+
+    /// Candidate ids across all tables (deduplicated), plus the number
+    /// of bucket probes performed.
+    pub fn candidates(&self, q: &[f32]) -> (Vec<u32>, usize) {
+        (self.probe_with_codes(q).0, self.params.n_tables)
     }
 
     /// Top-`n` near neighbors by exact cosine over the candidate set.
@@ -118,6 +148,37 @@ impl LshIndex {
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         scored.truncate(n);
         scored
+    }
+
+    /// Top-`n` near neighbors by **coded** re-ranking: candidates from
+    /// the tables, scored by collision count between full-resolution
+    /// packed sketches (scan kernels over the arena rows) and inverted
+    /// to ρ̂ — no dense vector is touched after insert. Returns
+    /// `(id, rho_hat)` ordered `(collisions desc, id asc)`.
+    pub fn query_coded(&self, q: &[f32], n: usize) -> Vec<(u32, f64)> {
+        use std::fmt::Write as _;
+        let rank_k = self.params.n_tables * self.params.k_per_table;
+        let (cands, all) = self.probe_with_codes(q);
+        let query = pack_codes(&all, self.params.coding.bits_per_code());
+        let mut top = TopK::new(n);
+        // One reused buffer for the zero-padded tie-break key; `offer`
+        // clones it only for candidates that enter the selection.
+        let mut row_id = String::with_capacity(8);
+        for id in cands {
+            row_id.clear();
+            let _ = write!(row_id, "{id:08}");
+            let c = collisions_words(
+                self.sketches.bits(),
+                rank_k,
+                query.words(),
+                self.sketches.row_words(id),
+            );
+            top.offer(id, &row_id, c);
+        }
+        top.into_sorted()
+            .into_iter()
+            .map(|e| (e.row, self.est.estimate_from_count(e.collisions, rank_k)))
+            .collect()
     }
 
     /// Exact (brute-force) top-`n`, for recall evaluation.
@@ -220,6 +281,59 @@ mod tests {
             "no pruning: {} candidates of 300",
             cands.len()
         );
+    }
+
+    #[test]
+    fn coded_rerank_finds_exact_duplicate() {
+        let mut idx = LshIndex::new(LshParams::default());
+        let d = 64;
+        for s in 0..60 {
+            idx.insert(&random_unit(d, 4000 + s));
+        }
+        let target = random_unit(d, 4011);
+        let hits = idx.query_coded(&target, 3);
+        assert_eq!(hits[0].0, 11);
+        assert!(hits[0].1 > 0.95, "rho {}", hits[0].1);
+    }
+
+    #[test]
+    fn coded_rerank_matches_bruteforce_over_candidates() {
+        let mut idx = LshIndex::new(LshParams {
+            n_tables: 6,
+            k_per_table: 5,
+            ..Default::default()
+        });
+        let d = 48;
+        for s in 0..120 {
+            idx.insert(&random_unit(d, 5000 + s));
+        }
+        let rank_k = idx.params.n_tables * idx.params.k_per_table;
+        for qs in 0..5 {
+            let q = random_unit(d, 5000 + qs * 17);
+            let got = idx.query_coded(&q, 8);
+            // Brute force over the same candidate set with the packed
+            // per-pair counter — identical ranking and identical ρ̂.
+            let mut qcodes = Vec::new();
+            for t in 0..idx.params.n_tables {
+                qcodes.extend(idx.codes_for(t, &q));
+            }
+            let query = pack_codes(&qcodes, idx.params.coding.bits_per_code());
+            let (cands, _) = idx.candidates(&q);
+            let mut want: Vec<(u32, usize)> = cands
+                .into_iter()
+                .map(|id| {
+                    let stored = idx.sketches.get(&format!("{id:08}")).unwrap();
+                    (id, crate::coding::collision_count_packed(&query, &stored))
+                })
+                .collect();
+            want.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+            want.truncate(8);
+            assert_eq!(got.len(), want.len(), "query {qs}");
+            for ((gid, grho), (wid, wc)) in got.iter().zip(&want) {
+                assert_eq!(gid, wid, "query {qs}");
+                assert_eq!(*grho, idx.est.estimate_from_count(*wc, rank_k));
+            }
+        }
     }
 
     #[test]

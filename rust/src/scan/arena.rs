@@ -1,0 +1,252 @@
+//! Columnar code arena: every sketch of one coding configuration stored
+//! contiguously at a fixed word stride.
+//!
+//! Rows are append-only `u32` indices into one flat `Vec<u64>`; a scan is
+//! a pure sequential sweep with no per-row allocation or pointer chase.
+//! Deletes tombstone the row (id cleared, words zeroed) and are reclaimed
+//! by [`CodeArena::compact`], which remaps surviving rows downward while
+//! preserving insertion order.
+
+use std::collections::HashMap;
+
+use crate::coding::{supported_width, PackedCodes};
+
+/// Dense word-major storage for fixed-shape packed sketches.
+#[derive(Debug)]
+pub struct CodeArena {
+    /// Codes per sketch.
+    k: usize,
+    /// Bit width per code (a supported packing width).
+    bits: u32,
+    /// `u64` words per row (`k.div_ceil(64 / bits)`).
+    stride: usize,
+    /// Row-major storage, `rows.len() * stride` words.
+    words: Vec<u64>,
+    /// Row → id; `None` marks a tombstone.
+    ids: Vec<Option<String>>,
+    /// Id → row.
+    rows: HashMap<String, u32>,
+}
+
+impl CodeArena {
+    /// An arena for sketches of `k` codes at `bits` per code (rounded up
+    /// to a supported packing width).
+    pub fn new(k: usize, bits: u32) -> Self {
+        let bits = supported_width(bits);
+        let per_word = (64 / bits) as usize;
+        CodeArena {
+            k,
+            bits,
+            stride: k.div_ceil(per_word),
+            words: Vec::new(),
+            ids: Vec::new(),
+            rows: HashMap::new(),
+        }
+    }
+
+    /// Codes per sketch.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bit width per code.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Words per row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Number of live (non-tombstoned) sketches.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Rows allocated, including tombstones — the scan range.
+    pub fn rows_allocated(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Tombstoned rows awaiting [`CodeArena::compact`].
+    pub fn tombstones(&self) -> usize {
+        self.ids.len() - self.rows.len()
+    }
+
+    /// Bytes of packed sketch storage.
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Insert or replace the sketch for `id`; returns its row. The codes
+    /// must match the arena shape exactly.
+    pub fn insert(&mut self, id: &str, codes: &PackedCodes) -> u32 {
+        assert_eq!(codes.len, self.k, "sketch length mismatch");
+        assert_eq!(codes.bits, self.bits, "sketch bit width mismatch");
+        debug_assert_eq!(codes.words().len(), self.stride);
+        let row = match self.rows.get(id) {
+            Some(&row) => row,
+            None => {
+                let row = self.ids.len() as u32;
+                self.ids.push(Some(id.to_string()));
+                self.words.resize(self.words.len() + self.stride, 0);
+                self.rows.insert(id.to_string(), row);
+                row
+            }
+        };
+        let start = row as usize * self.stride;
+        self.words[start..start + self.stride].copy_from_slice(codes.words());
+        row
+    }
+
+    /// Tombstone the sketch for `id`. Returns whether it was present.
+    pub fn remove(&mut self, id: &str) -> bool {
+        let Some(row) = self.rows.remove(id) else {
+            return false;
+        };
+        self.ids[row as usize] = None;
+        let start = row as usize * self.stride;
+        self.words[start..start + self.stride].fill(0);
+        true
+    }
+
+    /// Clone out the sketch for `id`.
+    pub fn get(&self, id: &str) -> Option<PackedCodes> {
+        let &row = self.rows.get(id)?;
+        let start = row as usize * self.stride;
+        Some(PackedCodes::from_words(
+            self.bits,
+            self.k,
+            self.words[start..start + self.stride].to_vec(),
+        ))
+    }
+
+    /// Row index for `id`, if live.
+    pub fn row_of(&self, id: &str) -> Option<u32> {
+        self.rows.get(id).copied()
+    }
+
+    /// Id stored at `row` (`None` for tombstones).
+    pub fn id_of(&self, row: u32) -> Option<&str> {
+        self.ids.get(row as usize)?.as_deref()
+    }
+
+    /// Raw words of `row` (zeros for tombstones).
+    #[inline]
+    pub fn row_words(&self, row: u32) -> &[u64] {
+        let start = row as usize * self.stride;
+        &self.words[start..start + self.stride]
+    }
+
+    /// Drop tombstoned rows, remapping survivors downward in insertion
+    /// order. Returns the number of rows reclaimed.
+    pub fn compact(&mut self) -> usize {
+        let reclaimed = self.tombstones();
+        if reclaimed == 0 {
+            return 0;
+        }
+        let mut write = 0usize;
+        for read in 0..self.ids.len() {
+            if self.ids[read].is_none() {
+                continue;
+            }
+            if write != read {
+                self.ids.swap(write, read);
+                let (dst, src) = (write * self.stride, read * self.stride);
+                self.words.copy_within(src..src + self.stride, dst);
+            }
+            let id = self.ids[write].as_ref().expect("live row has id");
+            *self.rows.get_mut(id).expect("live id has row") = write as u32;
+            write += 1;
+        }
+        self.ids.truncate(write);
+        self.words.truncate(write * self.stride);
+        reclaimed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+
+    fn sketch(k: usize, seed: u16) -> PackedCodes {
+        let codes: Vec<u16> = (0..k).map(|i| ((i as u16).wrapping_add(seed)) % 4).collect();
+        pack_codes(&codes, 2)
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut a = CodeArena::new(100, 2);
+        assert!(a.is_empty());
+        let r0 = a.insert("a", &sketch(100, 0));
+        let r1 = a.insert("b", &sketch(100, 1));
+        assert_eq!((r0, r1), (0, 1));
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get("a").unwrap(), sketch(100, 0));
+        assert_eq!(a.get("b").unwrap(), sketch(100, 1));
+        assert!(a.get("zzz").is_none());
+        assert_eq!(a.id_of(0), Some("a"));
+        assert_eq!(a.row_of("b"), Some(1));
+    }
+
+    #[test]
+    fn overwrite_reuses_row() {
+        let mut a = CodeArena::new(64, 2);
+        a.insert("x", &sketch(64, 0));
+        let r = a.insert("x", &sketch(64, 9));
+        assert_eq!(r, 0);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.rows_allocated(), 1);
+        assert_eq!(a.get("x").unwrap(), sketch(64, 9));
+    }
+
+    #[test]
+    fn remove_tombstones_and_compact_reclaims() {
+        let mut a = CodeArena::new(64, 2);
+        for i in 0..10 {
+            a.insert(&format!("id{i}"), &sketch(64, i));
+        }
+        assert!(a.remove("id3"));
+        assert!(!a.remove("id3"));
+        assert!(a.remove("id7"));
+        assert_eq!(a.len(), 8);
+        assert_eq!(a.rows_allocated(), 10);
+        assert_eq!(a.tombstones(), 2);
+        assert_eq!(a.id_of(3), None);
+        assert!(a.row_words(3).iter().all(|&w| w == 0));
+
+        assert_eq!(a.compact(), 2);
+        assert_eq!(a.rows_allocated(), 8);
+        assert_eq!(a.tombstones(), 0);
+        // Survivors keep insertion order and their exact codes.
+        let live: Vec<u16> = [0u16, 1, 2, 4, 5, 6, 8, 9].to_vec();
+        for (row, &i) in live.iter().enumerate() {
+            let id = format!("id{i}");
+            assert_eq!(a.id_of(row as u32), Some(id.as_str()));
+            assert_eq!(a.row_of(&id), Some(row as u32));
+            assert_eq!(a.get(&id).unwrap(), sketch(64, i));
+        }
+        assert_eq!(a.compact(), 0);
+    }
+
+    #[test]
+    fn stride_covers_partial_words() {
+        let a = CodeArena::new(100, 2); // 100 2-bit codes = 3.125 words
+        assert_eq!(a.stride(), 4);
+        let a = CodeArena::new(64, 1);
+        assert_eq!(a.stride(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn shape_mismatch_panics() {
+        let mut a = CodeArena::new(64, 2);
+        a.insert("a", &sketch(65, 0));
+    }
+}

@@ -1,0 +1,157 @@
+//! Blockwise SWAR collision counting over raw word rows.
+//!
+//! These are the arena-scan counterparts of
+//! [`crate::coding::collision_count_packed`]: they operate directly on
+//! `&[u64]` rows (query vs arena row) so the scanner never materializes a
+//! `PackedCodes` per candidate. The 1-bit and 2-bit paths — the paper's
+//! recommended schemes — process four words per unrolled block; wider
+//! codes fall back to the generic lane-collapse count.
+//!
+//! All paths mask the final partial word, so padding bits (zero on both
+//! sides by the packing invariant) never count as collisions.
+
+/// Count coordinates where two equal-shape rows of `k` codes at `bits`
+/// per code agree. `a` and `b` must both hold `k.div_ceil(64 / bits)`
+/// words.
+#[inline]
+pub fn collisions_words(bits: u32, k: usize, a: &[u64], b: &[u64]) -> usize {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), k.div_ceil((64 / bits) as usize));
+    match bits {
+        1 => collisions_b1(k, a, b),
+        2 => collisions_b2(k, a, b),
+        4 => collisions_generic(k, a, b, 4, 0x1111_1111_1111_1111),
+        8 => collisions_generic(k, a, b, 8, 0x0101_0101_0101_0101),
+        16 => collisions_generic(k, a, b, 16, 0x0001_0001_0001_0001),
+        _ => unreachable!("unsupported width {bits}"),
+    }
+}
+
+/// 1-bit: agreement = NOT(XOR) + popcount, four words per block.
+fn collisions_b1(k: usize, a: &[u64], b: &[u64]) -> usize {
+    let full = k / 64;
+    let mut total = 0usize;
+    let blocks = full / 4;
+    for blk in 0..blocks {
+        let i = blk * 4;
+        total += (!(a[i] ^ b[i])).count_ones() as usize
+            + (!(a[i + 1] ^ b[i + 1])).count_ones() as usize
+            + (!(a[i + 2] ^ b[i + 2])).count_ones() as usize
+            + (!(a[i + 3] ^ b[i + 3])).count_ones() as usize;
+    }
+    for i in blocks * 4..full {
+        total += (!(a[i] ^ b[i])).count_ones() as usize;
+    }
+    let rem = k % 64;
+    if rem > 0 {
+        let mask = (1u64 << rem) - 1;
+        total += ((!(a[full] ^ b[full])) & mask).count_ones() as usize;
+    }
+    total
+}
+
+/// 2-bit: a lane agrees iff both of its bits agree, four words per block.
+fn collisions_b2(k: usize, a: &[u64], b: &[u64]) -> usize {
+    const LO: u64 = 0x5555_5555_5555_5555;
+    #[inline(always)]
+    fn word(x: u64, y: u64) -> usize {
+        let eq = !(x ^ y);
+        (eq & (eq >> 1) & LO).count_ones() as usize
+    }
+    let full = k / 32;
+    let mut total = 0usize;
+    let blocks = full / 4;
+    for blk in 0..blocks {
+        let i = blk * 4;
+        total += word(a[i], b[i])
+            + word(a[i + 1], b[i + 1])
+            + word(a[i + 2], b[i + 2])
+            + word(a[i + 3], b[i + 3]);
+    }
+    for i in blocks * 4..full {
+        total += word(a[i], b[i]);
+    }
+    let rem = k % 32;
+    if rem > 0 {
+        let eq = !(a[full] ^ b[full]);
+        let lanes = eq & (eq >> 1) & LO & ((1u64 << (2 * rem)) - 1);
+        total += lanes.count_ones() as usize;
+    }
+    total
+}
+
+/// Generic lane widths 4/8/16: a lane agrees iff its XOR is zero,
+/// detected by OR-collapsing each lane onto its low bit.
+fn collisions_generic(k: usize, a: &[u64], b: &[u64], bits: u32, lo_mask: u64) -> usize {
+    let per_word = (64 / bits) as usize;
+    let full = k / per_word;
+    let mut total = 0usize;
+    for i in 0..full {
+        let x = a[i] ^ b[i];
+        let mut y = x;
+        let mut shift = bits / 2;
+        while shift > 0 {
+            y |= y >> shift;
+            shift /= 2;
+        }
+        total += per_word - (y & lo_mask).count_ones() as usize;
+    }
+    let rem = k % per_word;
+    if rem > 0 {
+        let x = a[full] ^ b[full];
+        let lane_mask = (1u64 << bits) - 1;
+        for j in 0..rem {
+            total += usize::from((x >> (j as u32 * bits)) & lane_mask == 0);
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{collision_count, pack_codes};
+    use crate::mathx::Pcg64;
+
+    fn random_codes(n: usize, card: u16, seed: u64) -> Vec<u16> {
+        let mut g = Pcg64::new(seed, 1);
+        (0..n).map(|_| g.next_below(card as u64) as u16).collect()
+    }
+
+    #[test]
+    fn matches_scalar_all_widths_and_tails() {
+        for &(bits, card) in &[(1u32, 2u16), (2, 4), (4, 16), (8, 200), (16, 999)] {
+            // Lengths spanning block boundaries (4-word unroll = 256
+            // one-bit codes), word boundaries, and partial words.
+            for &k in &[1usize, 31, 32, 63, 64, 65, 255, 256, 257, 300, 1024, 1027] {
+                let a = random_codes(k, card, 7 + bits as u64);
+                let b = random_codes(k, card, 77 + bits as u64);
+                let pa = pack_codes(&a, bits);
+                let pb = pack_codes(&b, bits);
+                assert_eq!(
+                    collisions_words(bits, k, pa.words(), pb.words()),
+                    collision_count(&a, &b),
+                    "bits={bits} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identical_rows_collide_everywhere() {
+        for &bits in &[1u32, 2, 4] {
+            let codes = random_codes(513, 1 << bits, 3);
+            let p = pack_codes(&codes, bits);
+            assert_eq!(collisions_words(bits, 513, p.words(), p.words()), 513);
+        }
+    }
+
+    #[test]
+    fn padding_never_counts() {
+        // 33 one-bit codes leave 31 zero padding bits in the only word;
+        // two all-different vectors must report zero collisions.
+        let a = pack_codes(&[0u16; 33], 1);
+        let b = pack_codes(&[1u16; 33], 1);
+        assert_eq!(collisions_words(1, 33, a.words(), b.words()), 0);
+    }
+}

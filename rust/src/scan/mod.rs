@@ -1,0 +1,33 @@
+//! Flat packed-code scan engine: columnar arena + SWAR scanner + top-k.
+//!
+//! The serving layer's original `Knn` path cloned every [`crate::coding::PackedCodes`]
+//! out of a sharded `HashMap` and estimated pair by pair — pointer-chasing
+//! over scattered allocations with a full sort at the end. This subsystem
+//! replaces that with the layout the paper's storage story implies: all
+//! sketches of one coding configuration are a dense matrix of a few bits
+//! per coordinate, so a near-neighbor query is a single sequential sweep.
+//!
+//! * [`arena`] — [`CodeArena`]: word-major columnar storage, fixed stride
+//!   per sketch, id ↔ row maps, tombstoned deletes, compaction.
+//! * [`kernels`] — blockwise SWAR collision counting over raw word rows:
+//!   unrolled XOR+popcount for 1-bit codes, nibble-equality for 2-bit,
+//!   generic lane-collapse fallback for 4/8/16.
+//! * [`topk`] — [`TopK`]: bounded worst-out heap for exact top-k with the
+//!   deterministic `(collisions desc, id asc)` ordering the brute-force
+//!   estimator path uses.
+//! * [`scanner`] — [`scan_topk`] / [`scan_topk_batch`]: the sweep itself,
+//!   sharded across threads via `std::thread::scope` for single queries
+//!   and fanned out per query for batches.
+//!
+//! Ranking is byte-identical to the per-pair
+//! [`crate::estimator::CollisionEstimator`] path: both order by collision
+//! count (ρ̂ is monotone in it) and break ties by id.
+
+pub mod arena;
+pub mod kernels;
+pub mod scanner;
+pub mod topk;
+
+pub use arena::CodeArena;
+pub use scanner::{scan_topk, scan_topk_batch, ScanHit};
+pub use topk::TopK;

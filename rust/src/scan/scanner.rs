@@ -1,0 +1,244 @@
+//! The scan itself: sequential sweep over the arena, optionally sharded
+//! across threads.
+//!
+//! A single query shards the row range via `std::thread::scope` and
+//! merges the per-shard [`TopK`] selections; a batch of queries instead
+//! fans whole queries out across threads (each sweep stays sequential,
+//! which keeps every thread's access pattern a pure forward walk).
+//! Both paths return exactly what a single-threaded sweep returns.
+
+use super::arena::CodeArena;
+use super::kernels::collisions_words;
+use super::topk::{TopEntry, TopK};
+use crate::coding::PackedCodes;
+
+/// One scan result: a live arena row and its collision count with the
+/// query. ρ̂ is left to the caller (it is a monotone function of
+/// `collisions`, so ranking does not depend on it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScanHit {
+    pub row: u32,
+    pub id: String,
+    pub collisions: usize,
+}
+
+impl From<TopEntry> for ScanHit {
+    fn from(e: TopEntry) -> Self {
+        ScanHit {
+            row: e.row,
+            id: e.id,
+            collisions: e.collisions,
+        }
+    }
+}
+
+/// Below this many rows an auto-sized (`threads = 0`) scan stays on the
+/// calling thread — spawning costs more than the sweep saves. An
+/// explicit thread count is always honored.
+const PAR_MIN_ROWS: usize = 16 * 1024;
+
+/// Threads to use for `requested` (0 = auto-detect).
+fn effective_threads(requested: usize, rows: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    match requested {
+        0 if rows < PAR_MIN_ROWS => 1,
+        0 => hw.clamp(1, rows),
+        t => t.clamp(1, rows.max(1)),
+    }
+}
+
+/// Sweep `rows` (a contiguous range) into a bounded top-`n` selection.
+fn scan_range(
+    arena: &CodeArena,
+    query: &PackedCodes,
+    rows: std::ops::Range<u32>,
+    n: usize,
+) -> TopK {
+    let mut top = TopK::new(n);
+    let qwords = query.words();
+    let (bits, k) = (arena.bits(), arena.k());
+    for row in rows {
+        let Some(id) = arena.id_of(row) else {
+            continue; // tombstone
+        };
+        let c = collisions_words(bits, k, qwords, arena.row_words(row));
+        top.offer(row, id, c);
+    }
+    top
+}
+
+/// Exact top-`n` rows of `arena` by collision count with `query`,
+/// ordered `(collisions desc, id asc)` — byte-identical to sorting the
+/// per-pair estimator scores. `threads = 0` auto-detects; small arenas
+/// always scan on the calling thread.
+pub fn scan_topk(
+    arena: &CodeArena,
+    query: &PackedCodes,
+    n: usize,
+    threads: usize,
+) -> Vec<ScanHit> {
+    assert_eq!(query.len, arena.k(), "query length mismatch");
+    assert_eq!(query.bits, arena.bits(), "query bit width mismatch");
+    let rows = arena.rows_allocated() as u32;
+    let threads = effective_threads(threads, rows as usize);
+    let top = if threads <= 1 {
+        scan_range(arena, query, 0..rows, n)
+    } else {
+        let chunk = rows.div_ceil(threads as u32).max(1);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads as u32)
+                .map(|t| {
+                    let lo = (t * chunk).min(rows);
+                    let hi = ((t + 1) * chunk).min(rows);
+                    s.spawn(move || scan_range(arena, query, lo..hi, n))
+                })
+                .collect();
+            let mut merged = TopK::new(n);
+            for h in handles {
+                merged.merge(h.join().expect("scan shard panicked"));
+            }
+            merged
+        })
+    };
+    top.into_sorted().into_iter().map(ScanHit::from).collect()
+}
+
+/// Top-`n` for a batch of queries: queries fan out across threads, each
+/// sweeping the whole arena sequentially. Result `i` corresponds to
+/// `queries[i]` and equals `scan_topk(arena, &queries[i], n, 1)`.
+pub fn scan_topk_batch(
+    arena: &CodeArena,
+    queries: &[PackedCodes],
+    n: usize,
+    threads: usize,
+) -> Vec<Vec<ScanHit>> {
+    if queries.len() <= 1 {
+        // A lone query still gets row-level parallelism.
+        return queries.iter().map(|q| scan_topk(arena, q, n, threads)).collect();
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|h| h.get())
+        .unwrap_or(1);
+    let threads = (if threads == 0 { hw } else { threads }).clamp(1, queries.len());
+    if threads <= 1 {
+        return queries.iter().map(|q| scan_topk(arena, q, n, 1)).collect();
+    }
+    let chunk = queries.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = queries
+            .chunks(chunk)
+            .map(|qs| {
+                s.spawn(move || {
+                    qs.iter()
+                        .map(|q| scan_topk(arena, q, n, 1))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("scan batch shard panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+    use crate::mathx::Pcg64;
+
+    fn arena_with(n_rows: usize, k: usize, bits: u32, seed: u64) -> (CodeArena, Vec<Vec<u16>>) {
+        let card = 1u16 << bits;
+        let mut g = Pcg64::new(seed, 0);
+        let mut arena = CodeArena::new(k, bits);
+        let mut raw = Vec::new();
+        for i in 0..n_rows {
+            let codes: Vec<u16> = (0..k).map(|_| g.next_below(card as u64) as u16).collect();
+            arena.insert(&format!("row{i:05}"), &pack_codes(&codes, bits));
+            raw.push(codes);
+        }
+        (arena, raw)
+    }
+
+    fn brute_force(raw: &[Vec<u16>], query: &[u16], n: usize) -> Vec<(String, usize)> {
+        let mut all: Vec<(String, usize)> = raw
+            .iter()
+            .enumerate()
+            .map(|(i, codes)| {
+                (
+                    format!("row{i:05}"),
+                    crate::coding::collision_count(codes, query),
+                )
+            })
+            .collect();
+        all.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        all.truncate(n);
+        all
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        for &bits in &[1u32, 2, 4] {
+            let (arena, raw) = arena_with(500, 129, bits, 50 + bits as u64);
+            let mut g = Pcg64::new(9, 9);
+            let query: Vec<u16> = (0..129)
+                .map(|_| g.next_below(1 << bits as u64) as u16)
+                .collect();
+            let packed = pack_codes(&query, bits);
+            let got: Vec<(String, usize)> = scan_topk(&arena, &packed, 10, 1)
+                .into_iter()
+                .map(|h| (h.id, h.collisions))
+                .collect();
+            assert_eq!(got, brute_force(&raw, &query, 10), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let (arena, _) = arena_with(3000, 64, 2, 4);
+        let q = arena.get("row00042").unwrap();
+        let serial = scan_topk(&arena, &q, 25, 1);
+        // Explicit thread counts are honored even below the auto-mode
+        // size threshold, so this genuinely exercises shard + merge.
+        for threads in [2, 3, 4, 7] {
+            assert_eq!(serial, scan_topk(&arena, &q, 25, threads), "threads={threads}");
+        }
+        assert_eq!(serial[0].id, "row00042");
+        assert_eq!(serial[0].collisions, 64);
+    }
+
+    #[test]
+    fn tombstones_are_skipped() {
+        let (mut arena, raw) = arena_with(100, 64, 2, 8);
+        arena.remove("row00007");
+        arena.remove("row00031");
+        let query = raw[7].clone();
+        let hits = scan_topk(&arena, &pack_codes(&query, 2), 100, 1);
+        assert_eq!(hits.len(), 98);
+        assert!(hits.iter().all(|h| h.id != "row00007" && h.id != "row00031"));
+    }
+
+    #[test]
+    fn batch_matches_individual() {
+        let (arena, _) = arena_with(400, 96, 1, 12);
+        let queries: Vec<_> = (0..7)
+            .map(|i| arena.get(&format!("row{:05}", i * 13)).unwrap())
+            .collect();
+        let batched = scan_topk_batch(&arena, &queries, 5, 3);
+        assert_eq!(batched.len(), queries.len());
+        for (i, q) in queries.iter().enumerate() {
+            assert_eq!(batched[i], scan_topk(&arena, q, 5, 1), "query {i}");
+        }
+    }
+
+    #[test]
+    fn empty_arena_returns_nothing() {
+        let arena = CodeArena::new(64, 2);
+        let q = pack_codes(&[0u16; 64], 2);
+        assert!(scan_topk(&arena, &q, 5, 0).is_empty());
+        assert!(scan_topk_batch(&arena, &[], 5, 0).is_empty());
+    }
+}

@@ -1,0 +1,205 @@
+//! Bounded worst-out heap for exact top-k selection.
+//!
+//! Keeps the `n` best `(collisions, id)` pairs seen so far, ordered
+//! exactly as the brute-force estimator path orders its full sort:
+//! collisions descending, then id ascending (ρ̂ is monotone in the
+//! collision count, so this is also the ρ̂ ranking). Candidates that
+//! cannot enter the heap cost one comparison and zero allocations.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One selected hit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TopEntry {
+    pub row: u32,
+    pub id: String,
+    pub collisions: usize,
+}
+
+impl TopEntry {
+    /// Heap order: the *maximum* entry is the worst hit (fewest
+    /// collisions, then largest id), so `peek` exposes the eviction
+    /// candidate.
+    fn heap_cmp(&self, other: &Self) -> Ordering {
+        other
+            .collisions
+            .cmp(&self.collisions)
+            .then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+impl Ord for TopEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.heap_cmp(other)
+    }
+}
+
+impl PartialOrd for TopEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Exact top-`n` accumulator.
+#[derive(Debug)]
+pub struct TopK {
+    n: usize,
+    heap: BinaryHeap<TopEntry>,
+}
+
+impl TopK {
+    pub fn new(n: usize) -> Self {
+        TopK {
+            n,
+            heap: BinaryHeap::with_capacity(n + 1),
+        }
+    }
+
+    /// Capacity of the selection.
+    pub fn capacity(&self) -> usize {
+        self.n
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer a candidate; allocates only if it enters the selection.
+    pub fn offer(&mut self, row: u32, id: &str, collisions: usize) {
+        if self.heap.len() < self.n {
+            self.heap.push(TopEntry {
+                row,
+                id: id.to_string(),
+                collisions,
+            });
+            return;
+        }
+        let Some(worst) = self.heap.peek() else {
+            return; // n == 0
+        };
+        let beats = collisions > worst.collisions
+            || (collisions == worst.collisions && *id < *worst.id);
+        if beats {
+            self.heap.pop();
+            self.heap.push(TopEntry {
+                row,
+                id: id.to_string(),
+                collisions,
+            });
+        }
+    }
+
+    /// Fold another selection (e.g. a per-thread shard) into this one.
+    pub fn merge(&mut self, other: TopK) {
+        for e in other.heap {
+            if self.heap.len() < self.n {
+                self.heap.push(e);
+            } else if let Some(worst) = self.heap.peek() {
+                if e.heap_cmp(worst) == Ordering::Less {
+                    self.heap.pop();
+                    self.heap.push(e);
+                }
+            }
+        }
+    }
+
+    /// The selection, best first (collisions descending, id ascending).
+    pub fn into_sorted(self) -> Vec<TopEntry> {
+        self.heap.into_sorted_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(n: usize, items: &[(&str, usize)]) -> Vec<(String, usize)> {
+        let mut t = TopK::new(n);
+        for (row, &(id, c)) in items.iter().enumerate() {
+            t.offer(row as u32, id, c);
+        }
+        t.into_sorted()
+            .into_iter()
+            .map(|e| (e.id, e.collisions))
+            .collect()
+    }
+
+    #[test]
+    fn selects_and_orders_best_first() {
+        let got = collect(3, &[("a", 5), ("b", 9), ("c", 1), ("d", 7), ("e", 9)]);
+        assert_eq!(
+            got,
+            vec![
+                ("b".to_string(), 9),
+                ("e".to_string(), 9),
+                ("d".to_string(), 7)
+            ]
+        );
+    }
+
+    #[test]
+    fn ties_break_by_id_ascending() {
+        let got = collect(2, &[("z", 4), ("m", 4), ("a", 4)]);
+        assert_eq!(got, vec![("a".to_string(), 4), ("m".to_string(), 4)]);
+    }
+
+    #[test]
+    fn matches_full_sort_on_random_input() {
+        let mut g = crate::mathx::Pcg64::new(99, 0);
+        for case in 0..30 {
+            let n_items = 1 + g.next_below(200) as usize;
+            let top = g.next_below(12) as usize;
+            let items: Vec<(String, usize)> = (0..n_items)
+                .map(|i| (format!("id{i:04}"), g.next_below(50) as usize))
+                .collect();
+            let mut t = TopK::new(top);
+            for (i, (id, c)) in items.iter().enumerate() {
+                t.offer(i as u32, id, *c);
+            }
+            let got: Vec<(String, usize)> = t
+                .into_sorted()
+                .into_iter()
+                .map(|e| (e.id, e.collisions))
+                .collect();
+            let mut want: Vec<(String, usize)> =
+                items.iter().map(|(id, c)| (id.clone(), *c)).collect();
+            want.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+            want.truncate(top);
+            assert_eq!(got, want, "case {case}");
+        }
+    }
+
+    #[test]
+    fn zero_capacity_is_empty() {
+        let got = collect(0, &[("a", 5)]);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn merge_equals_single_accumulator() {
+        let items: Vec<(String, usize)> = (0..100)
+            .map(|i| (format!("v{i:03}"), (i * 7) % 23))
+            .collect();
+        let mut whole = TopK::new(10);
+        for (i, (id, c)) in items.iter().enumerate() {
+            whole.offer(i as u32, id, *c);
+        }
+        let mut left = TopK::new(10);
+        let mut right = TopK::new(10);
+        for (i, (id, c)) in items.iter().enumerate() {
+            if i < 50 {
+                left.offer(i as u32, id, *c);
+            } else {
+                right.offer(i as u32, id, *c);
+            }
+        }
+        left.merge(right);
+        assert_eq!(left.into_sorted(), whole.into_sorted());
+    }
+}

@@ -8,6 +8,8 @@
 //! * state: packed store round-trips codes exactly
 //! * coding: pack/unpack identity, collision count symmetry + bounds,
 //!   monotone inversion, expansion inner-product identity
+//! * scan: top-k ≡ brute-force sort of per-pair estimator scores,
+//!   parallel scan ≡ single-threaded scan, arena mutation round-trips
 
 use crp::coding::{
     collision_count, collision_count_packed, expand_to_sparse, pack_codes, unpack_codes,
@@ -156,6 +158,186 @@ fn prop_inversion_table_monotone_and_inverse() {
                 (table.rho(p) - rho).abs() < 5e-3,
                 "case {case} scheme {scheme:?} rho {rho}"
             );
+        }
+    }
+}
+
+#[test]
+fn prop_scan_topk_matches_bruteforce_estimator_sort() {
+    use crp::estimator::CollisionEstimator;
+    use crp::scan::{scan_topk, CodeArena};
+
+    for case in 0..CASES / 2 {
+        let mut g = rng(0xA11CE ^ case);
+        // (bits, scheme) pairs whose packed width matches the scheme's
+        // cardinality, so estimator inversion applies directly.
+        let (bits, scheme, w) = [
+            (1u32, SchemeKind::OneBit, 0.0),
+            (2, SchemeKind::TwoBit, 0.75),
+            (4, SchemeKind::Uniform, 0.75),
+        ][g.next_below(3) as usize];
+        let card = 1u16 << bits;
+        let k = 16 + g.next_below(260) as usize;
+        let n_rows = 1 + g.next_below(250) as usize;
+        let top = g.next_below(20) as usize;
+        let mut arena = CodeArena::new(k, bits);
+        let mut raw = Vec::new();
+        for i in 0..n_rows {
+            let codes = rand_codes(&mut g, k, card);
+            arena.insert(&format!("r{i:05}"), &pack_codes(&codes, bits));
+            raw.push(codes);
+        }
+        let qcodes = rand_codes(&mut g, k, card);
+        let q = pack_codes(&qcodes, bits);
+        let got = scan_topk(&arena, &q, top, 1);
+
+        // Brute force: score every pair with the estimator, sort the
+        // scores (ρ̂ is monotone in the collision count; ties resolved
+        // by id as the estimator path does), truncate.
+        let est = CollisionEstimator::new(CodingParams::new(scheme, w));
+        let mut want: Vec<(String, usize, f64)> = raw
+            .iter()
+            .enumerate()
+            .map(|(i, codes)| {
+                let c = collision_count(codes, &qcodes);
+                (format!("r{i:05}"), c, est.estimate_from_count(c, k))
+            })
+            .collect();
+        want.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        want.truncate(top);
+
+        assert_eq!(got.len(), want.len(), "case {case}");
+        for (hit, (id, c, rho)) in got.iter().zip(&want) {
+            assert_eq!(&hit.id, id, "case {case}");
+            assert_eq!(hit.collisions, *c, "case {case}");
+            assert_eq!(est.estimate_from_count(hit.collisions, k), *rho, "case {case}");
+        }
+        // ρ̂ ordering is non-increasing down the ranking.
+        for pair in want.windows(2) {
+            assert!(pair[0].2 >= pair[1].2, "case {case}");
+        }
+
+        // Parallel scan ≡ single-threaded scan, row-sharded and batched.
+        let threads = 2 + g.next_below(5) as usize;
+        assert_eq!(got, scan_topk(&arena, &q, top, threads), "case {case}");
+        let batch = crp::scan::scan_topk_batch(&arena, &[q.clone(), q], top, threads);
+        assert_eq!(batch.len(), 2, "case {case}");
+        assert_eq!(batch[0], got, "case {case}");
+        assert_eq!(batch[1], got, "case {case}");
+    }
+}
+
+#[test]
+fn prop_arena_mutation_roundtrip() {
+    use crp::scan::{scan_topk, CodeArena};
+    use std::collections::HashMap;
+
+    for case in 0..CASES / 3 {
+        let mut g = rng(0xDEAD ^ case);
+        let bits = [1u32, 2, 4][g.next_below(3) as usize];
+        let card = 1u16 << bits;
+        let k = 8 + g.next_below(150) as usize;
+        let mut arena = CodeArena::new(k, bits);
+        let mut model: HashMap<String, Vec<u16>> = HashMap::new();
+        let universe = 40;
+        for _ in 0..300 {
+            let id = format!("id{:02}", g.next_below(universe));
+            match g.next_below(4) {
+                0 => {
+                    arena.remove(&id);
+                    model.remove(&id);
+                }
+                3 if g.next_below(10) == 0 => {
+                    arena.compact();
+                }
+                _ => {
+                    let codes = rand_codes(&mut g, k, card);
+                    arena.insert(&id, &pack_codes(&codes, bits));
+                    model.insert(id, codes);
+                }
+            }
+        }
+        assert_eq!(arena.len(), model.len(), "case {case}");
+        for (id, codes) in &model {
+            let stored = arena.get(id).unwrap_or_else(|| panic!("case {case}: {id} missing"));
+            assert_eq!(unpack_codes(&stored), *codes, "case {case}: {id}");
+        }
+        // Compaction preserves exactly the live set and its codes.
+        arena.compact();
+        assert_eq!(arena.tombstones(), 0, "case {case}");
+        assert_eq!(arena.len(), model.len(), "case {case}");
+        assert_eq!(arena.rows_allocated(), model.len(), "case {case}");
+        for (id, codes) in &model {
+            assert_eq!(unpack_codes(&arena.get(id).unwrap()), *codes, "case {case}: {id}");
+        }
+        // A full scan sees every live row exactly once.
+        if !model.is_empty() {
+            let q = pack_codes(&rand_codes(&mut g, k, card), bits);
+            let hits = scan_topk(&arena, &q, model.len() + 5, 1);
+            assert_eq!(hits.len(), model.len(), "case {case}");
+            let mut seen: Vec<&str> = hits.iter().map(|h| h.id.as_str()).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), model.len(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_service_knn_identical_to_bruteforce_scan() {
+    use crp::coordinator::protocol::{Request, Response};
+    use crp::coordinator::server::{ServerConfig, ServiceState};
+    use crp::projection::{ProjectionConfig, Projector};
+    use std::sync::Arc;
+
+    let state = ServiceState::new(
+        Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 192,
+            seed: 6,
+            ..Default::default()
+        })),
+        &ServerConfig::default(),
+    );
+    let mut g = rng(21);
+    for i in 0..80 {
+        let v = rand_f32s(&mut g, 40, 1.0);
+        state.handle(Request::Register {
+            id: format!("v{i:03}"),
+            vector: v,
+        });
+    }
+    for case in 0..6 {
+        let qv = rand_f32s(&mut g, 40, 1.0);
+        // The batcher is deterministic: registering the query stores the
+        // same sketch Knn computes internally.
+        let qid = format!("query{case}");
+        state.handle(Request::Register {
+            id: qid.clone(),
+            vector: qv.clone(),
+        });
+        let qs = state.store.get(&qid).unwrap();
+        let mut want: Vec<(String, usize)> = Vec::new();
+        state.store.for_each(|id, codes| {
+            want.push((
+                id.to_string(),
+                crp::coding::collision_count_packed(&qs, codes),
+            ));
+        });
+        want.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        want.truncate(7);
+        match state.handle(Request::Knn { vector: qv, n: 7 }) {
+            Response::Knn { hits } => {
+                assert_eq!(hits.len(), want.len(), "case {case}");
+                for (hit, (id, c)) in hits.iter().zip(&want) {
+                    assert_eq!(&hit.id, id, "case {case}");
+                    assert_eq!(
+                        hit.rho,
+                        state.estimator.estimate_from_count(*c, state.k),
+                        "case {case}"
+                    );
+                }
+            }
+            other => panic!("case {case}: {other:?}"),
         }
     }
 }
