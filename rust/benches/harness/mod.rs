@@ -68,6 +68,50 @@ impl Bench {
     pub fn finish(&self) {
         println!("\n{} benchmarks run", self.results.len());
     }
+
+    /// As [`Bench::finish`], then merge this run's results into a
+    /// machine-readable JSON file (the PR-over-PR perf trajectory).
+    /// Entries from previous runs whose names were not re-measured are
+    /// kept, so `scan_bench` and `ingest_bench` share one file; each
+    /// entry sits on its own line to keep the merge a line-level parse.
+    #[allow(dead_code)]
+    pub fn finish_json(&self, path: &std::path::Path) {
+        self.finish();
+        let mut entries: Vec<(String, String)> = Vec::new();
+        if let Ok(prev) = std::fs::read_to_string(path) {
+            for line in prev.lines() {
+                let t = line.trim().trim_end_matches(',');
+                if let Some(rest) = t.strip_prefix("{\"name\":\"") {
+                    if let Some(name) = rest.split('"').next() {
+                        entries.push((name.to_string(), t.to_string()));
+                    }
+                }
+            }
+        }
+        for (name, median_ns, throughput) in &self.results {
+            entries.retain(|(n, _)| n != name);
+            entries.push((
+                name.clone(),
+                format!(
+                    "{{\"name\":\"{name}\",\"ns_per_iter\":{median_ns:.1},\"items_per_sec\":{throughput:.1}}}"
+                ),
+            ));
+        }
+        entries.sort();
+        let mut out = String::from("{\n\"schema\": \"crp-bench-v1\",\n\"benches\": [\n");
+        for (i, (_, line)) in entries.iter().enumerate() {
+            out.push_str(line);
+            if i + 1 < entries.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]\n}\n");
+        match std::fs::write(path, &out) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
 }
 
 pub fn fmt_thousands(mut v: u64) -> String {

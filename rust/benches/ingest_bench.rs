@@ -1,0 +1,96 @@
+//! Ingest-path throughput for the epoch-buffered store: steady-state
+//! overwrite puts (drains amortized at the epoch threshold), the fused
+//! bulk `put_rows` path, and put latency while a scanner floods the read
+//! side — the case the seed design serialized behind the arena write
+//! lock. Results merge into the repo-root `BENCH_scan.json` alongside
+//! `scan_bench`'s numbers.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crp::coding::PackedCodes;
+use crp::coordinator::SketchStore;
+use crp::mathx::Pcg64;
+
+/// Random one-bit sketches are random words (padding bits zeroed).
+fn random_sketch(g: &mut Pcg64, k: usize, bits: u32) -> PackedCodes {
+    let per_word = (64 / bits) as usize;
+    let n_words = k.div_ceil(per_word);
+    let mut words: Vec<u64> = (0..n_words).map(|_| g.next_u64()).collect();
+    let rem = k % per_word;
+    if rem > 0 {
+        words[n_words - 1] &= (1u64 << (rem as u32 * bits)) - 1;
+    }
+    PackedCodes::from_words(bits, k, words)
+}
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let (k, bits) = (1024usize, 1u32);
+    let n = 50_000usize;
+    let mut g = Pcg64::new(11, 0);
+    let sketches: Vec<PackedCodes> = (0..n).map(|_| random_sketch(&mut g, k, bits)).collect();
+    let ids: Vec<String> = (0..n).map(|i| format!("{i:07}")).collect();
+
+    // Steady-state overwrite ingest: the store is pre-seeded, so every
+    // put masks a sealed row and lands a pending one; drains fire at the
+    // default threshold and are included in the measurement.
+    let store = SketchStore::with_arena(k, bits);
+    for (id, s) in ids.iter().zip(&sketches) {
+        store.put(id.clone(), s.clone());
+    }
+    b.run("ingest/put-overwrite-50k/1bit-1024", n as u64, || {
+        for (id, s) in ids.iter().zip(&sketches) {
+            store.put(id.clone(), s.clone());
+        }
+    });
+
+    // Fused bulk ingest: one contiguous word buffer per batch.
+    let stride = store.arena().expect("arena-backed").stride();
+    let batch = 4096usize;
+    let mut words: Vec<u64> = Vec::with_capacity(batch * stride);
+    for s in sketches.iter().take(batch) {
+        words.extend_from_slice(s.words());
+    }
+    let batch_ids: Vec<String> = ids[..batch].to_vec();
+    b.run("ingest/put-rows-4096/1bit-1024", batch as u64, || {
+        store.put_rows(&batch_ids, &words).expect("bulk ingest");
+    });
+
+    // Drain the backlog, then measure ingest under continuous scan load:
+    // a background thread sweeps top-10 queries nonstop while puts flow.
+    store.arena().expect("arena-backed").drain();
+    let store = Arc::new(store);
+    let stop = Arc::new(AtomicBool::new(false));
+    let query = random_sketch(&mut Pcg64::new(99, 9), k, bits);
+    let scanner = {
+        let store = store.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let arena = store.arena().expect("arena-backed");
+            let mut sweeps = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                std::hint::black_box(arena.scan_topk(&query, 10, 1));
+                sweeps += 1;
+            }
+            sweeps
+        })
+    };
+    let mut next = 0usize;
+    b.run("ingest/put-under-scan-load/1bit-1024", 1, || {
+        let j = next % n;
+        store.put(ids[j].clone(), sketches[j].clone());
+        next += 1;
+    });
+    stop.store(true, Ordering::Relaxed);
+    let sweeps = scanner.join().expect("scanner thread");
+    eprintln!("background scanner completed {sweeps} sweeps during ingest");
+
+    b.finish_json(std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_scan.json"
+    )));
+}

@@ -1,7 +1,10 @@
-//! Scan-engine throughput: the arena + SWAR + top-k path against the
+//! Scan-engine throughput: the arena + kernel + top-k path against the
 //! seed's HashMap-walk Knn loop, at 10⁵ sketches of 1024 one-bit codes
-//! (the acceptance configuration) plus a 2-bit variant and batched
-//! fan-out. Set `SCAN_BENCH_LARGE=1` to add a 10⁶-sketch run.
+//! (the acceptance configuration) plus a 2-bit variant, batched fan-out,
+//! and single-thread throughput of every collision-kernel tier the CPU
+//! offers (SWAR vs SSE2 vs AVX2). Results merge into the repo-root
+//! `BENCH_scan.json` for the PR-over-PR trajectory. Set
+//! `SCAN_BENCH_LARGE=1` to add a 10⁶-sketch run.
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -11,7 +14,7 @@ use std::time::Instant;
 use crp::coding::{collision_count_packed, PackedCodes};
 use crp::coordinator::SketchStore;
 use crp::mathx::Pcg64;
-use crp::scan::{scan_topk, scan_topk_batch, CodeArena};
+use crp::scan::{scan_topk, scan_topk_batch, CodeArena, CollisionKernel, KernelKind};
 
 /// Random one-bit sketches are random words.
 fn random_sketch(g: &mut Pcg64, k: usize, bits: u32) -> PackedCodes {
@@ -74,10 +77,36 @@ fn median_secs<F: FnMut()>(samples: usize, mut f: F) -> f64 {
     times[times.len() / 2]
 }
 
+/// Single-thread raw kernel throughput: sweep every arena row with one
+/// tier, no top-k bookkeeping — the codes/s ceiling of that tier.
+fn bench_kernel_tiers(b: &mut harness::Bench, c: &Corpus, bits: u32, label: &str) {
+    let k = c.arena.k();
+    let rows = c.arena.rows_allocated();
+    let qwords = c.query.words();
+    for kind in KernelKind::ALL {
+        let Some(kernel) = CollisionKernel::with_kind(bits, kind) else {
+            continue;
+        };
+        b.run(
+            &format!("kernel/{label}-{}/single-thread", kind.label()),
+            (rows * k) as u64,
+            || {
+                let mut acc = 0usize;
+                for row in 0..rows as u32 {
+                    acc += kernel.count(k, qwords, c.arena.row_words(row));
+                }
+                std::hint::black_box(acc);
+            },
+        );
+    }
+}
+
 fn main() {
     let mut b = harness::Bench::new();
     let (n, k) = (100_000usize, 1024usize);
     let c1 = build(n, k, 1, 42);
+
+    bench_kernel_tiers(&mut b, &c1, 1, "1bit-1024");
 
     b.run("scan/seed-hashmap-knn10/100k-1bit-1024", n as u64, || {
         std::hint::black_box(seed_knn(&c1, 10));
@@ -110,6 +139,7 @@ fn main() {
 
     // 2-bit codes — the paper's recommended scheme for estimation.
     let c2 = build(50_000, k, 2, 43);
+    bench_kernel_tiers(&mut b, &c2, 2, "2bit-1024");
     b.run("scan/seed-hashmap-knn10/50k-2bit-1024", 50_000, || {
         std::hint::black_box(seed_knn(&c2, 10));
     });
@@ -124,5 +154,8 @@ fn main() {
         });
     }
 
-    b.finish();
+    b.finish_json(std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_scan.json"
+    )));
 }

@@ -24,7 +24,10 @@ fn main() {
     std::thread::spawn(move || {
         let _ = serve(projector, cfg, Some(tx));
     });
-    let addr = rx.recv().unwrap().to_string();
+    let addr = rx
+        .recv()
+        .expect("server thread exited before reporting its bound address")
+        .to_string();
 
     let mut client = SketchClient::connect(&addr).unwrap();
     let dim = 256;
@@ -118,7 +121,10 @@ batching-policy ablation (8 closed-loop clients, dim 256):");
         std::thread::spawn(move || {
             let _ = serve(projector, cfg, Some(tx));
         });
-        let addr = rx.recv().unwrap().to_string();
+        let addr = rx
+            .recv()
+            .expect("server thread exited before reporting its bound address")
+            .to_string();
         let n_clients = 8;
         let per = 150;
         let t = std::time::Instant::now();

@@ -1,0 +1,189 @@
+//! Fused encode stage: projected `f32` rows → packed code words in one
+//! pass, with cached `h_{w,q}` offsets and a reusable scratch buffer.
+//!
+//! Before this module the serving path recomputed the `h_{w,q}` offset
+//! vector (`CodingParams::offsets`, a fresh `Vec<f64>`) on every flush
+//! and packed every vector through its own allocation. [`BatchEncoder`]
+//! hoists everything that is per-configuration out of the per-vector
+//! loop: offsets are computed once at construction (they are part of the
+//! hash function and never change), the `u16` code scratch is reused
+//! across calls, and [`BatchEncoder::encode_pack_batch_into`] lands a
+//! whole projected batch in one contiguous word buffer — rows in
+//! [`crate::scan::CodeArena`] layout, ready for
+//! `SketchStore::put_rows` with zero per-vector allocation.
+
+use super::packing::{pack_codes_into, supported_width, PackedCodes};
+use super::schemes::{CodingParams, Scheme};
+
+/// Reusable project→quantize→pack state for one coding configuration at
+/// a fixed sketch width `k`.
+#[derive(Clone, Debug)]
+pub struct BatchEncoder {
+    params: CodingParams,
+    k: usize,
+    bits: u32,
+    stride: usize,
+    /// `h_{w,q}` offsets, computed once (`None` for offset-free schemes).
+    offsets: Option<Vec<f64>>,
+    /// Per-vector code scratch, reused across calls.
+    scratch: Vec<u16>,
+}
+
+impl BatchEncoder {
+    pub fn new(params: CodingParams, k: usize) -> Self {
+        let bits = supported_width(params.bits_per_code());
+        let offsets = match params.scheme {
+            Scheme::WindowOffset => Some(params.offsets(k)),
+            _ => None,
+        };
+        BatchEncoder {
+            stride: k.div_ceil((64 / bits) as usize),
+            scratch: vec![0u16; k],
+            params,
+            k,
+            bits,
+            offsets,
+        }
+    }
+
+    /// Codes per sketch.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Packed width per code (a supported packing width).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// `u64` words per packed row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn params(&self) -> &CodingParams {
+        &self.params
+    }
+
+    /// Encode and pack one projected vector of length `k`. The only
+    /// allocation is the returned sketch's own word buffer.
+    pub fn encode_pack(&mut self, x: &[f32]) -> PackedCodes {
+        assert_eq!(x.len(), self.k, "projected width mismatch");
+        self.params
+            .encode_into(x, self.offsets.as_deref(), &mut self.scratch);
+        let mut words = vec![0u64; self.stride];
+        pack_codes_into(&self.scratch, self.bits, &mut words);
+        PackedCodes::from_words(self.bits, self.k, words)
+    }
+
+    /// Fused batch pass: encode and pack `b` projected rows (`b·k`
+    /// floats, row-major) into one contiguous buffer of `b·stride()`
+    /// words — one buffer resize per batch, zero per-vector allocation.
+    /// Row `i` of `out` is the packed sketch of `x[i·k..(i+1)·k]`,
+    /// byte-identical to [`BatchEncoder::encode_pack`] on that row.
+    pub fn encode_pack_batch_into(&mut self, x: &[f32], b: usize, out: &mut Vec<u64>) {
+        assert_eq!(x.len(), b * self.k, "batch shape mismatch");
+        out.clear();
+        out.resize(b * self.stride, 0);
+        for row in 0..b {
+            self.params.encode_into(
+                &x[row * self.k..(row + 1) * self.k],
+                self.offsets.as_deref(),
+                &mut self.scratch,
+            );
+            pack_codes_into(
+                &self.scratch,
+                self.bits,
+                &mut out[row * self.stride..(row + 1) * self.stride],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+    use crate::mathx::Pcg64;
+    use crate::theory::SchemeKind;
+
+    fn rand_x(n: usize, seed: u64) -> Vec<f32> {
+        let mut g = Pcg64::new(seed, 0);
+        (0..n)
+            .map(|_| (g.next_f64() as f32 - 0.5) * 6.0)
+            .collect()
+    }
+
+    #[test]
+    fn encode_pack_matches_unfused_path_all_schemes() {
+        for (scheme, w) in [
+            (SchemeKind::Uniform, 0.75),
+            (SchemeKind::WindowOffset, 1.0),
+            (SchemeKind::TwoBit, 0.75),
+            (SchemeKind::OneBit, 0.0),
+        ] {
+            let params = CodingParams::new(scheme, w);
+            let k = 131; // ragged: partial last word at every width
+            let mut enc = BatchEncoder::new(params.clone(), k);
+            let x = rand_x(k, 7);
+            let got = enc.encode_pack(&x);
+            let want = pack_codes(&params.encode(&x), params.bits_per_code());
+            assert_eq!(got, want, "{scheme:?}");
+            // Scratch reuse must not leak state between calls.
+            let y = rand_x(k, 8);
+            let got2 = enc.encode_pack(&y);
+            assert_eq!(got2, pack_codes(&params.encode(&y), params.bits_per_code()));
+        }
+    }
+
+    #[test]
+    fn batch_rows_match_per_vector_encoding() {
+        let params = CodingParams::new(SchemeKind::WindowOffset, 1.0);
+        let k = 100;
+        let b = 9;
+        let mut enc = BatchEncoder::new(params.clone(), k);
+        let x = rand_x(b * k, 21);
+        let mut words = Vec::new();
+        enc.encode_pack_batch_into(&x, b, &mut words);
+        assert_eq!(words.len(), b * enc.stride());
+        for row in 0..b {
+            let want = pack_codes(
+                &params.encode(&x[row * k..(row + 1) * k]),
+                params.bits_per_code(),
+            );
+            assert_eq!(
+                &words[row * enc.stride()..(row + 1) * enc.stride()],
+                want.words(),
+                "row {row}"
+            );
+        }
+        // The buffer is reusable: a second (smaller) batch overwrites it.
+        let x2 = rand_x(2 * k, 22);
+        enc.encode_pack_batch_into(&x2, 2, &mut words);
+        assert_eq!(words.len(), 2 * enc.stride());
+    }
+
+    #[test]
+    fn cached_offsets_equal_fresh_offsets() {
+        let params = CodingParams::new(SchemeKind::WindowOffset, 0.5);
+        let k = 64;
+        let mut enc = BatchEncoder::new(params.clone(), k);
+        let x = rand_x(k, 3);
+        // Two encoders and the raw path all agree — the offsets are a
+        // pure function of (seed, k), cached rather than recomputed.
+        let mut enc2 = BatchEncoder::new(params.clone(), k);
+        assert_eq!(enc.encode_pack(&x), enc2.encode_pack(&x));
+        assert_eq!(
+            enc.encode_pack(&x),
+            pack_codes(&params.encode(&x), params.bits_per_code())
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let mut enc = BatchEncoder::new(CodingParams::new(SchemeKind::TwoBit, 0.75), 32);
+        let mut words = vec![99u64; 4];
+        enc.encode_pack_batch_into(&[], 0, &mut words);
+        assert!(words.is_empty());
+    }
+}

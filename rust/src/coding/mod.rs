@@ -9,13 +9,19 @@
 //! * [`expand`] — the Section-6 one-hot expansion that turns `k` codes
 //!   into a sparse binary feature vector of length `k · cardinality` with
 //!   exactly `k` ones, unit-normalized for the linear SVM.
+//! * [`encoder`] — [`BatchEncoder`]: the fused encode+pack stage with
+//!   cached `h_{w,q}` offsets and reusable scratch, feeding packed rows
+//!   straight into the scan arena's bulk-ingest path.
 
+pub mod encoder;
 pub mod schemes;
 pub mod packing;
 pub mod expand;
 
+pub use encoder::BatchEncoder;
 pub use expand::{expand_to_sparse, expanded_dim};
 pub use packing::{
-    collision_count, collision_count_packed, pack_codes, supported_width, unpack_codes, PackedCodes,
+    collision_count, collision_count_packed, pack_codes, pack_codes_into, supported_width,
+    unpack_codes, PackedCodes,
 };
 pub use schemes::{CodingParams, Scheme};

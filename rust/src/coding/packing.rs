@@ -39,25 +39,39 @@ pub fn supported_width(bits: u32) -> u32 {
 pub fn pack_codes(codes: &[u16], bits: u32) -> PackedCodes {
     let bits = supported_width(bits);
     let per_word = (64 / bits) as usize;
-    let n_words = codes.len().div_ceil(per_word);
-    // `supported_width` caps widths at 16, so the shift never overflows.
+    let mut words = vec![0u64; codes.len().div_ceil(per_word)];
+    pack_codes_into(codes, bits, &mut words);
+    PackedCodes {
+        bits,
+        len: codes.len(),
+        per_word,
+        // `supported_width` caps widths at 16, so the shift never overflows.
+        mask: (1u64 << bits) - 1,
+        words,
+    }
+}
+
+/// Pack `codes` at a supported width into a caller-provided word buffer
+/// of exactly `codes.len().div_ceil(64 / bits)` words. The buffer is
+/// fully overwritten with padding bits zeroed — the allocation-free core
+/// of [`pack_codes`], used by the fused batch-encode pipeline.
+pub fn pack_codes_into(codes: &[u16], bits: u32, out: &mut [u64]) {
+    assert_eq!(bits, supported_width(bits), "unsupported width {bits}");
+    let per_word = (64 / bits) as usize;
+    assert_eq!(
+        out.len(),
+        codes.len().div_ceil(per_word),
+        "word buffer does not match {} codes at {bits} bits",
+        codes.len()
+    );
     let mask = (1u64 << bits) - 1;
-    let mut words = vec![0u64; n_words];
+    out.fill(0);
     for (i, &c) in codes.iter().enumerate() {
         debug_assert!(
             (c as u64) <= mask,
             "code {c} does not fit in {bits} bits"
         );
-        let w = i / per_word;
-        let off = (i % per_word) as u32 * bits;
-        words[w] |= ((c as u64) & mask) << off;
-    }
-    PackedCodes {
-        bits,
-        len: codes.len(),
-        per_word,
-        mask,
-        words,
+        out[i / per_word] |= ((c as u64) & mask) << ((i % per_word) as u32 * bits);
     }
 }
 

@@ -13,7 +13,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coding::{pack_codes, CodingParams, PackedCodes, Scheme};
+use crate::coding::{BatchEncoder, CodingParams, PackedCodes};
 use crate::coordinator::metrics::Metrics;
 use crate::projection::Projector;
 
@@ -97,6 +97,10 @@ fn batch_loop(
     metrics: Arc<Metrics>,
 ) {
     let mut pending: Vec<Job> = Vec::with_capacity(cfg.max_batch);
+    // Fused encode state lives across flushes: the `h_{w,q}` offsets are
+    // computed once (they are part of the hash function) and the code
+    // scratch is reused, instead of reallocating both per flush.
+    let mut encoder = BatchEncoder::new(coding, projector.cfg.k);
     loop {
         // Wait for the first job of a batch.
         let first = match rx.recv() {
@@ -119,28 +123,23 @@ fn batch_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        flush(&mut pending, &projector, &coding, &metrics);
+        flush(&mut pending, &projector, &mut encoder, &metrics);
     }
 }
 
 /// Execute one batch synchronously.
-fn flush(pending: &mut Vec<Job>, projector: &Projector, coding: &CodingParams, metrics: &Metrics) {
+fn flush(
+    pending: &mut Vec<Job>,
+    projector: &Projector,
+    encoder: &mut BatchEncoder,
+    metrics: &Metrics,
+) {
     if pending.is_empty() {
         return;
     }
     let b = pending.len();
-    let d = pending.iter().map(|j| j.vector.len()).max().unwrap_or(1).max(1);
-    let k = projector.cfg.k;
-    // Assemble the (padded) batch.
-    let mut u = vec![0.0f32; b * d];
-    for (row, job) in pending.iter().enumerate() {
-        u[row * d..row * d + job.vector.len()].copy_from_slice(&job.vector);
-    }
-    let x = projector.project_batch(&u, b, d);
-    let offsets = match coding.scheme {
-        Scheme::WindowOffset => Some(coding.offsets(k)),
-        _ => None,
-    };
+    let k = encoder.k();
+    let x = projector.project_ragged(pending.iter().map(|j| j.vector.as_slice()), b);
     // Count the batch before releasing waiters so a client that reads
     // stats immediately after its response sees its own work reflected.
     metrics
@@ -149,11 +148,8 @@ fn flush(pending: &mut Vec<Job>, projector: &Projector, coding: &CodingParams, m
     metrics
         .vectors_projected
         .fetch_add(b as u64, std::sync::atomic::Ordering::Relaxed);
-    let bits = coding.bits_per_code();
-    let mut codes = vec![0u16; k];
     for (row, job) in pending.drain(..).enumerate() {
-        coding.encode_into(&x[row * k..(row + 1) * k], offsets.as_deref(), &mut codes);
-        let packed = pack_codes(&codes, bits);
+        let packed = encoder.encode_pack(&x[row * k..(row + 1) * k]);
         let _ = job.resp.send(packed);
     }
 }
@@ -161,6 +157,7 @@ fn flush(pending: &mut Vec<Job>, projector: &Projector, coding: &CodingParams, m
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::{pack_codes, Scheme};
     use crate::projection::ProjectionConfig;
 
     fn mk(k: usize, max_batch: usize, delay_ms: u64) -> (SketchBatcher, Arc<Metrics>) {

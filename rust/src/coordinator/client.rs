@@ -53,6 +53,20 @@ impl SketchClient {
         }
     }
 
+    /// Bulk register: `ids[i]` stores the sketch of `vectors[i]` via the
+    /// server's fused project→encode→pack→ingest pass. Returns the
+    /// number of sketches stored.
+    pub fn register_batch(
+        &mut self,
+        ids: Vec<String>,
+        vectors: Vec<Vec<f32>>,
+    ) -> crate::Result<u64> {
+        match self.call(&Request::RegisterBatch { ids, vectors })? {
+            Response::RegisteredBatch { count } => Ok(count),
+            other => Err(Self::bail(other)),
+        }
+    }
+
     /// Returns `(rho, std_err)`.
     pub fn estimate(&mut self, a: &str, b: &str) -> crate::Result<(f64, f64)> {
         match self.call(&Request::Estimate {
@@ -104,7 +118,11 @@ mod tests {
     use crate::projection::{ProjectionConfig, Projector};
     use std::sync::Arc;
 
-    fn spawn_server(k: usize) -> String {
+    /// Boot an ephemeral-port server and report its address. The server
+    /// thread owns the ready channel; if it dies before binding (port
+    /// exhaustion, bad addr), `recv` observes the dropped sender — that
+    /// is surfaced as an error here instead of an opaque `unwrap` panic.
+    fn spawn_server(k: usize) -> crate::Result<String> {
         let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
             k,
             seed: 1,
@@ -118,40 +136,73 @@ mod tests {
         std::thread::spawn(move || {
             let _ = serve(projector, cfg, Some(tx));
         });
-        rx.recv().unwrap().to_string()
+        let addr = rx.recv().map_err(|_| {
+            anyhow::anyhow!("server thread exited before reporting its bound address")
+        })?;
+        Ok(addr.to_string())
     }
 
     #[test]
-    fn end_to_end_over_tcp() {
-        let addr = spawn_server(512);
-        let mut c = SketchClient::connect(&addr).unwrap();
-        c.ping().unwrap();
+    fn end_to_end_over_tcp() -> crate::Result<()> {
+        let addr = spawn_server(512)?;
+        let mut c = SketchClient::connect(&addr)?;
+        c.ping()?;
         let (u, v) = crate::data::pairs::unit_pair_with_rho(64, 0.8, 21);
-        c.register("u", u.clone()).unwrap();
-        c.register("v", v).unwrap();
-        let (rho, err) = c.estimate("u", "v").unwrap();
+        c.register("u", u.clone())?;
+        c.register("v", v)?;
+        let (rho, err) = c.estimate("u", "v")?;
         assert!((rho - 0.8).abs() < 4.0 * err + 0.05, "rho {rho} err {err}");
-        let hits = c.knn(u.clone(), 2).unwrap();
+        let hits = c.knn(u.clone(), 2)?;
         assert_eq!(hits[0].id, "u"); // itself
-        let results = c.topk(vec![u], 2).unwrap();
+        let results = c.topk(vec![u.clone()], 2)?;
         assert_eq!(results.len(), 1);
         assert_eq!(results[0], hits);
-        let stats = c.stats().unwrap();
-        assert_eq!(stats.registered, 2);
+        // Bulk registration round-trips and lands in the same store.
+        let n = c.register_batch(
+            vec!["b0".into(), "b1".into()],
+            vec![u.clone(), u],
+        )?;
+        assert_eq!(n, 2);
+        let (rho_dup, _) = c.estimate("b0", "u")?;
+        assert!(rho_dup > 0.999, "identical vectors: rho {rho_dup}");
+        let stats = c.stats()?;
+        assert_eq!(stats.registered, 4);
         assert_eq!(stats.knn_queries, 2);
+        assert!(!stats.kernel.is_empty());
+        Ok(())
     }
 
     #[test]
-    fn server_error_propagates() {
-        let addr = spawn_server(64);
-        let mut c = SketchClient::connect(&addr).unwrap();
+    fn server_error_propagates() -> crate::Result<()> {
+        let addr = spawn_server(64)?;
+        let mut c = SketchClient::connect(&addr)?;
         let e = c.estimate("ghost", "ghost2");
         assert!(e.is_err());
+        Ok(())
     }
 
     #[test]
-    fn concurrent_clients() {
-        let addr = spawn_server(128);
+    fn dead_server_yields_error_not_panic() {
+        // A listener that accepts one connection and immediately drops
+        // it simulates a server dying mid-conversation: every later
+        // call must surface an error — nothing unwraps internally.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            drop(stream);
+        });
+        let mut c = SketchClient::connect(&addr).unwrap();
+        server.join().unwrap();
+        assert!(c.ping().is_err());
+        assert!(c.estimate("a", "b").is_err());
+        // Connecting to a port nothing listens on errors cleanly too.
+        assert!(SketchClient::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn concurrent_clients() -> crate::Result<()> {
+        let addr = spawn_server(128)?;
         let mut handles = Vec::new();
         for t in 0..6 {
             let addr = addr.clone();
@@ -168,8 +219,9 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let mut c = SketchClient::connect(&addr).unwrap();
-        let stats = c.stats().unwrap();
+        let mut c = SketchClient::connect(&addr)?;
+        let stats = c.stats()?;
         assert_eq!(stats.registered, 60);
+        Ok(())
     }
 }

@@ -14,10 +14,21 @@ pub struct LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn record(&self, micros: u64) {
+        self.record_n(micros, 1);
+    }
+
+    /// Record `n` samples of the same latency in O(1) — bulk paths
+    /// amortize one timing across a batch without under-weighting the
+    /// percentiles against per-request samples.
+    pub fn record_n(&self, micros: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
         let b = (64 - micros.max(1).leading_zeros() as usize - 1).min(31);
-        self.buckets[b].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(micros, Ordering::Relaxed);
+        self.buckets[b].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(micros.saturating_mul(n), Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -63,6 +74,9 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Counter-only snapshot. The scan-engine fields (`pending_rows`,
+    /// `drains`, `tombstones`, `kernel`) live in the store's epoch
+    /// arena; the server fills them in before answering `Stats`.
     pub fn snapshot(&self) -> super::protocol::StatsSnapshot {
         let batches = self.batches_executed.load(Ordering::Relaxed);
         let vectors = self.vectors_projected.load(Ordering::Relaxed);
@@ -79,6 +93,7 @@ impl Metrics {
             },
             p50_register_us: self.register_latency.percentile_us(0.50),
             p99_register_us: self.register_latency.percentile_us(0.99),
+            ..Default::default()
         }
     }
 }
@@ -99,6 +114,19 @@ mod tests {
         assert!((16..=64).contains(&p50), "p50 bucket {p50}");
         let p99 = h.percentile_us(0.99);
         assert!(p99 >= 1024, "p99 bucket {p99}");
+    }
+
+    #[test]
+    fn record_n_weights_bulk_samples() {
+        let h = LatencyHistogram::default();
+        h.record_n(10, 5);
+        h.record(1000);
+        assert_eq!(h.count(), 6);
+        // The five bulk samples dominate the median, not the lone slow one.
+        let p50 = h.percentile_us(0.5);
+        assert!((8..=32).contains(&p50), "p50 {p50}");
+        h.record_n(10, 0); // no-op
+        assert_eq!(h.count(), 6);
     }
 
     #[test]

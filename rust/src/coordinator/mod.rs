@@ -14,8 +14,10 @@
 //!             │             batches with a deadline, executes on the
 //!             │             Projector (PJRT artifact or pure Rust)
 //!             ├── store   — sharded map: id → PackedCodes, mirrored
-//!             │             into a columnar scan arena (crate::scan)
-//!             │             that serves Knn/TopK as sequential sweeps
+//!             │             into an epoch-buffered scan arena
+//!             │             (crate::scan) that serves Knn/TopK as
+//!             │             sequential sweeps; puts never take the
+//!             │             arena write lock
 //!             └── metrics — counters + latency histograms
 //! ```
 //!

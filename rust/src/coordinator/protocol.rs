@@ -26,6 +26,13 @@ pub enum Request {
     /// Batched top-n: one scan fan-out over the code arena per query
     /// vector, answered in request order.
     TopK { vectors: Vec<Vec<f32>>, n: u32 },
+    /// Bulk registration: `ids[i]` stores the sketch of `vectors[i]`,
+    /// via one fused project→quantize→pack pass and one bulk arena
+    /// ingest (no per-vector batching round-trip).
+    RegisterBatch {
+        ids: Vec<String>,
+        vectors: Vec<Vec<f32>>,
+    },
     /// Service statistics.
     Stats,
     /// Health check.
@@ -36,6 +43,7 @@ pub enum Request {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Registered { id: String },
+    RegisteredBatch { count: u64 },
     Estimate { rho: f64, std_err: f64, p_hat: f64 },
     Knn { hits: Vec<KnnHit> },
     TopK { results: Vec<Vec<KnnHit>> },
@@ -60,6 +68,14 @@ pub struct StatsSnapshot {
     pub mean_batch_size: f64,
     pub p50_register_us: u64,
     pub p99_register_us: u64,
+    /// Rows buffered in the current ingest epoch (arena mode).
+    pub pending_rows: u64,
+    /// Epoch drains executed so far.
+    pub drains: u64,
+    /// Sealed-arena tombstones plus this epoch's masked rows.
+    pub tombstones: u64,
+    /// Collision-kernel tier serving scans (`avx2`/`sse2`/`swar`).
+    pub kernel: String,
 }
 
 // ---- encoding primitives ----------------------------------------------
@@ -176,6 +192,18 @@ impl Request {
                 e.u32(*n);
                 e.0
             }
+            Request::RegisterBatch { ids, vectors } => {
+                let mut e = Enc::new(7);
+                e.u32(ids.len() as u32);
+                for id in ids {
+                    e.str(id);
+                }
+                e.u32(vectors.len() as u32);
+                for v in vectors {
+                    e.f32s(v);
+                }
+                e.0
+            }
         }
     }
 
@@ -212,6 +240,21 @@ impl Request {
                     vectors,
                     n: d.u32()?,
                 }
+            }
+            7 => {
+                let n_ids = d.u32()? as usize;
+                anyhow::ensure!(n_ids * 4 <= buf.len(), "bad id count");
+                let mut ids = Vec::with_capacity(n_ids);
+                for _ in 0..n_ids {
+                    ids.push(d.str()?);
+                }
+                let n_vecs = d.u32()? as usize;
+                anyhow::ensure!(n_vecs * 4 <= buf.len(), "bad batch size");
+                let mut vectors = Vec::with_capacity(n_vecs);
+                for _ in 0..n_vecs {
+                    vectors.push(d.f32s()?);
+                }
+                Request::RegisterBatch { ids, vectors }
             }
             t => anyhow::bail!("unknown request tag {t}"),
         };
@@ -258,12 +301,21 @@ impl Response {
                 e.f64(s.mean_batch_size);
                 e.u64(s.p50_register_us);
                 e.u64(s.p99_register_us);
+                e.u64(s.pending_rows);
+                e.u64(s.drains);
+                e.u64(s.tombstones);
+                e.str(&s.kernel);
                 e.0
             }
             Response::Pong => Enc::new(4).0,
             Response::Error { message } => {
                 let mut e = Enc::new(5);
                 e.str(message);
+                e.0
+            }
+            Response::RegisteredBatch { count } => {
+                let mut e = Enc::new(7);
+                e.u64(*count);
                 e.0
             }
             Response::TopK { results } => {
@@ -311,6 +363,10 @@ impl Response {
                 mean_batch_size: d.f64()?,
                 p50_register_us: d.u64()?,
                 p99_register_us: d.u64()?,
+                pending_rows: d.u64()?,
+                drains: d.u64()?,
+                tombstones: d.u64()?,
+                kernel: d.str()?,
             }),
             4 => Response::Pong,
             5 => Response::Error { message: d.str()? },
@@ -332,6 +388,7 @@ impl Response {
                 }
                 Response::TopK { results }
             }
+            7 => Response::RegisteredBatch { count: d.u64()? },
             t => anyhow::bail!("unknown response tag {t}"),
         };
         d.done()?;
@@ -403,6 +460,14 @@ mod tests {
             vectors: vec![],
             n: 0,
         });
+        roundtrip_req(Request::RegisterBatch {
+            ids: vec!["a".into(), "β".into()],
+            vectors: vec![vec![1.0, -2.0], vec![]],
+        });
+        roundtrip_req(Request::RegisterBatch {
+            ids: vec![],
+            vectors: vec![],
+        });
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Ping);
     }
@@ -445,8 +510,13 @@ mod tests {
         roundtrip_resp(Response::Stats(StatsSnapshot {
             registered: 10,
             mean_batch_size: 3.5,
+            pending_rows: 17,
+            drains: 3,
+            tombstones: 2,
+            kernel: "avx2".into(),
             ..Default::default()
         }));
+        roundtrip_resp(Response::RegisteredBatch { count: 512 });
         roundtrip_resp(Response::Pong);
         roundtrip_resp(Response::Error {
             message: "boom".into(),

@@ -1,17 +1,17 @@
 //! TCP server: thread-per-connection loop + request router.
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coding::{CodingParams, PackedCodes};
+use crate::coding::{BatchEncoder, CodingParams, PackedCodes};
 use crate::coordinator::batcher::{BatcherConfig, SketchBatcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::{self, KnnHit, Request, Response};
 use crate::coordinator::store::SketchStore;
 use crate::estimator::CollisionEstimator;
 use crate::projection::Projector;
-use crate::scan::{scan_topk, scan_topk_batch};
+use crate::scan::EpochConfig;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -19,6 +19,8 @@ pub struct ServerConfig {
     pub addr: String,
     pub coding: CodingParams,
     pub batcher: BatcherConfig,
+    /// Ingest-epoch drain/compaction policy for the scan arena.
+    pub epoch: EpochConfig,
 }
 
 impl Default for ServerConfig {
@@ -27,9 +29,23 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7474".to_string(),
             coding: CodingParams::new(crate::coding::Scheme::TwoBit, 0.75),
             batcher: BatcherConfig::default(),
+            epoch: EpochConfig::default(),
         }
     }
 }
+
+/// Fused bulk-ingest state: one encoder (cached offsets + scratch) and
+/// one word buffer, reused across `RegisterBatch` requests.
+struct BulkIngest {
+    encoder: BatchEncoder,
+    words: Vec<u64>,
+}
+
+/// Upper bound on the padded projection workspace (`b·d` f32 cells) one
+/// `RegisterBatch` may demand. Vectors are padded to the batch's max
+/// dimension, so without this cap a frame mixing one huge vector with
+/// many tiny ones would force an allocation quadratic in frame size.
+const MAX_BULK_CELLS: usize = 1 << 24; // 64 MiB of f32 workspace
 
 /// Shared service state.
 pub struct ServiceState {
@@ -38,25 +54,40 @@ pub struct ServiceState {
     pub estimator: CollisionEstimator,
     pub metrics: Arc<Metrics>,
     pub k: usize,
+    /// Shared with the batcher worker; `RegisterBatch` projects whole
+    /// batches directly (they need no size-or-deadline coalescing).
+    projector: Arc<Projector>,
+    bulk: Mutex<BulkIngest>,
 }
 
 impl ServiceState {
     pub fn new(projector: Arc<Projector>, cfg: &ServerConfig) -> Arc<Self> {
         let metrics = Arc::new(Metrics::default());
         let batcher = SketchBatcher::spawn(
-            projector,
+            projector.clone(),
             cfg.coding.clone(),
             cfg.batcher.clone(),
             metrics.clone(),
         );
         let k = batcher.k;
         Arc::new(ServiceState {
-            // Arena-backed: Knn/TopK run as columnar scans, not map walks.
-            store: SketchStore::with_arena(k, cfg.coding.bits_per_code()),
+            // Arena-backed: Knn/TopK run as columnar scans, not map
+            // walks, and registration is epoch-buffered so it never
+            // waits behind them.
+            store: SketchStore::with_arena_config(
+                k,
+                cfg.coding.bits_per_code(),
+                cfg.epoch.clone(),
+            ),
             estimator: CollisionEstimator::new(cfg.coding.clone()),
             batcher,
             metrics,
             k,
+            bulk: Mutex::new(BulkIngest {
+                encoder: BatchEncoder::new(cfg.coding.clone(), k),
+                words: Vec::new(),
+            }),
+            projector,
         })
     }
 
@@ -122,20 +153,24 @@ impl ServiceState {
     /// arena-backed (both constructors build it that way), so the scan
     /// engine is the one authoritative ranking path.
     fn topk_hits(&self, q: &PackedCodes, n: usize) -> Vec<KnnHit> {
-        let arena = self
-            .store
-            .arena()
-            .expect("service store is arena-backed")
-            .read()
-            .unwrap();
-        self.to_knn_hits(scan_topk(&arena, q, n, 0))
+        let arena = self.store.arena().expect("service store is arena-backed");
+        self.to_knn_hits(arena.scan_topk(q, n, 0))
     }
 
     /// Handle one request (the router).
     pub fn handle(&self, req: Request) -> Response {
         match req {
             Request::Ping => Response::Pong,
-            Request::Stats => Response::Stats(self.metrics.snapshot()),
+            Request::Stats => {
+                let mut st = self.metrics.snapshot();
+                if let Some(arena) = self.store.arena() {
+                    st.pending_rows = arena.pending_rows() as u64;
+                    st.drains = arena.drains();
+                    st.tombstones = arena.tombstones() as u64;
+                    st.kernel = arena.kernel_kind().label().to_string();
+                }
+                Response::Stats(st)
+            }
             Request::Register { id, vector } => {
                 let t0 = Instant::now();
                 match self.batcher.sketch(vector) {
@@ -219,18 +254,71 @@ impl ServiceState {
                 self.metrics
                     .knn_queries
                     .fetch_add(queries.len() as u64, std::sync::atomic::Ordering::Relaxed);
-                let arena = self
-                    .store
-                    .arena()
-                    .expect("service store is arena-backed")
-                    .read()
-                    .unwrap();
-                let results = scan_topk_batch(&arena, &queries, n as usize, 0)
+                let arena = self.store.arena().expect("service store is arena-backed");
+                let results = arena
+                    .scan_topk_batch(&queries, n as usize, 0)
                     .into_iter()
                     .map(|hits| self.to_knn_hits(hits))
                     .collect();
                 Response::TopK { results }
             }
+            Request::RegisterBatch { ids, vectors } => self.register_batch(ids, vectors),
+        }
+    }
+
+    /// The fused bulk-ingest path: one batched projection, one
+    /// encode+pack pass into a reused word buffer, one bulk arena
+    /// insert. Sketches are byte-identical to per-vector `Register`
+    /// (same projector, same coding, same packing).
+    fn register_batch(&self, ids: Vec<String>, vectors: Vec<Vec<f32>>) -> Response {
+        if ids.len() != vectors.len() {
+            return Response::Error {
+                message: format!(
+                    "ids/vectors length mismatch ({} vs {})",
+                    ids.len(),
+                    vectors.len()
+                ),
+            };
+        }
+        if ids.is_empty() {
+            return Response::RegisteredBatch { count: 0 };
+        }
+        let t0 = Instant::now();
+        let b = vectors.len();
+        let d = vectors.iter().map(|v| v.len()).max().unwrap_or(1).max(1);
+        if b.saturating_mul(d) > MAX_BULK_CELLS {
+            return Response::Error {
+                message: format!(
+                    "batch of {b} vectors padded to dim {d} exceeds the bulk \
+                     workspace limit of {MAX_BULK_CELLS} cells"
+                ),
+            };
+        }
+        let x = self
+            .projector
+            .project_ragged(vectors.iter().map(|v| v.as_slice()), b);
+        let stored = {
+            let mut bulk = self.bulk.lock().unwrap();
+            let BulkIngest { encoder, words } = &mut *bulk;
+            encoder.encode_pack_batch_into(&x, b, words);
+            self.store.put_rows(&ids, words)
+        };
+        match stored {
+            Ok(()) => {
+                use std::sync::atomic::Ordering::Relaxed;
+                self.metrics.registered.fetch_add(b as u64, Relaxed);
+                self.metrics.batches_executed.fetch_add(1, Relaxed);
+                self.metrics.vectors_projected.fetch_add(b as u64, Relaxed);
+                // One amortized sample per vector, so the percentiles
+                // weight bulk and per-request registrations equally.
+                self.metrics
+                    .register_latency
+                    .record_n((t0.elapsed().as_micros() as u64 / b as u64).max(1), b as u64);
+                Response::RegisteredBatch { count: b as u64 }
+            }
+            Err(e) => Response::Error {
+                message: format!("bulk register failed: {e}"),
+            },
         }
     }
 }
@@ -427,6 +515,51 @@ mod tests {
                 Response::Knn { hits } => assert_eq!(&hits, want),
                 other => panic!("unexpected {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn register_batch_matches_per_vector_register() {
+        let s = state(256);
+        let mut g = crate::mathx::Pcg64::new(31, 0);
+        let vectors: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..40).map(|_| g.next_f64() as f32 - 0.5).collect())
+            .collect();
+        for (i, v) in vectors.iter().enumerate() {
+            s.handle(Request::Register {
+                id: format!("single{i}"),
+                vector: v.clone(),
+            });
+        }
+        let ids: Vec<String> = (0..20).map(|i| format!("bulk{i}")).collect();
+        match s.handle(Request::RegisterBatch {
+            ids: ids.clone(),
+            vectors: vectors.clone(),
+        }) {
+            Response::RegisteredBatch { count } => assert_eq!(count, 20),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The fused pipeline must produce byte-identical sketches.
+        for i in 0..20 {
+            assert_eq!(
+                s.store.get(&format!("bulk{i}")),
+                s.store.get(&format!("single{i}")),
+                "vector {i}"
+            );
+        }
+        match s.handle(Request::RegisterBatch {
+            ids,
+            vectors: vec![],
+        }) {
+            Response::Error { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::Stats) {
+            Response::Stats(st) => {
+                assert_eq!(st.registered, 40);
+                assert!(!st.kernel.is_empty(), "stats must name the scan kernel");
+            }
+            other => panic!("unexpected {other:?}"),
         }
     }
 

@@ -7,16 +7,36 @@
 //! * **Map-only** ([`SketchStore::new`]) — the sharded `HashMap` alone;
 //!   sketches of any shape.
 //! * **Arena-backed** ([`SketchStore::with_arena`]) — every put/remove is
-//!   mirrored into a columnar [`CodeArena`] so `Knn`/`TopK` queries run
-//!   as sequential scans ([`crate::scan`]) instead of pointer-chasing the
+//!   mirrored into an [`EpochArena`] so `Knn`/`TopK` queries run as
+//!   columnar scans ([`crate::scan`]) instead of pointer-chasing the
 //!   map. All sketches must then share one `(k, bits)` shape.
+//!
+//! Writes in arena mode go through the epoch buffer: `put`/`remove`
+//! take a shard write lock, a sealed *read* lock, and the small pending
+//! mutex — never the arena write lock — so registration keeps flowing
+//! while scans hold the read side. When the pending load crosses the
+//! drain threshold, the writer that crossed it attempts a bulk fold
+//! (outside its shard critical section) with a *try*-lock: under read
+//! pressure the fold is skipped — the register path never waits on the
+//! sealed write lock — and a later write retries once the scans finish.
+//! One bounded exception: if sustained scans starve the fold until the
+//! pending load reaches [`crate::scan::epoch::RELIEF_FACTOR`]× the
+//! threshold, the crossing writer folds with a blocking acquisition so
+//! pending memory cannot grow without bound.
+//!
+//! Consistency: for one id, the map and arena are updated under that
+//! id's shard write lock, so per-id last-writer-wins holds across both
+//! views. The bulk path ([`SketchStore::put_rows`]) updates the arena
+//! first and the map after, without a covering lock — a concurrent
+//! single `put` of the same id may interleave, which is the documented
+//! tradeoff of bulk ingest.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::RwLock;
 
 use crate::coding::PackedCodes;
-use crate::scan::CodeArena;
+use crate::scan::{EpochArena, EpochConfig};
 
 const N_SHARDS: usize = 16;
 
@@ -28,7 +48,7 @@ pub struct SketchStore {
     /// sweep all shard locks (it sits on the metrics path).
     count: AtomicUsize,
     /// Columnar mirror for the scan engine (arena-backed mode only).
-    arena: Option<RwLock<CodeArena>>,
+    arena: Option<EpochArena>,
 }
 
 impl Default for SketchStore {
@@ -51,16 +71,20 @@ impl SketchStore {
     /// (rounded up to a supported packing width). Every sketch put into
     /// this store must match that shape.
     pub fn with_arena(k: usize, bits: u32) -> Self {
+        Self::with_arena_config(k, bits, EpochConfig::default())
+    }
+
+    /// As [`SketchStore::with_arena`] with explicit drain/compaction
+    /// policy.
+    pub fn with_arena_config(k: usize, bits: u32, cfg: EpochConfig) -> Self {
         let mut s = Self::new();
-        s.arena = Some(RwLock::new(CodeArena::new(k, bits)));
+        s.arena = Some(EpochArena::with_config(k, bits, cfg));
         s
     }
 
-    /// The columnar mirror, when in arena-backed mode. Writers (`put`,
-    /// `remove`) take the arena lock *before* any shard lock, so it is
-    /// safe to call this store's read methods while holding the arena
-    /// read lock; do not call `put`/`remove` while holding it.
-    pub fn arena(&self) -> Option<&RwLock<CodeArena>> {
+    /// The columnar mirror, when in arena-backed mode. Scans through it
+    /// never block `put`/`remove` (epoch-buffered writes).
+    pub fn arena(&self) -> Option<&EpochArena> {
         self.arena.as_ref()
     }
 
@@ -73,21 +97,62 @@ impl SketchStore {
         &self.shards[(h as usize) % N_SHARDS]
     }
 
-    /// Insert or replace a sketch.
+    /// Insert or replace a sketch. In arena mode this touches the shard
+    /// lock, a sealed read lock, and the pending mutex — never the arena
+    /// write lock — and opportunistically folds the epoch afterwards if
+    /// this write armed the drain threshold (try-lock; skipped while
+    /// scans hold the read side).
     pub fn put(&self, id: String, codes: PackedCodes) {
-        // Lock order: arena (outer) before shard (inner). Shard locks
-        // are only ever written under the arena write lock, so a caller
-        // holding the arena *read* lock (from [`SketchStore::arena`])
-        // may safely call any read method here without deadlocking, and
-        // the two views stay consistent under concurrent writers.
-        let mut arena_guard = self.arena.as_ref().map(|a| a.write().unwrap());
-        let mut guard = self.shard(&id).write().unwrap();
-        if let Some(arena) = arena_guard.as_deref_mut() {
-            arena.insert(&id, &codes);
+        let mut drain_due = false;
+        {
+            let mut guard = self.shard(&id).write().unwrap();
+            if let Some(arena) = &self.arena {
+                drain_due = arena.put(&id, &codes);
+            }
+            if guard.insert(id, codes).is_none() {
+                self.count.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        if guard.insert(id, codes).is_none() {
-            self.count.fetch_add(1, Ordering::Relaxed);
+        if drain_due {
+            if let Some(arena) = &self.arena {
+                arena.relieve();
+            }
         }
+    }
+
+    /// Bulk insert: `ids[i]`'s packed row is
+    /// `words[i·stride..(i+1)·stride]` in arena layout — the fused
+    /// encode pipeline's ingest. One pending-buffer lock round-trip for
+    /// the whole batch; requires arena mode (the batch already has one
+    /// fixed shape).
+    pub fn put_rows(&self, ids: &[String], words: &[u64]) -> crate::Result<()> {
+        let arena = self
+            .arena
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("put_rows requires an arena-backed store"))?;
+        let stride = arena.stride();
+        anyhow::ensure!(
+            words.len() == ids.len() * stride,
+            "bulk buffer holds {} words for {} rows of stride {stride}",
+            words.len(),
+            ids.len()
+        );
+        let drain_due = arena.put_rows(ids, words);
+        for (i, id) in ids.iter().enumerate() {
+            let codes = PackedCodes::from_words(
+                arena.bits(),
+                arena.k(),
+                words[i * stride..(i + 1) * stride].to_vec(),
+            );
+            let mut guard = self.shard(id).write().unwrap();
+            if guard.insert(id.clone(), codes).is_none() {
+                self.count.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if drain_due {
+            arena.relieve();
+        }
+        Ok(())
     }
 
     /// Fetch a clone of a sketch.
@@ -100,15 +165,23 @@ impl SketchStore {
     }
 
     pub fn remove(&self, id: &str) -> bool {
-        // Same lock order as `put`: arena before shard.
-        let mut arena_guard = self.arena.as_ref().map(|a| a.write().unwrap());
-        let mut guard = self.shard(id).write().unwrap();
-        if let Some(arena) = arena_guard.as_deref_mut() {
-            arena.remove(id);
-        }
-        let removed = guard.remove(id).is_some();
-        if removed {
-            self.count.fetch_sub(1, Ordering::Relaxed);
+        let removed = {
+            let mut guard = self.shard(id).write().unwrap();
+            if let Some(arena) = &self.arena {
+                arena.remove(id);
+            }
+            let removed = guard.remove(id).is_some();
+            if removed {
+                self.count.fetch_sub(1, Ordering::Relaxed);
+            }
+            removed
+        };
+        // Delete-heavy phases arm the drain threshold too — fold and
+        // compact without waiting for a later put.
+        if let Some(arena) = &self.arena {
+            if removed && arena.drain_due() {
+                arena.relieve();
+            }
         }
         removed
     }
@@ -122,7 +195,7 @@ impl SketchStore {
         self.len() == 0
     }
 
-    /// Visit every `(id, sketch)` pair (used by the kNN scan). The
+    /// Visit every `(id, sketch)` pair (used by persistence). The
     /// visitor runs under each shard's read lock in turn.
     pub fn for_each<F: FnMut(&str, &PackedCodes)>(&self, mut f: F) {
         for s in &self.shards {
@@ -216,19 +289,82 @@ mod tests {
         s.put("id7".into(), sketch(99)); // overwrite
         assert!(s.remove("id3"));
         assert_eq!(s.len(), 29);
-        let arena = s.arena().unwrap().read().unwrap();
+        let arena = s.arena().unwrap();
         assert_eq!(arena.len(), 29);
         assert_eq!(arena.get("id7").unwrap(), sketch(99));
         assert!(arena.get("id3").is_none());
         for i in [0u16, 1, 2, 4, 5, 28, 29] {
             assert_eq!(arena.get(&format!("id{i}")), s.get(&format!("id{i}")));
         }
+        // The mirror stays exact across a drain.
+        arena.drain();
+        assert_eq!(arena.len(), 29);
+        assert_eq!(arena.get("id7").unwrap(), sketch(99));
+        assert!(arena.get("id3").is_none());
+    }
+
+    #[test]
+    fn arena_mode_auto_drains_at_threshold() {
+        let s = SketchStore::with_arena_config(
+            64,
+            2,
+            EpochConfig {
+                drain_threshold: 16,
+                ..EpochConfig::default()
+            },
+        );
+        for i in 0..100 {
+            s.put(format!("id{i}"), sketch(i));
+        }
+        let arena = s.arena().unwrap();
+        assert!(arena.drains() >= 5, "drains {}", arena.drains());
+        assert!(arena.pending_load() < 16);
+        assert_eq!(arena.len(), 100);
+        // Delete-heavy phases fold too — removes arm the threshold.
+        let drains_before = arena.drains();
+        for i in 0..64 {
+            assert!(s.remove(&format!("id{i}")));
+        }
+        assert!(
+            arena.drains() > drains_before,
+            "removes alone must trigger drains"
+        );
+        assert_eq!(arena.len(), 36);
+        assert_eq!(s.len(), 36);
+    }
+
+    #[test]
+    fn bulk_put_rows_matches_singles() {
+        let s = SketchStore::with_arena(64, 2);
+        let stride = s.arena().unwrap().stride();
+        let ids: Vec<String> = (0..10).map(|i| format!("b{i}")).collect();
+        let mut words = Vec::with_capacity(10 * stride);
+        for i in 0..10u16 {
+            words.extend_from_slice(sketch(i).words());
+        }
+        s.put_rows(&ids, &words).unwrap();
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.arena().unwrap().len(), 10);
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(s.get(id).unwrap(), sketch(i as u16), "{id}");
+            assert_eq!(s.arena().unwrap().get(id).unwrap(), sketch(i as u16));
+        }
+        // Shape errors are reported, not panicked.
+        assert!(s.put_rows(&ids, &words[..words.len() - 1]).is_err());
+        assert!(SketchStore::new().put_rows(&ids, &words).is_err());
     }
 
     #[test]
     fn concurrent_arena_mode_stays_consistent() {
         use std::sync::Arc;
-        let s = Arc::new(SketchStore::with_arena(64, 2));
+        let s = Arc::new(SketchStore::with_arena_config(
+            64,
+            2,
+            EpochConfig {
+                drain_threshold: 32, // force mid-test drains
+                ..EpochConfig::default()
+            },
+        ));
         let mut handles = Vec::new();
         for t in 0..4 {
             let s = s.clone();
@@ -246,6 +382,8 @@ mod tests {
         }
         let live = 4 * (40 - 14);
         assert_eq!(s.len(), live);
-        assert_eq!(s.arena().unwrap().read().unwrap().len(), live);
+        assert_eq!(s.arena().unwrap().len(), live);
+        s.arena().unwrap().drain();
+        assert_eq!(s.arena().unwrap().len(), live);
     }
 }

@@ -28,10 +28,17 @@
 //! * **Layer 3 (this crate)** — the runtime system. [`runtime`] loads the
 //!   AOT artifacts via PJRT; [`projection`] tiles arbitrary workloads onto
 //!   the fixed artifact shapes; [`coordinator`] serves sketch/similarity
-//!   requests over TCP with dynamic batching; [`scan`] answers `Knn` and
-//!   batched `TopK` queries with a columnar code arena swept by SWAR
-//!   collision kernels into an exact top-k selection, sharded across
-//!   threads. Python never runs on the request path.
+//!   requests over TCP with dynamic batching and a fused
+//!   project→quantize→pack bulk-ingest path ([`coding::BatchEncoder`]);
+//!   [`scan`] answers `Knn` and batched `TopK` queries with a columnar
+//!   code arena swept by runtime-dispatched collision kernels (AVX2 →
+//!   SSE2 → portable SWAR, all byte-identical; `CRP_SCAN_KERNEL=swar`
+//!   forces the portable tier) into an exact top-k selection, sharded
+//!   across threads. Registration is epoch-buffered
+//!   ([`scan::EpochArena`]): writers land in a pending buffer beside the
+//!   sealed arena and never take the write lock scans read behind, with
+//!   bulk drains and tombstone-aware compaction per epoch. Python never
+//!   runs on the request path.
 //!
 //! ## Analysis stack
 //!

@@ -102,6 +102,7 @@ COMMANDS:
   mc-variance  --k K --reps R --w W [--mle]     Monte-Carlo check of Theorems 2-4
   lsh-eval     --corpus N --dim D --tables T --k-per-table K --queries Q
   serve        --addr A --k K --scheme S --w W [--pjrt] [--snapshot F]
+               [--drain-threshold N]  ingest-epoch size before a bulk fold
   bench-serve  --addr A --n N --dim D --connections C
   topk         --sketches N --k K --scheme S --w W --top T --queries Q --threads P --rho R
                scan-engine demo: exact top-k over a packed-code arena
@@ -109,6 +110,14 @@ COMMANDS:
   estimate     --rho R --k K --w W --dim D       one-shot estimation demo
   bit-budget   --rho R                            optimized V per bit budget
   help
+
+SCAN KERNELS:
+  Scans auto-select the widest collision kernel the CPU supports
+  (avx2 > sse2 > swar) once per scanner; all tiers rank byte-identically.
+  Set CRP_SCAN_KERNEL=swar|sse2|avx2 to force a tier (swar = portable
+  path; an unavailable forced tier falls back to auto-selection).
+  Registration is epoch-buffered: puts never take the scan arena's write
+  lock, and each epoch folds in bulk at --drain-threshold pending rows.
 ";
 
 fn main() -> crp::Result<()> {
@@ -178,6 +187,7 @@ fn main() -> crp::Result<()> {
             let k: usize = a.get("k", 256)?;
             let scheme = parse_scheme(&a.get_str("scheme", "two-bit"))?;
             let w: f64 = a.get("w", 0.75)?;
+            let drain_threshold: usize = a.get("drain-threshold", 4096)?;
             let cfg = ProjectionConfig {
                 k,
                 seed: 0,
@@ -190,14 +200,22 @@ fn main() -> crp::Result<()> {
             } else {
                 Projector::new_cpu(cfg)
             };
+            let coding = CodingParams::new(scheme, w);
+            let kernel = crp::scan::CollisionKernel::select(coding.bits_per_code());
             eprintln!(
-                "serving on {addr} (k={k}, scheme={}, w={w}, pjrt_active={})",
+                "serving on {addr} (k={k}, scheme={}, w={w}, pjrt_active={}, \
+                 scan_kernel={}, drain_threshold={drain_threshold})",
                 scheme.label(),
-                projector.pjrt_active()
+                projector.pjrt_active(),
+                kernel.kind().label()
             );
             let server_cfg = crp::coordinator::ServerConfig {
                 addr,
-                coding: CodingParams::new(scheme, w),
+                coding,
+                epoch: crp::scan::EpochConfig {
+                    drain_threshold,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             if let Some(snap) = a.get_opt("snapshot") {
@@ -338,12 +356,14 @@ fn run_topk_demo(
         }
     }
     eprintln!(
-        "arena: {} sketches x {} codes @ {} bit(s) = {:.1} MiB, built in {:.2}s",
+        "arena: {} sketches x {} codes @ {} bit(s) = {:.1} MiB, built in {:.2}s \
+         (kernel: {})",
         sketches,
         k,
         arena.bits(),
         arena.storage_bytes() as f64 / (1 << 20) as f64,
-        t_build.elapsed().as_secs_f64()
+        t_build.elapsed().as_secs_f64(),
+        crp::scan::CollisionKernel::select(arena.bits()).kind().label()
     );
 
     let c = (1.0 - rho * rho).sqrt();

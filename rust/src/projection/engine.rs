@@ -134,6 +134,31 @@ impl Projector {
         self.project_batch(u, 1, u.len())
     }
 
+    /// Project variable-length vectors as one batch: rows are zero-padded
+    /// to the longest vector, which does not change their projections
+    /// (padded coordinates contribute nothing — see the
+    /// `padding_invariance` test). This is the one batch-assembly path
+    /// shared by the dynamic batcher and the bulk-ingest handler, so the
+    /// two cannot drift apart. Returns `x[b, k]`.
+    pub fn project_ragged<'a, I>(&self, vectors: I, b: usize) -> Vec<f32>
+    where
+        I: Iterator<Item = &'a [f32]>,
+    {
+        let mut u: Vec<f32> = Vec::new();
+        let mut d = 1usize;
+        let mut rows: Vec<&[f32]> = Vec::with_capacity(b);
+        for v in vectors {
+            d = d.max(v.len());
+            rows.push(v);
+        }
+        assert_eq!(rows.len(), b, "ragged batch row count mismatch");
+        u.resize(b * d, 0.0);
+        for (row, v) in rows.iter().enumerate() {
+            u[row * d..row * d + v.len()].copy_from_slice(v);
+        }
+        self.project_batch(&u, b, d)
+    }
+
     /// Project a row-major batch `u[b, d]` → `x[b, k]`.
     pub fn project_batch(&self, u: &[f32], b: usize, d: usize) -> Vec<f32> {
         assert_eq!(u.len(), b * d);
@@ -293,6 +318,23 @@ mod tests {
         let xd = p.project_dense(&dense);
         for (a, b) in xs.iter().zip(&xd) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ragged_batch_matches_rowwise_dense() {
+        let p = Projector::new_cpu(cfg(12, 32));
+        let vs: Vec<Vec<f32>> = vec![randv(10, 1), randv(40, 2), vec![], randv(33, 3)];
+        let x = p.project_ragged(vs.iter().map(|v| v.as_slice()), vs.len());
+        assert_eq!(x.len(), vs.len() * 12);
+        for (row, v) in vs.iter().enumerate() {
+            let want = p.project_dense(v);
+            for j in 0..12 {
+                assert!(
+                    (x[row * 12 + j] - want[j]).abs() < 1e-4,
+                    "row {row} col {j}"
+                );
+            }
         }
     }
 

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use crate::coding::{supported_width, PackedCodes};
 
 /// Dense word-major storage for fixed-shape packed sketches.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct CodeArena {
     /// Codes per sketch.
     k: usize,
@@ -88,7 +88,16 @@ impl CodeArena {
     pub fn insert(&mut self, id: &str, codes: &PackedCodes) -> u32 {
         assert_eq!(codes.len, self.k, "sketch length mismatch");
         assert_eq!(codes.bits, self.bits, "sketch bit width mismatch");
-        debug_assert_eq!(codes.words().len(), self.stride);
+        self.insert_row_words(id, codes.words())
+    }
+
+    /// Insert or replace the sketch for `id` from raw row words already
+    /// in arena layout: exactly [`CodeArena::stride`] words with padding
+    /// bits zero, as produced by [`crate::coding::pack_codes`] (or
+    /// [`crate::coding::BatchEncoder`]) at this arena's shape. This is
+    /// the fused-ingest path — no `PackedCodes` is materialized.
+    pub fn insert_row_words(&mut self, id: &str, words: &[u64]) -> u32 {
+        assert_eq!(words.len(), self.stride, "row word count mismatch");
         let row = match self.rows.get(id) {
             Some(&row) => row,
             None => {
@@ -100,7 +109,7 @@ impl CodeArena {
             }
         };
         let start = row as usize * self.stride;
-        self.words[start..start + self.stride].copy_from_slice(codes.words());
+        self.words[start..start + self.stride].copy_from_slice(words);
         row
     }
 
@@ -143,6 +152,25 @@ impl CodeArena {
         &self.words[start..start + self.stride]
     }
 
+    /// Drop every row — ids, tombstones, and words — keeping the
+    /// allocated capacity (the epoch buffer resets itself this way after
+    /// each drain).
+    pub fn clear(&mut self) {
+        self.words.clear();
+        self.ids.clear();
+        self.rows.clear();
+    }
+
+    /// Copy out the raw row storage (words + ids) without rebuilding the
+    /// id → row index — the cheap snapshot read-only sweeps need.
+    pub fn rows_snapshot(&self) -> RowsSnapshot {
+        RowsSnapshot {
+            stride: self.stride,
+            words: self.words.clone(),
+            ids: self.ids.clone(),
+        }
+    }
+
     /// Drop tombstoned rows, remapping survivors downward in insertion
     /// order. Returns the number of rows reclaimed.
     pub fn compact(&mut self) -> usize {
@@ -167,6 +195,35 @@ impl CodeArena {
         self.ids.truncate(write);
         self.words.truncate(write * self.stride);
         reclaimed
+    }
+}
+
+/// A point-in-time copy of an arena's rows, sweepable without any lock
+/// or id-index — see [`CodeArena::rows_snapshot`].
+#[derive(Clone, Debug)]
+pub struct RowsSnapshot {
+    stride: usize,
+    words: Vec<u64>,
+    ids: Vec<Option<String>>,
+}
+
+impl RowsSnapshot {
+    /// Rows captured, including tombstones — the sweep range.
+    pub fn rows_allocated(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Id stored at `row` (`None` for tombstones).
+    #[inline]
+    pub fn id_of(&self, row: u32) -> Option<&str> {
+        self.ids.get(row as usize)?.as_deref()
+    }
+
+    /// Raw words of `row` (zeros for tombstones).
+    #[inline]
+    pub fn row_words(&self, row: u32) -> &[u64] {
+        let start = row as usize * self.stride;
+        &self.words[start..start + self.stride]
     }
 }
 

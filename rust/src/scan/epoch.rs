@@ -1,0 +1,644 @@
+//! Epoch-buffered ingest: writes land beside the sealed arena instead of
+//! behind it.
+//!
+//! The seed design had `SketchStore::put` take the [`CodeArena`] write
+//! lock *outer* to the shard locks, so every register serialized against
+//! in-flight scans holding the read side. [`EpochArena`] splits the
+//! columnar state in two:
+//!
+//! * a **sealed** arena behind an `RwLock` that scans share read-side
+//!   and only [`EpochArena::drain`] ever write-locks, and
+//! * a small **pending** epoch buffer behind a plain `Mutex` — an arena
+//!   of rows written since the last drain plus a sorted list of sealed
+//!   rows *masked* (overridden or removed) this epoch.
+//!
+//! Writers touch only the pending mutex plus a sealed *read* lock (to
+//! resolve which sealed row an overwrite masks), so ingest never waits
+//! on a scan. Scans sweep the pending rows under the mutex — bounded by
+//! the drain threshold — and the sealed arena under the read lock with
+//! the masked rows skipped; results are byte-identical to scanning one
+//! fully drained arena because ranking orders by
+//! `(collisions desc, id asc)`, independent of row placement.
+//!
+//! A **drain** folds the pending buffer into the sealed arena in bulk —
+//! one short write-lock hold per epoch, amortized over
+//! [`EpochConfig::drain_threshold`] writes — and runs the
+//! tombstone-aware compaction policy behind the same write lock. The
+//! ingest path uses the non-blocking [`EpochArena::try_drain`], so even
+//! the fold never makes a register wait behind a scan: under read
+//! pressure the pending buffer just keeps absorbing writes and a later
+//! write retries the fold.
+//!
+//! Lock order is `sealed` before `pending` everywhere (put, remove,
+//! scan, drain), so the two can never deadlock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use super::arena::{CodeArena, RowsSnapshot};
+use super::scanner::{self, ScanHit};
+use super::simd::{CollisionKernel, KernelKind};
+use super::topk::TopK;
+use crate::coding::PackedCodes;
+
+/// Drain and compaction policy knobs.
+#[derive(Clone, Debug)]
+pub struct EpochConfig {
+    /// Pending load (inserted rows + masked sealed rows) that arms an
+    /// automatic drain; [`EpochArena::put`] reports it so the caller can
+    /// fold outside its own critical section.
+    pub drain_threshold: usize,
+    /// Compact the sealed arena during a drain when tombstones exceed
+    /// this fraction of its allocated rows…
+    pub compact_ratio: f64,
+    /// …and this absolute floor (avoids thrashing small arenas).
+    pub compact_min: usize,
+}
+
+impl Default for EpochConfig {
+    fn default() -> Self {
+        EpochConfig {
+            drain_threshold: 4096,
+            compact_ratio: 0.25,
+            compact_min: 1024,
+        }
+    }
+}
+
+/// Pending load (as a multiple of the drain threshold) beyond which
+/// [`EpochArena::relieve`] stops deferring to scans and folds with a
+/// blocking write-lock acquisition — the hard bound on pending growth.
+pub const RELIEF_FACTOR: usize = 8;
+
+/// One epoch's write set.
+#[derive(Debug)]
+struct Pending {
+    /// Rows written this epoch (same shape as the sealed arena; deletes
+    /// of same-epoch rows tombstone here as usual).
+    inserts: CodeArena,
+    /// Sealed rows hidden this epoch (removed or overridden), sorted
+    /// ascending so sweeps skip them with a pointer walk.
+    masked: Vec<u32>,
+    /// Bumped on every mutation; keys the scan-side snapshot cache.
+    generation: u64,
+}
+
+/// Cached pending snapshot shared by scans between writes.
+#[derive(Debug)]
+struct SnapCache {
+    generation: u64,
+    rows: std::sync::Arc<RowsSnapshot>,
+    masked: std::sync::Arc<Vec<u32>>,
+}
+
+impl Pending {
+    /// Mask `row`; returns whether it was newly masked.
+    fn mask(&mut self, row: u32) -> bool {
+        match self.masked.binary_search(&row) {
+            Err(pos) => {
+                self.masked.insert(pos, row);
+                true
+            }
+            Ok(_) => false,
+        }
+    }
+
+    /// Write load counted against the drain threshold.
+    fn load(&self) -> usize {
+        self.inserts.rows_allocated() + self.masked.len()
+    }
+}
+
+/// Columnar sketch storage with epoch-buffered writes and a cached,
+/// runtime-dispatched collision kernel (selected once at construction).
+#[derive(Debug)]
+pub struct EpochArena {
+    k: usize,
+    bits: u32,
+    stride: usize,
+    kernel: CollisionKernel,
+    cfg: EpochConfig,
+    sealed: RwLock<CodeArena>,
+    pending: Mutex<Pending>,
+    /// Scan-side snapshot of the pending buffer, reused until the next
+    /// write bumps the pending generation.
+    snap: Mutex<Option<SnapCache>>,
+    /// Epochs completed (bumps at every drain).
+    epoch: AtomicU64,
+    drains: AtomicU64,
+}
+
+impl EpochArena {
+    /// An epoch arena for sketches of `k` codes at `bits` per code
+    /// (rounded up to a supported packing width), with default policy.
+    pub fn new(k: usize, bits: u32) -> Self {
+        Self::with_config(k, bits, EpochConfig::default())
+    }
+
+    pub fn with_config(k: usize, bits: u32, cfg: EpochConfig) -> Self {
+        let sealed = CodeArena::new(k, bits);
+        let (k, bits, stride) = (sealed.k(), sealed.bits(), sealed.stride());
+        EpochArena {
+            k,
+            bits,
+            stride,
+            kernel: CollisionKernel::select(bits),
+            cfg,
+            pending: Mutex::new(Pending {
+                inserts: CodeArena::new(k, bits),
+                masked: Vec::new(),
+                generation: 0,
+            }),
+            snap: Mutex::new(None),
+            sealed: RwLock::new(sealed),
+            epoch: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+        }
+    }
+
+    /// Codes per sketch.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bit width per code (a supported packing width).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// `u64` words per row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Instruction tier of the collision kernel selected at construction.
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.kernel.kind()
+    }
+
+    /// Insert or replace the sketch for `id`. Never takes the sealed
+    /// write lock, so it completes while scans hold the read side.
+    /// Returns `true` when the pending load reached the drain threshold
+    /// — the caller should invoke [`EpochArena::try_drain`] (ingest
+    /// paths) or [`EpochArena::drain`] (maintenance) soon; until a fold
+    /// succeeds the pending buffer simply keeps absorbing writes.
+    #[must_use]
+    pub fn put(&self, id: &str, codes: &PackedCodes) -> bool {
+        assert_eq!(codes.len, self.k, "sketch length mismatch");
+        assert_eq!(codes.bits, self.bits, "sketch bit width mismatch");
+        let sealed = self.sealed.read().unwrap();
+        let mut p = self.pending.lock().unwrap();
+        p.inserts.insert(id, codes);
+        if let Some(row) = sealed.row_of(id) {
+            p.mask(row);
+        }
+        p.generation += 1;
+        p.load() >= self.cfg.drain_threshold
+    }
+
+    /// Bulk insert `ids` with their packed rows laid out contiguously in
+    /// `words` ([`EpochArena::stride`] words per row, padding bits zero)
+    /// — the fused encode pipeline lands a whole batch with one lock
+    /// round-trip and no per-vector allocation. Returns `true` when a
+    /// drain is due.
+    #[must_use]
+    pub fn put_rows(&self, ids: &[String], words: &[u64]) -> bool {
+        assert_eq!(
+            words.len(),
+            ids.len() * self.stride,
+            "bulk row buffer shape mismatch"
+        );
+        let sealed = self.sealed.read().unwrap();
+        let mut p = self.pending.lock().unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            p.inserts
+                .insert_row_words(id, &words[i * self.stride..(i + 1) * self.stride]);
+            if let Some(row) = sealed.row_of(id) {
+                p.mask(row);
+            }
+        }
+        p.generation += 1;
+        p.load() >= self.cfg.drain_threshold
+    }
+
+    /// Remove the sketch for `id`. Returns whether it was present
+    /// (pending or sealed).
+    pub fn remove(&self, id: &str) -> bool {
+        let sealed = self.sealed.read().unwrap();
+        let mut p = self.pending.lock().unwrap();
+        let in_pending = p.inserts.remove(id);
+        let newly_masked = match sealed.row_of(id) {
+            Some(row) => p.mask(row),
+            None => false,
+        };
+        if in_pending || newly_masked {
+            p.generation += 1;
+        }
+        in_pending || newly_masked
+    }
+
+    /// Clone out the sketch for `id`; pending writes override sealed
+    /// rows, masked-but-not-rewritten rows read as absent.
+    pub fn get(&self, id: &str) -> Option<PackedCodes> {
+        let sealed = self.sealed.read().unwrap();
+        let p = self.pending.lock().unwrap();
+        if let Some(codes) = p.inserts.get(id) {
+            return Some(codes);
+        }
+        match sealed.row_of(id) {
+            Some(row) if p.masked.binary_search(&row).is_ok() => None,
+            Some(_) => sealed.get(id),
+            None => None,
+        }
+    }
+
+    /// Live sketches across the sealed arena and the pending epoch.
+    pub fn len(&self) -> usize {
+        let sealed = self.sealed.read().unwrap();
+        let p = self.pending.lock().unwrap();
+        sealed.len() + p.inserts.len() - p.masked.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rows in the pending buffer (including same-epoch tombstones).
+    pub fn pending_rows(&self) -> usize {
+        self.pending.lock().unwrap().inserts.rows_allocated()
+    }
+
+    /// Pending write load (inserted rows + masked sealed rows) — the
+    /// quantity compared against [`EpochConfig::drain_threshold`].
+    pub fn pending_load(&self) -> usize {
+        self.pending.lock().unwrap().load()
+    }
+
+    /// Whether the pending load has reached the drain threshold. Lets
+    /// delete-heavy callers (whose `remove` does not report it) trigger
+    /// [`EpochArena::relieve`] too, so masks and tombstones fold and
+    /// compact without waiting for a later put.
+    pub fn drain_due(&self) -> bool {
+        self.pending_load() >= self.cfg.drain_threshold
+    }
+
+    /// Rows a scan currently skips: sealed tombstones plus this epoch's
+    /// masked rows.
+    pub fn tombstones(&self) -> usize {
+        let sealed = self.sealed.read().unwrap();
+        let p = self.pending.lock().unwrap();
+        sealed.tombstones() + p.masked.len()
+    }
+
+    /// Bytes of packed storage across both halves.
+    pub fn storage_bytes(&self) -> usize {
+        let sealed = self.sealed.read().unwrap();
+        let p = self.pending.lock().unwrap();
+        sealed.storage_bytes() + p.inserts.storage_bytes()
+    }
+
+    /// Epochs completed so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Drains executed so far (equals [`EpochArena::epoch`]).
+    pub fn drains(&self) -> u64 {
+        self.drains.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` against the sealed arena under the read lock (snapshots,
+    /// tests, persistence). Writes keep flowing into the pending buffer
+    /// while `f` runs — that is the whole point of the epoch split.
+    pub fn with_sealed<R>(&self, f: impl FnOnce(&CodeArena) -> R) -> R {
+        f(&self.sealed.read().unwrap())
+    }
+
+    /// Fold the pending epoch into the sealed arena in one bulk step:
+    /// tombstone removed rows, rewrite overridden rows in place, append
+    /// fresh rows in write order, then compact if the tombstone policy
+    /// says so. Blocks until the sealed write lock is free; the ingest
+    /// path uses [`EpochArena::try_drain`] instead so it never waits
+    /// behind scans. Returns the number of live rows folded in.
+    pub fn drain(&self) -> usize {
+        let mut sealed = self.sealed.write().unwrap();
+        self.fold_into(&mut sealed)
+    }
+
+    /// Non-blocking [`EpochArena::drain`]: folds only when no scan holds
+    /// the sealed side, so the writer that crossed the drain threshold
+    /// skips the fold under read pressure and a later write retries.
+    /// Returns `None` when the sealed lock was contended.
+    pub fn try_drain(&self) -> Option<usize> {
+        let mut sealed = self.sealed.try_write().ok()?;
+        Some(self.fold_into(&mut sealed))
+    }
+
+    /// The ingest path's fold policy: try-lock normally, but once the
+    /// pending load exceeds [`RELIEF_FACTOR`]× the drain threshold —
+    /// sustained scans can starve `try_drain` indefinitely — fall back
+    /// to a blocking fold so pending memory (and the pending sweep every
+    /// scan pays) stays bounded. Returns rows folded (0 when skipped).
+    pub fn relieve(&self) -> usize {
+        if let Some(folded) = self.try_drain() {
+            return folded;
+        }
+        if self.pending_load()
+            >= self.cfg.drain_threshold.saturating_mul(RELIEF_FACTOR)
+        {
+            return self.drain();
+        }
+        0
+    }
+
+    fn fold_into(&self, sealed: &mut CodeArena) -> usize {
+        let mut p = self.pending.lock().unwrap();
+        if p.inserts.rows_allocated() == 0 && p.masked.is_empty() {
+            return 0;
+        }
+        let folded = p.inserts.len();
+        // Pure removals first. Overridden ids (masked but re-written
+        // this epoch) keep their sealed row: the insert below rewrites
+        // it in place, so steady-state overwrites create no tombstones
+        // and no arena growth.
+        for &row in &p.masked {
+            let dead = sealed.id_of(row).map(str::to_string);
+            if let Some(id) = dead {
+                if p.inserts.row_of(&id).is_none() {
+                    sealed.remove(&id);
+                }
+            }
+        }
+        // Then this epoch's rows, preserving their write order.
+        for row in 0..p.inserts.rows_allocated() as u32 {
+            if let Some(id) = p.inserts.id_of(row) {
+                let words = p.inserts.row_words(row);
+                sealed.insert_row_words(id, words);
+            }
+        }
+        p.inserts.clear();
+        p.masked.clear();
+        p.generation += 1;
+        let tomb = sealed.tombstones();
+        if tomb >= self.cfg.compact_min
+            && tomb as f64 >= self.cfg.compact_ratio * sealed.rows_allocated() as f64
+        {
+            sealed.compact();
+        }
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+        self.drains.fetch_add(1, Ordering::Relaxed);
+        folded
+    }
+
+    /// Exact top-`n` by collision count over both halves, ordered
+    /// `(collisions desc, id asc)` — byte-identical to scanning one
+    /// fully drained arena. Pending rows report their row index offset
+    /// by the sealed row count (rows are transient across drains; ids
+    /// are the stable key).
+    pub fn scan_topk(&self, query: &PackedCodes, n: usize, threads: usize) -> Vec<ScanHit> {
+        assert_eq!(query.len, self.k, "query length mismatch");
+        assert_eq!(query.bits, self.bits, "query bit width mismatch");
+        let sealed = self.sealed.read().unwrap();
+        let (pend, masked) = self.snapshot_pending();
+        let base = sealed.rows_allocated() as u32;
+        let mut top = self.sweep_pending(&pend, base, query, n);
+        top.merge(scanner::scan_arena(
+            &sealed,
+            self.kernel,
+            query,
+            &masked,
+            n,
+            threads,
+        ));
+        top.into_sorted().into_iter().map(ScanHit::from).collect()
+    }
+
+    /// Batched [`EpochArena::scan_topk`]: one pending snapshot serves
+    /// every query's pending sweep lock-free, then the sealed sweeps fan
+    /// out across threads. Result `i` equals `scan_topk(&queries[i], n, 1)`.
+    pub fn scan_topk_batch(
+        &self,
+        queries: &[PackedCodes],
+        n: usize,
+        threads: usize,
+    ) -> Vec<Vec<ScanHit>> {
+        for q in queries {
+            assert_eq!(q.len, self.k, "query length mismatch");
+            assert_eq!(q.bits, self.bits, "query bit width mismatch");
+        }
+        let sealed = self.sealed.read().unwrap();
+        let (pend, masked) = self.snapshot_pending();
+        let base = sealed.rows_allocated() as u32;
+        let pending_tops: Vec<TopK> = queries
+            .iter()
+            .map(|q| self.sweep_pending(&pend, base, q, n))
+            .collect();
+        let swept =
+            scanner::scan_arena_batch(&sealed, self.kernel, queries, &masked, n, threads);
+        pending_tops
+            .into_iter()
+            .zip(swept)
+            .map(|(mut top, sealed_top)| {
+                top.merge(sealed_top);
+                top.into_sorted().into_iter().map(ScanHit::from).collect()
+            })
+            .collect()
+    }
+
+    /// The pending rows as a shared snapshot, copied out under one short
+    /// mutex hold — words and ids only, no id-index rebuild — so
+    /// query-time sweeps never stall writers. Consecutive scans between
+    /// writes share one copy (the cache is keyed by the pending
+    /// generation); snapshot size is bounded by [`RELIEF_FACTOR`]× the
+    /// drain threshold, the relief policy's cap on pending growth.
+    fn snapshot_pending(&self) -> (std::sync::Arc<RowsSnapshot>, std::sync::Arc<Vec<u32>>) {
+        let p = self.pending.lock().unwrap();
+        let mut cache = self.snap.lock().unwrap();
+        if let Some(c) = cache.as_ref() {
+            if c.generation == p.generation {
+                return (c.rows.clone(), c.masked.clone());
+            }
+        }
+        let rows = std::sync::Arc::new(p.inserts.rows_snapshot());
+        let masked = std::sync::Arc::new(p.masked.clone());
+        *cache = Some(SnapCache {
+            generation: p.generation,
+            rows: rows.clone(),
+            masked: masked.clone(),
+        });
+        (rows, masked)
+    }
+
+    /// Serial sweep of a pending snapshot (runs without any lock held).
+    fn sweep_pending(
+        &self,
+        pend: &RowsSnapshot,
+        base: u32,
+        query: &PackedCodes,
+        n: usize,
+    ) -> TopK {
+        let mut top = TopK::new(n);
+        let qwords = query.words();
+        for row in 0..pend.rows_allocated() as u32 {
+            if let Some(id) = pend.id_of(row) {
+                let c = self.kernel.count(self.k, qwords, pend.row_words(row));
+                top.offer(base + row, id, c);
+            }
+        }
+        top
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+    use crate::mathx::Pcg64;
+
+    fn sketch(k: usize, seed: u64) -> PackedCodes {
+        let mut g = Pcg64::new(seed, 0);
+        let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+        pack_codes(&codes, 2)
+    }
+
+    fn small_cfg() -> EpochConfig {
+        EpochConfig {
+            drain_threshold: 8,
+            compact_ratio: 0.5,
+            compact_min: 4,
+        }
+    }
+
+    #[test]
+    fn put_get_remove_across_the_epoch_split() {
+        let e = EpochArena::with_config(64, 2, small_cfg());
+        assert!(e.is_empty());
+        assert!(!e.put("a", &sketch(64, 1)));
+        assert!(!e.put("b", &sketch(64, 2)));
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.get("a"), Some(sketch(64, 1)));
+        assert_eq!(e.get("zzz"), None);
+        e.drain();
+        assert_eq!(e.epoch(), 1);
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.get("a"), Some(sketch(64, 1)));
+        // Override a sealed row from the new epoch.
+        assert!(!e.put("a", &sketch(64, 9)));
+        assert_eq!(e.get("a"), Some(sketch(64, 9)));
+        assert_eq!(e.len(), 2);
+        // Remove a sealed row without draining.
+        assert!(e.remove("b"));
+        assert!(!e.remove("b"));
+        assert_eq!(e.get("b"), None);
+        assert_eq!(e.len(), 1);
+        e.drain();
+        assert_eq!(e.get("a"), Some(sketch(64, 9)));
+        assert_eq!(e.get("b"), None);
+        assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn put_reports_drain_due_at_threshold() {
+        let e = EpochArena::with_config(32, 2, small_cfg());
+        let mut due = false;
+        for i in 0..8 {
+            due = e.put(&format!("id{i}"), &sketch(32, i));
+        }
+        assert!(due, "8th put must cross the threshold of 8");
+        assert_eq!(e.pending_load(), 8);
+        assert_eq!(e.drain(), 8);
+        assert_eq!(e.pending_load(), 0);
+        assert_eq!(e.len(), 8);
+    }
+
+    #[test]
+    fn scan_sees_sealed_pending_and_masks_consistently() {
+        let e = EpochArena::with_config(64, 2, small_cfg());
+        for i in 0..6 {
+            let _ = e.put(&format!("s{i}"), &sketch(64, i));
+        }
+        e.drain();
+        // New epoch: one fresh row, one override, one removal.
+        let _ = e.put("p0", &sketch(64, 100));
+        let _ = e.put("s1", &sketch(64, 101));
+        e.remove("s2");
+        let q = sketch(64, 100);
+        let hits = e.scan_topk(&q, 10, 1);
+        assert_eq!(hits.len(), 6); // 6 sealed + 1 pending − 1 removed… s1 counted once
+        assert_eq!(hits[0].id, "p0");
+        assert_eq!(hits[0].collisions, 64);
+        assert!(hits.iter().all(|h| h.id != "s2"));
+        assert_eq!(hits.iter().filter(|h| h.id == "s1").count(), 1);
+        // Draining must not change the ranking.
+        let want: Vec<(String, usize)> =
+            hits.into_iter().map(|h| (h.id, h.collisions)).collect();
+        e.drain();
+        let got: Vec<(String, usize)> = e
+            .scan_topk(&q, 10, 1)
+            .into_iter()
+            .map(|h| (h.id, h.collisions))
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn drain_compacts_when_policy_fires() {
+        let e = EpochArena::with_config(32, 2, small_cfg());
+        for i in 0..8 {
+            let _ = e.put(&format!("id{i}"), &sketch(32, i));
+        }
+        e.drain();
+        for i in 0..6 {
+            e.remove(&format!("id{i}"));
+        }
+        e.drain();
+        // 6 of 8 rows tombstoned ≥ max(4, 0.5·8) → compacted away.
+        e.with_sealed(|sealed| {
+            assert_eq!(sealed.tombstones(), 0);
+            assert_eq!(sealed.rows_allocated(), 2);
+        });
+        assert_eq!(e.len(), 2);
+    }
+
+    #[test]
+    fn same_epoch_insert_then_remove_leaves_nothing() {
+        let e = EpochArena::with_config(32, 2, small_cfg());
+        let _ = e.put("x", &sketch(32, 5));
+        assert!(e.remove("x"));
+        assert_eq!(e.len(), 0);
+        assert_eq!(e.get("x"), None);
+        e.drain();
+        assert_eq!(e.len(), 0);
+        assert!(e.scan_topk(&sketch(32, 5), 5, 1).is_empty());
+    }
+
+    #[test]
+    fn batch_scan_matches_single_scans() {
+        let e = EpochArena::with_config(96, 1, small_cfg());
+        let mut g = Pcg64::new(9, 1);
+        for i in 0..40 {
+            let codes: Vec<u16> = (0..96).map(|_| g.next_below(2) as u16).collect();
+            if e.put(&format!("r{i:03}"), &pack_codes(&codes, 1)) {
+                e.drain();
+            }
+        }
+        let queries: Vec<PackedCodes> = (0..5)
+            .map(|_| {
+                let codes: Vec<u16> = (0..96).map(|_| g.next_below(2) as u16).collect();
+                pack_codes(&codes, 1)
+            })
+            .collect();
+        let batched = e.scan_topk_batch(&queries, 7, 3);
+        assert_eq!(batched.len(), queries.len());
+        for (i, q) in queries.iter().enumerate() {
+            assert_eq!(batched[i], e.scan_topk(q, 7, 1), "query {i}");
+        }
+    }
+
+    #[test]
+    fn empty_drain_is_a_noop() {
+        let e = EpochArena::new(64, 2);
+        assert_eq!(e.drain(), 0);
+        assert_eq!(e.epoch(), 0);
+    }
+}

@@ -1,4 +1,5 @@
-//! Flat packed-code scan engine: columnar arena + SWAR scanner + top-k.
+//! Flat packed-code scan engine: columnar arena + runtime-dispatched
+//! collision kernels + epoch-buffered ingest + top-k.
 //!
 //! The serving layer's original `Knn` path cloned every [`crate::coding::PackedCodes`]
 //! out of a sharded `HashMap` and estimated pair by pair — pointer-chasing
@@ -11,7 +12,14 @@
 //!   per sketch, id ↔ row maps, tombstoned deletes, compaction.
 //! * [`kernels`] — blockwise SWAR collision counting over raw word rows:
 //!   unrolled XOR+popcount for 1-bit codes, nibble-equality for 2-bit,
-//!   generic lane-collapse fallback for 4/8/16.
+//!   generic lane-collapse fallback for 4/8/16. The portable oracle.
+//! * [`simd`] — [`CollisionKernel`]: explicit `std::arch` x86_64 kernels
+//!   (AVX2, then SSE2) for the 1-bit and 2-bit sweeps, selected once per
+//!   scanner by runtime feature detection; `CRP_SCAN_KERNEL=swar` forces
+//!   the portable path. Pinned byte-identical to [`kernels`].
+//! * [`epoch`] — [`EpochArena`]: sealed arena + pending epoch buffer, so
+//!   ingest never takes the write lock scans read behind; a bulk drain
+//!   folds each epoch in and runs tombstone-aware compaction.
 //! * [`topk`] — [`TopK`]: bounded worst-out heap for exact top-k with the
 //!   deterministic `(collisions desc, id asc)` ordering the brute-force
 //!   estimator path uses.
@@ -20,14 +28,19 @@
 //!   and fanned out per query for batches.
 //!
 //! Ranking is byte-identical to the per-pair
-//! [`crate::estimator::CollisionEstimator`] path: both order by collision
+//! [`crate::estimator::CollisionEstimator`] path — and across SWAR, SSE2,
+//! AVX2, and the epoch-buffer/sealed-arena split: all order by collision
 //! count (ρ̂ is monotone in it) and break ties by id.
 
 pub mod arena;
+pub mod epoch;
 pub mod kernels;
 pub mod scanner;
+pub mod simd;
 pub mod topk;
 
 pub use arena::CodeArena;
+pub use epoch::{EpochArena, EpochConfig};
 pub use scanner::{scan_topk, scan_topk_batch, ScanHit};
+pub use simd::{CollisionKernel, KernelKind};
 pub use topk::TopK;

@@ -6,9 +6,16 @@
 //! fans whole queries out across threads (each sweep stays sequential,
 //! which keeps every thread's access pattern a pure forward walk).
 //! Both paths return exactly what a single-threaded sweep returns.
+//!
+//! The collision kernel is resolved once per scan (or once per
+//! [`super::EpochArena`] at construction) through
+//! [`CollisionKernel`] — AVX2/SSE2 when the CPU has them, SWAR
+//! otherwise — and every sweep accepts a sorted `masked` row list so the
+//! epoch-buffered ingest path can hide sealed rows that the pending
+//! buffer overrides; skipping is a pointer walk, not a per-row lookup.
 
 use super::arena::CodeArena;
-use super::kernels::collisions_words;
+use super::simd::CollisionKernel;
 use super::topk::{TopEntry, TopK};
 use crate::coding::PackedCodes;
 
@@ -49,60 +56,130 @@ fn effective_threads(requested: usize, rows: usize) -> usize {
     }
 }
 
-/// Sweep `rows` (a contiguous range) into a bounded top-`n` selection.
+/// Sweep `rows` (a contiguous range) into a bounded top-`n` selection,
+/// skipping tombstones and the sorted `masked` rows.
 fn scan_range(
     arena: &CodeArena,
-    query: &PackedCodes,
+    kernel: CollisionKernel,
+    qwords: &[u64],
     rows: std::ops::Range<u32>,
+    masked: &[u32],
     n: usize,
 ) -> TopK {
     let mut top = TopK::new(n);
-    let qwords = query.words();
-    let (bits, k) = (arena.bits(), arena.k());
+    let k = arena.k();
+    let mut mi = masked.partition_point(|&m| m < rows.start);
     for row in rows {
+        if mi < masked.len() && masked[mi] == row {
+            mi += 1;
+            continue; // masked by the pending epoch
+        }
         let Some(id) = arena.id_of(row) else {
             continue; // tombstone
         };
-        let c = collisions_words(bits, k, qwords, arena.row_words(row));
+        let c = kernel.count(k, qwords, arena.row_words(row));
         top.offer(row, id, c);
     }
     top
 }
 
+/// Row-sharded sweep of one query with an explicit kernel and mask.
+/// Internal engine shared by [`scan_topk`] and the epoch-buffered path.
+pub(crate) fn scan_arena(
+    arena: &CodeArena,
+    kernel: CollisionKernel,
+    query: &PackedCodes,
+    masked: &[u32],
+    n: usize,
+    threads: usize,
+) -> TopK {
+    assert_eq!(query.len, arena.k(), "query length mismatch");
+    assert_eq!(query.bits, arena.bits(), "query bit width mismatch");
+    let rows = arena.rows_allocated() as u32;
+    let threads = effective_threads(threads, rows as usize);
+    let qwords = query.words();
+    if threads <= 1 {
+        return scan_range(arena, kernel, qwords, 0..rows, masked, n);
+    }
+    let chunk = rows.div_ceil(threads as u32).max(1);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads as u32)
+            .map(|t| {
+                let lo = (t * chunk).min(rows);
+                let hi = ((t + 1) * chunk).min(rows);
+                s.spawn(move || scan_range(arena, kernel, qwords, lo..hi, masked, n))
+            })
+            .collect();
+        let mut merged = TopK::new(n);
+        for h in handles {
+            merged.merge(h.join().expect("scan shard panicked"));
+        }
+        merged
+    })
+}
+
+/// Query-sharded sweep of a batch with an explicit kernel and mask.
+/// Result `i` equals `scan_arena(arena, kernel, &queries[i], masked, n, 1)`.
+pub(crate) fn scan_arena_batch(
+    arena: &CodeArena,
+    kernel: CollisionKernel,
+    queries: &[PackedCodes],
+    masked: &[u32],
+    n: usize,
+    threads: usize,
+) -> Vec<TopK> {
+    if queries.len() <= 1 {
+        // A lone query still gets row-level parallelism.
+        return queries
+            .iter()
+            .map(|q| scan_arena(arena, kernel, q, masked, n, threads))
+            .collect();
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|h| h.get())
+        .unwrap_or(1);
+    let threads = (if threads == 0 { hw } else { threads }).clamp(1, queries.len());
+    if threads <= 1 {
+        return queries
+            .iter()
+            .map(|q| scan_arena(arena, kernel, q, masked, n, 1))
+            .collect();
+    }
+    let chunk = queries.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = queries
+            .chunks(chunk)
+            .map(|qs| {
+                s.spawn(move || {
+                    qs.iter()
+                        .map(|q| scan_arena(arena, kernel, q, masked, n, 1))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("scan batch shard panicked"))
+            .collect()
+    })
+}
+
 /// Exact top-`n` rows of `arena` by collision count with `query`,
 /// ordered `(collisions desc, id asc)` — byte-identical to sorting the
-/// per-pair estimator scores. `threads = 0` auto-detects; small arenas
-/// always scan on the calling thread.
+/// per-pair estimator scores, in every kernel tier. `threads = 0`
+/// auto-detects; small arenas always scan on the calling thread.
 pub fn scan_topk(
     arena: &CodeArena,
     query: &PackedCodes,
     n: usize,
     threads: usize,
 ) -> Vec<ScanHit> {
-    assert_eq!(query.len, arena.k(), "query length mismatch");
-    assert_eq!(query.bits, arena.bits(), "query bit width mismatch");
-    let rows = arena.rows_allocated() as u32;
-    let threads = effective_threads(threads, rows as usize);
-    let top = if threads <= 1 {
-        scan_range(arena, query, 0..rows, n)
-    } else {
-        let chunk = rows.div_ceil(threads as u32).max(1);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = (0..threads as u32)
-                .map(|t| {
-                    let lo = (t * chunk).min(rows);
-                    let hi = ((t + 1) * chunk).min(rows);
-                    s.spawn(move || scan_range(arena, query, lo..hi, n))
-                })
-                .collect();
-            let mut merged = TopK::new(n);
-            for h in handles {
-                merged.merge(h.join().expect("scan shard panicked"));
-            }
-            merged
-        })
-    };
-    top.into_sorted().into_iter().map(ScanHit::from).collect()
+    let kernel = CollisionKernel::select(arena.bits());
+    scan_arena(arena, kernel, query, &[], n, threads)
+        .into_sorted()
+        .into_iter()
+        .map(ScanHit::from)
+        .collect()
 }
 
 /// Top-`n` for a batch of queries: queries fan out across threads, each
@@ -114,34 +191,11 @@ pub fn scan_topk_batch(
     n: usize,
     threads: usize,
 ) -> Vec<Vec<ScanHit>> {
-    if queries.len() <= 1 {
-        // A lone query still gets row-level parallelism.
-        return queries.iter().map(|q| scan_topk(arena, q, n, threads)).collect();
-    }
-    let hw = std::thread::available_parallelism()
-        .map(|h| h.get())
-        .unwrap_or(1);
-    let threads = (if threads == 0 { hw } else { threads }).clamp(1, queries.len());
-    if threads <= 1 {
-        return queries.iter().map(|q| scan_topk(arena, q, n, 1)).collect();
-    }
-    let chunk = queries.len().div_ceil(threads);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = queries
-            .chunks(chunk)
-            .map(|qs| {
-                s.spawn(move || {
-                    qs.iter()
-                        .map(|q| scan_topk(arena, q, n, 1))
-                        .collect::<Vec<_>>()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("scan batch shard panicked"))
-            .collect()
-    })
+    let kernel = CollisionKernel::select(arena.bits());
+    scan_arena_batch(arena, kernel, queries, &[], n, threads)
+        .into_iter()
+        .map(|top| top.into_sorted().into_iter().map(ScanHit::from).collect())
+        .collect()
 }
 
 #[cfg(test)]
@@ -208,6 +262,65 @@ mod tests {
         }
         assert_eq!(serial[0].id, "row00042");
         assert_eq!(serial[0].collisions, 64);
+    }
+
+    #[test]
+    fn every_kernel_tier_ranks_identically() {
+        use super::super::simd::{CollisionKernel, KernelKind};
+        for &bits in &[1u32, 2] {
+            let (arena, _) = arena_with(800, 193, bits, 77 + bits as u64);
+            let q = arena.get("row00123").unwrap();
+            let swar = CollisionKernel::with_kind(bits, KernelKind::Swar).unwrap();
+            let want: Vec<ScanHit> = scan_arena(&arena, swar, &q, &[], 15, 1)
+                .into_sorted()
+                .into_iter()
+                .map(ScanHit::from)
+                .collect();
+            for kind in [KernelKind::Sse2, KernelKind::Avx2] {
+                let Some(kernel) = CollisionKernel::with_kind(bits, kind) else {
+                    continue;
+                };
+                for threads in [1usize, 3] {
+                    let got: Vec<ScanHit> = scan_arena(&arena, kernel, &q, &[], 15, threads)
+                        .into_sorted()
+                        .into_iter()
+                        .map(ScanHit::from)
+                        .collect();
+                    assert_eq!(got, want, "bits={bits} kind={kind:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_rows_are_hidden_like_tombstones() {
+        let (mut arena, raw) = arena_with(200, 64, 2, 6);
+        // Oracle: tombstone rows 3 and 77 for real.
+        let kernel = CollisionKernel::select(2);
+        let q = pack_codes(&raw[3], 2);
+        let mut oracle = arena_with(200, 64, 2, 6).0;
+        oracle.remove("row00003");
+        oracle.remove("row00077");
+        let want: Vec<(String, usize)> = scan_topk(&oracle, &q, 200, 1)
+            .into_iter()
+            .map(|h| (h.id, h.collisions))
+            .collect();
+        // Same scan, but masking instead of removing.
+        for threads in [1usize, 4] {
+            let got: Vec<(String, usize)> = scan_arena(&arena, kernel, &q, &[3, 77], 200, threads)
+                .into_sorted()
+                .into_iter()
+                .map(|e| (e.id, e.collisions))
+                .collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+        // And masking composes with real tombstones.
+        arena.remove("row00010");
+        let got = scan_arena(&arena, kernel, &q, &[3, 77], 200, 1).into_sorted();
+        assert_eq!(got.len(), 197);
+        assert!(got
+            .iter()
+            .all(|e| e.id != "row00003" && e.id != "row00077" && e.id != "row00010"));
     }
 
     #[test]

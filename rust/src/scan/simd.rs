@@ -1,0 +1,473 @@
+//! Runtime-dispatched explicit SIMD collision kernels.
+//!
+//! [`CollisionKernel`] binds one code width to the widest instruction
+//! tier the running CPU supports — AVX2 (32 bytes per step, vectorized
+//! nibble-lookup popcount), then SSE2 (16 bytes per step, in-register
+//! bit-slice popcount), then the portable SWAR kernels of
+//! [`super::kernels`] — once at scanner construction; every scan after
+//! that calls a plain function pointer with zero per-row dispatch.
+//!
+//! The SWAR path is the oracle: the SIMD kernels are pinned
+//! byte-identical to it by the unit tests below and by
+//! `tests/proptests.rs` (`equiv_*`).
+//!
+//! Dispatch policy:
+//!
+//! * Explicit SIMD exists for the paper's recommended 1-bit and 2-bit
+//!   codes; wider codes (4/8/16 bits) always take the SWAR path.
+//! * `CRP_SCAN_KERNEL=swar|sse2|avx2` forces a tier. An unavailable
+//!   forced tier falls back to auto-selection; `swar` is always
+//!   available and is the supported way to force the portable path.
+//! * Non-x86_64 targets compile to SWAR only (`detect` reports the SIMD
+//!   tiers as absent, and the x86 kernels are not built).
+
+use std::fmt;
+
+use super::kernels::collisions_words;
+use crate::coding::supported_width;
+
+/// Instruction-set tier of a selected kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable scalar SWAR (the oracle; always available).
+    Swar,
+    /// 128-bit SSE2 (the x86_64 baseline).
+    Sse2,
+    /// 256-bit AVX2 (plus hardware POPCNT for the scalar tail).
+    Avx2,
+}
+
+impl KernelKind {
+    /// Every tier, widest first — the auto-selection preference order.
+    pub const ALL: [KernelKind; 3] = [KernelKind::Avx2, KernelKind::Sse2, KernelKind::Swar];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelKind::Swar => "swar",
+            KernelKind::Sse2 => "sse2",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether the running CPU supports this tier.
+    pub fn available(self) -> bool {
+        detect(self)
+    }
+}
+
+type KernelFn = fn(usize, &[u64], &[u64]) -> usize;
+
+/// A collision-count kernel bound to one code width and one instruction
+/// tier. `Copy`, so shards of a threaded scan share it freely.
+#[derive(Clone, Copy)]
+pub struct CollisionKernel {
+    kind: KernelKind,
+    bits: u32,
+    f: KernelFn,
+}
+
+impl fmt::Debug for CollisionKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CollisionKernel({} @ {}-bit)", self.kind.label(), self.bits)
+    }
+}
+
+impl CollisionKernel {
+    /// Best kernel for `bits`-wide codes on this CPU, honoring the
+    /// `CRP_SCAN_KERNEL` override (see the module docs for the policy).
+    pub fn select(bits: u32) -> Self {
+        if let Ok(forced) = std::env::var("CRP_SCAN_KERNEL") {
+            let want = match forced.to_ascii_lowercase().as_str() {
+                "swar" | "portable" | "scalar" => Some(KernelKind::Swar),
+                "sse2" => Some(KernelKind::Sse2),
+                "avx2" => Some(KernelKind::Avx2),
+                _ => None,
+            };
+            if let Some(kernel) = want.and_then(|kind| Self::with_kind(bits, kind)) {
+                return kernel;
+            }
+        }
+        KernelKind::ALL
+            .iter()
+            .find_map(|&kind| Self::with_kind(bits, kind))
+            .expect("the SWAR kernel is always available")
+    }
+
+    /// Kernel of a specific tier, when the CPU supports it and an
+    /// explicit kernel exists for `bits` (the SIMD tiers cover 1-bit and
+    /// 2-bit codes only). `bits` is rounded up to a supported packing
+    /// width first — packed storage only ever uses those, so e.g. a
+    /// 5-bit scheme dispatches its 8-bit layout.
+    pub fn with_kind(bits: u32, kind: KernelKind) -> Option<Self> {
+        let bits = supported_width(bits);
+        if !detect(kind) {
+            return None;
+        }
+        Some(CollisionKernel {
+            kind,
+            bits,
+            f: kernel_fn(bits, kind)?,
+        })
+    }
+
+    pub fn kind(self) -> KernelKind {
+        self.kind
+    }
+
+    pub fn bits(self) -> u32 {
+        self.bits
+    }
+
+    /// Count agreeing coordinates of two `k`-code rows in arena layout
+    /// (`k.div_ceil(64 / bits)` words each, padding bits zero).
+    #[inline]
+    pub fn count(self, k: usize, a: &[u64], b: &[u64]) -> usize {
+        (self.f)(k, a, b)
+    }
+}
+
+// ---- tier availability --------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+fn detect(kind: KernelKind) -> bool {
+    match kind {
+        KernelKind::Swar => true,
+        KernelKind::Sse2 => is_x86_feature_detected!("sse2"),
+        // The scalar tails of the AVX2 kernels lean on hardware POPCNT
+        // (present on every AVX2 CPU, but verified anyway).
+        KernelKind::Avx2 => {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("popcnt")
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect(kind: KernelKind) -> bool {
+    matches!(kind, KernelKind::Swar)
+}
+
+// ---- dispatch table -----------------------------------------------------
+
+fn swar_b1(k: usize, a: &[u64], b: &[u64]) -> usize {
+    collisions_words(1, k, a, b)
+}
+fn swar_b2(k: usize, a: &[u64], b: &[u64]) -> usize {
+    collisions_words(2, k, a, b)
+}
+fn swar_b4(k: usize, a: &[u64], b: &[u64]) -> usize {
+    collisions_words(4, k, a, b)
+}
+fn swar_b8(k: usize, a: &[u64], b: &[u64]) -> usize {
+    collisions_words(8, k, a, b)
+}
+fn swar_b16(k: usize, a: &[u64], b: &[u64]) -> usize {
+    collisions_words(16, k, a, b)
+}
+
+fn kernel_fn(bits: u32, kind: KernelKind) -> Option<KernelFn> {
+    match kind {
+        KernelKind::Swar => Some(match bits {
+            1 => swar_b1 as KernelFn,
+            2 => swar_b2,
+            4 => swar_b4,
+            8 => swar_b8,
+            16 => swar_b16,
+            _ => return None,
+        }),
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Sse2 => match bits {
+            1 => Some(x86::b1_sse2 as KernelFn),
+            2 => Some(x86::b2_sse2 as KernelFn),
+            _ => None,
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => match bits {
+            1 => Some(x86::b1_avx2 as KernelFn),
+            2 => Some(x86::b2_avx2 as KernelFn),
+            _ => None,
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => None,
+    }
+}
+
+// ---- x86_64 kernels -----------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The explicit kernels. Every `unsafe fn` requires the CPU features
+    //! named in its `#[target_feature]`; the safe wrappers at the bottom
+    //! are reachable only through [`super::detect`]-guarded construction
+    //! in [`super::CollisionKernel::with_kind`], which upholds that
+    //! contract.
+
+    use std::arch::x86_64::*;
+
+    /// Low bit of every 2-bit lane.
+    const B2_LO: u64 = 0x5555_5555_5555_5555;
+
+    /// Mula's nibble-lookup popcount: per-byte counts via PSHUFB on each
+    /// nibble, summed into the four u64 lanes by PSADBW.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64_avx2(v: __m256i) -> __m256i {
+        let table = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let counts = _mm256_add_epi8(
+            _mm256_shuffle_epi8(table, lo),
+            _mm256_shuffle_epi8(table, hi),
+        );
+        _mm256_sad_epu8(counts, _mm256_setzero_si256())
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi64_avx2(v: __m256i) -> u64 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    /// 1-bit: agreement = NOT(XOR), popcount, four words per vector step.
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn collisions_b1_avx2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        let full = k / 64;
+        let blocks = full / 4;
+        let ones = _mm256_set1_epi8(-1);
+        let mut acc = _mm256_setzero_si256();
+        for i in 0..blocks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i * 4) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i * 4) as *const __m256i);
+            let agree = _mm256_xor_si256(_mm256_xor_si256(va, vb), ones);
+            acc = _mm256_add_epi64(acc, popcnt_epi64_avx2(agree));
+        }
+        let mut total = hsum_epi64_avx2(acc) as usize;
+        for i in blocks * 4..full {
+            total += (!(a[i] ^ b[i])).count_ones() as usize;
+        }
+        let rem = k % 64;
+        if rem > 0 {
+            let mask = (1u64 << rem) - 1;
+            total += ((!(a[full] ^ b[full])) & mask).count_ones() as usize;
+        }
+        total
+    }
+
+    /// 2-bit: a lane agrees iff both of its bits agree.
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn collisions_b2_avx2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        let full = k / 32;
+        let blocks = full / 4;
+        let ones = _mm256_set1_epi8(-1);
+        let lo_bits = _mm256_set1_epi64x(B2_LO as i64);
+        let mut acc = _mm256_setzero_si256();
+        for i in 0..blocks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i * 4) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i * 4) as *const __m256i);
+            let eq = _mm256_xor_si256(_mm256_xor_si256(va, vb), ones);
+            let lanes =
+                _mm256_and_si256(_mm256_and_si256(eq, _mm256_srli_epi64::<1>(eq)), lo_bits);
+            acc = _mm256_add_epi64(acc, popcnt_epi64_avx2(lanes));
+        }
+        let mut total = hsum_epi64_avx2(acc) as usize;
+        for i in blocks * 4..full {
+            let eq = !(a[i] ^ b[i]);
+            total += (eq & (eq >> 1) & B2_LO).count_ones() as usize;
+        }
+        let rem = k % 32;
+        if rem > 0 {
+            let eq = !(a[full] ^ b[full]);
+            total += (eq & (eq >> 1) & B2_LO & ((1u64 << (2 * rem)) - 1)).count_ones() as usize;
+        }
+        total
+    }
+
+    /// In-register bit-slice popcount (no PSHUFB below SSSE3): the
+    /// classic pair/nibble/byte reduction, then PSADBW into u64 lanes.
+    /// Shifts are per-64-bit lane but the per-byte masks make each stage
+    /// identical to the scalar SWAR popcount.
+    #[target_feature(enable = "sse2")]
+    unsafe fn popcnt_epi64_sse2(v: __m128i) -> __m128i {
+        let m1 = _mm_set1_epi8(0x55);
+        let m2 = _mm_set1_epi8(0x33);
+        let m4 = _mm_set1_epi8(0x0f);
+        let v = _mm_sub_epi8(v, _mm_and_si128(_mm_srli_epi64::<1>(v), m1));
+        let v = _mm_add_epi8(
+            _mm_and_si128(v, m2),
+            _mm_and_si128(_mm_srli_epi64::<2>(v), m2),
+        );
+        let v = _mm_and_si128(_mm_add_epi8(v, _mm_srli_epi64::<4>(v)), m4);
+        _mm_sad_epu8(v, _mm_setzero_si128())
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn hsum_epi64_sse2(v: __m128i) -> u64 {
+        let mut lanes = [0u64; 2];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, v);
+        lanes[0] + lanes[1]
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn collisions_b1_sse2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        let full = k / 64;
+        let pairs = full / 2;
+        let ones = _mm_set1_epi8(-1);
+        let mut acc = _mm_setzero_si128();
+        for i in 0..pairs {
+            let va = _mm_loadu_si128(a.as_ptr().add(i * 2) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i * 2) as *const __m128i);
+            let agree = _mm_xor_si128(_mm_xor_si128(va, vb), ones);
+            acc = _mm_add_epi64(acc, popcnt_epi64_sse2(agree));
+        }
+        let mut total = hsum_epi64_sse2(acc) as usize;
+        for i in pairs * 2..full {
+            total += (!(a[i] ^ b[i])).count_ones() as usize;
+        }
+        let rem = k % 64;
+        if rem > 0 {
+            let mask = (1u64 << rem) - 1;
+            total += ((!(a[full] ^ b[full])) & mask).count_ones() as usize;
+        }
+        total
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn collisions_b2_sse2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        let full = k / 32;
+        let pairs = full / 2;
+        let ones = _mm_set1_epi8(-1);
+        let lo_bits = _mm_set1_epi64x(B2_LO as i64);
+        let mut acc = _mm_setzero_si128();
+        for i in 0..pairs {
+            let va = _mm_loadu_si128(a.as_ptr().add(i * 2) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i * 2) as *const __m128i);
+            let eq = _mm_xor_si128(_mm_xor_si128(va, vb), ones);
+            let lanes = _mm_and_si128(_mm_and_si128(eq, _mm_srli_epi64::<1>(eq)), lo_bits);
+            acc = _mm_add_epi64(acc, popcnt_epi64_sse2(lanes));
+        }
+        let mut total = hsum_epi64_sse2(acc) as usize;
+        for i in pairs * 2..full {
+            let eq = !(a[i] ^ b[i]);
+            total += (eq & (eq >> 1) & B2_LO).count_ones() as usize;
+        }
+        let rem = k % 32;
+        if rem > 0 {
+            let eq = !(a[full] ^ b[full]);
+            total += (eq & (eq >> 1) & B2_LO & ((1u64 << (2 * rem)) - 1)).count_ones() as usize;
+        }
+        total
+    }
+
+    // Safe wrappers: sound because `with_kind` only hands these out after
+    // `detect` confirmed the required CPU features.
+    pub fn b1_avx2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        unsafe { collisions_b1_avx2(k, a, b) }
+    }
+    pub fn b2_avx2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        unsafe { collisions_b2_avx2(k, a, b) }
+    }
+    pub fn b1_sse2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        unsafe { collisions_b1_sse2(k, a, b) }
+    }
+    pub fn b2_sse2(k: usize, a: &[u64], b: &[u64]) -> usize {
+        unsafe { collisions_b2_sse2(k, a, b) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{collision_count, pack_codes};
+    use crate::mathx::Pcg64;
+
+    fn random_codes(n: usize, card: u16, seed: u64) -> Vec<u16> {
+        let mut g = Pcg64::new(seed, 3);
+        (0..n).map(|_| g.next_below(card as u64) as u16).collect()
+    }
+
+    #[test]
+    fn every_tier_matches_the_swar_oracle() {
+        // Lengths spanning vector blocks (AVX2 1-bit step = 256 codes),
+        // word boundaries, and ragged partial words.
+        for &(bits, card) in &[(1u32, 2u16), (2, 4)] {
+            for &k in &[
+                1usize, 31, 32, 63, 64, 65, 127, 128, 129, 255, 256, 257, 300, 511, 512, 513,
+                1024, 1027,
+            ] {
+                let a = random_codes(k, card, 11 + bits as u64);
+                let b = random_codes(k, card, 1111 + bits as u64);
+                let pa = pack_codes(&a, bits);
+                let pb = pack_codes(&b, bits);
+                let want = collision_count(&a, &b);
+                for kind in KernelKind::ALL {
+                    let Some(kernel) = CollisionKernel::with_kind(bits, kind) else {
+                        continue;
+                    };
+                    assert_eq!(
+                        kernel.count(k, pa.words(), pb.words()),
+                        want,
+                        "bits={bits} k={k} kind={kind:?}"
+                    );
+                    assert_eq!(
+                        kernel.count(k, pa.words(), pa.words()),
+                        k,
+                        "self-collision bits={bits} k={k} kind={kind:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_bits_never_count_in_any_tier() {
+        // 33 one-bit codes leave 31 zero padding bits; all-different
+        // vectors must report zero collisions in every tier.
+        let a = pack_codes(&[0u16; 33], 1);
+        let b = pack_codes(&[1u16; 33], 1);
+        for kind in KernelKind::ALL {
+            if let Some(kernel) = CollisionKernel::with_kind(1, kind) {
+                assert_eq!(kernel.count(33, a.words(), b.words()), 0, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_codes_always_dispatch_to_swar() {
+        for bits in [4u32, 8, 16] {
+            assert_eq!(CollisionKernel::select(bits).kind(), KernelKind::Swar);
+            assert!(CollisionKernel::with_kind(bits, KernelKind::Avx2).is_none());
+            assert!(CollisionKernel::with_kind(bits, KernelKind::Sse2).is_none());
+        }
+    }
+
+    #[test]
+    fn selection_always_yields_a_kernel() {
+        for bits in [1u32, 2, 4, 8, 16] {
+            let kernel = CollisionKernel::select(bits);
+            assert_eq!(kernel.bits(), bits);
+            assert!(kernel.kind().available());
+            // Zero-length rows are legal (empty arena sweep).
+            assert_eq!(kernel.count(0, &[], &[]), 0);
+        }
+    }
+
+    #[test]
+    fn swar_tier_is_always_available() {
+        assert!(KernelKind::Swar.available());
+        assert!(CollisionKernel::with_kind(1, KernelKind::Swar).is_some());
+    }
+
+    #[test]
+    fn unsupported_widths_round_like_the_packing_layer() {
+        // A 5-bit scheme (e.g. WindowOffset at small w) packs at 8 bits;
+        // selection must dispatch that layout instead of panicking.
+        let kernel = CollisionKernel::select(5);
+        assert_eq!(kernel.bits(), 8);
+        assert_eq!(kernel.kind(), KernelKind::Swar);
+        assert_eq!(CollisionKernel::select(3).bits(), 4);
+        assert_eq!(CollisionKernel::select(9).bits(), 16);
+    }
+}

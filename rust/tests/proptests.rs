@@ -10,6 +10,11 @@
 //!   monotone inversion, expansion inner-product identity
 //! * scan: top-k ≡ brute-force sort of per-pair estimator scores,
 //!   parallel scan ≡ single-threaded scan, arena mutation round-trips
+//! * kernels/epochs (`equiv_*`, also run standalone in CI): every SIMD
+//!   tier ≡ the SWAR oracle at all widths and ragged lengths; scans
+//!   through the epoch-buffer/sealed-arena split ≡ a fully drained
+//!   arena; bulk `put_rows` ≡ per-vector puts; and `put` completes while
+//!   a reader holds the sealed side (the seed design deadlocked here)
 
 use crp::coding::{
     collision_count, collision_count_packed, expand_to_sparse, pack_codes, unpack_codes,
@@ -225,6 +230,234 @@ fn prop_scan_topk_matches_bruteforce_estimator_sort() {
         assert_eq!(batch[0], got, "case {case}");
         assert_eq!(batch[1], got, "case {case}");
     }
+}
+
+#[test]
+fn equiv_simd_kernels_match_swar_all_widths() {
+    use crp::scan::{CollisionKernel, KernelKind};
+    // Widths × lengths spanning SIMD blocks (AVX2 1-bit step = 256
+    // codes), word boundaries, ragged partial words, and k = 1.
+    for &(bits, card) in &[(1u32, 2u16), (2, 4), (4, 16), (8, 200), (16, 999)] {
+        for &k in &[1usize, 31, 32, 63, 64, 65, 127, 128, 255, 256, 257, 300, 1024, 1027] {
+            let mut g = Pcg64::new(0x51D ^ ((bits as u64) << 20) ^ k as u64, 1);
+            let a = rand_codes(&mut g, k, card);
+            let b = rand_codes(&mut g, k, card);
+            let pa = pack_codes(&a, bits);
+            let pb = pack_codes(&b, bits);
+            let zeros = vec![0u16; k];
+            let pz = pack_codes(&zeros, bits); // an "empty" (all-zero) row
+            let want = collision_count(&a, &b);
+            let want_zero = collision_count(&a, &zeros);
+            for kind in KernelKind::ALL {
+                let Some(kernel) = CollisionKernel::with_kind(bits, kind) else {
+                    continue; // tier absent on this CPU / at this width
+                };
+                assert_eq!(
+                    kernel.count(k, pa.words(), pb.words()),
+                    want,
+                    "bits={bits} k={k} kind={kind:?}"
+                );
+                assert_eq!(
+                    kernel.count(k, pa.words(), pa.words()),
+                    k,
+                    "self bits={bits} k={k} kind={kind:?}"
+                );
+                assert_eq!(
+                    kernel.count(k, pa.words(), pz.words()),
+                    want_zero,
+                    "zero-row bits={bits} k={k} kind={kind:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn equiv_epoch_scan_matches_fully_drained() {
+    use crp::scan::{scan_topk, EpochArena, EpochConfig};
+    use std::collections::HashMap;
+
+    for case in 0..CASES / 3 {
+        let mut g = rng(0xE90C ^ case);
+        let bits = [1u32, 2, 4][g.next_below(3) as usize];
+        let card = 1u16 << bits;
+        let k = 8 + g.next_below(200) as usize;
+        // Tiny thresholds so epochs roll over and compaction fires
+        // mid-sequence.
+        let epoch = EpochArena::with_config(
+            k,
+            bits,
+            EpochConfig {
+                drain_threshold: 8 + g.next_below(40) as usize,
+                compact_ratio: 0.3,
+                compact_min: 4,
+            },
+        );
+        let mut model: HashMap<String, Vec<u16>> = HashMap::new();
+        let universe = 30;
+        for step in 0..250 {
+            let id = format!("id{:02}", g.next_below(universe));
+            match g.next_below(5) {
+                0 => {
+                    let in_model = model.remove(&id).is_some();
+                    assert_eq!(epoch.remove(&id), in_model, "case {case} step {step}");
+                }
+                1 if g.next_below(8) == 0 => {
+                    epoch.drain();
+                }
+                _ => {
+                    let codes = rand_codes(&mut g, k, card);
+                    if epoch.put(&id, &pack_codes(&codes, bits)) {
+                        epoch.drain();
+                    }
+                    model.insert(id, codes);
+                }
+            }
+        }
+        assert_eq!(epoch.len(), model.len(), "case {case}");
+        for (id, codes) in &model {
+            let got = epoch.get(id).unwrap_or_else(|| panic!("case {case}: {id} missing"));
+            assert_eq!(crp::coding::unpack_codes(&got), *codes, "case {case}: {id}");
+        }
+        // Scan through the epoch split ≡ brute force over the live set.
+        let q = rand_codes(&mut g, k, card);
+        let pq = pack_codes(&q, bits);
+        let top = 1 + g.next_below(12) as usize;
+        let got: Vec<(String, usize)> = epoch
+            .scan_topk(&pq, top, 1)
+            .into_iter()
+            .map(|h| (h.id, h.collisions))
+            .collect();
+        let mut want: Vec<(String, usize)> = model
+            .iter()
+            .map(|(id, codes)| (id.clone(), collision_count(codes, &q)))
+            .collect();
+        want.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        want.truncate(top);
+        assert_eq!(got, want, "case {case}");
+        // Batched and threaded epoch scans agree with the serial one.
+        let batch = epoch.scan_topk_batch(&[pq.clone(), pq.clone()], top, 3);
+        assert_eq!(batch.len(), 2, "case {case}");
+        for hits in &batch {
+            let hits: Vec<(String, usize)> =
+                hits.iter().map(|h| (h.id.clone(), h.collisions)).collect();
+            assert_eq!(hits, want, "case {case}");
+        }
+        // After a full drain the sealed arena alone must rank the same.
+        epoch.drain();
+        let drained: Vec<(String, usize)> = epoch.with_sealed(|sealed| {
+            scan_topk(sealed, &pq, top, 1)
+                .into_iter()
+                .map(|h| (h.id, h.collisions))
+                .collect()
+        });
+        assert_eq!(drained, want, "case {case}");
+    }
+}
+
+#[test]
+fn equiv_bulk_put_rows_matches_per_vector_puts() {
+    use crp::coordinator::store::SketchStore;
+    let (k, bits) = (96usize, 2u32);
+    let singles = SketchStore::with_arena(k, bits);
+    let bulk = SketchStore::with_arena(k, bits);
+    let stride = bulk.arena().unwrap().stride();
+    let mut g = rng(0xB17);
+    let mut ids = Vec::new();
+    let mut words = Vec::new();
+    for i in 0..50 {
+        let codes = rand_codes(&mut g, k, 4);
+        let packed = pack_codes(&codes, bits);
+        singles.put(format!("v{i:02}"), packed.clone());
+        ids.push(format!("v{i:02}"));
+        words.extend_from_slice(packed.words());
+    }
+    assert_eq!(words.len(), 50 * stride);
+    bulk.put_rows(&ids, &words).unwrap();
+    assert_eq!(singles.len(), bulk.len());
+    for id in &ids {
+        assert_eq!(singles.get(id), bulk.get(id), "{id}");
+        assert_eq!(
+            singles.arena().unwrap().get(id),
+            bulk.arena().unwrap().get(id),
+            "{id}"
+        );
+    }
+    let q = pack_codes(&rand_codes(&mut g, k, 4), bits);
+    let strip = |hits: Vec<crp::scan::ScanHit>| -> Vec<(String, usize)> {
+        hits.into_iter().map(|h| (h.id, h.collisions)).collect()
+    };
+    assert_eq!(
+        strip(singles.arena().unwrap().scan_topk(&q, 10, 1)),
+        strip(bulk.arena().unwrap().scan_topk(&q, 10, 1))
+    );
+}
+
+#[test]
+fn equiv_put_completes_while_scan_holds_the_read_side() {
+    use crp::coordinator::store::SketchStore;
+    use crp::scan::EpochConfig;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // A tiny drain threshold so the writer crosses it many times while
+    // the read side is held — the fold must be skipped (try-lock), not
+    // waited on. The write volume (51) stays under the relief cap
+    // (RELIEF_FACTOR × 8 = 64), where a blocking fold is allowed.
+    let store = Arc::new(SketchStore::with_arena_config(
+        64,
+        2,
+        EpochConfig {
+            drain_threshold: 8,
+            ..EpochConfig::default()
+        },
+    ));
+    let mut g = rng(0xB10C);
+    for i in 0..100 {
+        store.put(format!("seed{i:03}"), pack_codes(&rand_codes(&mut g, 64, 4), 2));
+    }
+    store.arena().unwrap().drain();
+
+    // A reader parks on the sealed side (what a long scan shard holds).
+    let (locked_tx, locked_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let reader = store.clone();
+    let reader_thread = std::thread::spawn(move || {
+        reader.arena().unwrap().with_sealed(|sealed| {
+            locked_tx.send(sealed.len()).unwrap();
+            release_rx.recv().unwrap();
+        });
+    });
+    assert_eq!(locked_rx.recv().unwrap(), 100);
+
+    // The seed design took the arena *write* lock on every put, so this
+    // would block until the reader finished. The epoch path must land
+    // all writes — including the threshold-crossing ones — while the
+    // read side stays held.
+    let (done_tx, done_rx) = mpsc::channel();
+    let writer = store.clone();
+    let codes = pack_codes(&rand_codes(&mut g, 64, 4), 2);
+    let writer_thread = std::thread::spawn(move || {
+        for i in 0..50 {
+            writer.put(format!("live{i:02}"), codes.clone());
+        }
+        assert!(writer.remove("seed000"));
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("puts blocked behind a held scan read lock");
+    // Scans keep seeing every write even though no fold could run.
+    assert_eq!(store.arena().unwrap().len(), 149);
+    release_tx.send(()).unwrap();
+    reader_thread.join().unwrap();
+    writer_thread.join().unwrap();
+    assert_eq!(store.len(), 100 + 50 - 1);
+    // With the read side free again, the next threshold crossing folds.
+    store.arena().unwrap().drain();
+    assert_eq!(store.arena().unwrap().len(), 149);
+    assert_eq!(store.arena().unwrap().pending_load(), 0);
 }
 
 #[test]
