@@ -89,6 +89,40 @@ fn main() {
     let sweeps = scanner.join().expect("scanner thread");
     eprintln!("background scanner completed {sweeps} sweeps during ingest");
 
+    // Durability path: arena-image snapshot writes, per-record WAL
+    // appends, and the cold bulk restore a restart pays.
+    use crp::coordinator::durability::{snapshot, wal};
+    let dir = std::env::temp_dir().join(format!("crp_ingest_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    store.arena().expect("arena-backed").drain();
+    let image = store.arena().expect("arena-backed").sealed_image();
+    let snap_path = dir.join("snapshot.bin");
+    b.run("durability/snapshot-write-50k/1bit-1024", n as u64, || {
+        snapshot::save(&snap_path, &image).expect("snapshot write");
+    });
+
+    let w = wal::Wal::create(&dir, k, bits).expect("wal create");
+    let mut j = 0usize;
+    b.run("durability/wal-append-put/1bit-1024", 1, || {
+        w.append_put(&ids[j % n], sketches[j % n].words(), || ())
+            .expect("wal append");
+        j += 1;
+    });
+    let batch_words = &words; // the 4096-row buffer from the bulk bench
+    b.run("durability/wal-append-4096-rows/1bit-1024", batch as u64, || {
+        w.append_put_rows(&batch_ids, batch_words, || ())
+            .expect("wal bulk append");
+    });
+
+    b.run("durability/cold-restore-50k/1bit-1024", n as u64, || {
+        let fresh = SketchStore::with_arena(k, bits);
+        let img = snapshot::load(&snap_path).expect("snapshot load");
+        snapshot::restore_into(&fresh, &img).expect("restore");
+        assert_eq!(fresh.len(), n);
+    });
+    std::fs::remove_dir_all(&dir).ok();
+
     b.finish_json(std::path::Path::new(concat!(
         env!("CARGO_MANIFEST_DIR"),
         "/../BENCH_scan.json"

@@ -67,6 +67,23 @@ impl SketchClient {
         }
     }
 
+    /// Drop the sketch stored under `id`; returns whether it existed.
+    pub fn remove(&mut self, id: &str) -> crate::Result<bool> {
+        match self.call(&Request::Remove { id: id.to_string() })? {
+            Response::Removed { existed } => Ok(existed),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// Explicit durability checkpoint; returns `(rows snapshotted,
+    /// WAL bytes retired)`. Errors when the server is not durable.
+    pub fn persist(&mut self) -> crate::Result<(u64, u64)> {
+        match self.call(&Request::Persist)? {
+            Response::Persisted { rows, wal_bytes } => Ok((rows, wal_bytes)),
+            other => Err(Self::bail(other)),
+        }
+    }
+
     /// Returns `(rho, std_err)`.
     pub fn estimate(&mut self, a: &str, b: &str) -> crate::Result<(f64, f64)> {
         match self.call(&Request::Estimate {
@@ -169,6 +186,12 @@ mod tests {
         assert_eq!(stats.registered, 4);
         assert_eq!(stats.knn_queries, 2);
         assert!(!stats.kernel.is_empty());
+        // Remove round-trips; Persist errors on a non-durable server.
+        assert!(c.remove("b1")?);
+        assert!(!c.remove("b1")?);
+        let stats = c.stats()?;
+        assert_eq!(stats.wal_records, 0, "non-durable server logs nothing");
+        assert!(c.persist().is_err());
         Ok(())
     }
 

@@ -1,0 +1,444 @@
+//! Arena-native durability: sealed-word snapshots + an epoch WAL.
+//!
+//! The paper's storage story — 1–2 bits per projection — makes full-
+//! fidelity persistence nearly free, so the serving stack keeps *all*
+//! of it durable: every acknowledged mutation is appended to a
+//! checksummed write-ahead log ([`wal`]), and checkpoints serialize the
+//! sealed arena verbatim ([`snapshot`], `CRPSNAP2`) so restart is a
+//! bulk ingest of one contiguous word block, not a re-encode.
+//!
+//! ## Checkpoint protocol (snapshot-then-truncate)
+//!
+//! 1. **Rotate** the WAL to a fresh segment. Append + store-apply share
+//!    the WAL mutex, so every op in the retired segments is already
+//!    applied to the store when rotation returns.
+//! 2. **Drain** the epoch arena (one short write-lock hold, no I/O), so
+//!    the sealed arena covers everything in the retired segments.
+//! 3. **Image** the sealed arena (one short read-lock hold, one flat
+//!    clone), then write `CRPSNAP2` to a tmp file and rename — with no
+//!    store lock held across any disk write, so puts and scans flow
+//!    freely for the whole file write.
+//! 4. **Retire** the old segments.
+//!
+//! Ops that land between rotation and the sealed image appear in both
+//! the snapshot and the new segment; replay is idempotent and ordered,
+//! so recovery (snapshot, then all surviving segments oldest-first)
+//! always reconstructs the state at the last acknowledged op. Every
+//! crash window — mid-append (torn tail), mid-snapshot (tmp discarded),
+//! between rename and retire (stale segments replay idempotently) —
+//! resolves to that same state.
+
+pub mod snapshot;
+pub mod wal;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::coding::{supported_width, PackedCodes};
+use crate::coordinator::store::SketchStore;
+
+/// Incremental IEEE CRC-32 (chain as `crc32_update(crc32_update(0, a), b)`).
+pub(crate) fn crc32_update(state: u32, bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !state;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Where durable state lives and how often it is checkpointed.
+#[derive(Clone, Debug)]
+pub struct DurabilityConfig {
+    /// Arena-image snapshot file (rewritten atomically at each checkpoint).
+    pub snapshot: PathBuf,
+    /// Directory of WAL segment files.
+    pub wal_dir: PathBuf,
+    /// Logged rows between automatic checkpoints (0 = only explicit
+    /// `Persist` requests and graceful shutdown checkpoint).
+    pub checkpoint_every: u64,
+}
+
+/// What recovery found on disk.
+#[derive(Clone, Debug, Default)]
+pub struct RecoverStats {
+    /// Live rows bulk-restored from the snapshot.
+    pub snapshot_rows: u64,
+    pub wal_segments: u64,
+    pub wal_records: u64,
+    pub wal_bytes: u64,
+    /// The final WAL segment ended in a truncated/corrupt record (a
+    /// crash mid-append); its clean prefix was applied.
+    pub wal_torn: bool,
+    /// Torn final segment + clean-prefix length (see
+    /// [`wal::ReplayStats::torn_tail`]).
+    pub torn_tail: Option<(PathBuf, u64)>,
+    /// Live sketches after snapshot + replay.
+    pub live: u64,
+}
+
+/// Replay `snapshot` (if it exists) and every WAL segment under
+/// `wal_dir` into `store`.
+pub fn recover_into(
+    store: &SketchStore,
+    snapshot_path: &Path,
+    wal_dir: &Path,
+) -> crate::Result<RecoverStats> {
+    let mut stats = RecoverStats::default();
+    if snapshot_path.is_file() {
+        let img = snapshot::load(snapshot_path)?;
+        stats.snapshot_rows = snapshot::restore_into(store, &img)?;
+    }
+    let replay = wal::replay_into(store, wal_dir)?;
+    stats.wal_segments = replay.segments;
+    stats.wal_records = replay.records;
+    stats.wal_bytes = replay.bytes;
+    stats.wal_torn = replay.torn;
+    stats.torn_tail = replay.torn_tail;
+    stats.live = store.len() as u64;
+    Ok(stats)
+}
+
+/// Recover into a fresh arena-backed store, discovering the sketch
+/// shape from the snapshot header (or the oldest WAL segment when no
+/// snapshot exists). Returns `(store, k, bits, stats)`.
+pub fn recover(
+    snapshot_path: &Path,
+    wal_dir: &Path,
+) -> crate::Result<(SketchStore, usize, u32, RecoverStats)> {
+    let snap_shape = snapshot::peek_shape(snapshot_path)?.filter(|(k, _)| *k > 0);
+    let (k, bits) = match snap_shape {
+        Some(shape) => shape,
+        None => wal::peek_shape(wal_dir)?.ok_or_else(|| {
+            anyhow::anyhow!(
+                "nothing to recover: no snapshot at {} and no WAL segments in {}",
+                snapshot_path.display(),
+                wal_dir.display()
+            )
+        })?,
+    };
+    let bits = supported_width(bits.max(1));
+    let store = SketchStore::with_arena(k, bits);
+    let stats = recover_into(&store, snapshot_path, wal_dir)?;
+    Ok((store, k, bits, stats))
+}
+
+/// The service's durability engine: recovery at open, per-op WAL
+/// appends, and snapshot-then-truncate checkpoints.
+pub struct Durability {
+    cfg: DurabilityConfig,
+    wal: wal::Wal,
+    /// Serializes whole checkpoints (maintenance tick vs explicit
+    /// `Persist` requests).
+    checkpoint_mu: Mutex<()>,
+    since_checkpoint: AtomicU64,
+    last_checkpoint_rows: AtomicU64,
+}
+
+impl Durability {
+    /// Recover `store` from the snapshot + WAL named by `cfg`, then
+    /// open a fresh WAL segment for new appends.
+    pub fn open(
+        cfg: DurabilityConfig,
+        store: &SketchStore,
+    ) -> crate::Result<(Durability, RecoverStats)> {
+        let arena = store
+            .arena()
+            .ok_or_else(|| anyhow::anyhow!("durability requires an arena-backed store"))?;
+        std::fs::create_dir_all(&cfg.wal_dir)?;
+        if let Some(parent) = cfg.snapshot.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let stats = recover_into(store, &cfg.snapshot, &cfg.wal_dir)?;
+        // Heal a torn tail before opening a new segment: the tail past
+        // the clean prefix was never acknowledged, and truncating it
+        // now means the segment can never wedge a later recovery once
+        // newer segments sit behind it.
+        if let Some((path, clean_len)) = &stats.torn_tail {
+            let f = std::fs::OpenOptions::new().write(true).open(path)?;
+            f.set_len(*clean_len)?;
+            f.sync_all()?;
+        }
+        let wal = wal::Wal::create(&cfg.wal_dir, arena.k(), arena.bits())?;
+        Ok((
+            Durability {
+                cfg,
+                wal,
+                checkpoint_mu: Mutex::new(()),
+                since_checkpoint: AtomicU64::new(0),
+                last_checkpoint_rows: AtomicU64::new(0),
+            },
+            stats,
+        ))
+    }
+
+    /// WAL-append a put, then (under the same hold) apply it via
+    /// `apply`. An `Err` means the op was never logged and must not be
+    /// acknowledged.
+    pub fn log_put(
+        &self,
+        id: &str,
+        codes: &PackedCodes,
+        apply: impl FnOnce(),
+    ) -> crate::Result<()> {
+        self.wal.append_put(id, codes.words(), apply)?;
+        self.since_checkpoint.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// WAL-append a bulk put (one record for the whole batch), then
+    /// apply it.
+    pub fn log_put_rows(
+        &self,
+        ids: &[String],
+        words: &[u64],
+        apply: impl FnOnce() -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        let n = ids.len() as u64;
+        self.wal.append_put_rows(ids, words, apply)??;
+        self.since_checkpoint.fetch_add(n, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// WAL-append a removal, then apply it; returns what `apply`
+    /// reported (whether the id existed).
+    pub fn log_remove(&self, id: &str, apply: impl FnOnce() -> bool) -> crate::Result<bool> {
+        let existed = self.wal.append_remove(id, apply)?;
+        self.since_checkpoint.fetch_add(1, Ordering::Relaxed);
+        Ok(existed)
+    }
+
+    /// Whether the maintenance thread should checkpoint now: the row
+    /// threshold has been crossed, or the active WAL segment is broken
+    /// after a failed append — only the checkpoint's rotation heals
+    /// that, so it must not wait for rows that can no longer be logged.
+    pub fn checkpoint_due(&self) -> bool {
+        self.wal.is_broken()
+            || (self.cfg.checkpoint_every > 0
+                && self.since_checkpoint.load(Ordering::Relaxed) >= self.cfg.checkpoint_every)
+    }
+
+    /// Run the snapshot-then-truncate protocol (see the module docs).
+    /// No shard or arena lock is held across any disk write. Returns
+    /// `(live rows snapshotted, WAL bytes retired)`.
+    pub fn checkpoint(&self, store: &SketchStore) -> crate::Result<(u64, u64)> {
+        let _serialize = self.checkpoint_mu.lock().unwrap();
+        let arena = store
+            .arena()
+            .ok_or_else(|| anyhow::anyhow!("durability requires an arena-backed store"))?;
+        let retired = self.wal.rotate()?;
+        arena.drain();
+        let image = arena.sealed_image();
+        let rows = match snapshot::save(&self.cfg.snapshot, &image) {
+            Ok(rows) => rows,
+            Err(e) => {
+                // The snapshot failed, so the retired segments must
+                // survive for the next attempt — except header-only
+                // ones (no record was ever acknowledged into them),
+                // which would otherwise pile up one per retry while
+                // the snapshot path stays unwritable.
+                for p in &retired {
+                    let empty = std::fs::metadata(p)
+                        .map(|m| m.len() <= wal::SEGMENT_HEADER)
+                        .unwrap_or(false);
+                    if empty {
+                        let _ = std::fs::remove_file(p);
+                    }
+                }
+                return Err(e);
+            }
+        };
+        let mut retired_bytes = 0u64;
+        for p in &retired {
+            retired_bytes += std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+            let _ = std::fs::remove_file(p);
+        }
+        self.since_checkpoint.store(0, Ordering::Relaxed);
+        self.last_checkpoint_rows.store(rows, Ordering::Relaxed);
+        Ok((rows, retired_bytes))
+    }
+
+    /// Flush buffered WAL frames to the OS.
+    pub fn flush(&self) -> crate::Result<()> {
+        self.wal.flush()
+    }
+
+    /// WAL records appended by this process.
+    pub fn wal_records(&self) -> u64 {
+        self.wal.records()
+    }
+
+    /// WAL bytes appended by this process.
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.bytes()
+    }
+
+    /// Live rows written by the most recent checkpoint (0 before one).
+    pub fn last_checkpoint_rows(&self) -> u64 {
+        self.last_checkpoint_rows.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+    use crate::mathx::Pcg64;
+
+    fn sketch(g: &mut Pcg64, k: usize) -> PackedCodes {
+        let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+        pack_codes(&codes, 2)
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("crp_dur_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cfg(dir: &Path, every: u64) -> DurabilityConfig {
+        DurabilityConfig {
+            snapshot: dir.join("snapshot.bin"),
+            wal_dir: dir.join("wal"),
+            checkpoint_every: every,
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32_update(0, b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32_update(0, b""), 0);
+        // Incremental chaining equals one-shot.
+        let one = crc32_update(0, b"hello world");
+        let two = crc32_update(crc32_update(0, b"hello "), b"world");
+        assert_eq!(one, two);
+    }
+
+    #[test]
+    fn open_log_checkpoint_recover_cycle() {
+        let dir = temp_dir("cycle");
+        let k = 64usize;
+        let store = SketchStore::with_arena(k, 2);
+        let (d, stats) = Durability::open(cfg(&dir, 0), &store).unwrap();
+        assert_eq!(stats.live, 0);
+        let mut g = Pcg64::new(1, 1);
+        for i in 0..20 {
+            let codes = sketch(&mut g, k);
+            let id = format!("id{i}");
+            d.log_put(&id, &codes, || store.put(id.clone(), codes.clone()))
+                .unwrap();
+        }
+        assert!(d.log_remove("id3", || store.remove("id3")).unwrap());
+        assert_eq!(d.wal_records(), 21);
+
+        // Checkpoint: snapshot written, WAL retired, counters reset.
+        let (rows, retired) = d.checkpoint(&store).unwrap();
+        assert_eq!(rows, 19);
+        assert!(retired > 0, "old segment bytes must be retired");
+        assert_eq!(d.last_checkpoint_rows(), 19);
+        assert_eq!(wal::segments(&dir.join("wal")).unwrap().len(), 1);
+
+        // More ops after the checkpoint land in the new segment only.
+        let codes = sketch(&mut g, k);
+        d.log_put("post", &codes, || store.put("post".into(), codes.clone()))
+            .unwrap();
+
+        // Recovery = snapshot + surviving WAL tail.
+        let (back, rk, rbits, rstats) =
+            recover(&dir.join("snapshot.bin"), &dir.join("wal")).unwrap();
+        assert_eq!((rk, rbits), (k, 2));
+        assert_eq!(rstats.snapshot_rows, 19);
+        assert_eq!(rstats.wal_records, 1);
+        assert!(!rstats.wal_torn);
+        assert_eq!(back.len(), store.len());
+        assert_eq!(back.get("post"), store.get("post"));
+        assert!(back.get("id3").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_at_open_and_never_wedges() {
+        let dir = temp_dir("heal");
+        let store = SketchStore::with_arena(32, 2);
+        let (d, _) = Durability::open(cfg(&dir, 0), &store).unwrap();
+        let mut g = Pcg64::new(3, 3);
+        for i in 0..4 {
+            let codes = sketch(&mut g, 32);
+            let id = format!("id{i}");
+            d.log_put(&id, &codes, || store.put(id.clone(), codes.clone()))
+                .unwrap();
+        }
+        drop(d);
+        // Tear the tail: a crash mid-append of the 4th (unacked) record.
+        let (_, seg) = wal::segments(&dir.join("wal")).unwrap().pop().unwrap();
+        let full = std::fs::read(&seg).unwrap();
+        std::fs::write(&seg, &full[..full.len() - 5]).unwrap();
+
+        // Restart 1: clean prefix replays, the tear is truncated away,
+        // and new acknowledged ops land in a fresh segment.
+        let store2 = SketchStore::with_arena(32, 2);
+        let (d2, st) = Durability::open(cfg(&dir, 0), &store2).unwrap();
+        assert!(st.wal_torn);
+        assert_eq!(st.live, 3);
+        let healed = std::fs::metadata(&seg).unwrap().len();
+        assert!(healed < (full.len() - 5) as u64, "torn tail not truncated");
+        let codes = sketch(&mut g, 32);
+        d2.log_put("post", &codes, || store2.put("post".into(), codes.clone()))
+            .unwrap();
+        drop(d2);
+
+        // Restart 2: the once-torn segment is now non-final — recovery
+        // must still succeed and see every acknowledged op.
+        let store3 = SketchStore::with_arena(32, 2);
+        let (_, st) = Durability::open(cfg(&dir, 0), &store3).unwrap();
+        assert!(!st.wal_torn, "healed segment must replay cleanly");
+        assert_eq!(st.live, 4);
+        assert!(store3.get("post").is_some());
+        assert!(store3.get("id3").is_none(), "the torn put was never acked");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn auto_checkpoint_threshold_counts_rows() {
+        let dir = temp_dir("auto");
+        let store = SketchStore::with_arena(32, 2);
+        let (d, _) = Durability::open(cfg(&dir, 10), &store).unwrap();
+        let mut g = Pcg64::new(2, 2);
+        for i in 0..9 {
+            let codes = sketch(&mut g, 32);
+            let id = format!("a{i}");
+            d.log_put(&id, &codes, || store.put(id.clone(), codes.clone()))
+                .unwrap();
+        }
+        assert!(!d.checkpoint_due());
+        let ids: Vec<String> = (0..3).map(|i| format!("b{i}")).collect();
+        let stride = store.arena().unwrap().stride();
+        let mut words = Vec::with_capacity(3 * stride);
+        for _ in 0..3 {
+            words.extend_from_slice(sketch(&mut g, 32).words());
+        }
+        // A bulk record counts its row count, not 1.
+        d.log_put_rows(&ids, &words, || store.put_rows(&ids, &words))
+            .unwrap();
+        assert!(d.checkpoint_due());
+        d.checkpoint(&store).unwrap();
+        assert!(!d.checkpoint_due());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,441 @@
+//! Arena-image snapshots (`CRPSNAP2`): the sealed arena serialized
+//! verbatim — shape header, id table, one contiguous word block, CRC —
+//! so writing a snapshot is a sequential dump of memory and restoring
+//! one is a bulk ingest, not a per-sketch re-encode. The legacy
+//! per-sketch `CRPSNAP1` format is still readable (never written).
+//!
+//! ```text
+//! magic "CRPSNAP2" | u32 k | u32 bits | u64 rows |
+//!   id table: rows × (u32 id_len | id bytes)   (len = u32::MAX ⇒ tombstone)
+//!   word block: rows · stride × u64
+//! | u32 crc32 (everything after the magic)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::crc32_update;
+use crate::coding::supported_width;
+use crate::coordinator::store::SketchStore;
+use crate::scan::ArenaImage;
+
+pub const MAGIC_V2: &[u8; 8] = b"CRPSNAP2";
+pub const MAGIC_V1: &[u8; 8] = b"CRPSNAP1";
+
+/// Id-table length marker for a tombstoned row.
+const TOMBSTONE: u32 = u32::MAX;
+/// Rows per bulk `put_rows` call on restore — one pending-buffer
+/// round-trip per chunk instead of per sketch.
+const RESTORE_CHUNK: usize = 4096;
+
+struct Sink<W: Write> {
+    w: W,
+    crc: u32,
+}
+
+impl<W: Write> Sink<W> {
+    fn put(&mut self, b: &[u8]) -> std::io::Result<()> {
+        self.crc = crc32_update(self.crc, b);
+        self.w.write_all(b)
+    }
+}
+
+/// Serialize `img` to `w`. The image is an owned copy, so this holds no
+/// store lock — a slow disk never stalls writers or scans. Returns the
+/// number of live rows written.
+pub fn write_image<W: Write>(w: W, img: &ArenaImage) -> crate::Result<u64> {
+    debug_assert_eq!(img.words.len(), img.rows() * img.stride, "image shape");
+    let mut s = Sink { w, crc: 0 };
+    s.w.write_all(MAGIC_V2)?;
+    s.put(&(img.k as u32).to_le_bytes())?;
+    s.put(&img.bits.to_le_bytes())?;
+    s.put(&(img.rows() as u64).to_le_bytes())?;
+    for id in &img.ids {
+        match id {
+            Some(id) => {
+                anyhow::ensure!(
+                    id.len() <= 1 << 20,
+                    "id of {} bytes too long to snapshot",
+                    id.len()
+                );
+                s.put(&(id.len() as u32).to_le_bytes())?;
+                s.put(id.as_bytes())?;
+            }
+            None => s.put(&TOMBSTONE.to_le_bytes())?,
+        }
+    }
+    // The word block, staged through a flat byte buffer: one sequential
+    // stream, no per-row framing.
+    let mut buf = Vec::with_capacity(8 * 1024);
+    for word in &img.words {
+        buf.extend_from_slice(&word.to_le_bytes());
+        if buf.len() >= 8 * 1024 {
+            s.put(&buf)?;
+            buf.clear();
+        }
+    }
+    if !buf.is_empty() {
+        s.put(&buf)?;
+    }
+    let crc = s.crc;
+    s.w.write_all(&crc.to_le_bytes())?;
+    s.w.flush()?;
+    Ok(img.live() as u64)
+}
+
+/// Write `img` to `path` atomically (tmp file, fsync, rename), so a
+/// crash mid-write leaves the previous snapshot intact. Returns live
+/// rows written.
+pub fn save(path: &Path, img: &ArenaImage) -> crate::Result<u64> {
+    let tmp = path.with_extension("tmp");
+    let f = File::create(&tmp)?;
+    let mut w = BufWriter::new(f);
+    let rows = write_image(&mut w, img)?;
+    let f = w
+        .into_inner()
+        .map_err(|e| anyhow::anyhow!("snapshot flush failed: {e}"))?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(rows)
+}
+
+/// Shape `(k, bits)` from a snapshot header without loading the body
+/// (both formats store them at the same offsets). `None` if `path` is
+/// not a file.
+pub fn peek_shape(path: &Path) -> crate::Result<Option<(usize, u32)>> {
+    if !path.is_file() {
+        return Ok(None);
+    }
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC_V2 || &magic == MAGIC_V1, "not a CRP snapshot");
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let k = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4)?;
+    let bits = u32::from_le_bytes(b4);
+    Ok(Some((k, bits)))
+}
+
+/// Load a snapshot of either format into an owned arena image.
+pub fn load(path: &Path) -> crate::Result<ArenaImage> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic == MAGIC_V2 {
+        load_v2(&mut r)
+    } else if &magic == MAGIC_V1 {
+        load_v1(&mut r)
+    } else {
+        anyhow::bail!("not a CRP snapshot")
+    }
+}
+
+struct Source<R: Read> {
+    r: R,
+    crc: u32,
+}
+
+impl<R: Read> Source<R> {
+    fn get(&mut self, buf: &mut [u8]) -> crate::Result<()> {
+        self.r.read_exact(buf)?;
+        self.crc = crc32_update(self.crc, buf);
+        Ok(())
+    }
+    fn u32(&mut self) -> crate::Result<u32> {
+        let mut b = [0u8; 4];
+        self.get(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> crate::Result<u64> {
+        let mut b = [0u8; 8];
+        self.get(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+}
+
+/// Validate a snapshot shape header before any stride arithmetic — a
+/// crafted `bits = 0` (or any unsupported width) must be an error, not
+/// a divide-by-zero panic downstream.
+fn check_shape(k: usize, bits: u32) -> crate::Result<()> {
+    anyhow::ensure!(k >= 1 && k <= 1 << 24, "implausible snapshot k {k}");
+    anyhow::ensure!(
+        bits != 0 && bits == supported_width(bits),
+        "unsupported snapshot bit width {bits}"
+    );
+    Ok(())
+}
+
+fn load_v2(r: &mut impl Read) -> crate::Result<ArenaImage> {
+    let mut s = Source { r, crc: 0 };
+    let k = s.u32()? as usize;
+    let bits = s.u32()?;
+    let rows = s.u64()?;
+    check_shape(k, bits)?;
+    anyhow::ensure!(rows <= 1 << 32, "implausible snapshot row count {rows}");
+    let rows = rows as usize;
+    let mut img = ArenaImage::empty(k, bits);
+    img.ids.reserve(rows.min(1 << 20));
+    for _ in 0..rows {
+        let len = s.u32()?;
+        if len == TOMBSTONE {
+            img.ids.push(None);
+        } else {
+            anyhow::ensure!(len <= 1 << 20, "implausible id length {len}");
+            let mut id = vec![0u8; len as usize];
+            s.get(&mut id)?;
+            img.ids.push(Some(String::from_utf8(id)?));
+        }
+    }
+    let n_words = rows * img.stride;
+    img.words.reserve(n_words.min(1 << 22));
+    let mut buf = [0u8; 8 * 1024];
+    let mut remaining = n_words;
+    while remaining > 0 {
+        let take = remaining.min(1024);
+        let bytes = &mut buf[..take * 8];
+        s.get(bytes)?;
+        for c in bytes.chunks_exact(8) {
+            img.words.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        remaining -= take;
+    }
+    let want = s.crc;
+    let mut crc_bytes = [0u8; 4];
+    s.r.read_exact(&mut crc_bytes)?;
+    anyhow::ensure!(
+        u32::from_le_bytes(crc_bytes) == want,
+        "snapshot checksum mismatch"
+    );
+    Ok(img)
+}
+
+/// Legacy per-sketch format reader (`CRPSNAP1`, no checksum).
+fn load_v1(r: &mut impl Read) -> crate::Result<ArenaImage> {
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let k = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4)?;
+    let bits = u32::from_le_bytes(b4);
+    r.read_exact(&mut b8)?;
+    let count = u64::from_le_bytes(b8);
+    anyhow::ensure!(count < 1 << 40, "implausible snapshot count");
+    if count == 0 {
+        // Legacy empty snapshots recorded k = 0, bits = 0.
+        return Ok(ArenaImage::empty(k, bits.max(1)));
+    }
+    check_shape(k, bits)?;
+    let mut img = ArenaImage::empty(k, bits);
+    for _ in 0..count {
+        r.read_exact(&mut b4)?;
+        let id_len = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(id_len <= 1 << 20, "implausible id length {id_len}");
+        let mut id = vec![0u8; id_len];
+        r.read_exact(&mut id)?;
+        r.read_exact(&mut b4)?;
+        let n_words = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(
+            n_words == img.stride,
+            "snapshot row has {n_words} words, stride is {}",
+            img.stride
+        );
+        img.ids.push(Some(String::from_utf8(id)?));
+        for _ in 0..n_words {
+            r.read_exact(&mut b8)?;
+            img.words.push(u64::from_le_bytes(b8));
+        }
+    }
+    Ok(img)
+}
+
+/// Bulk-restore an image into an arena-backed store through the
+/// `put_rows` path — [`RESTORE_CHUNK`] rows per pending-buffer
+/// round-trip, zero per-sketch trips. Tombstoned rows are skipped.
+/// Returns live rows restored.
+pub fn restore_into(store: &SketchStore, img: &ArenaImage) -> crate::Result<u64> {
+    if img.rows() == 0 {
+        return Ok(0);
+    }
+    let arena = store
+        .arena()
+        .ok_or_else(|| anyhow::anyhow!("snapshot restore requires an arena-backed store"))?;
+    anyhow::ensure!(
+        img.k == arena.k() && img.bits == arena.bits(),
+        "snapshot shape (k={}, bits={}) does not match store (k={}, bits={})",
+        img.k,
+        img.bits,
+        arena.k(),
+        arena.bits()
+    );
+    let mut ids: Vec<String> = Vec::with_capacity(RESTORE_CHUNK);
+    let mut words: Vec<u64> = Vec::with_capacity(RESTORE_CHUNK * img.stride);
+    let mut restored = 0u64;
+    for row in 0..img.rows() {
+        let Some(id) = &img.ids[row] else { continue };
+        ids.push(id.clone());
+        words.extend_from_slice(img.row_words(row));
+        if ids.len() == RESTORE_CHUNK {
+            store.put_rows(&ids, &words)?;
+            restored += ids.len() as u64;
+            ids.clear();
+            words.clear();
+        }
+    }
+    if !ids.is_empty() {
+        store.put_rows(&ids, &words)?;
+        restored += ids.len() as u64;
+    }
+    Ok(restored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+    use crate::mathx::Pcg64;
+    use crate::scan::CodeArena;
+    use std::path::PathBuf;
+
+    fn temp_file(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("crp_snap_{tag}_{}.bin", std::process::id()))
+    }
+
+    fn filled_arena(n: usize, k: usize) -> CodeArena {
+        let mut a = CodeArena::new(k, 2);
+        let mut g = Pcg64::new(5, 0);
+        for i in 0..n {
+            let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+            a.insert(&format!("vec-{i}"), &pack_codes(&codes, 2));
+        }
+        a
+    }
+
+    #[test]
+    fn v2_roundtrip_with_tombstones() {
+        let mut a = filled_arena(50, 256);
+        a.remove("vec-7");
+        a.remove("vec-31");
+        let img = a.image();
+        let path = temp_file("rt");
+        let n = save(&path, &img).unwrap();
+        assert_eq!(n, 48);
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, img, "image survives the round trip verbatim");
+
+        // Restore through the bulk path lands exactly the live rows.
+        let store = SketchStore::with_arena(256, 2);
+        let restored = restore_into(&store, &back).unwrap();
+        assert_eq!(restored, 48);
+        assert_eq!(store.len(), 48);
+        assert!(store.get("vec-7").is_none());
+        assert_eq!(store.get("vec-3"), a.get("vec-3"));
+        assert_eq!(store.arena().unwrap().single_puts(), 0, "bulk ingest only");
+    }
+
+    #[test]
+    fn empty_image_roundtrip() {
+        let img = CodeArena::new(64, 2).image();
+        let path = temp_file("empty");
+        assert_eq!(save(&path, &img).unwrap(), 0);
+        let back = load(&path).unwrap();
+        assert_eq!(back.rows(), 0);
+        assert_eq!((back.k, back.bits), (64, 2));
+        assert_eq!(peek_shape(&path).unwrap(), Some((64, 2)));
+        std::fs::remove_file(&path).ok();
+        assert!(peek_shape(&path).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_and_garbage_rejected() {
+        let path = temp_file("bad");
+        std::fs::write(&path, b"garbage data").unwrap();
+        assert!(load(&path).is_err());
+        // Bit-flip inside a valid file: caught by the checksum.
+        let img = filled_arena(20, 64).image();
+        save(&path, &img).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unsupported_width_header_is_error_not_panic() {
+        // CRPSNAP2 with bits = 0 and a nonzero row count.
+        let path = temp_file("w2");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&64u32.to_le_bytes()); // k
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // bits = 0
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // rows > 0
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+        // Legacy CRPSNAP1 with the same crafted header used to divide by
+        // zero in word unpacking; now it is a clean error.
+        for bad_bits in [0u32, 3, 5, 63] {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(MAGIC_V1);
+            bytes.extend_from_slice(&64u32.to_le_bytes());
+            bytes.extend_from_slice(&bad_bits.to_le_bytes());
+            bytes.extend_from_slice(&1u64.to_le_bytes()); // count > 0
+            bytes.extend_from_slice(&2u32.to_le_bytes()); // id_len
+            bytes.extend_from_slice(b"aa");
+            std::fs::write(&path, &bytes).unwrap();
+            let got = load(&path);
+            assert!(got.is_err(), "bits={bad_bits} must be rejected");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // Hand-write a CRPSNAP1 file the way the old persist layer did.
+        let (k, bits) = (96usize, 2u32);
+        let mut g = Pcg64::new(9, 0);
+        let mut entries = Vec::new();
+        for i in 0..12 {
+            let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+            entries.push((format!("v{i:02}"), pack_codes(&codes, bits)));
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&(k as u32).to_le_bytes());
+        bytes.extend_from_slice(&bits.to_le_bytes());
+        bytes.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for (id, codes) in &entries {
+            bytes.extend_from_slice(&(id.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(id.as_bytes());
+            bytes.extend_from_slice(&(codes.words().len() as u32).to_le_bytes());
+            for w in codes.words() {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        let path = temp_file("v1");
+        std::fs::write(&path, &bytes).unwrap();
+        let img = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!((img.k, img.bits), (k, bits));
+        assert_eq!(img.rows(), 12);
+        let store = SketchStore::with_arena(k, bits);
+        assert_eq!(restore_into(&store, &img).unwrap(), 12);
+        for (id, codes) in &entries {
+            assert_eq!(store.get(id).as_ref(), Some(codes), "{id}");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_shape_mismatch() {
+        let img = filled_arena(5, 64).image();
+        let store = SketchStore::with_arena(128, 2);
+        let err = restore_into(&store, &img).unwrap_err().to_string();
+        assert!(err.contains("does not match store"), "{err}");
+        assert!(restore_into(&SketchStore::new(), &img).is_err());
+    }
+}

@@ -1,0 +1,701 @@
+//! Append-only epoch WAL (`CRPWAL1`): every acknowledged mutation —
+//! put, bulk put_rows, remove — becomes a length-prefixed, checksummed
+//! record in a numbered segment file. Replay applies the longest clean
+//! prefix, so a crash (or `kill -9`) mid-append loses at most the one
+//! record that was never acknowledged.
+//!
+//! Layout per segment (`wal.<seq>.log`):
+//!
+//! ```text
+//! magic "CRPWAL1\0" | u32 k | u32 bits |
+//!   repeated: u32 payload_len | u32 crc32(payload) | payload
+//! payload: u8 op |
+//!   op 1 Put:     u32 id_len | id | stride × u64 words
+//!   op 2 PutRows: u32 n | n × (u32 id_len | id) | n·stride × u64 words
+//!   op 3 Remove:  u32 id_len | id
+//! ```
+//!
+//! Appends serialize on one mutex and the store apply runs under the
+//! same hold, so segment rotation (which takes the mutex) can never
+//! observe a logged-but-unapplied op — the invariant the checkpoint
+//! protocol in [`super`] builds on. Each record is flushed to the OS
+//! before the op is acknowledged. No shard or arena lock is ever taken
+//! here: WAL pressure slows writers, never scans.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::crc32_update;
+use crate::coding::{supported_width, PackedCodes};
+use crate::coordinator::store::SketchStore;
+
+/// Segment-file magic (the version lives in the name: `CRPWAL1`).
+pub const MAGIC: &[u8; 8] = b"CRPWAL1\0";
+
+const OP_PUT: u8 = 1;
+const OP_PUT_ROWS: u8 = 2;
+const OP_REMOVE: u8 = 3;
+/// Segment header bytes: magic + k + bits. A segment of exactly this
+/// size has never held an acknowledged record.
+pub(crate) const SEGMENT_HEADER: u64 = 16;
+/// Frame header bytes: payload length + payload checksum.
+const FRAME_HEADER: usize = 8;
+/// Upper bound on one record payload; anything larger read back is
+/// treated as corruption, and appends refuse to write it.
+const MAX_PAYLOAD: u32 = 1 << 27;
+
+fn segment_name(seq: u64) -> String {
+    format!("wal.{seq:012}.log")
+}
+
+/// Existing segment files in `dir`, ascending by sequence number.
+pub fn segments(dir: &Path) -> crate::Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(num) = name.strip_prefix("wal.").and_then(|r| r.strip_suffix(".log")) {
+            if let Ok(seq) = num.parse::<u64>() {
+                out.push((seq, entry.path()));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn open_segment(dir: &Path, seq: u64, k: usize, bits: u32) -> crate::Result<BufWriter<File>> {
+    let file = File::create(dir.join(segment_name(seq)))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(k as u32).to_le_bytes())?;
+    w.write_all(&bits.to_le_bytes())?;
+    w.flush()?;
+    Ok(w)
+}
+
+struct Writer {
+    seq: u64,
+    file: BufWriter<File>,
+}
+
+/// An open write-ahead log: one active segment accepting appends, plus
+/// any retired-but-not-yet-deleted segments recovery still replays.
+pub struct Wal {
+    k: usize,
+    bits: u32,
+    stride: usize,
+    dir: PathBuf,
+    inner: Mutex<Writer>,
+    /// Set when an append failed partway (the segment tail may be
+    /// garbage); further appends error out until a rotation cuts over
+    /// to a clean segment.
+    broken: AtomicBool,
+    records: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Wal {
+    /// Open `dir` for appends into a fresh segment numbered above every
+    /// existing one. Existing segments are never appended to — recovery
+    /// replays them and the next checkpoint retires them.
+    pub fn create(dir: &Path, k: usize, bits: u32) -> crate::Result<Wal> {
+        let bits = supported_width(bits);
+        std::fs::create_dir_all(dir)?;
+        let seq = segments(dir)?.last().map_or(1, |(s, _)| s + 1);
+        let file = open_segment(dir, seq, k, bits)?;
+        Ok(Wal {
+            k,
+            bits,
+            stride: k.div_ceil((64 / bits) as usize),
+            dir: dir.to_path_buf(),
+            inner: Mutex::new(Writer { seq, file }),
+            broken: AtomicBool::new(false),
+            records: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        })
+    }
+
+    /// Codes per sketch, as recorded in every segment header.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bit width per code (a supported packing width).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// `u64` words per logged row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Records appended by this process.
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    /// Bytes appended by this process (frame headers included).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Whether the active segment is wedged after a failed append (its
+    /// tail may be garbage). Only a rotation heals it — callers should
+    /// checkpoint promptly when this turns true.
+    pub fn is_broken(&self) -> bool {
+        self.broken.load(Ordering::Relaxed)
+    }
+
+    /// Append one framed payload and, under the same mutex hold, run
+    /// `apply`. The frame is flushed to the OS first; an append error
+    /// means the op was never acknowledged and `apply` does not run.
+    fn append<R>(&self, payload: &[u8], apply: impl FnOnce() -> R) -> crate::Result<R> {
+        anyhow::ensure!(
+            payload.len() as u64 <= MAX_PAYLOAD as u64,
+            "WAL record of {} bytes exceeds the {MAX_PAYLOAD}-byte cap",
+            payload.len()
+        );
+        let mut g = self.inner.lock().unwrap();
+        // Checked under the mutex: a writer that was blocked behind the
+        // append that broke the segment must not land (and ack) a frame
+        // after the garbage tail — replay would stop before it.
+        anyhow::ensure!(
+            !self.broken.load(Ordering::Relaxed),
+            "WAL segment is broken after a failed append; checkpoint to rotate it"
+        );
+        let frame = (|| -> std::io::Result<()> {
+            g.file.write_all(&(payload.len() as u32).to_le_bytes())?;
+            g.file.write_all(&crc32_update(0, payload).to_le_bytes())?;
+            g.file.write_all(payload)?;
+            g.file.flush()
+        })();
+        if let Err(e) = frame {
+            self.broken.store(true, Ordering::Relaxed);
+            return Err(e.into());
+        }
+        let out = apply();
+        self.records.fetch_add(1, Ordering::Relaxed);
+        self.bytes
+            .fetch_add((FRAME_HEADER + payload.len()) as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn push_str(payload: &mut Vec<u8>, s: &str) {
+        payload.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        payload.extend_from_slice(s.as_bytes());
+    }
+
+    fn push_words(payload: &mut Vec<u8>, words: &[u64]) {
+        for w in words {
+            payload.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    /// Log an insert/overwrite of `id` with its packed row words
+    /// (exactly [`Wal::stride`] of them, as [`PackedCodes::words`]
+    /// yields at this shape), then apply it.
+    pub fn append_put<R>(
+        &self,
+        id: &str,
+        words: &[u64],
+        apply: impl FnOnce() -> R,
+    ) -> crate::Result<R> {
+        anyhow::ensure!(
+            words.len() == self.stride,
+            "WAL put row has {} words, stride is {}",
+            words.len(),
+            self.stride
+        );
+        let mut payload = Vec::with_capacity(1 + 4 + id.len() + words.len() * 8);
+        payload.push(OP_PUT);
+        Self::push_str(&mut payload, id);
+        Self::push_words(&mut payload, words);
+        self.append(&payload, apply)
+    }
+
+    /// Log a bulk insert (`ids[i]` owns `words[i·stride..(i+1)·stride]`),
+    /// then apply it — one record, one flush, for the whole batch.
+    pub fn append_put_rows<R>(
+        &self,
+        ids: &[String],
+        words: &[u64],
+        apply: impl FnOnce() -> R,
+    ) -> crate::Result<R> {
+        anyhow::ensure!(
+            words.len() == ids.len() * self.stride,
+            "WAL bulk record has {} words for {} rows of stride {}",
+            words.len(),
+            ids.len(),
+            self.stride
+        );
+        let id_bytes: usize = ids.iter().map(|id| 4 + id.len()).sum();
+        let mut payload = Vec::with_capacity(1 + 4 + id_bytes + words.len() * 8);
+        payload.push(OP_PUT_ROWS);
+        payload.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for id in ids {
+            Self::push_str(&mut payload, id);
+        }
+        Self::push_words(&mut payload, words);
+        self.append(&payload, apply)
+    }
+
+    /// Log a removal of `id`, then apply it.
+    pub fn append_remove<R>(&self, id: &str, apply: impl FnOnce() -> R) -> crate::Result<R> {
+        let mut payload = Vec::with_capacity(1 + 4 + id.len());
+        payload.push(OP_REMOVE);
+        Self::push_str(&mut payload, id);
+        self.append(&payload, apply)
+    }
+
+    /// Cut over to a fresh segment; returns the retired older segment
+    /// paths (delete them only once a snapshot covering them is
+    /// durable). Takes the append mutex, so every op in a retired
+    /// segment has already been applied to the store.
+    pub fn rotate(&self) -> crate::Result<Vec<PathBuf>> {
+        let mut g = self.inner.lock().unwrap();
+        let _ = g.file.flush();
+        let old: Vec<PathBuf> = segments(&self.dir)?
+            .into_iter()
+            .filter(|(s, _)| *s <= g.seq)
+            .map(|(_, p)| p)
+            .collect();
+        let seq = g.seq + 1;
+        g.file = open_segment(&self.dir, seq, self.k, self.bits)?;
+        g.seq = seq;
+        self.broken.store(false, Ordering::Relaxed);
+        Ok(old)
+    }
+
+    /// Flush buffered frames to the OS.
+    pub fn flush(&self) -> crate::Result<()> {
+        self.inner.lock().unwrap().file.flush()?;
+        Ok(())
+    }
+}
+
+// ---- replay -------------------------------------------------------------
+
+/// Outcome of replaying a WAL directory.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayStats {
+    pub segments: u64,
+    pub records: u64,
+    pub bytes: u64,
+    /// Replay stopped at a truncated or corrupt tail record — expected
+    /// after a crash mid-append; the clean prefix was applied.
+    pub torn: bool,
+    /// The torn final segment and the byte length of its clean prefix.
+    /// The tail past that length was never acknowledged; truncating to
+    /// it (as [`super::Durability::open`] does) heals the segment so it
+    /// cannot wedge a later recovery once newer segments sit behind it.
+    pub torn_tail: Option<(PathBuf, u64)>,
+}
+
+/// Shape `(k, bits)` from the oldest segment with a readable header,
+/// if any. Header-truncated segments (a crash before the header
+/// flushed; nothing acknowledged in them) are skipped, mirroring
+/// [`replay_into`], so offline `crp recover` accepts exactly the
+/// states the server itself recovers from.
+pub fn peek_shape(dir: &Path) -> crate::Result<Option<(usize, u32)>> {
+    for (_, path) in segments(dir)? {
+        let mut r = BufReader::new(File::open(&path)?);
+        match read_header(&mut r) {
+            Ok(shape) => return Ok(Some(shape)),
+            Err(e) if is_truncation(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(None)
+}
+
+fn read_header(r: &mut impl Read) -> crate::Result<(usize, u32)> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a CRP WAL segment");
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let k = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4)?;
+    let bits = u32::from_le_bytes(b4);
+    anyhow::ensure!(k >= 1 && k <= 1 << 24, "implausible WAL k {k}");
+    anyhow::ensure!(
+        bits != 0 && bits == supported_width(bits),
+        "unsupported WAL bit width {bits}"
+    );
+    Ok((k, bits))
+}
+
+/// Replay every segment in `dir` into `store`, oldest first, applying
+/// the longest clean prefix of records. A torn tail is tolerated only
+/// in the final segment; corruption in an earlier one is an error
+/// (acknowledged ops would silently go missing).
+pub fn replay_into(store: &SketchStore, dir: &Path) -> crate::Result<ReplayStats> {
+    let arena = store
+        .arena()
+        .ok_or_else(|| anyhow::anyhow!("WAL replay requires an arena-backed store"))?;
+    let (want_k, want_bits, stride) = (arena.k(), arena.bits(), arena.stride());
+    let mut stats = ReplayStats::default();
+    let segs = segments(dir)?;
+    for (i, (_, path)) in segs.iter().enumerate() {
+        let mut r = BufReader::new(File::open(path)?);
+        let (k, bits) = match read_header(&mut r) {
+            Ok(shape) => shape,
+            // A segment whose header never finished landing holds no
+            // acknowledged record (appends ack only after the header
+            // and frame are flushed), so it is safe to skip wherever
+            // it sits — a crash between segment creation and header
+            // flush must not wedge every later restart.
+            Err(e) if is_truncation(&e) => {
+                stats.segments += 1;
+                stats.torn = true;
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        anyhow::ensure!(
+            k == want_k && bits == want_bits,
+            "WAL segment shape (k={k}, bits={bits}) does not match store \
+             (k={want_k}, bits={want_bits})"
+        );
+        stats.segments += 1;
+        let bytes_before = stats.bytes;
+        if replay_segment(store, stride, &mut r, &mut stats)? {
+            anyhow::ensure!(
+                i + 1 == segs.len(),
+                "corrupt record inside non-final WAL segment {}",
+                path.display()
+            );
+            stats.torn = true;
+            stats.torn_tail =
+                Some((path.clone(), SEGMENT_HEADER + (stats.bytes - bytes_before)));
+        }
+    }
+    Ok(stats)
+}
+
+fn is_truncation(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>()
+        .is_some_and(|io| io.kind() == std::io::ErrorKind::UnexpectedEof)
+}
+
+enum ReadOutcome {
+    Full,
+    Partial,
+    Eof,
+}
+
+fn read_some(r: &mut impl Read, buf: &mut [u8]) -> crate::Result<ReadOutcome> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Ok(if got == 0 {
+                    ReadOutcome::Eof
+                } else {
+                    ReadOutcome::Partial
+                })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+/// Returns whether the segment ended torn (truncated/corrupt record).
+fn replay_segment(
+    store: &SketchStore,
+    stride: usize,
+    r: &mut impl Read,
+    stats: &mut ReplayStats,
+) -> crate::Result<bool> {
+    loop {
+        let mut hdr = [0u8; FRAME_HEADER];
+        match read_some(r, &mut hdr)? {
+            ReadOutcome::Eof => return Ok(false), // clean end of segment
+            ReadOutcome::Partial => return Ok(true),
+            ReadOutcome::Full => {}
+        }
+        let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        if len > MAX_PAYLOAD {
+            return Ok(true);
+        }
+        let mut payload = vec![0u8; len as usize];
+        match read_some(r, &mut payload)? {
+            ReadOutcome::Full => {}
+            _ => return Ok(true),
+        }
+        if crc32_update(0, &payload) != crc {
+            return Ok(true);
+        }
+        // The record is intact end-to-end; only now touch the store —
+        // "no partial record applied" is the replay contract.
+        if !apply_record(store, stride, &payload) {
+            return Ok(true);
+        }
+        stats.records += 1;
+        stats.bytes += (FRAME_HEADER + len as usize) as u64;
+    }
+}
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            return None;
+        }
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+    fn words(&mut self, n: usize) -> Option<Vec<u64>> {
+        let raw = self.take(n.checked_mul(8)?)?;
+        Some(
+            raw.chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        )
+    }
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Apply one intact record; `false` means the payload is malformed
+/// (treated as corruption by the caller).
+fn apply_record(store: &SketchStore, stride: usize, payload: &[u8]) -> bool {
+    let arena = store.arena().expect("caller checked arena-backed");
+    let (k, bits) = (arena.k(), arena.bits());
+    let mut c = Cur { buf: payload, pos: 0 };
+    let Some(op) = c.u8() else { return false };
+    match op {
+        OP_PUT => {
+            let Some(id) = c.str() else { return false };
+            let Some(words) = c.words(stride) else { return false };
+            if !c.done() {
+                return false;
+            }
+            store.put(id, PackedCodes::from_words(bits, k, words));
+            true
+        }
+        OP_PUT_ROWS => {
+            let Some(n) = c.u32() else { return false };
+            let n = n as usize;
+            if n > 1 << 24 {
+                return false;
+            }
+            let mut ids = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                let Some(id) = c.str() else { return false };
+                ids.push(id);
+            }
+            let Some(words) = c.words(n.checked_mul(stride).unwrap_or(usize::MAX)) else {
+                return false;
+            };
+            if !c.done() {
+                return false;
+            }
+            store.put_rows(&ids, &words).is_ok()
+        }
+        OP_REMOVE => {
+            let Some(id) = c.str() else { return false };
+            if !c.done() {
+                return false;
+            }
+            store.remove(&id);
+            true
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+
+    fn sketch(k: usize, seed: u16) -> PackedCodes {
+        let codes: Vec<u16> = (0..k).map(|i| ((i as u16).wrapping_add(seed)) % 4).collect();
+        pack_codes(&codes, 2)
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("crp_wal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_replay_roundtrip_all_ops() {
+        let dir = temp_dir("rt");
+        let (k, bits) = (64usize, 2u32);
+        let live = SketchStore::with_arena(k, bits);
+        let wal = Wal::create(&dir, k, bits).unwrap();
+        for i in 0..10u16 {
+            let codes = sketch(k, i);
+            let id = format!("id{i}");
+            wal.append_put(&id, codes.words(), || live.put(id.clone(), codes.clone()))
+                .unwrap();
+        }
+        let ids: Vec<String> = (10..14u16).map(|i| format!("id{i}")).collect();
+        let mut words = Vec::new();
+        for i in 10..14u16 {
+            words.extend_from_slice(sketch(k, i).words());
+        }
+        wal.append_put_rows(&ids, &words, || live.put_rows(&ids, &words).unwrap())
+            .unwrap();
+        let existed = wal.append_remove("id3", || live.remove("id3")).unwrap();
+        assert!(existed);
+        assert_eq!(wal.records(), 12);
+        assert!(wal.bytes() > 0);
+
+        let back = SketchStore::with_arena(k, bits);
+        let stats = replay_into(&back, &dir).unwrap();
+        assert_eq!(stats.segments, 1);
+        assert_eq!(stats.records, 12);
+        assert!(!stats.torn);
+        assert_eq!(back.len(), live.len());
+        for i in 0..14u16 {
+            let id = format!("id{i}");
+            assert_eq!(back.get(&id), live.get(&id), "{id}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_replays_clean_prefix() {
+        let dir = temp_dir("torn");
+        let (k, bits) = (32usize, 2u32);
+        let wal = Wal::create(&dir, k, bits).unwrap();
+        for i in 0..5u16 {
+            wal.append_put(&format!("id{i}"), sketch(k, i).words(), || ())
+                .unwrap();
+        }
+        drop(wal);
+        let (_, path) = segments(&dir).unwrap().pop().unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Chop mid-record: the last record loses its tail.
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let back = SketchStore::with_arena(k, bits);
+        let stats = replay_into(&back, &dir).unwrap();
+        assert!(stats.torn);
+        assert_eq!(stats.records, 4);
+        assert_eq!(back.len(), 4);
+        assert!(back.get("id4").is_none());
+        // A flipped payload byte is caught by the checksum too.
+        let mut flipped = full.clone();
+        let n = flipped.len();
+        flipped[n - 1] ^= 0xFF;
+        std::fs::write(&path, &flipped).unwrap();
+        let back = SketchStore::with_arena(k, bits);
+        let stats = replay_into(&back, &dir).unwrap();
+        assert!(stats.torn);
+        assert_eq!(stats.records, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_retires_old_segments_and_replay_spans_them() {
+        let dir = temp_dir("rot");
+        let (k, bits) = (32usize, 2u32);
+        let wal = Wal::create(&dir, k, bits).unwrap();
+        wal.append_put("a", sketch(k, 1).words(), || ()).unwrap();
+        let retired = wal.rotate().unwrap();
+        assert_eq!(retired.len(), 1);
+        wal.append_put("b", sketch(k, 2).words(), || ()).unwrap();
+        wal.append_remove("a", || ()).unwrap();
+        // Both segments still on disk: replay sees put(a), put(b), rm(a).
+        let back = SketchStore::with_arena(k, bits);
+        let stats = replay_into(&back, &dir).unwrap();
+        assert_eq!(stats.segments, 2);
+        assert_eq!(stats.records, 3);
+        assert_eq!(back.len(), 1);
+        assert!(back.get("b").is_some());
+        // After the retired segment is deleted, only the tail replays.
+        for p in &retired {
+            std::fs::remove_file(p).unwrap();
+        }
+        let back = SketchStore::with_arena(k, bits);
+        let stats = replay_into(&back, &dir).unwrap();
+        assert_eq!(stats.segments, 1);
+        assert_eq!(stats.records, 2);
+        assert_eq!(back.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn header_truncated_segments_skipped_at_any_position() {
+        let dir = temp_dir("hdr");
+        let (k, bits) = (32usize, 2u32);
+        let wal = Wal::create(&dir, k, bits).unwrap();
+        wal.append_put("a", sketch(k, 1).words(), || ()).unwrap();
+        drop(wal);
+        // A crash between segment creation and header flush leaves an
+        // empty/truncated file — both older and newer than the good
+        // segment here. Neither holds an acknowledged record, so
+        // neither may wedge recovery.
+        std::fs::write(dir.join("wal.000000000000.log"), b"").unwrap();
+        std::fs::write(dir.join("wal.000000000007.log"), b"CRPW").unwrap();
+        let back = SketchStore::with_arena(k, bits);
+        let stats = replay_into(&back, &dir).unwrap();
+        assert_eq!(stats.segments, 3);
+        assert_eq!(stats.records, 1);
+        assert!(stats.torn);
+        assert_eq!(back.len(), 1);
+        // Shape discovery skips them the same way.
+        assert_eq!(peek_shape(&dir).unwrap(), Some((k, bits)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_and_bad_magic_rejected() {
+        let dir = temp_dir("shape");
+        let wal = Wal::create(&dir, 64, 2).unwrap();
+        wal.append_put("a", sketch(64, 1).words(), || ()).unwrap();
+        drop(wal);
+        let other = SketchStore::with_arena(128, 2);
+        assert!(replay_into(&other, &dir).is_err());
+        assert_eq!(peek_shape(&dir).unwrap(), Some((64, 2)));
+        // Garbage segment: a full-length header with the wrong magic is
+        // corruption, not truncation.
+        std::fs::write(dir.join("wal.000000000009.log"), b"garbage-garbage!").unwrap();
+        let back = SketchStore::with_arena(64, 2);
+        assert!(replay_into(&back, &dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        // Nonexistent dir: clean empty replay.
+        let back = SketchStore::with_arena(64, 2);
+        let stats = replay_into(&back, &dir).unwrap();
+        assert_eq!(stats.segments, 0);
+        assert!(peek_shape(&dir).unwrap().is_none());
+    }
+}

@@ -1,0 +1,176 @@
+//! Background maintenance: periodic epoch drains (and the tombstone
+//! compaction that rides on them), auto checkpoints, and the graceful-
+//! shutdown flush — taken off the threshold-crossing writer.
+//!
+//! Before this thread existed, the register that crossed the drain
+//! threshold paid for the fold itself (ROADMAP PR-2 follow-up). With a
+//! [`Maintenance`] attached, the store's writers only *notify* a
+//! [`DrainSignal`] on threshold crossings and fold inline solely past
+//! the relief cap ([`crate::scan::epoch::RELIEF_FACTOR`]× the
+//! threshold), the hard bound on pending growth if this thread stalls.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::durability::Durability;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::store::{DrainSignal, SketchStore};
+
+/// Cadence knobs for the maintenance thread.
+#[derive(Clone, Debug)]
+pub struct MaintenanceConfig {
+    /// Idle wake-up interval; drain notifications wake it sooner.
+    pub tick: Duration,
+}
+
+impl Default for MaintenanceConfig {
+    fn default() -> Self {
+        MaintenanceConfig {
+            tick: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Handle to the background maintenance thread. Dropping it performs a
+/// graceful shutdown: a final drain, a final checkpoint (when
+/// durability is attached), and a join.
+pub struct Maintenance {
+    stop: Arc<AtomicBool>,
+    signal: Arc<DrainSignal>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Maintenance {
+    /// Spawn the thread and hand it fold/checkpoint duty: the store's
+    /// writers are switched to notify-only draining via
+    /// [`SketchStore::delegate_drains`].
+    pub fn spawn(
+        store: Arc<SketchStore>,
+        durability: Option<Arc<Durability>>,
+        metrics: Arc<Metrics>,
+        cfg: MaintenanceConfig,
+    ) -> Maintenance {
+        let stop = Arc::new(AtomicBool::new(false));
+        let signal = Arc::new(DrainSignal::default());
+        store.delegate_drains(signal.clone());
+        let handle = {
+            let (stop, signal) = (stop.clone(), signal.clone());
+            std::thread::Builder::new()
+                .name("crp-maintenance".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        signal.wait_timeout(cfg.tick);
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        metrics.maintenance_wakeups.fetch_add(1, Ordering::Relaxed);
+                        if let Some(arena) = store.arena() {
+                            if arena.drain_due() {
+                                arena.drain();
+                            }
+                        }
+                        if let Some(d) = &durability {
+                            if d.checkpoint_due() {
+                                if let Err(e) = d.checkpoint(&store) {
+                                    eprintln!("crp-maintenance: checkpoint failed: {e}");
+                                }
+                            }
+                        }
+                    }
+                    // Graceful shutdown: fold what is pending and leave a
+                    // clean checkpoint so restart is a pure bulk restore.
+                    if let Some(arena) = store.arena() {
+                        arena.drain();
+                    }
+                    if let Some(d) = &durability {
+                        if let Err(e) = d.checkpoint(&store) {
+                            eprintln!("crp-maintenance: final checkpoint failed: {e}");
+                        }
+                    }
+                })
+                .expect("spawn crp-maintenance thread")
+        };
+        Maintenance {
+            stop,
+            signal,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop the thread and run its shutdown flush. Idempotent.
+    pub fn shutdown(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            self.signal.notify();
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Maintenance {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+    use crate::scan::EpochConfig;
+
+    fn sketch(seed: u16) -> crate::coding::PackedCodes {
+        let codes: Vec<u16> = (0..64).map(|i| ((i as u16 + seed) % 4)).collect();
+        pack_codes(&codes, 2)
+    }
+
+    #[test]
+    fn maintenance_owns_drains_and_writers_only_notify() {
+        let store = Arc::new(SketchStore::with_arena_config(
+            64,
+            2,
+            EpochConfig {
+                drain_threshold: 8,
+                ..EpochConfig::default()
+            },
+        ));
+        let metrics = Arc::new(Metrics::default());
+        let mut m = Maintenance::spawn(
+            store.clone(),
+            None,
+            metrics.clone(),
+            MaintenanceConfig {
+                tick: Duration::from_millis(5),
+            },
+        );
+        for i in 0..200 {
+            store.put(format!("id{i}"), sketch(i));
+        }
+        // The thread must fold the backlog without any writer folding.
+        let arena = store.arena().unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while arena.drain_due() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!arena.drain_due(), "maintenance thread never drained");
+        assert!(arena.drains() >= 1);
+        assert_eq!(arena.len(), 200);
+        // The 5ms tick guarantees a counted wake-up well within the
+        // deadline; don't race shutdown against the first tick.
+        while metrics.maintenance_wakeups.load(Ordering::Relaxed) == 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        m.shutdown();
+        assert!(
+            metrics.maintenance_wakeups.load(Ordering::Relaxed) >= 1,
+            "wakeups must be counted"
+        );
+        // Shutdown drained the tail; the store stays fully usable.
+        assert_eq!(arena.pending_load(), 0);
+        store.put("late".into(), sketch(9));
+        assert_eq!(store.len(), 201);
+    }
+}

@@ -70,13 +70,18 @@ pub struct Metrics {
     pub knn_queries: AtomicU64,
     pub batches_executed: AtomicU64,
     pub vectors_projected: AtomicU64,
+    /// Times the background maintenance thread woke (tick or drain
+    /// notification) to fold epochs / checkpoint.
+    pub maintenance_wakeups: AtomicU64,
     pub register_latency: LatencyHistogram,
 }
 
 impl Metrics {
     /// Counter-only snapshot. The scan-engine fields (`pending_rows`,
     /// `drains`, `tombstones`, `kernel`) live in the store's epoch
-    /// arena; the server fills them in before answering `Stats`.
+    /// arena and the durability fields (`wal_records`, `wal_bytes`,
+    /// `last_checkpoint_rows`) in the WAL engine; the server fills
+    /// those in before answering `Stats`.
     pub fn snapshot(&self) -> super::protocol::StatsSnapshot {
         let batches = self.batches_executed.load(Ordering::Relaxed);
         let vectors = self.vectors_projected.load(Ordering::Relaxed);
@@ -93,6 +98,7 @@ impl Metrics {
             },
             p50_register_us: self.register_latency.percentile_us(0.50),
             p99_register_us: self.register_latency.percentile_us(0.99),
+            maintenance_wakeups: self.maintenance_wakeups.load(Ordering::Relaxed),
             ..Default::default()
         }
     }

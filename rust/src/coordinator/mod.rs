@@ -7,18 +7,24 @@
 //! scan for near neighbors purely over the compact codes.
 //!
 //! ```text
-//!  TCP (length-prefixed JSON)
+//!  TCP (length-prefixed binary frames)
 //!   └── server  — connection loop, frame codec
 //!        └── router — request dispatch
-//!             ├── batcher — groups projection work into (b_tile)-sized
-//!             │             batches with a deadline, executes on the
-//!             │             Projector (PJRT artifact or pure Rust)
-//!             ├── store   — sharded map: id → PackedCodes, mirrored
-//!             │             into an epoch-buffered scan arena
-//!             │             (crate::scan) that serves Knn/TopK as
-//!             │             sequential sweeps; puts never take the
-//!             │             arena write lock
-//!             └── metrics — counters + latency histograms
+//!             ├── batcher     — groups projection work into (b_tile)-
+//!             │                 sized batches with a deadline, executes
+//!             │                 on the Projector (PJRT or pure Rust)
+//!             ├── store       — sharded map: id → PackedCodes, mirrored
+//!             │                 into an epoch-buffered scan arena
+//!             │                 (crate::scan) that serves Knn/TopK as
+//!             │                 sequential sweeps; puts never take the
+//!             │                 arena write lock
+//!             ├── durability  — CRPSNAP2 arena-image snapshots + the
+//!             │                 CRPWAL1 epoch WAL; every acknowledged
+//!             │                 mutation survives kill -9
+//!             ├── maintenance — background thread owning drains,
+//!             │                 compaction, and snapshot-then-truncate
+//!             │                 checkpoints (writers only notify)
+//!             └── metrics     — counters + latency histograms
 //! ```
 //!
 //! Python never runs here; the Projector executes AOT artifacts via PJRT.
@@ -29,10 +35,13 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 pub mod client;
-pub mod persist;
+pub mod durability;
+pub mod maintenance;
 
 pub use batcher::{BatcherConfig, SketchBatcher};
 pub use client::SketchClient;
+pub use durability::{Durability, DurabilityConfig};
+pub use maintenance::{Maintenance, MaintenanceConfig};
 pub use protocol::{Request, Response};
 pub use server::{serve, ServerConfig};
-pub use store::SketchStore;
+pub use store::{DrainSignal, SketchStore};

@@ -33,6 +33,13 @@ pub enum Request {
         ids: Vec<String>,
         vectors: Vec<Vec<f32>>,
     },
+    /// Drop the sketch stored under `id` (logged to the WAL like any
+    /// other mutation when durability is enabled).
+    Remove { id: String },
+    /// Explicit durability checkpoint: snapshot the sealed arena and
+    /// truncate the WAL. Errors when the server runs without
+    /// durability.
+    Persist,
     /// Service statistics.
     Stats,
     /// Health check.
@@ -47,6 +54,9 @@ pub enum Response {
     Estimate { rho: f64, std_err: f64, p_hat: f64 },
     Knn { hits: Vec<KnnHit> },
     TopK { results: Vec<Vec<KnnHit>> },
+    Removed { existed: bool },
+    /// Checkpoint result: live rows snapshotted + WAL bytes retired.
+    Persisted { rows: u64, wal_bytes: u64 },
     Stats(StatsSnapshot),
     Pong,
     Error { message: String },
@@ -76,6 +86,14 @@ pub struct StatsSnapshot {
     pub tombstones: u64,
     /// Collision-kernel tier serving scans (`avx2`/`sse2`/`swar`).
     pub kernel: String,
+    /// WAL records appended since start (0 without durability).
+    pub wal_records: u64,
+    /// WAL bytes appended since start (0 without durability).
+    pub wal_bytes: u64,
+    /// Live rows written by the most recent checkpoint.
+    pub last_checkpoint_rows: u64,
+    /// Background maintenance thread wake-ups (drains/checkpoints).
+    pub maintenance_wakeups: u64,
 }
 
 // ---- encoding primitives ----------------------------------------------
@@ -85,6 +103,9 @@ struct Enc(Vec<u8>);
 impl Enc {
     fn new(tag: u8) -> Self {
         Enc(vec![tag])
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
     }
     fn u32(&mut self, v: u32) {
         self.0.extend_from_slice(&v.to_le_bytes());
@@ -204,6 +225,12 @@ impl Request {
                 }
                 e.0
             }
+            Request::Remove { id } => {
+                let mut e = Enc::new(8);
+                e.str(id);
+                e.0
+            }
+            Request::Persist => Enc::new(9).0,
         }
     }
 
@@ -256,6 +283,8 @@ impl Request {
                 }
                 Request::RegisterBatch { ids, vectors }
             }
+            8 => Request::Remove { id: d.str()? },
+            9 => Request::Persist,
             t => anyhow::bail!("unknown request tag {t}"),
         };
         d.done()?;
@@ -305,6 +334,10 @@ impl Response {
                 e.u64(s.drains);
                 e.u64(s.tombstones);
                 e.str(&s.kernel);
+                e.u64(s.wal_records);
+                e.u64(s.wal_bytes);
+                e.u64(s.last_checkpoint_rows);
+                e.u64(s.maintenance_wakeups);
                 e.0
             }
             Response::Pong => Enc::new(4).0,
@@ -316,6 +349,17 @@ impl Response {
             Response::RegisteredBatch { count } => {
                 let mut e = Enc::new(7);
                 e.u64(*count);
+                e.0
+            }
+            Response::Removed { existed } => {
+                let mut e = Enc::new(8);
+                e.u8(u8::from(*existed));
+                e.0
+            }
+            Response::Persisted { rows, wal_bytes } => {
+                let mut e = Enc::new(9);
+                e.u64(*rows);
+                e.u64(*wal_bytes);
                 e.0
             }
             Response::TopK { results } => {
@@ -367,6 +411,10 @@ impl Response {
                 drains: d.u64()?,
                 tombstones: d.u64()?,
                 kernel: d.str()?,
+                wal_records: d.u64()?,
+                wal_bytes: d.u64()?,
+                last_checkpoint_rows: d.u64()?,
+                maintenance_wakeups: d.u64()?,
             }),
             4 => Response::Pong,
             5 => Response::Error { message: d.str()? },
@@ -389,6 +437,15 @@ impl Response {
                 Response::TopK { results }
             }
             7 => Response::RegisteredBatch { count: d.u64()? },
+            8 => {
+                let v = d.u8()?;
+                anyhow::ensure!(v <= 1, "bad bool byte {v}");
+                Response::Removed { existed: v == 1 }
+            }
+            9 => Response::Persisted {
+                rows: d.u64()?,
+                wal_bytes: d.u64()?,
+            },
             t => anyhow::bail!("unknown response tag {t}"),
         };
         d.done()?;
@@ -468,6 +525,8 @@ mod tests {
             ids: vec![],
             vectors: vec![],
         });
+        roundtrip_req(Request::Remove { id: "gone".into() });
+        roundtrip_req(Request::Persist);
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Ping);
     }
@@ -514,9 +573,19 @@ mod tests {
             drains: 3,
             tombstones: 2,
             kernel: "avx2".into(),
+            wal_records: 1234,
+            wal_bytes: 98765,
+            last_checkpoint_rows: 10,
+            maintenance_wakeups: 77,
             ..Default::default()
         }));
         roundtrip_resp(Response::RegisteredBatch { count: 512 });
+        roundtrip_resp(Response::Removed { existed: true });
+        roundtrip_resp(Response::Removed { existed: false });
+        roundtrip_resp(Response::Persisted {
+            rows: 100_000,
+            wal_bytes: 1 << 30,
+        });
         roundtrip_resp(Response::Pong);
         roundtrip_resp(Response::Error {
             message: "boom".into(),

@@ -6,6 +6,8 @@ use std::time::Instant;
 
 use crate::coding::{BatchEncoder, CodingParams, PackedCodes};
 use crate::coordinator::batcher::{BatcherConfig, SketchBatcher};
+use crate::coordinator::durability::{Durability, DurabilityConfig};
+use crate::coordinator::maintenance::{Maintenance, MaintenanceConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::{self, KnnHit, Request, Response};
 use crate::coordinator::store::SketchStore;
@@ -21,6 +23,10 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     /// Ingest-epoch drain/compaction policy for the scan arena.
     pub epoch: EpochConfig,
+    /// Snapshot + WAL persistence; `None` runs fully in-memory.
+    pub durability: Option<DurabilityConfig>,
+    /// Background drain/checkpoint thread cadence.
+    pub maintenance: MaintenanceConfig,
 }
 
 impl Default for ServerConfig {
@@ -30,6 +36,8 @@ impl Default for ServerConfig {
             coding: CodingParams::new(crate::coding::Scheme::TwoBit, 0.75),
             batcher: BatcherConfig::default(),
             epoch: EpochConfig::default(),
+            durability: None,
+            maintenance: MaintenanceConfig::default(),
         }
     }
 }
@@ -49,7 +57,7 @@ const MAX_BULK_CELLS: usize = 1 << 24; // 64 MiB of f32 workspace
 
 /// Shared service state.
 pub struct ServiceState {
-    pub store: SketchStore,
+    pub store: Arc<SketchStore>,
     pub batcher: SketchBatcher,
     pub estimator: CollisionEstimator,
     pub metrics: Arc<Metrics>,
@@ -58,10 +66,26 @@ pub struct ServiceState {
     /// batches directly (they need no size-or-deadline coalescing).
     projector: Arc<Projector>,
     bulk: Mutex<BulkIngest>,
+    /// WAL + snapshot engine (None = in-memory service).
+    durability: Option<Arc<Durability>>,
+    /// Background drain/checkpoint thread; its `Drop` is the graceful-
+    /// shutdown flush.
+    _maintenance: Maintenance,
 }
 
 impl ServiceState {
+    /// In-memory service state (no durability). Panics only if
+    /// `cfg.durability` is set and fails to open — use
+    /// [`ServiceState::open`] for durable configurations.
     pub fn new(projector: Arc<Projector>, cfg: &ServerConfig) -> Arc<Self> {
+        Self::open(projector, cfg).expect("opening service state")
+    }
+
+    /// Build the service state: recover the store from `cfg.durability`
+    /// (snapshot bulk-restore + WAL replay) when configured, and spawn
+    /// the background maintenance thread that owns drains, compaction,
+    /// and checkpoints.
+    pub fn open(projector: Arc<Projector>, cfg: &ServerConfig) -> crate::Result<Arc<Self>> {
         let metrics = Arc::new(Metrics::default());
         let batcher = SketchBatcher::spawn(
             projector.clone(),
@@ -70,15 +94,31 @@ impl ServiceState {
             metrics.clone(),
         );
         let k = batcher.k;
-        Arc::new(ServiceState {
-            // Arena-backed: Knn/TopK run as columnar scans, not map
-            // walks, and registration is epoch-buffered so it never
-            // waits behind them.
-            store: SketchStore::with_arena_config(
-                k,
-                cfg.coding.bits_per_code(),
-                cfg.epoch.clone(),
-            ),
+        // Arena-backed: Knn/TopK run as columnar scans, not map walks,
+        // and registration is epoch-buffered so it never waits behind
+        // them.
+        let store = Arc::new(SketchStore::with_arena_config(
+            k,
+            cfg.coding.bits_per_code(),
+            cfg.epoch.clone(),
+        ));
+        let durability = match &cfg.durability {
+            Some(dcfg) => {
+                let (d, stats) = Durability::open(dcfg.clone(), &store)?;
+                metrics
+                    .registered
+                    .fetch_add(stats.live, std::sync::atomic::Ordering::Relaxed);
+                Some(Arc::new(d))
+            }
+            None => None,
+        };
+        let maintenance = Maintenance::spawn(
+            store.clone(),
+            durability.clone(),
+            metrics.clone(),
+            cfg.maintenance.clone(),
+        );
+        Ok(Arc::new(ServiceState {
             estimator: CollisionEstimator::new(cfg.coding.clone()),
             batcher,
             metrics,
@@ -88,34 +128,44 @@ impl ServiceState {
                 words: Vec::new(),
             }),
             projector,
-        })
+            store,
+            durability,
+            _maintenance: maintenance,
+        }))
     }
 
     /// As [`ServiceState::new`], seeding the store from a snapshot file
-    /// (see [`crate::coordinator::persist`]). The snapshot's sketch
-    /// shape must match the projector/coding configuration.
+    /// (see [`crate::coordinator::durability::snapshot`]) via one bulk
+    /// restore — no per-sketch epoch-buffer trips. The snapshot's
+    /// sketch shape must match the projector/coding configuration.
     pub fn with_snapshot(
         projector: Arc<Projector>,
         cfg: &ServerConfig,
         snapshot: &std::path::Path,
     ) -> crate::Result<Arc<Self>> {
-        let state = Self::new(projector, cfg);
+        // Legacy one-shot restore: the explicit file is the whole
+        // story, so strip any durability config rather than recovering
+        // through it first and double-restoring (and double-counting
+        // `registered`) on top.
+        let cfg = ServerConfig {
+            durability: None,
+            ..cfg.clone()
+        };
+        let state = Self::open(projector, &cfg)?;
         if snapshot.is_file() {
-            let (store, k, bits) = crate::coordinator::persist::load_store(snapshot)?;
+            let img = crate::coordinator::durability::snapshot::load(snapshot)?;
             // Stored sketches carry the width-rounded packing bits, so
             // compare against the rounded width, not the raw bit count.
             let want_bits = crate::coding::supported_width(cfg.coding.bits_per_code());
             anyhow::ensure!(
-                store.is_empty() || (k == state.k && bits == want_bits),
-                "snapshot shape (k={k}, bits={bits}) does not match service                  (k={}, bits={})",
+                img.rows() == 0 || (img.k == state.k && img.bits == want_bits),
+                "snapshot shape (k={}, bits={}) does not match service (k={}, bits={})",
+                img.k,
+                img.bits,
                 state.k,
                 want_bits
             );
-            let mut n = 0u64;
-            store.for_each(|id, codes| {
-                state.store.put(id.to_string(), codes.clone());
-                n += 1;
-            });
+            let n = crate::coordinator::durability::snapshot::restore_into(&state.store, &img)?;
             state
                 .metrics
                 .registered
@@ -157,6 +207,19 @@ impl ServiceState {
         self.to_knn_hits(arena.scan_topk(q, n, 0))
     }
 
+    /// Store one sketch, WAL-first when durability is on: the record is
+    /// flushed before the store mutates, so an acknowledged `Register`
+    /// survives `kill -9`. An `Err` means nothing was applied.
+    fn durable_put(&self, id: &str, codes: PackedCodes) -> crate::Result<()> {
+        match &self.durability {
+            Some(d) => d.log_put(id, &codes, || self.store.put(id.to_string(), codes.clone())),
+            None => {
+                self.store.put(id.to_string(), codes);
+                Ok(())
+            }
+        }
+    }
+
     /// Handle one request (the router).
     pub fn handle(&self, req: Request) -> Response {
         match req {
@@ -169,26 +232,59 @@ impl ServiceState {
                     st.tombstones = arena.tombstones() as u64;
                     st.kernel = arena.kernel_kind().label().to_string();
                 }
+                if let Some(d) = &self.durability {
+                    st.wal_records = d.wal_records();
+                    st.wal_bytes = d.wal_bytes();
+                    st.last_checkpoint_rows = d.last_checkpoint_rows();
+                }
                 Response::Stats(st)
             }
             Request::Register { id, vector } => {
                 let t0 = Instant::now();
                 match self.batcher.sketch(vector) {
-                    Ok(codes) => {
-                        self.store.put(id.clone(), codes);
-                        self.metrics
-                            .registered
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        self.metrics
-                            .register_latency
-                            .record(t0.elapsed().as_micros() as u64);
-                        Response::Registered { id }
-                    }
+                    Ok(codes) => match self.durable_put(&id, codes) {
+                        Ok(()) => {
+                            self.metrics
+                                .registered
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            self.metrics
+                                .register_latency
+                                .record(t0.elapsed().as_micros() as u64);
+                            Response::Registered { id }
+                        }
+                        Err(e) => Response::Error {
+                            message: format!("register failed: {e}"),
+                        },
+                    },
                     Err(e) => Response::Error {
                         message: format!("sketch failed: {e}"),
                     },
                 }
             }
+            Request::Remove { id } => {
+                let result = match &self.durability {
+                    Some(d) => d.log_remove(&id, || self.store.remove(&id)),
+                    None => Ok(self.store.remove(&id)),
+                };
+                match result {
+                    Ok(existed) => Response::Removed { existed },
+                    Err(e) => Response::Error {
+                        message: format!("remove failed: {e}"),
+                    },
+                }
+            }
+            Request::Persist => match &self.durability {
+                Some(d) => match d.checkpoint(&self.store) {
+                    Ok((rows, wal_bytes)) => Response::Persisted { rows, wal_bytes },
+                    Err(e) => Response::Error {
+                        message: format!("checkpoint failed: {e}"),
+                    },
+                },
+                None => Response::Error {
+                    message: "durability is not enabled (serve with --snapshot/--wal-dir)"
+                        .to_string(),
+                },
+            },
             Request::Estimate { a, b } => {
                 let (sa, sb) = (self.store.get(&a), self.store.get(&b));
                 match (sa, sb) {
@@ -301,7 +397,12 @@ impl ServiceState {
             let mut bulk = self.bulk.lock().unwrap();
             let BulkIngest { encoder, words } = &mut *bulk;
             encoder.encode_pack_batch_into(&x, b, words);
-            self.store.put_rows(&ids, words)
+            let words: &[u64] = words;
+            match &self.durability {
+                // One WAL record, one flush, for the whole batch.
+                Some(d) => d.log_put_rows(&ids, words, || self.store.put_rows(&ids, words)),
+                None => self.store.put_rows(&ids, words),
+            }
         };
         match stored {
             Ok(()) => {
@@ -335,7 +436,13 @@ pub fn serve(
     if let Some(tx) = ready {
         let _ = tx.send(addr);
     }
-    let state = ServiceState::new(projector, &cfg);
+    let state = ServiceState::open(projector, &cfg)?;
+    if cfg.durability.is_some() {
+        eprintln!(
+            "durability on: {} sketches recovered from snapshot + WAL",
+            state.store.len()
+        );
+    }
     for stream in listener.incoming() {
         let stream = stream?;
         let state = state.clone();

@@ -24,6 +24,12 @@
 //! threshold, the crossing writer folds with a blocking acquisition so
 //! pending memory cannot grow without bound.
 //!
+//! With [`SketchStore::delegate_drains`] (the serving configuration — a
+//! [`crate::coordinator::maintenance`] thread owns fold duty), the
+//! crossing writer only notifies a [`DrainSignal`] and keeps nothing
+//! but the relief-cap backstop, so registers never pay for folds or
+//! compaction at all.
+//!
 //! Consistency: for one id, the map and arena are updated under that
 //! id's shard write lock, so per-id last-writer-wins holds across both
 //! views. The bulk path ([`SketchStore::put_rows`]) updates the arena
@@ -33,12 +39,42 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::time::Duration;
 
 use crate::coding::PackedCodes;
 use crate::scan::{EpochArena, EpochConfig};
 
 const N_SHARDS: usize = 16;
+
+/// Wake-up channel from the store's writers to an external maintenance
+/// thread that owns drains/compaction. Notifications coalesce: any
+/// number of threshold crossings between waits wake the waiter once.
+#[derive(Debug, Default)]
+pub struct DrainSignal {
+    armed: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl DrainSignal {
+    pub fn notify(&self) {
+        let mut armed = self.armed.lock().unwrap();
+        *armed = true;
+        self.cv.notify_one();
+    }
+
+    /// Block until notified or `timeout` elapses; returns whether a
+    /// notification arrived (and consumes it).
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        let mut armed = self.armed.lock().unwrap();
+        if !*armed {
+            armed = self.cv.wait_timeout(armed, timeout).unwrap().0;
+        }
+        let was = *armed;
+        *armed = false;
+        was
+    }
+}
 
 /// Thread-safe sharded map from string ids to packed code sketches.
 #[derive(Debug)]
@@ -49,6 +85,9 @@ pub struct SketchStore {
     count: AtomicUsize,
     /// Columnar mirror for the scan engine (arena-backed mode only).
     arena: Option<EpochArena>,
+    /// When set (see [`SketchStore::delegate_drains`]), threshold
+    /// crossings notify this signal instead of folding on the writer.
+    drain_signal: OnceLock<Arc<DrainSignal>>,
 }
 
 impl Default for SketchStore {
@@ -64,6 +103,7 @@ impl SketchStore {
             shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
             count: AtomicUsize::new(0),
             arena: None,
+            drain_signal: OnceLock::new(),
         }
     }
 
@@ -86,6 +126,33 @@ impl SketchStore {
     /// never block `put`/`remove` (epoch-buffered writes).
     pub fn arena(&self) -> Option<&EpochArena> {
         self.arena.as_ref()
+    }
+
+    /// Hand fold/compaction duty to an external maintenance thread:
+    /// after this, a writer that crosses the drain threshold notifies
+    /// `signal` instead of folding itself, and folds inline only past
+    /// the relief cap ([`crate::scan::epoch::RELIEF_FACTOR`]× the
+    /// threshold) — the hard bound on pending growth if the maintenance
+    /// thread stalls. Set once; later calls are ignored.
+    pub fn delegate_drains(&self, signal: Arc<DrainSignal>) {
+        let _ = self.drain_signal.set(signal);
+    }
+
+    /// Post-write fold policy: fold on the writer (owner mode) or
+    /// notify the maintenance thread (delegated mode).
+    fn fold_or_notify(&self) {
+        let Some(arena) = &self.arena else { return };
+        match self.drain_signal.get() {
+            Some(signal) => {
+                signal.notify();
+                if arena.overloaded() {
+                    arena.drain();
+                }
+            }
+            None => {
+                arena.relieve();
+            }
+        }
     }
 
     fn shard(&self, id: &str) -> &RwLock<HashMap<String, PackedCodes>> {
@@ -114,9 +181,7 @@ impl SketchStore {
             }
         }
         if drain_due {
-            if let Some(arena) = &self.arena {
-                arena.relieve();
-            }
+            self.fold_or_notify();
         }
     }
 
@@ -150,7 +215,7 @@ impl SketchStore {
             }
         }
         if drain_due {
-            arena.relieve();
+            self.fold_or_notify();
         }
         Ok(())
     }
@@ -180,7 +245,7 @@ impl SketchStore {
         // compact without waiting for a later put.
         if let Some(arena) = &self.arena {
             if removed && arena.drain_due() {
-                arena.relieve();
+                self.fold_or_notify();
             }
         }
         removed
@@ -195,8 +260,10 @@ impl SketchStore {
         self.len() == 0
     }
 
-    /// Visit every `(id, sketch)` pair (used by persistence). The
-    /// visitor runs under each shard's read lock in turn.
+    /// Visit every `(id, sketch)` pair (tests and brute-force oracles;
+    /// persistence serializes the sealed arena image instead, so it
+    /// never holds shard locks across disk writes). The visitor runs
+    /// under each shard's read lock in turn.
     pub fn for_each<F: FnMut(&str, &PackedCodes)>(&self, mut f: F) {
         for s in &self.shards {
             let guard = s.read().unwrap();
@@ -352,6 +419,39 @@ mod tests {
         // Shape errors are reported, not panicked.
         assert!(s.put_rows(&ids, &words[..words.len() - 1]).is_err());
         assert!(SketchStore::new().put_rows(&ids, &words).is_err());
+    }
+
+    #[test]
+    fn delegated_drains_notify_instead_of_folding() {
+        let s = SketchStore::with_arena_config(
+            64,
+            2,
+            EpochConfig {
+                drain_threshold: 4,
+                ..EpochConfig::default()
+            },
+        );
+        let signal = std::sync::Arc::new(DrainSignal::default());
+        s.delegate_drains(signal.clone());
+        for i in 0..8 {
+            s.put(format!("id{i}"), sketch(i));
+        }
+        let arena = s.arena().unwrap();
+        // The writer crossed the threshold twice but folded zero times —
+        // it only raised the signal.
+        assert_eq!(arena.drains(), 0);
+        assert!(arena.pending_load() >= 4);
+        assert!(signal.wait_timeout(std::time::Duration::from_millis(1)));
+        // Signal consumed; no new crossing, no new notification.
+        assert!(!signal.wait_timeout(std::time::Duration::from_millis(1)));
+        // Past the relief cap (RELIEF_FACTOR × 4 = 32) the writer folds
+        // inline anyway, bounding pending growth.
+        for i in 0..40 {
+            s.put(format!("extra{i}"), sketch(i));
+        }
+        assert!(arena.drains() >= 1, "relief backstop must fold");
+        assert_eq!(s.len(), 48);
+        assert_eq!(arena.len(), 48);
     }
 
     #[test]

@@ -37,8 +37,18 @@
 //!   across threads. Registration is epoch-buffered
 //!   ([`scan::EpochArena`]): writers land in a pending buffer beside the
 //!   sealed arena and never take the write lock scans read behind, with
-//!   bulk drains and tombstone-aware compaction per epoch. Python never
-//!   runs on the request path.
+//!   bulk drains and tombstone-aware compaction per epoch — owned by a
+//!   background maintenance thread ([`coordinator::maintenance`]), not
+//!   the threshold-crossing writer. The serving state is durable
+//!   ([`coordinator::durability`]): acknowledged mutations append to a
+//!   checksummed epoch WAL (`CRPWAL1`) before the store mutates, and
+//!   checkpoints serialize the sealed arena verbatim (`CRPSNAP2`
+//!   arena-image snapshots, written with no store lock held) then
+//!   truncate the WAL; restart bulk-restores the image through
+//!   `put_rows` and replays the WAL tail, answering byte-identically to
+//!   the pre-crash server (`crp serve --snapshot --wal-dir
+//!   --checkpoint-every`, `crp recover`). Python never runs on the
+//!   request path.
 //!
 //! ## Analysis stack
 //!

@@ -92,6 +92,33 @@ fn parse_scheme(s: &str) -> crp::Result<Scheme> {
     })
 }
 
+/// Build the durability config from `--snapshot` / `--wal-dir`; either
+/// flag alone implies the other next to it (`<wal-dir>/snapshot.bin`,
+/// `<snapshot>.wal/`). Neither flag means no durability.
+fn durability_config(
+    a: &args::Args,
+    checkpoint_every: u64,
+) -> crp::Result<Option<crp::coordinator::DurabilityConfig>> {
+    use std::path::PathBuf;
+    let snapshot = a.get_opt("snapshot").map(PathBuf::from);
+    let wal_dir = a.get_opt("wal-dir").map(PathBuf::from);
+    let (snapshot, wal_dir) = match (snapshot, wal_dir) {
+        (None, None) => return Ok(None),
+        (Some(s), Some(w)) => (s, w),
+        (Some(s), None) => {
+            let mut w = s.as_os_str().to_os_string();
+            w.push(".wal");
+            (s, PathBuf::from(w))
+        }
+        (None, Some(w)) => (w.join("snapshot.bin"), w),
+    };
+    Ok(Some(crp::coordinator::DurabilityConfig {
+        snapshot,
+        wal_dir,
+        checkpoint_every,
+    }))
+}
+
 const HELP: &str = "\
 crp — Coding for Random Projections (ICML 2014) reproduction
 
@@ -101,8 +128,14 @@ COMMANDS:
   figures      --fig N --scale S --out DIR      regenerate paper figures (default: all)
   mc-variance  --k K --reps R --w W [--mle]     Monte-Carlo check of Theorems 2-4
   lsh-eval     --corpus N --dim D --tables T --k-per-table K --queries Q
-  serve        --addr A --k K --scheme S --w W [--pjrt] [--snapshot F]
+  serve        --addr A --k K --scheme S --w W [--pjrt]
                [--drain-threshold N]  ingest-epoch size before a bulk fold
+               [--snapshot F --wal-dir D --checkpoint-every N]
+                 durability: recover from F + D on start, append every
+                 mutation to the WAL, checkpoint each N logged rows
+                 (0 = only explicit Persist requests / shutdown)
+  recover      --snapshot F --wal-dir D   replay a snapshot + WAL offline
+               and print recovery stats (rows, records, torn tail)
   bench-serve  --addr A --n N --dim D --connections C
   topk         --sketches N --k K --scheme S --w W --top T --queries Q --threads P --rho R
                scan-engine demo: exact top-k over a packed-code arena
@@ -117,7 +150,16 @@ SCAN KERNELS:
   Set CRP_SCAN_KERNEL=swar|sse2|avx2 to force a tier (swar = portable
   path; an unavailable forced tier falls back to auto-selection).
   Registration is epoch-buffered: puts never take the scan arena's write
-  lock, and each epoch folds in bulk at --drain-threshold pending rows.
+  lock, and each epoch folds in bulk at --drain-threshold pending rows
+  (folded by a background maintenance thread, not the crossing writer).
+
+DURABILITY:
+  With --snapshot/--wal-dir, every acknowledged Register/RegisterBatch/
+  Remove is appended to a checksummed WAL before the store mutates, and
+  checkpoints rewrite the snapshot as a verbatim arena image (CRPSNAP2)
+  then truncate the WAL — restart replays snapshot + WAL tail through
+  the bulk ingest path and answers byte-identically to the pre-crash
+  server. Checkpoints never hold a store lock across disk writes.
 ";
 
 fn main() -> crp::Result<()> {
@@ -209,6 +251,15 @@ fn main() -> crp::Result<()> {
                 projector.pjrt_active(),
                 kernel.kind().label()
             );
+            let durability = durability_config(&a, a.get("checkpoint-every", 100_000u64)?)?;
+            if let Some(d) = &durability {
+                eprintln!(
+                    "durability: snapshot {} + wal {} (checkpoint every {} rows)",
+                    d.snapshot.display(),
+                    d.wal_dir.display(),
+                    d.checkpoint_every
+                );
+            }
             let server_cfg = crp::coordinator::ServerConfig {
                 addr,
                 coding,
@@ -216,23 +267,38 @@ fn main() -> crp::Result<()> {
                     drain_threshold,
                     ..Default::default()
                 },
+                durability,
                 ..Default::default()
             };
-            if let Some(snap) = a.get_opt("snapshot") {
-                // Validate the snapshot shape up-front (serve() builds its
-                // own state; this check fails fast on mismatches).
-                let st = crp::coordinator::server::ServiceState::with_snapshot(
-                    Arc::new(Projector::new_cpu(ProjectionConfig {
-                        k,
-                        seed: 0,
-                        ..Default::default()
-                    })),
-                    &server_cfg,
-                    std::path::Path::new(snap),
-                )?;
-                eprintln!("snapshot {snap}: {} sketches validated", st.store.len());
-            }
             crp::coordinator::serve(Arc::new(projector), server_cfg, None)?;
+        }
+        "recover" => {
+            let Some(cfg) = durability_config(&a, 0)? else {
+                anyhow::bail!("recover needs --snapshot and/or --wal-dir");
+            };
+            let (store, k, bits, st) =
+                crp::coordinator::durability::recover(&cfg.snapshot, &cfg.wal_dir)?;
+            println!("shape: k={k} @ {bits} bit(s)/code");
+            println!("snapshot rows restored: {}", st.snapshot_rows);
+            println!(
+                "wal: {} segment(s), {} record(s), {} byte(s) replayed{}",
+                st.wal_segments,
+                st.wal_records,
+                st.wal_bytes,
+                if st.wal_torn {
+                    " (torn tail discarded)"
+                } else {
+                    ""
+                }
+            );
+            println!("live sketches: {}", st.live);
+            let arena = store.arena().expect("recovered store is arena-backed");
+            println!(
+                "arena: {} rows allocated, {} tombstones, {:.1} MiB packed",
+                arena.len() + arena.tombstones(),
+                arena.tombstones(),
+                arena.storage_bytes() as f64 / (1 << 20) as f64
+            );
         }
         "bench-serve" => {
             let addr = a.get_str("addr", "127.0.0.1:7474");

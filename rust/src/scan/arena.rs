@@ -171,6 +171,22 @@ impl CodeArena {
         }
     }
 
+    /// Owned, self-describing point-in-time copy of the whole arena:
+    /// shape plus the contiguous word block and id table exactly as laid
+    /// out in memory (tombstones included). This is the unit of
+    /// persistence — serializing it is a sequential write of one flat
+    /// buffer, and it is built under whatever lock the caller already
+    /// holds (one clone, no per-row work).
+    pub fn image(&self) -> ArenaImage {
+        ArenaImage {
+            k: self.k,
+            bits: self.bits,
+            stride: self.stride,
+            words: self.words.clone(),
+            ids: self.ids.clone(),
+        }
+    }
+
     /// Drop tombstoned rows, remapping survivors downward in insertion
     /// order. Returns the number of rows reclaimed.
     pub fn compact(&mut self) -> usize {
@@ -224,6 +240,56 @@ impl RowsSnapshot {
     pub fn row_words(&self, row: u32) -> &[u64] {
         let start = row as usize * self.stride;
         &self.words[start..start + self.stride]
+    }
+}
+
+/// An owned arena image: the contiguous word block, the id table
+/// (`None` = tombstone, its words zeroed), and the shape that makes them
+/// interpretable. Produced by [`CodeArena::image`] /
+/// [`crate::scan::EpochArena::sealed_image`]; consumed by the
+/// durability layer, which serializes it without holding any lock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArenaImage {
+    /// Codes per sketch.
+    pub k: usize,
+    /// Bit width per code (a supported packing width).
+    pub bits: u32,
+    /// `u64` words per row.
+    pub stride: usize,
+    /// Row-major word block, `ids.len() * stride` words.
+    pub words: Vec<u64>,
+    /// Row → id; `None` marks a tombstone.
+    pub ids: Vec<Option<String>>,
+}
+
+impl ArenaImage {
+    /// An empty image of the given shape (`bits` rounded up to a
+    /// supported packing width, as arenas do).
+    pub fn empty(k: usize, bits: u32) -> Self {
+        let bits = supported_width(bits);
+        let per_word = (64 / bits) as usize;
+        ArenaImage {
+            k,
+            bits,
+            stride: k.div_ceil(per_word),
+            words: Vec::new(),
+            ids: Vec::new(),
+        }
+    }
+
+    /// Rows captured, including tombstones.
+    pub fn rows(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Live (non-tombstoned) rows.
+    pub fn live(&self) -> usize {
+        self.ids.iter().filter(|id| id.is_some()).count()
+    }
+
+    /// Raw words of `row` (zeros for tombstones).
+    pub fn row_words(&self, row: usize) -> &[u64] {
+        &self.words[row * self.stride..(row + 1) * self.stride]
     }
 }
 
@@ -290,6 +356,28 @@ mod tests {
             assert_eq!(a.get(&id).unwrap(), sketch(64, i));
         }
         assert_eq!(a.compact(), 0);
+    }
+
+    #[test]
+    fn image_copies_rows_and_tombstones_verbatim() {
+        let mut a = CodeArena::new(64, 2);
+        for i in 0..5 {
+            a.insert(&format!("id{i}"), &sketch(64, i));
+        }
+        a.remove("id2");
+        let img = a.image();
+        assert_eq!((img.k, img.bits, img.stride), (64, 2, a.stride()));
+        assert_eq!(img.rows(), 5);
+        assert_eq!(img.live(), 4);
+        assert_eq!(img.ids[2], None);
+        assert!(img.row_words(2).iter().all(|&w| w == 0));
+        for i in [0u16, 1, 3, 4] {
+            assert_eq!(img.ids[i as usize].as_deref(), Some(format!("id{i}").as_str()));
+            assert_eq!(img.row_words(i as usize), sketch(64, i).words());
+        }
+        let empty = ArenaImage::empty(100, 2);
+        assert_eq!(empty.stride, 4);
+        assert_eq!(empty.rows(), 0);
     }
 
     #[test]

@@ -126,6 +126,9 @@ pub struct EpochArena {
     /// Epochs completed (bumps at every drain).
     epoch: AtomicU64,
     drains: AtomicU64,
+    /// Single-row [`EpochArena::put`] calls — each is one pending-buffer
+    /// round trip. Bulk paths (restore, `put_rows`) must keep this flat.
+    single_puts: AtomicU64,
 }
 
 impl EpochArena {
@@ -153,6 +156,7 @@ impl EpochArena {
             sealed: RwLock::new(sealed),
             epoch: AtomicU64::new(0),
             drains: AtomicU64::new(0),
+            single_puts: AtomicU64::new(0),
         }
     }
 
@@ -186,6 +190,7 @@ impl EpochArena {
     pub fn put(&self, id: &str, codes: &PackedCodes) -> bool {
         assert_eq!(codes.len, self.k, "sketch length mismatch");
         assert_eq!(codes.bits, self.bits, "sketch bit width mismatch");
+        self.single_puts.fetch_add(1, Ordering::Relaxed);
         let sealed = self.sealed.read().unwrap();
         let mut p = self.pending.lock().unwrap();
         p.inserts.insert(id, codes);
@@ -307,11 +312,36 @@ impl EpochArena {
         self.drains.load(Ordering::Relaxed)
     }
 
+    /// Single-row `put` calls so far — the per-sketch epoch-buffer
+    /// trips a bulk restore is required to avoid.
+    pub fn single_puts(&self) -> u64 {
+        self.single_puts.load(Ordering::Relaxed)
+    }
+
     /// Run `f` against the sealed arena under the read lock (snapshots,
     /// tests, persistence). Writes keep flowing into the pending buffer
     /// while `f` runs — that is the whole point of the epoch split.
     pub fn with_sealed<R>(&self, f: impl FnOnce(&CodeArena) -> R) -> R {
         f(&self.sealed.read().unwrap())
+    }
+
+    /// Consistent owned image of the sealed arena — words, id table, and
+    /// tombstones as of one instant — taken under a single short
+    /// read-lock hold (one flat clone, no per-row work). This is the
+    /// checkpoint unit: callers serialize it to disk with **no** arena
+    /// or shard lock held, so puts and scans flow freely for the whole
+    /// file write. Pending-epoch rows are not included; drain first if
+    /// the image must cover everything acknowledged so far.
+    pub fn sealed_image(&self) -> super::arena::ArenaImage {
+        self.sealed.read().unwrap().image()
+    }
+
+    /// Whether the pending load has reached [`RELIEF_FACTOR`]× the drain
+    /// threshold — the point past which even an ingest path that has
+    /// handed fold duty to a maintenance thread must fold inline
+    /// (blocking) to bound pending memory.
+    pub fn overloaded(&self) -> bool {
+        self.pending_load() >= self.cfg.drain_threshold.saturating_mul(RELIEF_FACTOR)
     }
 
     /// Fold the pending epoch into the sealed arena in one bulk step:
@@ -633,6 +663,23 @@ mod tests {
         for (i, q) in queries.iter().enumerate() {
             assert_eq!(batched[i], e.scan_topk(q, 7, 1), "query {i}");
         }
+    }
+
+    #[test]
+    fn sealed_image_excludes_pending_until_drain() {
+        let e = EpochArena::with_config(64, 2, small_cfg());
+        let _ = e.put("a", &sketch(64, 1));
+        assert_eq!(e.sealed_image().rows(), 0, "pending rows are not sealed");
+        e.drain();
+        let _ = e.put("b", &sketch(64, 2));
+        let img = e.sealed_image();
+        assert_eq!(img.rows(), 1);
+        assert_eq!(img.ids[0].as_deref(), Some("a"));
+        assert_eq!(img.row_words(0), sketch(64, 1).words());
+        // Writes keep landing while an image is held — it is a copy.
+        let _ = e.put("c", &sketch(64, 3));
+        assert_eq!(e.len(), 3);
+        assert_eq!(img.rows(), 1);
     }
 
     #[test]

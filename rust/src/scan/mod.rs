@@ -39,7 +39,7 @@ pub mod scanner;
 pub mod simd;
 pub mod topk;
 
-pub use arena::CodeArena;
+pub use arena::{ArenaImage, CodeArena};
 pub use epoch::{EpochArena, EpochConfig};
 pub use scanner::{scan_topk, scan_topk_batch, ScanHit};
 pub use simd::{CollisionKernel, KernelKind};

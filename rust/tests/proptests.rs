@@ -727,7 +727,7 @@ fn prop_protocol_decode_never_panics_on_garbage() {
 
 #[test]
 fn prop_snapshot_roundtrip_via_service() {
-    use crp::coordinator::persist::{load_store, save_store};
+    use crp::coordinator::durability::snapshot::{load, save};
     use crp::coordinator::protocol::{Request, Response};
     use crp::coordinator::server::{ServerConfig, ServiceState};
     use crp::projection::{ProjectionConfig, Projector};
@@ -754,7 +754,10 @@ fn prop_snapshot_roundtrip_via_service() {
         });
     }
     let path = std::env::temp_dir().join(format!("crp_svc_snap_{}.bin", std::process::id()));
-    save_store(&state.store, &path).unwrap();
+    // Checkpoint shape: drain the epoch, then image the sealed arena.
+    let arena = state.store.arena().expect("service store is arena-backed");
+    arena.drain();
+    save(&path, &arena.sealed_image()).unwrap();
     // Restore into a fresh service; estimates must be identical since
     // the sketches (not the raw vectors) are the state.
     let restored = ServiceState::with_snapshot(
@@ -786,11 +789,15 @@ fn prop_snapshot_roundtrip_via_service() {
         };
         assert_eq!(before, after, "{a}/{b}");
     }
-    // Sanity: load_store agrees on shape metadata.
+    // Sanity: the snapshot loader agrees on shape metadata, and the
+    // restored service's own image round-trips identically.
     let p2 = std::env::temp_dir().join(format!("crp_svc_snap2_{}.bin", std::process::id()));
-    save_store(&restored.store, &p2).unwrap();
-    let (_, k, bits) = load_store(&p2).unwrap();
+    let arena2 = restored.store.arena().expect("arena-backed");
+    arena2.drain();
+    save(&p2, &arena2.sealed_image()).unwrap();
+    let img = load(&p2).unwrap();
     std::fs::remove_file(&p2).ok();
-    assert_eq!(k, 128);
-    assert_eq!(bits, cfg.coding.bits_per_code());
+    assert_eq!(img.k, 128);
+    assert_eq!(img.bits, cfg.coding.bits_per_code());
+    assert_eq!(img.live(), 40);
 }
