@@ -4,7 +4,21 @@
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 
-use super::protocol::{self, KnnHit, Request, Response, StatsSnapshot};
+use super::protocol::{self, CollectionInfo, KnnHit, Request, Response, StatsSnapshot};
+use crate::coding::Scheme;
+
+/// Wrap `req` in a [`Request::Scoped`] frame when a collection is
+/// named; `None` keeps the legacy no-namespace encoding (routes to
+/// `default`).
+fn scoped(collection: Option<&str>, req: Request) -> Request {
+    match collection {
+        Some(c) => Request::Scoped {
+            collection: c.to_string(),
+            inner: Box::new(req),
+        },
+        None => req,
+    }
+}
 
 /// A connected client. One in-flight request at a time per connection
 /// (the protocol is strictly request/response).
@@ -44,10 +58,25 @@ impl SketchClient {
     }
 
     pub fn register(&mut self, id: &str, vector: Vec<f32>) -> crate::Result<()> {
-        match self.call(&Request::Register {
-            id: id.to_string(),
-            vector,
-        })? {
+        self.register_in(None, id, vector)
+    }
+
+    /// [`SketchClient::register`] into a named collection (`None` =
+    /// `default`, sent as a legacy no-namespace frame).
+    pub fn register_in(
+        &mut self,
+        collection: Option<&str>,
+        id: &str,
+        vector: Vec<f32>,
+    ) -> crate::Result<()> {
+        let req = scoped(
+            collection,
+            Request::Register {
+                id: id.to_string(),
+                vector,
+            },
+        );
+        match self.call(&req)? {
             Response::Registered { .. } => Ok(()),
             other => Err(Self::bail(other)),
         }
@@ -61,7 +90,17 @@ impl SketchClient {
         ids: Vec<String>,
         vectors: Vec<Vec<f32>>,
     ) -> crate::Result<u64> {
-        match self.call(&Request::RegisterBatch { ids, vectors })? {
+        self.register_batch_in(None, ids, vectors)
+    }
+
+    /// [`SketchClient::register_batch`] into a named collection.
+    pub fn register_batch_in(
+        &mut self,
+        collection: Option<&str>,
+        ids: Vec<String>,
+        vectors: Vec<Vec<f32>>,
+    ) -> crate::Result<u64> {
+        match self.call(&scoped(collection, Request::RegisterBatch { ids, vectors }))? {
             Response::RegisteredBatch { count } => Ok(count),
             other => Err(Self::bail(other)),
         }
@@ -69,7 +108,13 @@ impl SketchClient {
 
     /// Drop the sketch stored under `id`; returns whether it existed.
     pub fn remove(&mut self, id: &str) -> crate::Result<bool> {
-        match self.call(&Request::Remove { id: id.to_string() })? {
+        self.remove_in(None, id)
+    }
+
+    /// [`SketchClient::remove`] in a named collection.
+    pub fn remove_in(&mut self, collection: Option<&str>, id: &str) -> crate::Result<bool> {
+        let req = scoped(collection, Request::Remove { id: id.to_string() });
+        match self.call(&req)? {
             Response::Removed { existed } => Ok(existed),
             other => Err(Self::bail(other)),
         }
@@ -77,8 +122,14 @@ impl SketchClient {
 
     /// Explicit durability checkpoint; returns `(rows snapshotted,
     /// WAL bytes retired)`. Errors when the server is not durable.
+    /// Unscoped, this checkpoints every durable collection; scoped, one.
     pub fn persist(&mut self) -> crate::Result<(u64, u64)> {
-        match self.call(&Request::Persist)? {
+        self.persist_in(None)
+    }
+
+    /// [`SketchClient::persist`] for a named collection.
+    pub fn persist_in(&mut self, collection: Option<&str>) -> crate::Result<(u64, u64)> {
+        match self.call(&scoped(collection, Request::Persist))? {
             Response::Persisted { rows, wal_bytes } => Ok((rows, wal_bytes)),
             other => Err(Self::bail(other)),
         }
@@ -86,27 +137,65 @@ impl SketchClient {
 
     /// Returns `(rho, std_err)`.
     pub fn estimate(&mut self, a: &str, b: &str) -> crate::Result<(f64, f64)> {
-        match self.call(&Request::Estimate {
-            a: a.to_string(),
-            b: b.to_string(),
-        })? {
+        self.estimate_in(None, a, b)
+    }
+
+    /// [`SketchClient::estimate`] within a named collection.
+    pub fn estimate_in(
+        &mut self,
+        collection: Option<&str>,
+        a: &str,
+        b: &str,
+    ) -> crate::Result<(f64, f64)> {
+        let req = scoped(
+            collection,
+            Request::Estimate {
+                a: a.to_string(),
+                b: b.to_string(),
+            },
+        );
+        match self.call(&req)? {
             Response::Estimate { rho, std_err, .. } => Ok((rho, std_err)),
             other => Err(Self::bail(other)),
         }
     }
 
     pub fn estimate_vec(&mut self, id: &str, vector: Vec<f32>) -> crate::Result<(f64, f64)> {
-        match self.call(&Request::EstimateVec {
-            id: id.to_string(),
-            vector,
-        })? {
+        self.estimate_vec_in(None, id, vector)
+    }
+
+    /// [`SketchClient::estimate_vec`] within a named collection.
+    pub fn estimate_vec_in(
+        &mut self,
+        collection: Option<&str>,
+        id: &str,
+        vector: Vec<f32>,
+    ) -> crate::Result<(f64, f64)> {
+        let req = scoped(
+            collection,
+            Request::EstimateVec {
+                id: id.to_string(),
+                vector,
+            },
+        );
+        match self.call(&req)? {
             Response::Estimate { rho, std_err, .. } => Ok((rho, std_err)),
             other => Err(Self::bail(other)),
         }
     }
 
     pub fn knn(&mut self, vector: Vec<f32>, n: u32) -> crate::Result<Vec<KnnHit>> {
-        match self.call(&Request::Knn { vector, n })? {
+        self.knn_in(None, vector, n)
+    }
+
+    /// [`SketchClient::knn`] within a named collection.
+    pub fn knn_in(
+        &mut self,
+        collection: Option<&str>,
+        vector: Vec<f32>,
+        n: u32,
+    ) -> crate::Result<Vec<KnnHit>> {
+        match self.call(&scoped(collection, Request::Knn { vector, n }))? {
             Response::Knn { hits } => Ok(hits),
             other => Err(Self::bail(other)),
         }
@@ -114,8 +203,60 @@ impl SketchClient {
 
     /// Batched top-k: one result list per query vector, in order.
     pub fn topk(&mut self, vectors: Vec<Vec<f32>>, n: u32) -> crate::Result<Vec<Vec<KnnHit>>> {
-        match self.call(&Request::TopK { vectors, n })? {
+        self.topk_in(None, vectors, n)
+    }
+
+    /// [`SketchClient::topk`] within a named collection.
+    pub fn topk_in(
+        &mut self,
+        collection: Option<&str>,
+        vectors: Vec<Vec<f32>>,
+        n: u32,
+    ) -> crate::Result<Vec<Vec<KnnHit>>> {
+        match self.call(&scoped(collection, Request::TopK { vectors, n }))? {
             Response::TopK { results } => Ok(results),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// Create a collection with its own coding choice. `bits` 0 derives
+    /// the packed width from `(scheme, w)`.
+    pub fn create_collection(
+        &mut self,
+        name: &str,
+        scheme: Scheme,
+        w: f64,
+        k: u64,
+        seed: u64,
+    ) -> crate::Result<()> {
+        match self.call(&Request::CreateCollection {
+            name: name.to_string(),
+            scheme,
+            w,
+            bits: 0,
+            k,
+            seed,
+        })? {
+            Response::CollectionCreated { .. } => Ok(()),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// Drop a collection (and its durable state); returns whether it
+    /// existed.
+    pub fn drop_collection(&mut self, name: &str) -> crate::Result<bool> {
+        match self.call(&Request::DropCollection {
+            name: name.to_string(),
+        })? {
+            Response::CollectionDropped { existed } => Ok(existed),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// Enumerate collections, sorted by name.
+    pub fn list_collections(&mut self) -> crate::Result<Vec<CollectionInfo>> {
+        match self.call(&Request::ListCollections)? {
+            Response::Collections { collections } => Ok(collections),
             other => Err(Self::bail(other)),
         }
     }

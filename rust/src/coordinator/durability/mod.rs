@@ -59,6 +59,8 @@ pub(crate) fn crc32_update(state: u32, bytes: &[u8]) -> u32 {
     !c
 }
 
+pub use wal::FsyncPolicy;
+
 /// Where durable state lives and how often it is checkpointed.
 #[derive(Clone, Debug)]
 pub struct DurabilityConfig {
@@ -69,6 +71,10 @@ pub struct DurabilityConfig {
     /// Logged rows between automatic checkpoints (0 = only explicit
     /// `Persist` requests and graceful shutdown checkpoint).
     pub checkpoint_every: u64,
+    /// When acknowledged WAL records reach stable storage (see
+    /// [`FsyncPolicy`]): per-record fsync, OS-buffer flush, or timed
+    /// group commit.
+    pub fsync: FsyncPolicy,
 }
 
 /// What recovery found on disk.
@@ -173,7 +179,7 @@ impl Durability {
             f.set_len(*clean_len)?;
             f.sync_all()?;
         }
-        let wal = wal::Wal::create(&cfg.wal_dir, arena.k(), arena.bits())?;
+        let wal = wal::Wal::create_with(&cfg.wal_dir, arena.k(), arena.bits(), cfg.fsync)?;
         Ok((
             Durability {
                 cfg,
@@ -277,6 +283,14 @@ impl Durability {
         self.wal.flush()
     }
 
+    /// Group-commit backstop: `fdatasync` WAL appends left unsynced
+    /// past their interval, so an idle tail never stays exposed beyond
+    /// the bound `--fsync group:<ms>` promises. No-op for `always`/`os`
+    /// (the maintenance tick calls this every sweep).
+    pub fn sync_wal_due(&self) -> crate::Result<()> {
+        self.wal.sync_due()
+    }
+
     /// WAL records appended by this process.
     pub fn wal_records(&self) -> u64 {
         self.wal.records()
@@ -316,6 +330,7 @@ mod tests {
             snapshot: dir.join("snapshot.bin"),
             wal_dir: dir.join("wal"),
             checkpoint_every: every,
+            fsync: FsyncPolicy::Os,
         }
     }
 

@@ -27,6 +27,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use super::crc32_update;
 use crate::coding::{supported_width, PackedCodes};
@@ -46,6 +47,53 @@ const FRAME_HEADER: usize = 8;
 /// Upper bound on one record payload; anything larger read back is
 /// treated as corruption, and appends refuse to write it.
 const MAX_PAYLOAD: u32 = 1 << 27;
+
+/// When acknowledged WAL records reach *stable storage* (not just the
+/// OS page cache). Every policy flushes each record to the OS before
+/// the op is acknowledged, so all of them survive `kill -9`; they
+/// differ in what survives power loss / kernel panic:
+///
+/// * `Always` — `fdatasync` after every record. Full durability, one
+///   disk round-trip per op.
+/// * `Os` — flush to the page cache only (the pre-knob behavior and
+///   default). Fastest; power loss can lose the OS-buffered tail.
+/// * `Group(interval)` — flush per record, `fdatasync` at most once per
+///   `interval`, riding on whichever append crosses it. Bounds
+///   power-loss exposure to one interval without paying a sync per op.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    Always,
+    #[default]
+    Os,
+    Group(Duration),
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI spelling: `always`, `os`, or `group:<ms>`.
+    pub fn parse(s: &str) -> crate::Result<FsyncPolicy> {
+        if let Some(ms) = s.strip_prefix("group:") {
+            let ms: u64 = ms
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad group-commit interval {ms:?}: {e}"))?;
+            anyhow::ensure!(ms >= 1, "group-commit interval must be >= 1ms");
+            return Ok(FsyncPolicy::Group(Duration::from_millis(ms)));
+        }
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "os" => Ok(FsyncPolicy::Os),
+            other => anyhow::bail!("unknown fsync policy {other:?} (always|os|group:<ms>)"),
+        }
+    }
+
+    /// CLI spelling of this policy.
+    pub fn label(&self) -> String {
+        match self {
+            FsyncPolicy::Always => "always".to_string(),
+            FsyncPolicy::Os => "os".to_string(),
+            FsyncPolicy::Group(iv) => format!("group:{}ms", iv.as_millis()),
+        }
+    }
+}
 
 fn segment_name(seq: u64) -> String {
     format!("wal.{seq:012}.log")
@@ -84,6 +132,11 @@ fn open_segment(dir: &Path, seq: u64, k: usize, bits: u32) -> crate::Result<BufW
 struct Writer {
     seq: u64,
     file: BufWriter<File>,
+    /// Last `fdatasync` on the active segment (group-commit clock).
+    last_sync: Instant,
+    /// When the oldest not-yet-fdatasync'd group-commit append landed
+    /// (`None` = nothing deferred). Drives the idle-tail backstop.
+    dirty_since: Option<Instant>,
 }
 
 /// An open write-ahead log: one active segment accepting appends, plus
@@ -93,6 +146,7 @@ pub struct Wal {
     bits: u32,
     stride: usize,
     dir: PathBuf,
+    fsync: FsyncPolicy,
     inner: Mutex<Writer>,
     /// Set when an append failed partway (the segment tail may be
     /// garbage); further appends error out until a rotation cuts over
@@ -104,9 +158,20 @@ pub struct Wal {
 
 impl Wal {
     /// Open `dir` for appends into a fresh segment numbered above every
-    /// existing one. Existing segments are never appended to — recovery
-    /// replays them and the next checkpoint retires them.
+    /// existing one, with the default [`FsyncPolicy::Os`]. Existing
+    /// segments are never appended to — recovery replays them and the
+    /// next checkpoint retires them.
     pub fn create(dir: &Path, k: usize, bits: u32) -> crate::Result<Wal> {
+        Self::create_with(dir, k, bits, FsyncPolicy::Os)
+    }
+
+    /// As [`Wal::create`] with an explicit fsync policy.
+    pub fn create_with(
+        dir: &Path,
+        k: usize,
+        bits: u32,
+        fsync: FsyncPolicy,
+    ) -> crate::Result<Wal> {
         let bits = supported_width(bits);
         std::fs::create_dir_all(dir)?;
         let seq = segments(dir)?.last().map_or(1, |(s, _)| s + 1);
@@ -116,7 +181,13 @@ impl Wal {
             bits,
             stride: k.div_ceil((64 / bits) as usize),
             dir: dir.to_path_buf(),
-            inner: Mutex::new(Writer { seq, file }),
+            fsync,
+            inner: Mutex::new(Writer {
+                seq,
+                file,
+                last_sync: Instant::now(),
+                dirty_since: None,
+            }),
             broken: AtomicBool::new(false),
             records: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
@@ -176,7 +247,21 @@ impl Wal {
             g.file.write_all(&(payload.len() as u32).to_le_bytes())?;
             g.file.write_all(&crc32_update(0, payload).to_le_bytes())?;
             g.file.write_all(payload)?;
-            g.file.flush()
+            g.file.flush()?;
+            match self.fsync {
+                FsyncPolicy::Os => {}
+                FsyncPolicy::Always => g.file.get_ref().sync_data()?,
+                FsyncPolicy::Group(interval) => {
+                    if g.last_sync.elapsed() >= interval {
+                        g.file.get_ref().sync_data()?;
+                        g.last_sync = Instant::now();
+                        g.dirty_since = None;
+                    } else if g.dirty_since.is_none() {
+                        g.dirty_since = Some(Instant::now());
+                    }
+                }
+            }
+            Ok(())
         })();
         if let Err(e) = frame {
             self.broken.store(true, Ordering::Relaxed);
@@ -271,6 +356,8 @@ impl Wal {
         let seq = g.seq + 1;
         g.file = open_segment(&self.dir, seq, self.k, self.bits)?;
         g.seq = seq;
+        g.last_sync = Instant::now();
+        g.dirty_since = None;
         self.broken.store(false, Ordering::Relaxed);
         Ok(old)
     }
@@ -278,6 +365,34 @@ impl Wal {
     /// Flush buffered frames to the OS.
     pub fn flush(&self) -> crate::Result<()> {
         self.inner.lock().unwrap().file.flush()?;
+        Ok(())
+    }
+
+    /// Whether group-commit appends are awaiting their deferred
+    /// `fdatasync` (always false under `Always`/`Os`).
+    pub fn unsynced(&self) -> bool {
+        self.inner.lock().unwrap().dirty_since.is_some()
+    }
+
+    /// Group-commit backstop: `fdatasync` the active segment if
+    /// unsynced appends are older than the interval. Appends normally
+    /// ride the sync on a later append; this covers idle tails (the
+    /// maintenance tick calls it), so power-loss exposure stays bounded
+    /// near one interval even when traffic stops. No-op under
+    /// `Always`/`Os`.
+    pub fn sync_due(&self) -> crate::Result<()> {
+        let FsyncPolicy::Group(interval) = self.fsync else {
+            return Ok(());
+        };
+        let mut g = self.inner.lock().unwrap();
+        if let Some(t) = g.dirty_since {
+            if t.elapsed() >= interval {
+                g.file.flush()?;
+                g.file.get_ref().sync_data()?;
+                g.dirty_since = None;
+                g.last_sync = Instant::now();
+            }
+        }
         Ok(())
     }
 }
@@ -674,6 +789,84 @@ mod tests {
         assert_eq!(back.len(), 1);
         // Shape discovery skips them the same way.
         assert_eq!(peek_shape(&dir).unwrap(), Some((k, bits)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fsync_policy_parse_and_label() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("os").unwrap(), FsyncPolicy::Os);
+        assert_eq!(
+            FsyncPolicy::parse("group:25").unwrap(),
+            FsyncPolicy::Group(Duration::from_millis(25))
+        );
+        assert!(FsyncPolicy::parse("group:0").is_err());
+        assert!(FsyncPolicy::parse("group:abc").is_err());
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        assert_eq!(FsyncPolicy::parse("group:25").unwrap().label(), "group:25ms");
+        assert_eq!(FsyncPolicy::default(), FsyncPolicy::Os);
+    }
+
+    #[test]
+    fn every_fsync_policy_replays_identically() {
+        for (tag, policy) in [
+            ("sync_always", FsyncPolicy::Always),
+            ("sync_os", FsyncPolicy::Os),
+            ("sync_group", FsyncPolicy::Group(Duration::from_millis(1))),
+        ] {
+            let dir = temp_dir(tag);
+            let (k, bits) = (32usize, 2u32);
+            let wal = Wal::create_with(&dir, k, bits, policy).unwrap();
+            for i in 0..8u16 {
+                wal.append_put(&format!("id{i}"), sketch(k, i).words(), || ())
+                    .unwrap();
+            }
+            wal.append_remove("id5", || ()).unwrap();
+            drop(wal);
+            let back = SketchStore::with_arena(k, bits);
+            let stats = replay_into(&back, &dir).unwrap();
+            assert_eq!(stats.records, 9, "{tag}");
+            assert_eq!(back.len(), 7, "{tag}");
+            assert!(back.get("id5").is_none(), "{tag}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn group_commit_backstop_syncs_idle_tail() {
+        let dir = temp_dir("group_idle");
+        let (k, bits) = (32usize, 2u32);
+        // A huge interval: the deferred sync can never ride an append
+        // or come due inside the test, so the dirty flag is
+        // deterministic.
+        let policy = FsyncPolicy::Group(Duration::from_secs(3600));
+        let wal = Wal::create_with(&dir, k, bits, policy).unwrap();
+        wal.append_put("a", sketch(k, 1).words(), || ()).unwrap();
+        assert!(wal.unsynced(), "group append defers its fdatasync");
+        wal.sync_due().unwrap();
+        assert!(wal.unsynced(), "not yet due: the tail stays deferred");
+        // Rotation cuts over to a clean segment.
+        wal.rotate().unwrap();
+        assert!(!wal.unsynced());
+        drop(wal);
+
+        // A tiny interval: the maintenance-tick backstop syncs the
+        // idle tail once it is older than the interval.
+        let policy = FsyncPolicy::Group(Duration::from_millis(1));
+        let wal = Wal::create_with(&dir, k, bits, policy).unwrap();
+        wal.append_put("b", sketch(k, 2).words(), || ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        wal.sync_due().unwrap();
+        assert!(!wal.unsynced(), "idle tail must be synced once due");
+        drop(wal);
+
+        // Always / Os never defer.
+        for policy in [FsyncPolicy::Always, FsyncPolicy::Os] {
+            let wal = Wal::create_with(&dir, k, bits, policy).unwrap();
+            wal.append_put("c", sketch(k, 3).words(), || ()).unwrap();
+            assert!(!wal.unsynced(), "{policy:?}");
+            wal.sync_due().unwrap();
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,21 +1,25 @@
 //! Background maintenance: periodic epoch drains (and the tombstone
 //! compaction that rides on them), auto checkpoints, and the graceful-
-//! shutdown flush — taken off the threshold-crossing writer.
+//! shutdown flush — taken off the threshold-crossing writer and
+//! multiplexed across every collection in the registry.
 //!
 //! Before this thread existed, the register that crossed the drain
 //! threshold paid for the fold itself (ROADMAP PR-2 follow-up). With a
-//! [`Maintenance`] attached, the store's writers only *notify* a
-//! [`DrainSignal`] on threshold crossings and fold inline solely past
-//! the relief cap ([`crate::scan::epoch::RELIEF_FACTOR`]× the
-//! threshold), the hard bound on pending growth if this thread stalls.
+//! [`Maintenance`] attached, every collection store's writers only
+//! *notify* the registry's one shared [`DrainSignal`] on threshold
+//! crossings and fold inline solely past the relief cap
+//! ([`crate::scan::epoch::RELIEF_FACTOR`]× the threshold), the hard
+//! bound on pending growth if this thread stalls. Each wake-up sweeps
+//! the current collection set, so collections created at runtime are
+//! picked up automatically and dropped ones are skipped.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::durability::Durability;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::store::{DrainSignal, SketchStore};
+use crate::coordinator::registry::{Collection, Registry};
+use crate::coordinator::store::DrainSignal;
 
 /// Cadence knobs for the maintenance thread.
 #[derive(Clone, Debug)]
@@ -32,9 +36,36 @@ impl Default for MaintenanceConfig {
     }
 }
 
+/// One sweep over a collection: fold its backlog if due, checkpoint if
+/// due. Dropped collections are skipped so a stale handle can never
+/// resurrect files in a directory its replacement owns.
+fn sweep(c: &Collection, final_flush: bool) {
+    if c.is_dropped() {
+        return;
+    }
+    if let Some(arena) = c.store.arena() {
+        if final_flush || arena.drain_due() {
+            arena.drain();
+        }
+    }
+    if let Some(d) = &c.durability {
+        // Group-commit backstop: an idle WAL tail must not stay
+        // un-fdatasync'd past its interval just because no later
+        // append came along to carry the sync.
+        if let Err(e) = d.sync_wal_due() {
+            eprintln!("crp-maintenance: WAL sync of {:?} failed: {e}", c.name);
+        }
+        if final_flush || d.checkpoint_due() {
+            if let Err(e) = d.checkpoint(&c.store) {
+                eprintln!("crp-maintenance: checkpoint of {:?} failed: {e}", c.name);
+            }
+        }
+    }
+}
+
 /// Handle to the background maintenance thread. Dropping it performs a
-/// graceful shutdown: a final drain, a final checkpoint (when
-/// durability is attached), and a join.
+/// graceful shutdown: a final drain and checkpoint of every collection,
+/// then a join.
 pub struct Maintenance {
     stop: Arc<AtomicBool>,
     signal: Arc<DrainSignal>,
@@ -42,18 +73,16 @@ pub struct Maintenance {
 }
 
 impl Maintenance {
-    /// Spawn the thread and hand it fold/checkpoint duty: the store's
-    /// writers are switched to notify-only draining via
-    /// [`SketchStore::delegate_drains`].
+    /// Spawn the thread with fold/checkpoint duty over every collection
+    /// in `registry` (their stores already notify the registry's shared
+    /// signal; see [`crate::coordinator::registry`]).
     pub fn spawn(
-        store: Arc<SketchStore>,
-        durability: Option<Arc<Durability>>,
+        registry: Arc<Registry>,
         metrics: Arc<Metrics>,
         cfg: MaintenanceConfig,
     ) -> Maintenance {
         let stop = Arc::new(AtomicBool::new(false));
-        let signal = Arc::new(DrainSignal::default());
-        store.delegate_drains(signal.clone());
+        let signal = registry.signal();
         let handle = {
             let (stop, signal) = (stop.clone(), signal.clone());
             std::thread::Builder::new()
@@ -65,28 +94,15 @@ impl Maintenance {
                             break;
                         }
                         metrics.maintenance_wakeups.fetch_add(1, Ordering::Relaxed);
-                        if let Some(arena) = store.arena() {
-                            if arena.drain_due() {
-                                arena.drain();
-                            }
-                        }
-                        if let Some(d) = &durability {
-                            if d.checkpoint_due() {
-                                if let Err(e) = d.checkpoint(&store) {
-                                    eprintln!("crp-maintenance: checkpoint failed: {e}");
-                                }
-                            }
+                        for c in registry.list() {
+                            sweep(&c, false);
                         }
                     }
-                    // Graceful shutdown: fold what is pending and leave a
-                    // clean checkpoint so restart is a pure bulk restore.
-                    if let Some(arena) = store.arena() {
-                        arena.drain();
-                    }
-                    if let Some(d) = &durability {
-                        if let Err(e) = d.checkpoint(&store) {
-                            eprintln!("crp-maintenance: final checkpoint failed: {e}");
-                        }
+                    // Graceful shutdown: fold what is pending and leave
+                    // every durable collection at a clean checkpoint so
+                    // restart is a pure bulk restore.
+                    for c in registry.list() {
+                        sweep(&c, true);
                     }
                 })
                 .expect("spawn crp-maintenance thread")
@@ -117,45 +133,81 @@ impl Drop for Maintenance {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coding::pack_codes;
+    use crate::coding::{CodingParams, Scheme};
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::durability::FsyncPolicy;
+    use crate::coordinator::registry::{CollectionSpec, RegistryConfig};
+    use crate::projection::{ProjectionConfig, Projector};
     use crate::scan::EpochConfig;
 
-    fn sketch(seed: u16) -> crate::coding::PackedCodes {
-        let codes: Vec<u16> = (0..64).map(|i| ((i as u16 + seed) % 4)).collect();
-        pack_codes(&codes, 2)
+    fn small_registry(drain_threshold: usize) -> Arc<Registry> {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 64,
+            seed: 3,
+            ..Default::default()
+        }));
+        Registry::open(
+            RegistryConfig {
+                root: None,
+                epoch: EpochConfig {
+                    drain_threshold,
+                    ..EpochConfig::default()
+                },
+                batcher: BatcherConfig::default(),
+                checkpoint_every: 0,
+                fsync: FsyncPolicy::Os,
+            },
+            Arc::new(Metrics::default()),
+            projector,
+            CodingParams::new(Scheme::TwoBit, 0.75),
+            None,
+        )
+        .unwrap()
     }
 
     #[test]
-    fn maintenance_owns_drains_and_writers_only_notify() {
-        let store = Arc::new(SketchStore::with_arena_config(
-            64,
-            2,
-            EpochConfig {
-                drain_threshold: 8,
-                ..EpochConfig::default()
-            },
-        ));
+    fn maintenance_sweeps_every_collection_and_writers_only_notify() {
+        let registry = small_registry(8);
+        registry
+            .create(
+                "second",
+                CollectionSpec {
+                    scheme: Scheme::OneBit,
+                    w: 0.0,
+                    k: 32,
+                    seed: 9,
+                },
+            )
+            .unwrap();
         let metrics = Arc::new(Metrics::default());
         let mut m = Maintenance::spawn(
-            store.clone(),
-            None,
+            registry.clone(),
             metrics.clone(),
             MaintenanceConfig {
                 tick: Duration::from_millis(5),
             },
         );
-        for i in 0..200 {
-            store.put(format!("id{i}"), sketch(i));
+        let default = registry.get("default").unwrap();
+        let second = registry.get("second").unwrap();
+        for i in 0..120 {
+            default.register(format!("d{i}"), vec![i as f32 * 0.01; 16]);
+            second.register(format!("s{i}"), vec![-(i as f32) * 0.01; 16]);
         }
-        // The thread must fold the backlog without any writer folding.
-        let arena = store.arena().unwrap();
+        // The thread must fold both backlogs without any writer folding.
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
-        while arena.drain_due() && std::time::Instant::now() < deadline {
+        let arenas = [
+            default.store.arena().unwrap(),
+            second.store.arena().unwrap(),
+        ];
+        while arenas.iter().any(|a| a.drain_due())
+            && std::time::Instant::now() < deadline
+        {
             std::thread::sleep(Duration::from_millis(2));
         }
-        assert!(!arena.drain_due(), "maintenance thread never drained");
-        assert!(arena.drains() >= 1);
-        assert_eq!(arena.len(), 200);
+        for (i, a) in arenas.iter().enumerate() {
+            assert!(!a.drain_due(), "collection {i} never drained");
+            assert_eq!(a.len(), 120, "collection {i}");
+        }
         // The 5ms tick guarantees a counted wake-up well within the
         // deadline; don't race shutdown against the first tick.
         while metrics.maintenance_wakeups.load(Ordering::Relaxed) == 0
@@ -168,9 +220,11 @@ mod tests {
             metrics.maintenance_wakeups.load(Ordering::Relaxed) >= 1,
             "wakeups must be counted"
         );
-        // Shutdown drained the tail; the store stays fully usable.
-        assert_eq!(arena.pending_load(), 0);
-        store.put("late".into(), sketch(9));
-        assert_eq!(store.len(), 201);
+        // Shutdown drained both tails; the stores stay fully usable.
+        assert_eq!(default.store.arena().unwrap().pending_load(), 0);
+        assert_eq!(second.store.arena().unwrap().pending_load(), 0);
+        default.register("late".into(), vec![0.5; 16]);
+        assert_eq!(default.store.len(), 121);
+        assert_eq!(second.store.len(), 120);
     }
 }

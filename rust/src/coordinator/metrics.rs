@@ -73,15 +73,20 @@ pub struct Metrics {
     /// Times the background maintenance thread woke (tick or drain
     /// notification) to fold epochs / checkpoint.
     pub maintenance_wakeups: AtomicU64,
+    /// Open client connections right now (gauge: the accept loop
+    /// increments, each connection thread decrements on exit; rejected
+    /// over-limit connections are never counted).
+    pub connections: AtomicU64,
     pub register_latency: LatencyHistogram,
 }
 
 impl Metrics {
     /// Counter-only snapshot. The scan-engine fields (`pending_rows`,
-    /// `drains`, `tombstones`, `kernel`) live in the store's epoch
-    /// arena and the durability fields (`wal_records`, `wal_bytes`,
-    /// `last_checkpoint_rows`) in the WAL engine; the server fills
-    /// those in before answering `Stats`.
+    /// `drains`, `tombstones`, `kernel`) live in each collection's
+    /// epoch arena and the durability fields (`wal_records`,
+    /// `wal_bytes`, `last_checkpoint_rows`) in each WAL engine; the
+    /// server aggregates those across the registry (plus the
+    /// `collections` count) before answering `Stats`.
     pub fn snapshot(&self) -> super::protocol::StatsSnapshot {
         let batches = self.batches_executed.load(Ordering::Relaxed);
         let vectors = self.vectors_projected.load(Ordering::Relaxed);
@@ -99,6 +104,7 @@ impl Metrics {
             p50_register_us: self.register_latency.percentile_us(0.50),
             p99_register_us: self.register_latency.percentile_us(0.99),
             maintenance_wakeups: self.maintenance_wakeups.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
             ..Default::default()
         }
     }

@@ -1,38 +1,47 @@
-//! The Layer-3 coordinator: a sketch/similarity service.
+//! The Layer-3 coordinator: a multi-collection sketch/similarity
+//! service.
 //!
-//! Clients register raw vectors; the service projects them (dynamic
-//! batching onto the fixed AOT artifact shapes), codes them with the
-//! configured scheme, and stores only the packed codes — the paper's
-//! storage story made operational. Queries then estimate similarities or
+//! Clients register raw vectors into named *collections*; the service
+//! projects them (dynamic batching onto the fixed AOT artifact shapes),
+//! codes them with that collection's scheme, and stores only the packed
+//! codes — the paper's storage story made operational, with the coding
+//! choice made *per workload*. Queries then estimate similarities or
 //! scan for near neighbors purely over the compact codes.
 //!
 //! ```text
 //!  TCP (length-prefixed binary frames)
-//!   └── server  — connection loop, frame codec
-//!        └── router — request dispatch
-//!             ├── batcher     — groups projection work into (b_tile)-
-//!             │                 sized batches with a deadline, executes
-//!             │                 on the Projector (PJRT or pure Rust)
-//!             ├── store       — sharded map: id → PackedCodes, mirrored
-//!             │                 into an epoch-buffered scan arena
-//!             │                 (crate::scan) that serves Knn/TopK as
-//!             │                 sequential sweeps; puts never take the
-//!             │                 arena write lock
-//!             ├── durability  — CRPSNAP2 arena-image snapshots + the
-//!             │                 CRPWAL1 epoch WAL; every acknowledged
-//!             │                 mutation survives kill -9
-//!             ├── maintenance — background thread owning drains,
-//!             │                 compaction, and snapshot-then-truncate
-//!             │                 checkpoints (writers only notify)
-//!             └── metrics     — counters + latency histograms
+//!   └── server  — bounded connection loop (--max-conns), frame codec
+//!        └── router — request dispatch; legacy frames → "default",
+//!             │       Scoped frames → named collection
+//!             └── registry — named collections, created/dropped at
+//!                  │         runtime; durable layout under one root
+//!                  │         (<root>/<name>/{snap,wal} + MANIFEST)
+//!                  ├── batcher     — per collection: groups projection
+//!                  │                 work into (b_tile)-sized batches
+//!                  │                 with a deadline, executes on the
+//!                  │                 Projector (PJRT or pure Rust)
+//!                  ├── store       — per collection: sharded map
+//!                  │                 id → PackedCodes, mirrored into an
+//!                  │                 epoch-buffered scan arena
+//!                  │                 (crate::scan) that serves Knn/TopK
+//!                  ├── durability  — per collection: CRPSNAP2 snapshots
+//!                  │                 + the CRPWAL1 epoch WAL (fsync
+//!                  │                 policy: always|os|group:<ms>)
+//!                  ├── maintenance — ONE background thread multiplexing
+//!                  │                 drains, compaction, and checkpoints
+//!                  │                 across all collections off one
+//!                  │                 DrainSignal
+//!                  └── metrics     — counters + latency histograms +
+//!                                    connection gauge
 //! ```
 //!
-//! Python never runs here; the Projector executes AOT artifacts via PJRT.
+//! Python never runs here; Projectors execute AOT artifacts via PJRT.
 
 pub mod protocol;
 pub mod store;
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod server;
 pub mod client;
 pub mod durability;
@@ -40,8 +49,9 @@ pub mod maintenance;
 
 pub use batcher::{BatcherConfig, SketchBatcher};
 pub use client::SketchClient;
-pub use durability::{Durability, DurabilityConfig};
+pub use durability::{Durability, DurabilityConfig, FsyncPolicy};
 pub use maintenance::{Maintenance, MaintenanceConfig};
-pub use protocol::{Request, Response};
+pub use protocol::{CollectionInfo, Request, Response};
+pub use registry::{Collection, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION};
 pub use server::{serve, ServerConfig};
 pub use store::{DrainSignal, SketchStore};

@@ -5,8 +5,21 @@
 //! serde): a one-byte message tag followed by fields in declaration
 //! order. Strings are `u32`-length-prefixed UTF-8; `Vec<f32>` is a
 //! `u32` count + raw little-endian f32s. Round-trip tests pin the format.
+//!
+//! ## Collections
+//!
+//! Data-path requests are namespaced by wrapping them in
+//! [`Request::Scoped`] (tag 13): the collection name followed by the
+//! inner request's own encoding. Legacy no-namespace frames (tags 0–9)
+//! are untouched — they decode exactly as before and the server routes
+//! them to the `default` collection, so pre-namespace clients keep
+//! working byte-identically. Collection admin travels on its own tags
+//! ([`Request::CreateCollection`] / [`Request::DropCollection`] /
+//! [`Request::ListCollections`]).
 
 use std::io::{Read, Write};
+
+use crate::coding::Scheme;
 
 /// Maximum accepted frame size (guards the server against bad clients).
 pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
@@ -44,6 +57,27 @@ pub enum Request {
     Stats,
     /// Health check.
     Ping,
+    /// Create a named collection with its own coding choice. `bits` is
+    /// a cross-check: 0 derives it from `(scheme, w)`, a nonzero value
+    /// must match what the scheme packs or the create is rejected.
+    CreateCollection {
+        name: String,
+        scheme: Scheme,
+        w: f64,
+        bits: u32,
+        k: u64,
+        seed: u64,
+    },
+    /// Drop a named collection (its durable state is deleted).
+    DropCollection { name: String },
+    /// Enumerate collections with their coding configs and row counts.
+    ListCollections,
+    /// Namespace wrapper: route `inner` (any data-path request) to the
+    /// named collection instead of `default`. Never nests.
+    Scoped {
+        collection: String,
+        inner: Box<Request>,
+    },
 }
 
 /// Server → client responses.
@@ -60,12 +94,32 @@ pub enum Response {
     Stats(StatsSnapshot),
     Pong,
     Error { message: String },
+    /// `ListCollections` result, sorted by name.
+    Collections { collections: Vec<CollectionInfo> },
+    CollectionCreated { name: String },
+    CollectionDropped { existed: bool },
 }
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct KnnHit {
     pub id: String,
     pub rho: f64,
+}
+
+/// Wire-facing summary of one collection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectionInfo {
+    pub name: String,
+    pub scheme: Scheme,
+    pub w: f64,
+    /// Bits per packed code (derived from `scheme` + `w`).
+    pub bits: u32,
+    pub k: u64,
+    pub seed: u64,
+    /// Live sketches currently stored.
+    pub rows: u64,
+    /// Whether the collection persists (snapshot + WAL).
+    pub durable: bool,
 }
 
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -94,6 +148,11 @@ pub struct StatsSnapshot {
     pub last_checkpoint_rows: u64,
     /// Background maintenance thread wake-ups (drains/checkpoints).
     pub maintenance_wakeups: u64,
+    /// Open client connections right now (gauge; bounded by
+    /// `--max-conns`).
+    pub connections: u64,
+    /// Collections served by this process.
+    pub collections: u64,
 }
 
 // ---- encoding primitives ----------------------------------------------
@@ -231,10 +290,46 @@ impl Request {
                 e.0
             }
             Request::Persist => Enc::new(9).0,
+            Request::CreateCollection {
+                name,
+                scheme,
+                w,
+                bits,
+                k,
+                seed,
+            } => {
+                let mut e = Enc::new(10);
+                e.str(name);
+                e.u8(scheme.wire_code());
+                e.f64(*w);
+                e.u32(*bits);
+                e.u64(*k);
+                e.u64(*seed);
+                e.0
+            }
+            Request::DropCollection { name } => {
+                let mut e = Enc::new(11);
+                e.str(name);
+                e.0
+            }
+            Request::ListCollections => Enc::new(12).0,
+            Request::Scoped { collection, inner } => {
+                let mut e = Enc::new(13);
+                e.str(collection);
+                e.0.extend_from_slice(&inner.encode());
+                e.0
+            }
         }
     }
 
     pub fn decode(buf: &[u8]) -> crate::Result<Self> {
+        Self::decode_depth(buf, true)
+    }
+
+    /// `allow_scoped` is false when already inside a `Scoped` wrapper:
+    /// nesting is rejected *before* recursing, so a frame of stacked
+    /// tag-13 headers can never overflow the connection thread's stack.
+    fn decode_depth(buf: &[u8], allow_scoped: bool) -> crate::Result<Self> {
         let mut d = Dec::new(buf);
         let tag = d.u8()?;
         let req = match tag {
@@ -285,6 +380,34 @@ impl Request {
             }
             8 => Request::Remove { id: d.str()? },
             9 => Request::Persist,
+            10 => {
+                let name = d.str()?;
+                let code = d.u8()?;
+                let scheme = Scheme::from_wire_code(code)
+                    .ok_or_else(|| anyhow::anyhow!("unknown scheme code {code}"))?;
+                Request::CreateCollection {
+                    name,
+                    scheme,
+                    w: d.f64()?,
+                    bits: d.u32()?,
+                    k: d.u64()?,
+                    seed: d.u64()?,
+                }
+            }
+            11 => Request::DropCollection { name: d.str()? },
+            12 => Request::ListCollections,
+            13 => {
+                anyhow::ensure!(allow_scoped, "nested Scoped request");
+                let collection = d.str()?;
+                // The tail is the inner request's own encoding; its
+                // decoder enforces its own completeness.
+                let inner = Request::decode_depth(&buf[d.pos..], false)?;
+                d.pos = buf.len();
+                Request::Scoped {
+                    collection,
+                    inner: Box::new(inner),
+                }
+            }
             t => anyhow::bail!("unknown request tag {t}"),
         };
         d.done()?;
@@ -338,6 +461,8 @@ impl Response {
                 e.u64(s.wal_bytes);
                 e.u64(s.last_checkpoint_rows);
                 e.u64(s.maintenance_wakeups);
+                e.u64(s.connections);
+                e.u64(s.collections);
                 e.0
             }
             Response::Pong => Enc::new(4).0,
@@ -372,6 +497,31 @@ impl Response {
                         e.f64(h.rho);
                     }
                 }
+                e.0
+            }
+            Response::Collections { collections } => {
+                let mut e = Enc::new(10);
+                e.u32(collections.len() as u32);
+                for c in collections {
+                    e.str(&c.name);
+                    e.u8(c.scheme.wire_code());
+                    e.f64(c.w);
+                    e.u32(c.bits);
+                    e.u64(c.k);
+                    e.u64(c.seed);
+                    e.u64(c.rows);
+                    e.u8(u8::from(c.durable));
+                }
+                e.0
+            }
+            Response::CollectionCreated { name } => {
+                let mut e = Enc::new(11);
+                e.str(name);
+                e.0
+            }
+            Response::CollectionDropped { existed } => {
+                let mut e = Enc::new(12);
+                e.u8(u8::from(*existed));
                 e.0
             }
         }
@@ -415,6 +565,8 @@ impl Response {
                 wal_bytes: d.u64()?,
                 last_checkpoint_rows: d.u64()?,
                 maintenance_wakeups: d.u64()?,
+                connections: d.u64()?,
+                collections: d.u64()?,
             }),
             4 => Response::Pong,
             5 => Response::Error { message: d.str()? },
@@ -446,6 +598,41 @@ impl Response {
                 rows: d.u64()?,
                 wal_bytes: d.u64()?,
             },
+            10 => {
+                let n = d.u32()? as usize;
+                anyhow::ensure!(n * 30 <= buf.len(), "bad collection count");
+                let mut collections = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = d.str()?;
+                    let code = d.u8()?;
+                    let scheme = Scheme::from_wire_code(code)
+                        .ok_or_else(|| anyhow::anyhow!("unknown scheme code {code}"))?;
+                    let w = d.f64()?;
+                    let bits = d.u32()?;
+                    let k = d.u64()?;
+                    let seed = d.u64()?;
+                    let rows = d.u64()?;
+                    let durable = d.u8()?;
+                    anyhow::ensure!(durable <= 1, "bad bool byte {durable}");
+                    collections.push(CollectionInfo {
+                        name,
+                        scheme,
+                        w,
+                        bits,
+                        k,
+                        seed,
+                        rows,
+                        durable: durable == 1,
+                    });
+                }
+                Response::Collections { collections }
+            }
+            11 => Response::CollectionCreated { name: d.str()? },
+            12 => {
+                let v = d.u8()?;
+                anyhow::ensure!(v <= 1, "bad bool byte {v}");
+                Response::CollectionDropped { existed: v == 1 }
+            }
             t => anyhow::bail!("unknown response tag {t}"),
         };
         d.done()?;
@@ -529,6 +716,158 @@ mod tests {
         roundtrip_req(Request::Persist);
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Ping);
+        roundtrip_req(Request::CreateCollection {
+            name: "web-embeddings".into(),
+            scheme: Scheme::Uniform,
+            w: 1.0,
+            bits: 4,
+            k: 1024,
+            seed: 42,
+        });
+        roundtrip_req(Request::DropCollection { name: "old".into() });
+        roundtrip_req(Request::ListCollections);
+        for inner in [
+            Request::Register {
+                id: "x".into(),
+                vector: vec![0.5, -0.5],
+            },
+            Request::Estimate {
+                a: "a".into(),
+                b: "b".into(),
+            },
+            Request::EstimateVec {
+                id: "q".into(),
+                vector: vec![1.0],
+            },
+            Request::Knn {
+                vector: vec![0.0; 8],
+                n: 3,
+            },
+            Request::TopK {
+                vectors: vec![vec![1.0], vec![]],
+                n: 2,
+            },
+            Request::RegisterBatch {
+                ids: vec!["a".into()],
+                vectors: vec![vec![2.0]],
+            },
+            Request::Remove { id: "x".into() },
+            Request::Persist,
+        ] {
+            roundtrip_req(Request::Scoped {
+                collection: "two-bit-075".into(),
+                inner: Box::new(inner),
+            });
+        }
+    }
+
+    /// Satellite pin: pre-namespace frames are untouched. The exact
+    /// bytes old clients send still decode to the same requests (the
+    /// server routes them to the `default` collection), and encoding
+    /// those requests reproduces the same bytes — no re-tagging.
+    #[test]
+    fn legacy_frames_decode_and_encode_byte_identically() {
+        // Hand-built tag-0 Register frame, as a pre-namespace client
+        // would emit it: tag | u32 id_len | id | u32 n | f32s.
+        let mut legacy_register = vec![0u8];
+        legacy_register.extend_from_slice(&2u32.to_le_bytes());
+        legacy_register.extend_from_slice(b"ab");
+        legacy_register.extend_from_slice(&2u32.to_le_bytes());
+        legacy_register.extend_from_slice(&0.5f32.to_le_bytes());
+        legacy_register.extend_from_slice(&(-1.5f32).to_le_bytes());
+        let want = Request::Register {
+            id: "ab".into(),
+            vector: vec![0.5, -1.5],
+        };
+        assert_eq!(Request::decode(&legacy_register).unwrap(), want);
+        assert_eq!(want.encode(), legacy_register);
+
+        // Tag-8 Remove and tag-9 Persist frames likewise.
+        let mut legacy_remove = vec![8u8];
+        legacy_remove.extend_from_slice(&1u32.to_le_bytes());
+        legacy_remove.push(b'x');
+        let want = Request::Remove { id: "x".into() };
+        assert_eq!(Request::decode(&legacy_remove).unwrap(), want);
+        assert_eq!(want.encode(), legacy_remove);
+        assert_eq!(Request::decode(&[9u8]).unwrap(), Request::Persist);
+        assert_eq!(Request::Persist.encode(), vec![9u8]);
+
+        // Every legacy tag still owns its number: encoding the
+        // un-namespaced requests emits tags 0–9, never the new ones.
+        for (req, tag) in [
+            (
+                Request::Register {
+                    id: "i".into(),
+                    vector: vec![],
+                },
+                0u8,
+            ),
+            (
+                Request::Estimate {
+                    a: "a".into(),
+                    b: "b".into(),
+                },
+                1,
+            ),
+            (
+                Request::EstimateVec {
+                    id: "i".into(),
+                    vector: vec![],
+                },
+                2,
+            ),
+            (
+                Request::Knn {
+                    vector: vec![],
+                    n: 1,
+                },
+                3,
+            ),
+            (Request::Stats, 4),
+            (Request::Ping, 5),
+            (
+                Request::TopK {
+                    vectors: vec![],
+                    n: 1,
+                },
+                6,
+            ),
+            (
+                Request::RegisterBatch {
+                    ids: vec![],
+                    vectors: vec![],
+                },
+                7,
+            ),
+            (Request::Remove { id: "i".into() }, 8),
+            (Request::Persist, 9),
+        ] {
+            assert_eq!(req.encode()[0], tag, "{req:?}");
+        }
+        // Namespaced requests ride the Scoped wrapper (tag 13), leaving
+        // the legacy tags untouched.
+        let scoped = Request::Scoped {
+            collection: "c".into(),
+            inner: Box::new(Request::Ping),
+        };
+        assert_eq!(scoped.encode()[0], 13);
+        // Nested Scoped is rejected at decode.
+        let nested = Request::Scoped {
+            collection: "outer".into(),
+            inner: Box::new(scoped),
+        };
+        assert!(Request::decode(&nested.encode()).is_err());
+        // ...including a hand-built frame of 100k stacked tag-13
+        // headers: rejected at depth 2, before any recursion could
+        // touch the connection thread's stack.
+        let mut deep = Vec::with_capacity(100_000 * 6 + 1);
+        for _ in 0..100_000 {
+            deep.push(13u8);
+            deep.extend_from_slice(&1u32.to_le_bytes());
+            deep.push(b'c');
+        }
+        deep.push(5); // innermost Ping
+        assert!(Request::decode(&deep).is_err());
     }
 
     #[test]
@@ -577,8 +916,40 @@ mod tests {
             wal_bytes: 98765,
             last_checkpoint_rows: 10,
             maintenance_wakeups: 77,
+            connections: 12,
+            collections: 3,
             ..Default::default()
         }));
+        roundtrip_resp(Response::Collections {
+            collections: vec![
+                CollectionInfo {
+                    name: "default".into(),
+                    scheme: Scheme::TwoBit,
+                    w: 0.75,
+                    bits: 2,
+                    k: 256,
+                    seed: 0,
+                    rows: 1_000_000,
+                    durable: true,
+                },
+                CollectionInfo {
+                    name: "uni4".into(),
+                    scheme: Scheme::Uniform,
+                    w: 1.0,
+                    bits: 4,
+                    k: 128,
+                    seed: 11,
+                    rows: 0,
+                    durable: false,
+                },
+            ],
+        });
+        roundtrip_resp(Response::Collections {
+            collections: vec![],
+        });
+        roundtrip_resp(Response::CollectionCreated { name: "c".into() });
+        roundtrip_resp(Response::CollectionDropped { existed: true });
+        roundtrip_resp(Response::CollectionDropped { existed: false });
         roundtrip_resp(Response::RegisteredBatch { count: 512 });
         roundtrip_resp(Response::Removed { existed: true });
         roundtrip_resp(Response::Removed { existed: false });

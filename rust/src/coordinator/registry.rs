@@ -1,0 +1,983 @@
+//! The collection registry: one server process, many named collections,
+//! each with the coding that fits its workload.
+//!
+//! The paper's central operational claim is that the coding scheme is a
+//! *per-workload* choice — uniform `h_w` beats `h_{w,q}`, and the 2-bit
+//! non-uniform code wins when bits are scarce. A [`Collection`] bundles
+//! everything one such choice needs: a [`Projector`] (its own `k` and
+//! seed), a dynamic [`SketchBatcher`], a fused bulk-ingest
+//! [`BatchEncoder`], an arena-backed [`SketchStore`], a
+//! [`CollisionEstimator`], and optionally a [`Durability`] engine. The
+//! [`Registry`] owns the named set, creates/drops collections at
+//! runtime, and hands all of their stores one shared [`DrainSignal`] so
+//! a single maintenance thread multiplexes drains, compaction, and
+//! checkpoints across every collection.
+//!
+//! ## Durable layout
+//!
+//! With a root directory (`crp serve --data-dir`), each collection
+//! persists under its own subdirectory and a CRC-checked `MANIFEST`
+//! records the full coding config of every collection, so a restart
+//! rebuilds the whole registry — projector seeds included — without any
+//! flags beyond `--data-dir`:
+//!
+//! ```text
+//! <root>/MANIFEST                         registry of (name, scheme, w, bits, k, seed)
+//! <root>/<collection>/snap/snapshot.bin   CRPSNAP2 arena image
+//! <root>/<collection>/wal/wal.*.log       CRPWAL1 epoch segments
+//! ```
+//!
+//! The `default` collection always exists (it serves every legacy
+//! no-namespace request) and is recorded in the MANIFEST like any
+//! other; restarting with flags that contradict the MANIFEST is an
+//! error, not silent data corruption. Dropping a collection removes it
+//! from the MANIFEST *first*, then deletes its directory — a crash
+//! between the two leaves an orphan directory that the next `create`
+//! of that name clears before reuse, so recreate never replays stale
+//! state.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::coding::{BatchEncoder, CodingParams, PackedCodes, Scheme};
+use crate::coordinator::batcher::{BatcherConfig, SketchBatcher};
+use crate::coordinator::durability::{crc32_update, Durability, DurabilityConfig, FsyncPolicy};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::protocol::{CollectionInfo, KnnHit, Response};
+use crate::coordinator::store::{DrainSignal, SketchStore};
+use crate::estimator::CollisionEstimator;
+use crate::projection::{ProjectionConfig, Projector};
+use crate::scan::EpochConfig;
+
+/// Name of the implicit collection legacy (no-namespace) frames route to.
+pub const DEFAULT_COLLECTION: &str = "default";
+
+/// Registry MANIFEST file magic (version in the name: `CRPMANI1`).
+pub const MANIFEST_MAGIC: &[u8; 8] = b"CRPMANI1";
+
+/// Upper bound on collection-name bytes (also a directory name).
+const MAX_NAME: usize = 64;
+
+/// Upper bound on the padded projection workspace (`b·d` f32 cells) one
+/// `RegisterBatch` may demand. Vectors are padded to the batch's max
+/// dimension, so without this cap a frame mixing one huge vector with
+/// many tiny ones would force an allocation quadratic in frame size.
+const MAX_BULK_CELLS: usize = 1 << 24; // 64 MiB of f32 workspace
+
+/// The coding configuration a collection is created with — everything
+/// recorded in the MANIFEST and needed to rebuild it from disk.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollectionSpec {
+    pub scheme: Scheme,
+    /// Bin width `w` (ignored by `OneBit`).
+    pub w: f64,
+    /// Projections per sketch.
+    pub k: usize,
+    /// Seed of the collection's virtual projection matrix.
+    pub seed: u64,
+}
+
+impl CollectionSpec {
+    pub fn coding(&self) -> CodingParams {
+        CodingParams::new(self.scheme, self.w)
+    }
+
+    /// Bits per packed code this spec produces.
+    pub fn bits(&self) -> u32 {
+        self.coding().bits_per_code()
+    }
+
+    /// Reject shapes the serving stack cannot hold: `k` outside
+    /// `[1, 2^20]`, or a lattice bin width outside `[1e-3, 1e3]` (tiny
+    /// `w` explodes the bin count past what a `u16` code can index).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.k >= 1 && self.k <= 1 << 20,
+            "collection k {} outside [1, {}]",
+            self.k,
+            1usize << 20
+        );
+        match self.scheme {
+            Scheme::OneBit => {}
+            _ => anyhow::ensure!(
+                self.w.is_finite() && (1e-3..=1e3).contains(&self.w),
+                "scheme {} needs a bin width w in [1e-3, 1e3], got {}",
+                self.scheme.label(),
+                self.w
+            ),
+        }
+        Ok(())
+    }
+
+    /// Exact equality for MANIFEST validation (`w` compared bitwise).
+    fn matches(&self, other: &CollectionSpec) -> bool {
+        self.scheme == other.scheme
+            && self.w.to_bits() == other.w.to_bits()
+            && self.k == other.k
+            && self.seed == other.seed
+    }
+}
+
+/// Fused bulk-ingest state: one encoder (cached offsets + scratch) and
+/// one word buffer, reused across `RegisterBatch` requests.
+struct BulkIngest {
+    encoder: BatchEncoder,
+    words: Vec<u64>,
+}
+
+/// One named collection: projector + batcher + estimator + arena-backed
+/// store (+ durability), all sharing one `(scheme, w, k, seed)` choice.
+pub struct Collection {
+    pub name: String,
+    pub spec: CollectionSpec,
+    pub k: usize,
+    pub store: Arc<SketchStore>,
+    pub estimator: CollisionEstimator,
+    pub batcher: SketchBatcher,
+    pub durability: Option<Arc<Durability>>,
+    projector: Arc<Projector>,
+    bulk: Mutex<BulkIngest>,
+    metrics: Arc<Metrics>,
+    /// Set when the collection is dropped from the registry; gates
+    /// maintenance and checkpoints so a dropped collection can never
+    /// resurrect files inside a directory its replacement now owns.
+    dropped: AtomicBool,
+}
+
+impl Collection {
+    #[allow(clippy::too_many_arguments)]
+    fn open(
+        name: &str,
+        spec: CollectionSpec,
+        projector: Arc<Projector>,
+        epoch: EpochConfig,
+        batcher_cfg: BatcherConfig,
+        durability_cfg: Option<DurabilityConfig>,
+        metrics: Arc<Metrics>,
+        signal: Arc<DrainSignal>,
+    ) -> crate::Result<Arc<Collection>> {
+        spec.validate()?;
+        anyhow::ensure!(
+            projector.cfg.k == spec.k && projector.cfg.seed == spec.seed,
+            "projector shape (k={}, seed={}) does not match collection spec (k={}, seed={})",
+            projector.cfg.k,
+            projector.cfg.seed,
+            spec.k,
+            spec.seed
+        );
+        let coding = spec.coding();
+        let batcher = SketchBatcher::spawn(
+            projector.clone(),
+            coding.clone(),
+            batcher_cfg,
+            metrics.clone(),
+        );
+        let bits = coding.bits_per_code();
+        let store = Arc::new(SketchStore::with_arena_config(spec.k, bits, epoch));
+        store.delegate_drains(signal);
+        let durability = match durability_cfg {
+            Some(dcfg) => {
+                let (d, stats) = Durability::open(dcfg, &store)?;
+                metrics.registered.fetch_add(stats.live, Ordering::Relaxed);
+                Some(Arc::new(d))
+            }
+            None => None,
+        };
+        Ok(Arc::new(Collection {
+            name: name.to_string(),
+            spec,
+            k: spec.k,
+            estimator: CollisionEstimator::new(coding.clone()),
+            batcher,
+            store,
+            durability,
+            projector,
+            bulk: Mutex::new(BulkIngest {
+                encoder: BatchEncoder::new(coding, spec.k),
+                words: Vec::new(),
+            }),
+            metrics,
+            dropped: AtomicBool::new(false),
+        }))
+    }
+
+    /// Whether this collection has been dropped from its registry.
+    pub fn is_dropped(&self) -> bool {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Wire-facing summary of this collection.
+    pub fn info(&self) -> CollectionInfo {
+        CollectionInfo {
+            name: self.name.clone(),
+            scheme: self.spec.scheme,
+            w: self.spec.w,
+            bits: self.spec.bits(),
+            k: self.spec.k as u64,
+            seed: self.spec.seed,
+            rows: self.store.len() as u64,
+            durable: self.durability.is_some(),
+        }
+    }
+
+    /// Run the snapshot-then-truncate checkpoint if this collection is
+    /// durable and still live. `Ok(None)` means nothing to checkpoint
+    /// (in-memory or dropped).
+    pub fn checkpoint(&self) -> crate::Result<Option<(u64, u64)>> {
+        if self.is_dropped() {
+            return Ok(None);
+        }
+        match &self.durability {
+            Some(d) => d.checkpoint(&self.store).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    fn estimate_response(&self, collisions: usize) -> Response {
+        let rho = self.estimator.estimate_from_count(collisions, self.k);
+        let v = self
+            .estimator
+            .params
+            .scheme
+            .variance_factor(rho.min(0.999), self.estimator.params.w);
+        Response::Estimate {
+            rho,
+            std_err: (v / self.k as f64).sqrt(),
+            p_hat: collisions as f64 / self.k as f64,
+        }
+    }
+
+    /// Map scan results to wire hits (ρ̂ from the collision count).
+    fn to_knn_hits(&self, hits: Vec<crate::scan::ScanHit>) -> Vec<KnnHit> {
+        hits.into_iter()
+            .map(|h| KnnHit {
+                id: h.id,
+                rho: self.estimator.estimate_from_count(h.collisions, self.k),
+            })
+            .collect()
+    }
+
+    /// Exact top-`n` hits for one query sketch, ranked
+    /// `(collisions desc, id asc)`. Collection stores are always
+    /// arena-backed, so the scan engine is the one ranking path.
+    fn topk_hits(&self, q: &PackedCodes, n: usize) -> Vec<KnnHit> {
+        let arena = self.store.arena().expect("collection store is arena-backed");
+        self.to_knn_hits(arena.scan_topk(q, n, 0))
+    }
+
+    /// Store one sketch, WAL-first when durable: the record is flushed
+    /// before the store mutates, so an acknowledged `Register` survives
+    /// `kill -9`. An `Err` means nothing was applied.
+    fn durable_put(&self, id: &str, codes: PackedCodes) -> crate::Result<()> {
+        match &self.durability {
+            Some(d) => d.log_put(id, &codes, || self.store.put(id.to_string(), codes.clone())),
+            None => {
+                self.store.put(id.to_string(), codes);
+                Ok(())
+            }
+        }
+    }
+
+    pub(crate) fn register(&self, id: String, vector: Vec<f32>) -> Response {
+        let t0 = Instant::now();
+        match self.batcher.sketch(vector) {
+            Ok(codes) => match self.durable_put(&id, codes) {
+                Ok(()) => {
+                    self.metrics.registered.fetch_add(1, Ordering::Relaxed);
+                    let us = t0.elapsed().as_micros() as u64;
+                    self.metrics.register_latency.record(us);
+                    Response::Registered { id }
+                }
+                Err(e) => Response::Error {
+                    message: format!("register failed: {e}"),
+                },
+            },
+            Err(e) => Response::Error {
+                message: format!("sketch failed: {e}"),
+            },
+        }
+    }
+
+    pub(crate) fn remove(&self, id: String) -> Response {
+        let result = match &self.durability {
+            Some(d) => d.log_remove(&id, || self.store.remove(&id)),
+            None => Ok(self.store.remove(&id)),
+        };
+        match result {
+            Ok(existed) => Response::Removed { existed },
+            Err(e) => Response::Error {
+                message: format!("remove failed: {e}"),
+            },
+        }
+    }
+
+    pub(crate) fn estimate(&self, a: String, b: String) -> Response {
+        let (sa, sb) = (self.store.get(&a), self.store.get(&b));
+        match (sa, sb) {
+            (Some(sa), Some(sb)) => {
+                self.metrics.estimates.fetch_add(1, Ordering::Relaxed);
+                let collisions = crate::coding::collision_count_packed(&sa, &sb);
+                self.estimate_response(collisions)
+            }
+            (None, _) => Response::Error {
+                message: format!("unknown id {a:?}"),
+            },
+            (_, None) => Response::Error {
+                message: format!("unknown id {b:?}"),
+            },
+        }
+    }
+
+    pub(crate) fn estimate_vec(&self, id: String, vector: Vec<f32>) -> Response {
+        let Some(stored) = self.store.get(&id) else {
+            return Response::Error {
+                message: format!("unknown id {id:?}"),
+            };
+        };
+        match self.batcher.sketch(vector) {
+            Ok(q) => {
+                self.metrics.estimates.fetch_add(1, Ordering::Relaxed);
+                let collisions = crate::coding::collision_count_packed(&q, &stored);
+                self.estimate_response(collisions)
+            }
+            Err(e) => Response::Error {
+                message: format!("sketch failed: {e}"),
+            },
+        }
+    }
+
+    pub(crate) fn knn(&self, vector: Vec<f32>, n: u32) -> Response {
+        match self.batcher.sketch(vector) {
+            Ok(q) => {
+                self.metrics.knn_queries.fetch_add(1, Ordering::Relaxed);
+                Response::Knn {
+                    hits: self.topk_hits(&q, n as usize),
+                }
+            }
+            Err(e) => Response::Error {
+                message: format!("sketch failed: {e}"),
+            },
+        }
+    }
+
+    pub(crate) fn topk(&self, vectors: Vec<Vec<f32>>, n: u32) -> Response {
+        let mut queries = Vec::with_capacity(vectors.len());
+        for vector in vectors {
+            match self.batcher.sketch(vector) {
+                Ok(q) => queries.push(q),
+                Err(e) => {
+                    return Response::Error {
+                        message: format!("sketch failed: {e}"),
+                    }
+                }
+            }
+        }
+        self.metrics
+            .knn_queries
+            .fetch_add(queries.len() as u64, Ordering::Relaxed);
+        let arena = self.store.arena().expect("collection store is arena-backed");
+        let results = arena
+            .scan_topk_batch(&queries, n as usize, 0)
+            .into_iter()
+            .map(|hits| self.to_knn_hits(hits))
+            .collect();
+        Response::TopK { results }
+    }
+
+    pub(crate) fn persist(&self) -> Response {
+        match self.checkpoint() {
+            Ok(Some((rows, wal_bytes))) => Response::Persisted { rows, wal_bytes },
+            Ok(None) => Response::Error {
+                message: format!(
+                    "durability is not enabled for collection {:?} \
+                     (serve with --data-dir or --snapshot/--wal-dir)",
+                    self.name
+                ),
+            },
+            Err(e) => Response::Error {
+                message: format!("checkpoint failed: {e}"),
+            },
+        }
+    }
+
+    /// The fused bulk-ingest path: one batched projection, one
+    /// encode+pack pass into a reused word buffer, one bulk arena
+    /// insert. Sketches are byte-identical to per-vector `Register`
+    /// (same projector, same coding, same packing).
+    pub(crate) fn register_batch(&self, ids: Vec<String>, vectors: Vec<Vec<f32>>) -> Response {
+        if ids.len() != vectors.len() {
+            return Response::Error {
+                message: format!(
+                    "ids/vectors length mismatch ({} vs {})",
+                    ids.len(),
+                    vectors.len()
+                ),
+            };
+        }
+        if ids.is_empty() {
+            return Response::RegisteredBatch { count: 0 };
+        }
+        let t0 = Instant::now();
+        let b = vectors.len();
+        let d = vectors.iter().map(|v| v.len()).max().unwrap_or(1).max(1);
+        if b.saturating_mul(d) > MAX_BULK_CELLS {
+            return Response::Error {
+                message: format!(
+                    "batch of {b} vectors padded to dim {d} exceeds the bulk \
+                     workspace limit of {MAX_BULK_CELLS} cells"
+                ),
+            };
+        }
+        let x = self
+            .projector
+            .project_ragged(vectors.iter().map(|v| v.as_slice()), b);
+        let stored = {
+            let mut bulk = self.bulk.lock().unwrap();
+            let BulkIngest { encoder, words } = &mut *bulk;
+            encoder.encode_pack_batch_into(&x, b, words);
+            let words: &[u64] = words;
+            match &self.durability {
+                // One WAL record, one flush, for the whole batch.
+                Some(d) => d.log_put_rows(&ids, words, || self.store.put_rows(&ids, words)),
+                None => self.store.put_rows(&ids, words),
+            }
+        };
+        match stored {
+            Ok(()) => {
+                self.metrics.registered.fetch_add(b as u64, Ordering::Relaxed);
+                self.metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.vectors_projected.fetch_add(b as u64, Ordering::Relaxed);
+                // One amortized sample per vector, so the percentiles
+                // weight bulk and per-request registrations equally.
+                self.metrics
+                    .register_latency
+                    .record_n((t0.elapsed().as_micros() as u64 / b as u64).max(1), b as u64);
+                Response::RegisteredBatch { count: b as u64 }
+            }
+            Err(e) => Response::Error {
+                message: format!("bulk register failed: {e}"),
+            },
+        }
+    }
+}
+
+/// How the registry builds its collections.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Durable root (`<root>/MANIFEST` + per-collection directories);
+    /// `None` keeps every collection in memory unless a legacy
+    /// single-collection [`DurabilityConfig`] is supplied for `default`.
+    pub root: Option<PathBuf>,
+    /// Ingest-epoch drain/compaction policy for every collection arena.
+    pub epoch: EpochConfig,
+    /// Dynamic batching policy for every collection.
+    pub batcher: BatcherConfig,
+    /// Logged rows between automatic checkpoints (root mode).
+    pub checkpoint_every: u64,
+    /// WAL fsync policy (root mode).
+    pub fsync: FsyncPolicy,
+}
+
+/// Named collections under one server process.
+pub struct Registry {
+    cfg: RegistryConfig,
+    collections: RwLock<HashMap<String, Arc<Collection>>>,
+    /// Serializes create/drop and every MANIFEST rewrite.
+    admin_mu: Mutex<()>,
+    signal: Arc<DrainSignal>,
+    metrics: Arc<Metrics>,
+}
+
+impl Registry {
+    /// Build the registry and its `default` collection. In root mode
+    /// the MANIFEST is read first: an existing `default` entry must
+    /// match the server's flags (scheme/w/k/seed drift would silently
+    /// corrupt estimates), and every other recorded collection is
+    /// rebuilt from its own snapshot + WAL.
+    pub fn open(
+        cfg: RegistryConfig,
+        metrics: Arc<Metrics>,
+        default_projector: Arc<Projector>,
+        default_coding: CodingParams,
+        legacy_durability: Option<DurabilityConfig>,
+    ) -> crate::Result<Arc<Registry>> {
+        anyhow::ensure!(
+            cfg.root.is_none() || legacy_durability.is_none(),
+            "--data-dir and legacy --snapshot/--wal-dir are mutually exclusive"
+        );
+        let default_spec = CollectionSpec {
+            scheme: default_coding.scheme,
+            w: default_coding.w,
+            k: default_projector.cfg.k,
+            seed: default_projector.cfg.seed,
+        };
+        default_spec.validate()?;
+        let reg = Arc::new(Registry {
+            cfg,
+            collections: RwLock::new(HashMap::new()),
+            admin_mu: Mutex::new(()),
+            signal: Arc::new(DrainSignal::default()),
+            metrics,
+        });
+        let _admin = reg.admin_mu.lock().unwrap();
+        match reg.cfg.root.clone() {
+            Some(root) => {
+                std::fs::create_dir_all(&root)?;
+                let manifest = read_manifest(&manifest_path(&root))?;
+                if let Some((_, disk)) = manifest.iter().find(|(n, _)| n == DEFAULT_COLLECTION) {
+                    anyhow::ensure!(
+                        disk.matches(&default_spec),
+                        "collection \"default\" on disk was created with \
+                         scheme={} w={} k={} seed={}, but the server was started with \
+                         scheme={} w={} k={} seed={} — restart with matching flags \
+                         or use a fresh --data-dir",
+                        disk.scheme.label(),
+                        disk.w,
+                        disk.k,
+                        disk.seed,
+                        default_spec.scheme.label(),
+                        default_spec.w,
+                        default_spec.k,
+                        default_spec.seed
+                    );
+                }
+                reg.install(DEFAULT_COLLECTION, default_spec, Some(default_projector))?;
+                for (name, spec) in manifest {
+                    if name != DEFAULT_COLLECTION {
+                        reg.install(&name, spec, None)?;
+                    }
+                }
+                // Records a freshly-minted default entry; a no-op
+                // rewrite otherwise.
+                reg.write_manifest_locked()?;
+            }
+            None => {
+                let c = Collection::open(
+                    DEFAULT_COLLECTION,
+                    default_spec,
+                    default_projector,
+                    reg.cfg.epoch.clone(),
+                    reg.cfg.batcher.clone(),
+                    legacy_durability,
+                    reg.metrics.clone(),
+                    reg.signal.clone(),
+                )?;
+                let mut map = reg.collections.write().unwrap();
+                map.insert(DEFAULT_COLLECTION.to_string(), c);
+            }
+        }
+        drop(_admin);
+        Ok(reg)
+    }
+
+    /// The drain signal shared by every collection store (the
+    /// maintenance thread waits on it).
+    pub fn signal(&self) -> Arc<DrainSignal> {
+        self.signal.clone()
+    }
+
+    /// Durability config for `name` in root mode, `None` otherwise.
+    fn durability_for(&self, name: &str) -> Option<DurabilityConfig> {
+        self.cfg.root.as_ref().map(|root| DurabilityConfig {
+            snapshot: root.join(name).join("snap").join("snapshot.bin"),
+            wal_dir: root.join(name).join("wal"),
+            checkpoint_every: self.cfg.checkpoint_every,
+            fsync: self.cfg.fsync,
+        })
+    }
+
+    /// Build a collection and insert it (admin lock must be held).
+    /// `projector` is `None` for collections that own a fresh CPU
+    /// projector derived from their spec (everything but `default`).
+    fn install(
+        &self,
+        name: &str,
+        spec: CollectionSpec,
+        projector: Option<Arc<Projector>>,
+    ) -> crate::Result<Arc<Collection>> {
+        let projector = match projector {
+            Some(p) => p,
+            None => Arc::new(Projector::new_cpu(ProjectionConfig {
+                k: spec.k,
+                seed: spec.seed,
+                ..Default::default()
+            })),
+        };
+        let c = Collection::open(
+            name,
+            spec,
+            projector,
+            self.cfg.epoch.clone(),
+            self.cfg.batcher.clone(),
+            self.durability_for(name),
+            self.metrics.clone(),
+            self.signal.clone(),
+        )?;
+        let mut map = self.collections.write().unwrap();
+        map.insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Create a collection at runtime. In root mode any orphan
+    /// directory left by a crashed drop is cleared first, the
+    /// collection opens durable, and the MANIFEST is rewritten before
+    /// the create is acknowledged.
+    pub fn create(&self, name: &str, spec: CollectionSpec) -> crate::Result<Arc<Collection>> {
+        validate_name(name)?;
+        spec.validate()?;
+        let _admin = self.admin_mu.lock().unwrap();
+        anyhow::ensure!(
+            !self.collections.read().unwrap().contains_key(name),
+            "collection {name:?} already exists"
+        );
+        if let Some(root) = &self.cfg.root {
+            // Not in the registry, so anything on disk under this name
+            // is garbage from a crashed drop — never replay it.
+            let dir = root.join(name);
+            if dir.exists() {
+                std::fs::remove_dir_all(&dir)?;
+            }
+        }
+        let c = self.install(name, spec, None)?;
+        if let Err(e) = self.write_manifest_locked() {
+            // Roll back: an unrecorded durable collection would collide
+            // with a future create of the same name.
+            c.dropped.store(true, Ordering::Relaxed);
+            self.collections.write().unwrap().remove(name);
+            if let Some(root) = &self.cfg.root {
+                let _ = std::fs::remove_dir_all(root.join(name));
+            }
+            return Err(e);
+        }
+        Ok(c)
+    }
+
+    /// Drop a collection: unregister it (MANIFEST first), then delete
+    /// its directory. Returns whether it existed. The `default`
+    /// collection cannot be dropped.
+    pub fn drop_collection(&self, name: &str) -> crate::Result<bool> {
+        anyhow::ensure!(
+            name != DEFAULT_COLLECTION,
+            "the {DEFAULT_COLLECTION:?} collection cannot be dropped"
+        );
+        let _admin = self.admin_mu.lock().unwrap();
+        let Some(c) = self.collections.write().unwrap().remove(name) else {
+            return Ok(false);
+        };
+        c.dropped.store(true, Ordering::Relaxed);
+        if self.cfg.root.is_some() {
+            self.write_manifest_locked()?;
+            // After this point a crash leaves at most an orphan
+            // directory, cleared by the next create of this name.
+            let dir = self.cfg.root.as_ref().unwrap().join(name);
+            if dir.exists() {
+                std::fs::remove_dir_all(&dir)?;
+            }
+        }
+        Ok(true)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<Collection>> {
+        self.collections.read().unwrap().get(name).cloned()
+    }
+
+    /// All collections, sorted by name.
+    pub fn list(&self) -> Vec<Arc<Collection>> {
+        let mut out: Vec<Arc<Collection>> =
+            self.collections.read().unwrap().values().cloned().collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.collections.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Checkpoint every durable collection; `None` when no collection
+    /// is durable. Sums `(rows, wal bytes retired)` — the legacy
+    /// whole-server `Persist` semantics.
+    pub fn checkpoint_all(&self) -> crate::Result<Option<(u64, u64)>> {
+        let mut any = false;
+        let (mut rows, mut bytes) = (0u64, 0u64);
+        for c in self.list() {
+            if let Some((r, b)) = c.checkpoint()? {
+                any = true;
+                rows += r;
+                bytes += b;
+            }
+        }
+        Ok(any.then_some((rows, bytes)))
+    }
+
+    /// Rewrite `<root>/MANIFEST` from the current collection set
+    /// (admin lock must be held). No-op without a root.
+    fn write_manifest_locked(&self) -> crate::Result<()> {
+        let Some(root) = &self.cfg.root else {
+            return Ok(());
+        };
+        let entries: Vec<(String, CollectionSpec)> =
+            self.list().iter().map(|c| (c.name.clone(), c.spec)).collect();
+        write_manifest(&manifest_path(root), &entries)
+    }
+}
+
+/// Collection names double as directory names: restrict to a safe
+/// charset and refuse path-meaningful or reserved spellings.
+pub fn validate_name(name: &str) -> crate::Result<()> {
+    anyhow::ensure!(!name.is_empty(), "collection name must not be empty");
+    anyhow::ensure!(
+        name.len() <= MAX_NAME,
+        "collection name of {} bytes exceeds the {MAX_NAME}-byte cap",
+        name.len()
+    );
+    anyhow::ensure!(
+        name.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-' || b == b'.'),
+        "collection name {name:?} has characters outside [A-Za-z0-9._-]"
+    );
+    anyhow::ensure!(
+        name != "." && name != ".." && name != "MANIFEST",
+        "collection name {name:?} is reserved"
+    );
+    Ok(())
+}
+
+fn manifest_path(root: &Path) -> PathBuf {
+    root.join("MANIFEST")
+}
+
+/// Serialize the MANIFEST payload (entries sorted by name for
+/// deterministic bytes):
+///
+/// ```text
+/// magic "CRPMANI1" | u32 n |
+///   n × ( u32 name_len | name | u8 scheme | f64 w | u32 bits | u64 k | u64 seed )
+/// | u32 crc32 (everything after the magic)
+/// ```
+fn write_manifest(path: &Path, entries: &[(String, CollectionSpec)]) -> crate::Result<()> {
+    let mut sorted: Vec<&(String, CollectionSpec)> = entries.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut payload = Vec::with_capacity(16 + entries.len() * 48);
+    payload.extend_from_slice(&(sorted.len() as u32).to_le_bytes());
+    for (name, spec) in sorted {
+        payload.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        payload.extend_from_slice(name.as_bytes());
+        payload.push(spec.scheme.wire_code());
+        payload.extend_from_slice(&spec.w.to_le_bytes());
+        payload.extend_from_slice(&spec.bits().to_le_bytes());
+        payload.extend_from_slice(&(spec.k as u64).to_le_bytes());
+        payload.extend_from_slice(&spec.seed.to_le_bytes());
+    }
+    let mut bytes = Vec::with_capacity(12 + payload.len());
+    bytes.extend_from_slice(MANIFEST_MAGIC);
+    bytes.extend_from_slice(&payload);
+    bytes.extend_from_slice(&crc32_update(0, &payload).to_le_bytes());
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)?;
+    let f = std::fs::File::open(&tmp)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read and CRC-check a MANIFEST. A missing file is an empty registry;
+/// a corrupt one is an error (silently dropping collections would lose
+/// acknowledged data).
+fn read_manifest(path: &Path) -> crate::Result<Vec<(String, CollectionSpec)>> {
+    if !path.is_file() {
+        return Ok(Vec::new());
+    }
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(
+        bytes.len() >= MANIFEST_MAGIC.len() + 8 && &bytes[..8] == MANIFEST_MAGIC,
+        "not a CRP registry MANIFEST: {}",
+        path.display()
+    );
+    let payload = &bytes[8..bytes.len() - 4];
+    let want = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    anyhow::ensure!(
+        crc32_update(0, payload) == want,
+        "MANIFEST checksum mismatch: {}",
+        path.display()
+    );
+    struct Cur<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+    impl<'a> Cur<'a> {
+        fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+            anyhow::ensure!(self.pos + n <= self.buf.len(), "truncated MANIFEST");
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+        fn u32(&mut self) -> crate::Result<u32> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+        fn u64(&mut self) -> crate::Result<u64> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+        fn f64(&mut self) -> crate::Result<f64> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+    }
+    let mut c = Cur {
+        buf: payload,
+        pos: 0,
+    };
+    let n = c.u32()? as usize;
+    anyhow::ensure!(n <= 1 << 16, "implausible MANIFEST entry count {n}");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = c.u32()? as usize;
+        anyhow::ensure!(name_len <= MAX_NAME, "implausible MANIFEST name length");
+        let name = String::from_utf8(c.take(name_len)?.to_vec())?;
+        let scheme_code = c.take(1)?[0];
+        let scheme = Scheme::from_wire_code(scheme_code)
+            .ok_or_else(|| anyhow::anyhow!("unknown MANIFEST scheme code {scheme_code}"))?;
+        let w = c.f64()?;
+        let bits = c.u32()?;
+        let k = c.u64()? as usize;
+        let seed = c.u64()?;
+        let spec = CollectionSpec { scheme, w, k, seed };
+        spec.validate()?;
+        anyhow::ensure!(
+            bits == spec.bits(),
+            "MANIFEST entry {name:?} records {bits} bit(s)/code but its scheme packs {}",
+            spec.bits()
+        );
+        out.push((name, spec));
+    }
+    anyhow::ensure!(c.pos == payload.len(), "trailing MANIFEST bytes");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(scheme: Scheme, w: f64, k: usize, seed: u64) -> CollectionSpec {
+        CollectionSpec { scheme, w, k, seed }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("crp_registry_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_checks_crc() {
+        let dir = temp_dir("manifest");
+        let path = dir.join("MANIFEST");
+        let entries = vec![
+            ("default".to_string(), spec(Scheme::TwoBit, 0.75, 256, 0)),
+            ("uni4".to_string(), spec(Scheme::Uniform, 1.0, 128, 11)),
+            ("signs".to_string(), spec(Scheme::OneBit, 0.0, 512, 7)),
+        ];
+        write_manifest(&path, &entries).unwrap();
+        let mut back = read_manifest(&path).unwrap();
+        back.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut want = entries.clone();
+        want.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(back.len(), 3);
+        for ((bn, bs), (wn, ws)) in back.iter().zip(&want) {
+            assert_eq!(bn, wn);
+            assert!(bs.matches(ws), "{bn}");
+        }
+        // Missing file = empty registry, not an error.
+        assert!(read_manifest(&dir.join("nope")).unwrap().is_empty());
+        // A flipped byte is caught by the CRC.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_manifest(&path).is_err());
+        // Garbage is rejected by the magic.
+        std::fs::write(&path, b"not a manifest").unwrap();
+        assert!(read_manifest(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn collection_names_are_validated() {
+        for ok in ["a", "web-embeddings", "tier_2", "v1.3", "A9"] {
+            validate_name(ok).unwrap_or_else(|e| panic!("{ok:?}: {e}"));
+        }
+        for bad in ["", ".", "..", "MANIFEST", "a/b", "a b", "ü", "x\0"] {
+            assert!(validate_name(bad).is_err(), "{bad:?} must be rejected");
+        }
+        assert!(validate_name(&"n".repeat(MAX_NAME)).is_ok());
+        assert!(validate_name(&"n".repeat(MAX_NAME + 1)).is_err());
+    }
+
+    #[test]
+    fn spec_validation_bounds_shapes() {
+        assert!(spec(Scheme::TwoBit, 0.75, 256, 0).validate().is_ok());
+        assert!(spec(Scheme::OneBit, 0.0, 1, 0).validate().is_ok());
+        assert!(spec(Scheme::Uniform, 1.0, 0, 0).validate().is_err());
+        assert!(spec(Scheme::Uniform, 1.0, (1 << 20) + 1, 0).validate().is_err());
+        assert!(spec(Scheme::Uniform, 0.0, 64, 0).validate().is_err());
+        assert!(spec(Scheme::Uniform, f64::NAN, 64, 0).validate().is_err());
+        assert!(spec(Scheme::WindowOffset, 1e-4, 64, 0).validate().is_err());
+        assert!(spec(Scheme::TwoBit, 1e4, 64, 0).validate().is_err());
+    }
+
+    #[test]
+    fn registry_create_drop_and_isolation_in_memory() {
+        let metrics = Arc::new(Metrics::default());
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 64,
+            seed: 3,
+            ..Default::default()
+        }));
+        let reg = Registry::open(
+            RegistryConfig {
+                root: None,
+                epoch: EpochConfig::default(),
+                batcher: BatcherConfig::default(),
+                checkpoint_every: 0,
+                fsync: FsyncPolicy::Os,
+            },
+            metrics,
+            projector,
+            CodingParams::new(Scheme::TwoBit, 0.75),
+            None,
+        )
+        .unwrap();
+        assert_eq!(reg.len(), 1);
+        let s4 = spec(Scheme::Uniform, 1.0, 48, 9);
+        let c = reg.create("uni4", s4).unwrap();
+        assert_eq!(c.spec.bits(), 4);
+        assert!(reg.create("uni4", s4).is_err());
+        assert!(reg.create("bad/name", spec(Scheme::OneBit, 0.0, 8, 0)).is_err());
+        assert!(reg.drop_collection(DEFAULT_COLLECTION).is_err());
+
+        // Same id in two collections: fully isolated rows.
+        let default = reg.get(DEFAULT_COLLECTION).unwrap();
+        let uni4 = reg.get("uni4").unwrap();
+        default.register("x".into(), vec![1.0; 16]);
+        uni4.register("x".into(), vec![-1.0; 16]);
+        assert_eq!(default.store.len(), 1);
+        assert_eq!(uni4.store.len(), 1);
+        uni4.remove("x".into());
+        assert_eq!(default.store.len(), 1, "remove must not cross collections");
+        assert!(default.store.get("x").is_some());
+
+        assert!(reg.drop_collection("uni4").unwrap());
+        assert!(!reg.drop_collection("uni4").unwrap());
+        assert!(uni4.is_dropped());
+        assert_eq!(reg.len(), 1);
+        // In-memory registries have nothing to checkpoint.
+        assert!(reg.checkpoint_all().unwrap().is_none());
+    }
+}

@@ -1,15 +1,20 @@
-//! TCP server: thread-per-connection loop + request router.
+//! TCP server: bounded thread-per-connection loop + request router over
+//! the collection registry.
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
-use crate::coding::{BatchEncoder, CodingParams, PackedCodes};
-use crate::coordinator::batcher::{BatcherConfig, SketchBatcher};
-use crate::coordinator::durability::{Durability, DurabilityConfig};
+use crate::coding::CodingParams;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::durability::{DurabilityConfig, FsyncPolicy};
 use crate::coordinator::maintenance::{Maintenance, MaintenanceConfig};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::protocol::{self, KnnHit, Request, Response};
+use crate::coordinator::protocol::{self, Request, Response};
+use crate::coordinator::registry::{
+    Collection, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION,
+};
 use crate::coordinator::store::SketchStore;
 use crate::estimator::CollisionEstimator;
 use crate::projection::Projector;
@@ -19,14 +24,28 @@ use crate::scan::EpochConfig;
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub addr: String,
+    /// Coding of the `default` collection (the one legacy no-namespace
+    /// requests hit). Further collections are created at runtime.
     pub coding: CodingParams,
     pub batcher: BatcherConfig,
-    /// Ingest-epoch drain/compaction policy for the scan arena.
+    /// Ingest-epoch drain/compaction policy for every collection arena.
     pub epoch: EpochConfig,
-    /// Snapshot + WAL persistence; `None` runs fully in-memory.
+    /// Legacy single-collection persistence for `default` only
+    /// (`--snapshot`/`--wal-dir`); mutually exclusive with `data_dir`.
     pub durability: Option<DurabilityConfig>,
+    /// Registry root: every collection durable under
+    /// `<data_dir>/<name>/{snap,wal}` + a CRC-checked `MANIFEST`.
+    pub data_dir: Option<PathBuf>,
+    /// WAL fsync policy for `data_dir`-mode collections.
+    pub fsync: FsyncPolicy,
+    /// Logged rows between automatic checkpoints for `data_dir`-mode
+    /// collections (legacy durability carries its own).
+    pub checkpoint_every: u64,
     /// Background drain/checkpoint thread cadence.
     pub maintenance: MaintenanceConfig,
+    /// Concurrent-connection cap; over-limit connections get one clean
+    /// `Error` frame and are closed. 0 = unlimited.
+    pub max_conns: usize,
 }
 
 impl Default for ServerConfig {
@@ -37,107 +56,83 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             epoch: EpochConfig::default(),
             durability: None,
+            data_dir: None,
+            fsync: FsyncPolicy::Os,
+            checkpoint_every: 100_000,
             maintenance: MaintenanceConfig::default(),
+            max_conns: 1024,
         }
     }
 }
 
-/// Fused bulk-ingest state: one encoder (cached offsets + scratch) and
-/// one word buffer, reused across `RegisterBatch` requests.
-struct BulkIngest {
-    encoder: BatchEncoder,
-    words: Vec<u64>,
-}
-
-/// Upper bound on the padded projection workspace (`b·d` f32 cells) one
-/// `RegisterBatch` may demand. Vectors are padded to the batch's max
-/// dimension, so without this cap a frame mixing one huge vector with
-/// many tiny ones would force an allocation quadratic in frame size.
-const MAX_BULK_CELLS: usize = 1 << 24; // 64 MiB of f32 workspace
-
-/// Shared service state.
+/// Shared service state: the collection registry plus direct handles to
+/// the `default` collection (which always exists and serves every
+/// legacy no-namespace request).
 pub struct ServiceState {
+    pub registry: Arc<Registry>,
+    /// The `default` collection (back-compat accessors below alias it).
+    pub default: Arc<Collection>,
+    /// `default`'s store.
     pub store: Arc<SketchStore>,
-    pub batcher: SketchBatcher,
+    /// `default`'s estimator.
     pub estimator: CollisionEstimator,
-    pub metrics: Arc<Metrics>,
+    /// `default`'s sketch width.
     pub k: usize,
-    /// Shared with the batcher worker; `RegisterBatch` projects whole
-    /// batches directly (they need no size-or-deadline coalescing).
-    projector: Arc<Projector>,
-    bulk: Mutex<BulkIngest>,
-    /// WAL + snapshot engine (None = in-memory service).
-    durability: Option<Arc<Durability>>,
+    pub metrics: Arc<Metrics>,
     /// Background drain/checkpoint thread; its `Drop` is the graceful-
     /// shutdown flush.
     _maintenance: Maintenance,
 }
 
 impl ServiceState {
-    /// In-memory service state (no durability). Panics only if
-    /// `cfg.durability` is set and fails to open — use
-    /// [`ServiceState::open`] for durable configurations.
+    /// In-memory service state (no durability). Panics only if the
+    /// configuration fails to open — use [`ServiceState::open`] for
+    /// durable configurations.
     pub fn new(projector: Arc<Projector>, cfg: &ServerConfig) -> Arc<Self> {
         Self::open(projector, cfg).expect("opening service state")
     }
 
-    /// Build the service state: recover the store from `cfg.durability`
-    /// (snapshot bulk-restore + WAL replay) when configured, and spawn
-    /// the background maintenance thread that owns drains, compaction,
-    /// and checkpoints.
+    /// Build the service state: open the registry (recovering every
+    /// collection from `cfg.data_dir`'s MANIFEST, or `default` from
+    /// legacy `cfg.durability`), then spawn the background maintenance
+    /// thread that owns drains, compaction, and checkpoints for all of
+    /// them.
     pub fn open(projector: Arc<Projector>, cfg: &ServerConfig) -> crate::Result<Arc<Self>> {
         let metrics = Arc::new(Metrics::default());
-        let batcher = SketchBatcher::spawn(
-            projector.clone(),
-            cfg.coding.clone(),
-            cfg.batcher.clone(),
+        let registry = Registry::open(
+            RegistryConfig {
+                root: cfg.data_dir.clone(),
+                epoch: cfg.epoch.clone(),
+                batcher: cfg.batcher.clone(),
+                checkpoint_every: cfg.checkpoint_every,
+                fsync: cfg.fsync,
+            },
             metrics.clone(),
-        );
-        let k = batcher.k;
-        // Arena-backed: Knn/TopK run as columnar scans, not map walks,
-        // and registration is epoch-buffered so it never waits behind
-        // them.
-        let store = Arc::new(SketchStore::with_arena_config(
-            k,
-            cfg.coding.bits_per_code(),
-            cfg.epoch.clone(),
-        ));
-        let durability = match &cfg.durability {
-            Some(dcfg) => {
-                let (d, stats) = Durability::open(dcfg.clone(), &store)?;
-                metrics
-                    .registered
-                    .fetch_add(stats.live, std::sync::atomic::Ordering::Relaxed);
-                Some(Arc::new(d))
-            }
-            None => None,
-        };
-        let maintenance = Maintenance::spawn(
-            store.clone(),
-            durability.clone(),
-            metrics.clone(),
-            cfg.maintenance.clone(),
-        );
-        Ok(Arc::new(ServiceState {
-            estimator: CollisionEstimator::new(cfg.coding.clone()),
-            batcher,
-            metrics,
-            k,
-            bulk: Mutex::new(BulkIngest {
-                encoder: BatchEncoder::new(cfg.coding.clone(), k),
-                words: Vec::new(),
-            }),
             projector,
-            store,
-            durability,
+            cfg.coding.clone(),
+            cfg.durability.clone(),
+        )?;
+        let default = registry
+            .get(DEFAULT_COLLECTION)
+            .expect("registry always installs the default collection");
+        let maintenance =
+            Maintenance::spawn(registry.clone(), metrics.clone(), cfg.maintenance.clone());
+        Ok(Arc::new(ServiceState {
+            store: default.store.clone(),
+            estimator: default.estimator.clone(),
+            k: default.k,
+            default,
+            registry,
+            metrics,
             _maintenance: maintenance,
         }))
     }
 
-    /// As [`ServiceState::new`], seeding the store from a snapshot file
-    /// (see [`crate::coordinator::durability::snapshot`]) via one bulk
-    /// restore — no per-sketch epoch-buffer trips. The snapshot's
-    /// sketch shape must match the projector/coding configuration.
+    /// As [`ServiceState::new`], seeding the `default` collection from
+    /// a snapshot file (see [`crate::coordinator::durability::snapshot`])
+    /// via one bulk restore — no per-sketch epoch-buffer trips. The
+    /// snapshot's sketch shape must match the projector/coding
+    /// configuration.
     pub fn with_snapshot(
         projector: Arc<Projector>,
         cfg: &ServerConfig,
@@ -149,6 +144,7 @@ impl ServiceState {
         // `registered`) on top.
         let cfg = ServerConfig {
             durability: None,
+            data_dir: None,
             ..cfg.clone()
         };
         let state = Self::open(projector, &cfg)?;
@@ -166,261 +162,161 @@ impl ServiceState {
                 want_bits
             );
             let n = crate::coordinator::durability::snapshot::restore_into(&state.store, &img)?;
-            state
-                .metrics
-                .registered
-                .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+            state.metrics.registered.fetch_add(n, Ordering::Relaxed);
         }
         Ok(state)
     }
 
-    fn estimate_response(&self, collisions: usize) -> Response {
-        let rho = self.estimator.estimate_from_count(collisions, self.k);
-        let v = self
-            .estimator
-            .params
-            .scheme
-            .variance_factor(rho.min(0.999), self.estimator.params.w);
-        Response::Estimate {
-            rho,
-            std_err: (v / self.k as f64).sqrt(),
-            p_hat: collisions as f64 / self.k as f64,
-        }
-    }
-
-    /// Map scan results to wire hits (ρ̂ from the collision count).
-    fn to_knn_hits(&self, hits: Vec<crate::scan::ScanHit>) -> Vec<KnnHit> {
-        hits.into_iter()
-            .map(|h| KnnHit {
-                id: h.id,
-                rho: self.estimator.estimate_from_count(h.collisions, self.k),
-            })
-            .collect()
-    }
-
-    /// Exact top-`n` hits for one query sketch, ranked
-    /// `(collisions desc, id asc)`. The service store is always
-    /// arena-backed (both constructors build it that way), so the scan
-    /// engine is the one authoritative ranking path.
-    fn topk_hits(&self, q: &PackedCodes, n: usize) -> Vec<KnnHit> {
-        let arena = self.store.arena().expect("service store is arena-backed");
-        self.to_knn_hits(arena.scan_topk(q, n, 0))
-    }
-
-    /// Store one sketch, WAL-first when durability is on: the record is
-    /// flushed before the store mutates, so an acknowledged `Register`
-    /// survives `kill -9`. An `Err` means nothing was applied.
-    fn durable_put(&self, id: &str, codes: PackedCodes) -> crate::Result<()> {
-        match &self.durability {
-            Some(d) => d.log_put(id, &codes, || self.store.put(id.to_string(), codes.clone())),
-            None => {
-                self.store.put(id.to_string(), codes);
-                Ok(())
-            }
-        }
-    }
-
-    /// Handle one request (the router).
+    /// Handle one request (the router). Legacy frames carry no
+    /// collection and route to `default`; `Scoped` frames name one.
     pub fn handle(&self, req: Request) -> Response {
         match req {
+            Request::Scoped { collection, inner } => self.handle_in(Some(&collection), *inner),
+            other => self.handle_in(None, other),
+        }
+    }
+
+    /// Resolve the target collection of a data-path request.
+    #[allow(clippy::result_large_err)] // the Err is the wire Response itself
+    fn resolve(&self, collection: Option<&str>) -> Result<Arc<Collection>, Response> {
+        let name = collection.unwrap_or(DEFAULT_COLLECTION);
+        self.registry.get(name).ok_or_else(|| Response::Error {
+            message: format!(
+                "unknown collection {name:?} (create it with `crp collection create`)"
+            ),
+        })
+    }
+
+    fn handle_in(&self, collection: Option<&str>, req: Request) -> Response {
+        match req {
             Request::Ping => Response::Pong,
-            Request::Stats => {
-                let mut st = self.metrics.snapshot();
-                if let Some(arena) = self.store.arena() {
-                    st.pending_rows = arena.pending_rows() as u64;
-                    st.drains = arena.drains();
-                    st.tombstones = arena.tombstones() as u64;
-                    st.kernel = arena.kernel_kind().label().to_string();
-                }
-                if let Some(d) = &self.durability {
-                    st.wal_records = d.wal_records();
-                    st.wal_bytes = d.wal_bytes();
-                    st.last_checkpoint_rows = d.last_checkpoint_rows();
-                }
-                Response::Stats(st)
-            }
-            Request::Register { id, vector } => {
-                let t0 = Instant::now();
-                match self.batcher.sketch(vector) {
-                    Ok(codes) => match self.durable_put(&id, codes) {
-                        Ok(()) => {
-                            self.metrics
-                                .registered
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            self.metrics
-                                .register_latency
-                                .record(t0.elapsed().as_micros() as u64);
-                            Response::Registered { id }
-                        }
-                        Err(e) => Response::Error {
-                            message: format!("register failed: {e}"),
-                        },
-                    },
-                    Err(e) => Response::Error {
-                        message: format!("sketch failed: {e}"),
-                    },
-                }
-            }
-            Request::Remove { id } => {
-                let result = match &self.durability {
-                    Some(d) => d.log_remove(&id, || self.store.remove(&id)),
-                    None => Ok(self.store.remove(&id)),
+            Request::Stats => self.stats(),
+            Request::Scoped { .. } => Response::Error {
+                message: "nested Scoped request".to_string(),
+            },
+            Request::CreateCollection {
+                name,
+                scheme,
+                w,
+                bits,
+                k,
+                seed,
+            } => {
+                let spec = CollectionSpec {
+                    scheme,
+                    w,
+                    k: k as usize,
+                    seed,
                 };
-                match result {
-                    Ok(existed) => Response::Removed { existed },
+                if bits != 0 && bits != spec.bits() {
+                    return Response::Error {
+                        message: format!(
+                            "scheme {} at w {} packs {} bit(s)/code, not {bits}",
+                            scheme.label(),
+                            w,
+                            spec.bits()
+                        ),
+                    };
+                }
+                match self.registry.create(&name, spec) {
+                    Ok(_) => Response::CollectionCreated { name },
                     Err(e) => Response::Error {
-                        message: format!("remove failed: {e}"),
+                        message: format!("create collection failed: {e}"),
                     },
                 }
             }
-            Request::Persist => match &self.durability {
-                Some(d) => match d.checkpoint(&self.store) {
-                    Ok((rows, wal_bytes)) => Response::Persisted { rows, wal_bytes },
+            Request::DropCollection { name } => match self.registry.drop_collection(&name) {
+                Ok(existed) => Response::CollectionDropped { existed },
+                Err(e) => Response::Error {
+                    message: format!("drop collection failed: {e}"),
+                },
+            },
+            Request::ListCollections => Response::Collections {
+                collections: self.registry.list().iter().map(|c| c.info()).collect(),
+            },
+            // Legacy whole-server Persist checkpoints every durable
+            // collection; the scoped form checkpoints one.
+            Request::Persist => match collection {
+                Some(_) => match self.resolve(collection) {
+                    Ok(c) => c.persist(),
+                    Err(resp) => resp,
+                },
+                None => match self.registry.checkpoint_all() {
+                    Ok(Some((rows, wal_bytes))) => Response::Persisted { rows, wal_bytes },
+                    Ok(None) => Response::Error {
+                        message: "durability is not enabled (serve with --data-dir or \
+                                  --snapshot/--wal-dir)"
+                            .to_string(),
+                    },
                     Err(e) => Response::Error {
                         message: format!("checkpoint failed: {e}"),
                     },
                 },
-                None => Response::Error {
-                    message: "durability is not enabled (serve with --snapshot/--wal-dir)"
-                        .to_string(),
-                },
             },
-            Request::Estimate { a, b } => {
-                let (sa, sb) = (self.store.get(&a), self.store.get(&b));
-                match (sa, sb) {
-                    (Some(sa), Some(sb)) => {
-                        self.metrics
-                            .estimates
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        let collisions = crate::coding::collision_count_packed(&sa, &sb);
-                        self.estimate_response(collisions)
-                    }
-                    (None, _) => Response::Error {
-                        message: format!("unknown id {a:?}"),
-                    },
-                    (_, None) => Response::Error {
-                        message: format!("unknown id {b:?}"),
-                    },
-                }
-            }
-            Request::EstimateVec { id, vector } => {
-                let Some(stored) = self.store.get(&id) else {
-                    return Response::Error {
-                        message: format!("unknown id {id:?}"),
-                    };
-                };
-                match self.batcher.sketch(vector) {
-                    Ok(q) => {
-                        self.metrics
-                            .estimates
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        let collisions = crate::coding::collision_count_packed(&q, &stored);
-                        self.estimate_response(collisions)
-                    }
-                    Err(e) => Response::Error {
-                        message: format!("sketch failed: {e}"),
-                    },
-                }
-            }
-            Request::Knn { vector, n } => match self.batcher.sketch(vector) {
-                Ok(q) => {
-                    self.metrics
-                        .knn_queries
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    Response::Knn {
-                        hits: self.topk_hits(&q, n as usize),
-                    }
-                }
-                Err(e) => Response::Error {
-                    message: format!("sketch failed: {e}"),
-                },
+            Request::Register { id, vector } => match self.resolve(collection) {
+                Ok(c) => c.register(id, vector),
+                Err(resp) => resp,
             },
-            Request::TopK { vectors, n } => {
-                let mut queries = Vec::with_capacity(vectors.len());
-                for vector in vectors {
-                    match self.batcher.sketch(vector) {
-                        Ok(q) => queries.push(q),
-                        Err(e) => {
-                            return Response::Error {
-                                message: format!("sketch failed: {e}"),
-                            }
-                        }
-                    }
-                }
-                self.metrics
-                    .knn_queries
-                    .fetch_add(queries.len() as u64, std::sync::atomic::Ordering::Relaxed);
-                let arena = self.store.arena().expect("service store is arena-backed");
-                let results = arena
-                    .scan_topk_batch(&queries, n as usize, 0)
-                    .into_iter()
-                    .map(|hits| self.to_knn_hits(hits))
-                    .collect();
-                Response::TopK { results }
-            }
-            Request::RegisterBatch { ids, vectors } => self.register_batch(ids, vectors),
+            Request::RegisterBatch { ids, vectors } => match self.resolve(collection) {
+                Ok(c) => c.register_batch(ids, vectors),
+                Err(resp) => resp,
+            },
+            Request::Remove { id } => match self.resolve(collection) {
+                Ok(c) => c.remove(id),
+                Err(resp) => resp,
+            },
+            Request::Estimate { a, b } => match self.resolve(collection) {
+                Ok(c) => c.estimate(a, b),
+                Err(resp) => resp,
+            },
+            Request::EstimateVec { id, vector } => match self.resolve(collection) {
+                Ok(c) => c.estimate_vec(id, vector),
+                Err(resp) => resp,
+            },
+            Request::Knn { vector, n } => match self.resolve(collection) {
+                Ok(c) => c.knn(vector, n),
+                Err(resp) => resp,
+            },
+            Request::TopK { vectors, n } => match self.resolve(collection) {
+                Ok(c) => c.topk(vectors, n),
+                Err(resp) => resp,
+            },
         }
     }
 
-    /// The fused bulk-ingest path: one batched projection, one
-    /// encode+pack pass into a reused word buffer, one bulk arena
-    /// insert. Sketches are byte-identical to per-vector `Register`
-    /// (same projector, same coding, same packing).
-    fn register_batch(&self, ids: Vec<String>, vectors: Vec<Vec<f32>>) -> Response {
-        if ids.len() != vectors.len() {
-            return Response::Error {
-                message: format!(
-                    "ids/vectors length mismatch ({} vs {})",
-                    ids.len(),
-                    vectors.len()
-                ),
-            };
-        }
-        if ids.is_empty() {
-            return Response::RegisteredBatch { count: 0 };
-        }
-        let t0 = Instant::now();
-        let b = vectors.len();
-        let d = vectors.iter().map(|v| v.len()).max().unwrap_or(1).max(1);
-        if b.saturating_mul(d) > MAX_BULK_CELLS {
-            return Response::Error {
-                message: format!(
-                    "batch of {b} vectors padded to dim {d} exceeds the bulk \
-                     workspace limit of {MAX_BULK_CELLS} cells"
-                ),
-            };
-        }
-        let x = self
-            .projector
-            .project_ragged(vectors.iter().map(|v| v.as_slice()), b);
-        let stored = {
-            let mut bulk = self.bulk.lock().unwrap();
-            let BulkIngest { encoder, words } = &mut *bulk;
-            encoder.encode_pack_batch_into(&x, b, words);
-            let words: &[u64] = words;
-            match &self.durability {
-                // One WAL record, one flush, for the whole batch.
-                Some(d) => d.log_put_rows(&ids, words, || self.store.put_rows(&ids, words)),
-                None => self.store.put_rows(&ids, words),
+    /// Aggregate stats across the registry: arena and WAL counters are
+    /// summed over collections; the kernel label is `default`'s (every
+    /// collection picks its own tier by bit width).
+    fn stats(&self) -> Response {
+        let mut st = self.metrics.snapshot();
+        let collections = self.registry.list();
+        st.collections = collections.len() as u64;
+        for c in &collections {
+            if let Some(arena) = c.store.arena() {
+                st.pending_rows += arena.pending_rows() as u64;
+                st.drains += arena.drains();
+                st.tombstones += arena.tombstones() as u64;
             }
-        };
-        match stored {
-            Ok(()) => {
-                use std::sync::atomic::Ordering::Relaxed;
-                self.metrics.registered.fetch_add(b as u64, Relaxed);
-                self.metrics.batches_executed.fetch_add(1, Relaxed);
-                self.metrics.vectors_projected.fetch_add(b as u64, Relaxed);
-                // One amortized sample per vector, so the percentiles
-                // weight bulk and per-request registrations equally.
-                self.metrics
-                    .register_latency
-                    .record_n((t0.elapsed().as_micros() as u64 / b as u64).max(1), b as u64);
-                Response::RegisteredBatch { count: b as u64 }
+            if let Some(d) = &c.durability {
+                st.wal_records += d.wal_records();
+                st.wal_bytes += d.wal_bytes();
+                st.last_checkpoint_rows += d.last_checkpoint_rows();
             }
-            Err(e) => Response::Error {
-                message: format!("bulk register failed: {e}"),
-            },
         }
+        if let Some(arena) = self.default.store.arena() {
+            st.kernel = arena.kernel_kind().label().to_string();
+        }
+        Response::Stats(st)
+    }
+}
+
+/// Decrements the connection gauge when a connection thread exits (or
+/// when spawning it fails).
+struct ConnTicket(Arc<Metrics>);
+
+impl Drop for ConnTicket {
+    fn drop(&mut self) {
+        self.0.connections.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -437,22 +333,47 @@ pub fn serve(
         let _ = tx.send(addr);
     }
     let state = ServiceState::open(projector, &cfg)?;
-    if cfg.durability.is_some() {
+    if cfg.durability.is_some() || cfg.data_dir.is_some() {
         eprintln!(
-            "durability on: {} sketches recovered from snapshot + WAL",
-            state.store.len()
+            "durability on: {} collection(s), {} sketch(es) recovered from disk",
+            state.registry.len(),
+            state
+                .registry
+                .list()
+                .iter()
+                .map(|c| c.store.len())
+                .sum::<usize>()
         );
     }
     for stream in listener.incoming() {
         let stream = stream?;
+        if cfg.max_conns > 0
+            && state.metrics.connections.load(Ordering::Relaxed) >= cfg.max_conns as u64
+        {
+            // One clean Error frame, then close — the client sees why
+            // instead of a silent reset.
+            let _ = reject_connection(stream, cfg.max_conns);
+            continue;
+        }
+        state.metrics.connections.fetch_add(1, Ordering::Relaxed);
+        let ticket = ConnTicket(state.metrics.clone());
         let state = state.clone();
         std::thread::Builder::new()
             .name("crp-conn".into())
             .spawn(move || {
+                let _ticket = ticket;
                 let _ = handle_connection(stream, state);
             })?;
     }
     Ok(())
+}
+
+fn reject_connection(stream: TcpStream, max_conns: usize) -> crate::Result<()> {
+    let mut writer = std::io::BufWriter::new(stream);
+    let resp = Response::Error {
+        message: format!("connection limit reached ({max_conns}); retry later"),
+    };
+    protocol::write_frame(&mut writer, &resp.encode())
 }
 
 fn handle_connection(stream: TcpStream, state: Arc<ServiceState>) -> crate::Result<()> {
@@ -664,6 +585,7 @@ mod tests {
         match s.handle(Request::Stats) {
             Response::Stats(st) => {
                 assert_eq!(st.registered, 40);
+                assert_eq!(st.collections, 1);
                 assert!(!st.kernel.is_empty(), "stats must name the scan kernel");
             }
             other => panic!("unexpected {other:?}"),
@@ -682,6 +604,104 @@ mod tests {
                 assert_eq!(st.registered, 1);
                 assert!(st.vectors_projected >= 1);
             }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scoped_requests_route_to_their_collection() {
+        let s = state(128);
+        // Scoped to default ≡ unscoped.
+        let r = s.handle(Request::Scoped {
+            collection: "default".into(),
+            inner: Box::new(Request::Register {
+                id: "x".into(),
+                vector: vec![1.0; 16],
+            }),
+        });
+        assert!(matches!(r, Response::Registered { .. }), "{r:?}");
+        assert!(s.store.get("x").is_some());
+        // Unknown collections are a clean error on every data path.
+        for inner in [
+            Request::Register {
+                id: "y".into(),
+                vector: vec![1.0; 4],
+            },
+            Request::Knn {
+                vector: vec![1.0; 4],
+                n: 1,
+            },
+            Request::Persist,
+        ] {
+            match s.handle(Request::Scoped {
+                collection: "ghost".into(),
+                inner: Box::new(inner),
+            }) {
+                Response::Error { message } => {
+                    assert!(message.contains("ghost"), "{message}")
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Admin requests are not collection-scoped... but scoping Ping
+        // is harmless; scoping ListCollections still answers.
+        match s.handle(Request::Scoped {
+            collection: "default".into(),
+            inner: Box::new(Request::ListCollections),
+        }) {
+            Response::Collections { collections } => {
+                assert_eq!(collections.len(), 1);
+                assert_eq!(collections[0].name, "default");
+                assert_eq!(collections[0].bits, 2);
+                assert!(!collections[0].durable);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn create_collection_validates_bits_cross_check() {
+        let s = state(64);
+        match s.handle(Request::CreateCollection {
+            name: "u4".into(),
+            scheme: crate::coding::Scheme::Uniform,
+            w: 1.0,
+            bits: 2, // h_w at w=1 packs 4 bits, not 2
+            k: 32,
+            seed: 1,
+        }) {
+            Response::Error { message } => {
+                assert!(message.contains("4 bit"), "{message}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::CreateCollection {
+            name: "u4".into(),
+            scheme: crate::coding::Scheme::Uniform,
+            w: 1.0,
+            bits: 0, // 0 = derive
+            k: 32,
+            seed: 1,
+        }) {
+            Response::CollectionCreated { name } => assert_eq!(name, "u4"),
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::Stats) {
+            Response::Stats(st) => assert_eq!(st.collections, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::DropCollection { name: "u4".into() }) {
+            Response::CollectionDropped { existed } => assert!(existed),
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::DropCollection { name: "u4".into() }) {
+            Response::CollectionDropped { existed } => assert!(!existed),
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::DropCollection {
+            name: "default".into(),
+        }) {
+            Response::Error { message } => assert!(message.contains("default"), "{message}"),
             other => panic!("unexpected {other:?}"),
         }
     }

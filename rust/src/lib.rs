@@ -34,21 +34,29 @@
 //!   code arena swept by runtime-dispatched collision kernels (AVX2 →
 //!   SSE2 → portable SWAR, all byte-identical; `CRP_SCAN_KERNEL=swar`
 //!   forces the portable tier) into an exact top-k selection, sharded
-//!   across threads. Registration is epoch-buffered
-//!   ([`scan::EpochArena`]): writers land in a pending buffer beside the
-//!   sealed arena and never take the write lock scans read behind, with
-//!   bulk drains and tombstone-aware compaction per epoch — owned by a
-//!   background maintenance thread ([`coordinator::maintenance`]), not
-//!   the threshold-crossing writer. The serving state is durable
-//!   ([`coordinator::durability`]): acknowledged mutations append to a
-//!   checksummed epoch WAL (`CRPWAL1`) before the store mutates, and
+//!   across threads. The coordinator is multi-collection
+//!   ([`coordinator::registry`]): one process serves many named
+//!   collections, each bundling its own projector, batcher, coding
+//!   scheme, arena-backed store, and durability — the paper's point
+//!   that the coding choice is per-workload, made operational
+//!   (`CreateCollection`/`DropCollection`/`ListCollections` at runtime,
+//!   legacy no-namespace frames routed to `default` byte-identically).
+//!   Registration is epoch-buffered ([`scan::EpochArena`]): writers
+//!   land in a pending buffer beside the sealed arena and never take
+//!   the write lock scans read behind, with bulk drains and
+//!   tombstone-aware compaction per epoch — owned by one background
+//!   maintenance thread ([`coordinator::maintenance`]) multiplexing
+//!   every collection, not the threshold-crossing writer. The serving
+//!   state is durable ([`coordinator::durability`]): acknowledged
+//!   mutations append to a checksummed epoch WAL (`CRPWAL1`, fsync
+//!   policy `always|os|group:<ms>`) before the store mutates, and
 //!   checkpoints serialize the sealed arena verbatim (`CRPSNAP2`
 //!   arena-image snapshots, written with no store lock held) then
-//!   truncate the WAL; restart bulk-restores the image through
-//!   `put_rows` and replays the WAL tail, answering byte-identically to
-//!   the pre-crash server (`crp serve --snapshot --wal-dir
-//!   --checkpoint-every`, `crp recover`). Python never runs on the
-//!   request path.
+//!   truncate the WAL; a CRC-checked `MANIFEST` under `--data-dir`
+//!   records every collection's coding config so restart rebuilds the
+//!   whole registry byte-identically to the pre-crash server
+//!   (`crp serve --data-dir`, `crp collection create|drop|list`,
+//!   `crp recover`). Python never runs on the request path.
 //!
 //! ## Analysis stack
 //!

@@ -26,14 +26,20 @@ mod args {
 
     pub struct Args {
         pub cmd: String,
+        /// Optional bare word after the command (`crp collection list`).
+        pub sub: Option<String>,
         flags: HashMap<String, String>,
         bools: std::collections::HashSet<String>,
     }
 
     impl Args {
         pub fn parse(bool_flags: &[&str]) -> anyhow::Result<Self> {
-            let mut argv = std::env::args().skip(1);
+            let mut argv = std::env::args().skip(1).peekable();
             let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+            let sub = match argv.peek() {
+                Some(a) if !a.starts_with("--") => argv.next(),
+                _ => None,
+            };
             let mut flags = HashMap::new();
             let mut bools = std::collections::HashSet::new();
             while let Some(a) = argv.next() {
@@ -50,7 +56,12 @@ mod args {
                     flags.insert(name, v);
                 }
             }
-            Ok(Args { cmd, flags, bools })
+            Ok(Args {
+                cmd,
+                sub,
+                flags,
+                bools,
+            })
         }
 
         pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
@@ -92,12 +103,15 @@ fn parse_scheme(s: &str) -> crp::Result<Scheme> {
     })
 }
 
-/// Build the durability config from `--snapshot` / `--wal-dir`; either
-/// flag alone implies the other next to it (`<wal-dir>/snapshot.bin`,
-/// `<snapshot>.wal/`). Neither flag means no durability.
+/// Build the legacy single-collection durability config from
+/// `--snapshot` / `--wal-dir`; either flag alone implies the other next
+/// to it (`<wal-dir>/snapshot.bin`, `<snapshot>.wal/`). Neither flag
+/// means no legacy durability (use `--data-dir` for the per-collection
+/// layout).
 fn durability_config(
     a: &args::Args,
     checkpoint_every: u64,
+    fsync: crp::coordinator::FsyncPolicy,
 ) -> crp::Result<Option<crp::coordinator::DurabilityConfig>> {
     use std::path::PathBuf;
     let snapshot = a.get_opt("snapshot").map(PathBuf::from);
@@ -116,13 +130,14 @@ fn durability_config(
         snapshot,
         wal_dir,
         checkpoint_every,
+        fsync,
     }))
 }
 
 const HELP: &str = "\
 crp — Coding for Random Projections (ICML 2014) reproduction
 
-USAGE: crp <command> [--flag value ...]
+USAGE: crp <command> [subcommand] [--flag value ...]
 
 COMMANDS:
   figures      --fig N --scale S --out DIR      regenerate paper figures (default: all)
@@ -130,15 +145,30 @@ COMMANDS:
   lsh-eval     --corpus N --dim D --tables T --k-per-table K --queries Q
   serve        --addr A --k K --scheme S --w W [--pjrt]
                [--drain-threshold N]  ingest-epoch size before a bulk fold
-               [--snapshot F --wal-dir D --checkpoint-every N]
-                 durability: recover from F + D on start, append every
-                 mutation to the WAL, checkpoint each N logged rows
+               [--max-conns N]        concurrent-connection cap (0 = unlimited)
+               [--data-dir DIR]       durable multi-collection root: every
+                 collection persists under DIR/<name>/{snap,wal} and a
+                 CRC-checked DIR/MANIFEST records each collection's coding
+                 config, so restart rebuilds the whole registry
+               [--snapshot F --wal-dir D]  legacy single-collection
+                 durability for `default` only (exclusive with --data-dir)
+               [--checkpoint-every N] checkpoint each N logged rows
                  (0 = only explicit Persist requests / shutdown)
+               [--fsync always|os|group:<ms>]  WAL durability policy
+  collection   create --addr A --name N --scheme S --w W --k K --seed X
+               drop   --addr A --name N
+               list   --addr A
+               manage named collections on a running server; each owns
+               its own (scheme, w, k, seed) coding choice
+  register     --addr A [--collection C] --id I (--vec \"f,f,...\" | --dim D --vec-seed X)
+               register one vector over the wire (namespaced)
   recover      --snapshot F --wal-dir D   replay a snapshot + WAL offline
                and print recovery stats (rows, records, torn tail)
-  bench-serve  --addr A --n N --dim D --connections C
+  bench-serve  --addr A --n N --dim D --connections C [--collection C]
   topk         --sketches N --k K --scheme S --w W --top T --queries Q --threads P --rho R
-               scan-engine demo: exact top-k over a packed-code arena
+               scan-engine demo: exact top-k over a packed-code arena;
+               with --addr [--collection C] it instead sends random TopK
+               queries to a running server (namespaced)
   artifacts                                      list + compile-check AOT artifacts
   estimate     --rho R --k K --w W --dim D       one-shot estimation demo
   bit-budget   --rho R                            optimized V per bit budget
@@ -153,13 +183,28 @@ SCAN KERNELS:
   lock, and each epoch folds in bulk at --drain-threshold pending rows
   (folded by a background maintenance thread, not the crossing writer).
 
+COLLECTIONS:
+  One server process serves many named collections, each with its own
+  coding choice — the paper's point that the scheme is a per-workload
+  decision. Legacy clients (no namespace) hit the `default` collection,
+  whose coding comes from the serve flags. `crp collection create` adds
+  more at runtime; with --data-dir they are durable and survive restarts
+  via the MANIFEST. Same ids in different collections never collide.
+
 DURABILITY:
-  With --snapshot/--wal-dir, every acknowledged Register/RegisterBatch/
-  Remove is appended to a checksummed WAL before the store mutates, and
-  checkpoints rewrite the snapshot as a verbatim arena image (CRPSNAP2)
-  then truncate the WAL — restart replays snapshot + WAL tail through
-  the bulk ingest path and answers byte-identically to the pre-crash
-  server. Checkpoints never hold a store lock across disk writes.
+  With --data-dir (or legacy --snapshot/--wal-dir), every acknowledged
+  Register/RegisterBatch/Remove is appended to a checksummed WAL before
+  the store mutates, and checkpoints rewrite the snapshot as a verbatim
+  arena image (CRPSNAP2) then truncate the WAL — restart replays
+  snapshot + WAL tail through the bulk ingest path and answers
+  byte-identically to the pre-crash server. Checkpoints never hold a
+  store lock across disk writes.
+  --fsync sets when WAL records reach stable storage: `os` (default)
+  flushes to the page cache per record — survives kill -9, not power
+  loss; `always` fsyncs per record — full durability, one disk round
+  trip per op; `group:<ms>` flushes per record and fsyncs at most once
+  per interval — bounds power-loss exposure to one interval at near-`os`
+  throughput.
 ";
 
 fn main() -> crp::Result<()> {
@@ -230,6 +275,9 @@ fn main() -> crp::Result<()> {
             let scheme = parse_scheme(&a.get_str("scheme", "two-bit"))?;
             let w: f64 = a.get("w", 0.75)?;
             let drain_threshold: usize = a.get("drain-threshold", 4096)?;
+            let max_conns: usize = a.get("max-conns", 1024)?;
+            let fsync = crp::coordinator::FsyncPolicy::parse(&a.get_str("fsync", "os"))?;
+            let checkpoint_every: u64 = a.get("checkpoint-every", 100_000u64)?;
             let cfg = ProjectionConfig {
                 k,
                 seed: 0,
@@ -246,18 +294,34 @@ fn main() -> crp::Result<()> {
             let kernel = crp::scan::CollisionKernel::select(coding.bits_per_code());
             eprintln!(
                 "serving on {addr} (k={k}, scheme={}, w={w}, pjrt_active={}, \
-                 scan_kernel={}, drain_threshold={drain_threshold})",
+                 scan_kernel={}, drain_threshold={drain_threshold}, \
+                 max_conns={max_conns})",
                 scheme.label(),
                 projector.pjrt_active(),
                 kernel.kind().label()
             );
-            let durability = durability_config(&a, a.get("checkpoint-every", 100_000u64)?)?;
+            let data_dir = a.get_opt("data-dir").map(std::path::PathBuf::from);
+            let durability = durability_config(&a, checkpoint_every, fsync)?;
+            if let Some(root) = &data_dir {
+                anyhow::ensure!(
+                    durability.is_none(),
+                    "--data-dir and --snapshot/--wal-dir are mutually exclusive"
+                );
+                eprintln!(
+                    "durability: data dir {} (per-collection snap+wal, MANIFEST, \
+                     checkpoint every {} rows, fsync {})",
+                    root.display(),
+                    checkpoint_every,
+                    fsync.label()
+                );
+            }
             if let Some(d) = &durability {
                 eprintln!(
-                    "durability: snapshot {} + wal {} (checkpoint every {} rows)",
+                    "durability: snapshot {} + wal {} (checkpoint every {} rows, fsync {})",
                     d.snapshot.display(),
                     d.wal_dir.display(),
-                    d.checkpoint_every
+                    d.checkpoint_every,
+                    d.fsync.label()
                 );
             }
             let server_cfg = crp::coordinator::ServerConfig {
@@ -268,12 +332,100 @@ fn main() -> crp::Result<()> {
                     ..Default::default()
                 },
                 durability,
+                data_dir,
+                fsync,
+                checkpoint_every,
+                max_conns,
                 ..Default::default()
             };
             crp::coordinator::serve(Arc::new(projector), server_cfg, None)?;
         }
+        "collection" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            match a.sub.as_deref() {
+                Some("create") => {
+                    let name = a.get_str("name", "");
+                    anyhow::ensure!(!name.is_empty(), "collection create needs --name");
+                    let scheme = parse_scheme(&a.get_str("scheme", "two-bit"))?;
+                    let w: f64 = a.get("w", 0.75)?;
+                    let k: u64 = a.get("k", 256)?;
+                    let seed: u64 = a.get("seed", 0)?;
+                    client.create_collection(&name, scheme, w, k, seed)?;
+                    println!(
+                        "created collection {name:?} (scheme={}, w={w}, k={k}, seed={seed})",
+                        scheme.label()
+                    );
+                }
+                Some("drop") => {
+                    let name = a.get_str("name", "");
+                    anyhow::ensure!(!name.is_empty(), "collection drop needs --name");
+                    let existed = client.drop_collection(&name)?;
+                    println!(
+                        "{}",
+                        if existed {
+                            format!("dropped collection {name:?}")
+                        } else {
+                            format!("collection {name:?} did not exist")
+                        }
+                    );
+                }
+                Some("list") | None => {
+                    let collections = client.list_collections()?;
+                    println!(
+                        "{:<24} {:<8} {:>8} {:>6} {:>8} {:>12} {:>10} {:>8}",
+                        "name", "scheme", "w", "bits", "k", "seed", "rows", "durable"
+                    );
+                    for c in collections {
+                        println!(
+                            "{:<24} {:<8} {:>8.3} {:>6} {:>8} {:>12} {:>10} {:>8}",
+                            c.name,
+                            c.scheme.label(),
+                            c.w,
+                            c.bits,
+                            c.k,
+                            c.seed,
+                            c.rows,
+                            if c.durable { "yes" } else { "no" }
+                        );
+                    }
+                }
+                Some(other) => anyhow::bail!(
+                    "unknown collection subcommand {other:?} (create|drop|list)"
+                ),
+            }
+        }
+        "register" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let id = a.get_str("id", "");
+            anyhow::ensure!(!id.is_empty(), "register needs --id");
+            let collection = a.get_opt("collection").map(str::to_string);
+            let vector: Vec<f32> = match a.get_opt("vec") {
+                Some(csv) => csv
+                    .split(',')
+                    .map(|t| {
+                        t.trim()
+                            .parse::<f32>()
+                            .map_err(|e| anyhow::anyhow!("bad --vec component {t:?}: {e}"))
+                    })
+                    .collect::<crp::Result<_>>()?,
+                None => {
+                    let dim: usize = a.get("dim", 128)?;
+                    let seed: u64 = a.get("vec-seed", 1)?;
+                    let mut ns = crp::mathx::NormalSampler::new(seed, 1);
+                    (0..dim).map(|_| ns.next() as f32).collect()
+                }
+            };
+            let dim = vector.len();
+            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            client.register_in(collection.as_deref(), &id, vector)?;
+            println!(
+                "registered {id:?} (dim {dim}) in collection {:?}",
+                collection.as_deref().unwrap_or("default")
+            );
+        }
         "recover" => {
-            let Some(cfg) = durability_config(&a, 0)? else {
+            let Some(cfg) = durability_config(&a, 0, crp::coordinator::FsyncPolicy::Os)? else {
                 anyhow::bail!("recover needs --snapshot and/or --wal-dir");
             };
             let (store, k, bits, st) =
@@ -305,19 +457,28 @@ fn main() -> crp::Result<()> {
             let n: usize = a.get("n", 1000)?;
             let dim: usize = a.get("dim", 128)?;
             let connections: usize = a.get("connections", 4)?;
-            bench_serve(&addr, n, dim, connections)?;
+            let collection = a.get_opt("collection").map(str::to_string);
+            bench_serve(&addr, n, dim, connections, collection)?;
         }
         "topk" => {
-            let sketches: usize = a.get("sketches", 20_000)?;
-            let k: usize = a.get("k", 1024)?;
-            let scheme = parse_scheme(&a.get_str("scheme", "one-bit"))?;
-            let w: f64 = a.get("w", 0.75)?;
             let top: usize = a.get("top", 10)?;
             let queries: usize = a.get("queries", 20)?;
-            let threads: usize = a.get("threads", 0)?;
-            let rho: f64 = a.get("rho", 0.9)?;
-            let seed: u64 = a.get("seed", 20140601)?;
-            run_topk_demo(sketches, k, scheme, w, top, queries, threads, rho, seed)?;
+            if let Some(addr) = a.get_opt("addr") {
+                // Remote mode: namespaced TopK against a running server.
+                let collection = a.get_opt("collection").map(str::to_string);
+                let dim: usize = a.get("dim", 128)?;
+                let seed: u64 = a.get("seed", 20140601)?;
+                run_topk_remote(addr, collection.as_deref(), dim, top, queries, seed)?;
+            } else {
+                let sketches: usize = a.get("sketches", 20_000)?;
+                let k: usize = a.get("k", 1024)?;
+                let scheme = parse_scheme(&a.get_str("scheme", "one-bit"))?;
+                let w: f64 = a.get("w", 0.75)?;
+                let threads: usize = a.get("threads", 0)?;
+                let rho: f64 = a.get("rho", 0.9)?;
+                let seed: u64 = a.get("seed", 20140601)?;
+                run_topk_demo(sketches, k, scheme, w, top, queries, threads, rho, seed)?;
+            }
         }
         "artifacts" => {
             let reg = crp::runtime::ArtifactRegistry::default_location();
@@ -490,9 +651,50 @@ fn run_topk_demo(
     Ok(())
 }
 
+/// Remote top-k: send `queries` random query vectors to a running
+/// server (optionally namespaced to a collection) and print the hits.
+fn run_topk_remote(
+    addr: &str,
+    collection: Option<&str>,
+    dim: usize,
+    top: usize,
+    queries: usize,
+    seed: u64,
+) -> crp::Result<()> {
+    use crp::mathx::NormalSampler;
+    let mut client = crp::coordinator::SketchClient::connect(addr)?;
+    let mut ns = NormalSampler::new(seed, 3);
+    let vectors: Vec<Vec<f32>> = (0..queries.max(1))
+        .map(|_| (0..dim).map(|_| ns.next() as f32).collect())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = client.topk_in(collection, vectors, top as u32)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "collection {:?}: {} queries x top-{top} in {:.1} ms",
+        collection.unwrap_or("default"),
+        results.len(),
+        1e3 * dt
+    );
+    if let Some(hits) = results.first() {
+        println!("{:<24} {:>10}", "id", "rho_hat");
+        for h in hits {
+            println!("{:<24} {:>10.4}", h.id, h.rho);
+        }
+    }
+    Ok(())
+}
+
 /// Closed-loop load generator: register `n` vectors across `connections`
-/// concurrent clients, then report latency percentiles.
-fn bench_serve(addr: &str, n: usize, dim: usize, connections: usize) -> crp::Result<()> {
+/// concurrent clients (optionally into a named collection), then report
+/// latency percentiles.
+fn bench_serve(
+    addr: &str,
+    n: usize,
+    dim: usize,
+    connections: usize,
+    collection: Option<String>,
+) -> crp::Result<()> {
     use crp::coordinator::SketchClient;
     use crp::mathx::NormalSampler;
     let t0 = std::time::Instant::now();
@@ -500,6 +702,7 @@ fn bench_serve(addr: &str, n: usize, dim: usize, connections: usize) -> crp::Res
     let mut handles = Vec::new();
     for c in 0..connections {
         let addr = addr.to_string();
+        let collection = collection.clone();
         handles.push(std::thread::spawn(move || -> crp::Result<Vec<u64>> {
             let mut client = SketchClient::connect(&addr)?;
             let mut ns = NormalSampler::new(c as u64, 1);
@@ -507,7 +710,7 @@ fn bench_serve(addr: &str, n: usize, dim: usize, connections: usize) -> crp::Res
             for i in 0..per {
                 let v: Vec<f32> = (0..dim).map(|_| ns.next() as f32).collect();
                 let t = std::time::Instant::now();
-                client.register(&format!("c{c}-{i}"), v)?;
+                client.register_in(collection.as_deref(), &format!("c{c}-{i}"), v)?;
                 lat_us.push(t.elapsed().as_micros() as u64);
             }
             Ok(lat_us)

@@ -76,4 +76,26 @@ impl SchemeKind {
             SchemeKind::OneBit => "h_1",
         }
     }
+
+    /// Stable one-byte encoding used by the wire protocol and the
+    /// collection MANIFEST. Never renumber: these values are persisted.
+    pub fn wire_code(self) -> u8 {
+        match self {
+            SchemeKind::Uniform => 0,
+            SchemeKind::WindowOffset => 1,
+            SchemeKind::TwoBit => 2,
+            SchemeKind::OneBit => 3,
+        }
+    }
+
+    /// Inverse of [`SchemeKind::wire_code`].
+    pub fn from_wire_code(code: u8) -> Option<SchemeKind> {
+        match code {
+            0 => Some(SchemeKind::Uniform),
+            1 => Some(SchemeKind::WindowOffset),
+            2 => Some(SchemeKind::TwoBit),
+            3 => Some(SchemeKind::OneBit),
+            _ => None,
+        }
+    }
 }

@@ -1,0 +1,659 @@
+//! Multi-collection serving tests: cross-collection isolation (same ids
+//! never collide, per-collection coding enforced with clean errors),
+//! multi-collection `kill -9` recovery via the MANIFEST, safe directory
+//! reuse across create→ingest→drop→re-create, the namespaced client
+//! over TCP, and the `--max-conns` accept-loop bound.
+//!
+//! Run standalone with `cargo test --release -q collections` (CI does).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crp::coding::Scheme;
+use crp::coordinator::maintenance::MaintenanceConfig;
+use crp::coordinator::protocol::{Request, Response};
+use crp::coordinator::server::{serve, ServerConfig, ServiceState};
+use crp::coordinator::store::SketchStore;
+use crp::coordinator::SketchClient;
+use crp::mathx::Pcg64;
+use crp::projection::{ProjectionConfig, Projector};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("crp_collections_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn projector(k: usize) -> Arc<Projector> {
+    Arc::new(Projector::new_cpu(ProjectionConfig {
+        k,
+        seed: 7,
+        ..Default::default()
+    }))
+}
+
+fn vec_of(g: &mut Pcg64, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| g.next_f64() as f32 - 0.5).collect()
+}
+
+/// Sorted `(id, raw words)` dump — the byte-for-byte comparison basis.
+fn dump(store: &SketchStore) -> Vec<(String, Vec<u64>)> {
+    let mut out = Vec::new();
+    store.for_each(|id, codes| out.push((id.to_string(), codes.words().to_vec())));
+    out.sort();
+    out
+}
+
+fn scoped(collection: &str, inner: Request) -> Request {
+    Request::Scoped {
+        collection: collection.to_string(),
+        inner: Box::new(inner),
+    }
+}
+
+fn register(state: &ServiceState, collection: Option<&str>, id: &str, vector: Vec<f32>) {
+    let req = Request::Register {
+        id: id.to_string(),
+        vector,
+    };
+    let req = match collection {
+        Some(c) => scoped(c, req),
+        None => req,
+    };
+    match state.handle(req) {
+        Response::Registered { .. } => {}
+        other => panic!("register {id:?} in {collection:?}: unexpected {other:?}"),
+    }
+}
+
+fn knn_ids(
+    state: &ServiceState,
+    collection: Option<&str>,
+    vector: Vec<f32>,
+    n: u32,
+) -> Vec<String> {
+    let req = Request::Knn { vector, n };
+    let req = match collection {
+        Some(c) => scoped(c, req),
+        None => req,
+    };
+    match state.handle(req) {
+        Response::Knn { hits } => hits.into_iter().map(|h| h.id).collect(),
+        other => panic!("knn in {collection:?}: unexpected {other:?}"),
+    }
+}
+
+/// The acceptance pin: one process serves two collections with
+/// different `(scheme, bits)` — `default` two-bit/0.75 (2 bits) and a
+/// uniform/w=1.0 (4 bits) — with fully isolated rows and rankings.
+#[test]
+fn collections_isolate_same_ids_across_schemes() {
+    let state = ServiceState::open(projector(256), &ServerConfig::default()).unwrap();
+    match state.handle(Request::CreateCollection {
+        name: "u4".into(),
+        scheme: Scheme::Uniform,
+        w: 1.0,
+        bits: 4,
+        k: 128,
+        seed: 11,
+    }) {
+        Response::CollectionCreated { name } => assert_eq!(name, "u4"),
+        other => panic!("unexpected {other:?}"),
+    }
+    let u4 = state.registry.get("u4").unwrap();
+    assert_eq!(u4.spec.bits(), 4);
+    assert_eq!(state.default.spec.bits(), 2);
+
+    let mut g = Pcg64::new(0xC0FFEE, 0);
+    for i in 0..30 {
+        register(&state, None, &format!("d{i:02}"), vec_of(&mut g, 48));
+        register(&state, Some("u4"), &format!("u{i:02}"), vec_of(&mut g, 48));
+    }
+    // The same id in both collections, with different vectors.
+    let (shared_d, shared_u) = (vec_of(&mut g, 48), vec_of(&mut g, 48));
+    register(&state, None, "x", shared_d.clone());
+    register(&state, Some("u4"), "x", shared_u);
+    assert_eq!(state.default.store.len(), 31);
+    assert_eq!(u4.store.len(), 31);
+    // Isolated sketches: same id, different shapes entirely.
+    assert_ne!(
+        state.default.store.get("x"),
+        u4.store.get("x"),
+        "same id must not collide across collections"
+    );
+
+    // Knn in each collection only ever surfaces its own ids.
+    let q = vec_of(&mut g, 48);
+    let d_hits = knn_ids(&state, None, q.clone(), 10);
+    assert_eq!(d_hits.len(), 10);
+    assert!(
+        d_hits.iter().all(|id| id.starts_with('d') || id == "x"),
+        "{d_hits:?}"
+    );
+    let u_hits = knn_ids(&state, Some("u4"), q.clone(), 10);
+    assert_eq!(u_hits.len(), 10);
+    assert!(
+        u_hits.iter().all(|id| id.starts_with('u') || id == "x"),
+        "{u_hits:?}"
+    );
+    // Scoped-to-default ≡ legacy unscoped, byte-identically.
+    assert_eq!(
+        state.handle(Request::Knn {
+            vector: q.clone(),
+            n: 10
+        }),
+        state.handle(scoped(
+            "default",
+            Request::Knn {
+                vector: q.clone(),
+                n: 10
+            }
+        ))
+    );
+    // Batched TopK respects the namespace too.
+    match state.handle(scoped(
+        "u4",
+        Request::TopK {
+            vectors: vec![q.clone()],
+            n: 10,
+        },
+    )) {
+        Response::TopK { results } => {
+            let ids: Vec<String> = results[0].iter().map(|h| h.id.clone()).collect();
+            assert_eq!(ids, u_hits, "TopK must rank exactly like Knn per collection");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Removing the shared id from one collection leaves the other.
+    match state.handle(scoped("u4", Request::Remove { id: "x".into() })) {
+        Response::Removed { existed } => assert!(existed),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert!(u4.store.get("x").is_none());
+    assert_eq!(state.default.store.get("x"), state.store.get("x"));
+    assert!(state.default.store.get("x").is_some());
+
+    // Estimates stay collection-local: "x" is gone from u4 only.
+    match state.handle(scoped(
+        "u4",
+        Request::Estimate {
+            a: "x".into(),
+            b: "u00".into(),
+        },
+    )) {
+        Response::Error { message } => assert!(message.contains('x'), "{message}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    match state.handle(Request::Estimate {
+        a: "x".into(),
+        b: "d00".into(),
+    }) {
+        Response::Estimate { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+/// Clean errors, not panics, for every malformed collection operation.
+#[test]
+fn collections_shape_and_name_errors_are_clean() {
+    let state = ServiceState::open(projector(64), &ServerConfig::default()).unwrap();
+    let cases: Vec<(Request, &str)> = vec![
+        (
+            Request::CreateCollection {
+                name: "bad/name".into(),
+                scheme: Scheme::OneBit,
+                w: 0.0,
+                bits: 0,
+                k: 32,
+                seed: 0,
+            },
+            "characters",
+        ),
+        (
+            Request::CreateCollection {
+                name: "default".into(),
+                scheme: Scheme::OneBit,
+                w: 0.0,
+                bits: 0,
+                k: 32,
+                seed: 0,
+            },
+            "already exists",
+        ),
+        (
+            Request::CreateCollection {
+                name: "MANIFEST".into(),
+                scheme: Scheme::OneBit,
+                w: 0.0,
+                bits: 0,
+                k: 32,
+                seed: 0,
+            },
+            "reserved",
+        ),
+        (
+            Request::CreateCollection {
+                name: "w0".into(),
+                scheme: Scheme::Uniform,
+                w: 0.0,
+                bits: 0,
+                k: 32,
+                seed: 0,
+            },
+            "bin width",
+        ),
+        (
+            Request::CreateCollection {
+                name: "k0".into(),
+                scheme: Scheme::OneBit,
+                w: 0.0,
+                bits: 0,
+                k: 0,
+                seed: 0,
+            },
+            "outside",
+        ),
+        (
+            Request::CreateCollection {
+                name: "b3".into(),
+                scheme: Scheme::TwoBit,
+                w: 0.75,
+                bits: 3,
+                k: 32,
+                seed: 0,
+            },
+            "2 bit",
+        ),
+        (
+            Request::DropCollection {
+                name: "default".into(),
+            },
+            "default",
+        ),
+        (
+            scoped(
+                "ghost",
+                Request::Register {
+                    id: "a".into(),
+                    vector: vec![1.0; 8],
+                },
+            ),
+            "unknown collection",
+        ),
+        (
+            scoped(
+                "ghost",
+                Request::TopK {
+                    vectors: vec![vec![1.0; 8]],
+                    n: 1,
+                },
+            ),
+            "unknown collection",
+        ),
+    ];
+    for (req, needle) in cases {
+        match state.handle(req.clone()) {
+            Response::Error { message } => {
+                assert!(message.contains(needle), "{req:?} → {message:?}")
+            }
+            other => panic!("{req:?}: unexpected {other:?}"),
+        }
+    }
+    // Only `default` exists after all the failed creates.
+    match state.handle(Request::ListCollections) {
+        Response::Collections { collections } => {
+            assert_eq!(collections.len(), 1);
+            assert_eq!(collections[0].name, "default");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn data_dir_cfg(dir: &Path) -> ServerConfig {
+    ServerConfig {
+        data_dir: Some(dir.to_path_buf()),
+        checkpoint_every: 0, // explicit Persist only — keeps tests deterministic
+        maintenance: MaintenanceConfig {
+            tick: Duration::from_secs(60),
+        },
+        ..Default::default()
+    }
+}
+
+/// The acceptance pin: a server with two extra collections (different
+/// schemes and bit widths), seeded with singles + bulk + removes and
+/// checkpointed at an arbitrary point, is "killed" (state rebuilt from
+/// disk via MANIFEST + per-collection snapshot/WAL, no graceful
+/// shutdown) and answers byte-identically on every collection.
+#[test]
+fn collections_kill9_recovery_via_manifest() {
+    let dir = temp_dir("kill9");
+    let cfg = data_dir_cfg(&dir);
+    let live = ServiceState::open(projector(256), &cfg).unwrap();
+    for (name, scheme, w, k, seed) in [
+        ("two", Scheme::TwoBit, 0.75, 96u64, 5u64),
+        ("uni4", Scheme::Uniform, 1.0, 128, 11),
+    ] {
+        match live.handle(Request::CreateCollection {
+            name: name.into(),
+            scheme,
+            w,
+            bits: 0,
+            k,
+            seed,
+        }) {
+            Response::CollectionCreated { .. } => {}
+            other => panic!("create {name}: unexpected {other:?}"),
+        }
+    }
+    let names = ["default", "two", "uni4"];
+    let mut g = Pcg64::new(99, 0);
+    // Singles into every collection.
+    for i in 0..40 {
+        for name in &names {
+            register(&live, Some(name), &format!("v{i:02}"), vec_of(&mut g, 40));
+        }
+    }
+    // One bulk batch per collection.
+    for name in &names {
+        let ids: Vec<String> = (0..20).map(|i| format!("b{i:02}")).collect();
+        let vectors: Vec<Vec<f32>> = (0..20).map(|_| vec_of(&mut g, 40)).collect();
+        match live.handle(scoped(name, Request::RegisterBatch { ids, vectors })) {
+            Response::RegisteredBatch { count } => assert_eq!(count, 20),
+            other => panic!("bulk {name}: unexpected {other:?}"),
+        }
+    }
+    // Removes, then a checkpoint of ONE collection at an arbitrary
+    // point, then more mutations everywhere.
+    for i in (0..30).step_by(3) {
+        for name in &names {
+            match live.handle(scoped(
+                name,
+                Request::Remove {
+                    id: format!("v{i:02}"),
+                },
+            )) {
+                Response::Removed { existed } => assert!(existed),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+    match live.handle(scoped("uni4", Request::Persist)) {
+        Response::Persisted { rows, .. } => assert_eq!(rows, 50),
+        other => panic!("unexpected {other:?}"),
+    }
+    for name in &names {
+        register(&live, Some(name), "v01", vec_of(&mut g, 40)); // overwrite
+        register(&live, Some(name), "post", vec_of(&mut g, 40)); // fresh
+        match live.handle(scoped(name, Request::Remove { id: "b03".into() })) {
+            Response::Removed { existed } => assert!(existed),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    // kill -9: rebuild purely from disk while the first instance is
+    // still alive — nothing graceful has run.
+    let restarted = ServiceState::open(projector(256), &cfg).unwrap();
+    assert_eq!(restarted.registry.len(), 3, "MANIFEST must list all three");
+    for name in &names {
+        let a = live.registry.get(name).unwrap();
+        let b = restarted.registry.get(name).unwrap();
+        assert_eq!(a.spec, b.spec, "{name}: spec must survive via MANIFEST");
+        assert_eq!(dump(&a.store), dump(&b.store), "{name}: byte-for-byte");
+        // Byte-identical responses on every read path, per collection.
+        for _ in 0..3 {
+            let v = vec_of(&mut g, 40);
+            assert_eq!(
+                live.handle(scoped(
+                    name,
+                    Request::Knn {
+                        vector: v.clone(),
+                        n: 10
+                    }
+                )),
+                restarted.handle(scoped(name, Request::Knn { vector: v, n: 10 })),
+                "{name}"
+            );
+        }
+        let batch: Vec<Vec<f32>> = (0..3).map(|_| vec_of(&mut g, 40)).collect();
+        assert_eq!(
+            live.handle(scoped(
+                name,
+                Request::TopK {
+                    vectors: batch.clone(),
+                    n: 5
+                }
+            )),
+            restarted.handle(scoped(name, Request::TopK { vectors: batch, n: 5 })),
+            "{name}"
+        );
+        assert_eq!(
+            live.handle(scoped(
+                name,
+                Request::Estimate {
+                    a: "v01".into(),
+                    b: "post".into()
+                }
+            )),
+            restarted.handle(scoped(
+                name,
+                Request::Estimate {
+                    a: "v01".into(),
+                    b: "post".into()
+                }
+            )),
+            "{name}"
+        );
+    }
+    assert_eq!(
+        live.handle(Request::ListCollections),
+        restarted.handle(Request::ListCollections)
+    );
+
+    // Restarting with contradicting default flags is an error, not
+    // silent drift.
+    let bad = ServerConfig {
+        coding: crp::coding::CodingParams::new(Scheme::OneBit, 0.0),
+        ..data_dir_cfg(&dir)
+    };
+    let err = ServiceState::open(projector(256), &bad)
+        .err()
+        .expect("flag drift must be rejected")
+        .to_string();
+    assert!(err.contains("default"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// create → ingest → drop → re-create reuses the directory safely: the
+/// drop deletes the on-disk state, and the re-created collection (with
+/// a different scheme) never replays the old WAL.
+#[test]
+fn collections_drop_then_recreate_reuses_directory() {
+    let dir = temp_dir("recreate");
+    let cfg = data_dir_cfg(&dir);
+    let live = ServiceState::open(projector(64), &cfg).unwrap();
+    match live.handle(Request::CreateCollection {
+        name: "tmp".into(),
+        scheme: Scheme::TwoBit,
+        w: 0.75,
+        bits: 0,
+        k: 64,
+        seed: 3,
+    }) {
+        Response::CollectionCreated { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    let mut g = Pcg64::new(4, 4);
+    for i in 0..20 {
+        register(&live, Some("tmp"), &format!("old{i}"), vec_of(&mut g, 24));
+    }
+    assert!(dir.join("tmp").is_dir(), "durable collection has a dir");
+    match live.handle(Request::DropCollection { name: "tmp".into() }) {
+        Response::CollectionDropped { existed } => assert!(existed),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert!(
+        !dir.join("tmp").exists(),
+        "drop must delete the collection directory"
+    );
+    // Re-create under the same name with a different coding.
+    match live.handle(Request::CreateCollection {
+        name: "tmp".into(),
+        scheme: Scheme::Uniform,
+        w: 1.0,
+        bits: 0,
+        k: 64,
+        seed: 9,
+    }) {
+        Response::CollectionCreated { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    for i in 0..5 {
+        register(&live, Some("tmp"), &format!("new{i}"), vec_of(&mut g, 24));
+    }
+    let tmp = live.registry.get("tmp").unwrap();
+    assert_eq!(tmp.spec.bits(), 4);
+    assert_eq!(tmp.store.len(), 5, "old rows must be gone");
+    assert!(tmp.store.get("old0").is_none());
+
+    // Restart from disk: the MANIFEST records the NEW spec, and the
+    // directory holds only the new rows.
+    let restarted = ServiceState::open(projector(64), &cfg).unwrap();
+    let back = restarted.registry.get("tmp").unwrap();
+    assert_eq!(back.spec, tmp.spec);
+    assert_eq!(dump(&back.store), dump(&tmp.store));
+    assert_eq!(back.store.len(), 5);
+    assert!(back.store.get("old7").is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn spawn_server(cfg: ServerConfig, k: usize) -> String {
+    let projector = projector(k);
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    rx.recv()
+        .expect("server thread exited before reporting its bound address")
+        .to_string()
+}
+
+/// The namespaced client end-to-end over TCP: collection admin, scoped
+/// register/estimate/knn/topk/remove, and the collections/connections
+/// stats fields.
+#[test]
+fn collections_over_tcp_with_namespaced_client() {
+    let addr = spawn_server(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        128,
+    );
+    let mut c = SketchClient::connect(&addr).unwrap();
+    c.create_collection("web", Scheme::Uniform, 1.0, 64, 21).unwrap();
+    assert!(c.create_collection("web", Scheme::Uniform, 1.0, 64, 21).is_err());
+
+    let mut g = Pcg64::new(13, 13);
+    let anchor = vec_of(&mut g, 32);
+    c.register_in(Some("web"), "anchor", anchor.clone()).unwrap();
+    let n = c
+        .register_batch_in(
+            Some("web"),
+            vec!["p0".into(), "p1".into()],
+            vec![vec_of(&mut g, 32), vec_of(&mut g, 32)],
+        )
+        .unwrap();
+    assert_eq!(n, 2);
+    c.register("legacy", vec_of(&mut g, 32)).unwrap();
+
+    let (rho, _) = c.estimate_vec_in(Some("web"), "anchor", anchor.clone()).unwrap();
+    assert!(rho > 0.999, "self-similarity in web: {rho}");
+    let hits = c.knn_in(Some("web"), anchor.clone(), 3).unwrap();
+    assert_eq!(hits[0].id, "anchor");
+    assert_eq!(hits.len(), 3, "web has exactly 3 rows");
+    let results = c.topk_in(Some("web"), vec![anchor.clone()], 3).unwrap();
+    assert_eq!(results[0], hits);
+    // The legacy namespace sees none of it.
+    let legacy_hits = c.knn(anchor, 10).unwrap();
+    assert_eq!(legacy_hits.len(), 1);
+    assert_eq!(legacy_hits[0].id, "legacy");
+    assert!(c.estimate_in(Some("web"), "anchor", "legacy").is_err());
+
+    let infos = c.list_collections().unwrap();
+    assert_eq!(infos.len(), 2);
+    assert_eq!(infos[0].name, "default");
+    assert_eq!(infos[1].name, "web");
+    assert_eq!(infos[1].rows, 3);
+    assert_eq!(infos[1].bits, 4);
+    assert_eq!(infos[1].seed, 21);
+    assert!(!infos[1].durable);
+
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.collections, 2);
+    assert_eq!(stats.connections, 1);
+    assert_eq!(stats.registered, 4);
+
+    assert!(c.remove_in(Some("web"), "p1").unwrap());
+    assert!(!c.remove_in(Some("web"), "p1").unwrap());
+    assert!(c.persist_in(Some("web")).is_err(), "in-memory collection");
+    assert!(c.drop_collection("web").unwrap());
+    assert!(!c.drop_collection("web").unwrap());
+    assert!(c.knn_in(Some("web"), vec![1.0; 8], 1).is_err());
+}
+
+/// `--max-conns` satellite: over-limit connections get one clean Error
+/// frame and close; slots free up when clients disconnect; the
+/// `connections` gauge tracks the live count.
+#[test]
+fn connection_cap_rejects_over_limit_with_clean_error() {
+    let addr = spawn_server(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 2,
+            ..Default::default()
+        },
+        64,
+    );
+    let mut c1 = SketchClient::connect(&addr).unwrap();
+    c1.ping().unwrap();
+    let mut c2 = SketchClient::connect(&addr).unwrap();
+    c2.ping().unwrap();
+    assert_eq!(c1.stats().unwrap().connections, 2);
+
+    // The third connection is rejected with one clean Error frame,
+    // pushed before any request is sent (read it without writing, so
+    // the frame can never be lost to a TCP reset race).
+    let c3 = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = std::io::BufReader::new(c3);
+    let frame = crp::coordinator::protocol::read_frame(&mut reader)
+        .expect("over-limit connection must get an Error frame");
+    match Response::decode(&frame).unwrap() {
+        Response::Error { message } => assert!(
+            message.contains("connection limit"),
+            "rejection must name the cause: {message}"
+        ),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Freeing a slot lets a new client in (the server notices the
+    // close asynchronously, so poll with a deadline).
+    drop(c2);
+    drop(reader);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut c4 = SketchClient::connect(&addr).unwrap();
+        if c4.ping().is_ok() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "server never freed a connection slot"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    c1.ping().unwrap();
+}

@@ -11,7 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crp::coding::{pack_codes, PackedCodes};
-use crp::coordinator::durability::{self, snapshot, wal, Durability, DurabilityConfig};
+use crp::coordinator::durability::{self, snapshot, wal, Durability, DurabilityConfig, FsyncPolicy};
 use crp::coordinator::maintenance::MaintenanceConfig;
 use crp::coordinator::protocol::{Request, Response};
 use crp::coordinator::server::{ServerConfig, ServiceState};
@@ -146,6 +146,7 @@ fn recovery_snapshot_plus_wal_equals_live_store() {
             snapshot: dir.join("snapshot.bin"),
             wal_dir: dir.join("wal"),
             checkpoint_every: 0,
+            fsync: FsyncPolicy::Os,
         };
         // Tiny thresholds so drains and tombstone compaction fire
         // mid-sequence (checkpoints drain too).
@@ -231,6 +232,7 @@ fn durable_cfg(dir: &Path) -> ServerConfig {
             snapshot: dir.join("snapshot.bin"),
             wal_dir: dir.join("wal"),
             checkpoint_every: 0, // explicit Persist only — keeps the test deterministic
+            fsync: FsyncPolicy::Os,
         }),
         maintenance: MaintenanceConfig {
             tick: Duration::from_secs(60),
@@ -468,6 +470,7 @@ fn recovery_put_completes_during_checkpoint_disk_write() {
         snapshot: dir.join("snapshot.bin"),
         wal_dir: dir.join("wal"),
         checkpoint_every: 0,
+        fsync: FsyncPolicy::Os,
     };
     let (d, _) = Durability::open(cfg.clone(), &store).unwrap();
     let d = Arc::new(d);
