@@ -219,8 +219,36 @@ impl SketchClient {
         }
     }
 
+    /// Approximate batched top-k through the server's banded code
+    /// index: `probes` extra bucket probes per band (0 = the
+    /// collection's default). Recall trades against candidate cost;
+    /// results carry exact ρ̂ for every returned id.
+    pub fn approx_topk(
+        &mut self,
+        vectors: Vec<Vec<f32>>,
+        n: u32,
+        probes: u32,
+    ) -> crate::Result<Vec<Vec<KnnHit>>> {
+        self.approx_topk_in(None, vectors, n, probes)
+    }
+
+    /// [`SketchClient::approx_topk`] within a named collection.
+    pub fn approx_topk_in(
+        &mut self,
+        collection: Option<&str>,
+        vectors: Vec<Vec<f32>>,
+        n: u32,
+        probes: u32,
+    ) -> crate::Result<Vec<Vec<KnnHit>>> {
+        match self.call(&scoped(collection, Request::ApproxTopK { vectors, n, probes }))? {
+            Response::TopK { results } => Ok(results),
+            other => Err(Self::bail(other)),
+        }
+    }
+
     /// Create a collection with its own coding choice. `bits` 0 derives
-    /// the packed width from `(scheme, w)`.
+    /// the packed width from `(scheme, w)`; `checkpoint_every` 0 uses
+    /// the server's global cadence.
     pub fn create_collection(
         &mut self,
         name: &str,
@@ -228,6 +256,7 @@ impl SketchClient {
         w: f64,
         k: u64,
         seed: u64,
+        checkpoint_every: u64,
     ) -> crate::Result<()> {
         match self.call(&Request::CreateCollection {
             name: name.to_string(),
@@ -236,6 +265,7 @@ impl SketchClient {
             bits: 0,
             k,
             seed,
+            checkpoint_every,
         })? {
             Response::CollectionCreated { .. } => Ok(()),
             other => Err(Self::bail(other)),
@@ -261,8 +291,20 @@ impl SketchClient {
         }
     }
 
+    /// Aggregate service counters (the legacy frame — works against any
+    /// server version; `per_collection` comes back empty).
     pub fn stats(&mut self) -> crate::Result<StatsSnapshot> {
         match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// [`SketchClient::stats`] plus the per-collection breakdown
+    /// (rows, pending, WAL bytes, index buckets). Needs a server that
+    /// understands `StatsDetailed`; older servers reject the frame.
+    pub fn stats_detailed(&mut self) -> crate::Result<StatsSnapshot> {
+        match self.call(&Request::StatsDetailed)? {
             Response::Stats(s) => Ok(s),
             other => Err(Self::bail(other)),
         }

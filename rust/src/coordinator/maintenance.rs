@@ -136,7 +136,7 @@ mod tests {
     use crate::coding::{CodingParams, Scheme};
     use crate::coordinator::batcher::BatcherConfig;
     use crate::coordinator::durability::FsyncPolicy;
-    use crate::coordinator::registry::{CollectionSpec, RegistryConfig};
+    use crate::coordinator::registry::{CollectionOptions, CollectionSpec, RegistryConfig};
     use crate::projection::{ProjectionConfig, Projector};
     use crate::scan::EpochConfig;
 
@@ -168,16 +168,14 @@ mod tests {
     #[test]
     fn maintenance_sweeps_every_collection_and_writers_only_notify() {
         let registry = small_registry(8);
+        let second_spec = CollectionSpec {
+            scheme: Scheme::OneBit,
+            w: 0.0,
+            k: 32,
+            seed: 9,
+        };
         registry
-            .create(
-                "second",
-                CollectionSpec {
-                    scheme: Scheme::OneBit,
-                    w: 0.0,
-                    k: 32,
-                    seed: 9,
-                },
-            )
+            .create("second", second_spec, CollectionOptions::for_spec(&second_spec))
             .unwrap();
         let metrics = Arc::new(Metrics::default());
         let mut m = Maintenance::spawn(

@@ -24,6 +24,11 @@
 //!                  │                 id → PackedCodes, mirrored into an
 //!                  │                 epoch-buffered scan arena
 //!                  │                 (crate::scan) that serves Knn/TopK
+//!                  │                 exactly and ApproxTopK through the
+//!                  │                 banded multi-probe code index
+//!                  │                 (crate::lsh::CodeIndex, maintained
+//!                  │                 at every drain; per-collection
+//!                  │                 IndexConfig in the MANIFEST)
 //!                  ├── durability  — per collection: CRPSNAP2 snapshots
 //!                  │                 + the CRPWAL1 epoch WAL (fsync
 //!                  │                 policy: always|os|group:<ms>)
@@ -51,7 +56,9 @@ pub use batcher::{BatcherConfig, SketchBatcher};
 pub use client::SketchClient;
 pub use durability::{Durability, DurabilityConfig, FsyncPolicy};
 pub use maintenance::{Maintenance, MaintenanceConfig};
-pub use protocol::{CollectionInfo, Request, Response};
-pub use registry::{Collection, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION};
+pub use protocol::{CollectionInfo, CollectionStats, Request, Response};
+pub use registry::{
+    Collection, CollectionOptions, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION,
+};
 pub use server::{serve, ServerConfig};
 pub use store::{DrainSignal, SketchStore};

@@ -39,6 +39,16 @@ pub enum Request {
     /// Batched top-n: one scan fan-out over the code arena per query
     /// vector, answered in request order.
     TopK { vectors: Vec<Vec<f32>>, n: u32 },
+    /// Approximate batched top-n through the banded code index:
+    /// bucket candidates (multi-probe expanded by `probes` low-order
+    /// band-bit flips; 0 = the collection's default) reranked through
+    /// the exact collision kernels. Same response shape as `TopK`;
+    /// recall governed by the collection's index config + `probes`.
+    ApproxTopK {
+        vectors: Vec<Vec<f32>>,
+        n: u32,
+        probes: u32,
+    },
     /// Bulk registration: `ids[i]` stores the sketch of `vectors[i]`,
     /// via one fused project→quantize→pack pass and one bulk arena
     /// ingest (no per-vector batching round-trip).
@@ -53,13 +63,22 @@ pub enum Request {
     /// truncate the WAL. Errors when the server runs without
     /// durability.
     Persist,
-    /// Service statistics.
+    /// Service statistics (aggregates only — the frame a pre-breakdown
+    /// client can still decode).
     Stats,
+    /// Service statistics with the per-collection breakdown appended.
+    /// Rides tag 4 with a one-byte tail, so the bare legacy `Stats`
+    /// frame stays byte-identical; old servers reject the tail frame
+    /// cleanly instead of silently dropping the section.
+    StatsDetailed,
     /// Health check.
     Ping,
     /// Create a named collection with its own coding choice. `bits` is
     /// a cross-check: 0 derives it from `(scheme, w)`, a nonzero value
     /// must match what the scheme packs or the create is rejected.
+    /// `checkpoint_every` sets the collection's own checkpoint cadence
+    /// (0 = the server's global `--checkpoint-every`); it rides as an
+    /// optional frame tail, so pre-cadence client frames still decode.
     CreateCollection {
         name: String,
         scheme: Scheme,
@@ -67,6 +86,7 @@ pub enum Request {
         bits: u32,
         k: u64,
         seed: u64,
+        checkpoint_every: u64,
     },
     /// Drop a named collection (its durable state is deleted).
     DropCollection { name: String },
@@ -122,6 +142,24 @@ pub struct CollectionInfo {
     pub durable: bool,
 }
 
+/// Per-collection slice of the stats breakdown. Only a
+/// [`Request::StatsDetailed`] answer carries these; the section is
+/// appended after every aggregate field and omitted entirely when
+/// empty, so a plain `Stats` response stays byte-identical to the
+/// pre-breakdown format.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CollectionStats {
+    pub name: String,
+    /// Live sketches stored.
+    pub rows: u64,
+    /// Rows buffered in the current ingest epoch.
+    pub pending_rows: u64,
+    /// WAL bytes appended since start (0 without durability).
+    pub wal_bytes: u64,
+    /// Occupied banded-index buckets (0 without an index).
+    pub index_buckets: u64,
+}
+
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StatsSnapshot {
     pub registered: u64,
@@ -153,6 +191,11 @@ pub struct StatsSnapshot {
     pub connections: u64,
     /// Collections served by this process.
     pub collections: u64,
+    /// Per-collection breakdown, sorted by name. Populated only for
+    /// `StatsDetailed`; rides as an optional section after the
+    /// aggregates and is omitted from the frame when empty (plain
+    /// `Stats` responses stay byte-identical to pre-breakdown ones).
+    pub per_collection: Vec<CollectionStats>,
 }
 
 // ---- encoding primitives ----------------------------------------------
@@ -262,6 +305,11 @@ impl Request {
                 e.0
             }
             Request::Stats => Enc::new(4).0,
+            Request::StatsDetailed => {
+                let mut e = Enc::new(4);
+                e.u8(1);
+                e.0
+            }
             Request::Ping => Enc::new(5).0,
             Request::TopK { vectors, n } => {
                 let mut e = Enc::new(6);
@@ -297,6 +345,7 @@ impl Request {
                 bits,
                 k,
                 seed,
+                checkpoint_every,
             } => {
                 let mut e = Enc::new(10);
                 e.str(name);
@@ -305,6 +354,7 @@ impl Request {
                 e.u32(*bits);
                 e.u64(*k);
                 e.u64(*seed);
+                e.u64(*checkpoint_every);
                 e.0
             }
             Request::DropCollection { name } => {
@@ -317,6 +367,16 @@ impl Request {
                 let mut e = Enc::new(13);
                 e.str(collection);
                 e.0.extend_from_slice(&inner.encode());
+                e.0
+            }
+            Request::ApproxTopK { vectors, n, probes } => {
+                let mut e = Enc::new(14);
+                e.u32(vectors.len() as u32);
+                for v in vectors {
+                    e.f32s(v);
+                }
+                e.u32(*n);
+                e.u32(*probes);
                 e.0
             }
         }
@@ -349,7 +409,18 @@ impl Request {
                 vector: d.f32s()?,
                 n: d.u32()?,
             },
-            4 => Request::Stats,
+            4 => {
+                // Optional one-byte tail: bare [4] is the legacy
+                // aggregates-only Stats; [4, 1] asks for the
+                // per-collection breakdown.
+                if d.pos < buf.len() {
+                    let v = d.u8()?;
+                    anyhow::ensure!(v == 1, "bad stats detail byte {v}");
+                    Request::StatsDetailed
+                } else {
+                    Request::Stats
+                }
+            }
             5 => Request::Ping,
             6 => {
                 let n_vecs = d.u32()? as usize;
@@ -385,13 +456,18 @@ impl Request {
                 let code = d.u8()?;
                 let scheme = Scheme::from_wire_code(code)
                     .ok_or_else(|| anyhow::anyhow!("unknown scheme code {code}"))?;
+                let (w, bits, k, seed) = (d.f64()?, d.u32()?, d.u64()?, d.u64()?);
+                // Optional tail: frames from pre-cadence clients end at
+                // `seed` and mean "use the server's global cadence".
+                let checkpoint_every = if d.pos < buf.len() { d.u64()? } else { 0 };
                 Request::CreateCollection {
                     name,
                     scheme,
-                    w: d.f64()?,
-                    bits: d.u32()?,
-                    k: d.u64()?,
-                    seed: d.u64()?,
+                    w,
+                    bits,
+                    k,
+                    seed,
+                    checkpoint_every,
                 }
             }
             11 => Request::DropCollection { name: d.str()? },
@@ -406,6 +482,19 @@ impl Request {
                 Request::Scoped {
                     collection,
                     inner: Box::new(inner),
+                }
+            }
+            14 => {
+                let n_vecs = d.u32()? as usize;
+                anyhow::ensure!(n_vecs * 4 <= buf.len(), "bad batch size");
+                let mut vectors = Vec::with_capacity(n_vecs);
+                for _ in 0..n_vecs {
+                    vectors.push(d.f32s()?);
+                }
+                Request::ApproxTopK {
+                    vectors,
+                    n: d.u32()?,
+                    probes: d.u32()?,
                 }
             }
             t => anyhow::bail!("unknown request tag {t}"),
@@ -463,6 +552,20 @@ impl Response {
                 e.u64(s.maintenance_wakeups);
                 e.u64(s.connections);
                 e.u64(s.collections);
+                // Per-collection section — appended after every
+                // aggregate field, and omitted entirely when empty so a
+                // plain `Stats` answer is byte-identical to the
+                // pre-breakdown format (old clients keep decoding it).
+                if !s.per_collection.is_empty() {
+                    e.u32(s.per_collection.len() as u32);
+                    for c in &s.per_collection {
+                        e.str(&c.name);
+                        e.u64(c.rows);
+                        e.u64(c.pending_rows);
+                        e.u64(c.wal_bytes);
+                        e.u64(c.index_buckets);
+                    }
+                }
                 e.0
             }
             Response::Pong => Enc::new(4).0,
@@ -548,26 +651,45 @@ impl Response {
                 }
                 Response::Knn { hits }
             }
-            3 => Response::Stats(StatsSnapshot {
-                registered: d.u64()?,
-                estimates: d.u64()?,
-                knn_queries: d.u64()?,
-                batches_executed: d.u64()?,
-                vectors_projected: d.u64()?,
-                mean_batch_size: d.f64()?,
-                p50_register_us: d.u64()?,
-                p99_register_us: d.u64()?,
-                pending_rows: d.u64()?,
-                drains: d.u64()?,
-                tombstones: d.u64()?,
-                kernel: d.str()?,
-                wal_records: d.u64()?,
-                wal_bytes: d.u64()?,
-                last_checkpoint_rows: d.u64()?,
-                maintenance_wakeups: d.u64()?,
-                connections: d.u64()?,
-                collections: d.u64()?,
-            }),
+            3 => {
+                let mut s = StatsSnapshot {
+                    registered: d.u64()?,
+                    estimates: d.u64()?,
+                    knn_queries: d.u64()?,
+                    batches_executed: d.u64()?,
+                    vectors_projected: d.u64()?,
+                    mean_batch_size: d.f64()?,
+                    p50_register_us: d.u64()?,
+                    p99_register_us: d.u64()?,
+                    pending_rows: d.u64()?,
+                    drains: d.u64()?,
+                    tombstones: d.u64()?,
+                    kernel: d.str()?,
+                    wal_records: d.u64()?,
+                    wal_bytes: d.u64()?,
+                    last_checkpoint_rows: d.u64()?,
+                    maintenance_wakeups: d.u64()?,
+                    connections: d.u64()?,
+                    collections: d.u64()?,
+                    per_collection: Vec::new(),
+                };
+                // Optional per-collection section: absent in frames
+                // from pre-breakdown servers.
+                if d.pos < buf.len() {
+                    let n = d.u32()? as usize;
+                    anyhow::ensure!(n * 36 <= buf.len(), "bad collection stat count");
+                    for _ in 0..n {
+                        s.per_collection.push(CollectionStats {
+                            name: d.str()?,
+                            rows: d.u64()?,
+                            pending_rows: d.u64()?,
+                            wal_bytes: d.u64()?,
+                            index_buckets: d.u64()?,
+                        });
+                    }
+                }
+                Response::Stats(s)
+            }
             4 => Response::Pong,
             5 => Response::Error { message: d.str()? },
             6 => {
@@ -715,7 +837,18 @@ mod tests {
         roundtrip_req(Request::Remove { id: "gone".into() });
         roundtrip_req(Request::Persist);
         roundtrip_req(Request::Stats);
+        roundtrip_req(Request::StatsDetailed);
         roundtrip_req(Request::Ping);
+        roundtrip_req(Request::ApproxTopK {
+            vectors: vec![vec![0.5; 16], vec![], vec![-1.0, 2.0]],
+            n: 7,
+            probes: 3,
+        });
+        roundtrip_req(Request::ApproxTopK {
+            vectors: vec![],
+            n: 0,
+            probes: 0,
+        });
         roundtrip_req(Request::CreateCollection {
             name: "web-embeddings".into(),
             scheme: Scheme::Uniform,
@@ -723,6 +856,7 @@ mod tests {
             bits: 4,
             k: 1024,
             seed: 42,
+            checkpoint_every: 50_000,
         });
         roundtrip_req(Request::DropCollection { name: "old".into() });
         roundtrip_req(Request::ListCollections);
@@ -746,6 +880,11 @@ mod tests {
             Request::TopK {
                 vectors: vec![vec![1.0], vec![]],
                 n: 2,
+            },
+            Request::ApproxTopK {
+                vectors: vec![vec![1.0], vec![]],
+                n: 2,
+                probes: 4,
             },
             Request::RegisterBatch {
                 ids: vec!["a".into()],
@@ -870,6 +1009,58 @@ mod tests {
         assert!(Request::decode(&deep).is_err());
     }
 
+    /// Optional-tail back-compat pins: a pre-cadence CreateCollection
+    /// frame (no trailing `checkpoint_every`) still decodes, and a
+    /// pre-breakdown Stats frame (no per-collection section) still
+    /// decodes — new fields default instead of erroring.
+    #[test]
+    fn optional_tails_tolerate_old_frames() {
+        let with_tail = Request::CreateCollection {
+            name: "c".into(),
+            scheme: Scheme::TwoBit,
+            w: 0.75,
+            bits: 2,
+            k: 64,
+            seed: 9,
+            checkpoint_every: 0,
+        };
+        let mut old_frame = with_tail.encode();
+        assert_eq!(old_frame[0], 10);
+        old_frame.truncate(old_frame.len() - 8); // strip the tail
+        assert_eq!(Request::decode(&old_frame).unwrap(), with_tail);
+        // A *partial* tail is still a truncated frame, not a default.
+        let mut torn = with_tail.encode();
+        torn.truncate(torn.len() - 3);
+        assert!(Request::decode(&torn).is_err());
+
+        // A Stats response without a breakdown emits NO section at all
+        // — byte-identical to the pre-breakdown format, so pre-PR5
+        // clients (whose decoder rejects trailing bytes) keep working —
+        // and still round-trips through the tolerant new decoder.
+        let stats = Response::Stats(StatsSnapshot {
+            registered: 7,
+            kernel: "swar".into(),
+            ..Default::default()
+        });
+        let bytes = stats.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), stats);
+        let mut with_section = bytes.clone();
+        with_section.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(
+            bytes.len() + 4,
+            with_section.len(),
+            "empty sections must be omitted, not encoded as a zero count"
+        );
+        assert_eq!(Response::decode(&with_section).unwrap(), stats);
+
+        // Stats request: bare legacy [4] vs the [4, 1] detail tail.
+        assert_eq!(Request::Stats.encode(), vec![4u8]);
+        assert_eq!(Request::StatsDetailed.encode(), vec![4u8, 1]);
+        assert_eq!(Request::decode(&[4u8]).unwrap(), Request::Stats);
+        assert_eq!(Request::decode(&[4u8, 1]).unwrap(), Request::StatsDetailed);
+        assert!(Request::decode(&[4u8, 9]).is_err());
+    }
+
     #[test]
     fn response_roundtrips() {
         roundtrip_resp(Response::Registered { id: "x".into() });
@@ -918,6 +1109,22 @@ mod tests {
             maintenance_wakeups: 77,
             connections: 12,
             collections: 3,
+            per_collection: vec![
+                CollectionStats {
+                    name: "default".into(),
+                    rows: 10,
+                    pending_rows: 2,
+                    wal_bytes: 4096,
+                    index_buckets: 321,
+                },
+                CollectionStats {
+                    name: "web".into(),
+                    rows: 0,
+                    pending_rows: 0,
+                    wal_bytes: 0,
+                    index_buckets: 0,
+                },
+            ],
             ..Default::default()
         }));
         roundtrip_resp(Response::Collections {

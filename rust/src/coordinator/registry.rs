@@ -49,14 +49,20 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::{CollectionInfo, KnnHit, Response};
 use crate::coordinator::store::{DrainSignal, SketchStore};
 use crate::estimator::CollisionEstimator;
+use crate::lsh::IndexConfig;
 use crate::projection::{ProjectionConfig, Projector};
 use crate::scan::EpochConfig;
 
 /// Name of the implicit collection legacy (no-namespace) frames route to.
 pub const DEFAULT_COLLECTION: &str = "default";
 
-/// Registry MANIFEST file magic (version in the name: `CRPMANI1`).
-pub const MANIFEST_MAGIC: &[u8; 8] = b"CRPMANI1";
+/// Registry MANIFEST file magic (version in the name: `CRPMANI2` adds
+/// per-collection options — checkpoint cadence + index shape).
+pub const MANIFEST_MAGIC: &[u8; 8] = b"CRPMANI2";
+
+/// The PR-4 MANIFEST magic; still readable (entries carry no options,
+/// which default from the spec).
+pub const MANIFEST_MAGIC_V1: &[u8; 8] = b"CRPMANI1";
 
 /// Upper bound on collection-name bytes (also a directory name).
 const MAX_NAME: usize = 64;
@@ -121,6 +127,34 @@ impl CollectionSpec {
     }
 }
 
+/// Per-collection serving options — everything beyond the coding
+/// identity: checkpoint cadence and the banded-index shape. Recorded in
+/// the MANIFEST next to the spec so a restart reproduces both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollectionOptions {
+    /// Logged rows between automatic checkpoints for this collection;
+    /// 0 falls back to the server's global `--checkpoint-every`.
+    pub checkpoint_every: u64,
+    /// Banded multi-probe index shape serving `ApproxTopK`.
+    pub index: IndexConfig,
+}
+
+impl CollectionOptions {
+    /// Defaults for a spec: global checkpoint cadence, index shape
+    /// derived from the sketch shape.
+    pub fn for_spec(spec: &CollectionSpec) -> CollectionOptions {
+        CollectionOptions {
+            checkpoint_every: 0,
+            index: IndexConfig::for_shape(spec.k, spec.bits()),
+        }
+    }
+
+    fn validate(&self, spec: &CollectionSpec) -> crate::Result<()> {
+        self.index
+            .validate(spec.k, crate::coding::supported_width(spec.bits()))
+    }
+}
+
 /// Fused bulk-ingest state: one encoder (cached offsets + scratch) and
 /// one word buffer, reused across `RegisterBatch` requests.
 struct BulkIngest {
@@ -133,6 +167,7 @@ struct BulkIngest {
 pub struct Collection {
     pub name: String,
     pub spec: CollectionSpec,
+    pub options: CollectionOptions,
     pub k: usize,
     pub store: Arc<SketchStore>,
     pub estimator: CollisionEstimator,
@@ -152,6 +187,7 @@ impl Collection {
     fn open(
         name: &str,
         spec: CollectionSpec,
+        options: CollectionOptions,
         projector: Arc<Projector>,
         epoch: EpochConfig,
         batcher_cfg: BatcherConfig,
@@ -160,6 +196,7 @@ impl Collection {
         signal: Arc<DrainSignal>,
     ) -> crate::Result<Arc<Collection>> {
         spec.validate()?;
+        options.validate(&spec)?;
         anyhow::ensure!(
             projector.cfg.k == spec.k && projector.cfg.seed == spec.seed,
             "projector shape (k={}, seed={}) does not match collection spec (k={}, seed={})",
@@ -176,7 +213,12 @@ impl Collection {
             metrics.clone(),
         );
         let bits = coding.bits_per_code();
-        let store = Arc::new(SketchStore::with_arena_config(spec.k, bits, epoch));
+        let store = Arc::new(SketchStore::with_arena_index(
+            spec.k,
+            bits,
+            epoch,
+            options.index,
+        ));
         store.delegate_drains(signal);
         let durability = match durability_cfg {
             Some(dcfg) => {
@@ -189,6 +231,7 @@ impl Collection {
         Ok(Arc::new(Collection {
             name: name.to_string(),
             spec,
+            options,
             k: spec.k,
             estimator: CollisionEstimator::new(coding.clone()),
             batcher,
@@ -387,6 +430,51 @@ impl Collection {
         Response::TopK { results }
     }
 
+    /// Approximate batched top-k through the banded index: bucket
+    /// candidates reranked through the exact kernels, pending rows
+    /// swept exactly (see [`crate::scan::EpochArena::scan_topk_approx`]).
+    /// `probes` 0 uses the collection's configured default.
+    pub(crate) fn approx_topk(&self, vectors: Vec<Vec<f32>>, n: u32, probes: u32) -> Response {
+        let mut queries = Vec::with_capacity(vectors.len());
+        for vector in vectors {
+            match self.batcher.sketch(vector) {
+                Ok(q) => queries.push(q),
+                Err(e) => {
+                    return Response::Error {
+                        message: format!("sketch failed: {e}"),
+                    }
+                }
+            }
+        }
+        self.metrics
+            .knn_queries
+            .fetch_add(queries.len() as u64, Ordering::Relaxed);
+        let probes = if probes == 0 {
+            self.options.index.probes
+        } else {
+            probes as usize
+        };
+        let arena = self.store.arena().expect("collection store is arena-backed");
+        let results = arena
+            .scan_topk_approx_batch(&queries, n as usize, probes)
+            .into_iter()
+            .map(|hits| self.to_knn_hits(hits))
+            .collect();
+        Response::TopK { results }
+    }
+
+    /// This collection's slice of the stats breakdown.
+    pub fn stats(&self) -> crate::coordinator::protocol::CollectionStats {
+        let arena = self.store.arena();
+        crate::coordinator::protocol::CollectionStats {
+            name: self.name.clone(),
+            rows: self.store.len() as u64,
+            pending_rows: arena.map(|a| a.pending_rows() as u64).unwrap_or(0),
+            wal_bytes: self.durability.as_ref().map(|d| d.wal_bytes()).unwrap_or(0),
+            index_buckets: arena.map(|a| a.index_buckets() as u64).unwrap_or(0),
+        }
+    }
+
     pub(crate) fn persist(&self) -> Response {
         match self.checkpoint() {
             Ok(Some((rows, wal_bytes))) => Response::Persisted { rows, wal_bytes },
@@ -527,7 +615,10 @@ impl Registry {
             Some(root) => {
                 std::fs::create_dir_all(&root)?;
                 let manifest = read_manifest(&manifest_path(&root))?;
-                if let Some((_, disk)) = manifest.iter().find(|(n, _)| n == DEFAULT_COLLECTION) {
+                let mut default_opts = CollectionOptions::for_spec(&default_spec);
+                if let Some((_, disk, opts)) =
+                    manifest.iter().find(|(n, _, _)| n == DEFAULT_COLLECTION)
+                {
                     anyhow::ensure!(
                         disk.matches(&default_spec),
                         "collection \"default\" on disk was created with \
@@ -543,11 +634,17 @@ impl Registry {
                         default_spec.k,
                         default_spec.seed
                     );
+                    default_opts = *opts;
                 }
-                reg.install(DEFAULT_COLLECTION, default_spec, Some(default_projector))?;
-                for (name, spec) in manifest {
+                reg.install(
+                    DEFAULT_COLLECTION,
+                    default_spec,
+                    default_opts,
+                    Some(default_projector),
+                )?;
+                for (name, spec, opts) in manifest {
                     if name != DEFAULT_COLLECTION {
-                        reg.install(&name, spec, None)?;
+                        reg.install(&name, spec, opts, None)?;
                     }
                 }
                 // Records a freshly-minted default entry; a no-op
@@ -558,6 +655,7 @@ impl Registry {
                 let c = Collection::open(
                     DEFAULT_COLLECTION,
                     default_spec,
+                    CollectionOptions::for_spec(&default_spec),
                     default_projector,
                     reg.cfg.epoch.clone(),
                     reg.cfg.batcher.clone(),
@@ -580,11 +678,17 @@ impl Registry {
     }
 
     /// Durability config for `name` in root mode, `None` otherwise.
-    fn durability_for(&self, name: &str) -> Option<DurabilityConfig> {
+    /// A nonzero per-collection cadence overrides the global one.
+    fn durability_for(&self, name: &str, opts: &CollectionOptions) -> Option<DurabilityConfig> {
+        let every = if opts.checkpoint_every > 0 {
+            opts.checkpoint_every
+        } else {
+            self.cfg.checkpoint_every
+        };
         self.cfg.root.as_ref().map(|root| DurabilityConfig {
             snapshot: root.join(name).join("snap").join("snapshot.bin"),
             wal_dir: root.join(name).join("wal"),
-            checkpoint_every: self.cfg.checkpoint_every,
+            checkpoint_every: every,
             fsync: self.cfg.fsync,
         })
     }
@@ -596,6 +700,7 @@ impl Registry {
         &self,
         name: &str,
         spec: CollectionSpec,
+        options: CollectionOptions,
         projector: Option<Arc<Projector>>,
     ) -> crate::Result<Arc<Collection>> {
         let projector = match projector {
@@ -609,10 +714,11 @@ impl Registry {
         let c = Collection::open(
             name,
             spec,
+            options,
             projector,
             self.cfg.epoch.clone(),
             self.cfg.batcher.clone(),
-            self.durability_for(name),
+            self.durability_for(name, &options),
             self.metrics.clone(),
             self.signal.clone(),
         )?;
@@ -625,9 +731,15 @@ impl Registry {
     /// directory left by a crashed drop is cleared first, the
     /// collection opens durable, and the MANIFEST is rewritten before
     /// the create is acknowledged.
-    pub fn create(&self, name: &str, spec: CollectionSpec) -> crate::Result<Arc<Collection>> {
+    pub fn create(
+        &self,
+        name: &str,
+        spec: CollectionSpec,
+        options: CollectionOptions,
+    ) -> crate::Result<Arc<Collection>> {
         validate_name(name)?;
         spec.validate()?;
+        options.validate(&spec)?;
         let _admin = self.admin_mu.lock().unwrap();
         anyhow::ensure!(
             !self.collections.read().unwrap().contains_key(name),
@@ -641,7 +753,7 @@ impl Registry {
                 std::fs::remove_dir_all(&dir)?;
             }
         }
-        let c = self.install(name, spec, None)?;
+        let c = self.install(name, spec, options, None)?;
         if let Err(e) = self.write_manifest_locked() {
             // Roll back: an unrecorded durable collection would collide
             // with a future create of the same name.
@@ -722,8 +834,11 @@ impl Registry {
         let Some(root) = &self.cfg.root else {
             return Ok(());
         };
-        let entries: Vec<(String, CollectionSpec)> =
-            self.list().iter().map(|c| (c.name.clone(), c.spec)).collect();
+        let entries: Vec<(String, CollectionSpec, CollectionOptions)> = self
+            .list()
+            .iter()
+            .map(|c| (c.name.clone(), c.spec, c.options))
+            .collect();
         write_manifest(&manifest_path(root), &entries)
     }
 }
@@ -757,16 +872,23 @@ fn manifest_path(root: &Path) -> PathBuf {
 /// deterministic bytes):
 ///
 /// ```text
-/// magic "CRPMANI1" | u32 n |
-///   n × ( u32 name_len | name | u8 scheme | f64 w | u32 bits | u64 k | u64 seed )
+/// magic "CRPMANI2" | u32 n |
+///   n × ( u32 name_len | name | u8 scheme | f64 w | u32 bits | u64 k | u64 seed
+///         | u64 checkpoint_every | u32 bands | u32 band_bits | u32 probes )
 /// | u32 crc32 (everything after the magic)
 /// ```
-fn write_manifest(path: &Path, entries: &[(String, CollectionSpec)]) -> crate::Result<()> {
-    let mut sorted: Vec<&(String, CollectionSpec)> = entries.iter().collect();
+///
+/// `CRPMANI1` files (no per-entry options) are still read; options
+/// default from each entry's spec.
+fn write_manifest(
+    path: &Path,
+    entries: &[(String, CollectionSpec, CollectionOptions)],
+) -> crate::Result<()> {
+    let mut sorted: Vec<&(String, CollectionSpec, CollectionOptions)> = entries.iter().collect();
     sorted.sort_by(|a, b| a.0.cmp(&b.0));
-    let mut payload = Vec::with_capacity(16 + entries.len() * 48);
+    let mut payload = Vec::with_capacity(16 + entries.len() * 68);
     payload.extend_from_slice(&(sorted.len() as u32).to_le_bytes());
-    for (name, spec) in sorted {
+    for (name, spec, opts) in sorted {
         payload.extend_from_slice(&(name.len() as u32).to_le_bytes());
         payload.extend_from_slice(name.as_bytes());
         payload.push(spec.scheme.wire_code());
@@ -774,6 +896,10 @@ fn write_manifest(path: &Path, entries: &[(String, CollectionSpec)]) -> crate::R
         payload.extend_from_slice(&spec.bits().to_le_bytes());
         payload.extend_from_slice(&(spec.k as u64).to_le_bytes());
         payload.extend_from_slice(&spec.seed.to_le_bytes());
+        payload.extend_from_slice(&opts.checkpoint_every.to_le_bytes());
+        payload.extend_from_slice(&(opts.index.bands as u32).to_le_bytes());
+        payload.extend_from_slice(&opts.index.band_bits.to_le_bytes());
+        payload.extend_from_slice(&(opts.index.probes as u32).to_le_bytes());
     }
     let mut bytes = Vec::with_capacity(12 + payload.len());
     bytes.extend_from_slice(MANIFEST_MAGIC);
@@ -788,19 +914,23 @@ fn write_manifest(path: &Path, entries: &[(String, CollectionSpec)]) -> crate::R
     Ok(())
 }
 
-/// Read and CRC-check a MANIFEST. A missing file is an empty registry;
-/// a corrupt one is an error (silently dropping collections would lose
-/// acknowledged data).
-fn read_manifest(path: &Path) -> crate::Result<Vec<(String, CollectionSpec)>> {
+/// Read and CRC-check a MANIFEST (either version). A missing file is an
+/// empty registry; a corrupt one is an error (silently dropping
+/// collections would lose acknowledged data).
+fn read_manifest(
+    path: &Path,
+) -> crate::Result<Vec<(String, CollectionSpec, CollectionOptions)>> {
     if !path.is_file() {
         return Ok(Vec::new());
     }
     let bytes = std::fs::read(path)?;
     anyhow::ensure!(
-        bytes.len() >= MANIFEST_MAGIC.len() + 8 && &bytes[..8] == MANIFEST_MAGIC,
+        bytes.len() >= MANIFEST_MAGIC.len() + 8
+            && (&bytes[..8] == MANIFEST_MAGIC || &bytes[..8] == MANIFEST_MAGIC_V1),
         "not a CRP registry MANIFEST: {}",
         path.display()
     );
+    let v2 = &bytes[..8] == MANIFEST_MAGIC;
     let payload = &bytes[8..bytes.len() - 4];
     let want = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
     anyhow::ensure!(
@@ -854,7 +984,20 @@ fn read_manifest(path: &Path) -> crate::Result<Vec<(String, CollectionSpec)>> {
             "MANIFEST entry {name:?} records {bits} bit(s)/code but its scheme packs {}",
             spec.bits()
         );
-        out.push((name, spec));
+        let opts = if v2 {
+            CollectionOptions {
+                checkpoint_every: c.u64()?,
+                index: IndexConfig {
+                    bands: c.u32()? as usize,
+                    band_bits: c.u32()?,
+                    probes: c.u32()? as usize,
+                },
+            }
+        } else {
+            CollectionOptions::for_spec(&spec)
+        };
+        opts.validate(&spec)?;
+        out.push((name, spec, opts));
     }
     anyhow::ensure!(c.pos == payload.len(), "trailing MANIFEST bytes");
     Ok(out)
@@ -879,10 +1022,30 @@ mod tests {
     fn manifest_roundtrips_and_checks_crc() {
         let dir = temp_dir("manifest");
         let path = dir.join("MANIFEST");
+        let custom_opts = CollectionOptions {
+            checkpoint_every: 12_345,
+            index: IndexConfig {
+                bands: 8,
+                band_bits: 16,
+                probes: 4,
+            },
+        };
         let entries = vec![
-            ("default".to_string(), spec(Scheme::TwoBit, 0.75, 256, 0)),
-            ("uni4".to_string(), spec(Scheme::Uniform, 1.0, 128, 11)),
-            ("signs".to_string(), spec(Scheme::OneBit, 0.0, 512, 7)),
+            (
+                "default".to_string(),
+                spec(Scheme::TwoBit, 0.75, 256, 0),
+                CollectionOptions::for_spec(&spec(Scheme::TwoBit, 0.75, 256, 0)),
+            ),
+            (
+                "uni4".to_string(),
+                spec(Scheme::Uniform, 1.0, 128, 11),
+                custom_opts,
+            ),
+            (
+                "signs".to_string(),
+                spec(Scheme::OneBit, 0.0, 512, 7),
+                CollectionOptions::for_spec(&spec(Scheme::OneBit, 0.0, 512, 7)),
+            ),
         ];
         write_manifest(&path, &entries).unwrap();
         let mut back = read_manifest(&path).unwrap();
@@ -890,9 +1053,10 @@ mod tests {
         let mut want = entries.clone();
         want.sort_by(|a, b| a.0.cmp(&b.0));
         assert_eq!(back.len(), 3);
-        for ((bn, bs), (wn, ws)) in back.iter().zip(&want) {
+        for ((bn, bs, bo), (wn, ws, wo)) in back.iter().zip(&want) {
             assert_eq!(bn, wn);
             assert!(bs.matches(ws), "{bn}");
+            assert_eq!(bo, wo, "{bn}: options must round-trip");
         }
         // Missing file = empty registry, not an error.
         assert!(read_manifest(&dir.join("nope")).unwrap().is_empty());
@@ -905,6 +1069,35 @@ mod tests {
         // Garbage is rejected by the magic.
         std::fs::write(&path, b"not a manifest").unwrap();
         assert!(read_manifest(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A PR-4 era `CRPMANI1` file (no per-entry options) still reads;
+    /// options default from each entry's spec.
+    #[test]
+    fn manifest_v1_files_still_read() {
+        let dir = temp_dir("manifest_v1");
+        let path = dir.join("MANIFEST");
+        let s = spec(Scheme::TwoBit, 0.75, 96, 3);
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&4u32.to_le_bytes());
+        payload.extend_from_slice(b"two2");
+        payload.push(s.scheme.wire_code());
+        payload.extend_from_slice(&s.w.to_le_bytes());
+        payload.extend_from_slice(&s.bits().to_le_bytes());
+        payload.extend_from_slice(&(s.k as u64).to_le_bytes());
+        payload.extend_from_slice(&s.seed.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MANIFEST_MAGIC_V1);
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&crc32_update(0, &payload).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let back = read_manifest(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].0, "two2");
+        assert!(back[0].1.matches(&s));
+        assert_eq!(back[0].2, CollectionOptions::for_spec(&s));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -956,10 +1149,25 @@ mod tests {
         .unwrap();
         assert_eq!(reg.len(), 1);
         let s4 = spec(Scheme::Uniform, 1.0, 48, 9);
-        let c = reg.create("uni4", s4).unwrap();
+        let o4 = CollectionOptions::for_spec(&s4);
+        let c = reg.create("uni4", s4, o4).unwrap();
         assert_eq!(c.spec.bits(), 4);
-        assert!(reg.create("uni4", s4).is_err());
-        assert!(reg.create("bad/name", spec(Scheme::OneBit, 0.0, 8, 0)).is_err());
+        assert!(c.store.arena().unwrap().has_index());
+        assert!(reg.create("uni4", s4, o4).is_err());
+        let s1 = spec(Scheme::OneBit, 0.0, 8, 0);
+        assert!(reg
+            .create("bad/name", s1, CollectionOptions::for_spec(&s1))
+            .is_err());
+        // An index shape that doesn't fit the sketch is rejected too.
+        let bad_opts = CollectionOptions {
+            checkpoint_every: 0,
+            index: IndexConfig {
+                bands: 64,
+                band_bits: 12,
+                probes: 2,
+            },
+        };
+        assert!(reg.create("badidx", s4, bad_opts).is_err());
         assert!(reg.drop_collection(DEFAULT_COLLECTION).is_err());
 
         // Same id in two collections: fully isolated rows.

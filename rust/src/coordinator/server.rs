@@ -13,8 +13,9 @@ use crate::coordinator::maintenance::{Maintenance, MaintenanceConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::{self, Request, Response};
 use crate::coordinator::registry::{
-    Collection, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION,
+    Collection, CollectionOptions, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION,
 };
+use crate::lsh::IndexConfig;
 use crate::coordinator::store::SketchStore;
 use crate::estimator::CollisionEstimator;
 use crate::projection::Projector;
@@ -190,7 +191,8 @@ impl ServiceState {
     fn handle_in(&self, collection: Option<&str>, req: Request) -> Response {
         match req {
             Request::Ping => Response::Pong,
-            Request::Stats => self.stats(),
+            Request::Stats => self.stats(false),
+            Request::StatsDetailed => self.stats(true),
             Request::Scoped { .. } => Response::Error {
                 message: "nested Scoped request".to_string(),
             },
@@ -201,6 +203,7 @@ impl ServiceState {
                 bits,
                 k,
                 seed,
+                checkpoint_every,
             } => {
                 let spec = CollectionSpec {
                     scheme,
@@ -218,7 +221,11 @@ impl ServiceState {
                         ),
                     };
                 }
-                match self.registry.create(&name, spec) {
+                let options = CollectionOptions {
+                    checkpoint_every,
+                    index: IndexConfig::for_shape(spec.k, spec.bits()),
+                };
+                match self.registry.create(&name, spec, options) {
                     Ok(_) => Response::CollectionCreated { name },
                     Err(e) => Response::Error {
                         message: format!("create collection failed: {e}"),
@@ -281,13 +288,20 @@ impl ServiceState {
                 Ok(c) => c.topk(vectors, n),
                 Err(resp) => resp,
             },
+            Request::ApproxTopK { vectors, n, probes } => match self.resolve(collection) {
+                Ok(c) => c.approx_topk(vectors, n, probes),
+                Err(resp) => resp,
+            },
         }
     }
 
     /// Aggregate stats across the registry: arena and WAL counters are
     /// summed over collections; the kernel label is `default`'s (every
-    /// collection picks its own tier by bit width).
-    fn stats(&self) -> Response {
+    /// collection picks its own tier by bit width). With `detail`
+    /// (`StatsDetailed`), the per-collection section rides after the
+    /// aggregates, sorted by name like `ListCollections`; without it
+    /// the response is byte-identical to the pre-breakdown format.
+    fn stats(&self, detail: bool) -> Response {
         let mut st = self.metrics.snapshot();
         let collections = self.registry.list();
         st.collections = collections.len() as u64;
@@ -301,6 +315,9 @@ impl ServiceState {
                 st.wal_records += d.wal_records();
                 st.wal_bytes += d.wal_bytes();
                 st.last_checkpoint_rows += d.last_checkpoint_rows();
+            }
+            if detail {
+                st.per_collection.push(c.stats());
             }
         }
         if let Some(arena) = self.default.store.arena() {
@@ -593,6 +610,61 @@ mod tests {
     }
 
     #[test]
+    fn approx_topk_routes_and_falls_back_to_exact_on_small_stores() {
+        let s = state(128);
+        let mut g = crate::mathx::Pcg64::new(3, 3);
+        for i in 0..50 {
+            let v: Vec<f32> = (0..24).map(|_| g.next_f64() as f32 - 0.5).collect();
+            s.handle(Request::Register {
+                id: format!("a{i:02}"),
+                vector: v,
+            });
+        }
+        let queries: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..24).map(|_| g.next_f64() as f32 - 0.5).collect())
+            .collect();
+        // Below the approx floor the index path falls back to the exact
+        // sweep, so ApproxTopK ≡ TopK byte-identically here.
+        let exact = s.handle(Request::TopK {
+            vectors: queries.clone(),
+            n: 5,
+        });
+        let approx = s.handle(Request::ApproxTopK {
+            vectors: queries,
+            n: 5,
+            probes: 0,
+        });
+        assert_eq!(exact, approx);
+        // Unknown collections error cleanly on the approx path too.
+        match s.handle(Request::Scoped {
+            collection: "ghost".into(),
+            inner: Box::new(Request::ApproxTopK {
+                vectors: vec![vec![1.0; 8]],
+                n: 1,
+                probes: 2,
+            }),
+        }) {
+            Response::Error { message } => assert!(message.contains("ghost"), "{message}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The detailed stats breakdown names every collection with its
+        // gauges; the plain Stats answer stays aggregates-only.
+        match s.handle(Request::StatsDetailed) {
+            Response::Stats(st) => {
+                assert_eq!(st.per_collection.len(), 1);
+                assert_eq!(st.per_collection[0].name, "default");
+                assert_eq!(st.per_collection[0].rows, 50);
+                assert_eq!(st.per_collection[0].wal_bytes, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::Stats) {
+            Response::Stats(st) => assert!(st.per_collection.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
     fn stats_track_activity() {
         let s = state(64);
         s.handle(Request::Register {
@@ -669,6 +741,7 @@ mod tests {
             bits: 2, // h_w at w=1 packs 4 bits, not 2
             k: 32,
             seed: 1,
+            checkpoint_every: 0,
         }) {
             Response::Error { message } => {
                 assert!(message.contains("4 bit"), "{message}")
@@ -682,6 +755,7 @@ mod tests {
             bits: 0, // 0 = derive
             k: 32,
             seed: 1,
+            checkpoint_every: 0,
         }) {
             Response::CollectionCreated { name } => assert_eq!(name, "u4"),
             other => panic!("unexpected {other:?}"),

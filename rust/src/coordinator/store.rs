@@ -122,6 +122,22 @@ impl SketchStore {
         s
     }
 
+    /// As [`SketchStore::with_arena_config`], additionally maintaining
+    /// the banded multi-probe candidate index
+    /// ([`crate::lsh::CodeIndex`]) over the sealed arena so
+    /// `ApproxTopK` queries run in bucket-bounded work. The index rides
+    /// every drain; writers pay nothing extra on the put path.
+    pub fn with_arena_index(
+        k: usize,
+        bits: u32,
+        cfg: EpochConfig,
+        index: crate::lsh::IndexConfig,
+    ) -> Self {
+        let mut s = Self::new();
+        s.arena = Some(EpochArena::with_index_config(k, bits, cfg, index));
+        s
+    }
+
     /// The columnar mirror, when in arena-backed mode. Scans through it
     /// never block `put`/`remove` (epoch-buffered writes).
     pub fn arena(&self) -> Option<&EpochArena> {

@@ -15,4 +15,4 @@ pub mod synth;
 pub mod pairs;
 
 pub use sparse::{CsrMatrix, Dataset};
-pub use synth::{SynthSpec, SynthKind};
+pub use synth::{planted_code_corpus, SynthSpec, SynthKind};

@@ -245,9 +245,72 @@ impl SynthSpec {
     }
 }
 
+/// Synthetic ANN corpus in *projection space*: the paper's model has
+/// projected coordinates iid N(0,1), so rows are sampled directly as
+/// `k` Gaussian values and encoded with `params`. For each of
+/// `queries` base vectors, `planted` neighbors at similarity `rho`
+/// (`rho·base + √(1−ρ²)·noise`) are hidden among the first rows; the
+/// remainder up to `n` are independent. Returns `(rows, queries)` with
+/// the query being each base itself — the exact top-k for query `i` is
+/// then dominated by its planted neighbors, which is what a recall
+/// measurement against the exact scanner needs. Shared by the ANN
+/// acceptance tests, `scan_bench`, and `crp topk --approx`.
+pub fn planted_code_corpus(
+    params: &crate::coding::CodingParams,
+    k: usize,
+    n: usize,
+    queries: usize,
+    planted: usize,
+    rho: f64,
+    seed: u64,
+) -> (Vec<crate::coding::PackedCodes>, Vec<crate::coding::PackedCodes>) {
+    assert!(queries * planted <= n, "planted rows exceed the corpus");
+    let bits = params.bits_per_code();
+    let encode = |v: &[f32]| crate::coding::pack_codes(&params.encode(v), bits);
+    let mut ns = NormalSampler::new(seed, 2);
+    let c = (1.0 - rho * rho).sqrt();
+    let mut buf = vec![0f32; k];
+    let mut rows = Vec::with_capacity(n);
+    let mut qs = Vec::with_capacity(queries);
+    for _ in 0..queries {
+        ns.fill_f32(&mut buf);
+        for _ in 0..planted {
+            let nb: Vec<f32> = buf
+                .iter()
+                .map(|&x| (rho * x as f64 + c * ns.next()) as f32)
+                .collect();
+            rows.push(encode(&nb));
+        }
+        qs.push(encode(&buf));
+    }
+    while rows.len() < n {
+        ns.fill_f32(&mut buf);
+        rows.push(encode(&buf));
+    }
+    (rows, qs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn planted_corpus_shapes_and_similarity() {
+        let params = crate::coding::CodingParams::new(crate::coding::Scheme::TwoBit, 0.75);
+        let (rows, qs) = planted_code_corpus(&params, 64, 500, 4, 3, 0.95, 9);
+        assert_eq!(rows.len(), 500);
+        assert_eq!(qs.len(), 4);
+        // A query's planted neighbors collide far above the random
+        // baseline (~0.25 per code for 2-bit at rho = 0).
+        for (qi, q) in qs.iter().enumerate() {
+            for p in 0..3 {
+                let c = crate::coding::collision_count_packed(q, &rows[qi * 3 + p]);
+                assert!(c > 32, "query {qi} planted {p}: {c}/64");
+            }
+            let far = crate::coding::collision_count_packed(q, &rows[499]);
+            assert!(far < 32, "random row colliding {far}/64");
+        }
+    }
 
     #[test]
     fn shapes_match_spec() {

@@ -31,10 +31,16 @@
 //!   requests over TCP with dynamic batching and a fused
 //!   project→quantize→pack bulk-ingest path ([`coding::BatchEncoder`]);
 //!   [`scan`] answers `Knn` and batched `TopK` queries with a columnar
-//!   code arena swept by runtime-dispatched collision kernels (AVX2 →
-//!   SSE2 → portable SWAR, all byte-identical; `CRP_SCAN_KERNEL=swar`
-//!   forces the portable tier) into an exact top-k selection, sharded
-//!   across threads. The coordinator is multi-collection
+//!   code arena swept by runtime-dispatched collision kernels (AVX-512
+//!   `vpopcntq` → AVX2 → SSE2 → portable SWAR, all byte-identical;
+//!   `CRP_SCAN_KERNEL=swar|sse2|avx2|avx512` forces a tier) into an
+//!   exact top-k selection, sharded across threads; [`lsh`] turns the
+//!   same packed words into sub-linear retrieval — a banded multi-probe
+//!   [`lsh::CodeIndex`] over the sealed arena, maintained at every
+//!   epoch drain, serving `ApproxTopK` (bucket candidates reranked
+//!   through the same kernels, pending rows swept exactly, the exact
+//!   scan kept as the oracle and small-store fallback). The
+//!   coordinator is multi-collection
 //!   ([`coordinator::registry`]): one process serves many named
 //!   collections, each bundling its own projector, batcher, coding
 //!   scheme, arena-backed store, and durability — the paper's point
@@ -53,10 +59,14 @@
 //!   checkpoints serialize the sealed arena verbatim (`CRPSNAP2`
 //!   arena-image snapshots, written with no store lock held) then
 //!   truncate the WAL; a CRC-checked `MANIFEST` under `--data-dir`
-//!   records every collection's coding config so restart rebuilds the
-//!   whole registry byte-identically to the pre-crash server
-//!   (`crp serve --data-dir`, `crp collection create|drop|list`,
-//!   `crp recover`). Python never runs on the request path.
+//!   records every collection's coding config **and serving options**
+//!   (per-collection checkpoint cadence + banded-index shape) so
+//!   restart rebuilds the whole registry byte-identically to the
+//!   pre-crash server — the index itself is derived state, rebuilt
+//!   from the restored arena at the first drain (`crp serve
+//!   --data-dir`, `crp collection create|drop|list`, `crp recover`,
+//!   `crp topk --approx --probes`, `crp stats`). Python never runs on
+//!   the request path.
 //!
 //! ## Analysis stack
 //!

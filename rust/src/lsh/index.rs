@@ -1,0 +1,391 @@
+//! The banded code index: sub-linear candidate generation straight off
+//! packed arena words.
+//!
+//! [`CodeIndex`] slices each sketch's packed bit string into `bands`
+//! contiguous bands of `band_bits` bits (whole codes — `band_bits` is a
+//! multiple of the code width) and keys a bucket map per band on the
+//! band's raw value. No re-hashing happens anywhere: a band is read
+//! directly out of the `u64` words the [`crate::scan::CodeArena`]
+//! already stores, so indexing a row and probing a query both cost a
+//! few shifts per band. This is the classic LSH banding construction
+//! (Indyk–Motwani / Datar et al., the paper's Section 1.1 motivation)
+//! rebuilt over the serving arena: with `m = band_bits / bits` codes
+//! per band and per-code collision probability `P(ρ)`, a true neighbor
+//! shares at least one band with probability `1 − (1 − P(ρ)^m)^bands`,
+//! while a random row matches a band with probability `≈ P(0)^m` — the
+//! recall/cost dial the scheme's collision curve provides.
+//!
+//! **Multi-probe** widens recall without more bands: besides the exact
+//! band value, the query probes the values with one of the `probes`
+//! low-order band bits flipped — the adjacent quantizer bins of the
+//! band's leading code(s). More probes, more candidates, higher recall;
+//! the knob rides on the query, not the index.
+//!
+//! Buckets store *row indices* into the sealed arena. Rows are remapped
+//! wholesale by [`CodeIndex::rebuild`] when compaction moves them; the
+//! epoch layer ([`crate::scan::EpochArena`]) owns that lifecycle and
+//! keeps the index in lock-step with the sealed arena at every drain.
+
+use std::collections::HashMap;
+
+use crate::coding::supported_width;
+use crate::scan::CodeArena;
+
+/// Rows below which an approximate scan should fall back to the exact
+/// sweep: probing + rerank overhead beats a sequential pass only once
+/// the arena is big enough to prune.
+pub const APPROX_MIN_ROWS: usize = 1024;
+
+/// Shape of a banded index: how many bands, how wide, and how many
+/// extra low-order-bit probes a query spends per band by default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IndexConfig {
+    /// Contiguous bands keyed per row (each gets its own bucket map).
+    pub bands: usize,
+    /// Bits per band; a multiple of the code width, at most 64.
+    pub band_bits: u32,
+    /// Default extra probes per band (low-order single-bit flips of the
+    /// band value). 0 = exact-band probing only.
+    pub probes: usize,
+}
+
+impl IndexConfig {
+    /// A default shape for sketches of `k` codes at `bits` per code:
+    /// ~12-bit bands (whole codes), at most 32 bands. 12 bits keeps a
+    /// random row's per-band match probability around `P(0)^m ≈ 1e-4`
+    /// for the paper's 1/2-bit schemes — a few dozen candidates per
+    /// band at 10⁵ rows — while `1 − (1 − P(ρ)^m)^bands` stays ≥ 0.99
+    /// for ρ ≥ 0.95 neighbors.
+    pub fn for_shape(k: usize, bits: u32) -> IndexConfig {
+        let bits = supported_width(bits);
+        let m = (12 / bits as usize).max(1).min(k.max(1));
+        IndexConfig {
+            bands: (k / m).clamp(1, 32),
+            band_bits: m as u32 * bits,
+            probes: 2,
+        }
+    }
+
+    /// Reject shapes the index cannot serve for sketches of `k` codes
+    /// at `bits` per code (width already rounded by the caller).
+    pub fn validate(&self, k: usize, bits: u32) -> crate::Result<()> {
+        anyhow::ensure!(self.bands >= 1, "index needs at least one band");
+        anyhow::ensure!(
+            self.band_bits >= bits && self.band_bits <= 64 && self.band_bits % bits == 0,
+            "band width {} must be a multiple of the code width {bits} and at most 64",
+            self.band_bits
+        );
+        let codes_per_band = (self.band_bits / bits) as usize;
+        anyhow::ensure!(
+            self.bands * codes_per_band <= k,
+            "{} bands x {} codes/band exceed the sketch width {k}",
+            self.bands,
+            codes_per_band
+        );
+        // Probes beyond the band width are clamped at query time, so a
+        // sanity cap is all that's needed here.
+        anyhow::ensure!(
+            self.probes <= 64,
+            "{} probes per band is implausible (cap 64)",
+            self.probes
+        );
+        Ok(())
+    }
+}
+
+/// Read `width` bits starting at absolute bit `lo` out of a packed row.
+/// Codes never straddle words (widths divide 64), but a *band* of
+/// several codes may; at most two words are touched.
+#[inline]
+fn band_value(words: &[u64], lo: usize, width: u32) -> u64 {
+    let word = lo / 64;
+    let off = (lo % 64) as u32;
+    let mut v = words[word] >> off;
+    if off + width > 64 {
+        // off > 0 here, so the shift below is in [1, 63].
+        v |= words[word + 1] << (64 - off);
+    }
+    if width < 64 {
+        v &= (1u64 << width) - 1;
+    }
+    v
+}
+
+/// Banded multi-probe index over packed code rows.
+///
+/// Not internally synchronized: the owner serializes writes against the
+/// arena the rows point into (the epoch layer updates it under the
+/// sealed write lock it already holds for the drain).
+#[derive(Debug)]
+pub struct CodeIndex {
+    cfg: IndexConfig,
+    /// Absolute low bit of each band within a row's bit string.
+    band_lo: Vec<usize>,
+    /// One bucket map per band: band value → rows holding it.
+    buckets: Vec<HashMap<u64, Vec<u32>>>,
+    /// Rows currently indexed.
+    rows: usize,
+}
+
+impl CodeIndex {
+    /// An empty index for sketches of `k` codes at `bits` per code
+    /// (rounded up to a supported packing width first, like the arena).
+    /// Panics on a config [`IndexConfig::validate`] rejects — the
+    /// serving layer validates before construction.
+    pub fn new(k: usize, bits: u32, cfg: IndexConfig) -> CodeIndex {
+        let bits = supported_width(bits);
+        cfg.validate(k, bits)
+            .expect("index config matches the sketch shape");
+        let codes_per_band = (cfg.band_bits / bits) as usize;
+        let band_lo = (0..cfg.bands)
+            .map(|b| b * codes_per_band * bits as usize)
+            .collect();
+        CodeIndex {
+            cfg,
+            band_lo,
+            buckets: (0..cfg.bands).map(|_| HashMap::new()).collect(),
+            rows: 0,
+        }
+    }
+
+    pub fn config(&self) -> IndexConfig {
+        self.cfg
+    }
+
+    /// Rows currently indexed.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Occupied buckets across all bands (a shape/diagnostic gauge).
+    pub fn buckets(&self) -> usize {
+        self.buckets.iter().map(|m| m.len()).sum()
+    }
+
+    /// Index `row` under every band of its packed words (arena layout,
+    /// padding bits zero). The caller must not double-insert a row.
+    pub fn insert(&mut self, row: u32, words: &[u64]) {
+        for (b, &lo) in self.band_lo.iter().enumerate() {
+            let v = band_value(words, lo, self.cfg.band_bits);
+            self.buckets[b].entry(v).or_default().push(row);
+        }
+        self.rows += 1;
+    }
+
+    /// Un-index `row`, locating its entries through `words` (the exact
+    /// words it was inserted with — i.e. before the arena rewrites or
+    /// tombstones the row).
+    pub fn remove(&mut self, row: u32, words: &[u64]) {
+        for (b, &lo) in self.band_lo.iter().enumerate() {
+            let v = band_value(words, lo, self.cfg.band_bits);
+            if let Some(bucket) = self.buckets[b].get_mut(&v) {
+                if let Some(pos) = bucket.iter().position(|&r| r == row) {
+                    bucket.swap_remove(pos);
+                    if bucket.is_empty() {
+                        self.buckets[b].remove(&v);
+                    }
+                }
+            }
+        }
+        self.rows = self.rows.saturating_sub(1);
+    }
+
+    /// Drop everything, keeping allocated maps.
+    pub fn clear(&mut self) {
+        for m in &mut self.buckets {
+            m.clear();
+        }
+        self.rows = 0;
+    }
+
+    /// Rebuild from scratch over every live row of `arena` — the
+    /// compaction path (row ids move wholesale) and the recovery path
+    /// (a restored arena image carries no index; this derives it).
+    pub fn rebuild(&mut self, arena: &CodeArena) {
+        self.clear();
+        for row in 0..arena.rows_allocated() as u32 {
+            if arena.id_of(row).is_some() {
+                self.insert(row, arena.row_words(row));
+            }
+        }
+    }
+
+    /// Candidate rows for a query in arena layout: the union, over all
+    /// bands, of the bucket at the query's band value plus the buckets
+    /// at that value with one of the `probes` low-order bits flipped.
+    /// Sorted ascending and deduplicated. A row whose every band
+    /// matches the query (e.g. an exact duplicate) is always returned.
+    pub fn candidates(&self, qwords: &[u64], probes: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        let flips = probes.min(self.cfg.band_bits as usize);
+        for (b, &lo) in self.band_lo.iter().enumerate() {
+            let v = band_value(qwords, lo, self.cfg.band_bits);
+            if let Some(bucket) = self.buckets[b].get(&v) {
+                out.extend_from_slice(bucket);
+            }
+            for p in 0..flips {
+                if let Some(bucket) = self.buckets[b].get(&(v ^ (1u64 << p))) {
+                    out.extend_from_slice(bucket);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::pack_codes;
+    use crate::mathx::Pcg64;
+
+    fn cfg(bands: usize, band_bits: u32, probes: usize) -> IndexConfig {
+        IndexConfig {
+            bands,
+            band_bits,
+            probes,
+        }
+    }
+
+    #[test]
+    fn band_value_reads_straddling_bands() {
+        // Two words; a 16-bit band starting at bit 56 spans both.
+        let words = [0xABCD_EF01_2345_6789u64, 0x0000_0000_0000_10FEu64];
+        assert_eq!(band_value(&words, 0, 16), 0x6789);
+        assert_eq!(band_value(&words, 16, 16), 0x2345);
+        assert_eq!(band_value(&words, 56, 16), 0xFEAB);
+        assert_eq!(band_value(&words, 64, 16), 0x10FE);
+        assert_eq!(band_value(&words, 0, 64), words[0]);
+    }
+
+    #[test]
+    fn for_shape_scales_with_width() {
+        let c = IndexConfig::for_shape(256, 2);
+        assert_eq!((c.bands, c.band_bits), (32, 12));
+        let c = IndexConfig::for_shape(1024, 1);
+        assert_eq!((c.bands, c.band_bits), (32, 12));
+        let c = IndexConfig::for_shape(64, 4);
+        assert_eq!((c.bands, c.band_bits), (21, 12));
+        let c = IndexConfig::for_shape(32, 16);
+        assert_eq!((c.bands, c.band_bits), (32, 16));
+        // Tiny sketches still validate: one band covering what exists.
+        let c = IndexConfig::for_shape(4, 2);
+        assert_eq!(c.bands, 1);
+        c.validate(4, 2).unwrap();
+        IndexConfig::for_shape(1, 1).validate(1, 1).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        assert!(cfg(0, 12, 2).validate(64, 2).is_err());
+        assert!(cfg(4, 3, 2).validate(64, 2).is_err(), "not a code multiple");
+        assert!(cfg(4, 0, 2).validate(64, 2).is_err());
+        assert!(cfg(33, 4, 2).validate(64, 2).is_err(), "bands overflow k");
+        assert!(cfg(4, 12, 65).validate(64, 2).is_err(), "implausible probes");
+        assert!(cfg(4, 12, 13).validate(64, 2).is_ok(), "clamped at query");
+        assert!(cfg(8, 12, 2).validate(64, 2).is_ok());
+    }
+
+    #[test]
+    fn exact_duplicates_are_always_candidates() {
+        let mut g = Pcg64::new(7, 0);
+        let k = 96;
+        let mut idx = CodeIndex::new(k, 2, cfg(8, 12, 0));
+        let rows: Vec<_> = (0..200)
+            .map(|_| {
+                let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+                pack_codes(&codes, 2)
+            })
+            .collect();
+        for (i, p) in rows.iter().enumerate() {
+            idx.insert(i as u32, p.words());
+        }
+        assert_eq!(idx.rows(), 200);
+        assert!(idx.buckets() > 0);
+        for (i, p) in rows.iter().enumerate() {
+            let cands = idx.candidates(p.words(), 0);
+            assert!(cands.binary_search(&(i as u32)).is_ok(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn candidates_are_sorted_dedup_and_prune() {
+        let mut g = Pcg64::new(9, 1);
+        let k = 128;
+        let mut idx = CodeIndex::new(k, 1, cfg(10, 12, 2));
+        for i in 0..2000u32 {
+            let codes: Vec<u16> = (0..k).map(|_| g.next_below(2) as u16).collect();
+            idx.insert(i, pack_codes(&codes, 1).words());
+        }
+        let q: Vec<u16> = (0..k).map(|_| g.next_below(2) as u16).collect();
+        let cands = idx.candidates(pack_codes(&q, 1).words(), 2);
+        let mut sorted = cands.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(cands, sorted, "sorted + deduplicated");
+        // Random 1-bit rows match a 12-bit band w.p. 2^-12; even with
+        // 10 bands x 3 probes the candidate set must prune hard.
+        assert!(
+            cands.len() < 400,
+            "no pruning: {} candidates of 2000",
+            cands.len()
+        );
+    }
+
+    #[test]
+    fn more_probes_only_add_candidates() {
+        let mut g = Pcg64::new(4, 4);
+        let k = 64;
+        let mut idx = CodeIndex::new(k, 2, cfg(8, 8, 4));
+        for i in 0..500u32 {
+            let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+            idx.insert(i, pack_codes(&codes, 2).words());
+        }
+        let q: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+        let qp = pack_codes(&q, 2);
+        let mut prev: Vec<u32> = Vec::new();
+        for probes in 0..=4 {
+            let cur = idx.candidates(qp.words(), probes);
+            assert!(
+                prev.iter().all(|r| cur.binary_search(r).is_ok()),
+                "probes {probes} lost candidates"
+            );
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn remove_and_rebuild_track_the_arena() {
+        let mut g = Pcg64::new(11, 2);
+        let k = 64;
+        let mut arena = CodeArena::new(k, 2);
+        let mut idx = CodeIndex::new(k, 2, cfg(8, 8, 0));
+        let mut packed = Vec::new();
+        for i in 0..50 {
+            let codes: Vec<u16> = (0..k).map(|_| g.next_below(4) as u16).collect();
+            let p = pack_codes(&codes, 2);
+            let row = arena.insert(&format!("id{i}"), &p);
+            idx.insert(row, p.words());
+            packed.push(p);
+        }
+        // Removing un-indexes exactly that row.
+        idx.remove(3, packed[3].words());
+        assert_eq!(idx.rows(), 49);
+        assert!(idx
+            .candidates(packed[3].words(), 0)
+            .binary_search(&3)
+            .is_err());
+        // Rebuild after compaction matches a fresh index row-for-row.
+        arena.remove("id3");
+        arena.remove("id40");
+        arena.compact();
+        idx.rebuild(&arena);
+        assert_eq!(idx.rows(), arena.len());
+        for row in 0..arena.rows_allocated() as u32 {
+            let cands = idx.candidates(arena.row_words(row), 0);
+            assert!(cands.binary_search(&row).is_ok(), "row {row}");
+        }
+    }
+}

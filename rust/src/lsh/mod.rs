@@ -1,18 +1,27 @@
-//! LSH near-neighbor search over coded projections (Section 1.1's
-//! motivating application).
+//! LSH near-neighbor retrieval over coded projections — the serving
+//! stack's sub-linear layer (Section 1.1's motivating application).
 //!
-//! With `k_per_table` projections and bin width `w`, each table hashes a
-//! vector to the concatenation of its codes — `(2·ceil(6/w))^{k_per_table}`
-//! logical buckets, stored in a hash map. Multiple independent tables
-//! boost recall, exactly the classic LSH construction of Indyk–Motwani /
-//! Datar et al. The same machinery runs with any of the four schemes, so
-//! the `h_w` vs `h_{w,q}` comparison the paper defers to a tech report
-//! can be measured empirically here ([`eval`]).
+//! The seed reproduction kept a standalone multi-table construction
+//! (per-sketch `HashMap` tables keyed on FNV-mixed code tuples). This
+//! module now centers on [`CodeIndex`]: a **banded multi-probe index**
+//! whose buckets key directly on bands of the already-packed arena
+//! words — no re-hashing, no second copy of the codes — and store row
+//! indices into the columnar [`crate::scan::CodeArena`]. The epoch
+//! layer ([`crate::scan::EpochArena`]) maintains it incrementally at
+//! every drain and serves `ApproxTopK` by reranking bucket candidates
+//! through the same SIMD collision kernels the exact scan uses.
+//!
+//! [`LshIndex`] remains as the evaluation harness for the paper's
+//! scheme comparison (`crp lsh-eval`): the classic `n_tables ×
+//! k_per_table` construction, expressed as a [`CodeIndex`] whose bands
+//! are exactly the per-table code groups — one band per table. [`eval`]
+//! measures recall/candidate-cost per scheme and [`model`] predicts
+//! both from the paper's collision probabilities.
 
-pub mod table;
+pub mod index;
 pub mod search;
 pub mod eval;
 pub mod model;
 
+pub use index::{CodeIndex, IndexConfig, APPROX_MIN_ROWS};
 pub use search::{LshIndex, LshParams};
-pub use table::LshTable;

@@ -1,6 +1,11 @@
-//! Multi-table LSH index over coded random projections.
+//! The classic multi-table LSH construction, expressed over the banded
+//! [`CodeIndex`]: table `t` is band `t` — its `k_per_table` packed codes
+//! read straight out of the sketch's words. Candidates are exactly the
+//! vectors sharing at least one full table key with the query (the old
+//! hashed-tuple tables matched the same set, plus spurious 64-bit hash
+//! collisions; band keys are exact, so those are gone).
 
-use super::table::LshTable;
+use super::index::{CodeIndex, IndexConfig};
 use crate::coding::{pack_codes, CodingParams};
 use crate::estimator::CollisionEstimator;
 use crate::projection::{ProjectionConfig, Projector};
@@ -35,7 +40,8 @@ impl Default for LshParams {
 pub struct LshIndex {
     pub params: LshParams,
     projectors: Vec<Projector>,
-    tables: Vec<LshTable>,
+    /// Banded index over the packed sketches: one band per table.
+    index: CodeIndex,
     /// Stored vectors (dense), for exact re-ranking of candidates.
     data: Vec<Vec<f32>>,
     /// Full-resolution packed sketches — every table's codes
@@ -58,16 +64,32 @@ impl LshIndex {
                 })
             })
             .collect();
-        let tables = (0..params.n_tables).map(|_| LshTable::new()).collect();
         let sketches = CodeArena::new(
             params.n_tables * params.k_per_table,
             params.coding.bits_per_code(),
+        );
+        let band_bits = params.k_per_table as u32 * sketches.bits();
+        assert!(
+            band_bits <= 64,
+            "table key of {} codes x {} bit(s) exceeds a 64-bit band \
+             (shrink --k-per-table or the code width)",
+            params.k_per_table,
+            sketches.bits()
+        );
+        let index = CodeIndex::new(
+            sketches.k(),
+            sketches.bits(),
+            IndexConfig {
+                bands: params.n_tables,
+                band_bits,
+                probes: 0,
+            },
         );
         let est = CollisionEstimator::new(params.coding.clone());
         LshIndex {
             params,
             projectors,
-            tables,
+            index,
             data: Vec::new(),
             sketches,
             est,
@@ -88,17 +110,24 @@ impl LshIndex {
         self.params.coding.encode(&x)
     }
 
+    /// All tables' codes for `v`, concatenated in table order — the
+    /// full-resolution sketch whose bands are the table keys.
+    fn all_codes(&self, v: &[f32]) -> Vec<u16> {
+        let mut all = Vec::with_capacity(self.params.n_tables * self.params.k_per_table);
+        for t in 0..self.params.n_tables {
+            all.extend(self.codes_for(t, v));
+        }
+        all
+    }
+
     /// Insert a vector; returns its id.
     pub fn insert(&mut self, v: &[f32]) -> u32 {
         let id = self.data.len() as u32;
-        let mut all = Vec::with_capacity(self.params.n_tables * self.params.k_per_table);
-        for t in 0..self.params.n_tables {
-            let codes = self.codes_for(t, v);
-            self.tables[t].insert(&codes, id);
-            all.extend(codes);
-        }
+        let all = self.all_codes(v);
         let sketch = pack_codes(&all, self.params.coding.bits_per_code());
-        self.sketches.insert(&format!("{id:08}"), &sketch);
+        let row = self.sketches.insert(&format!("{id:08}"), &sketch);
+        debug_assert_eq!(row, id, "insertion order is the id");
+        self.index.insert(row, sketch.words());
         self.data.push(v.to_vec());
         id
     }
@@ -112,29 +141,15 @@ impl LshIndex {
         self.data.is_empty()
     }
 
-    /// One projection pass over all tables: deduplicated candidate ids
-    /// plus the query's concatenated codes (the same per-table codes
-    /// both probe the buckets and form the full-resolution sketch).
-    fn probe_with_codes(&self, q: &[f32]) -> (Vec<u32>, Vec<u16>) {
-        let mut seen = std::collections::HashSet::new();
-        let mut out = Vec::new();
-        let mut all = Vec::with_capacity(self.params.n_tables * self.params.k_per_table);
-        for t in 0..self.params.n_tables {
-            let codes = self.codes_for(t, q);
-            for &id in self.tables[t].probe(&codes) {
-                if seen.insert(id) {
-                    out.push(id);
-                }
-            }
-            all.extend(codes);
-        }
-        (out, all)
-    }
-
-    /// Candidate ids across all tables (deduplicated), plus the number
-    /// of bucket probes performed.
+    /// Candidate ids across all tables (sorted, deduplicated), plus the
+    /// number of bucket probes performed.
     pub fn candidates(&self, q: &[f32]) -> (Vec<u32>, usize) {
-        (self.probe_with_codes(q).0, self.params.n_tables)
+        let all = self.all_codes(q);
+        let query = pack_codes(&all, self.params.coding.bits_per_code());
+        (
+            self.index.candidates(query.words(), 0),
+            self.params.n_tables,
+        )
     }
 
     /// Top-`n` near neighbors by exact cosine over the candidate set.
@@ -151,15 +166,16 @@ impl LshIndex {
     }
 
     /// Top-`n` near neighbors by **coded** re-ranking: candidates from
-    /// the tables, scored by collision count between full-resolution
-    /// packed sketches (scan kernels over the arena rows) and inverted
-    /// to ρ̂ — no dense vector is touched after insert. Returns
-    /// `(id, rho_hat)` ordered `(collisions desc, id asc)`.
+    /// the banded index, scored by collision count between
+    /// full-resolution packed sketches (scan kernels over the arena
+    /// rows) and inverted to ρ̂ — no dense vector is touched after
+    /// insert. Returns `(id, rho_hat)` ordered `(collisions desc, id asc)`.
     pub fn query_coded(&self, q: &[f32], n: usize) -> Vec<(u32, f64)> {
         use std::fmt::Write as _;
         let rank_k = self.params.n_tables * self.params.k_per_table;
-        let (cands, all) = self.probe_with_codes(q);
+        let all = self.all_codes(q);
         let query = pack_codes(&all, self.params.coding.bits_per_code());
+        let cands = self.index.candidates(query.words(), 0);
         let mut top = TopK::new(n);
         // One reused buffer for the zero-padded tie-break key; `offer`
         // clones it only for candidates that enter the selection.
@@ -313,10 +329,7 @@ mod tests {
             let got = idx.query_coded(&q, 8);
             // Brute force over the same candidate set with the packed
             // per-pair counter — identical ranking and identical ρ̂.
-            let mut qcodes = Vec::new();
-            for t in 0..idx.params.n_tables {
-                qcodes.extend(idx.codes_for(t, &q));
-            }
+            let qcodes = idx.all_codes(&q);
             let query = pack_codes(&qcodes, idx.params.coding.bits_per_code());
             let (cands, _) = idx.candidates(&q);
             let mut want: Vec<(u32, usize)> = cands

@@ -156,19 +156,30 @@ COMMANDS:
                  (0 = only explicit Persist requests / shutdown)
                [--fsync always|os|group:<ms>]  WAL durability policy
   collection   create --addr A --name N --scheme S --w W --k K --seed X
+                      [--checkpoint-every N]  per-collection checkpoint
+                      cadence (0 = the server's global --checkpoint-every)
                drop   --addr A --name N
                list   --addr A
                manage named collections on a running server; each owns
                its own (scheme, w, k, seed) coding choice
+  stats        --addr A   aggregate service counters plus the
+               per-collection breakdown (rows, pending, wal bytes,
+               index buckets)
   register     --addr A [--collection C] --id I (--vec \"f,f,...\" | --dim D --vec-seed X)
                register one vector over the wire (namespaced)
   recover      --snapshot F --wal-dir D   replay a snapshot + WAL offline
                and print recovery stats (rows, records, torn tail)
   bench-serve  --addr A --n N --dim D --connections C [--collection C]
+               [--queries Q --top T [--approx] [--probes P]]  after the
+               ingest phase, send Q TopK (or ApproxTopK) queries and
+               report query throughput
   topk         --sketches N --k K --scheme S --w W --top T --queries Q --threads P --rho R
                scan-engine demo: exact top-k over a packed-code arena;
-               with --addr [--collection C] it instead sends random TopK
-               queries to a running server (namespaced)
+               --approx [--probes P] runs the banded-index demo instead
+               (planted neighbors, recall@top vs the exact oracle,
+               speedup); with --addr [--collection C] it sends random
+               TopK (or, with --approx, ApproxTopK) queries to a
+               running server (namespaced)
   artifacts                                      list + compile-check AOT artifacts
   estimate     --rho R --k K --w W --dim D       one-shot estimation demo
   bit-budget   --rho R                            optimized V per bit budget
@@ -176,12 +187,30 @@ COMMANDS:
 
 SCAN KERNELS:
   Scans auto-select the widest collision kernel the CPU supports
-  (avx2 > sse2 > swar) once per scanner; all tiers rank byte-identically.
-  Set CRP_SCAN_KERNEL=swar|sse2|avx2 to force a tier (swar = portable
-  path; an unavailable forced tier falls back to auto-selection).
+  (avx512 > avx2 > sse2 > swar) once per scanner; all tiers rank
+  byte-identically. Set CRP_SCAN_KERNEL=swar|sse2|avx2|avx512 to force
+  a tier (swar = portable path; an unavailable forced tier falls back
+  to auto-selection; avx512 needs AVX512VPOPCNTDQ — Ice Lake / Zen 4+).
   Registration is epoch-buffered: puts never take the scan arena's write
   lock, and each epoch folds in bulk at --drain-threshold pending rows
   (folded by a background maintenance thread, not the crossing writer).
+
+APPROX SEARCH:
+  Every collection maintains a banded multi-probe code index over its
+  sealed arena: each sketch's packed words are sliced into bands (a few
+  codes each, keyed verbatim — no re-hashing) and ApproxTopK reranks
+  only the rows sharing a probed bucket with the query, through the
+  same SIMD kernels the exact scan uses. Pending (not yet drained)
+  rows are always swept exactly, so approximate results are as fresh
+  as exact ones, and every returned rho_hat is exact for its id.
+  Trade-off dials: more/narrower BANDS raise recall and candidate
+  cost; --probes P adds P low-order band-bit flips per band (adjacent
+  quantizer bins) — more probes, more recall, more candidates. The
+  index shape derives from each collection's (k, bits) and is recorded
+  in the MANIFEST; exact TopK stays available as the oracle, and small
+  stores fall back to it automatically. At 1e5 rows expect order-of-
+  magnitude fewer scored rows at recall@10 >= 0.9 for rho >= 0.9
+  neighbors (see `crp topk --approx` and scan_bench).
 
 COLLECTIONS:
   One server process serves many named collections, each with its own
@@ -208,7 +237,7 @@ DURABILITY:
 ";
 
 fn main() -> crp::Result<()> {
-    let a = args::Args::parse(&["mle", "pjrt"])?;
+    let a = args::Args::parse(&["mle", "pjrt", "approx"])?;
     match a.cmd.as_str() {
         "figures" => {
             let scale: f64 = a.get("scale", 0.25)?;
@@ -246,6 +275,14 @@ fn main() -> crp::Result<()> {
             let tables: usize = a.get("tables", 8)?;
             let kpt: usize = a.get("k-per-table", 8)?;
             let queries: usize = a.get("queries", 100)?;
+            // Table keys are exact band values read out of the packed
+            // words, so a key must fit one u64 at the widest scheme in
+            // the comparison (4 bits/code at w = 1.0).
+            anyhow::ensure!(
+                (1..=16).contains(&kpt),
+                "--k-per-table must be in [1, 16] (a table key of k codes \
+                 x up to 4 bits must fit a 64-bit band)"
+            );
             println!(
                 "{:<14} {:>6} {:>12} {:>16}",
                 "scheme", "w", "recall@10", "candidate_frac"
@@ -351,10 +388,17 @@ fn main() -> crp::Result<()> {
                     let w: f64 = a.get("w", 0.75)?;
                     let k: u64 = a.get("k", 256)?;
                     let seed: u64 = a.get("seed", 0)?;
-                    client.create_collection(&name, scheme, w, k, seed)?;
+                    let every: u64 = a.get("checkpoint-every", 0u64)?;
+                    client.create_collection(&name, scheme, w, k, seed, every)?;
                     println!(
-                        "created collection {name:?} (scheme={}, w={w}, k={k}, seed={seed})",
-                        scheme.label()
+                        "created collection {name:?} (scheme={}, w={w}, k={k}, seed={seed}, \
+                         checkpoint_every={})",
+                        scheme.label(),
+                        if every > 0 {
+                            every.to_string()
+                        } else {
+                            "global".to_string()
+                        }
                     );
                 }
                 Some("drop") => {
@@ -458,17 +502,84 @@ fn main() -> crp::Result<()> {
             let dim: usize = a.get("dim", 128)?;
             let connections: usize = a.get("connections", 4)?;
             let collection = a.get_opt("collection").map(str::to_string);
-            bench_serve(&addr, n, dim, connections, collection)?;
+            bench_serve(&addr, n, dim, connections, collection.clone())?;
+            let queries: usize = a.get("queries", 0)?;
+            if queries > 0 {
+                let top: u32 = a.get("top", 10u32)?;
+                let probes: u32 = a.get("probes", 0u32)?;
+                bench_queries(
+                    &addr,
+                    collection.as_deref(),
+                    queries,
+                    dim,
+                    top,
+                    a.flag("approx"),
+                    probes,
+                )?;
+            }
+        }
+        "stats" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            let st = client.stats_detailed()?;
+            println!("registered:           {}", st.registered);
+            println!("estimates:            {}", st.estimates);
+            println!("knn_queries:          {}", st.knn_queries);
+            println!("batches_executed:     {}", st.batches_executed);
+            println!("vectors_projected:    {}", st.vectors_projected);
+            println!("mean_batch_size:      {:.2}", st.mean_batch_size);
+            println!("register_us:          p50={} p99={}", st.p50_register_us, st.p99_register_us);
+            println!("pending_rows:         {}", st.pending_rows);
+            println!("drains:               {}", st.drains);
+            println!("tombstones:           {}", st.tombstones);
+            println!("kernel:               {}", st.kernel);
+            println!("wal_records:          {}", st.wal_records);
+            println!("wal_bytes:            {}", st.wal_bytes);
+            println!("last_checkpoint_rows: {}", st.last_checkpoint_rows);
+            println!("maintenance_wakeups:  {}", st.maintenance_wakeups);
+            println!("connections:          {}", st.connections);
+            println!("collections:          {}", st.collections);
+            if !st.per_collection.is_empty() {
+                println!(
+                    "\n{:<24} {:>10} {:>10} {:>14} {:>14}",
+                    "collection", "rows", "pending", "wal_bytes", "index_buckets"
+                );
+                for c in &st.per_collection {
+                    println!(
+                        "{:<24} {:>10} {:>10} {:>14} {:>14}",
+                        c.name, c.rows, c.pending_rows, c.wal_bytes, c.index_buckets
+                    );
+                }
+            }
         }
         "topk" => {
             let top: usize = a.get("top", 10)?;
             let queries: usize = a.get("queries", 20)?;
+            let approx = a.flag("approx");
+            let probes: usize = a.get("probes", 0)?;
             if let Some(addr) = a.get_opt("addr") {
                 // Remote mode: namespaced TopK against a running server.
                 let collection = a.get_opt("collection").map(str::to_string);
                 let dim: usize = a.get("dim", 128)?;
                 let seed: u64 = a.get("seed", 20140601)?;
-                run_topk_remote(addr, collection.as_deref(), dim, top, queries, seed)?;
+                run_topk_remote(
+                    addr,
+                    collection.as_deref(),
+                    dim,
+                    top,
+                    queries,
+                    seed,
+                    approx,
+                    probes as u32,
+                )?;
+            } else if approx {
+                let sketches: usize = a.get("sketches", 100_000)?;
+                let k: usize = a.get("k", 256)?;
+                let scheme = parse_scheme(&a.get_str("scheme", "two-bit"))?;
+                let w: f64 = a.get("w", 0.75)?;
+                let rho: f64 = a.get("rho", 0.95)?;
+                let seed: u64 = a.get("seed", 20140601)?;
+                run_topk_approx_demo(sketches, k, scheme, w, top, queries, rho, probes, seed)?;
             } else {
                 let sketches: usize = a.get("sketches", 20_000)?;
                 let k: usize = a.get("k", 1024)?;
@@ -653,6 +764,8 @@ fn run_topk_demo(
 
 /// Remote top-k: send `queries` random query vectors to a running
 /// server (optionally namespaced to a collection) and print the hits.
+/// With `approx`, the batch goes through `ApproxTopK` instead.
+#[allow(clippy::too_many_arguments)]
 fn run_topk_remote(
     addr: &str,
     collection: Option<&str>,
@@ -660,6 +773,8 @@ fn run_topk_remote(
     top: usize,
     queries: usize,
     seed: u64,
+    approx: bool,
+    probes: u32,
 ) -> crp::Result<()> {
     use crp::mathx::NormalSampler;
     let mut client = crp::coordinator::SketchClient::connect(addr)?;
@@ -668,12 +783,17 @@ fn run_topk_remote(
         .map(|_| (0..dim).map(|_| ns.next() as f32).collect())
         .collect();
     let t0 = std::time::Instant::now();
-    let results = client.topk_in(collection, vectors, top as u32)?;
+    let results = if approx {
+        client.approx_topk_in(collection, vectors, top as u32, probes)?
+    } else {
+        client.topk_in(collection, vectors, top as u32)?
+    };
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "collection {:?}: {} queries x top-{top} in {:.1} ms",
+        "collection {:?}: {} {} queries x top-{top} in {:.1} ms",
         collection.unwrap_or("default"),
         results.len(),
+        if approx { "approx" } else { "exact" },
         1e3 * dt
     );
     if let Some(hits) = results.first() {
@@ -682,6 +802,146 @@ fn run_topk_remote(
             println!("{:<24} {:>10.4}", h.id, h.rho);
         }
     }
+    Ok(())
+}
+
+/// Banded-index demo: a corpus with planted ρ-neighbors, exact top-k as
+/// the oracle, `ApproxTopK`-style index scans against it — recall@top
+/// and the speedup, on one machine, no server.
+#[allow(clippy::too_many_arguments)]
+fn run_topk_approx_demo(
+    sketches: usize,
+    k: usize,
+    scheme: Scheme,
+    w: f64,
+    top: usize,
+    queries: usize,
+    rho: f64,
+    probes: usize,
+    seed: u64,
+) -> crp::Result<()> {
+    use crp::lsh::IndexConfig;
+    use crp::scan::{EpochArena, EpochConfig};
+
+    anyhow::ensure!(queries >= 1 && top >= 1, "--queries and --top must be >= 1");
+    let params = CodingParams::new(scheme, w);
+    let bits = params.bits_per_code();
+    let icfg = IndexConfig::for_shape(k, bits);
+    let probes = if probes == 0 { icfg.probes } else { probes };
+    let arena = EpochArena::with_index_config(k, bits, EpochConfig::default(), icfg);
+    // Each query's base gets `top + 2` ρ-correlated neighbors planted
+    // in the corpus, so the exact top-`top` is dominated by true
+    // neighbors the index must find.
+    let planted_per_query = top + 2;
+    anyhow::ensure!(
+        queries * planted_per_query <= sketches,
+        "--queries x (top + 2) planted rows exceed --sketches"
+    );
+    let t_build = std::time::Instant::now();
+    let (rows, packed_queries) = crp::data::planted_code_corpus(
+        &params,
+        k,
+        sketches,
+        queries,
+        planted_per_query,
+        rho,
+        seed,
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let _ = arena.put(&format!("{i:07}"), r);
+    }
+    arena.drain();
+    eprintln!(
+        "arena: {} sketches x {k} codes @ {} bit(s), {} index buckets, built in {:.2}s \
+         (bands={}, band_bits={}, probes={probes}, kernel={})",
+        rows.len(),
+        arena.bits(),
+        arena.index_buckets(),
+        t_build.elapsed().as_secs_f64(),
+        icfg.bands,
+        icfg.band_bits,
+        arena.kernel_kind().label()
+    );
+
+    let t_exact = std::time::Instant::now();
+    let exact: Vec<_> = packed_queries
+        .iter()
+        .map(|q| arena.scan_topk(q, top, 0))
+        .collect();
+    let exact_s = t_exact.elapsed().as_secs_f64();
+    let t_approx = std::time::Instant::now();
+    let approx: Vec<_> = packed_queries
+        .iter()
+        .map(|q| arena.scan_topk_approx(q, top, probes))
+        .collect();
+    let approx_s = t_approx.elapsed().as_secs_f64();
+
+    let mut found = 0usize;
+    let mut wanted = 0usize;
+    for (e, ap) in exact.iter().zip(&approx) {
+        wanted += e.len();
+        for hit in e {
+            if ap.iter().any(|h| h.id == hit.id) {
+                found += 1;
+            }
+        }
+    }
+    println!(
+        "recall@{top} vs exact oracle: {:.3}  ({} queries, rho={rho})",
+        found as f64 / wanted.max(1) as f64,
+        queries
+    );
+    println!(
+        "exact : {:>10.2} ms/query  {:>14.0} sketches/s",
+        1e3 * exact_s / queries as f64,
+        rows.len() as f64 * queries as f64 / exact_s
+    );
+    println!(
+        "approx: {:>10.2} ms/query  {:>14.0} sketches/s-equivalent  ({:.1}x)",
+        1e3 * approx_s / queries as f64,
+        rows.len() as f64 * queries as f64 / approx_s,
+        exact_s / approx_s
+    );
+    Ok(())
+}
+
+/// Post-ingest query phase of `bench-serve`: send `queries` random
+/// vectors in frames of up to 16 and report query throughput.
+fn bench_queries(
+    addr: &str,
+    collection: Option<&str>,
+    queries: usize,
+    dim: usize,
+    top: u32,
+    approx: bool,
+    probes: u32,
+) -> crp::Result<()> {
+    use crp::mathx::NormalSampler;
+    let mut client = crp::coordinator::SketchClient::connect(addr)?;
+    let mut ns = NormalSampler::new(777, 5);
+    let t0 = std::time::Instant::now();
+    let mut sent = 0usize;
+    while sent < queries {
+        let batch = (queries - sent).min(16);
+        let vectors: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..dim).map(|_| ns.next() as f32).collect())
+            .collect();
+        let results = if approx {
+            client.approx_topk_in(collection, vectors, top, probes)?
+        } else {
+            client.topk_in(collection, vectors, top)?
+        };
+        anyhow::ensure!(results.len() == batch, "short TopK response");
+        sent += batch;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} {} top-{top} queries in {:.2}s  ({:.0} queries/s)",
+        sent,
+        if approx { "approx" } else { "exact" },
+        dt,
+        sent as f64 / dt
+    );
     Ok(())
 }
 

@@ -29,8 +29,28 @@
 //! pressure the pending buffer just keeps absorbing writes and a later
 //! write retries the fold.
 //!
+//! ## The banded index rides the drain
+//!
+//! With [`EpochArena::with_index_config`] the sealed arena carries a
+//! [`CodeIndex`] — the banded multi-probe candidate index
+//! ([`crate::lsh::index`]) — kept in lock-step *incrementally*: every
+//! fold un-indexes the masked sealed rows (their old words are still in
+//! place at that point), indexes the epoch's rows as they land, and
+//! rebuilds wholesale only when compaction remaps row ids. Pending rows
+//! are never indexed; [`EpochArena::scan_topk_approx`] sweeps them
+//! exactly, so an approximate query is always as fresh as an exact one.
+//!
 //! Lock order is `sealed` before `pending` everywhere (put, remove,
-//! scan, drain), so the two can never deadlock.
+//! scan, drain), so those two can never deadlock. The index lock sits
+//! *outside* that pair's ordering — scans acquire it before the
+//! pending mutex, the fold after — and is deadlock-free by a different
+//! invariant: **the index is only ever write-locked while the sealed
+//! write lock is held** (the fold). Every index reader also holds the
+//! sealed *read* lock, which excludes the fold entirely, so no reader
+//! can wait behind an index writer that in turn waits on a lock the
+//! reader holds — and every reader sees an index exactly consistent
+//! with the sealed rows. Adding an index write on any path that does
+//! not hold the sealed write lock would break this — don't.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
@@ -40,6 +60,7 @@ use super::scanner::{self, ScanHit};
 use super::simd::{CollisionKernel, KernelKind};
 use super::topk::TopK;
 use crate::coding::PackedCodes;
+use crate::lsh::index::{CodeIndex, IndexConfig, APPROX_MIN_ROWS};
 
 /// Drain and compaction policy knobs.
 #[derive(Clone, Debug)]
@@ -119,6 +140,10 @@ pub struct EpochArena {
     kernel: CollisionKernel,
     cfg: EpochConfig,
     sealed: RwLock<CodeArena>,
+    /// Banded multi-probe candidate index over the sealed rows, kept in
+    /// lock-step by the fold (see the module docs). `None` = exact
+    /// scans only.
+    index: Option<RwLock<CodeIndex>>,
     pending: Mutex<Pending>,
     /// Scan-side snapshot of the pending buffer, reused until the next
     /// write bumps the pending generation.
@@ -139,6 +164,19 @@ impl EpochArena {
     }
 
     pub fn with_config(k: usize, bits: u32, cfg: EpochConfig) -> Self {
+        Self::build(k, bits, cfg, None)
+    }
+
+    /// As [`EpochArena::with_config`], additionally maintaining a
+    /// banded multi-probe [`CodeIndex`] over the sealed rows so
+    /// [`EpochArena::scan_topk_approx`] answers in bucket-bounded work.
+    /// Panics on an index config [`IndexConfig::validate`] rejects for
+    /// this sketch shape (the serving layer validates first).
+    pub fn with_index_config(k: usize, bits: u32, cfg: EpochConfig, icfg: IndexConfig) -> Self {
+        Self::build(k, bits, cfg, Some(icfg))
+    }
+
+    fn build(k: usize, bits: u32, cfg: EpochConfig, icfg: Option<IndexConfig>) -> Self {
         let sealed = CodeArena::new(k, bits);
         let (k, bits, stride) = (sealed.k(), sealed.bits(), sealed.stride());
         EpochArena {
@@ -147,6 +185,7 @@ impl EpochArena {
             stride,
             kernel: CollisionKernel::select(bits),
             cfg,
+            index: icfg.map(|ic| RwLock::new(CodeIndex::new(k, bits, ic))),
             pending: Mutex::new(Pending {
                 inserts: CodeArena::new(k, bits),
                 masked: Vec::new(),
@@ -158,6 +197,25 @@ impl EpochArena {
             drains: AtomicU64::new(0),
             single_puts: AtomicU64::new(0),
         }
+    }
+
+    /// Whether a banded candidate index is maintained.
+    pub fn has_index(&self) -> bool {
+        self.index.is_some()
+    }
+
+    /// The index shape, when one is maintained.
+    pub fn index_config(&self) -> Option<IndexConfig> {
+        self.index.as_ref().map(|l| l.read().unwrap().config())
+    }
+
+    /// Occupied index buckets across all bands (0 without an index) —
+    /// the stats gauge.
+    pub fn index_buckets(&self) -> usize {
+        self.index
+            .as_ref()
+            .map(|l| l.read().unwrap().buckets())
+            .unwrap_or(0)
     }
 
     /// Codes per sketch.
@@ -387,6 +445,19 @@ impl EpochArena {
             return 0;
         }
         let folded = p.inserts.len();
+        // The caller holds the sealed write lock, so the index can be
+        // updated in lock-step with the arena (innermost lock).
+        let mut index = self.index.as_ref().map(|l| l.write().unwrap());
+        // Un-index every masked sealed row while its *old* words are
+        // still in place — whether it is about to be removed or
+        // rewritten, its current band entries are stale either way.
+        if let Some(idx) = index.as_deref_mut() {
+            for &row in &p.masked {
+                if sealed.id_of(row).is_some() {
+                    idx.remove(row, sealed.row_words(row));
+                }
+            }
+        }
         // Pure removals first. Overridden ids (masked but re-written
         // this epoch) keep their sealed row: the insert below rewrites
         // it in place, so steady-state overwrites create no tombstones
@@ -399,11 +470,15 @@ impl EpochArena {
                 }
             }
         }
-        // Then this epoch's rows, preserving their write order.
+        // Then this epoch's rows, preserving their write order; each
+        // lands in the index under its sealed row id.
         for row in 0..p.inserts.rows_allocated() as u32 {
             if let Some(id) = p.inserts.id_of(row) {
                 let words = p.inserts.row_words(row);
-                sealed.insert_row_words(id, words);
+                let srow = sealed.insert_row_words(id, words);
+                if let Some(idx) = index.as_deref_mut() {
+                    idx.insert(srow, words);
+                }
             }
         }
         p.inserts.clear();
@@ -414,6 +489,11 @@ impl EpochArena {
             && tomb as f64 >= self.cfg.compact_ratio * sealed.rows_allocated() as f64
         {
             sealed.compact();
+            // Compaction remaps every surviving row downward; the
+            // bucket row ids are wholesale stale. Rebuild.
+            if let Some(idx) = index.as_deref_mut() {
+                idx.rebuild(sealed);
+            }
         }
         self.epoch.fetch_add(1, Ordering::Relaxed);
         self.drains.fetch_add(1, Ordering::Relaxed);
@@ -470,6 +550,76 @@ impl EpochArena {
             .zip(swept)
             .map(|(mut top, sealed_top)| {
                 top.merge(sealed_top);
+                top.into_sorted().into_iter().map(ScanHit::from).collect()
+            })
+            .collect()
+    }
+
+    /// Approximate top-`n` through the banded index: bucket candidates
+    /// from the sealed rows (multi-probe expanded by `probes` low-order
+    /// band-bit flips) reranked through the exact collision kernel,
+    /// merged with an **exact** sweep of the pending epoch — so results
+    /// are as fresh as [`EpochArena::scan_topk`] and every reported
+    /// collision count (hence ρ̂) is exact for its row. Recall against
+    /// the exact scan is governed by the index shape
+    /// ([`IndexConfig::for_shape`]) and `probes`; ordering is the same
+    /// `(collisions desc, id asc)`. Falls back to the exact sweep when
+    /// no index is maintained or the sealed arena is still below
+    /// [`APPROX_MIN_ROWS`] (probing cannot beat a tiny sequential
+    /// pass, and the exact scan is the oracle anyway).
+    pub fn scan_topk_approx(&self, query: &PackedCodes, n: usize, probes: usize) -> Vec<ScanHit> {
+        self.scan_topk_approx_batch(std::slice::from_ref(query), n, probes)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Batched [`EpochArena::scan_topk_approx`]: one sealed-lock hold
+    /// and one pending snapshot serve every query. Result `i` equals
+    /// `scan_topk_approx(&queries[i], n, probes)`.
+    pub fn scan_topk_approx_batch(
+        &self,
+        queries: &[PackedCodes],
+        n: usize,
+        probes: usize,
+    ) -> Vec<Vec<ScanHit>> {
+        for q in queries {
+            assert_eq!(q.len, self.k, "query length mismatch");
+            assert_eq!(q.bits, self.bits, "query bit width mismatch");
+        }
+        let sealed = self.sealed.read().unwrap();
+        // Index reads are consistent with the sealed rows because the
+        // index is only ever written under the sealed write lock.
+        let index = match &self.index {
+            Some(l) if sealed.rows_allocated() >= APPROX_MIN_ROWS => Some(l.read().unwrap()),
+            _ => None,
+        };
+        let (pend, masked) = self.snapshot_pending();
+        let base = sealed.rows_allocated() as u32;
+        queries
+            .iter()
+            .map(|q| {
+                let mut top = self.sweep_pending(&pend, base, q, n);
+                match index.as_deref() {
+                    Some(idx) => {
+                        let cands = idx.candidates(q.words(), probes);
+                        top.merge(scanner::scan_candidates(
+                            &sealed,
+                            self.kernel,
+                            q,
+                            &cands,
+                            &masked,
+                            n,
+                        ));
+                    }
+                    None => top.merge(scanner::scan_arena(
+                        &sealed,
+                        self.kernel,
+                        q,
+                        &masked,
+                        n,
+                        0,
+                    )),
+                }
                 top.into_sorted().into_iter().map(ScanHit::from).collect()
             })
             .collect()
@@ -687,5 +837,112 @@ mod tests {
         let e = EpochArena::new(64, 2);
         assert_eq!(e.drain(), 0);
         assert_eq!(e.epoch(), 0);
+    }
+
+    #[test]
+    fn approx_falls_back_to_exact_below_min_rows() {
+        let e =
+            EpochArena::with_index_config(64, 2, small_cfg(), IndexConfig::for_shape(64, 2));
+        assert!(e.has_index());
+        for i in 0..60 {
+            if e.put(&format!("s{i}"), &sketch(64, i)) {
+                e.drain();
+            }
+        }
+        e.drain();
+        let q = sketch(64, 17);
+        assert_eq!(e.scan_topk_approx(&q, 10, 2), e.scan_topk(&q, 10, 1));
+    }
+
+    #[test]
+    fn approx_finds_duplicates_sees_pending_and_hides_removed() {
+        // Enough sealed rows to clear the exact-fallback floor.
+        let e = EpochArena::with_index_config(
+            64,
+            2,
+            EpochConfig::default(),
+            IndexConfig::for_shape(64, 2),
+        );
+        let n = (APPROX_MIN_ROWS + 200) as u64;
+        for i in 0..n {
+            let _ = e.put(&format!("r{i:05}"), &sketch(64, i));
+        }
+        e.drain();
+        assert!(e.index_buckets() > 0);
+        // Self-retrieval is guaranteed: every band of an exact
+        // duplicate matches, so a stored row always finds itself.
+        let q = sketch(64, 321);
+        let hits = e.scan_topk_approx(&q, 3, 0);
+        assert_eq!(hits[0].id, "r00321");
+        assert_eq!(hits[0].collisions, 64);
+        // Freshness: a pending duplicate is visible before any drain.
+        let _ = e.put("fresh", &sketch(64, 321));
+        let hits = e.scan_topk_approx(&q, 3, 0);
+        assert_eq!(hits[0].id, "fresh", "pending rows must be swept exactly");
+        assert_eq!(hits[0].collisions, 64);
+        assert_eq!(hits[1].id, "r00321");
+        // Removal hides a sealed row immediately (pending mask)...
+        assert!(e.remove("r00321"));
+        let hits = e.scan_topk_approx(&q, 3, 0);
+        assert!(hits.iter().all(|h| h.id != "r00321"));
+        // ...and stays hidden once the fold un-indexes it.
+        e.drain();
+        let hits = e.scan_topk_approx(&q, 3, 0);
+        assert_eq!(hits[0].id, "fresh");
+        assert!(hits.iter().all(|h| h.id != "r00321"));
+    }
+
+    #[test]
+    fn approx_index_tracks_overwrites_and_compaction() {
+        let e = EpochArena::with_index_config(
+            64,
+            2,
+            EpochConfig {
+                drain_threshold: 64,
+                compact_ratio: 0.2,
+                compact_min: 16,
+            },
+            IndexConfig::for_shape(64, 2),
+        );
+        let n = (APPROX_MIN_ROWS + 512) as u64;
+        for i in 0..n {
+            if e.put(&format!("r{i:05}"), &sketch(64, i)) {
+                e.drain();
+            }
+        }
+        e.drain();
+        // Overwrite a block of rows with new content...
+        for i in 0..64u64 {
+            let _ = e.put(&format!("r{i:05}"), &sketch(64, 10_000 + i));
+        }
+        e.drain();
+        // ...and remove enough rows that the next drain compacts.
+        for i in 64..464u64 {
+            assert!(e.remove(&format!("r{i:05}")));
+        }
+        e.drain();
+        e.with_sealed(|s| assert_eq!(s.tombstones(), 0, "compaction must have fired"));
+        // The overwritten rows retrieve by their *new* content only.
+        let old_q = sketch(64, 5);
+        let hits = e.scan_topk_approx(&old_q, 1, 0);
+        assert!(
+            hits.is_empty() || hits[0].collisions < 64,
+            "stale band entries must not resurrect old content"
+        );
+        // Every surviving row still self-retrieves through the rebuilt
+        // (row-remapped) index; removed rows never return.
+        for i in [0u64, 5, 63, 500, n - 1] {
+            let id = format!("r{i:05}");
+            let q = if i < 64 {
+                sketch(64, 10_000 + i)
+            } else {
+                sketch(64, i)
+            };
+            let hits = e.scan_topk_approx(&q, 1, 0);
+            assert_eq!(hits[0].id, id, "row {i}");
+            assert_eq!(hits[0].collisions, 64, "row {i}");
+        }
+        let gone = e.scan_topk_approx(&sketch(64, 100), 5, 2);
+        assert!(gone.iter().all(|h| h.id != "r00100"));
     }
 }

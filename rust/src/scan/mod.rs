@@ -14,12 +14,17 @@
 //!   unrolled XOR+popcount for 1-bit codes, nibble-equality for 2-bit,
 //!   generic lane-collapse fallback for 4/8/16. The portable oracle.
 //! * [`simd`] — [`CollisionKernel`]: explicit `std::arch` x86_64 kernels
-//!   (AVX2, then SSE2) for the 1-bit and 2-bit sweeps, selected once per
-//!   scanner by runtime feature detection; `CRP_SCAN_KERNEL=swar` forces
-//!   the portable path. Pinned byte-identical to [`kernels`].
+//!   (AVX-512 `vpopcntq`, then AVX2, then SSE2) for the 1-bit and 2-bit
+//!   sweeps, selected once per scanner by runtime feature detection;
+//!   `CRP_SCAN_KERNEL=swar|sse2|avx2|avx512` forces a tier. Pinned
+//!   byte-identical to [`kernels`].
 //! * [`epoch`] — [`EpochArena`]: sealed arena + pending epoch buffer, so
 //!   ingest never takes the write lock scans read behind; a bulk drain
-//!   folds each epoch in and runs tombstone-aware compaction.
+//!   folds each epoch in, runs tombstone-aware compaction, and keeps the
+//!   optional banded candidate index ([`crate::lsh::CodeIndex`]) in
+//!   lock-step for `scan_topk_approx` — bucket candidates reranked
+//!   through the same kernels, pending rows swept exactly, the exact
+//!   scan kept as the oracle and the small-store fallback.
 //! * [`topk`] — [`TopK`]: bounded worst-out heap for exact top-k with the
 //!   deterministic `(collisions desc, id asc)` ordering the brute-force
 //!   estimator path uses.

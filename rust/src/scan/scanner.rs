@@ -83,6 +83,43 @@ fn scan_range(
     top
 }
 
+/// Candidate-set rerank: score only `cands` (sorted ascending, as the
+/// banded [`crate::lsh::CodeIndex`] emits them) against the query
+/// through the same collision kernel the full sweep uses, skipping
+/// tombstones and the sorted `masked` rows. This is the approximate
+/// path's second stage — bucket candidates in, exact-ranked top-k out —
+/// so an `ApproxTopK` hit carries exactly the collision count (and ρ̂)
+/// the exact scan would report for that row.
+pub(crate) fn scan_candidates(
+    arena: &CodeArena,
+    kernel: CollisionKernel,
+    query: &PackedCodes,
+    cands: &[u32],
+    masked: &[u32],
+    n: usize,
+) -> TopK {
+    assert_eq!(query.len, arena.k(), "query length mismatch");
+    assert_eq!(query.bits, arena.bits(), "query bit width mismatch");
+    let mut top = TopK::new(n);
+    let k = arena.k();
+    let qwords = query.words();
+    let mut mi = 0usize;
+    for &row in cands {
+        // Both lists are sorted: advance the mask cursor monotonically.
+        while mi < masked.len() && masked[mi] < row {
+            mi += 1;
+        }
+        if mi < masked.len() && masked[mi] == row {
+            continue; // overridden or removed by the pending epoch
+        }
+        let Some(id) = arena.id_of(row) else {
+            continue; // tombstone
+        };
+        top.offer(row, id, kernel.count(k, qwords, arena.row_words(row)));
+    }
+    top
+}
+
 /// Row-sharded sweep of one query with an explicit kernel and mask.
 /// Internal engine shared by [`scan_topk`] and the epoch-buffered path.
 pub(crate) fn scan_arena(
@@ -276,7 +313,7 @@ mod tests {
                 .into_iter()
                 .map(ScanHit::from)
                 .collect();
-            for kind in [KernelKind::Sse2, KernelKind::Avx2] {
+            for kind in [KernelKind::Sse2, KernelKind::Avx2, KernelKind::Avx512] {
                 let Some(kernel) = CollisionKernel::with_kind(bits, kind) else {
                     continue;
                 };
@@ -345,6 +382,24 @@ mod tests {
         for (i, q) in queries.iter().enumerate() {
             assert_eq!(batched[i], scan_topk(&arena, q, 5, 1), "query {i}");
         }
+    }
+
+    #[test]
+    fn candidate_rerank_matches_full_scan_on_its_set() {
+        let (arena, _) = arena_with(300, 64, 2, 21);
+        let kernel = CollisionKernel::select(2);
+        let q = arena.get("row00050").unwrap();
+        // A candidate set of every row is identical to the full sweep.
+        let all: Vec<u32> = (0..300).collect();
+        let full = scan_arena(&arena, kernel, &q, &[], 10, 1).into_sorted();
+        let cand = scan_candidates(&arena, kernel, &q, &all, &[], 10).into_sorted();
+        assert_eq!(cand, full);
+        // A restricted set only ever scores its own rows, and masked
+        // rows are hidden exactly like the full sweep hides them.
+        let got = scan_candidates(&arena, kernel, &q, &[3, 50, 77, 123], &[50], 10).into_sorted();
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(|e| [3, 77, 123].contains(&e.row)));
+        assert!(got.iter().all(|e| e.id != "row00050"));
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Runtime-dispatched explicit SIMD collision kernels.
 //!
 //! [`CollisionKernel`] binds one code width to the widest instruction
-//! tier the running CPU supports — AVX2 (32 bytes per step, vectorized
-//! nibble-lookup popcount), then SSE2 (16 bytes per step, in-register
-//! bit-slice popcount), then the portable SWAR kernels of
+//! tier the running CPU supports — AVX-512 (64 bytes per step, native
+//! `vpopcntq` per-lane popcount), then AVX2 (32 bytes per step,
+//! vectorized nibble-lookup popcount), then SSE2 (16 bytes per step,
+//! in-register bit-slice popcount), then the portable SWAR kernels of
 //! [`super::kernels`] — once at scanner construction; every scan after
 //! that calls a plain function pointer with zero per-row dispatch.
 //!
@@ -15,9 +16,10 @@
 //!
 //! * Explicit SIMD exists for the paper's recommended 1-bit and 2-bit
 //!   codes; wider codes (4/8/16 bits) always take the SWAR path.
-//! * `CRP_SCAN_KERNEL=swar|sse2|avx2` forces a tier. An unavailable
-//!   forced tier falls back to auto-selection; `swar` is always
-//!   available and is the supported way to force the portable path.
+//! * `CRP_SCAN_KERNEL=swar|sse2|avx2|avx512` forces a tier. An
+//!   unavailable forced tier falls back to auto-selection; `swar` is
+//!   always available and is the supported way to force the portable
+//!   path.
 //! * Non-x86_64 targets compile to SWAR only (`detect` reports the SIMD
 //!   tiers as absent, and the x86 kernels are not built).
 
@@ -35,17 +37,26 @@ pub enum KernelKind {
     Sse2,
     /// 256-bit AVX2 (plus hardware POPCNT for the scalar tail).
     Avx2,
+    /// 512-bit AVX-512 with native per-lane popcount (`vpopcntq`,
+    /// the AVX512VPOPCNTDQ extension).
+    Avx512,
 }
 
 impl KernelKind {
     /// Every tier, widest first — the auto-selection preference order.
-    pub const ALL: [KernelKind; 3] = [KernelKind::Avx2, KernelKind::Sse2, KernelKind::Swar];
+    pub const ALL: [KernelKind; 4] = [
+        KernelKind::Avx512,
+        KernelKind::Avx2,
+        KernelKind::Sse2,
+        KernelKind::Swar,
+    ];
 
     pub fn label(self) -> &'static str {
         match self {
             KernelKind::Swar => "swar",
             KernelKind::Sse2 => "sse2",
             KernelKind::Avx2 => "avx2",
+            KernelKind::Avx512 => "avx512",
         }
     }
 
@@ -81,6 +92,7 @@ impl CollisionKernel {
                 "swar" | "portable" | "scalar" => Some(KernelKind::Swar),
                 "sse2" => Some(KernelKind::Sse2),
                 "avx2" => Some(KernelKind::Avx2),
+                "avx512" | "avx512vpopcntdq" => Some(KernelKind::Avx512),
                 _ => None,
             };
             if let Some(kernel) = want.and_then(|kind| Self::with_kind(bits, kind)) {
@@ -138,6 +150,14 @@ fn detect(kind: KernelKind) -> bool {
         KernelKind::Avx2 => {
             is_x86_feature_detected!("avx2") && is_x86_feature_detected!("popcnt")
         }
+        // AVX512F for the 512-bit lanes + VPOPCNTDQ for the native
+        // per-lane popcount (Ice Lake / Zen 4 and later); POPCNT for
+        // the scalar tails.
+        KernelKind::Avx512 => {
+            is_x86_feature_detected!("avx512f")
+                && is_x86_feature_detected!("avx512vpopcntdq")
+                && is_x86_feature_detected!("popcnt")
+        }
     }
 }
 
@@ -184,6 +204,12 @@ fn kernel_fn(bits: u32, kind: KernelKind) -> Option<KernelFn> {
         KernelKind::Avx2 => match bits {
             1 => Some(x86::b1_avx2 as KernelFn),
             2 => Some(x86::b2_avx2 as KernelFn),
+            _ => None,
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx512 => match bits {
+            1 => Some(x86::b1_avx512 as KernelFn),
+            2 => Some(x86::b2_avx512 as KernelFn),
             _ => None,
         },
         #[cfg(not(target_arch = "x86_64"))]
@@ -361,8 +387,71 @@ mod x86 {
         total
     }
 
+    /// 1-bit, AVX-512: eight words per vector step, agreement =
+    /// NOT(XOR), counted by the native per-u64-lane `vpopcntq` — no
+    /// lookup tables, no PSADBW reduction.
+    #[target_feature(enable = "avx512f,avx512vpopcntdq,popcnt")]
+    unsafe fn collisions_b1_avx512(k: usize, a: &[u64], b: &[u64]) -> usize {
+        let full = k / 64;
+        let blocks = full / 8;
+        let ones = _mm512_set1_epi64(-1);
+        let mut acc = _mm512_setzero_si512();
+        for i in 0..blocks {
+            let va = _mm512_loadu_epi64(a.as_ptr().add(i * 8) as *const i64);
+            let vb = _mm512_loadu_epi64(b.as_ptr().add(i * 8) as *const i64);
+            let agree = _mm512_xor_si512(_mm512_xor_si512(va, vb), ones);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(agree));
+        }
+        let mut total = _mm512_reduce_add_epi64(acc) as u64 as usize;
+        for i in blocks * 8..full {
+            total += (!(a[i] ^ b[i])).count_ones() as usize;
+        }
+        let rem = k % 64;
+        if rem > 0 {
+            let mask = (1u64 << rem) - 1;
+            total += ((!(a[full] ^ b[full])) & mask).count_ones() as usize;
+        }
+        total
+    }
+
+    /// 2-bit, AVX-512: a lane agrees iff both of its bits agree;
+    /// `vpopcntq` counts the collapsed low bits directly.
+    #[target_feature(enable = "avx512f,avx512vpopcntdq,popcnt")]
+    unsafe fn collisions_b2_avx512(k: usize, a: &[u64], b: &[u64]) -> usize {
+        let full = k / 32;
+        let blocks = full / 8;
+        let ones = _mm512_set1_epi64(-1);
+        let lo_bits = _mm512_set1_epi64(B2_LO as i64);
+        let mut acc = _mm512_setzero_si512();
+        for i in 0..blocks {
+            let va = _mm512_loadu_epi64(a.as_ptr().add(i * 8) as *const i64);
+            let vb = _mm512_loadu_epi64(b.as_ptr().add(i * 8) as *const i64);
+            let eq = _mm512_xor_si512(_mm512_xor_si512(va, vb), ones);
+            let lanes =
+                _mm512_and_si512(_mm512_and_si512(eq, _mm512_srli_epi64::<1>(eq)), lo_bits);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(lanes));
+        }
+        let mut total = _mm512_reduce_add_epi64(acc) as u64 as usize;
+        for i in blocks * 8..full {
+            let eq = !(a[i] ^ b[i]);
+            total += (eq & (eq >> 1) & B2_LO).count_ones() as usize;
+        }
+        let rem = k % 32;
+        if rem > 0 {
+            let eq = !(a[full] ^ b[full]);
+            total += (eq & (eq >> 1) & B2_LO & ((1u64 << (2 * rem)) - 1)).count_ones() as usize;
+        }
+        total
+    }
+
     // Safe wrappers: sound because `with_kind` only hands these out after
     // `detect` confirmed the required CPU features.
+    pub fn b1_avx512(k: usize, a: &[u64], b: &[u64]) -> usize {
+        unsafe { collisions_b1_avx512(k, a, b) }
+    }
+    pub fn b2_avx512(k: usize, a: &[u64], b: &[u64]) -> usize {
+        unsafe { collisions_b2_avx512(k, a, b) }
+    }
     pub fn b1_avx2(k: usize, a: &[u64], b: &[u64]) -> usize {
         unsafe { collisions_b1_avx2(k, a, b) }
     }
@@ -438,6 +527,7 @@ mod tests {
     fn wide_codes_always_dispatch_to_swar() {
         for bits in [4u32, 8, 16] {
             assert_eq!(CollisionKernel::select(bits).kind(), KernelKind::Swar);
+            assert!(CollisionKernel::with_kind(bits, KernelKind::Avx512).is_none());
             assert!(CollisionKernel::with_kind(bits, KernelKind::Avx2).is_none());
             assert!(CollisionKernel::with_kind(bits, KernelKind::Sse2).is_none());
         }

@@ -98,6 +98,7 @@ fn collections_isolate_same_ids_across_schemes() {
         bits: 4,
         k: 128,
         seed: 11,
+        checkpoint_every: 0,
     }) {
         Response::CollectionCreated { name } => assert_eq!(name, "u4"),
         other => panic!("unexpected {other:?}"),
@@ -209,6 +210,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 bits: 0,
                 k: 32,
                 seed: 0,
+                checkpoint_every: 0,
             },
             "characters",
         ),
@@ -220,6 +222,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 bits: 0,
                 k: 32,
                 seed: 0,
+                checkpoint_every: 0,
             },
             "already exists",
         ),
@@ -231,6 +234,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 bits: 0,
                 k: 32,
                 seed: 0,
+                checkpoint_every: 0,
             },
             "reserved",
         ),
@@ -242,6 +246,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 bits: 0,
                 k: 32,
                 seed: 0,
+                checkpoint_every: 0,
             },
             "bin width",
         ),
@@ -253,6 +258,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 bits: 0,
                 k: 0,
                 seed: 0,
+                checkpoint_every: 0,
             },
             "outside",
         ),
@@ -264,6 +270,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 bits: 3,
                 k: 32,
                 seed: 0,
+                checkpoint_every: 0,
             },
             "2 bit",
         ),
@@ -344,6 +351,7 @@ fn collections_kill9_recovery_via_manifest() {
             bits: 0,
             k,
             seed,
+            checkpoint_every: 0,
         }) {
             Response::CollectionCreated { .. } => {}
             other => panic!("create {name}: unexpected {other:?}"),
@@ -482,6 +490,7 @@ fn collections_drop_then_recreate_reuses_directory() {
         bits: 0,
         k: 64,
         seed: 3,
+        checkpoint_every: 0,
     }) {
         Response::CollectionCreated { .. } => {}
         other => panic!("unexpected {other:?}"),
@@ -507,6 +516,7 @@ fn collections_drop_then_recreate_reuses_directory() {
         bits: 0,
         k: 64,
         seed: 9,
+        checkpoint_every: 0,
     }) {
         Response::CollectionCreated { .. } => {}
         other => panic!("unexpected {other:?}"),
@@ -554,8 +564,8 @@ fn collections_over_tcp_with_namespaced_client() {
         128,
     );
     let mut c = SketchClient::connect(&addr).unwrap();
-    c.create_collection("web", Scheme::Uniform, 1.0, 64, 21).unwrap();
-    assert!(c.create_collection("web", Scheme::Uniform, 1.0, 64, 21).is_err());
+    c.create_collection("web", Scheme::Uniform, 1.0, 64, 21, 0).unwrap();
+    assert!(c.create_collection("web", Scheme::Uniform, 1.0, 64, 21, 0).is_err());
 
     let mut g = Pcg64::new(13, 13);
     let anchor = vec_of(&mut g, 32);
@@ -603,6 +613,111 @@ fn collections_over_tcp_with_namespaced_client() {
     assert!(c.drop_collection("web").unwrap());
     assert!(!c.drop_collection("web").unwrap());
     assert!(c.knn_in(Some("web"), vec![1.0; 8], 1).is_err());
+}
+
+/// Per-collection checkpoint cadence: `checkpoint_every` on
+/// `CreateCollection` overrides the global `--checkpoint-every`,
+/// survives restart via the MANIFEST, and collections created without
+/// it keep riding the global cadence.
+#[test]
+fn collections_per_collection_checkpoint_cadence() {
+    let dir = temp_dir("cadence");
+    let cfg = ServerConfig {
+        data_dir: Some(dir.to_path_buf()),
+        checkpoint_every: 1000, // global: far beyond this test's writes
+        maintenance: MaintenanceConfig {
+            tick: Duration::from_secs(60),
+        },
+        ..Default::default()
+    };
+    let live = ServiceState::open(projector(64), &cfg).unwrap();
+    match live.handle(Request::CreateCollection {
+        name: "fast".into(),
+        scheme: Scheme::TwoBit,
+        w: 0.75,
+        bits: 0,
+        k: 48,
+        seed: 2,
+        checkpoint_every: 5,
+    }) {
+        Response::CollectionCreated { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    let mut g = Pcg64::new(21, 0);
+    for i in 0..4 {
+        register(&live, Some("fast"), &format!("v{i}"), vec_of(&mut g, 24));
+    }
+    let fast = live.registry.get("fast").unwrap();
+    assert_eq!(fast.options.checkpoint_every, 5);
+    let d = fast.durability.as_ref().unwrap();
+    assert!(!d.checkpoint_due(), "4 rows < cadence 5");
+    for i in 4..6 {
+        register(&live, Some("fast"), &format!("v{i}"), vec_of(&mut g, 24));
+    }
+    assert!(d.checkpoint_due(), "6 rows >= cadence 5");
+    // The default collection rides the global cadence: 10 rows, not due.
+    for i in 0..10 {
+        register(&live, None, &format!("d{i}"), vec_of(&mut g, 24));
+    }
+    assert!(!live.default.durability.as_ref().unwrap().checkpoint_due());
+
+    // Cadence survives restart via the MANIFEST.
+    drop(live); // graceful shutdown checkpoints and resets the counters
+    let back = ServiceState::open(projector(64), &cfg).unwrap();
+    let fast = back.registry.get("fast").unwrap();
+    assert_eq!(
+        fast.options.checkpoint_every, 5,
+        "cadence must be recorded in the MANIFEST"
+    );
+    let d = fast.durability.as_ref().unwrap();
+    assert!(!d.checkpoint_due());
+    for i in 0..5 {
+        register(&back, Some("fast"), &format!("w{i}"), vec_of(&mut g, 24));
+    }
+    assert!(d.checkpoint_due());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `ApproxTopK` over TCP (namespaced) + the per-collection stats
+/// breakdown: small stores answer byte-identically to exact `TopK`
+/// (the fallback oracle), and `Stats` ships one breakdown entry per
+/// collection, sorted by name, without touching the aggregates.
+#[test]
+fn collections_approx_and_stats_breakdown_over_tcp() {
+    let addr = spawn_server(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        128,
+    );
+    let mut c = SketchClient::connect(&addr).unwrap();
+    c.create_collection("web", Scheme::OneBit, 0.0, 96, 3, 7).unwrap();
+    let mut g = Pcg64::new(5, 5);
+    let ids: Vec<String> = (0..40).map(|i| format!("p{i:02}")).collect();
+    let vectors: Vec<Vec<f32>> = (0..40).map(|_| vec_of(&mut g, 32)).collect();
+    assert_eq!(c.register_batch_in(Some("web"), ids, vectors).unwrap(), 40);
+    let q = vec_of(&mut g, 32);
+    let exact = c.topk_in(Some("web"), vec![q.clone()], 5).unwrap();
+    let approx = c
+        .approx_topk_in(Some("web"), vec![q.clone()], 5, 3)
+        .unwrap();
+    assert_eq!(exact, approx, "small stores fall back to the exact oracle");
+    assert_eq!(exact[0].len(), 5);
+    // Unknown collections error cleanly on the approx path.
+    assert!(c.approx_topk_in(Some("ghost"), vec![q], 5, 0).is_err());
+    // The detailed breakdown names every collection with its live
+    // gauges; the legacy Stats frame stays aggregates-only.
+    let st = c.stats_detailed().unwrap();
+    assert_eq!(st.collections, 2);
+    let names: Vec<&str> = st.per_collection.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, ["default", "web"]);
+    assert_eq!(st.per_collection[1].rows, 40);
+    assert_eq!(st.per_collection[0].rows, 0);
+    assert_eq!(st.per_collection[1].wal_bytes, 0, "in-memory collection");
+    let legacy = c.stats().unwrap();
+    assert_eq!(legacy.collections, 2);
+    assert!(legacy.per_collection.is_empty());
 }
 
 /// `--max-conns` satellite: over-limit connections get one clean Error

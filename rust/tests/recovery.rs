@@ -496,6 +496,113 @@ fn recovery_put_completes_during_checkpoint_disk_write() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The banded ANN index is derived state: it is never written to disk
+/// (no new on-disk format); recovery rebuilds it from the restored
+/// arena at the first drain. After `kill -9`, once both sides are
+/// fully drained, `ApproxTopK` answers byte-identically to the
+/// never-restarted server at every probe budget, and every approx hit
+/// carries the exact score the full scan reports.
+#[test]
+fn recovery_kill9_rebuilds_approx_index_equivalently() {
+    let dir = temp_dir("kill9_ann");
+    let mut cfg = durable_cfg(&dir);
+    cfg.epoch = EpochConfig {
+        drain_threshold: 256,
+        ..EpochConfig::default()
+    };
+    let live = ServiceState::open(projector(128), &cfg).unwrap();
+    let mut g = Pcg64::new(0xA22, 0);
+    let n = 3000usize;
+    let vec_of = |g: &mut Pcg64| -> Vec<f32> {
+        (0..24).map(|_| g.next_f64() as f32 - 0.5).collect()
+    };
+    let ids: Vec<String> = (0..n).map(|i| format!("v{i:05}")).collect();
+    let vectors: Vec<Vec<f32>> = (0..n).map(|_| vec_of(&mut g)).collect();
+    match live.handle(Request::RegisterBatch { ids, vectors }) {
+        Response::RegisteredBatch { count } => assert_eq!(count, n as u64),
+        other => panic!("unexpected {other:?}"),
+    }
+    // Removes + overwrites so every index-maintenance path fires
+    // before the crash point.
+    for i in (0..600).step_by(3) {
+        match live.handle(Request::Remove {
+            id: format!("v{i:05}"),
+        }) {
+            Response::Removed { existed } => assert!(existed),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    for i in 0..50 {
+        live.handle(Request::Register {
+            id: format!("v{:05}", 700 + i),
+            vector: vec_of(&mut g),
+        });
+    }
+    // Checkpoint (drains + snapshots); nothing mutates afterwards, so
+    // both sides are comparable once the restarted side drains too.
+    match live.handle(Request::Persist) {
+        Response::Persisted { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // kill -9: rebuild purely from disk while the first instance is
+    // still alive.
+    let restarted = ServiceState::open(projector(128), &cfg).unwrap();
+    restarted.default.store.arena().unwrap().drain();
+    assert_eq!(dump(&restarted.store), dump(&live.store));
+    let live_arena = live.default.store.arena().unwrap();
+    let back_arena = restarted.default.store.arena().unwrap();
+    assert!(live_arena.index_buckets() > 0);
+    assert!(
+        back_arena.index_buckets() > 0,
+        "recovery must rebuild the banded index from the arena image"
+    );
+
+    for qi in 0..5 {
+        let v = vec_of(&mut g);
+        for probes in [0u32, 2, 4] {
+            assert_eq!(
+                live.handle(Request::ApproxTopK {
+                    vectors: vec![v.clone()],
+                    n: 10,
+                    probes
+                }),
+                restarted.handle(Request::ApproxTopK {
+                    vectors: vec![v.clone()],
+                    n: 10,
+                    probes
+                }),
+                "query {qi} probes {probes}"
+            );
+        }
+    }
+    // Approx hits carry exact scores: every returned (id, rho) appears
+    // verbatim in the exhaustive exact ranking.
+    let v = vec_of(&mut g);
+    let exact_all = match live.handle(Request::TopK {
+        vectors: vec![v.clone()],
+        n: n as u32,
+    }) {
+        Response::TopK { mut results } => results.pop().unwrap(),
+        other => panic!("unexpected {other:?}"),
+    };
+    let approx = match restarted.handle(Request::ApproxTopK {
+        vectors: vec![v],
+        n: 10,
+        probes: 2,
+    }) {
+        Response::TopK { mut results } => results.pop().unwrap(),
+        other => panic!("unexpected {other:?}"),
+    };
+    for hit in &approx {
+        assert!(
+            exact_all.iter().any(|e| e.id == hit.id && e.rho == hit.rho),
+            "approx hit {hit:?} must carry its exact score"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Satellite pin: crafted snapshot headers with `bits = 0` (or any
 /// unsupported width) and a nonzero count are a clean error on both
 /// formats — the legacy loader used to divide by zero.
