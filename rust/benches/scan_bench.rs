@@ -128,6 +128,34 @@ fn main() {
         std::hint::black_box(scan_topk_batch(&c1.arena, &queries, 10, 0));
     });
 
+    // ---- Observability overhead: the request-path instrumentation ---
+    // The serving layer wraps every request in one Instant plus one
+    // power-of-two histogram record (an atomic add). Run the exact-scan
+    // path with and without that wrapper, under the series name the
+    // instrumentation feeds, to pin the overhead (<2% target).
+    let hist = crp::coordinator::metrics::LatencyHistogram::default();
+    b.run("obs/crp_request_duration_us-off/100k-1bit-1024", n as u64, || {
+        std::hint::black_box(scan_topk(&c1.arena, &c1.query, 10, 0));
+    });
+    b.run("obs/crp_request_duration_us-on/100k-1bit-1024", n as u64, || {
+        let t = Instant::now();
+        std::hint::black_box(scan_topk(&c1.arena, &c1.query, 10, 0));
+        hist.record((t.elapsed().as_micros() as u64).max(1));
+    });
+    let off_s = median_secs(5, || {
+        std::hint::black_box(scan_topk(&c1.arena, &c1.query, 10, 0));
+    });
+    let on_s = median_secs(5, || {
+        let t = Instant::now();
+        std::hint::black_box(scan_topk(&c1.arena, &c1.query, 10, 0));
+        hist.record((t.elapsed().as_micros() as u64).max(1));
+    });
+    println!(
+        "\nobservability overhead on the exact-scan path (timed + recorded vs bare): \
+         {:+.2}%",
+        100.0 * (on_s - off_s) / off_s
+    );
+
     // The acceptance headline: arena scan vs the seed loop.
     let seed_s = median_secs(5, || {
         std::hint::black_box(seed_knn(&c1, 10));

@@ -301,11 +301,25 @@ impl SketchClient {
     }
 
     /// [`SketchClient::stats`] plus the per-collection breakdown
-    /// (rows, pending, WAL bytes, index buckets). Needs a server that
-    /// understands `StatsDetailed`; older servers reject the frame.
+    /// (rows, pending, WAL bytes, index buckets) and per-request-kind
+    /// latency rows. Needs a server that understands `StatsDetailed`;
+    /// older servers reject the frame. The reverse pairing also needs
+    /// matching versions: clients older than the server cannot decode
+    /// a detailed answer once it carries a section they predate (use
+    /// plain [`SketchClient::stats`] for cross-version compatibility).
     pub fn stats_detailed(&mut self) -> crate::Result<StatsSnapshot> {
         match self.call(&Request::StatsDetailed)? {
             Response::Stats(s) => Ok(s),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// The full Prometheus-style exposition page (the same text
+    /// `--metrics-addr` serves over HTTP). Needs a server that
+    /// understands `MetricsText`; older servers reject the frame.
+    pub fn metrics_text(&mut self) -> crate::Result<String> {
+        match self.call(&Request::MetricsText)? {
+            Response::MetricsText { text } => Ok(text),
             other => Err(Self::bail(other)),
         }
     }
@@ -375,6 +389,22 @@ mod tests {
         let stats = c.stats()?;
         assert_eq!(stats.wal_records, 0, "non-durable server logs nothing");
         assert!(c.persist().is_err());
+        // The exposition page rides the same connection; by now every
+        // request above has been recorded by the connection loop.
+        let text = c.metrics_text()?;
+        assert!(text.contains("crp_registered_total 4"), "{text}");
+        assert!(text.contains("crp_requests_total{kind=\"register\"} 2"));
+        assert!(text.contains("# TYPE crp_request_duration_us histogram"));
+        // Detailed stats carry per-request latency rows for the kinds
+        // this connection exercised.
+        let detailed = c.stats_detailed()?;
+        let kinds: Vec<&str> = detailed.per_request.iter().map(|r| r.kind.as_str()).collect();
+        assert!(kinds.contains(&"register"), "{kinds:?}");
+        assert!(kinds.contains(&"knn"), "{kinds:?}");
+        for r in &detailed.per_request {
+            assert!(r.count > 0);
+            assert!(r.p99_us >= r.p50_us, "{}: p99 < p50", r.kind);
+        }
         Ok(())
     }
 

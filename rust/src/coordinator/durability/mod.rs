@@ -34,8 +34,10 @@ pub mod wal;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::coding::{supported_width, PackedCodes};
+use crate::coordinator::metrics::LatencyHistogram;
 use crate::coordinator::store::SketchStore;
 
 /// Incremental IEEE CRC-32 (chain as `crc32_update(crc32_update(0, a), b)`).
@@ -151,6 +153,17 @@ pub struct Durability {
     checkpoint_mu: Mutex<()>,
     since_checkpoint: AtomicU64,
     last_checkpoint_rows: AtomicU64,
+    /// Append+apply+flush latency of the three `log_*` entry points,
+    /// timed outside the WAL mutex (the hold is part of the measured
+    /// path, never extended by it). Under `--fsync always` this is
+    /// dominated by the per-record fsync, which is exactly what the
+    /// `fsync` exposition label lets dashboards attribute.
+    wal_append_us: LatencyHistogram,
+    /// Wall time of each checkpoint's `snapshot::save` (tmp write +
+    /// fsync + rename), excluding WAL rotation and arena drain.
+    snapshot_write_us: LatencyHistogram,
+    /// On-disk size of the most recent snapshot file (0 before one).
+    snapshot_bytes: AtomicU64,
 }
 
 impl Durability {
@@ -187,6 +200,9 @@ impl Durability {
                 checkpoint_mu: Mutex::new(()),
                 since_checkpoint: AtomicU64::new(0),
                 last_checkpoint_rows: AtomicU64::new(0),
+                wal_append_us: LatencyHistogram::default(),
+                snapshot_write_us: LatencyHistogram::default(),
+                snapshot_bytes: AtomicU64::new(0),
             },
             stats,
         ))
@@ -201,7 +217,9 @@ impl Durability {
         codes: &PackedCodes,
         apply: impl FnOnce(),
     ) -> crate::Result<()> {
+        let t0 = Instant::now();
         self.wal.append_put(id, codes.words(), apply)?;
+        self.wal_append_us.record(t0.elapsed().as_micros() as u64);
         self.since_checkpoint.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -215,7 +233,9 @@ impl Durability {
         apply: impl FnOnce() -> crate::Result<()>,
     ) -> crate::Result<()> {
         let n = ids.len() as u64;
+        let t0 = Instant::now();
         self.wal.append_put_rows(ids, words, apply)??;
+        self.wal_append_us.record(t0.elapsed().as_micros() as u64);
         self.since_checkpoint.fetch_add(n, Ordering::Relaxed);
         Ok(())
     }
@@ -223,7 +243,9 @@ impl Durability {
     /// WAL-append a removal, then apply it; returns what `apply`
     /// reported (whether the id existed).
     pub fn log_remove(&self, id: &str, apply: impl FnOnce() -> bool) -> crate::Result<bool> {
+        let t0 = Instant::now();
         let existed = self.wal.append_remove(id, apply)?;
+        self.wal_append_us.record(t0.elapsed().as_micros() as u64);
         self.since_checkpoint.fetch_add(1, Ordering::Relaxed);
         Ok(existed)
     }
@@ -249,7 +271,8 @@ impl Durability {
         let retired = self.wal.rotate()?;
         arena.drain();
         let image = arena.sealed_image();
-        let rows = match snapshot::save(&self.cfg.snapshot, &image) {
+        let s0 = Instant::now();
+        let (rows, snap_bytes) = match snapshot::save(&self.cfg.snapshot, &image) {
             Ok(rows) => rows,
             Err(e) => {
                 // The snapshot failed, so the retired segments must
@@ -268,6 +291,8 @@ impl Durability {
                 return Err(e);
             }
         };
+        self.snapshot_write_us.record(s0.elapsed().as_micros() as u64);
+        self.snapshot_bytes.store(snap_bytes, Ordering::Relaxed);
         let mut retired_bytes = 0u64;
         for p in &retired {
             retired_bytes += std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
@@ -304,6 +329,27 @@ impl Durability {
     /// Live rows written by the most recent checkpoint (0 before one).
     pub fn last_checkpoint_rows(&self) -> u64 {
         self.last_checkpoint_rows.load(Ordering::Relaxed)
+    }
+
+    /// Append+apply+flush latency histogram of the `log_*` calls.
+    pub fn wal_append_hist(&self) -> &LatencyHistogram {
+        &self.wal_append_us
+    }
+
+    /// Snapshot file-write latency histogram (one sample per checkpoint).
+    pub fn snapshot_write_hist(&self) -> &LatencyHistogram {
+        &self.snapshot_write_us
+    }
+
+    /// On-disk size of the most recent snapshot file (0 before one).
+    pub fn snapshot_bytes(&self) -> u64 {
+        self.snapshot_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The fsync discipline WAL appends run under (its label tags the
+    /// `crp_wal_append_us` exposition series).
+    pub fn fsync_policy(&self) -> FsyncPolicy {
+        self.cfg.fsync
     }
 }
 
@@ -361,12 +407,19 @@ mod tests {
         }
         assert!(d.log_remove("id3", || store.remove("id3")).unwrap());
         assert_eq!(d.wal_records(), 21);
+        // Every log_* call left one sample in the append histogram.
+        assert_eq!(d.wal_append_hist().count(), 21);
+        assert_eq!(d.fsync_policy().label(), "os");
 
         // Checkpoint: snapshot written, WAL retired, counters reset.
         let (rows, retired) = d.checkpoint(&store).unwrap();
         assert_eq!(rows, 19);
         assert!(retired > 0, "old segment bytes must be retired");
         assert_eq!(d.last_checkpoint_rows(), 19);
+        assert_eq!(d.snapshot_write_hist().count(), 1);
+        let snap_len = std::fs::metadata(dir.join("snapshot.bin")).unwrap().len();
+        assert_eq!(d.snapshot_bytes(), snap_len);
+        assert!(snap_len > 0);
         assert_eq!(wal::segments(&dir.join("wal")).unwrap().len(), 1);
 
         // More ops after the checkpoint land in the new segment only.

@@ -85,9 +85,9 @@ pub fn write_image<W: Write>(w: W, img: &ArenaImage) -> crate::Result<u64> {
 }
 
 /// Write `img` to `path` atomically (tmp file, fsync, rename), so a
-/// crash mid-write leaves the previous snapshot intact. Returns live
-/// rows written.
-pub fn save(path: &Path, img: &ArenaImage) -> crate::Result<u64> {
+/// crash mid-write leaves the previous snapshot intact. Returns
+/// `(live rows written, file bytes)`.
+pub fn save(path: &Path, img: &ArenaImage) -> crate::Result<(u64, u64)> {
     let tmp = path.with_extension("tmp");
     let f = File::create(&tmp)?;
     let mut w = BufWriter::new(f);
@@ -96,9 +96,10 @@ pub fn save(path: &Path, img: &ArenaImage) -> crate::Result<u64> {
         .into_inner()
         .map_err(|e| anyhow::anyhow!("snapshot flush failed: {e}"))?;
     f.sync_all()?;
+    let bytes = f.metadata()?.len();
     drop(f);
     std::fs::rename(&tmp, path)?;
-    Ok(rows)
+    Ok((rows, bytes))
 }
 
 /// Shape `(k, bits)` from a snapshot header without loading the body
@@ -321,8 +322,9 @@ mod tests {
         a.remove("vec-31");
         let img = a.image();
         let path = temp_file("rt");
-        let n = save(&path, &img).unwrap();
+        let (n, bytes) = save(&path, &img).unwrap();
         assert_eq!(n, 48);
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
         let back = load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(back, img, "image survives the round trip verbatim");
@@ -341,7 +343,7 @@ mod tests {
     fn empty_image_roundtrip() {
         let img = CodeArena::new(64, 2).image();
         let path = temp_file("empty");
-        assert_eq!(save(&path, &img).unwrap(), 0);
+        assert_eq!(save(&path, &img).unwrap().0, 0);
         let back = load(&path).unwrap();
         assert_eq!(back.rows(), 0);
         assert_eq!((back.k, back.bits), (64, 2));

@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::obs;
 use crate::coordinator::registry::{Collection, Registry};
 use crate::coordinator::store::DrainSignal;
 
@@ -53,11 +54,19 @@ fn sweep(c: &Collection, final_flush: bool) {
         // un-fdatasync'd past its interval just because no later
         // append came along to carry the sync.
         if let Err(e) = d.sync_wal_due() {
-            eprintln!("crp-maintenance: WAL sync of {:?} failed: {e}", c.name);
+            obs::log::warn(
+                "crp::maintenance",
+                "wal sync failed",
+                &[("collection", c.name.clone()), ("error", e.to_string())],
+            );
         }
         if final_flush || d.checkpoint_due() {
             if let Err(e) = d.checkpoint(&c.store) {
-                eprintln!("crp-maintenance: checkpoint of {:?} failed: {e}", c.name);
+                obs::log::error(
+                    "crp::maintenance",
+                    "checkpoint failed",
+                    &[("collection", c.name.clone()), ("error", e.to_string())],
+                );
             }
         }
     }

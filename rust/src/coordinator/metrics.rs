@@ -44,7 +44,11 @@ impl LatencyHistogram {
         }
     }
 
-    /// Approximate percentile (upper bucket bound).
+    /// Approximate percentile (upper bucket bound). The final bucket
+    /// is unbounded, so a percentile landing there saturates to its
+    /// *lower* bound (`2^31` µs ≈ 36 min) — the last finite boundary —
+    /// rather than fabricating a `2^32` "upper bound" that no sample
+    /// is known to respect.
     pub fn percentile_us(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -55,10 +59,22 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << (i + 1);
+                return if i == 31 { 1u64 << 31 } else { 1u64 << (i + 1) };
             }
         }
         u64::MAX
+    }
+
+    /// Total of all recorded samples in µs (pairs with
+    /// [`LatencyHistogram::count`] for exposition `_sum`/`_count`).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Raw per-bucket counts (bucket `i` covers `[2^i, 2^(i+1))` µs;
+    /// the last is unbounded) — the exposition renderer's input.
+    pub fn bucket_counts(&self) -> [u64; 32] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
 }
 
@@ -78,6 +94,12 @@ pub struct Metrics {
     /// over-limit connections are never counted).
     pub connections: AtomicU64,
     pub register_latency: LatencyHistogram,
+    /// Requests that crossed the server's `--slow-query-us` threshold
+    /// (each also emitted one structured slow-query log line).
+    pub slow_queries: AtomicU64,
+    /// Full-path latency per request kind, recorded once per request
+    /// by the connection loop (decode → handle → encode+write).
+    pub requests: super::obs::RequestHistograms,
 }
 
 impl Metrics {
@@ -107,6 +129,26 @@ impl Metrics {
             connections: self.connections.load(Ordering::Relaxed),
             ..Default::default()
         }
+    }
+
+    /// Per-request-kind latency rows for `StatsDetailed`, in kind
+    /// order, skipping kinds with no traffic yet (the wire section
+    /// stays empty — hence absent — on an idle server).
+    pub fn per_request(&self) -> Vec<super::protocol::RequestLatency> {
+        super::obs::REQUEST_KINDS
+            .iter()
+            .filter_map(|&kind| {
+                let h = self.requests.hist(kind);
+                let count = h.count();
+                (count > 0).then(|| super::protocol::RequestLatency {
+                    kind: kind.label().to_string(),
+                    count,
+                    mean_us: h.mean_us(),
+                    p50_us: h.percentile_us(0.50),
+                    p99_us: h.percentile_us(0.99),
+                })
+            })
+            .collect()
     }
 }
 
@@ -146,6 +188,55 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.percentile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    /// Satellite pin: a percentile landing in the final (unbounded)
+    /// bucket reports that bucket's lower bound `2^31`, not the bogus
+    /// `2^32` "upper bound" the pre-fix code fabricated.
+    #[test]
+    fn percentile_saturates_in_final_bucket() {
+        let h = LatencyHistogram::default();
+        h.record(u64::MAX);
+        assert_eq!(h.percentile_us(1.0), 1u64 << 31);
+        assert_ne!(h.percentile_us(1.0), 1u64 << 32);
+        // Any sample ≥ 2^31 µs lands there, not only u64::MAX.
+        let h = LatencyHistogram::default();
+        h.record(3_000_000_000);
+        assert_eq!(h.percentile_us(0.5), 1u64 << 31);
+        // The penultimate bucket still reports its upper bound.
+        let h = LatencyHistogram::default();
+        h.record((1u64 << 30) + 1);
+        assert_eq!(h.percentile_us(1.0), 1u64 << 31);
+        assert_eq!(h.bucket_counts()[30], 1);
+    }
+
+    #[test]
+    fn bucket_counts_and_sum_expose_raw_state() {
+        let h = LatencyHistogram::default();
+        h.record(1);
+        h.record_n(10, 3);
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 1);
+        assert_eq!(b[3], 3, "10µs lands in [8, 16)");
+        assert_eq!(b.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us(), 31);
+    }
+
+    #[test]
+    fn per_request_skips_idle_kinds() {
+        use crate::coordinator::obs::RequestKind;
+        let m = Metrics::default();
+        assert!(m.per_request().is_empty());
+        m.requests.hist(RequestKind::Knn).record(100);
+        m.requests.hist(RequestKind::Knn).record(300);
+        m.requests.hist(RequestKind::Persist).record(50_000);
+        let rows = m.per_request();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].kind, "knn");
+        assert_eq!(rows[0].count, 2);
+        assert!((rows[0].mean_us - 200.0).abs() < 1e-9);
+        assert!(rows[0].p50_us >= 128 && rows[0].p99_us >= 256);
+        assert_eq!(rows[1].kind, "persist");
     }
 
     #[test]

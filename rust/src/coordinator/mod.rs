@@ -36,8 +36,14 @@
 //!                  │                 drains, compaction, and checkpoints
 //!                  │                 across all collections off one
 //!                  │                 DrainSignal
-//!                  └── metrics     — counters + latency histograms +
-//!                                    connection gauge
+//!                  ├── metrics     — counters + latency histograms +
+//!                  │                 connection gauge; per-request-kind
+//!                  │                 full-path latency
+//!                  └── obs         — structured logs (--log-level),
+//!                                    slow-query/trace lines, and the
+//!                                    Prometheus-style /metrics endpoint
+//!                                    (--metrics-addr) rendered straight
+//!                                    off metrics + registry
 //! ```
 //!
 //! Python never runs here; Projectors execute AOT artifacts via PJRT.
@@ -51,6 +57,7 @@ pub mod server;
 pub mod client;
 pub mod durability;
 pub mod maintenance;
+pub mod obs;
 
 pub use batcher::{BatcherConfig, SketchBatcher};
 pub use client::SketchClient;

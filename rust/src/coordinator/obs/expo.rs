@@ -1,0 +1,338 @@
+//! Prometheus text exposition, rendered on demand.
+//!
+//! [`render`] walks the live [`Metrics`] and [`Registry`] and prints
+//! every counter, gauge, and histogram in the text format Prometheus
+//! scrapes (`text/plain; version=0.0.4`): `# TYPE` headers, cumulative
+//! `_bucket{le="..."}` series ending at `+Inf`, and `_sum`/`_count`
+//! pairs. Rendering takes no engine lock beyond the registry's brief
+//! read-lock for the collection list — every number is a relaxed
+//! atomic load off state the hot paths were already maintaining.
+//!
+//! Histogram buckets mirror [`LatencyHistogram`]: bucket `i` covers
+//! `[2^i, 2^(i+1))` µs, so the exported `le` bounds are the powers of
+//! two `2, 4, 8, ...` up to `2^31`, then `+Inf` for the unbounded tail.
+
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::metrics::{LatencyHistogram, Metrics};
+use crate::coordinator::registry::Registry;
+use crate::scan::EngineHist;
+
+use super::REQUEST_KINDS;
+
+/// One fully-labeled histogram block: cumulative buckets, `_sum`,
+/// `_count`. `labels` is the rendered label set without braces
+/// (`collection="web"`), empty for a bare series.
+fn hist_block(out: &mut String, name: &str, labels: &str, counts: &[u64; 32], sum: u64) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate().take(31) {
+        cum += c;
+        let le = 1u64 << (i + 1);
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}");
+    }
+    cum += counts[31];
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {cum}");
+    gauge(out, &format!("{name}_sum"), labels, sum);
+    gauge(out, &format!("{name}_count"), labels, cum);
+}
+
+fn type_line(out: &mut String, name: &str, kind: &str) {
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn latency_hist(out: &mut String, name: &str, labels: &str, h: &LatencyHistogram) {
+    hist_block(out, name, labels, &h.bucket_counts(), h.sum_us());
+}
+
+fn engine_hist(out: &mut String, name: &str, labels: &str, h: &EngineHist) {
+    hist_block(out, name, labels, &h.bucket_counts(), h.sum());
+}
+
+fn gauge(out: &mut String, name: &str, labels: &str, v: u64) {
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {v}");
+    } else {
+        let _ = writeln!(out, "{name}{{{labels}}} {v}");
+    }
+}
+
+/// Render the full exposition page. Called per scrape (`GET /metrics`)
+/// and per `MetricsText` protocol request.
+pub fn render(metrics: &Metrics, registry: &Registry) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    // Global counters.
+    for (name, v) in [
+        ("crp_registered_total", &metrics.registered),
+        ("crp_estimates_total", &metrics.estimates),
+        ("crp_knn_queries_total", &metrics.knn_queries),
+        ("crp_batches_executed_total", &metrics.batches_executed),
+        ("crp_vectors_projected_total", &metrics.vectors_projected),
+        ("crp_maintenance_wakeups_total", &metrics.maintenance_wakeups),
+        ("crp_slow_queries_total", &metrics.slow_queries),
+    ] {
+        type_line(&mut out, name, "counter");
+        gauge(&mut out, name, "", v.load(Ordering::Relaxed));
+    }
+
+    // Global gauges.
+    type_line(&mut out, "crp_connections", "gauge");
+    gauge(
+        &mut out,
+        "crp_connections",
+        "",
+        metrics.connections.load(Ordering::Relaxed),
+    );
+    type_line(&mut out, "crp_collections", "gauge");
+    gauge(&mut out, "crp_collections", "", registry.len() as u64);
+
+    // Per-kind request counters + full-path latency histograms. The
+    // counter duplicates each histogram's `_count` under the name
+    // dashboards expect for rate() queries.
+    type_line(&mut out, "crp_requests_total", "counter");
+    for kind in REQUEST_KINDS {
+        let labels = format!("kind=\"{}\"", kind.label());
+        gauge(
+            &mut out,
+            "crp_requests_total",
+            &labels,
+            metrics.requests.hist(kind).count(),
+        );
+    }
+    type_line(&mut out, "crp_request_duration_us", "histogram");
+    for kind in REQUEST_KINDS {
+        let labels = format!("kind=\"{}\"", kind.label());
+        latency_hist(
+            &mut out,
+            "crp_request_duration_us",
+            &labels,
+            metrics.requests.hist(kind),
+        );
+    }
+
+    // Ingest-side latency (one amortized sample per registered vector).
+    type_line(&mut out, "crp_register_latency_us", "histogram");
+    latency_hist(&mut out, "crp_register_latency_us", "", &metrics.register_latency);
+
+    // Per-collection engine state, straight off the registry. `list()`
+    // is sorted by name, so scrapes are stable.
+    let collections = registry.list();
+    for (name, kind, get) in [
+        (
+            "crp_collection_rows",
+            "gauge",
+            (|c| c.store.len() as u64) as fn(&crate::coordinator::registry::Collection) -> u64,
+        ),
+        ("crp_collection_pending_rows", "gauge", |c| {
+            c.store.arena().map(|a| a.pending_rows() as u64).unwrap_or(0)
+        }),
+        ("crp_collection_tombstones", "gauge", |c| {
+            c.store.arena().map(|a| a.tombstones() as u64).unwrap_or(0)
+        }),
+        ("crp_collection_storage_bytes", "gauge", |c| {
+            c.store.arena().map(|a| a.storage_bytes() as u64).unwrap_or(0)
+        }),
+        ("crp_collection_index_buckets", "gauge", |c| {
+            c.store.arena().map(|a| a.index_buckets() as u64).unwrap_or(0)
+        }),
+        ("crp_collection_index_max_bucket", "gauge", |c| {
+            c.store.arena().map(|a| a.index_max_bucket() as u64).unwrap_or(0)
+        }),
+        ("crp_collection_drains_total", "counter", |c| {
+            c.store.arena().map(|a| a.drains()).unwrap_or(0)
+        }),
+        ("crp_collection_wal_records_total", "counter", |c| {
+            c.durability.as_ref().map(|d| d.wal_records()).unwrap_or(0)
+        }),
+        ("crp_collection_wal_bytes_total", "counter", |c| {
+            c.durability.as_ref().map(|d| d.wal_bytes()).unwrap_or(0)
+        }),
+        ("crp_collection_last_checkpoint_rows", "gauge", |c| {
+            c.durability.as_ref().map(|d| d.last_checkpoint_rows()).unwrap_or(0)
+        }),
+        ("crp_collection_snapshot_bytes", "gauge", |c| {
+            c.durability.as_ref().map(|d| d.snapshot_bytes()).unwrap_or(0)
+        }),
+    ] {
+        type_line(&mut out, name, kind);
+        for c in &collections {
+            gauge(&mut out, name, &format!("collection=\"{}\"", c.name), get(c));
+        }
+    }
+
+    // Per-collection engine histograms (drain/fold, compaction, and the
+    // ApproxTopK candidate/probe distributions).
+    for (name, get) in [
+        (
+            "crp_drain_fold_us",
+            (|o| &o.fold_us) as fn(&crate::scan::ArenaObs) -> &EngineHist,
+        ),
+        ("crp_compact_us", |o| &o.compact_us),
+        ("crp_approx_candidates", |o| &o.approx_candidates),
+        ("crp_approx_probes", |o| &o.approx_probes),
+    ] {
+        type_line(&mut out, name, "histogram");
+        for c in &collections {
+            if let Some(arena) = c.store.arena() {
+                engine_hist(
+                    &mut out,
+                    name,
+                    &format!("collection=\"{}\"", c.name),
+                    get(arena.obs()),
+                );
+            }
+        }
+    }
+
+    // Durability histograms. WAL appends carry the fsync discipline as
+    // a label, so p99 jumps are attributable to the policy in force.
+    type_line(&mut out, "crp_wal_append_us", "histogram");
+    for c in &collections {
+        if let Some(d) = &c.durability {
+            let labels = format!(
+                "collection=\"{}\",fsync=\"{}\"",
+                c.name,
+                d.fsync_policy().label()
+            );
+            latency_hist(&mut out, "crp_wal_append_us", &labels, d.wal_append_hist());
+        }
+    }
+    type_line(&mut out, "crp_snapshot_write_us", "histogram");
+    for c in &collections {
+        if let Some(d) = &c.durability {
+            let labels = format!("collection=\"{}\"", c.name);
+            latency_hist(&mut out, "crp_snapshot_write_us", &labels, d.snapshot_write_hist());
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::coding::{CodingParams, Scheme};
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::durability::FsyncPolicy;
+    use crate::coordinator::obs::RequestKind;
+    use crate::coordinator::registry::{Registry, RegistryConfig};
+    use crate::projection::{ProjectionConfig, Projector};
+    use crate::scan::EpochConfig;
+
+    fn mem_registry(metrics: Arc<Metrics>) -> Arc<Registry> {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 64,
+            seed: 3,
+            ..Default::default()
+        }));
+        Registry::open(
+            RegistryConfig {
+                root: None,
+                epoch: EpochConfig::default(),
+                batcher: BatcherConfig::default(),
+                checkpoint_every: 0,
+                fsync: FsyncPolicy::Os,
+            },
+            metrics,
+            projector,
+            CodingParams::new(Scheme::TwoBit, 0.75),
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn renders_counters_gauges_and_request_histograms() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = mem_registry(metrics.clone());
+        metrics
+            .knn_queries
+            .fetch_add(7, std::sync::atomic::Ordering::Relaxed);
+        metrics.requests.hist(RequestKind::Knn).record(100);
+        metrics.requests.hist(RequestKind::Knn).record(5_000);
+
+        let text = render(&metrics, &reg);
+        assert!(text.contains("# TYPE crp_knn_queries_total counter"));
+        assert!(text.contains("crp_knn_queries_total 7"));
+        assert!(text.contains("crp_collections 1"));
+        assert!(text.contains("crp_requests_total{kind=\"knn\"} 2"));
+        // Every request kind renders a series even when idle.
+        for kind in REQUEST_KINDS {
+            assert!(
+                text.contains(&format!("crp_requests_total{{kind=\"{}\"}}", kind.label())),
+                "{}",
+                kind.label()
+            );
+        }
+        assert!(text.contains("# TYPE crp_request_duration_us histogram"));
+        assert!(text.contains("crp_request_duration_us_count{kind=\"knn\"} 2"));
+        assert!(text.contains("crp_request_duration_us_sum{kind=\"knn\"} 5100"));
+        // The in-memory default collection renders its gauges.
+        assert!(text.contains("crp_collection_rows{collection=\"default\"} 0"));
+        // No durability → no WAL series body, but the TYPE line stays.
+        assert!(text.contains("# TYPE crp_wal_append_us histogram"));
+        assert!(!text.contains("crp_wal_append_us_count"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = mem_registry(metrics.clone());
+        // 100µs → bucket [64,128); 5000µs → [4096,8192).
+        metrics.requests.hist(RequestKind::TopK).record(100);
+        metrics.requests.hist(RequestKind::TopK).record(5_000);
+        let text = render(&metrics, &reg);
+
+        let bucket = |le: &str| -> u64 {
+            let needle = format!("crp_request_duration_us_bucket{{kind=\"topk\",le=\"{le}\"}} ");
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(&needle))
+                .unwrap_or_else(|| panic!("missing le={le}"));
+            line.rsplit(' ').next().unwrap().parse().unwrap()
+        };
+        assert_eq!(bucket("64"), 0);
+        assert_eq!(bucket("128"), 1);
+        assert_eq!(bucket("4096"), 1);
+        assert_eq!(bucket("8192"), 2);
+        assert_eq!(bucket("+Inf"), 2, "+Inf bucket equals _count");
+        // Monotone in `le` across the whole series.
+        let mut last = 0u64;
+        for le in (1..=31).map(|i| (1u64 << i).to_string()).chain(["+Inf".into()]) {
+            let v = bucket(&le);
+            assert!(v >= last, "bucket le={le} regressed: {v} < {last}");
+            last = v;
+        }
+        assert!(text.contains("crp_request_duration_us_count{kind=\"topk\"} 2"));
+    }
+
+    #[test]
+    fn engine_activity_reaches_collection_series() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = mem_registry(metrics.clone());
+        let c = reg.get("default").unwrap();
+        let ids: Vec<String> = (0..8).map(|i| format!("v{i}")).collect();
+        let vectors: Vec<Vec<f32>> = (0..8)
+            .map(|i| (0..16).map(|j| ((i * 16 + j) as f32).sin()).collect())
+            .collect();
+        match c.register_batch(ids, vectors) {
+            crate::coordinator::protocol::Response::RegisteredBatch { count } => {
+                assert_eq!(count, 8)
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        let arena = c.store.arena().unwrap();
+        arena.drain();
+
+        let text = render(&metrics, &reg);
+        assert!(text.contains("crp_collection_rows{collection=\"default\"} 8"));
+        assert!(text.contains("crp_collection_pending_rows{collection=\"default\"} 0"));
+        assert!(text.contains("crp_collection_drains_total{collection=\"default\"} 1"));
+        assert!(text.contains("crp_drain_fold_us_count{collection=\"default\"} 1"));
+        assert!(text.contains("# TYPE crp_approx_candidates histogram"));
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal hand-rolled HTTP endpoint for `GET /metrics`.
+//!
+//! Same spirit as the frame protocol: no HTTP crate, just enough of
+//! HTTP/1.1 for Prometheus-style scrapers — read the request line,
+//! drain headers, answer `200` with the rendered exposition text (or
+//! `404` for any other path) and close. The listener polls a
+//! nonblocking accept so [`MetricsEndpoint`] can be dropped cleanly
+//! (tests, server shutdown) without a stray blocking thread.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::log;
+
+/// Renders the exposition body on each scrape (a closure over the
+/// server's metrics + registry, so scrapes always see live state).
+pub type RenderFn = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// A background `/metrics` listener; dropping it stops the thread.
+pub struct MetricsEndpoint {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsEndpoint {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve scrapes until drop.
+    pub fn spawn(addr: &str, render: RenderFn) -> crate::Result<MetricsEndpoint> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_thread = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("crp-metrics".into())
+            .spawn(move || {
+                while !stop_thread.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if let Err(e) = serve_one(stream, &render) {
+                                log::debug(
+                                    "crp::obs::http",
+                                    "metrics scrape failed",
+                                    &[("error", e.to_string())],
+                                );
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(e) => {
+                            log::warn(
+                                "crp::obs::http",
+                                "metrics accept failed",
+                                &[("error", e.to_string())],
+                            );
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                    }
+                }
+            })?;
+        Ok(MetricsEndpoint {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the chosen port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsEndpoint {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Answer one scrape connection and close it.
+fn serve_one(stream: TcpStream, render: &RenderFn) -> crate::Result<()> {
+    // The listener is nonblocking; accepted sockets inherit that on
+    // some platforms, so switch back and bound slow scrapers.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    // A scraper that stops reading must not pin the accept thread (or the
+    // shutdown join in Drop) on a blocked write_all.
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut reader = BufReader::new(stream);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    // Drain headers until the blank line; their contents don't matter.
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 || header == "\r\n" || header == "\n" {
+            break;
+        }
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let mut stream = reader.into_inner();
+    if method == "GET" && (path == "/metrics" || path == "/metrics/") {
+        let body = render();
+        write!(
+            stream,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )?;
+        stream.write_all(body.as_bytes())?;
+    } else {
+        let body = "not found; scrape GET /metrics\n";
+        write!(
+            stream,
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )?;
+    }
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn scrape(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404() {
+        let render: RenderFn = Arc::new(|| "crp_up 1\n".to_string());
+        let ep = MetricsEndpoint::spawn("127.0.0.1:0", render).unwrap();
+        let addr = ep.addr();
+
+        let ok = scrape(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"), "{ok}");
+        assert!(ok.ends_with("crp_up 1\n"), "{ok}");
+
+        let missing = scrape(addr, "/other");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+        // Drop must join the listener thread promptly (the accept loop
+        // polls); a hang here fails the test by timeout.
+        drop(ep);
+    }
+
+    #[test]
+    fn renders_live_state_per_scrape() {
+        use std::sync::atomic::AtomicU64;
+        let n = Arc::new(AtomicU64::new(0));
+        let n2 = n.clone();
+        let render: RenderFn =
+            Arc::new(move || format!("scrapes {}\n", n2.fetch_add(1, Ordering::Relaxed)));
+        let ep = MetricsEndpoint::spawn("127.0.0.1:0", render).unwrap();
+        assert!(scrape(ep.addr(), "/metrics").ends_with("scrapes 0\n"));
+        assert!(scrape(ep.addr(), "/metrics").ends_with("scrapes 1\n"));
+    }
+}

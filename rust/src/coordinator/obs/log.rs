@@ -1,0 +1,242 @@
+//! Leveled, structured, lock-cheap logging.
+//!
+//! One line per event on stderr, machine-parsable `key=value` fields:
+//!
+//! ```text
+//! ts_us=1754650000123456 level=warn target=crp::server msg="slow query" kind=topk total_us=125000
+//! ```
+//!
+//! The level gate is a single relaxed atomic load, so disabled levels
+//! cost one branch on the hot path. Values that are not bare tokens are
+//! quoted with `\"`/`\\`/`\n`/`\r` escapes, so a line always splits on
+//! spaces outside quotes. Level comes from `--log-level` (wins) or the
+//! `CRP_LOG` env var via [`init_from_env`]; default `info`.
+//!
+//! The threshold is **process-global** (one static, like stderr
+//! itself): every server and connection thread in the process shares
+//! it, and the last [`set_level`] wins. Library embedders running
+//! several servers in one process should configure the level once at
+//! startup rather than per [`ServerConfig`](super::super::server::ServerConfig);
+//! in-process tests that pass `log_level` only steer stderr noise and
+//! must not assert on another server's emission.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Severity, ordered most- to least-severe. `enabled` admits a level
+/// iff it is at or above the global threshold.
+#[derive(Clone, Copy, Debug, Eq, Ord, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Level> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            other => anyhow::bail!("unknown log level {other:?} (error|warn|info|debug)"),
+        })
+    }
+}
+
+/// Global threshold; `info` until [`set_level`] / [`init_from_env`].
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the process-global threshold. Shared by every server in the
+/// process — last writer wins (see the module docs).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Whether lines at `level` are currently emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Set the global level from an explicit flag value (wins) or the
+/// `CRP_LOG` env var; leaves the default in place when neither is set.
+pub fn init_from_env(flag: Option<&str>) -> crate::Result<()> {
+    let chosen = match flag {
+        Some(s) => Some(Level::parse(s)?),
+        None => match std::env::var("CRP_LOG") {
+            Ok(s) => Some(Level::parse(&s)?),
+            Err(_) => None,
+        },
+    };
+    if let Some(l) = chosen {
+        set_level(l);
+    }
+    Ok(())
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Debug, target, msg, fields);
+}
+
+fn emit(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let ts_us = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros())
+        .unwrap_or(0);
+    let line = format_line(level, target, msg, fields, ts_us);
+    // One locked write per line keeps concurrent connection threads
+    // from interleaving fields.
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{line}");
+}
+
+/// Pure formatter (separated from `emit` so tests never race the
+/// global level or capture stderr).
+pub fn format_line(
+    level: Level,
+    target: &str,
+    msg: &str,
+    fields: &[(&str, String)],
+    ts_us: u128,
+) -> String {
+    let mut out = String::with_capacity(96 + 24 * fields.len());
+    out.push_str("ts_us=");
+    out.push_str(&ts_us.to_string());
+    out.push_str(" level=");
+    out.push_str(level.label());
+    out.push_str(" target=");
+    out.push_str(target);
+    out.push_str(" msg=");
+    out.push_str(&quote(msg));
+    for (k, v) in fields {
+        out.push(' ');
+        out.push_str(k);
+        out.push('=');
+        out.push_str(&quote(v));
+    }
+    out
+}
+
+/// Bare tokens pass through; anything else is quoted with
+/// backslash-escaped `"` `\` and newlines, so consumers can split a
+/// line on spaces outside quotes.
+pub fn quote(s: &str) -> String {
+    let bare = !s.is_empty()
+        && s.bytes().all(|b| {
+            b.is_ascii_alphanumeric()
+                || matches!(b, b'.' | b'_' | b':' | b'/' | b'+' | b'-' | b',' | b'%' | b'#')
+        });
+    if bare {
+        return s.to_string();
+    }
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("error").unwrap(), Level::Error);
+        assert_eq!(Level::parse("WARN").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("warning").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("Info").unwrap(), Level::Info);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("trace").is_err());
+        assert!(Level::parse("").is_err());
+    }
+
+    #[test]
+    fn severity_orders() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(
+            quote("bare_token-1.2:3/x+y,z%p#q"),
+            "bare_token-1.2:3/x+y,z%p#q"
+        );
+        assert_eq!(quote(""), "\"\"");
+        assert_eq!(quote("two words"), "\"two words\"");
+        assert_eq!(quote("a\"b"), "\"a\\\"b\"");
+        assert_eq!(quote("a\\b"), "\"a\\\\b\"");
+        assert_eq!(quote("a\nb"), "\"a\\nb\"");
+        assert_eq!(quote("a\rb"), "\"a\\rb\"");
+        assert_eq!(quote("résumé"), "\"résumé\"");
+    }
+
+    #[test]
+    fn line_format() {
+        let line = format_line(
+            Level::Warn,
+            "crp::server",
+            "slow query",
+            &[
+                ("kind", "topk".to_string()),
+                ("total_us", "125000".to_string()),
+            ],
+            42,
+        );
+        assert_eq!(
+            line,
+            "ts_us=42 level=warn target=crp::server msg=\"slow query\" kind=topk total_us=125000"
+        );
+    }
+
+    #[test]
+    fn line_format_no_fields() {
+        let line = format_line(Level::Info, "crp", "up", &[], 7);
+        assert_eq!(line, "ts_us=7 level=info target=crp msg=up");
+    }
+}

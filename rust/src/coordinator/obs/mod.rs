@@ -1,0 +1,345 @@
+//! Observability: full-path request histograms, Prometheus-style
+//! exposition, structured logging, and slow-query tracing.
+//!
+//! Zero new dependencies, in the same hand-rolled spirit as the frame
+//! protocol. Three submodules:
+//!
+//! * [`log`] — leveled `key=value` stderr lines behind one atomic gate
+//!   (`--log-level` / `CRP_LOG`); replaces ad-hoc `eprintln!`s.
+//! * [`expo`] — renders every counter, gauge, and histogram (global +
+//!   per-collection, straight off the registry) in Prometheus text
+//!   exposition format.
+//! * [`http`] — a minimal `GET /metrics` listener serving that text
+//!   (`crp serve --metrics-addr`).
+//!
+//! This module holds the shared request-side vocabulary: the
+//! [`RequestKind`] classification, one [`LatencyHistogram`] per kind
+//! ([`RequestHistograms`], recorded by the connection loop around the
+//! whole decode→handle→write path), the routing metadata the server
+//! hands back per request ([`ReqMeta`]), and the slow-query / trace
+//! sampling knobs ([`ObsConfig`]). Instrumentation rides outside every
+//! existing lock: recording is a handful of relaxed atomic adds after
+//! the response is on the wire.
+
+pub mod expo;
+pub mod http;
+pub mod log;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::metrics::LatencyHistogram;
+use super::protocol::Request;
+
+/// Request classification for per-kind latency histograms and log
+/// lines. Data-path kinds get their own bucket; introspection and
+/// collection admin share `Admin` (rare, never latency-critical).
+#[derive(Clone, Copy, Debug, Eq, PartialEq)]
+pub enum RequestKind {
+    Register,
+    RegisterBatch,
+    Remove,
+    Estimate,
+    Knn,
+    TopK,
+    ApproxTopK,
+    Persist,
+    Admin,
+}
+
+/// Every kind, in exposition order.
+pub const REQUEST_KINDS: [RequestKind; 9] = [
+    RequestKind::Register,
+    RequestKind::RegisterBatch,
+    RequestKind::Remove,
+    RequestKind::Estimate,
+    RequestKind::Knn,
+    RequestKind::TopK,
+    RequestKind::ApproxTopK,
+    RequestKind::Persist,
+    RequestKind::Admin,
+];
+
+impl RequestKind {
+    /// Stable label, shared by `/metrics` series, `StatsDetailed`
+    /// per-request rows, and log lines.
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestKind::Register => "register",
+            RequestKind::RegisterBatch => "register_batch",
+            RequestKind::Remove => "remove",
+            RequestKind::Estimate => "estimate",
+            RequestKind::Knn => "knn",
+            RequestKind::TopK => "topk",
+            RequestKind::ApproxTopK => "approx_topk",
+            RequestKind::Persist => "persist",
+            RequestKind::Admin => "admin",
+        }
+    }
+
+    /// Classify a request. `Scoped` classifies as its inner request
+    /// (the wrapper is routing, not work); `Estimate`/`EstimateVec`
+    /// share a bucket (same code path, one id resolved differently).
+    pub fn of(req: &Request) -> RequestKind {
+        match req {
+            Request::Scoped { inner, .. } => RequestKind::of(inner),
+            Request::Register { .. } => RequestKind::Register,
+            Request::RegisterBatch { .. } => RequestKind::RegisterBatch,
+            Request::Remove { .. } => RequestKind::Remove,
+            Request::Estimate { .. } | Request::EstimateVec { .. } => RequestKind::Estimate,
+            Request::Knn { .. } => RequestKind::Knn,
+            Request::TopK { .. } => RequestKind::TopK,
+            Request::ApproxTopK { .. } => RequestKind::ApproxTopK,
+            Request::Persist => RequestKind::Persist,
+            Request::Stats
+            | Request::StatsDetailed
+            | Request::Ping
+            | Request::CreateCollection { .. }
+            | Request::DropCollection { .. }
+            | Request::ListCollections
+            | Request::MetricsText => RequestKind::Admin,
+        }
+    }
+}
+
+/// One latency histogram per request kind: the full client-visible
+/// path (frame decode → routing/handling → response encode + write),
+/// recorded once per request by the connection loop.
+#[derive(Debug, Default)]
+pub struct RequestHistograms {
+    register: LatencyHistogram,
+    register_batch: LatencyHistogram,
+    remove: LatencyHistogram,
+    estimate: LatencyHistogram,
+    knn: LatencyHistogram,
+    topk: LatencyHistogram,
+    approx_topk: LatencyHistogram,
+    persist: LatencyHistogram,
+    admin: LatencyHistogram,
+}
+
+impl RequestHistograms {
+    pub fn hist(&self, kind: RequestKind) -> &LatencyHistogram {
+        match kind {
+            RequestKind::Register => &self.register,
+            RequestKind::RegisterBatch => &self.register_batch,
+            RequestKind::Remove => &self.remove,
+            RequestKind::Estimate => &self.estimate,
+            RequestKind::Knn => &self.knn,
+            RequestKind::TopK => &self.topk,
+            RequestKind::ApproxTopK => &self.approx_topk,
+            RequestKind::Persist => &self.persist,
+            RequestKind::Admin => &self.admin,
+        }
+    }
+}
+
+/// What routing learned about one request — inputs for the connection
+/// loop's recording, slow-query, and trace decisions.
+#[derive(Debug)]
+pub struct ReqMeta {
+    pub kind: RequestKind,
+    /// Explicit collection of a `Scoped` request; `None` for legacy
+    /// frames (routed to `default`).
+    pub collection: Option<String>,
+    /// Candidate rows reranked by an `ApproxTopK` request, summed over
+    /// its query batch (0 when the exact fallback served it; `None`
+    /// for every other kind).
+    pub candidates: Option<u64>,
+}
+
+/// Per-server slow-query / trace knobs. Sampling costs one relaxed
+/// `fetch_add` when tracing is on and nothing when off.
+#[derive(Debug)]
+pub struct ObsConfig {
+    /// Requests at least this slow end-to-end (µs) emit one structured
+    /// slow-query line; 0 disables.
+    pub slow_query_us: u64,
+    /// Every Nth request emits a trace line; 0 disables.
+    pub trace_sample: u64,
+    seq: AtomicU64,
+}
+
+impl ObsConfig {
+    pub fn new(slow_query_us: u64, trace_sample: u64) -> ObsConfig {
+        ObsConfig {
+            slow_query_us,
+            trace_sample,
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Trace-sampling decision: true for the first request and every
+    /// `trace_sample`-th after it.
+    pub fn should_trace(&self) -> bool {
+        if self.trace_sample == 0 {
+            return false;
+        }
+        self.seq.fetch_add(1, Ordering::Relaxed) % self.trace_sample == 0
+    }
+}
+
+/// The shared field list for slow-query and trace lines: identity plus
+/// the decode→handle→write stage breakdown the connection loop timed.
+pub fn stage_fields(
+    meta: &ReqMeta,
+    total_us: u64,
+    decode_us: u64,
+    handle_us: u64,
+    write_us: u64,
+) -> Vec<(&'static str, String)> {
+    let mut fields = vec![
+        ("kind", meta.kind.label().to_string()),
+        (
+            "collection",
+            meta.collection.clone().unwrap_or_else(|| "default".into()),
+        ),
+        ("total_us", total_us.to_string()),
+        ("decode_us", decode_us.to_string()),
+        ("handle_us", handle_us.to_string()),
+        ("write_us", write_us.to_string()),
+    ];
+    if let Some(c) = meta.candidates {
+        fields.push(("candidates", c.to_string()));
+    }
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_covers_every_kind() {
+        assert_eq!(
+            RequestKind::of(&Request::Register {
+                id: "x".into(),
+                vector: vec![]
+            }),
+            RequestKind::Register
+        );
+        assert_eq!(
+            RequestKind::of(&Request::RegisterBatch {
+                ids: vec![],
+                vectors: vec![]
+            }),
+            RequestKind::RegisterBatch
+        );
+        assert_eq!(
+            RequestKind::of(&Request::Remove { id: "x".into() }),
+            RequestKind::Remove
+        );
+        assert_eq!(
+            RequestKind::of(&Request::Estimate {
+                a: "a".into(),
+                b: "b".into()
+            }),
+            RequestKind::Estimate
+        );
+        assert_eq!(
+            RequestKind::of(&Request::EstimateVec {
+                id: "a".into(),
+                vector: vec![]
+            }),
+            RequestKind::Estimate
+        );
+        assert_eq!(
+            RequestKind::of(&Request::Knn {
+                vector: vec![],
+                n: 1
+            }),
+            RequestKind::Knn
+        );
+        assert_eq!(
+            RequestKind::of(&Request::TopK {
+                vectors: vec![],
+                n: 1
+            }),
+            RequestKind::TopK
+        );
+        assert_eq!(
+            RequestKind::of(&Request::ApproxTopK {
+                vectors: vec![],
+                n: 1,
+                probes: 0
+            }),
+            RequestKind::ApproxTopK
+        );
+        assert_eq!(RequestKind::of(&Request::Persist), RequestKind::Persist);
+        for admin in [
+            Request::Stats,
+            Request::StatsDetailed,
+            Request::Ping,
+            Request::ListCollections,
+            Request::MetricsText,
+            Request::DropCollection { name: "c".into() },
+        ] {
+            assert_eq!(RequestKind::of(&admin), RequestKind::Admin, "{admin:?}");
+        }
+    }
+
+    #[test]
+    fn scoped_classifies_as_inner() {
+        let scoped = Request::Scoped {
+            collection: "c".into(),
+            inner: Box::new(Request::Knn {
+                vector: vec![],
+                n: 3,
+            }),
+        };
+        assert_eq!(RequestKind::of(&scoped), RequestKind::Knn);
+    }
+
+    #[test]
+    fn histograms_are_per_kind() {
+        let h = RequestHistograms::default();
+        h.hist(RequestKind::Knn).record(100);
+        h.hist(RequestKind::Knn).record(200);
+        h.hist(RequestKind::Persist).record(5_000_000);
+        assert_eq!(h.hist(RequestKind::Knn).count(), 2);
+        assert_eq!(h.hist(RequestKind::Persist).count(), 1);
+        assert_eq!(h.hist(RequestKind::TopK).count(), 0);
+        // Labels are unique (they name exposition series).
+        let mut labels: Vec<_> = REQUEST_KINDS.iter().map(|k| k.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), REQUEST_KINDS.len());
+    }
+
+    #[test]
+    fn trace_sampling() {
+        let off = ObsConfig::new(0, 0);
+        assert!(!off.should_trace());
+
+        let every = ObsConfig::new(0, 1);
+        assert!((0..10).all(|_| every.should_trace()));
+
+        let third = ObsConfig::new(0, 3);
+        let hits: Vec<bool> = (0..9).map(|_| third.should_trace()).collect();
+        assert_eq!(
+            hits,
+            [true, false, false, true, false, false, true, false, false]
+        );
+    }
+
+    #[test]
+    fn stage_fields_include_candidates_only_when_known() {
+        let meta = ReqMeta {
+            kind: RequestKind::ApproxTopK,
+            collection: Some("web".into()),
+            candidates: Some(42),
+        };
+        let fields = stage_fields(&meta, 100, 1, 98, 1);
+        assert!(fields.contains(&("kind", "approx_topk".into())));
+        assert!(fields.contains(&("collection", "web".into())));
+        assert!(fields.contains(&("candidates", "42".into())));
+
+        let meta = ReqMeta {
+            kind: RequestKind::Knn,
+            collection: None,
+            candidates: None,
+        };
+        let fields = stage_fields(&meta, 100, 1, 98, 1);
+        assert!(fields.contains(&("collection", "default".into())));
+        assert!(!fields.iter().any(|(k, _)| *k == "candidates"));
+    }
+}

@@ -70,6 +70,14 @@ pub enum Request {
     /// Rides tag 4 with a one-byte tail, so the bare legacy `Stats`
     /// frame stays byte-identical; old servers reject the tail frame
     /// cleanly instead of silently dropping the section.
+    ///
+    /// Compatibility contract: detailed answers grow new trailing
+    /// sections over time (per-collection in PR 5, per-request in
+    /// PR 6), so a client must be at least as new as the server to
+    /// decode a non-idle `StatsDetailed` answer — older clients error
+    /// on the extra tail instead of silently missing data. Plain
+    /// `Stats` answers never carry a section and stay decodable by
+    /// every client version.
     StatsDetailed,
     /// Health check.
     Ping,
@@ -98,6 +106,10 @@ pub enum Request {
         collection: String,
         inner: Box<Request>,
     },
+    /// Full metrics in Prometheus text exposition format — the same
+    /// body `crp serve --metrics-addr` serves over HTTP, fetched over
+    /// the native protocol (`crp metrics`).
+    MetricsText,
 }
 
 /// Server → client responses.
@@ -118,6 +130,8 @@ pub enum Response {
     Collections { collections: Vec<CollectionInfo> },
     CollectionCreated { name: String },
     CollectionDropped { existed: bool },
+    /// `MetricsText` result: the rendered exposition body.
+    MetricsText { text: String },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -160,6 +174,22 @@ pub struct CollectionStats {
     pub index_buckets: u64,
 }
 
+/// Per-request-kind latency row of the stats breakdown. Like
+/// [`CollectionStats`], only a [`Request::StatsDetailed`] answer
+/// carries these; the section rides after the per-collection one and
+/// is omitted when empty.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestLatency {
+    /// Request-kind label (`register`, `knn`, `approx_topk`, …) —
+    /// identical to the `kind` label on the `/metrics` endpoint.
+    pub kind: String,
+    /// Requests of this kind handled so far.
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StatsSnapshot {
     pub registered: u64,
@@ -196,6 +226,14 @@ pub struct StatsSnapshot {
     /// aggregates and is omitted from the frame when empty (plain
     /// `Stats` responses stay byte-identical to pre-breakdown ones).
     pub per_collection: Vec<CollectionStats>,
+    /// Full-path latency per request kind, in kind order, kinds with
+    /// no traffic skipped. Populated only for `StatsDetailed`; rides
+    /// as a second optional section after `per_collection` (see the
+    /// encoder for the tail layout rules). Clients predating this
+    /// section cannot decode a `StatsDetailed` answer that carries it
+    /// — a deliberate break, same tradeoff as `per_collection` in the
+    /// prior PR (see [`Request::StatsDetailed`]).
+    pub per_request: Vec<RequestLatency>,
 }
 
 // ---- encoding primitives ----------------------------------------------
@@ -379,6 +417,7 @@ impl Request {
                 e.u32(*probes);
                 e.0
             }
+            Request::MetricsText => Enc::new(15).0,
         }
     }
 
@@ -497,6 +536,7 @@ impl Request {
                     probes: d.u32()?,
                 }
             }
+            15 => Request::MetricsText,
             t => anyhow::bail!("unknown request tag {t}"),
         };
         d.done()?;
@@ -552,11 +592,20 @@ impl Response {
                 e.u64(s.maintenance_wakeups);
                 e.u64(s.connections);
                 e.u64(s.collections);
-                // Per-collection section — appended after every
-                // aggregate field, and omitted entirely when empty so a
-                // plain `Stats` answer is byte-identical to the
-                // pre-breakdown format (old clients keep decoding it).
-                if !s.per_collection.is_empty() {
+                // Optional sections — appended after every aggregate
+                // field, and omitted entirely when empty so a plain
+                // `Stats` answer is byte-identical to the pre-breakdown
+                // format (old clients keep decoding it). The decoder
+                // reads trailing sections positionally, so a non-empty
+                // per-request section forces the per-collection one to
+                // be present too (as a zero count if need be).
+                //
+                // Only plain `Stats` is compatible both directions.
+                // A `StatsDetailed` answer with traffic recorded is
+                // NOT decodable by clients predating a section it
+                // carries (their `done()` rejects the extra tail) —
+                // an accepted break; see Request::StatsDetailed.
+                if !s.per_collection.is_empty() || !s.per_request.is_empty() {
                     e.u32(s.per_collection.len() as u32);
                     for c in &s.per_collection {
                         e.str(&c.name);
@@ -564,6 +613,16 @@ impl Response {
                         e.u64(c.pending_rows);
                         e.u64(c.wal_bytes);
                         e.u64(c.index_buckets);
+                    }
+                }
+                if !s.per_request.is_empty() {
+                    e.u32(s.per_request.len() as u32);
+                    for r in &s.per_request {
+                        e.str(&r.kind);
+                        e.u64(r.count);
+                        e.f64(r.mean_us);
+                        e.u64(r.p50_us);
+                        e.u64(r.p99_us);
                     }
                 }
                 e.0
@@ -627,6 +686,11 @@ impl Response {
                 e.u8(u8::from(*existed));
                 e.0
             }
+            Response::MetricsText { text } => {
+                let mut e = Enc::new(13);
+                e.str(text);
+                e.0
+            }
         }
     }
 
@@ -672,6 +736,7 @@ impl Response {
                     connections: d.u64()?,
                     collections: d.u64()?,
                     per_collection: Vec::new(),
+                    per_request: Vec::new(),
                 };
                 // Optional per-collection section: absent in frames
                 // from pre-breakdown servers.
@@ -685,6 +750,21 @@ impl Response {
                             pending_rows: d.u64()?,
                             wal_bytes: d.u64()?,
                             index_buckets: d.u64()?,
+                        });
+                    }
+                }
+                // Optional per-request section: absent in frames from
+                // pre-observability servers.
+                if d.pos < buf.len() {
+                    let n = d.u32()? as usize;
+                    anyhow::ensure!(n * 36 <= buf.len(), "bad request stat count");
+                    for _ in 0..n {
+                        s.per_request.push(RequestLatency {
+                            kind: d.str()?,
+                            count: d.u64()?,
+                            mean_us: d.f64()?,
+                            p50_us: d.u64()?,
+                            p99_us: d.u64()?,
                         });
                     }
                 }
@@ -755,6 +835,7 @@ impl Response {
                 anyhow::ensure!(v <= 1, "bad bool byte {v}");
                 Response::CollectionDropped { existed: v == 1 }
             }
+            13 => Response::MetricsText { text: d.str()? },
             t => anyhow::bail!("unknown response tag {t}"),
         };
         d.done()?;
@@ -1059,6 +1140,95 @@ mod tests {
         assert_eq!(Request::decode(&[4u8]).unwrap(), Request::Stats);
         assert_eq!(Request::decode(&[4u8, 1]).unwrap(), Request::StatsDetailed);
         assert!(Request::decode(&[4u8, 9]).is_err());
+    }
+
+    /// PR6 wire pins: the `MetricsText` frames and the per-request
+    /// latency tail on `Stats`, plus proof the new tail never disturbs
+    /// the pre-observability byte layouts pinned above (plain `Stats`
+    /// answers only — a `StatsDetailed` answer carrying the tail needs
+    /// a PR6+ client to decode, by design).
+    #[test]
+    fn metrics_text_and_per_request_frames() {
+        // Request tag 15 is a bare byte, like Persist/Ping.
+        assert_eq!(Request::MetricsText.encode(), vec![15u8]);
+        roundtrip_req(Request::MetricsText);
+
+        // Response tag 13: length-prefixed exposition text.
+        roundtrip_resp(Response::MetricsText {
+            text: "# TYPE crp_requests_total counter\n".into(),
+        });
+        roundtrip_resp(Response::MetricsText { text: String::new() });
+
+        // Stats with per-request rows but no per-collection rows: the
+        // decoder reads trailing sections positionally, so the encoder
+        // must emit a zero-count per-collection section first.
+        let stats = Response::Stats(StatsSnapshot {
+            registered: 3,
+            kernel: "swar".into(),
+            per_request: vec![
+                RequestLatency {
+                    kind: "knn".into(),
+                    count: 2,
+                    mean_us: 150.5,
+                    p50_us: 128,
+                    p99_us: 256,
+                },
+                RequestLatency {
+                    kind: "persist".into(),
+                    count: 1,
+                    mean_us: 50_000.0,
+                    p50_us: 65_536,
+                    p99_us: 65_536,
+                },
+            ],
+            ..Default::default()
+        });
+        let bytes = stats.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), stats);
+        let bare = Response::Stats(StatsSnapshot {
+            registered: 3,
+            kernel: "swar".into(),
+            ..Default::default()
+        })
+        .encode();
+        // The leading zero-count per-collection section is present.
+        assert_eq!(&bytes[bare.len()..bare.len() + 4], &0u32.to_le_bytes());
+
+        // Both sections together round-trip too.
+        let both = Response::Stats(StatsSnapshot {
+            kernel: "avx2".into(),
+            per_collection: vec![CollectionStats {
+                name: "web".into(),
+                rows: 9,
+                pending_rows: 1,
+                wal_bytes: 64,
+                index_buckets: 3,
+            }],
+            per_request: vec![RequestLatency {
+                kind: "estimate".into(),
+                count: 40,
+                mean_us: 12.0,
+                p50_us: 8,
+                p99_us: 32,
+            }],
+            ..Default::default()
+        });
+        assert_eq!(Response::decode(&both.encode()).unwrap(), both);
+
+        // A pre-observability frame (per-collection section only, no
+        // per-request tail) still decodes with the field defaulting.
+        let old = Response::Stats(StatsSnapshot {
+            kernel: "avx2".into(),
+            per_collection: vec![CollectionStats {
+                name: "web".into(),
+                rows: 9,
+                pending_rows: 1,
+                wal_bytes: 64,
+                index_buckets: 3,
+            }],
+            ..Default::default()
+        });
+        assert_eq!(Response::decode(&old.encode()).unwrap(), old);
     }
 
     #[test]

@@ -434,15 +434,27 @@ impl Collection {
     /// candidates reranked through the exact kernels, pending rows
     /// swept exactly (see [`crate::scan::EpochArena::scan_topk_approx`]).
     /// `probes` 0 uses the collection's configured default.
-    pub(crate) fn approx_topk(&self, vectors: Vec<Vec<f32>>, n: u32, probes: u32) -> Response {
+    ///
+    /// Also returns the total candidate rows reranked across the batch
+    /// (0 when the exact fallback served it) so the connection loop can
+    /// tag slow-query lines without re-deriving it.
+    pub(crate) fn approx_topk(
+        &self,
+        vectors: Vec<Vec<f32>>,
+        n: u32,
+        probes: u32,
+    ) -> (Response, u64) {
         let mut queries = Vec::with_capacity(vectors.len());
         for vector in vectors {
             match self.batcher.sketch(vector) {
                 Ok(q) => queries.push(q),
                 Err(e) => {
-                    return Response::Error {
-                        message: format!("sketch failed: {e}"),
-                    }
+                    return (
+                        Response::Error {
+                            message: format!("sketch failed: {e}"),
+                        },
+                        0,
+                    )
                 }
             }
         }
@@ -455,12 +467,13 @@ impl Collection {
             probes as usize
         };
         let arena = self.store.arena().expect("collection store is arena-backed");
-        let results = arena
-            .scan_topk_approx_batch(&queries, n as usize, probes)
+        let (batch, candidates) =
+            arena.scan_topk_approx_batch_counted(&queries, n as usize, probes);
+        let results = batch
             .into_iter()
             .map(|hits| self.to_knn_hits(hits))
             .collect();
-        Response::TopK { results }
+        (Response::TopK { results }, candidates)
     }
 
     /// This collection's slice of the stats breakdown.

@@ -5,12 +5,14 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::coding::CodingParams;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::durability::{DurabilityConfig, FsyncPolicy};
 use crate::coordinator::maintenance::{Maintenance, MaintenanceConfig};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::obs;
 use crate::coordinator::protocol::{self, Request, Response};
 use crate::coordinator::registry::{
     Collection, CollectionOptions, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION,
@@ -47,6 +49,21 @@ pub struct ServerConfig {
     /// Concurrent-connection cap; over-limit connections get one clean
     /// `Error` frame and are closed. 0 = unlimited.
     pub max_conns: usize,
+    /// `host:port` for the Prometheus-style `GET /metrics` listener;
+    /// `None` leaves exposition to the `MetricsText` protocol request.
+    pub metrics_addr: Option<String>,
+    /// Log threshold (`error|warn|info|debug`); `None` defers to the
+    /// `CRP_LOG` environment variable, then the `info` default. The
+    /// threshold is process-global (shared stderr, shared gate): when
+    /// several servers run in one process, the last `serve()` to set a
+    /// level wins for all of them — see `obs::log` module docs.
+    pub log_level: Option<String>,
+    /// Requests at least this slow end-to-end (µs) emit one structured
+    /// slow-query line; 0 disables.
+    pub slow_query_us: u64,
+    /// Every Nth request emits a debug-level trace line with its stage
+    /// breakdown; 0 disables.
+    pub trace_sample: u64,
 }
 
 impl Default for ServerConfig {
@@ -62,6 +79,10 @@ impl Default for ServerConfig {
             checkpoint_every: 100_000,
             maintenance: MaintenanceConfig::default(),
             max_conns: 1024,
+            metrics_addr: None,
+            log_level: None,
+            slow_query_us: 0,
+            trace_sample: 0,
         }
     }
 }
@@ -80,6 +101,8 @@ pub struct ServiceState {
     /// `default`'s sketch width.
     pub k: usize,
     pub metrics: Arc<Metrics>,
+    /// Slow-query threshold and trace-sampling state.
+    pub obs: obs::ObsConfig,
     /// Background drain/checkpoint thread; its `Drop` is the graceful-
     /// shutdown flush.
     _maintenance: Maintenance,
@@ -125,6 +148,7 @@ impl ServiceState {
             default,
             registry,
             metrics,
+            obs: obs::ObsConfig::new(cfg.slow_query_us, cfg.trace_sample),
             _maintenance: maintenance,
         }))
     }
@@ -171,10 +195,30 @@ impl ServiceState {
     /// Handle one request (the router). Legacy frames carry no
     /// collection and route to `default`; `Scoped` frames name one.
     pub fn handle(&self, req: Request) -> Response {
-        match req {
-            Request::Scoped { collection, inner } => self.handle_in(Some(&collection), *inner),
-            other => self.handle_in(None, other),
-        }
+        self.handle_traced(req).0
+    }
+
+    /// As [`ServiceState::handle`], also returning the routing metadata
+    /// the connection loop records (request kind, target collection,
+    /// ApproxTopK candidate count).
+    pub fn handle_traced(&self, req: Request) -> (Response, obs::ReqMeta) {
+        let kind = obs::RequestKind::of(&req);
+        let mut candidates = None;
+        let (collection, resp) = match req {
+            Request::Scoped { collection, inner } => {
+                let resp = self.handle_in(Some(&collection), *inner, &mut candidates);
+                (Some(collection), resp)
+            }
+            other => (None, self.handle_in(None, other, &mut candidates)),
+        };
+        (
+            resp,
+            obs::ReqMeta {
+                kind,
+                collection,
+                candidates,
+            },
+        )
     }
 
     /// Resolve the target collection of a data-path request.
@@ -188,11 +232,19 @@ impl ServiceState {
         })
     }
 
-    fn handle_in(&self, collection: Option<&str>, req: Request) -> Response {
+    fn handle_in(
+        &self,
+        collection: Option<&str>,
+        req: Request,
+        candidates: &mut Option<u64>,
+    ) -> Response {
         match req {
             Request::Ping => Response::Pong,
             Request::Stats => self.stats(false),
             Request::StatsDetailed => self.stats(true),
+            Request::MetricsText => Response::MetricsText {
+                text: obs::expo::render(&self.metrics, &self.registry),
+            },
             Request::Scoped { .. } => Response::Error {
                 message: "nested Scoped request".to_string(),
             },
@@ -289,7 +341,11 @@ impl ServiceState {
                 Err(resp) => resp,
             },
             Request::ApproxTopK { vectors, n, probes } => match self.resolve(collection) {
-                Ok(c) => c.approx_topk(vectors, n, probes),
+                Ok(c) => {
+                    let (resp, cands) = c.approx_topk(vectors, n, probes);
+                    *candidates = Some(cands);
+                    resp
+                }
                 Err(resp) => resp,
             },
         }
@@ -299,8 +355,11 @@ impl ServiceState {
     /// summed over collections; the kernel label is `default`'s (every
     /// collection picks its own tier by bit width). With `detail`
     /// (`StatsDetailed`), the per-collection section rides after the
-    /// aggregates, sorted by name like `ListCollections`; without it
-    /// the response is byte-identical to the pre-breakdown format.
+    /// aggregates, sorted by name like `ListCollections`, then the
+    /// per-request latency section; without `detail` the response is
+    /// byte-identical to the pre-breakdown format. Detailed answers
+    /// need a client as new as the server (see
+    /// [`Request::StatsDetailed`] for the compatibility contract).
     fn stats(&self, detail: bool) -> Response {
         let mut st = self.metrics.snapshot();
         let collections = self.registry.list();
@@ -319,6 +378,9 @@ impl ServiceState {
             if detail {
                 st.per_collection.push(c.stats());
             }
+        }
+        if detail {
+            st.per_request = self.metrics.per_request();
         }
         if let Some(arena) = self.default.store.arena() {
             st.kernel = arena.kernel_kind().label().to_string();
@@ -349,19 +411,49 @@ pub fn serve(
     if let Some(tx) = ready {
         let _ = tx.send(addr);
     }
+    // Sets the process-global log threshold (no-op when neither the
+    // flag nor CRP_LOG is set) — concurrent servers share it.
+    obs::log::init_from_env(cfg.log_level.as_deref())?;
     let state = ServiceState::open(projector, &cfg)?;
     if cfg.durability.is_some() || cfg.data_dir.is_some() {
-        eprintln!(
-            "durability on: {} collection(s), {} sketch(es) recovered from disk",
-            state.registry.len(),
-            state
-                .registry
-                .list()
-                .iter()
-                .map(|c| c.store.len())
-                .sum::<usize>()
+        obs::log::info(
+            "crp::server",
+            "durability on",
+            &[
+                ("collections", state.registry.len().to_string()),
+                (
+                    "recovered_sketches",
+                    state
+                        .registry
+                        .list()
+                        .iter()
+                        .map(|c| c.store.len())
+                        .sum::<usize>()
+                        .to_string(),
+                ),
+            ],
         );
     }
+    // The /metrics listener holds its own render closure over the
+    // shared state; dropping it (server exit) stops the thread.
+    let _metrics_endpoint = match &cfg.metrics_addr {
+        Some(addr) => {
+            let render_state = state.clone();
+            let ep = obs::http::MetricsEndpoint::spawn(
+                addr,
+                Arc::new(move || {
+                    obs::expo::render(&render_state.metrics, &render_state.registry)
+                }),
+            )?;
+            obs::log::info(
+                "crp::server",
+                "metrics endpoint up",
+                &[("addr", ep.addr().to_string())],
+            );
+            Some(ep)
+        }
+        None => None,
+    };
     for stream in listener.incoming() {
         let stream = stream?;
         if cfg.max_conns > 0
@@ -395,20 +487,71 @@ fn reject_connection(stream: TcpStream, max_conns: usize) -> crate::Result<()> {
 
 fn handle_connection(stream: TcpStream, state: Arc<ServiceState>) -> crate::Result<()> {
     stream.set_nodelay(true)?;
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let mut writer = std::io::BufWriter::new(stream);
     loop {
         let frame = match protocol::read_frame(&mut reader) {
             Ok(f) => f,
-            Err(_) => return Ok(()), // client closed
+            Err(e) => {
+                // A closed peer is the normal end of every connection,
+                // not an incident — debug, never warn.
+                obs::log::debug(
+                    "crp::server",
+                    "connection closed",
+                    &[("peer", peer.clone()), ("reason", e.to_string())],
+                );
+                return Ok(());
+            }
         };
-        let resp = match Request::decode(&frame) {
-            Ok(req) => state.handle(req),
-            Err(e) => Response::Error {
-                message: format!("bad request: {e}"),
-            },
+        // Full-path timing starts once a frame is in hand: decode →
+        // route/handle → encode+write, the whole server-side latency a
+        // client observes past its own socket.
+        let t0 = Instant::now();
+        let decoded = Request::decode(&frame);
+        let decode_us = t0.elapsed().as_micros() as u64;
+        let h0 = Instant::now();
+        let (resp, meta) = match decoded {
+            Ok(req) => state.handle_traced(req),
+            Err(e) => (
+                Response::Error {
+                    message: format!("bad request: {e}"),
+                },
+                obs::ReqMeta {
+                    kind: obs::RequestKind::Admin,
+                    collection: None,
+                    candidates: None,
+                },
+            ),
         };
+        let handle_us = h0.elapsed().as_micros() as u64;
+        let w0 = Instant::now();
         protocol::write_frame(&mut writer, &resp.encode())?;
+        let write_us = w0.elapsed().as_micros() as u64;
+        let total_us = (decode_us + handle_us + write_us).max(1);
+        state.metrics.requests.hist(meta.kind).record(total_us);
+
+        // Exactly one line per request: a slow-query warning when the
+        // threshold fires, else a sampled debug trace.
+        if state.obs.slow_query_us > 0 && total_us >= state.obs.slow_query_us {
+            state.metrics.slow_queries.fetch_add(1, Ordering::Relaxed);
+            let mut fields = obs::stage_fields(&meta, total_us, decode_us, handle_us, write_us);
+            // The kernel tier is resolved lazily — only slow queries
+            // pay the registry lookup.
+            let name = meta.collection.as_deref().unwrap_or(DEFAULT_COLLECTION);
+            if let Some(c) = state.registry.get(name) {
+                if let Some(arena) = c.store.arena() {
+                    fields.push(("kernel", arena.kernel_kind().label().to_string()));
+                }
+            }
+            obs::log::warn("crp::slow_query", "slow request", &fields);
+        } else if state.obs.should_trace() {
+            obs::log::debug(
+                "crp::trace",
+                "request",
+                &obs::stage_fields(&meta, total_us, decode_us, handle_us, write_us),
+            );
+        }
     }
 }
 
@@ -727,6 +870,89 @@ mod tests {
                 assert_eq!(collections[0].bits, 2);
                 assert!(!collections[0].durable);
             }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handle_traced_reports_kind_collection_and_candidates() {
+        let s = state(128);
+        let (resp, meta) = s.handle_traced(Request::Register {
+            id: "a".into(),
+            vector: vec![1.0; 16],
+        });
+        assert!(matches!(resp, Response::Registered { .. }));
+        assert_eq!(meta.kind, obs::RequestKind::Register);
+        assert_eq!(meta.collection, None);
+        assert_eq!(meta.candidates, None);
+
+        // Scoped requests surface their collection; ApproxTopK reports
+        // its candidate count (0 here: small store → exact fallback).
+        let (resp, meta) = s.handle_traced(Request::Scoped {
+            collection: "default".into(),
+            inner: Box::new(Request::ApproxTopK {
+                vectors: vec![vec![0.5; 16]],
+                n: 1,
+                probes: 0,
+            }),
+        });
+        assert!(matches!(resp, Response::TopK { .. }), "{resp:?}");
+        assert_eq!(meta.kind, obs::RequestKind::ApproxTopK);
+        assert_eq!(meta.collection.as_deref(), Some("default"));
+        assert_eq!(meta.candidates, Some(0));
+
+        // Unknown-collection errors still classify (no candidates).
+        let (resp, meta) = s.handle_traced(Request::Scoped {
+            collection: "ghost".into(),
+            inner: Box::new(Request::Knn {
+                vector: vec![1.0; 8],
+                n: 1,
+            }),
+        });
+        assert!(matches!(resp, Response::Error { .. }));
+        assert_eq!(meta.kind, obs::RequestKind::Knn);
+        assert_eq!(meta.collection.as_deref(), Some("ghost"));
+    }
+
+    #[test]
+    fn metrics_text_renders_exposition_over_the_protocol() {
+        let s = state(64);
+        s.handle(Request::Register {
+            id: "a".into(),
+            vector: vec![1.0; 16],
+        });
+        match s.handle(Request::MetricsText) {
+            Response::MetricsText { text } => {
+                assert!(text.contains("# TYPE crp_registered_total counter"), "{text}");
+                assert!(text.contains("crp_registered_total 1"));
+                assert!(text.contains("crp_collection_rows{collection=\"default\"} 1"));
+                assert!(text.contains("# TYPE crp_request_duration_us histogram"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_detailed_carries_per_request_rows() {
+        let s = state(64);
+        // The connection loop records these; simulate two requests.
+        s.metrics
+            .requests
+            .hist(obs::RequestKind::Knn)
+            .record(1_000);
+        s.metrics.requests.hist(obs::RequestKind::Knn).record(3_000);
+        match s.handle(Request::StatsDetailed) {
+            Response::Stats(st) => {
+                assert_eq!(st.per_request.len(), 1);
+                assert_eq!(st.per_request[0].kind, "knn");
+                assert_eq!(st.per_request[0].count, 2);
+                assert!(st.per_request[0].p99_us >= 2_048);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The plain Stats answer stays byte-compatible: no rows.
+        match s.handle(Request::Stats) {
+            Response::Stats(st) => assert!(st.per_request.is_empty()),
             other => panic!("unexpected {other:?}"),
         }
     }

@@ -65,8 +65,17 @@
 //!   pre-crash server — the index itself is derived state, rebuilt
 //!   from the restored arena at the first drain (`crp serve
 //!   --data-dir`, `crp collection create|drop|list`, `crp recover`,
-//!   `crp topk --approx --probes`, `crp stats`). Python never runs on
-//!   the request path.
+//!   `crp topk --approx --probes`, `crp stats`). The whole serving
+//!   stack is observable ([`coordinator::obs`]): every request is
+//!   timed end to end into per-kind power-of-two latency histograms,
+//!   the engine keeps per-collection histograms for drain/fold,
+//!   compaction, WAL appends (labeled by fsync policy), snapshot
+//!   writes, and ApproxTopK candidate/probe counts, and all of it is
+//!   exported as Prometheus text (`--metrics-addr`, `crp metrics`,
+//!   the `MetricsText` frame) next to structured key=value logging
+//!   with a slow-query log and sampled request traces
+//!   (`CRP_LOG`/`--log-level`, `--slow-query-us`, `--trace-sample`,
+//!   `crp stats --watch`). Python never runs on the request path.
 //!
 //! ## Analysis stack
 //!

@@ -162,6 +162,20 @@ impl CodeIndex {
         self.buckets.iter().map(|m| m.len()).sum()
     }
 
+    /// Largest single bucket across all bands — the skew diagnostic
+    /// behind the `crp_collection_index_max_bucket` gauge. A bucket far
+    /// above `rows / buckets` means one band value is degenerate (e.g.
+    /// all-zero sketches) and candidate sets will balloon toward a
+    /// full scan.
+    pub fn max_bucket_len(&self) -> usize {
+        self.buckets
+            .iter()
+            .flat_map(|m| m.values())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Index `row` under every band of its packed words (arena layout,
     /// padding bits zero). The caller must not double-insert a row.
     pub fn insert(&mut self, row: u32, words: &[u64]) {
@@ -354,6 +368,24 @@ mod tests {
             );
             prev = cur;
         }
+    }
+
+    #[test]
+    fn max_bucket_len_tracks_skew() {
+        let k = 96;
+        let mut idx = CodeIndex::new(k, 2, cfg(8, 12, 0));
+        assert_eq!(idx.max_bucket_len(), 0);
+        // Identical rows pile into the same bucket in every band.
+        let codes: Vec<u16> = (0..k).map(|i| (i % 4) as u16).collect();
+        let p = pack_codes(&codes, 2);
+        for row in 0..5u32 {
+            idx.insert(row, p.words());
+        }
+        assert_eq!(idx.max_bucket_len(), 5);
+        idx.remove(0, p.words());
+        assert_eq!(idx.max_bucket_len(), 4);
+        idx.clear();
+        assert_eq!(idx.max_bucket_len(), 0);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! * `serve`       — run the sketch service (Layer-3 coordinator)
 //! * `bench-serve` — loadgen against a running service
 //! * `topk`        — arena scan demo: top-k over a synthetic sketch corpus
+//! * `metrics`     — dump a server's Prometheus-style exposition page
 //! * `artifacts`   — list/verify AOT artifacts
 //! * `estimate`    — one-shot similarity estimation demo
 //!
@@ -155,6 +156,10 @@ COMMANDS:
                [--checkpoint-every N] checkpoint each N logged rows
                  (0 = only explicit Persist requests / shutdown)
                [--fsync always|os|group:<ms>]  WAL durability policy
+               [--metrics-addr H:P]   serve GET /metrics (Prometheus text)
+               [--log-level L]        error|warn|info|debug (overrides CRP_LOG)
+               [--slow-query-us N]    log requests slower than N us (0 = off)
+               [--trace-sample N]     debug-trace every Nth request (0 = off)
   collection   create --addr A --name N --scheme S --w W --k K --seed X
                       [--checkpoint-every N]  per-collection checkpoint
                       cadence (0 = the server's global --checkpoint-every)
@@ -162,9 +167,14 @@ COMMANDS:
                list   --addr A
                manage named collections on a running server; each owns
                its own (scheme, w, k, seed) coding choice
-  stats        --addr A   aggregate service counters plus the
-               per-collection breakdown (rows, pending, wal bytes,
-               index buckets)
+  stats        --addr A [--watch]  aggregate service counters, the
+               per-request latency table (count, mean, p50, p99 per
+               request kind), and the per-collection breakdown (rows,
+               pending, wal bytes, index buckets); --watch clears the
+               screen and refreshes every second until interrupted
+  metrics      --addr A   dump the full Prometheus-style exposition
+               page over the protocol (same text --metrics-addr
+               serves over HTTP)
   register     --addr A [--collection C] --id I (--vec \"f,f,...\" | --dim D --vec-seed X)
                register one vector over the wire (namespaced)
   recover      --snapshot F --wal-dir D   replay a snapshot + WAL offline
@@ -234,10 +244,26 @@ DURABILITY:
   trip per op; `group:<ms>` flushes per record and fsyncs at most once
   per interval — bounds power-loss exposure to one interval at near-`os`
   throughput.
+
+OBSERVABILITY:
+  Every request is timed end to end (decode + handle + write) into a
+  per-request-kind power-of-two histogram; `crp stats` reports p50/p99
+  per kind and `GET /metrics` on --metrics-addr (or `crp metrics`)
+  exposes the same data as Prometheus text (version 0.0.4) alongside
+  engine histograms: drain/fold and compaction time, WAL append and
+  snapshot-write time, ApproxTopK candidate and probe counts — all per
+  collection, with zero overhead beyond an atomic add per event.
+  Logs are structured key=value lines on stderr, gated by CRP_LOG or
+  --log-level (error|warn|info|debug, default info). With
+  --slow-query-us N, any request slower than N microseconds emits
+  exactly one `target=crp::slow_query` warn line carrying the request
+  kind, collection, candidate count, scan-kernel tier, and the
+  decode/handle/write stage breakdown; --trace-sample N emits the same
+  fields at debug level for every Nth (non-slow) request.
 ";
 
 fn main() -> crp::Result<()> {
-    let a = args::Args::parse(&["mle", "pjrt", "approx"])?;
+    let a = args::Args::parse(&["mle", "pjrt", "approx", "watch"])?;
     match a.cmd.as_str() {
         "figures" => {
             let scale: f64 = a.get("scale", 0.25)?;
@@ -373,6 +399,10 @@ fn main() -> crp::Result<()> {
                 fsync,
                 checkpoint_every,
                 max_conns,
+                metrics_addr: a.get_opt("metrics-addr").map(str::to_string),
+                log_level: a.get_opt("log-level").map(str::to_string),
+                slow_query_us: a.get("slow-query-us", 0u64)?,
+                trace_sample: a.get("trace-sample", 0u64)?,
                 ..Default::default()
             };
             crp::coordinator::serve(Arc::new(projector), server_cfg, None)?;
@@ -521,36 +551,24 @@ fn main() -> crp::Result<()> {
         "stats" => {
             let addr = a.get_str("addr", "127.0.0.1:7474");
             let mut client = crp::coordinator::SketchClient::connect(&addr)?;
-            let st = client.stats_detailed()?;
-            println!("registered:           {}", st.registered);
-            println!("estimates:            {}", st.estimates);
-            println!("knn_queries:          {}", st.knn_queries);
-            println!("batches_executed:     {}", st.batches_executed);
-            println!("vectors_projected:    {}", st.vectors_projected);
-            println!("mean_batch_size:      {:.2}", st.mean_batch_size);
-            println!("register_us:          p50={} p99={}", st.p50_register_us, st.p99_register_us);
-            println!("pending_rows:         {}", st.pending_rows);
-            println!("drains:               {}", st.drains);
-            println!("tombstones:           {}", st.tombstones);
-            println!("kernel:               {}", st.kernel);
-            println!("wal_records:          {}", st.wal_records);
-            println!("wal_bytes:            {}", st.wal_bytes);
-            println!("last_checkpoint_rows: {}", st.last_checkpoint_rows);
-            println!("maintenance_wakeups:  {}", st.maintenance_wakeups);
-            println!("connections:          {}", st.connections);
-            println!("collections:          {}", st.collections);
-            if !st.per_collection.is_empty() {
-                println!(
-                    "\n{:<24} {:>10} {:>10} {:>14} {:>14}",
-                    "collection", "rows", "pending", "wal_bytes", "index_buckets"
-                );
-                for c in &st.per_collection {
-                    println!(
-                        "{:<24} {:>10} {:>10} {:>14} {:>14}",
-                        c.name, c.rows, c.pending_rows, c.wal_bytes, c.index_buckets
-                    );
+            if a.flag("watch") {
+                loop {
+                    let st = client.stats_detailed()?;
+                    // Clear the screen and home the cursor between
+                    // refreshes so the table repaints in place.
+                    print!("\x1b[2J\x1b[H");
+                    print_stats(&st);
+                    use std::io::Write;
+                    std::io::stdout().flush()?;
+                    std::thread::sleep(std::time::Duration::from_secs(1));
                 }
             }
+            print_stats(&client.stats_detailed()?);
+        }
+        "metrics" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            print!("{}", client.metrics_text()?);
         }
         "topk" => {
             let top: usize = a.get("top", 10)?;
@@ -656,6 +674,53 @@ fn main() -> crp::Result<()> {
         }
     }
     Ok(())
+}
+
+/// One full `crp stats` page: aggregate counters, the per-request-kind
+/// latency table, and the per-collection breakdown. Shared between the
+/// one-shot print and the `--watch` refresh loop.
+fn print_stats(st: &crp::coordinator::protocol::StatsSnapshot) {
+    println!("registered:           {}", st.registered);
+    println!("estimates:            {}", st.estimates);
+    println!("knn_queries:          {}", st.knn_queries);
+    println!("batches_executed:     {}", st.batches_executed);
+    println!("vectors_projected:    {}", st.vectors_projected);
+    println!("mean_batch_size:      {:.2}", st.mean_batch_size);
+    println!("register_us:          p50={} p99={}", st.p50_register_us, st.p99_register_us);
+    println!("pending_rows:         {}", st.pending_rows);
+    println!("drains:               {}", st.drains);
+    println!("tombstones:           {}", st.tombstones);
+    println!("kernel:               {}", st.kernel);
+    println!("wal_records:          {}", st.wal_records);
+    println!("wal_bytes:            {}", st.wal_bytes);
+    println!("last_checkpoint_rows: {}", st.last_checkpoint_rows);
+    println!("maintenance_wakeups:  {}", st.maintenance_wakeups);
+    println!("connections:          {}", st.connections);
+    println!("collections:          {}", st.collections);
+    if !st.per_request.is_empty() {
+        println!(
+            "\n{:<16} {:>10} {:>12} {:>10} {:>10}",
+            "request", "count", "mean_us", "p50_us", "p99_us"
+        );
+        for r in &st.per_request {
+            println!(
+                "{:<16} {:>10} {:>12.1} {:>10} {:>10}",
+                r.kind, r.count, r.mean_us, r.p50_us, r.p99_us
+            );
+        }
+    }
+    if !st.per_collection.is_empty() {
+        println!(
+            "\n{:<24} {:>10} {:>10} {:>14} {:>14}",
+            "collection", "rows", "pending", "wal_bytes", "index_buckets"
+        );
+        for c in &st.per_collection {
+            println!(
+                "{:<24} {:>10} {:>10} {:>14} {:>14}",
+                c.name, c.rows, c.pending_rows, c.wal_bytes, c.index_buckets
+            );
+        }
+    }
 }
 
 /// Scan-engine demo: build a columnar arena of `sketches` synthetic

@@ -54,6 +54,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
+use std::time::Instant;
 
 use super::arena::{CodeArena, RowsSnapshot};
 use super::scanner::{self, ScanHit};
@@ -90,6 +91,61 @@ impl Default for EpochConfig {
 /// [`EpochArena::relieve`] stops deferring to scans and folds with a
 /// blocking write-lock acquisition — the hard bound on pending growth.
 pub const RELIEF_FACTOR: usize = 8;
+
+/// Engine-side histogram: 32 power-of-two buckets (`[2^i, 2^(i+1))`,
+/// the final bucket unbounded) plus count and sum, all relaxed
+/// atomics. Same shape as the coordinator's `LatencyHistogram`,
+/// duplicated here because the scan layer must not depend on
+/// `crate::coordinator` — the exposition layer reads raw bucket
+/// counts from either through the same rendering helper.
+#[derive(Debug, Default)]
+pub struct EngineHist {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl EngineHist {
+    /// Record one sample (0 clamps into the first bucket).
+    pub fn record(&self, value: u64) {
+        let b = (64 - value.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Raw per-bucket counts (bucket `i` covers `[2^i, 2^(i+1))`; the
+    /// last is unbounded).
+    pub fn bucket_counts(&self) -> [u64; 32] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// Engine-side observability for one arena: drain/fold and compaction
+/// durations (µs) plus `ApproxTopK` candidate-set sizes and probe
+/// counts. Recording is a few relaxed atomic adds on paths that
+/// already hold the relevant lock — it adds no lock traffic.
+#[derive(Debug, Default)]
+pub struct ArenaObs {
+    /// Whole-fold duration per [`EpochArena::drain`] (µs); empty folds
+    /// are not recorded.
+    pub fold_us: EngineHist,
+    /// Compaction (+ index rebuild) duration when the tombstone policy
+    /// fires (µs).
+    pub compact_us: EngineHist,
+    /// Candidate rows the banded index returned per approx query.
+    pub approx_candidates: EngineHist,
+    /// Probes used per approx query (post defaulting/clamping).
+    pub approx_probes: EngineHist,
+}
 
 /// One epoch's write set.
 #[derive(Debug)]
@@ -154,6 +210,9 @@ pub struct EpochArena {
     /// Single-row [`EpochArena::put`] calls — each is one pending-buffer
     /// round trip. Bulk paths (restore, `put_rows`) must keep this flat.
     single_puts: AtomicU64,
+    /// Engine-side histograms (fold/compaction durations, approx
+    /// candidate/probe distributions).
+    obs: ArenaObs,
 }
 
 impl EpochArena {
@@ -196,7 +255,13 @@ impl EpochArena {
             epoch: AtomicU64::new(0),
             drains: AtomicU64::new(0),
             single_puts: AtomicU64::new(0),
+            obs: ArenaObs::default(),
         }
+    }
+
+    /// Engine-side observability histograms for this arena.
+    pub fn obs(&self) -> &ArenaObs {
+        &self.obs
     }
 
     /// Whether a banded candidate index is maintained.
@@ -215,6 +280,17 @@ impl EpochArena {
         self.index
             .as_ref()
             .map(|l| l.read().unwrap().buckets())
+            .unwrap_or(0)
+    }
+
+    /// Largest single index bucket across all bands (0 without an
+    /// index) — the bucket-skew diagnostic gauge: a bucket far above
+    /// `rows / buckets` means one band value is degenerate and approx
+    /// candidate sets will balloon.
+    pub fn index_max_bucket(&self) -> usize {
+        self.index
+            .as_ref()
+            .map(|l| l.read().unwrap().max_bucket_len())
             .unwrap_or(0)
     }
 
@@ -442,8 +518,11 @@ impl EpochArena {
     fn fold_into(&self, sealed: &mut CodeArena) -> usize {
         let mut p = self.pending.lock().unwrap();
         if p.inserts.rows_allocated() == 0 && p.masked.is_empty() {
+            // Empty folds are free and constant; recording them would
+            // only drown the histogram in maintenance-tick noise.
             return 0;
         }
+        let t0 = Instant::now();
         let folded = p.inserts.len();
         // The caller holds the sealed write lock, so the index can be
         // updated in lock-step with the arena (innermost lock).
@@ -488,15 +567,18 @@ impl EpochArena {
         if tomb >= self.cfg.compact_min
             && tomb as f64 >= self.cfg.compact_ratio * sealed.rows_allocated() as f64
         {
+            let c0 = Instant::now();
             sealed.compact();
             // Compaction remaps every surviving row downward; the
             // bucket row ids are wholesale stale. Rebuild.
             if let Some(idx) = index.as_deref_mut() {
                 idx.rebuild(sealed);
             }
+            self.obs.compact_us.record(c0.elapsed().as_micros() as u64);
         }
         self.epoch.fetch_add(1, Ordering::Relaxed);
         self.drains.fetch_add(1, Ordering::Relaxed);
+        self.obs.fold_us.record(t0.elapsed().as_micros() as u64);
         folded
     }
 
@@ -582,6 +664,19 @@ impl EpochArena {
         n: usize,
         probes: usize,
     ) -> Vec<Vec<ScanHit>> {
+        self.scan_topk_approx_batch_counted(queries, n, probes).0
+    }
+
+    /// As [`EpochArena::scan_topk_approx_batch`], also reporting the
+    /// total candidate rows the index returned across the batch (0 when
+    /// the exact fallback served it) — the slow-query log attributes a
+    /// slow approx request to its candidate volume through this.
+    pub fn scan_topk_approx_batch_counted(
+        &self,
+        queries: &[PackedCodes],
+        n: usize,
+        probes: usize,
+    ) -> (Vec<Vec<ScanHit>>, u64) {
         for q in queries {
             assert_eq!(q.len, self.k, "query length mismatch");
             assert_eq!(q.bits, self.bits, "query bit width mismatch");
@@ -595,13 +690,17 @@ impl EpochArena {
         };
         let (pend, masked) = self.snapshot_pending();
         let base = sealed.rows_allocated() as u32;
-        queries
+        let mut total_candidates = 0u64;
+        let results = queries
             .iter()
             .map(|q| {
                 let mut top = self.sweep_pending(&pend, base, q, n);
                 match index.as_deref() {
                     Some(idx) => {
                         let cands = idx.candidates(q.words(), probes);
+                        self.obs.approx_candidates.record(cands.len() as u64);
+                        self.obs.approx_probes.record(probes as u64);
+                        total_candidates += cands.len() as u64;
                         top.merge(scanner::scan_candidates(
                             &sealed,
                             self.kernel,
@@ -622,7 +721,8 @@ impl EpochArena {
                 }
                 top.into_sorted().into_iter().map(ScanHit::from).collect()
             })
-            .collect()
+            .collect();
+        (results, total_candidates)
     }
 
     /// The pending rows as a shared snapshot, copied out under one short
@@ -778,6 +878,8 @@ mod tests {
             assert_eq!(sealed.rows_allocated(), 2);
         });
         assert_eq!(e.len(), 2);
+        assert_eq!(e.obs().compact_us.count(), 1, "compaction was timed");
+        assert_eq!(e.obs().fold_us.count(), 2, "both non-empty folds timed");
     }
 
     #[test]
@@ -837,6 +939,57 @@ mod tests {
         let e = EpochArena::new(64, 2);
         assert_eq!(e.drain(), 0);
         assert_eq!(e.epoch(), 0);
+        assert_eq!(e.obs().fold_us.count(), 0, "empty folds are not recorded");
+    }
+
+    #[test]
+    fn engine_hist_buckets_count_and_sum() {
+        let h = EngineHist::default();
+        h.record(0); // clamps into the first bucket
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(1u64 << 40); // clamps into the unbounded final bucket
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 2, "0 and 1 land in [1, 2)");
+        assert_eq!(b[1], 2, "2 and 3 land in [2, 4)");
+        assert_eq!(b[31], 1, "2^40 clamps into the final bucket");
+        assert_eq!(b.iter().sum::<u64>(), h.count());
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 6 + (1u64 << 40));
+        // The unbounded final bucket absorbs everything ≥ 2^31.
+        h.record(u64::MAX);
+        assert_eq!(h.bucket_counts()[31], 2);
+    }
+
+    #[test]
+    fn arena_obs_records_folds_and_approx_queries() {
+        let e =
+            EpochArena::with_index_config(64, 2, small_cfg(), IndexConfig::for_shape(64, 2));
+        for i in 0..(APPROX_MIN_ROWS as u64 + 16) {
+            let _ = e.put(&format!("r{i:05}"), &sketch(64, i));
+        }
+        e.drain();
+        assert_eq!(e.obs().fold_us.count(), 1);
+        let q = sketch(64, 3);
+        let (hits, cands) = e.scan_topk_approx_batch_counted(std::slice::from_ref(&q), 2, 1);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0][0].id, "r00003");
+        assert!(cands >= 1, "an exact duplicate is always a candidate");
+        assert_eq!(e.obs().approx_candidates.count(), 1);
+        assert_eq!(e.obs().approx_probes.count(), 1);
+        assert!(e.index_max_bucket() >= 1);
+
+        // Below the fallback floor the exact sweep serves the query:
+        // no candidate set exists and nothing is recorded.
+        let small =
+            EpochArena::with_index_config(64, 2, small_cfg(), IndexConfig::for_shape(64, 2));
+        let _ = small.put("a", &q);
+        small.drain();
+        let (hits, cands) = small.scan_topk_approx_batch_counted(std::slice::from_ref(&q), 1, 0);
+        assert_eq!(hits[0][0].id, "a");
+        assert_eq!(cands, 0);
+        assert_eq!(small.obs().approx_candidates.count(), 0);
     }
 
     #[test]

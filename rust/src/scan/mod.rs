@@ -45,7 +45,7 @@ pub mod simd;
 pub mod topk;
 
 pub use arena::{ArenaImage, CodeArena};
-pub use epoch::{EpochArena, EpochConfig};
+pub use epoch::{ArenaObs, EngineHist, EpochArena, EpochConfig};
 pub use scanner::{scan_topk, scan_topk_batch, ScanHit};
 pub use simd::{CollisionKernel, KernelKind};
 pub use topk::TopK;

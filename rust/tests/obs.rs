@@ -1,0 +1,222 @@
+//! Observability tests: StatsDetailed per-collection aggregation staying
+//! consistent under concurrent multi-collection ingest, the Prometheus
+//! exposition page tracking the collection lifecycle over TCP, and the
+//! slow-query counter firing end to end.
+//!
+//! Run standalone with `cargo test --release -q obs` (CI does).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crp::coding::Scheme;
+use crp::coordinator::server::{serve, ServerConfig};
+use crp::coordinator::SketchClient;
+use crp::mathx::Pcg64;
+use crp::projection::{ProjectionConfig, Projector};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("crp_obs_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn spawn_server(cfg: ServerConfig, k: usize) -> String {
+    let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+        k,
+        seed: 7,
+        ..Default::default()
+    }));
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    rx.recv()
+        .expect("server thread exited before reporting its bound address")
+        .to_string()
+}
+
+fn vec_of(g: &mut Pcg64, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| g.next_f64() as f32 - 0.5).collect()
+}
+
+/// The value of an unlabeled (or exactly-labeled) series on the
+/// exposition page, e.g. `metric_value(&text, "crp_slow_queries_total")`.
+fn metric_value(text: &str, series: &str) -> Option<u64> {
+    text.lines().find_map(|l| {
+        l.strip_prefix(series)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .map(|v| v as u64)
+    })
+}
+
+/// Satellite pin: per-collection rows in `StatsDetailed` aggregate
+/// exactly — after concurrent ingest across two durable collections
+/// quiesces, the per-collection rows/pending/wal_bytes sum to the
+/// aggregates, and the per-request table carries an exact register
+/// count. Mid-ingest snapshots must stay well-formed (both collections
+/// present, sorted, counters monotone) even while writers race drains.
+#[test]
+fn stats_detailed_aggregation_under_concurrent_ingest() {
+    let dir = temp_dir("agg");
+    let addr = spawn_server(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            data_dir: Some(dir.clone()),
+            epoch: crp::scan::EpochConfig {
+                drain_threshold: 32,
+                ..Default::default()
+            },
+            checkpoint_every: 0,
+            ..Default::default()
+        },
+        64,
+    );
+    let mut admin = SketchClient::connect(&addr).unwrap();
+    admin.create_collection("web", Scheme::OneBit, 0.0, 64, 3, 0).unwrap();
+
+    const THREADS: usize = 3;
+    const PER_THREAD: usize = 120;
+    let mut workers = Vec::new();
+    for t in 0..THREADS {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut c = SketchClient::connect(&addr).unwrap();
+            let mut g = Pcg64::new(t as u64, 1);
+            for i in 0..PER_THREAD {
+                c.register_in(None, &format!("d{t}-{i}"), vec_of(&mut g, 16)).unwrap();
+                c.register_in(Some("web"), &format!("w{t}-{i}"), vec_of(&mut g, 16)).unwrap();
+            }
+        }));
+    }
+
+    // Mid-ingest snapshots race writers and maintenance drains; they
+    // must decode and stay internally plausible, never exact.
+    let mut last_registered = 0u64;
+    for _ in 0..10 {
+        let st = admin.stats_detailed().unwrap();
+        assert_eq!(st.per_collection.len(), 2);
+        assert_eq!(st.per_collection[0].name, "default");
+        assert_eq!(st.per_collection[1].name, "web");
+        assert!(st.registered >= last_registered, "registered went backwards");
+        last_registered = st.registered;
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // Quiesce: no writers are left, so the only movement is the
+    // maintenance thread folding the backlog down below the threshold.
+    let total = (2 * THREADS * PER_THREAD) as u64;
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let st = loop {
+        let a = admin.stats_detailed().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let b = admin.stats_detailed().unwrap();
+        if a.pending_rows == b.pending_rows && a.drains == b.drains {
+            break b;
+        }
+        assert!(std::time::Instant::now() < deadline, "drains never quiesced");
+    };
+    assert_eq!(st.registered, total);
+    assert_eq!(st.collections, 2);
+    let (mut rows, mut pending, mut wal) = (0, 0, 0);
+    for c in &st.per_collection {
+        assert_eq!(c.rows, (THREADS * PER_THREAD) as u64, "{}", c.name);
+        assert!(c.index_buckets > 0, "{} never folded into its index", c.name);
+        assert!(c.wal_bytes > 0, "{} is durable; ingest must hit its WAL", c.name);
+        rows += c.rows;
+        pending += c.pending_rows;
+        wal += c.wal_bytes;
+    }
+    assert_eq!(rows, total, "per-collection rows must sum to the aggregate");
+    assert_eq!(pending, st.pending_rows);
+    assert_eq!(wal, st.wal_bytes);
+
+    // Full-path latency reached the per-request table: the register row
+    // counts every wire register exactly, and its percentiles are sane.
+    let reg = st
+        .per_request
+        .iter()
+        .find(|r| r.kind == "register")
+        .expect("register row missing from per_request");
+    assert_eq!(reg.count, total);
+    assert!(reg.p50_us >= 1 && reg.p99_us >= reg.p50_us);
+    // The stats polls themselves are admin-kind requests.
+    assert!(st.per_request.iter().any(|r| r.kind == "admin"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The exposition page follows the collection lifecycle: series appear
+/// on create+ingest, vanish on drop, and come back when the name is
+/// reused — all over the `MetricsText` protocol request.
+#[test]
+fn metrics_text_tracks_collection_lifecycle() {
+    let addr = spawn_server(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        64,
+    );
+    let mut c = SketchClient::connect(&addr).unwrap();
+    c.create_collection("tmp", Scheme::TwoBit, 0.75, 64, 9, 0).unwrap();
+    let mut g = Pcg64::new(17, 4);
+    for i in 0..8 {
+        c.register_in(Some("tmp"), &format!("t{i}"), vec_of(&mut g, 16)).unwrap();
+    }
+
+    let text = c.metrics_text().unwrap();
+    assert!(text.contains("# TYPE crp_collection_rows gauge"), "{text}");
+    assert!(text.contains("crp_collection_rows{collection=\"default\"} 0"), "{text}");
+    assert!(text.contains("crp_collection_rows{collection=\"tmp\"} 8"), "{text}");
+    assert!(text.contains("crp_requests_total{kind=\"register\"} 8"), "{text}");
+    assert!(
+        text.contains("crp_request_duration_us_count{kind=\"register\"} 8"),
+        "{text}"
+    );
+
+    assert!(c.drop_collection("tmp").unwrap());
+    let text = c.metrics_text().unwrap();
+    assert!(
+        !text.contains("collection=\"tmp\""),
+        "dropped collection must leave the page: {text}"
+    );
+    assert!(text.contains("crp_collections 1"), "{text}");
+
+    // Reusing the name starts fresh series.
+    c.create_collection("tmp", Scheme::OneBit, 0.0, 32, 2, 0).unwrap();
+    c.register_in(Some("tmp"), "back", vec_of(&mut g, 16)).unwrap();
+    let text = c.metrics_text().unwrap();
+    assert!(text.contains("crp_collection_rows{collection=\"tmp\"} 1"), "{text}");
+}
+
+/// `--slow-query-us 1` classifies every request as slow; the counter on
+/// the exposition page must count each one, end to end over TCP.
+#[test]
+fn slow_query_threshold_counts_every_request() {
+    let addr = spawn_server(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            slow_query_us: 1,
+            // Keep the warn-per-request flood out of the test log. The
+            // level is process-global, so this also quiets concurrent
+            // tests' servers — fine, since no test asserts on stderr.
+            log_level: Some("error".into()),
+            ..Default::default()
+        },
+        64,
+    );
+    let mut c = SketchClient::connect(&addr).unwrap();
+    let mut g = Pcg64::new(23, 6);
+    for i in 0..5 {
+        c.register_in(None, &format!("s{i}"), vec_of(&mut g, 16)).unwrap();
+    }
+    c.knn_in(None, vec_of(&mut g, 16), 3).unwrap();
+    let text = c.metrics_text().unwrap();
+    let slow = metric_value(&text, "crp_slow_queries_total").expect("counter missing");
+    assert!(slow >= 6, "6 requests went through, counted {slow}: {text}");
+}
