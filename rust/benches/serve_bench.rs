@@ -87,6 +87,77 @@ fn main() {
         "serve/mean-batch-size", stats.mean_batch_size
     );
 
+    // Replicated reads: a durable primary, an in-memory replica tailing
+    // its WAL over the wire. Measures read RTT through a caught-up
+    // replica against the same query on the primary — the cost (it
+    // should be none) of moving read traffic off the primary.
+    {
+        let dir = std::env::temp_dir().join(format!("crp_bench_repl_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let spawn = |cfg: ServerConfig| -> String {
+            let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+                k: 256,
+                seed: 1,
+                ..Default::default()
+            }));
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::thread::spawn(move || {
+                let _ = serve(projector, cfg, Some(tx));
+            });
+            rx.recv().expect("server died before binding").to_string()
+        };
+        let p_addr = spawn(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            durability: Some(crp::coordinator::DurabilityConfig {
+                snapshot: dir.join("snapshot.bin"),
+                wal_dir: dir.join("wal"),
+                checkpoint_every: 0,
+                fsync: crp::coordinator::FsyncPolicy::Os,
+            }),
+            ..Default::default()
+        });
+        let mut p = SketchClient::connect(&p_addr).unwrap();
+        let rows = 2000usize;
+        let ids: Vec<String> = (0..rows).map(|i| format!("r{i:05}")).collect();
+        let vectors: Vec<Vec<f32>> = (0..rows)
+            .map(|_| (0..dim).map(|_| g.next_f64() as f32 - 0.5).collect())
+            .collect();
+        p.register_batch_in(None, ids, vectors).unwrap();
+
+        let r_addr = spawn(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            replicate_from: Some(p_addr.clone()),
+            repl_poll: std::time::Duration::from_millis(10),
+            repl_backoff_min: std::time::Duration::from_millis(10),
+            repl_backoff_max: std::time::Duration::from_millis(200),
+            ..Default::default()
+        });
+        let mut r = SketchClient::connect(&r_addr).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            let st = r.stats_detailed().unwrap();
+            let caught = st.per_collection.iter().any(|c| c.rows == rows as u64)
+                && st.replication.as_ref().is_some_and(|x| x.lag_bytes == 0);
+            if caught {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "replica never caught up"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+
+        b.run("serve/primary-knn-10-rtt/2k-rows", 1, || {
+            std::hint::black_box(p.knn(v.clone(), 10).unwrap());
+        });
+        b.run("serve/replica-knn-10-rtt/2k-rows", 1, || {
+            std::hint::black_box(r.knn(v.clone(), 10).unwrap());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // Ablation: batching policy (max_batch × idle_flush) vs throughput
     // under 8 closed-loop clients — the design-choice sweep behind the
     // coordinator defaults (DESIGN.md §7 / EXPERIMENTS.md §Perf).
@@ -155,5 +226,8 @@ batching-policy ablation (8 closed-loop clients, dim 256):");
         );
     }
 
-    b.finish();
+    b.finish_json(std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_scan.json"
+    )));
 }

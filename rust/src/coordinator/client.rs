@@ -4,7 +4,10 @@
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 
-use super::protocol::{self, CollectionInfo, KnnHit, Request, Response, StatsSnapshot};
+use super::protocol::{
+    self, CollectionInfo, KnnHit, Request, Response, SlowQueryEntry, StatsSnapshot,
+};
+use super::replication::Backoff;
 use crate::coding::Scheme;
 
 /// Wrap `req` in a [`Request::Scoped`] frame when a collection is
@@ -18,6 +21,26 @@ fn scoped(collection: Option<&str>, req: Request) -> Request {
         },
         None => req,
     }
+}
+
+/// One `ReplSync` answer, as seen by a replica: either the next run of
+/// WAL frames to apply or a snapshot image to rebuild from.
+#[derive(Debug)]
+pub enum ReplPull {
+    Records {
+        segment: u64,
+        next_segment: u64,
+        next_offset: u64,
+        behind_bytes: u64,
+        primary_records: u64,
+        bytes: Vec<u8>,
+    },
+    Bootstrap {
+        segment: u64,
+        offset: u64,
+        primary_records: u64,
+        snapshot: Vec<u8>,
+    },
 }
 
 /// A connected client. One in-flight request at a time per connection
@@ -35,6 +58,29 @@ impl SketchClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
         })
+    }
+
+    /// [`SketchClient::connect`] with bounded retry: up to `attempts`
+    /// connection attempts separated by jittered exponential backoff
+    /// (100ms doubling to 2s). Opt-in — rides out a server restart or
+    /// a listen backlog reset without turning a genuinely absent
+    /// server into a hang.
+    pub fn connect_with_retry(addr: &str, attempts: u32) -> crate::Result<Self> {
+        let mut backoff = Backoff::new(
+            std::time::Duration::from_millis(100),
+            std::time::Duration::from_secs(2),
+        );
+        let mut last = None;
+        for attempt in 0..attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(backoff.next_delay());
+            }
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow::anyhow!("no connection attempts made")))
     }
 
     fn call(&mut self, req: &Request) -> crate::Result<Response> {
@@ -323,6 +369,72 @@ impl SketchClient {
             other => Err(Self::bail(other)),
         }
     }
+
+    /// One replication pull: ask the primary for WAL records of
+    /// `collection` past `(segment, offset)` — `segment` 0 requests a
+    /// snapshot bootstrap instead. `replica` is this replica's stable
+    /// id (keys the primary's segment-retention floor).
+    pub fn repl_sync(
+        &mut self,
+        collection: &str,
+        replica: &str,
+        segment: u64,
+        offset: u64,
+    ) -> crate::Result<ReplPull> {
+        let req = Request::ReplSync {
+            collection: collection.to_string(),
+            replica: replica.to_string(),
+            segment,
+            offset,
+        };
+        match self.call(&req)? {
+            Response::ReplRecords {
+                segment,
+                next_segment,
+                next_offset,
+                behind_bytes,
+                primary_records,
+                bytes,
+            } => Ok(ReplPull::Records {
+                segment,
+                next_segment,
+                next_offset,
+                behind_bytes,
+                primary_records,
+                bytes,
+            }),
+            Response::ReplBootstrap {
+                segment,
+                offset,
+                primary_records,
+                snapshot,
+            } => Ok(ReplPull::Bootstrap {
+                segment,
+                offset,
+                primary_records,
+                snapshot,
+            }),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// The server's slow-query ring, oldest first (`max` 0 = the whole
+    /// ring).
+    pub fn slow_queries(&mut self, max: u32) -> crate::Result<Vec<SlowQueryEntry>> {
+        match self.call(&Request::SlowQueries { max })? {
+            Response::SlowQueries { entries } => Ok(entries),
+            other => Err(Self::bail(other)),
+        }
+    }
+
+    /// Promote a replica into a standalone primary (idempotent; a
+    /// server that never replicated reports `was_replica` false).
+    pub fn promote(&mut self) -> crate::Result<bool> {
+        match self.call(&Request::Promote)? {
+            Response::Promoted { was_replica } => Ok(was_replica),
+            other => Err(Self::bail(other)),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -434,6 +546,31 @@ mod tests {
         assert!(c.estimate("a", "b").is_err());
         // Connecting to a port nothing listens on errors cleanly too.
         assert!(SketchClient::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn connect_with_retry_rides_out_a_late_listener() {
+        // Nothing listening and a bounded attempt budget: fails in
+        // bounded time instead of hanging.
+        let t0 = std::time::Instant::now();
+        assert!(SketchClient::connect_with_retry("127.0.0.1:1", 2).is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+
+        // A listener that appears after the first refused attempt is
+        // reached by a later one.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe); // port free now; reclaimed by the thread below
+        let addr2 = addr.clone();
+        let listener = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            let l = std::net::TcpListener::bind(&addr2).unwrap();
+            let _ = l.accept();
+        });
+        // Generous budget: the backoff schedule crosses 150ms well
+        // within 8 attempts.
+        assert!(SketchClient::connect_with_retry(&addr, 8).is_ok());
+        listener.join().unwrap();
     }
 
     #[test]

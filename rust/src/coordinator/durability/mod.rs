@@ -31,10 +31,11 @@
 pub mod snapshot;
 pub mod wal;
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coding::{supported_width, PackedCodes};
 use crate::coordinator::metrics::LatencyHistogram;
@@ -62,6 +63,16 @@ pub(crate) fn crc32_update(state: u32, bytes: &[u8]) -> u32 {
 }
 
 pub use wal::FsyncPolicy;
+
+/// How long a replica's last `ReplSync` keeps its retention floor
+/// alive. A replica silent for longer stops pinning WAL segments and
+/// will re-bootstrap from a snapshot when it returns.
+const REPL_TTL: Duration = Duration::from_secs(30);
+
+/// Default cap on WAL bytes a lagging replica may pin past a
+/// checkpoint before retention gives up on it (forced re-bootstrap
+/// instead of unbounded disk growth).
+pub const DEFAULT_REPL_LAG_CAP: u64 = 256 * 1024 * 1024;
 
 /// Where durable state lives and how often it is checkpointed.
 #[derive(Clone, Debug)]
@@ -164,6 +175,13 @@ pub struct Durability {
     snapshot_write_us: LatencyHistogram,
     /// On-disk size of the most recent snapshot file (0 before one).
     snapshot_bytes: AtomicU64,
+    /// Retention floors of attached replicas: replica id → (oldest WAL
+    /// segment it still needs, last time it synced). Entries older
+    /// than [`REPL_TTL`] stop gating retirement.
+    repl_floors: Mutex<HashMap<String, (u64, Instant)>>,
+    /// WAL bytes a replica may pin past a checkpoint before retention
+    /// stops waiting for it (see [`DEFAULT_REPL_LAG_CAP`]).
+    repl_lag_cap: AtomicU64,
 }
 
 impl Durability {
@@ -203,6 +221,8 @@ impl Durability {
                 wal_append_us: LatencyHistogram::default(),
                 snapshot_write_us: LatencyHistogram::default(),
                 snapshot_bytes: AtomicU64::new(0),
+                repl_floors: Mutex::new(HashMap::new()),
+                repl_lag_cap: AtomicU64::new(DEFAULT_REPL_LAG_CAP),
             },
             stats,
         ))
@@ -280,7 +300,7 @@ impl Durability {
                 // ones (no record was ever acknowledged into them),
                 // which would otherwise pile up one per retry while
                 // the snapshot path stays unwritable.
-                for p in &retired {
+                for (_, p) in &retired {
                     let empty = std::fs::metadata(p)
                         .map(|m| m.len() <= wal::SEGMENT_HEADER)
                         .unwrap_or(false);
@@ -293,9 +313,32 @@ impl Durability {
         };
         self.snapshot_write_us.record(s0.elapsed().as_micros() as u64);
         self.snapshot_bytes.store(snap_bytes, Ordering::Relaxed);
+        // Retention gating: segments at or above the oldest fresh
+        // replica floor stay on disk so the stream never loses records
+        // a replica still needs — but only while their total stays
+        // under the lag cap. Past the cap the replica is too far
+        // behind to chase the log; everything retires and it will
+        // re-bootstrap from the snapshot just written (all-or-nothing:
+        // keeping a partial suffix would leave a hole in the stream).
+        let floor = self.repl_floor();
+        let sized: Vec<(u64, &PathBuf, u64)> = retired
+            .iter()
+            .map(|(s, p)| (*s, p, std::fs::metadata(p).map(|m| m.len()).unwrap_or(0)))
+            .collect();
+        let keep_all = match floor {
+            None => false,
+            Some(floor) => {
+                let pinned: u64 =
+                    sized.iter().filter(|(s, _, _)| *s >= floor).map(|(_, _, n)| n).sum();
+                pinned <= self.repl_lag_cap.load(Ordering::Relaxed)
+            }
+        };
         let mut retired_bytes = 0u64;
-        for p in &retired {
-            retired_bytes += std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        for (s, p, len) in &sized {
+            if keep_all && floor.is_some_and(|f| *s >= f) {
+                continue;
+            }
+            retired_bytes += len;
             let _ = std::fs::remove_file(p);
         }
         self.since_checkpoint.store(0, Ordering::Relaxed);
@@ -350,6 +393,68 @@ impl Durability {
     /// `crp_wal_append_us` exposition series).
     pub fn fsync_policy(&self) -> FsyncPolicy {
         self.cfg.fsync
+    }
+
+    // ---- replication feed (primary side) ----------------------------
+
+    /// Record that `replica` has applied everything before `segment`
+    /// (its retention floor) and is alive right now.
+    pub fn repl_note(&self, replica: &str, segment: u64) {
+        let mut g = self.repl_floors.lock().unwrap();
+        g.insert(replica.to_string(), (segment, Instant::now()));
+    }
+
+    /// Oldest segment any *fresh* replica still needs (stale entries
+    /// are dropped here, so an abandoned replica stops pinning disk
+    /// after [`REPL_TTL`]).
+    fn repl_floor(&self) -> Option<u64> {
+        let mut g = self.repl_floors.lock().unwrap();
+        g.retain(|_, (_, seen)| seen.elapsed() < REPL_TTL);
+        g.values().map(|(seg, _)| *seg).min()
+    }
+
+    /// Override the replica lag cap (bytes of retired WAL a checkpoint
+    /// may keep for a lagging replica).
+    pub fn set_repl_lag_cap(&self, bytes: u64) {
+        self.repl_lag_cap.store(bytes, Ordering::Relaxed);
+    }
+
+    /// The configured replica lag cap in bytes.
+    pub fn repl_lag_cap(&self) -> u64 {
+        self.repl_lag_cap.load(Ordering::Relaxed)
+    }
+
+    /// WAL bytes on disk past a replica position — the backlog the
+    /// stream still has to ship (approximate while appends race it).
+    pub fn repl_backlog(&self, segment: u64, offset: u64) -> u64 {
+        let _ = self.wal.flush();
+        let mut behind = 0u64;
+        for (s, p) in wal::segments(&self.cfg.wal_dir).unwrap_or_default() {
+            let len = std::fs::metadata(&p).map(|m| m.len()).unwrap_or(0);
+            if s == segment {
+                behind += len.saturating_sub(offset);
+            } else if s > segment {
+                behind += len.saturating_sub(wal::SEGMENT_HEADER);
+            }
+        }
+        behind
+    }
+
+    /// Read the next replication chunk from segment `seq` at `offset`
+    /// (see [`wal::Wal::read_chunk`]); `None` forces a re-bootstrap.
+    pub fn read_chunk(&self, seq: u64, offset: u64) -> crate::Result<Option<wal::WalChunk>> {
+        self.wal.read_chunk(seq, offset, wal::MAX_CHUNK)
+    }
+
+    /// Segment currently accepting appends (a bootstrap resumes the
+    /// stream here).
+    pub fn active_seq(&self) -> u64 {
+        self.wal.active_seq()
+    }
+
+    /// The snapshot file checkpoints rewrite (the bootstrap image).
+    pub fn snapshot_path(&self) -> &Path {
+        &self.cfg.snapshot
     }
 }
 
@@ -479,6 +584,61 @@ mod tests {
         assert_eq!(st.live, 4);
         assert!(store3.get("post").is_some());
         assert!(store3.get("id3").is_none(), "the torn put was never acked");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replica_floor_gates_retirement_until_the_lag_cap() {
+        let dir = temp_dir("repl_gate");
+        let k = 32usize;
+        let store = SketchStore::with_arena(k, 2);
+        let (d, _) = Durability::open(cfg(&dir, 0), &store).unwrap();
+        let mut g = Pcg64::new(5, 5);
+        for i in 0..8 {
+            let codes = sketch(&mut g, k);
+            let id = format!("id{i}");
+            d.log_put(&id, &codes, || store.put(id.clone(), codes.clone()))
+                .unwrap();
+        }
+        let wal_dir = dir.join("wal");
+
+        // A fresh replica still at segment 1 pins the retired segment
+        // through a checkpoint...
+        d.repl_note("r1", 1);
+        let (_, retired) = d.checkpoint(&store).unwrap();
+        assert_eq!(retired, 0, "pinned segment must not be deleted");
+        let segs = wal::segments(&wal_dir).unwrap();
+        assert!(segs.iter().any(|(s, _)| *s == 1), "segment 1 kept for r1");
+
+        // ...until its floor advances past it: the next checkpoint
+        // retires everything below the new floor.
+        d.repl_note("r1", d.active_seq());
+        let (_, retired) = d.checkpoint(&store).unwrap();
+        assert!(retired > 0, "unpinned segments retire");
+        assert!(!wal::segments(&wal_dir).unwrap().iter().any(|(s, _)| *s == 1));
+
+        // A replica pinned below a tiny lag cap loses its hold: the
+        // backlog would exceed the cap, so everything retires and the
+        // replica must re-bootstrap.
+        for i in 8..16 {
+            let codes = sketch(&mut g, k);
+            let id = format!("id{i}");
+            d.log_put(&id, &codes, || store.put(id.clone(), codes.clone()))
+                .unwrap();
+        }
+        d.repl_note("r1", 1);
+        d.set_repl_lag_cap(1);
+        assert_eq!(d.repl_lag_cap(), 1);
+        let (_, retired) = d.checkpoint(&store).unwrap();
+        assert!(retired > 0, "over-cap backlog retires wholesale");
+        assert_eq!(wal::segments(&wal_dir).unwrap().len(), 1, "only the active segment");
+
+        // Backlog accounting sees bytes past a position.
+        let codes = sketch(&mut g, k);
+        d.log_put("tail", &codes, || store.put("tail".into(), codes.clone()))
+            .unwrap();
+        assert!(d.repl_backlog(d.active_seq(), wal::SEGMENT_HEADER) > 0);
+        assert_eq!(d.repl_backlog(d.active_seq() + 1, 0), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -135,6 +135,22 @@ pub fn load(path: &Path) -> crate::Result<ArenaImage> {
     }
 }
 
+/// Load a snapshot image shipped as an in-memory byte blob — the
+/// replication bootstrap path, where the primary sends its snapshot
+/// file verbatim over the wire. Same validation as [`load`].
+pub fn load_bytes(bytes: &[u8]) -> crate::Result<ArenaImage> {
+    let mut r = bytes;
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic == MAGIC_V2 {
+        load_v2(&mut r)
+    } else if &magic == MAGIC_V1 {
+        load_v1(&mut r)
+    } else {
+        anyhow::bail!("not a CRP snapshot")
+    }
+}
+
 struct Source<R: Read> {
     r: R,
     crc: u32,

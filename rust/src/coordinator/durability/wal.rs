@@ -23,7 +23,7 @@
 //! here: WAL pressure slows writers, never scans.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -47,6 +47,10 @@ const FRAME_HEADER: usize = 8;
 /// Upper bound on one record payload; anything larger read back is
 /// treated as corruption, and appends refuse to write it.
 const MAX_PAYLOAD: u32 = 1 << 27;
+/// Replication chunk budget: [`Wal::read_chunk`] packs complete frames
+/// up to roughly this many bytes per pull (a single oversized record
+/// still ships alone — a chunk always makes progress).
+pub(crate) const MAX_CHUNK: usize = 1 << 20;
 
 /// When acknowledged WAL records reach *stable storage* (not just the
 /// OS page cache). Every policy flushes each record to the OS before
@@ -341,17 +345,17 @@ impl Wal {
         self.append(&payload, apply)
     }
 
-    /// Cut over to a fresh segment; returns the retired older segment
-    /// paths (delete them only once a snapshot covering them is
-    /// durable). Takes the append mutex, so every op in a retired
-    /// segment has already been applied to the store.
-    pub fn rotate(&self) -> crate::Result<Vec<PathBuf>> {
+    /// Cut over to a fresh segment; returns the retired older segments
+    /// as `(seq, path)` (delete them only once a snapshot covering them
+    /// is durable — and, with replicas attached, only past the
+    /// retention floor). Takes the append mutex, so every op in a
+    /// retired segment has already been applied to the store.
+    pub fn rotate(&self) -> crate::Result<Vec<(u64, PathBuf)>> {
         let mut g = self.inner.lock().unwrap();
         let _ = g.file.flush();
-        let old: Vec<PathBuf> = segments(&self.dir)?
+        let old: Vec<(u64, PathBuf)> = segments(&self.dir)?
             .into_iter()
             .filter(|(s, _)| *s <= g.seq)
-            .map(|(_, p)| p)
             .collect();
         let seq = g.seq + 1;
         g.file = open_segment(&self.dir, seq, self.k, self.bits)?;
@@ -395,6 +399,141 @@ impl Wal {
         }
         Ok(())
     }
+
+    /// Sequence number of the segment currently accepting appends.
+    pub fn active_seq(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Read a run of complete, CRC-verified frames from segment `seq`
+    /// starting at byte `offset` — the primary side of the replication
+    /// feed. Frames are returned verbatim (header + payload) so the
+    /// replica can re-verify them end to end. The run stops at the
+    /// first incomplete or failed frame: on the active segment that is
+    /// a record still landing (poll again later); on a retired segment
+    /// it is a never-acknowledged garbage tail from a broken append,
+    /// skipped exactly as [`replay_into`] skips it.
+    ///
+    /// `Ok(None)` means the segment no longer exists (retired and
+    /// deleted) or is ahead of the writer — the replica must
+    /// re-bootstrap from a snapshot.
+    pub fn read_chunk(
+        &self,
+        seq: u64,
+        offset: u64,
+        max_bytes: usize,
+    ) -> crate::Result<Option<WalChunk>> {
+        let active = self.active_seq();
+        if seq == 0 || seq > active {
+            return Ok(None);
+        }
+        if seq == active {
+            // Appends buffer through a BufWriter; make sure the file
+            // reflects every acknowledged record before reading it.
+            self.flush()?;
+        }
+        let Ok(file) = File::open(self.dir.join(segment_name(seq))) else {
+            return Ok(None);
+        };
+        let offset = offset.max(SEGMENT_HEADER);
+        let mut r = BufReader::new(file);
+        r.seek(SeekFrom::Start(offset))?;
+        let mut bytes = Vec::new();
+        let mut records = 0u64;
+        let mut next_offset = offset;
+        // True when the byte budget cut the run short with intact
+        // frames still behind it — the segment is not done yet.
+        let mut budget_stop = false;
+        loop {
+            let mut hdr = [0u8; FRAME_HEADER];
+            match read_some(&mut r, &mut hdr)? {
+                ReadOutcome::Full => {}
+                _ => break,
+            }
+            let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+            let crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+            if len > MAX_PAYLOAD {
+                break;
+            }
+            if !bytes.is_empty() && bytes.len() + FRAME_HEADER + len as usize > max_bytes {
+                budget_stop = true;
+                break;
+            }
+            let mut payload = vec![0u8; len as usize];
+            match read_some(&mut r, &mut payload)? {
+                ReadOutcome::Full => {}
+                _ => break,
+            }
+            if crc32_update(0, &payload) != crc {
+                break;
+            }
+            bytes.extend_from_slice(&hdr);
+            bytes.extend_from_slice(&payload);
+            records += 1;
+            next_offset += (FRAME_HEADER + len as usize) as u64;
+            if bytes.len() >= max_bytes {
+                budget_stop = true;
+                break;
+            }
+        }
+        Ok(Some(WalChunk {
+            bytes,
+            records,
+            next_offset,
+            end_of_segment: seq < active && !budget_stop,
+        }))
+    }
+}
+
+/// One replication chunk as read by [`Wal::read_chunk`].
+#[derive(Clone, Debug)]
+pub struct WalChunk {
+    /// Complete CRC-framed records, verbatim (possibly empty).
+    pub bytes: Vec<u8>,
+    pub records: u64,
+    /// Byte offset the next pull of this segment resumes from.
+    pub next_offset: u64,
+    /// The retired segment is fully consumed — advance to `seq + 1` at
+    /// offset [`SEGMENT_HEADER`]. Never set for the active segment.
+    pub end_of_segment: bool,
+}
+
+/// Replica side of the feed: verify every frame of a shipped chunk
+/// end to end (length, checksum, payload shape) and only then apply
+/// them in order — a torn or corrupt chunk errors *before* any record
+/// touches the store. Returns the records applied.
+pub fn apply_chunk(store: &SketchStore, bytes: &[u8]) -> crate::Result<u64> {
+    let arena = store
+        .arena()
+        .ok_or_else(|| anyhow::anyhow!("WAL apply requires an arena-backed store"))?;
+    let stride = arena.stride();
+    let mut frames = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        anyhow::ensure!(
+            pos + FRAME_HEADER <= bytes.len(),
+            "torn replicated chunk: truncated frame header"
+        );
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        anyhow::ensure!(len <= MAX_PAYLOAD, "replicated frame of {len} bytes exceeds cap");
+        let end = pos + FRAME_HEADER + len as usize;
+        anyhow::ensure!(end <= bytes.len(), "torn replicated chunk: truncated payload");
+        let payload = &bytes[pos + FRAME_HEADER..end];
+        anyhow::ensure!(
+            crc32_update(0, payload) == crc,
+            "replicated frame failed its checksum"
+        );
+        frames.push(payload);
+        pos = end;
+    }
+    for payload in &frames {
+        anyhow::ensure!(
+            apply_record(store, stride, payload),
+            "malformed replicated WAL record"
+        );
+    }
+    Ok(frames.len() as u64)
 }
 
 // ---- replay -------------------------------------------------------------
@@ -757,7 +896,7 @@ mod tests {
         assert_eq!(back.len(), 1);
         assert!(back.get("b").is_some());
         // After the retired segment is deleted, only the tail replays.
-        for p in &retired {
+        for (_, p) in &retired {
             std::fs::remove_file(p).unwrap();
         }
         let back = SketchStore::with_arena(k, bits);
@@ -765,6 +904,118 @@ mod tests {
         assert_eq!(stats.segments, 1);
         assert_eq!(stats.records, 2);
         assert_eq!(back.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_chunk_ships_exactly_what_apply_chunk_replays() {
+        let dir = temp_dir("chunk");
+        let (k, bits) = (32usize, 2u32);
+        let live = SketchStore::with_arena(k, bits);
+        let wal = Wal::create(&dir, k, bits).unwrap();
+        assert_eq!(wal.active_seq(), 1);
+        for i in 0..6u16 {
+            let codes = sketch(k, i);
+            let id = format!("id{i}");
+            wal.append_put(&id, codes.words(), || live.put(id.clone(), codes.clone()))
+                .unwrap();
+        }
+        wal.append_remove("id2", || live.remove("id2")).unwrap();
+
+        // Pull the active segment in one oversized chunk.
+        let replica = SketchStore::with_arena(k, bits);
+        let chunk = wal.read_chunk(1, SEGMENT_HEADER, 1 << 20).unwrap().unwrap();
+        assert_eq!(chunk.records, 7);
+        assert!(!chunk.end_of_segment, "active segment never reports end");
+        assert_eq!(apply_chunk(&replica, &chunk.bytes).unwrap(), 7);
+        assert_eq!(replica.len(), live.len());
+        for i in 0..6u16 {
+            let id = format!("id{i}");
+            assert_eq!(replica.get(&id), live.get(&id), "{id}");
+        }
+        // Caught up: an empty chunk from the current tail.
+        let tail = wal.read_chunk(1, chunk.next_offset, 1 << 20).unwrap().unwrap();
+        assert_eq!(tail.records, 0);
+        assert_eq!(tail.next_offset, chunk.next_offset);
+
+        // A tiny byte budget still ships at least one whole frame per
+        // pull and walks the same total.
+        let step = SketchStore::with_arena(k, bits);
+        let mut off = SEGMENT_HEADER;
+        let mut total = 0u64;
+        loop {
+            let c = wal.read_chunk(1, off, 1).unwrap().unwrap();
+            if c.records == 0 {
+                break;
+            }
+            total += apply_chunk(&step, &c.bytes).unwrap();
+            off = c.next_offset;
+        }
+        assert_eq!(total, 7);
+        assert_eq!(step.len(), live.len());
+
+        // Rotation: the retired segment reads to a clean end, then the
+        // stream resumes on the new active segment.
+        wal.rotate().unwrap();
+        assert_eq!(wal.active_seq(), 2);
+        wal.append_put("post", sketch(k, 9).words(), || ()).unwrap();
+        let done = wal.read_chunk(1, off, 1 << 20).unwrap().unwrap();
+        assert_eq!(done.records, 0);
+        assert!(done.end_of_segment);
+        let next = wal.read_chunk(2, SEGMENT_HEADER, 1 << 20).unwrap().unwrap();
+        assert_eq!(next.records, 1);
+
+        // Deleted or future segments force a bootstrap.
+        std::fs::remove_file(dir.join("wal.000000000001.log")).unwrap();
+        assert!(wal.read_chunk(1, SEGMENT_HEADER, 1 << 20).unwrap().is_none());
+        assert!(wal.read_chunk(9, SEGMENT_HEADER, 1 << 20).unwrap().is_none());
+        assert!(wal.read_chunk(0, 0, 1 << 20).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn apply_chunk_rejects_torn_and_corrupt_chunks_wholesale() {
+        let dir = temp_dir("chunk_torn");
+        let (k, bits) = (32usize, 2u32);
+        let wal = Wal::create(&dir, k, bits).unwrap();
+        for i in 0..3u16 {
+            wal.append_put(&format!("id{i}"), sketch(k, i).words(), || ())
+                .unwrap();
+        }
+        let chunk = wal.read_chunk(1, SEGMENT_HEADER, 1 << 20).unwrap().unwrap();
+
+        // Truncated mid-record: nothing applies, not even the intact
+        // leading frames.
+        let replica = SketchStore::with_arena(k, bits);
+        let torn = &chunk.bytes[..chunk.bytes.len() - 3];
+        assert!(apply_chunk(&replica, torn).is_err());
+        assert_eq!(replica.len(), 0, "no partial chunk may touch the store");
+
+        // A flipped byte in the *last* frame also rejects the whole
+        // chunk before the first frame applies.
+        let mut flipped = chunk.bytes.clone();
+        let n = flipped.len();
+        flipped[n - 1] ^= 0xFF;
+        assert!(apply_chunk(&replica, flipped.as_slice()).is_err());
+        assert_eq!(replica.len(), 0);
+
+        // The intact chunk applies fully.
+        assert_eq!(apply_chunk(&replica, &chunk.bytes).unwrap(), 3);
+        assert_eq!(replica.len(), 3);
+
+        // The primary never ships a torn tail in the first place: chop
+        // the segment mid-record and the chunk stops at the clean
+        // prefix.
+        drop(wal);
+        let (_, path) = segments(&dir).unwrap().pop().unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let wal = Wal::create(&dir, k, bits).unwrap(); // opens segment 2
+        let c = wal.read_chunk(1, SEGMENT_HEADER, 1 << 20).unwrap().unwrap();
+        assert_eq!(c.records, 2);
+        assert!(c.end_of_segment, "garbage tail of a retired segment is skipped");
+        let clean = SketchStore::with_arena(k, bits);
+        assert_eq!(apply_chunk(&clean, &c.bytes).unwrap(), 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -39,11 +39,18 @@
 //!                  ├── metrics     — counters + latency histograms +
 //!                  │                 connection gauge; per-request-kind
 //!                  │                 full-path latency
-//!                  └── obs         — structured logs (--log-level),
-//!                                    slow-query/trace lines, and the
-//!                                    Prometheus-style /metrics endpoint
-//!                                    (--metrics-addr) rendered straight
-//!                                    off metrics + registry
+//!                  ├── obs         — structured logs (--log-level),
+//!                  │                 slow-query ring + trace lines, and
+//!                  │                 the Prometheus-style /metrics +
+//!                  │                 /healthz + /readyz endpoint
+//!                  │                 (--metrics-addr) rendered straight
+//!                  │                 off metrics + registry
+//!                  └── replication — WAL-shipping replicas: snapshot
+//!                                    bootstrap + chunked log tail over
+//!                                    the same frame protocol
+//!                                    (--replicate-from, `crp promote`),
+//!                                    reconnect with jittered backoff,
+//!                                    lag gauges through obs
 //! ```
 //!
 //! Python never runs here; Projectors execute AOT artifacts via PJRT.
@@ -58,6 +65,7 @@ pub mod client;
 pub mod durability;
 pub mod maintenance;
 pub mod obs;
+pub mod replication;
 
 pub use batcher::{BatcherConfig, SketchBatcher};
 pub use client::SketchClient;
@@ -67,5 +75,6 @@ pub use protocol::{CollectionInfo, CollectionStats, Request, Response};
 pub use registry::{
     Collection, CollectionOptions, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION,
 };
+pub use replication::{ReplicaState, ReplicationConfig, Replicator};
 pub use server::{serve, ServerConfig};
 pub use store::{DrainSignal, SketchStore};

@@ -17,6 +17,7 @@ use std::sync::atomic::Ordering;
 
 use crate::coordinator::metrics::{LatencyHistogram, Metrics};
 use crate::coordinator::registry::Registry;
+use crate::coordinator::replication::ReplicaState;
 use crate::scan::EngineHist;
 
 use super::REQUEST_KINDS;
@@ -59,9 +60,32 @@ fn gauge(out: &mut String, name: &str, labels: &str, v: u64) {
 }
 
 /// Render the full exposition page. Called per scrape (`GET /metrics`)
-/// and per `MetricsText` protocol request.
-pub fn render(metrics: &Metrics, registry: &Registry) -> String {
+/// and per `MetricsText` protocol request. `replica` adds the
+/// replication-lag series on a replicating server (`None` on a
+/// primary: the series are absent, not zero, so dashboards can tell
+/// "caught up" from "not a replica").
+pub fn render(metrics: &Metrics, registry: &Registry, replica: Option<&ReplicaState>) -> String {
     let mut out = String::with_capacity(16 * 1024);
+
+    if let Some(r) = replica {
+        for (name, v) in [
+            ("crp_replication_lag_bytes", r.lag_bytes()),
+            ("crp_replication_lag_records", r.lag_records()),
+            ("crp_replication_active", u64::from(r.is_active())),
+        ] {
+            type_line(&mut out, name, "gauge");
+            gauge(&mut out, name, "", v);
+        }
+        type_line(&mut out, "crp_replication_lag_seconds", "gauge");
+        let _ = writeln!(out, "crp_replication_lag_seconds {:.6}", r.lag_seconds());
+        for (name, v) in [
+            ("crp_replication_bootstraps_total", r.bootstraps()),
+            ("crp_replication_reconnects_total", r.reconnects()),
+        ] {
+            type_line(&mut out, name, "counter");
+            gauge(&mut out, name, "", v);
+        }
+    }
 
     // Global counters.
     for (name, v) in [
@@ -255,7 +279,7 @@ mod tests {
         metrics.requests.hist(RequestKind::Knn).record(100);
         metrics.requests.hist(RequestKind::Knn).record(5_000);
 
-        let text = render(&metrics, &reg);
+        let text = render(&metrics, &reg, None);
         assert!(text.contains("# TYPE crp_knn_queries_total counter"));
         assert!(text.contains("crp_knn_queries_total 7"));
         assert!(text.contains("crp_collections 1"));
@@ -285,7 +309,7 @@ mod tests {
         // 100µs → bucket [64,128); 5000µs → [4096,8192).
         metrics.requests.hist(RequestKind::TopK).record(100);
         metrics.requests.hist(RequestKind::TopK).record(5_000);
-        let text = render(&metrics, &reg);
+        let text = render(&metrics, &reg, None);
 
         let bucket = |le: &str| -> u64 {
             let needle = format!("crp_request_duration_us_bucket{{kind=\"topk\",le=\"{le}\"}} ");
@@ -328,11 +352,44 @@ mod tests {
         let arena = c.store.arena().unwrap();
         arena.drain();
 
-        let text = render(&metrics, &reg);
+        let text = render(&metrics, &reg, None);
         assert!(text.contains("crp_collection_rows{collection=\"default\"} 8"));
         assert!(text.contains("crp_collection_pending_rows{collection=\"default\"} 0"));
         assert!(text.contains("crp_collection_drains_total{collection=\"default\"} 1"));
         assert!(text.contains("crp_drain_fold_us_count{collection=\"default\"} 1"));
         assert!(text.contains("# TYPE crp_approx_candidates histogram"));
+    }
+
+    #[test]
+    fn replication_series_render_only_on_replicas() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = mem_registry(metrics.clone());
+
+        // Primary (no replica state): the series are absent entirely.
+        let text = render(&metrics, &reg, None);
+        assert!(!text.contains("crp_replication_"), "{text}");
+
+        // Replica: lag gauges and lifecycle counters lead the page.
+        let replica = ReplicaState::new("127.0.0.1:9999".into(), 1 << 20);
+        let text = render(&metrics, &reg, Some(&replica));
+        assert!(text.contains("# TYPE crp_replication_lag_bytes gauge"));
+        assert!(text.contains("crp_replication_lag_bytes 0"));
+        assert!(text.contains("crp_replication_lag_records 0"));
+        assert!(text.contains("crp_replication_active 1"));
+        assert!(text.contains("# TYPE crp_replication_lag_seconds gauge"));
+        assert!(text.contains("crp_replication_bootstraps_total 0"));
+        assert!(text.contains("crp_replication_reconnects_total 0"));
+        // The lag-seconds value is a well-formed float on its own line.
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("crp_replication_lag_seconds "))
+            .unwrap();
+        let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(v >= 0.0);
+
+        // Promotion flips the active gauge but keeps the series.
+        replica.promote();
+        let text = render(&metrics, &reg, Some(&replica));
+        assert!(text.contains("crp_replication_active 0"));
     }
 }

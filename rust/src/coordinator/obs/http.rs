@@ -1,11 +1,15 @@
-//! Minimal hand-rolled HTTP endpoint for `GET /metrics`.
+//! Minimal hand-rolled HTTP endpoint for `GET /metrics`, plus the
+//! `GET /healthz` / `GET /readyz` probes load balancers point at.
 //!
 //! Same spirit as the frame protocol: no HTTP crate, just enough of
 //! HTTP/1.1 for Prometheus-style scrapers — read the request line,
 //! drain headers, answer `200` with the rendered exposition text (or
-//! `404` for any other path) and close. The listener polls a
-//! nonblocking accept so [`MetricsEndpoint`] can be dropped cleanly
-//! (tests, server shutdown) without a stray blocking thread.
+//! `404` for any other path) and close. `/healthz` is liveness (always
+//! `200` once the listener is up); `/readyz` asks the server's health
+//! closure — `503` until recovery finishes and, on a replica, while
+//! replication lag sits over the cap. The listener polls a nonblocking
+//! accept so [`MetricsEndpoint`] can be dropped cleanly (tests, server
+//! shutdown) without a stray blocking thread.
 
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -20,6 +24,12 @@ use super::log;
 /// server's metrics + registry, so scrapes always see live state).
 pub type RenderFn = Arc<dyn Fn() -> String + Send + Sync>;
 
+/// Answers each `GET /readyz` probe: `(ready, detail)`. The detail
+/// string becomes the response body either way, so `kubectl`-style
+/// probing shows *why* a replica is not ready (still bootstrapping,
+/// lag over cap), not just the 503.
+pub type HealthFn = Arc<dyn Fn() -> (bool, String) + Send + Sync>;
+
 /// A background `/metrics` listener; dropping it stops the thread.
 pub struct MetricsEndpoint {
     addr: SocketAddr,
@@ -28,8 +38,9 @@ pub struct MetricsEndpoint {
 }
 
 impl MetricsEndpoint {
-    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve scrapes until drop.
-    pub fn spawn(addr: &str, render: RenderFn) -> crate::Result<MetricsEndpoint> {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve scrapes + health
+    /// probes until drop.
+    pub fn spawn(addr: &str, render: RenderFn, health: HealthFn) -> crate::Result<MetricsEndpoint> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
@@ -41,7 +52,7 @@ impl MetricsEndpoint {
                 while !stop_thread.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            if let Err(e) = serve_one(stream, &render) {
+                            if let Err(e) = serve_one(stream, &render, &health) {
                                 log::debug(
                                     "crp::obs::http",
                                     "metrics scrape failed",
@@ -85,8 +96,19 @@ impl Drop for MetricsEndpoint {
     }
 }
 
+fn plain(stream: &mut TcpStream, status: &str, body: &str) -> crate::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    Ok(())
+}
+
 /// Answer one scrape connection and close it.
-fn serve_one(stream: TcpStream, render: &RenderFn) -> crate::Result<()> {
+fn serve_one(stream: TcpStream, render: &RenderFn, health: &HealthFn) -> crate::Result<()> {
     // The listener is nonblocking; accepted sockets inherit that on
     // some platforms, so switch back and bound slow scrapers.
     stream.set_nonblocking(false)?;
@@ -117,14 +139,19 @@ fn serve_one(stream: TcpStream, render: &RenderFn) -> crate::Result<()> {
             body.len()
         )?;
         stream.write_all(body.as_bytes())?;
+    } else if method == "GET" && (path == "/healthz" || path == "/healthz/") {
+        // Liveness: reaching this code means the process accepts and
+        // answers — unconditionally alive.
+        plain(&mut stream, "200 OK", "ok\n")?;
+    } else if method == "GET" && (path == "/readyz" || path == "/readyz/") {
+        let (ready, detail) = health();
+        let status = if ready { "200 OK" } else { "503 Service Unavailable" };
+        plain(&mut stream, status, &format!("{detail}\n"))?;
     } else {
-        let body = "not found; scrape GET /metrics\n";
-        write!(
-            stream,
-            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain; charset=utf-8\r\n\
-             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
-            body.len(),
-            body
+        plain(
+            &mut stream,
+            "404 Not Found",
+            "not found; GET /metrics, /healthz, or /readyz\n",
         )?;
     }
     stream.flush()?;
@@ -144,10 +171,14 @@ mod tests {
         out
     }
 
+    fn always_ready() -> HealthFn {
+        Arc::new(|| (true, "ready".to_string()))
+    }
+
     #[test]
     fn serves_metrics_and_404() {
         let render: RenderFn = Arc::new(|| "crp_up 1\n".to_string());
-        let ep = MetricsEndpoint::spawn("127.0.0.1:0", render).unwrap();
+        let ep = MetricsEndpoint::spawn("127.0.0.1:0", render, always_ready()).unwrap();
         let addr = ep.addr();
 
         let ok = scrape(addr, "/metrics");
@@ -170,8 +201,39 @@ mod tests {
         let n2 = n.clone();
         let render: RenderFn =
             Arc::new(move || format!("scrapes {}\n", n2.fetch_add(1, Ordering::Relaxed)));
-        let ep = MetricsEndpoint::spawn("127.0.0.1:0", render).unwrap();
+        let ep = MetricsEndpoint::spawn("127.0.0.1:0", render, always_ready()).unwrap();
         assert!(scrape(ep.addr(), "/metrics").ends_with("scrapes 0\n"));
         assert!(scrape(ep.addr(), "/metrics").ends_with("scrapes 1\n"));
+    }
+
+    #[test]
+    fn health_probes_track_the_closure() {
+        let ready = Arc::new(AtomicBool::new(false));
+        let r2 = ready.clone();
+        let health: HealthFn = Arc::new(move || {
+            if r2.load(Ordering::Relaxed) {
+                (true, "ready".to_string())
+            } else {
+                (false, "replication lag over cap".to_string())
+            }
+        });
+        let render: RenderFn = Arc::new(|| String::new());
+        let ep = MetricsEndpoint::spawn("127.0.0.1:0", render, health).unwrap();
+
+        // Liveness never depends on readiness.
+        let live = scrape(ep.addr(), "/healthz");
+        assert!(live.starts_with("HTTP/1.1 200 OK"), "{live}");
+
+        // Not ready: 503 with the reason in the body.
+        let not_ready = scrape(ep.addr(), "/readyz");
+        assert!(not_ready.starts_with("HTTP/1.1 503"), "{not_ready}");
+        assert!(not_ready.ends_with("replication lag over cap\n"), "{not_ready}");
+
+        // Each probe re-asks the closure — flipping the state flips the
+        // answer without restarting the endpoint.
+        ready.store(true, Ordering::Relaxed);
+        let now_ready = scrape(ep.addr(), "/readyz");
+        assert!(now_ready.starts_with("HTTP/1.1 200 OK"), "{now_ready}");
+        assert!(now_ready.ends_with("ready\n"), "{now_ready}");
     }
 }

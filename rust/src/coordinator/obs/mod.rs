@@ -96,7 +96,10 @@ impl RequestKind {
             | Request::CreateCollection { .. }
             | Request::DropCollection { .. }
             | Request::ListCollections
-            | Request::MetricsText => RequestKind::Admin,
+            | Request::MetricsText
+            | Request::ReplSync { .. }
+            | Request::SlowQueries { .. }
+            | Request::Promote => RequestKind::Admin,
         }
     }
 }
@@ -204,6 +207,57 @@ pub fn stage_fields(
     fields
 }
 
+/// Entries retained by the slow-query ring before the oldest is
+/// evicted — small enough to serve over the wire in one frame, large
+/// enough to hold a burst.
+pub const SLOW_RING_CAP: usize = 128;
+
+/// A bounded ring of the most recent slow queries, retained in memory
+/// so `crp slow` can fetch them over the protocol after the stderr
+/// lines have scrolled away. Pushes happen on the connection loop's
+/// slow path only (the query already blew the threshold), so one short
+/// mutex hold is lost in the noise; readers copy the entries out under
+/// the same lock — a snapshot can never observe a half-written entry.
+#[derive(Debug, Default)]
+pub struct SlowQueryRing {
+    seq: AtomicU64,
+    entries: std::sync::Mutex<std::collections::VecDeque<super::protocol::SlowQueryEntry>>,
+}
+
+impl SlowQueryRing {
+    /// Record one slow query; evicts the oldest entry past
+    /// [`SLOW_RING_CAP`]. Returns the entry's ring sequence number
+    /// (monotone across evictions).
+    pub fn push(&self, kind: RequestKind, collection: &str, total_us: u64, candidates: u64) -> u64 {
+        let mut ring = self.entries.lock().unwrap();
+        // Seq allocation happens under the lock so a snapshot's entries
+        // are always strictly ordered by seq, even under racing pushers.
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        if ring.len() >= SLOW_RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(super::protocol::SlowQueryEntry {
+            seq,
+            kind: kind.label().to_string(),
+            collection: collection.to_string(),
+            total_us,
+            candidates,
+        });
+        seq
+    }
+
+    /// The most recent `max` entries, oldest first (`max` 0 = all).
+    pub fn entries(&self, max: u32) -> Vec<super::protocol::SlowQueryEntry> {
+        let ring = self.entries.lock().unwrap();
+        let skip = if max == 0 {
+            0
+        } else {
+            ring.len().saturating_sub(max as usize)
+        };
+        ring.iter().skip(skip).cloned().collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,9 +326,37 @@ mod tests {
             Request::ListCollections,
             Request::MetricsText,
             Request::DropCollection { name: "c".into() },
+            Request::ReplSync {
+                collection: "c".into(),
+                replica: "r".into(),
+                segment: 1,
+                offset: 16,
+            },
+            Request::SlowQueries { max: 0 },
+            Request::Promote,
         ] {
             assert_eq!(RequestKind::of(&admin), RequestKind::Admin, "{admin:?}");
         }
+    }
+
+    #[test]
+    fn slow_ring_bounds_orders_and_trims() {
+        let ring = SlowQueryRing::default();
+        for i in 0..(SLOW_RING_CAP as u64 + 10) {
+            ring.push(RequestKind::Knn, "default", 1000 + i, 0);
+        }
+        let all = ring.entries(0);
+        assert_eq!(all.len(), SLOW_RING_CAP, "oldest entries evicted");
+        // Oldest-first and contiguous: eviction dropped exactly the
+        // first 10 sequence numbers.
+        assert_eq!(all[0].seq, 10);
+        assert!(all.windows(2).all(|w| w[1].seq == w[0].seq + 1));
+        // A bounded fetch returns the most recent tail, still oldest
+        // first.
+        let tail = ring.entries(3);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[2].seq, all.last().unwrap().seq);
+        assert!(ring.entries(9999).len() == SLOW_RING_CAP);
     }
 
     #[test]

@@ -110,6 +110,28 @@ pub enum Request {
     /// body `crp serve --metrics-addr` serves over HTTP, fetched over
     /// the native protocol (`crp metrics`).
     MetricsText,
+    /// Replication pull: a replica asking the primary for the next
+    /// window of WAL records of `collection`, starting at its last
+    /// applied `(segment, offset)` position. `segment == 0` (WAL
+    /// segment numbering starts at 1) means "bootstrap me" — the
+    /// primary answers with a snapshot image plus a resume position.
+    /// `replica` is a stable self-chosen id the primary uses to track
+    /// the retention floor per attached replica. Carries its own
+    /// collection field rather than riding `Scoped`, so the replication
+    /// path stays out of the data-path namespace machinery.
+    ReplSync {
+        collection: String,
+        replica: String,
+        segment: u64,
+        offset: u64,
+    },
+    /// Fetch the most recent entries of the server's slow-query ring
+    /// (newest last, at most `max`; 0 = the whole ring).
+    SlowQueries { max: u32 },
+    /// Promote a replica: stop the applier, start accepting writes.
+    /// Idempotent — a primary (or an already-promoted replica) answers
+    /// `was_replica: false`.
+    Promote,
 }
 
 /// Server → client responses.
@@ -132,6 +154,34 @@ pub enum Response {
     CollectionDropped { existed: bool },
     /// `MetricsText` result: the rendered exposition body.
     MetricsText { text: String },
+    /// `ReplSync` answer on the steady-state path: `bytes` is a run of
+    /// complete CRC-framed `CRPWAL1` records copied verbatim from
+    /// segment `segment` (possibly empty when the replica is caught
+    /// up). The replica verifies every frame CRC before applying any
+    /// of them, then resumes from `(next_segment, next_offset)`.
+    /// `behind_bytes` is the primary-computed backlog remaining after
+    /// this chunk; `primary_records` the primary's lifetime record
+    /// count for lag-in-records accounting.
+    ReplRecords {
+        segment: u64,
+        next_segment: u64,
+        next_offset: u64,
+        behind_bytes: u64,
+        primary_records: u64,
+        bytes: Vec<u8>,
+    },
+    /// `ReplSync` answer when the replica must (re)bootstrap: a full
+    /// `CRPSNAP2` image plus the WAL position the stream resumes from.
+    ReplBootstrap {
+        segment: u64,
+        offset: u64,
+        primary_records: u64,
+        snapshot: Vec<u8>,
+    },
+    /// `SlowQueries` answer: ring entries, oldest first.
+    SlowQueries { entries: Vec<SlowQueryEntry> },
+    /// `Promote` answer.
+    Promoted { was_replica: bool },
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -190,6 +240,37 @@ pub struct RequestLatency {
     pub p99_us: u64,
 }
 
+/// One captured slow query, as served by [`Request::SlowQueries`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SlowQueryEntry {
+    /// Monotone capture sequence number (gaps mean ring eviction).
+    pub seq: u64,
+    /// Request-kind label, as on `/metrics`.
+    pub kind: String,
+    pub collection: String,
+    pub total_us: u64,
+    /// Candidate rows examined (0 when the kind records none).
+    pub candidates: u64,
+}
+
+/// Replication posture of a replica, as carried in the third optional
+/// `StatsDetailed` section (never present on a primary).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplicationStats {
+    /// Address the applier pulls from.
+    pub primary: String,
+    /// False once promoted (the section survives promotion so lag at
+    /// the moment of failover stays observable).
+    pub active: bool,
+    pub lag_bytes: u64,
+    pub lag_records: u64,
+    pub lag_seconds: f64,
+    /// Snapshot bootstraps performed (1 = initial only).
+    pub bootstraps: u64,
+    /// Stream reconnects after loss.
+    pub reconnects: u64,
+}
+
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StatsSnapshot {
     pub registered: u64,
@@ -234,6 +315,12 @@ pub struct StatsSnapshot {
     /// — a deliberate break, same tradeoff as `per_collection` in the
     /// prior PR (see [`Request::StatsDetailed`]).
     pub per_request: Vec<RequestLatency>,
+    /// Replication posture — `Some` only on replicas answering
+    /// `StatsDetailed`. Rides as a third positional section after
+    /// `per_request`; its presence forces the earlier sections onto
+    /// the wire (as zero counts if need be). Primaries never carry it,
+    /// so their `StatsDetailed` frames stay byte-identical to PR 6.
+    pub replication: Option<ReplicationStats>,
 }
 
 // ---- encoding primitives ----------------------------------------------
@@ -265,6 +352,10 @@ impl Enc {
         for x in v {
             self.0.extend_from_slice(&x.to_le_bytes());
         }
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.0.extend_from_slice(b);
     }
 }
 
@@ -308,6 +399,11 @@ impl<'a> Dec<'a> {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+    fn bytes(&mut self) -> crate::Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= self.buf.len(), "bad byte-blob length");
+        Ok(self.take(n)?.to_vec())
     }
     fn done(&self) -> crate::Result<()> {
         anyhow::ensure!(self.pos == self.buf.len(), "trailing bytes");
@@ -418,6 +514,25 @@ impl Request {
                 e.0
             }
             Request::MetricsText => Enc::new(15).0,
+            Request::ReplSync {
+                collection,
+                replica,
+                segment,
+                offset,
+            } => {
+                let mut e = Enc::new(16);
+                e.str(collection);
+                e.str(replica);
+                e.u64(*segment);
+                e.u64(*offset);
+                e.0
+            }
+            Request::SlowQueries { max } => {
+                let mut e = Enc::new(17);
+                e.u32(*max);
+                e.0
+            }
+            Request::Promote => Enc::new(18).0,
         }
     }
 
@@ -537,6 +652,14 @@ impl Request {
                 }
             }
             15 => Request::MetricsText,
+            16 => Request::ReplSync {
+                collection: d.str()?,
+                replica: d.str()?,
+                segment: d.u64()?,
+                offset: d.u64()?,
+            },
+            17 => Request::SlowQueries { max: d.u32()? },
+            18 => Request::Promote,
             t => anyhow::bail!("unknown request tag {t}"),
         };
         d.done()?;
@@ -605,7 +728,8 @@ impl Response {
                 // NOT decodable by clients predating a section it
                 // carries (their `done()` rejects the extra tail) —
                 // an accepted break; see Request::StatsDetailed.
-                if !s.per_collection.is_empty() || !s.per_request.is_empty() {
+                let has_repl = s.replication.is_some();
+                if !s.per_collection.is_empty() || !s.per_request.is_empty() || has_repl {
                     e.u32(s.per_collection.len() as u32);
                     for c in &s.per_collection {
                         e.str(&c.name);
@@ -615,7 +739,7 @@ impl Response {
                         e.u64(c.index_buckets);
                     }
                 }
-                if !s.per_request.is_empty() {
+                if !s.per_request.is_empty() || has_repl {
                     e.u32(s.per_request.len() as u32);
                     for r in &s.per_request {
                         e.str(&r.kind);
@@ -624,6 +748,15 @@ impl Response {
                         e.u64(r.p50_us);
                         e.u64(r.p99_us);
                     }
+                }
+                if let Some(r) = &s.replication {
+                    e.str(&r.primary);
+                    e.u8(u8::from(r.active));
+                    e.u64(r.lag_bytes);
+                    e.u64(r.lag_records);
+                    e.f64(r.lag_seconds);
+                    e.u64(r.bootstraps);
+                    e.u64(r.reconnects);
                 }
                 e.0
             }
@@ -691,6 +824,53 @@ impl Response {
                 e.str(text);
                 e.0
             }
+            Response::ReplRecords {
+                segment,
+                next_segment,
+                next_offset,
+                behind_bytes,
+                primary_records,
+                bytes,
+            } => {
+                let mut e = Enc::new(14);
+                e.u64(*segment);
+                e.u64(*next_segment);
+                e.u64(*next_offset);
+                e.u64(*behind_bytes);
+                e.u64(*primary_records);
+                e.bytes(bytes);
+                e.0
+            }
+            Response::ReplBootstrap {
+                segment,
+                offset,
+                primary_records,
+                snapshot,
+            } => {
+                let mut e = Enc::new(15);
+                e.u64(*segment);
+                e.u64(*offset);
+                e.u64(*primary_records);
+                e.bytes(snapshot);
+                e.0
+            }
+            Response::SlowQueries { entries } => {
+                let mut e = Enc::new(16);
+                e.u32(entries.len() as u32);
+                for q in entries {
+                    e.u64(q.seq);
+                    e.str(&q.kind);
+                    e.str(&q.collection);
+                    e.u64(q.total_us);
+                    e.u64(q.candidates);
+                }
+                e.0
+            }
+            Response::Promoted { was_replica } => {
+                let mut e = Enc::new(17);
+                e.u8(u8::from(*was_replica));
+                e.0
+            }
         }
     }
 
@@ -737,6 +917,7 @@ impl Response {
                     collections: d.u64()?,
                     per_collection: Vec::new(),
                     per_request: Vec::new(),
+                    replication: None,
                 };
                 // Optional per-collection section: absent in frames
                 // from pre-breakdown servers.
@@ -767,6 +948,22 @@ impl Response {
                             p99_us: d.u64()?,
                         });
                     }
+                }
+                // Optional replication section: present only in
+                // `StatsDetailed` frames from replicas.
+                if d.pos < buf.len() {
+                    let primary = d.str()?;
+                    let active = d.u8()?;
+                    anyhow::ensure!(active <= 1, "bad bool byte {active}");
+                    s.replication = Some(ReplicationStats {
+                        primary,
+                        active: active == 1,
+                        lag_bytes: d.u64()?,
+                        lag_records: d.u64()?,
+                        lag_seconds: d.f64()?,
+                        bootstraps: d.u64()?,
+                        reconnects: d.u64()?,
+                    });
                 }
                 Response::Stats(s)
             }
@@ -836,6 +1033,40 @@ impl Response {
                 Response::CollectionDropped { existed: v == 1 }
             }
             13 => Response::MetricsText { text: d.str()? },
+            14 => Response::ReplRecords {
+                segment: d.u64()?,
+                next_segment: d.u64()?,
+                next_offset: d.u64()?,
+                behind_bytes: d.u64()?,
+                primary_records: d.u64()?,
+                bytes: d.bytes()?,
+            },
+            15 => Response::ReplBootstrap {
+                segment: d.u64()?,
+                offset: d.u64()?,
+                primary_records: d.u64()?,
+                snapshot: d.bytes()?,
+            },
+            16 => {
+                let n = d.u32()? as usize;
+                anyhow::ensure!(n * 40 <= buf.len(), "bad slow-query count");
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push(SlowQueryEntry {
+                        seq: d.u64()?,
+                        kind: d.str()?,
+                        collection: d.str()?,
+                        total_us: d.u64()?,
+                        candidates: d.u64()?,
+                    });
+                }
+                Response::SlowQueries { entries }
+            }
+            17 => {
+                let v = d.u8()?;
+                anyhow::ensure!(v <= 1, "bad bool byte {v}");
+                Response::Promoted { was_replica: v == 1 }
+            }
             t => anyhow::bail!("unknown response tag {t}"),
         };
         d.done()?;
@@ -941,6 +1172,21 @@ mod tests {
         });
         roundtrip_req(Request::DropCollection { name: "old".into() });
         roundtrip_req(Request::ListCollections);
+        roundtrip_req(Request::ReplSync {
+            collection: "default".into(),
+            replica: "r-1234".into(),
+            segment: 7,
+            offset: 4096,
+        });
+        roundtrip_req(Request::ReplSync {
+            collection: "web".into(),
+            replica: "r".into(),
+            segment: 0,
+            offset: 0,
+        });
+        roundtrip_req(Request::SlowQueries { max: 0 });
+        roundtrip_req(Request::SlowQueries { max: 32 });
+        roundtrip_req(Request::Promote);
         for inner in [
             Request::Register {
                 id: "x".into(),
@@ -1229,6 +1475,140 @@ mod tests {
             ..Default::default()
         });
         assert_eq!(Response::decode(&old.encode()).unwrap(), old);
+    }
+
+    /// PR7 wire pins: the replication / slow-query / promote frames own
+    /// tags the legacy map never used (requests 16–18, responses
+    /// 14–17), and the replication stats tail rides as a third
+    /// positional section that forces the earlier ones onto the wire —
+    /// while frames without it (every primary) stay byte-identical to
+    /// the PR 6 layout.
+    #[test]
+    fn replication_frames_and_stats_tail() {
+        // New request tags, pinned.
+        let sync = Request::ReplSync {
+            collection: "default".into(),
+            replica: "r1".into(),
+            segment: 3,
+            offset: 16,
+        };
+        assert_eq!(sync.encode()[0], 16);
+        assert_eq!(Request::SlowQueries { max: 5 }.encode()[0], 17);
+        assert_eq!(Request::Promote.encode(), vec![18u8]);
+
+        // New response tags, pinned + roundtripped (including raw WAL
+        // payload bytes that must come back verbatim).
+        let records = Response::ReplRecords {
+            segment: 3,
+            next_segment: 4,
+            next_offset: 16,
+            behind_bytes: 1024,
+            primary_records: 99,
+            bytes: vec![0xde, 0xad, 0xbe, 0xef, 0x00, 0x01],
+        };
+        assert_eq!(records.encode()[0], 14);
+        roundtrip_resp(records);
+        roundtrip_resp(Response::ReplRecords {
+            segment: 1,
+            next_segment: 1,
+            next_offset: 16,
+            behind_bytes: 0,
+            primary_records: 0,
+            bytes: vec![],
+        });
+        let boot = Response::ReplBootstrap {
+            segment: 5,
+            offset: 16,
+            primary_records: 42,
+            snapshot: vec![7u8; 129],
+        };
+        assert_eq!(boot.encode()[0], 15);
+        roundtrip_resp(boot);
+        let slow = Response::SlowQueries {
+            entries: vec![SlowQueryEntry {
+                seq: 9,
+                kind: "knn".into(),
+                collection: "default".into(),
+                total_us: 125_000,
+                candidates: 4096,
+            }],
+        };
+        assert_eq!(slow.encode()[0], 16);
+        roundtrip_resp(slow);
+        roundtrip_resp(Response::SlowQueries { entries: vec![] });
+        assert_eq!(Response::Promoted { was_replica: true }.encode(), vec![17u8, 1]);
+        roundtrip_resp(Response::Promoted { was_replica: false });
+
+        // Replication tail alone forces zero-count earlier sections so
+        // the positional decoder finds it in the right place.
+        let repl = Response::Stats(StatsSnapshot {
+            kernel: "swar".into(),
+            replication: Some(ReplicationStats {
+                primary: "127.0.0.1:4100".into(),
+                active: true,
+                lag_bytes: 2048,
+                lag_records: 17,
+                lag_seconds: 0.25,
+                bootstraps: 1,
+                reconnects: 3,
+            }),
+            ..Default::default()
+        });
+        let bytes = repl.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), repl);
+        let bare = Response::Stats(StatsSnapshot {
+            kernel: "swar".into(),
+            ..Default::default()
+        })
+        .encode();
+        // Two zero-count section headers precede the replication tail.
+        assert_eq!(&bytes[bare.len()..bare.len() + 4], &0u32.to_le_bytes());
+        assert_eq!(&bytes[bare.len() + 4..bare.len() + 8], &0u32.to_le_bytes());
+
+        // All three sections together roundtrip.
+        let full = Response::Stats(StatsSnapshot {
+            kernel: "avx2".into(),
+            per_collection: vec![CollectionStats {
+                name: "web".into(),
+                rows: 9,
+                ..Default::default()
+            }],
+            per_request: vec![RequestLatency {
+                kind: "knn".into(),
+                count: 2,
+                mean_us: 10.0,
+                p50_us: 8,
+                p99_us: 32,
+            }],
+            replication: Some(ReplicationStats {
+                primary: "p:1".into(),
+                active: false,
+                lag_bytes: 0,
+                lag_records: 0,
+                lag_seconds: 0.0,
+                bootstraps: 2,
+                reconnects: 0,
+            }),
+            ..Default::default()
+        });
+        assert_eq!(Response::decode(&full.encode()).unwrap(), full);
+
+        // No-replication frames are byte-identical to the PR 6 layout:
+        // the tail adds nothing when absent (pinned above via `bare`).
+        let pr6 = Response::Stats(StatsSnapshot {
+            kernel: "swar".into(),
+            per_request: vec![RequestLatency {
+                kind: "knn".into(),
+                count: 1,
+                mean_us: 1.0,
+                p50_us: 1,
+                p99_us: 1,
+            }],
+            ..Default::default()
+        });
+        let enc = pr6.encode();
+        assert_eq!(Response::decode(&enc).unwrap(), pr6);
+        assert!(!enc.is_empty());
     }
 
     #[test]

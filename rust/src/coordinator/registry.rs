@@ -805,6 +805,28 @@ impl Registry {
         Ok(true)
     }
 
+    /// Rebuild a collection empty, in place — the replica-side
+    /// re-bootstrap path (a forced snapshot reload must not replay on
+    /// top of stale rows). The entry is swapped under the admin lock;
+    /// requests that already resolved the old `Arc` finish against it
+    /// (it is marked dropped so its background machinery stands down),
+    /// and the rebuilt collection reuses the same spec, options, and
+    /// projector. Refused in root mode: replicas are in-memory by
+    /// construction, and resetting a durable collection would replay
+    /// its own WAL straight back in.
+    pub(crate) fn reset_collection(&self, name: &str) -> crate::Result<Arc<Collection>> {
+        anyhow::ensure!(
+            self.cfg.root.is_none(),
+            "reset_collection is for in-memory replicas, not durable collections"
+        );
+        let _admin = self.admin_mu.lock().unwrap();
+        let Some(old) = self.collections.read().unwrap().get(name).cloned() else {
+            anyhow::bail!("collection {name:?} does not exist");
+        };
+        old.dropped.store(true, Ordering::Relaxed);
+        self.install(name, old.spec, old.options, Some(old.projector.clone()))
+    }
+
     pub fn get(&self, name: &str) -> Option<Arc<Collection>> {
         self.collections.read().unwrap().get(name).cloned()
     }

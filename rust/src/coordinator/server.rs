@@ -64,6 +64,28 @@ pub struct ServerConfig {
     /// Every Nth request emits a debug-level trace line with its stage
     /// breakdown; 0 disables.
     pub trace_sample: u64,
+    /// Read/write timeout applied to accepted data-path connections
+    /// (`--conn-timeout`); `None` (the default) lets idle clients sit
+    /// forever. Timed-out connections close with a debug log line,
+    /// exactly like a client hangup.
+    pub conn_timeout: Option<std::time::Duration>,
+    /// Run as a read-only replica of the primary at this `host:port`
+    /// (`--replicate-from`). Mutually exclusive with durability — the
+    /// primary owns the durable state; the replica keeps everything in
+    /// memory and re-bootstraps over the wire.
+    pub replicate_from: Option<String>,
+    /// Replication lag cap in bytes (`--repl-lag-cap`). On a primary:
+    /// checkpoints stop retaining WAL segments for a replica once its
+    /// backlog exceeds this (the replica re-bootstraps instead). On a
+    /// replica: `/readyz` reports 503 while lag sits above it.
+    pub repl_lag_cap: u64,
+    /// Replica poll interval while caught up.
+    pub repl_poll: std::time::Duration,
+    /// First reconnect backoff delay after stream loss (doubles,
+    /// jittered, up to `repl_backoff_max`).
+    pub repl_backoff_min: std::time::Duration,
+    /// Reconnect backoff ceiling.
+    pub repl_backoff_max: std::time::Duration,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +105,12 @@ impl Default for ServerConfig {
             log_level: None,
             slow_query_us: 0,
             trace_sample: 0,
+            conn_timeout: None,
+            replicate_from: None,
+            repl_lag_cap: crate::coordinator::durability::DEFAULT_REPL_LAG_CAP,
+            repl_poll: std::time::Duration::from_millis(50),
+            repl_backoff_min: std::time::Duration::from_millis(100),
+            repl_backoff_max: std::time::Duration::from_secs(5),
         }
     }
 }
@@ -103,6 +131,19 @@ pub struct ServiceState {
     pub metrics: Arc<Metrics>,
     /// Slow-query threshold and trace-sampling state.
     pub obs: obs::ObsConfig,
+    /// The most recent slow queries, served over `Request::SlowQueries`.
+    pub slow_ring: obs::SlowQueryRing,
+    /// Replication posture when serving as a replica
+    /// (`--replicate-from`); `None` on a primary. Gates writes, feeds
+    /// the lag gauges, and answers `/readyz`.
+    pub replica: Option<Arc<crate::coordinator::replication::ReplicaState>>,
+    /// Read/write timeout for accepted connections (`--conn-timeout`).
+    conn_timeout: Option<std::time::Duration>,
+    /// Lag cap applied to every durable collection's segment retention
+    /// (and to collections created later at runtime).
+    repl_lag_cap: u64,
+    /// The replica-side applier thread; dropping the state stops it.
+    _replicator: Option<crate::coordinator::replication::Replicator>,
     /// Background drain/checkpoint thread; its `Drop` is the graceful-
     /// shutdown flush.
     _maintenance: Maintenance,
@@ -139,6 +180,35 @@ impl ServiceState {
         let default = registry
             .get(DEFAULT_COLLECTION)
             .expect("registry always installs the default collection");
+        // Primary-side retention: every durable collection gates
+        // checkpoint segment deletion on attached replicas up to this
+        // cap (collections created later get it in CreateCollection).
+        for c in registry.list() {
+            if let Some(d) = &c.durability {
+                d.set_repl_lag_cap(cfg.repl_lag_cap);
+            }
+        }
+        let replicator = match &cfg.replicate_from {
+            Some(primary) => {
+                anyhow::ensure!(
+                    cfg.durability.is_none() && cfg.data_dir.is_none(),
+                    "--replicate-from runs in-memory: drop --data-dir/--snapshot/--wal-dir \
+                     (the primary owns the durable state; a promoted replica can be \
+                     re-seeded durably later)"
+                );
+                Some(crate::coordinator::replication::Replicator::spawn(
+                    registry.clone(),
+                    crate::coordinator::replication::ReplicationConfig {
+                        primary: primary.clone(),
+                        poll: cfg.repl_poll,
+                        backoff_min: cfg.repl_backoff_min,
+                        backoff_max: cfg.repl_backoff_max,
+                        lag_cap: cfg.repl_lag_cap,
+                    },
+                )?)
+            }
+            None => None,
+        };
         let maintenance =
             Maintenance::spawn(registry.clone(), metrics.clone(), cfg.maintenance.clone());
         Ok(Arc::new(ServiceState {
@@ -149,8 +219,42 @@ impl ServiceState {
             registry,
             metrics,
             obs: obs::ObsConfig::new(cfg.slow_query_us, cfg.trace_sample),
+            slow_ring: obs::SlowQueryRing::default(),
+            replica: replicator.as_ref().map(|r| r.state()),
+            conn_timeout: cfg.conn_timeout,
+            repl_lag_cap: cfg.repl_lag_cap,
+            _replicator: replicator,
             _maintenance: maintenance,
         }))
+    }
+
+    /// Readiness for `GET /readyz`: a primary is ready once it serves
+    /// (recovery happens inside [`ServiceState::open`], before the
+    /// listener accepts); an active replica also needs its bootstrap
+    /// finished and replication lag under the cap.
+    pub fn health(&self) -> (bool, String) {
+        match &self.replica {
+            Some(r) if r.is_active() => {
+                if r.ready() {
+                    (
+                        true,
+                        format!("ready (replica of {}, lag {} bytes)", r.primary, r.lag_bytes()),
+                    )
+                } else {
+                    (
+                        false,
+                        format!(
+                            "replica of {} not ready: lag {} bytes (cap {}), {:.1}s behind",
+                            r.primary,
+                            r.lag_bytes(),
+                            self.repl_lag_cap,
+                            r.lag_seconds()
+                        ),
+                    )
+                }
+            }
+            _ => (true, "ready".to_string()),
+        }
     }
 
     /// As [`ServiceState::new`], seeding the `default` collection from
@@ -238,13 +342,58 @@ impl ServiceState {
         req: Request,
         candidates: &mut Option<u64>,
     ) -> Response {
+        // An active replica serves every read but owns no writes: its
+        // state is a projection of the primary's WAL, and a local
+        // mutation would silently diverge (or be clobbered by the next
+        // bootstrap). Reject with a redirect naming the primary.
+        if let Some(r) = &self.replica {
+            if r.is_active()
+                && matches!(
+                    req,
+                    Request::Register { .. }
+                        | Request::RegisterBatch { .. }
+                        | Request::Remove { .. }
+                        | Request::Persist
+                        | Request::CreateCollection { .. }
+                        | Request::DropCollection { .. }
+                )
+            {
+                return Response::Error {
+                    message: format!(
+                        "replica is read-only; write to the primary at {} (or promote this \
+                         replica with `crp promote`)",
+                        r.primary
+                    ),
+                };
+            }
+        }
         match req {
             Request::Ping => Response::Pong,
             Request::Stats => self.stats(false),
             Request::StatsDetailed => self.stats(true),
             Request::MetricsText => Response::MetricsText {
-                text: obs::expo::render(&self.metrics, &self.registry),
+                text: obs::expo::render(&self.metrics, &self.registry, self.replica.as_deref()),
             },
+            Request::ReplSync {
+                collection: name,
+                replica,
+                segment,
+                offset,
+            } => self.repl_sync(&name, &replica, segment, offset),
+            Request::SlowQueries { max } => Response::SlowQueries {
+                entries: self.slow_ring.entries(max),
+            },
+            Request::Promote => {
+                let was_replica = self.replica.as_ref().map(|r| r.promote()).unwrap_or(false);
+                if was_replica {
+                    obs::log::info(
+                        "crp::server",
+                        "promoted to primary; writes accepted",
+                        &[],
+                    );
+                }
+                Response::Promoted { was_replica }
+            }
             Request::Scoped { .. } => Response::Error {
                 message: "nested Scoped request".to_string(),
             },
@@ -278,7 +427,12 @@ impl ServiceState {
                     index: IndexConfig::for_shape(spec.k, spec.bits()),
                 };
                 match self.registry.create(&name, spec, options) {
-                    Ok(_) => Response::CollectionCreated { name },
+                    Ok(c) => {
+                        if let Some(d) = &c.durability {
+                            d.set_repl_lag_cap(self.repl_lag_cap);
+                        }
+                        Response::CollectionCreated { name }
+                    }
                     Err(e) => Response::Error {
                         message: format!("create collection failed: {e}"),
                     },
@@ -351,6 +505,102 @@ impl ServiceState {
         }
     }
 
+    /// Primary side of the replication stream: answer one `ReplSync`
+    /// pull. `segment` 0 asks for a snapshot bootstrap; otherwise we
+    /// ship the next run of CRC-framed WAL records past `(segment,
+    /// offset)`, pinning checkpoint retention at the position the
+    /// replica will resume from. A position we can no longer serve (the
+    /// segment was retired past the lag cap, or never existed) heals in
+    /// the same round trip by answering with a bootstrap instead of an
+    /// error.
+    fn repl_sync(&self, name: &str, replica: &str, segment: u64, offset: u64) -> Response {
+        let Some(c) = self.registry.get(name) else {
+            return Response::Error {
+                message: format!("unknown collection {name:?}"),
+            };
+        };
+        let Some(d) = c.durability.clone() else {
+            return Response::Error {
+                message: format!(
+                    "collection {name:?} has no WAL to replicate (serve the primary with \
+                     --data-dir or --snapshot/--wal-dir)"
+                ),
+            };
+        };
+        if segment == 0 {
+            return Self::repl_bootstrap(&c, &d, replica);
+        }
+        match d.read_chunk(segment, offset) {
+            Ok(Some(chunk)) => {
+                let (next_segment, next_offset) = if chunk.end_of_segment {
+                    (
+                        segment + 1,
+                        crate::coordinator::durability::wal::SEGMENT_HEADER,
+                    )
+                } else {
+                    (segment, chunk.next_offset)
+                };
+                d.repl_note(replica, next_segment);
+                Response::ReplRecords {
+                    segment,
+                    next_segment,
+                    next_offset,
+                    behind_bytes: d.repl_backlog(next_segment, next_offset),
+                    primary_records: d.wal_records(),
+                    bytes: chunk.bytes,
+                }
+            }
+            Ok(None) => Self::repl_bootstrap(&c, &d, replica),
+            Err(e) => Response::Error {
+                message: format!("replication read failed: {e}"),
+            },
+        }
+    }
+
+    /// Serve a snapshot bootstrap: checkpoint (so the image is current
+    /// and the WAL just rotated), pin retention at the new active
+    /// segment, and ship the image bytes with the resume position.
+    fn repl_bootstrap(
+        c: &Arc<Collection>,
+        d: &Arc<crate::coordinator::durability::Durability>,
+        replica: &str,
+    ) -> Response {
+        if let Err(e) = c.checkpoint() {
+            return Response::Error {
+                message: format!("bootstrap checkpoint failed: {e}"),
+            };
+        }
+        let segment = d.active_seq();
+        d.repl_note(replica, segment);
+        let snapshot = match std::fs::read(d.snapshot_path()) {
+            Ok(b) => b,
+            Err(e) => {
+                return Response::Error {
+                    message: format!("bootstrap snapshot read failed: {e}"),
+                }
+            }
+        };
+        // The image must fit one response frame (with headroom for the
+        // fixed fields). Past that, this pairing needs a sharded
+        // bootstrap — punt explicitly rather than ship a frame the
+        // replica will reject.
+        if snapshot.len() as u64 + 1024 > u64::from(protocol::MAX_FRAME) {
+            return Response::Error {
+                message: format!(
+                    "snapshot too large to bootstrap over the wire ({} bytes > {} frame cap)",
+                    snapshot.len(),
+                    protocol::MAX_FRAME
+                ),
+            };
+        }
+        Response::ReplBootstrap {
+            segment,
+            offset: crate::coordinator::durability::wal::SEGMENT_HEADER,
+            primary_records: d.wal_records(),
+            snapshot,
+        }
+    }
+
     /// Aggregate stats across the registry: arena and WAL counters are
     /// summed over collections; the kernel label is `default`'s (every
     /// collection picks its own tier by bit width). With `detail`
@@ -381,6 +631,12 @@ impl ServiceState {
         }
         if detail {
             st.per_request = self.metrics.per_request();
+            // Only replicas carry the replication tail; a primary's
+            // detailed answer stays byte-identical to the previous
+            // format (see the StatsSnapshot encoding contract).
+            if let Some(r) = &self.replica {
+                st.replication = Some(r.stats());
+            }
         }
         if let Some(arena) = self.default.store.arena() {
             st.kernel = arena.kernel_kind().label().to_string();
@@ -439,11 +695,17 @@ pub fn serve(
     let _metrics_endpoint = match &cfg.metrics_addr {
         Some(addr) => {
             let render_state = state.clone();
+            let health_state = state.clone();
             let ep = obs::http::MetricsEndpoint::spawn(
                 addr,
                 Arc::new(move || {
-                    obs::expo::render(&render_state.metrics, &render_state.registry)
+                    obs::expo::render(
+                        &render_state.metrics,
+                        &render_state.registry,
+                        render_state.replica.as_deref(),
+                    )
                 }),
+                Arc::new(move || health_state.health()),
             )?;
             obs::log::info(
                 "crp::server",
@@ -487,6 +749,13 @@ fn reject_connection(stream: TcpStream, max_conns: usize) -> crate::Result<()> {
 
 fn handle_connection(stream: TcpStream, state: Arc<ServiceState>) -> crate::Result<()> {
     stream.set_nodelay(true)?;
+    // Socket hardening: a stalled or idle peer past the timeout fails
+    // its next read/write and the connection closes through the normal
+    // debug-logged path below — never a warn, never a stuck thread.
+    if let Some(t) = state.conn_timeout {
+        stream.set_read_timeout(Some(t))?;
+        stream.set_write_timeout(Some(t))?;
+    }
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let mut writer = std::io::BufWriter::new(stream);
@@ -535,6 +804,14 @@ fn handle_connection(stream: TcpStream, state: Arc<ServiceState>) -> crate::Resu
         // threshold fires, else a sampled debug trace.
         if state.obs.slow_query_us > 0 && total_us >= state.obs.slow_query_us {
             state.metrics.slow_queries.fetch_add(1, Ordering::Relaxed);
+            // Retained in the ring too, so `crp slow` can fetch the
+            // recent offenders after the stderr lines scroll away.
+            state.slow_ring.push(
+                meta.kind,
+                meta.collection.as_deref().unwrap_or(DEFAULT_COLLECTION),
+                total_us,
+                meta.candidates.unwrap_or(0),
+            );
             let mut fields = obs::stage_fields(&meta, total_us, decode_us, handle_us, write_us);
             // The kernel tier is resolved lazily — only slow queries
             // pay the registry lookup.
@@ -953,6 +1230,125 @@ mod tests {
         // The plain Stats answer stays byte-compatible: no rows.
         match s.handle(Request::Stats) {
             Response::Stats(st) => assert!(st.per_request.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replica_rejects_writes_until_promoted() {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 64,
+            seed: 7,
+            ..Default::default()
+        }));
+        // Port 1 never answers: the applier just backs off in the
+        // background while we exercise the router's replica posture.
+        let cfg = ServerConfig {
+            replicate_from: Some("127.0.0.1:1".into()),
+            repl_backoff_min: std::time::Duration::from_millis(10),
+            repl_backoff_max: std::time::Duration::from_millis(50),
+            ..Default::default()
+        };
+        let s = ServiceState::new(projector.clone(), &cfg);
+
+        // Every write is rejected with a redirect naming the primary.
+        for write in [
+            Request::Register {
+                id: "a".into(),
+                vector: vec![1.0; 16],
+            },
+            Request::Remove { id: "a".into() },
+            Request::Persist,
+            Request::DropCollection { name: "x".into() },
+        ] {
+            match s.handle(write) {
+                Response::Error { message } => {
+                    assert!(message.contains("127.0.0.1:1"), "{message}");
+                    assert!(message.contains("promote"), "{message}");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Reads still answer.
+        assert!(matches!(s.handle(Request::Ping), Response::Pong));
+        match s.handle(Request::Knn {
+            vector: vec![1.0; 16],
+            n: 1,
+        }) {
+            Response::Knn { hits } => assert!(hits.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Not ready before bootstrap; the detail names the lag.
+        let (ready, detail) = s.health();
+        assert!(!ready, "{detail}");
+        // StatsDetailed carries the replication tail; plain Stats
+        // stays byte-compatible without it.
+        match s.handle(Request::StatsDetailed) {
+            Response::Stats(st) => {
+                let r = st.replication.expect("replica stats tail");
+                assert!(r.active);
+                assert_eq!(r.primary, "127.0.0.1:1");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match s.handle(Request::Stats) {
+            Response::Stats(st) => assert!(st.replication.is_none()),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Promotion flips the posture: writes accepted, ready, and a
+        // second promote is a clean no-op.
+        match s.handle(Request::Promote) {
+            Response::Promoted { was_replica } => assert!(was_replica),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(
+            s.handle(Request::Register {
+                id: "a".into(),
+                vector: vec![1.0; 16],
+            }),
+            Response::Registered { .. }
+        ));
+        assert!(s.health().0);
+        match s.handle(Request::Promote) {
+            Response::Promoted { was_replica } => assert!(!was_replica),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // A server that never replicated answers Promote too (no-op).
+        let primary = state(64);
+        match primary.handle(Request::Promote) {
+            Response::Promoted { was_replica } => assert!(!was_replica),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Replication and local durability are mutually exclusive.
+        let dir = std::env::temp_dir().join(format!("crp-repl-excl-{}", std::process::id()));
+        let bad = ServerConfig {
+            replicate_from: Some("127.0.0.1:1".into()),
+            data_dir: Some(dir),
+            ..Default::default()
+        };
+        assert!(ServiceState::open(projector, &bad).is_err());
+    }
+
+    #[test]
+    fn slow_queries_are_served_from_the_ring() {
+        let s = state(64);
+        match s.handle(Request::SlowQueries { max: 0 }) {
+            Response::SlowQueries { entries } => assert!(entries.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        s.slow_ring.push(obs::RequestKind::Knn, "default", 12_345, 7);
+        s.slow_ring.push(obs::RequestKind::ApproxTopK, "web", 99_000, 1_000);
+        match s.handle(Request::SlowQueries { max: 1 }) {
+            Response::SlowQueries { entries } => {
+                assert_eq!(entries.len(), 1);
+                assert_eq!(entries[0].kind, "approx_topk");
+                assert_eq!(entries[0].collection, "web");
+                assert_eq!(entries[0].total_us, 99_000);
+                assert_eq!(entries[0].candidates, 1_000);
+            }
             other => panic!("unexpected {other:?}"),
         }
     }

@@ -73,9 +73,18 @@
 //!   writes, and ApproxTopK candidate/probe counts, and all of it is
 //!   exported as Prometheus text (`--metrics-addr`, `crp metrics`,
 //!   the `MetricsText` frame) next to structured key=value logging
-//!   with a slow-query log and sampled request traces
+//!   with a slow-query log — mirrored into an in-memory ring served
+//!   over the wire (`crp slow`) — and sampled request traces
 //!   (`CRP_LOG`/`--log-level`, `--slow-query-us`, `--trace-sample`,
-//!   `crp stats --watch`). Python never runs on the request path.
+//!   `crp stats --watch`), plus `/healthz` + `/readyz` probes on the
+//!   metrics listener. The stack replicates
+//!   ([`coordinator::replication`]): read-only replicas bootstrap from
+//!   a wire-shipped snapshot then tail the primary's CRC-framed WAL
+//!   over the same protocol (`crp serve --replicate-from`), reconnect
+//!   with jittered exponential backoff, re-bootstrap automatically
+//!   past the primary's segment-retention lag cap, expose their lag as
+//!   gauges, and fail over via `crp promote`. Python never runs on the
+//!   request path.
 //!
 //! ## Analysis stack
 //!

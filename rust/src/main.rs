@@ -9,6 +9,8 @@
 //! * `bench-serve` — loadgen against a running service
 //! * `topk`        — arena scan demo: top-k over a synthetic sketch corpus
 //! * `metrics`     — dump a server's Prometheus-style exposition page
+//! * `promote`     — flip a read-only replica into a writable primary
+//! * `slow`        — dump a server's in-memory slow-query ring
 //! * `artifacts`   — list/verify AOT artifacts
 //! * `estimate`    — one-shot similarity estimation demo
 //!
@@ -160,6 +162,14 @@ COMMANDS:
                [--log-level L]        error|warn|info|debug (overrides CRP_LOG)
                [--slow-query-us N]    log requests slower than N us (0 = off)
                [--trace-sample N]     debug-trace every Nth request (0 = off)
+               [--conn-timeout-ms N]  per-connection socket read/write
+                 timeout; an idle client is disconnected after N ms
+                 (0 = off, the default)
+               [--replicate-from A]   run as a read-only replica of the
+                 primary at A (in-memory only; no --data-dir/--snapshot)
+               [--repl-lag-cap B]     replication lag cap in bytes: the
+                 primary retires WAL segments past it (replica re-
+                 bootstraps), and a replica over it reports not-ready
   collection   create --addr A --name N --scheme S --w W --k K --seed X
                       [--checkpoint-every N]  per-collection checkpoint
                       cadence (0 = the server's global --checkpoint-every)
@@ -175,6 +185,10 @@ COMMANDS:
   metrics      --addr A   dump the full Prometheus-style exposition
                page over the protocol (same text --metrics-addr
                serves over HTTP)
+  promote      --addr A   flip a replica into a writable primary
+               (no-op with a note if the server never replicated)
+  slow         --addr A [--max N]   dump the server's slow-query ring
+               (most recent N entries; 0 or omitted = the whole ring)
   register     --addr A [--collection C] --id I (--vec \"f,f,...\" | --dim D --vec-seed X)
                register one vector over the wire (namespaced)
   recover      --snapshot F --wal-dir D   replay a snapshot + WAL offline
@@ -259,7 +273,26 @@ OBSERVABILITY:
   exactly one `target=crp::slow_query` warn line carrying the request
   kind, collection, candidate count, scan-kernel tier, and the
   decode/handle/write stage breakdown; --trace-sample N emits the same
-  fields at debug level for every Nth (non-slow) request.
+  fields at debug level for every Nth (non-slow) request. The last 128
+  slow queries are also kept in an in-memory ring served by `crp slow`.
+
+REPLICATION:
+  `crp serve --replicate-from PRIMARY` runs a read-only replica: it
+  bootstraps every collection from a primary snapshot (CRPSNAP2 over
+  the wire), then tails the primary's WAL in CRC-checked chunks and
+  applies records through the same ingest path recovery uses — so a
+  caught-up replica answers Knn/TopK/ApproxTopK/Estimate byte-
+  identically to the primary. Writes are rejected with a redirect to
+  the primary until `crp promote` flips the replica writable (manual
+  failover). The link self-heals: lost connections reconnect with
+  jittered exponential backoff, torn or corrupt chunks are rejected
+  wholesale and re-fetched, and a replica that falls behind the
+  primary's retained WAL (bounded by --repl-lag-cap, default 256 MiB)
+  re-bootstraps from a fresh snapshot automatically. Lag is visible as
+  crp_replication_* gauges on /metrics, in `crp stats`, and through
+  GET /readyz (503 while bootstrapping or over the cap); the primary
+  never deletes a WAL segment an attached replica still needs unless
+  retention would exceed the cap.
 ";
 
 fn main() -> crp::Result<()> {
@@ -365,6 +398,18 @@ fn main() -> crp::Result<()> {
             );
             let data_dir = a.get_opt("data-dir").map(std::path::PathBuf::from);
             let durability = durability_config(&a, checkpoint_every, fsync)?;
+            let conn_timeout_ms: u64 = a.get("conn-timeout-ms", 0u64)?;
+            let replicate_from = a.get_opt("replicate-from").map(str::to_string);
+            let repl_lag_cap: u64 = a.get(
+                "repl-lag-cap",
+                crp::coordinator::durability::DEFAULT_REPL_LAG_CAP,
+            )?;
+            if let Some(primary) = &replicate_from {
+                eprintln!(
+                    "replication: read-only replica of {primary} \
+                     (lag cap {repl_lag_cap} bytes; `crp promote` to fail over)"
+                );
+            }
             if let Some(root) = &data_dir {
                 anyhow::ensure!(
                     durability.is_none(),
@@ -403,13 +448,17 @@ fn main() -> crp::Result<()> {
                 log_level: a.get_opt("log-level").map(str::to_string),
                 slow_query_us: a.get("slow-query-us", 0u64)?,
                 trace_sample: a.get("trace-sample", 0u64)?,
+                conn_timeout: (conn_timeout_ms > 0)
+                    .then(|| std::time::Duration::from_millis(conn_timeout_ms)),
+                replicate_from,
+                repl_lag_cap,
                 ..Default::default()
             };
             crp::coordinator::serve(Arc::new(projector), server_cfg, None)?;
         }
         "collection" => {
             let addr = a.get_str("addr", "127.0.0.1:7474");
-            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            let mut client = crp::coordinator::SketchClient::connect_with_retry(&addr, 5)?;
             match a.sub.as_deref() {
                 Some("create") => {
                     let name = a.get_str("name", "");
@@ -491,7 +540,7 @@ fn main() -> crp::Result<()> {
                 }
             };
             let dim = vector.len();
-            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            let mut client = crp::coordinator::SketchClient::connect_with_retry(&addr, 5)?;
             client.register_in(collection.as_deref(), &id, vector)?;
             println!(
                 "registered {id:?} (dim {dim}) in collection {:?}",
@@ -550,7 +599,7 @@ fn main() -> crp::Result<()> {
         }
         "stats" => {
             let addr = a.get_str("addr", "127.0.0.1:7474");
-            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            let mut client = crp::coordinator::SketchClient::connect_with_retry(&addr, 5)?;
             if a.flag("watch") {
                 loop {
                     let st = client.stats_detailed()?;
@@ -567,8 +616,37 @@ fn main() -> crp::Result<()> {
         }
         "metrics" => {
             let addr = a.get_str("addr", "127.0.0.1:7474");
-            let mut client = crp::coordinator::SketchClient::connect(&addr)?;
+            let mut client = crp::coordinator::SketchClient::connect_with_retry(&addr, 5)?;
             print!("{}", client.metrics_text()?);
+        }
+        "promote" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let mut client = crp::coordinator::SketchClient::connect_with_retry(&addr, 5)?;
+            if client.promote()? {
+                println!("promoted: {addr} now accepts writes");
+            } else {
+                println!("{addr} was already a writable primary (no-op)");
+            }
+        }
+        "slow" => {
+            let addr = a.get_str("addr", "127.0.0.1:7474");
+            let max: u32 = a.get("max", 0u32)?;
+            let mut client = crp::coordinator::SketchClient::connect_with_retry(&addr, 5)?;
+            let entries = client.slow_queries(max)?;
+            if entries.is_empty() {
+                println!("slow-query ring is empty (is --slow-query-us set on the server?)");
+            } else {
+                println!(
+                    "{:<8} {:<16} {:<24} {:>12} {:>12}",
+                    "seq", "request", "collection", "total_us", "candidates"
+                );
+                for e in entries {
+                    println!(
+                        "{:<8} {:<16} {:<24} {:>12} {:>12}",
+                        e.seq, e.kind, e.collection, e.total_us, e.candidates
+                    );
+                }
+            }
         }
         "topk" => {
             let top: usize = a.get("top", 10)?;
@@ -697,6 +775,19 @@ fn print_stats(st: &crp::coordinator::protocol::StatsSnapshot) {
     println!("maintenance_wakeups:  {}", st.maintenance_wakeups);
     println!("connections:          {}", st.connections);
     println!("collections:          {}", st.collections);
+    if let Some(r) = &st.replication {
+        println!(
+            "replication:          {} of {} (lag {} bytes / {} records, {:.1}s behind, \
+             {} bootstrap(s), {} reconnect(s))",
+            if r.active { "replica" } else { "promoted primary" },
+            r.primary,
+            r.lag_bytes,
+            r.lag_records,
+            r.lag_seconds,
+            r.bootstraps,
+            r.reconnects
+        );
+    }
     if !st.per_request.is_empty() {
         println!(
             "\n{:<16} {:>10} {:>12} {:>10} {:>10}",
@@ -842,7 +933,7 @@ fn run_topk_remote(
     probes: u32,
 ) -> crp::Result<()> {
     use crp::mathx::NormalSampler;
-    let mut client = crp::coordinator::SketchClient::connect(addr)?;
+    let mut client = crp::coordinator::SketchClient::connect_with_retry(addr, 5)?;
     let mut ns = NormalSampler::new(seed, 3);
     let vectors: Vec<Vec<f32>> = (0..queries.max(1))
         .map(|_| (0..dim).map(|_| ns.next() as f32).collect())
@@ -982,7 +1073,7 @@ fn bench_queries(
     probes: u32,
 ) -> crp::Result<()> {
     use crp::mathx::NormalSampler;
-    let mut client = crp::coordinator::SketchClient::connect(addr)?;
+    let mut client = crp::coordinator::SketchClient::connect_with_retry(addr, 5)?;
     let mut ns = NormalSampler::new(777, 5);
     let t0 = std::time::Instant::now();
     let mut sent = 0usize;
@@ -1029,7 +1120,7 @@ fn bench_serve(
         let addr = addr.to_string();
         let collection = collection.clone();
         handles.push(std::thread::spawn(move || -> crp::Result<Vec<u64>> {
-            let mut client = SketchClient::connect(&addr)?;
+            let mut client = SketchClient::connect_with_retry(&addr, 5)?;
             let mut ns = NormalSampler::new(c as u64, 1);
             let mut lat_us: Vec<u64> = Vec::with_capacity(per);
             for i in 0..per {

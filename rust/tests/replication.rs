@@ -1,0 +1,586 @@
+//! Fault-injection harness for WAL-shipping replication: snapshot
+//! bootstrap + catch-up, `kill -9` the primary and promote the replica
+//! (byte-identical to a restarted primary), a TCP proxy shim that
+//! truncates / drops / delays the replication stream (the replica must
+//! reconnect with bounded backoff and never apply a torn record), and
+//! the lag-cap path where the primary retires WAL a slow replica still
+//! needs and the replica re-bootstraps from a fresh snapshot.
+//!
+//! Run standalone with `cargo test --release -q replication` (CI does).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crp::coordinator::durability::DurabilityConfig;
+use crp::coordinator::maintenance::MaintenanceConfig;
+use crp::coordinator::protocol::{Request, Response};
+use crp::coordinator::server::{serve, ServerConfig, ServiceState};
+use crp::coordinator::store::SketchStore;
+use crp::coordinator::{FsyncPolicy, SketchClient};
+use crp::mathx::Pcg64;
+use crp::projection::{ProjectionConfig, Projector};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("crp_repl_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn projector(k: usize) -> Arc<Projector> {
+    Arc::new(Projector::new_cpu(ProjectionConfig {
+        k,
+        seed: 7,
+        ..Default::default()
+    }))
+}
+
+/// Primary config: durable `default` collection, explicit checkpoints
+/// only, no background maintenance cadence — deterministic WAL growth.
+fn primary_cfg(dir: &Path) -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        durability: Some(DurabilityConfig {
+            snapshot: dir.join("snapshot.bin"),
+            wal_dir: dir.join("wal"),
+            checkpoint_every: 0,
+            fsync: FsyncPolicy::Os,
+        }),
+        maintenance: MaintenanceConfig {
+            tick: Duration::from_secs(60),
+        },
+        ..Default::default()
+    }
+}
+
+/// Replica config pulling from `primary` — in-memory (replication
+/// forbids local durability), tight poll/backoff so tests converge
+/// fast.
+fn replica_cfg(primary: &str) -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        replicate_from: Some(primary.to_string()),
+        repl_poll: Duration::from_millis(10),
+        repl_backoff_min: Duration::from_millis(10),
+        repl_backoff_max: Duration::from_millis(100),
+        ..Default::default()
+    }
+}
+
+fn spawn_server(cfg: ServerConfig, k: usize) -> String {
+    let projector = projector(k);
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    rx.recv()
+        .expect("server thread exited before reporting its bound address")
+        .to_string()
+}
+
+fn vec_of(g: &mut Pcg64, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| g.next_f64() as f32 - 0.5).collect()
+}
+
+/// Sorted `(id, raw words)` dump — the byte-for-byte comparison basis.
+fn dump(store: &SketchStore) -> Vec<(String, Vec<u64>)> {
+    let mut out = Vec::new();
+    store.for_each(|id, codes| out.push((id.to_string(), codes.words().to_vec())));
+    out.sort();
+    out
+}
+
+/// Wait until `pred` holds or the deadline trips (fail with `what`).
+fn wait_for(what: &str, timeout: Duration, mut pred: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !pred() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Block until the replica has bootstrapped and drained its lag to
+/// zero with `rows` rows visible.
+fn wait_caught_up(replica: &ServiceState, rows: usize, what: &str) {
+    let state = replica.replica.as_ref().expect("replica state").clone();
+    let store = replica.store.clone();
+    wait_for(what, Duration::from_secs(30), move || {
+        state.ready() && state.lag_bytes() == 0 && state.lag_records() == 0 && store.len() == rows
+    });
+}
+
+// ---------------------------------------------------------------------
+// Fault-injection proxy
+// ---------------------------------------------------------------------
+
+/// Shared dials for the proxy; flipped mid-test to inject faults.
+struct ProxyCtl {
+    /// Truncate: kill a connection after this many primary→replica
+    /// bytes (0 = unlimited). Odd values land mid-frame on purpose.
+    cut_after: AtomicU64,
+    /// Blackhole: drop every active connection and refuse new ones
+    /// while set (a flapping network / dead primary).
+    drop_all: AtomicBool,
+    /// Latency injected per primary→replica read, in milliseconds.
+    delay_ms: AtomicU64,
+    /// Connections accepted so far (counts reconnect attempts).
+    conns: AtomicU64,
+}
+
+impl ProxyCtl {
+    fn new() -> Arc<ProxyCtl> {
+        Arc::new(ProxyCtl {
+            cut_after: AtomicU64::new(0),
+            drop_all: AtomicBool::new(false),
+            delay_ms: AtomicU64::new(0),
+            conns: AtomicU64::new(0),
+        })
+    }
+}
+
+/// A TCP shim between replica and primary that can truncate, drop, and
+/// delay the stream. Dropping the proxy stops the accept loop.
+struct Proxy {
+    addr: SocketAddr,
+    ctl: Arc<ProxyCtl>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Proxy {
+    fn spawn(upstream: String) -> Proxy {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ctl = ProxyCtl::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let (ctl2, stop2) = (ctl.clone(), stop.clone());
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((down, _)) => {
+                        if ctl2.drop_all.load(Ordering::Relaxed) {
+                            drop(down); // refused: network is down
+                            continue;
+                        }
+                        ctl2.conns.fetch_add(1, Ordering::Relaxed);
+                        let Ok(up) = TcpStream::connect(&upstream) else {
+                            continue;
+                        };
+                        pump_pair(down, up, ctl2.clone(), stop2.clone());
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Proxy {
+            addr,
+            ctl,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+}
+
+impl Drop for Proxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Two pump threads per connection; either side closing (or a fault
+/// dial firing) shuts the whole pair down so the replica sees a clean
+/// stream loss, never a hang.
+fn pump_pair(down: TcpStream, up: TcpStream, ctl: Arc<ProxyCtl>, stop: Arc<AtomicBool>) {
+    let (d2, u2) = (down.try_clone().unwrap(), up.try_clone().unwrap());
+    // replica → primary: requests, forwarded verbatim.
+    {
+        let (ctl, stop) = (ctl.clone(), stop.clone());
+        std::thread::spawn(move || pump(down, up, ctl, stop, false));
+    }
+    // primary → replica: responses, where truncation and delay bite.
+    std::thread::spawn(move || pump(u2, d2, ctl, stop, true));
+}
+
+fn pump(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    ctl: Arc<ProxyCtl>,
+    stop: Arc<AtomicBool>,
+    faulted: bool,
+) {
+    from.set_read_timeout(Some(Duration::from_millis(30))).unwrap();
+    let close = |a: &TcpStream, b: &TcpStream| {
+        let _ = a.shutdown(Shutdown::Both);
+        let _ = b.shutdown(Shutdown::Both);
+    };
+    let mut sent = 0u64;
+    let mut buf = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::Relaxed) || ctl.drop_all.load(Ordering::Relaxed) {
+            close(&from, &to);
+            return;
+        }
+        let n = match from.read(&mut buf) {
+            Ok(0) => {
+                close(&from, &to);
+                return;
+            }
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => {
+                close(&from, &to);
+                return;
+            }
+        };
+        if faulted {
+            let delay = ctl.delay_ms.load(Ordering::Relaxed);
+            if delay > 0 {
+                std::thread::sleep(Duration::from_millis(delay));
+            }
+            let cut = ctl.cut_after.load(Ordering::Relaxed);
+            if cut > 0 {
+                // Forward only up to the byte budget, then sever both
+                // directions — a mid-frame truncation.
+                let left = cut.saturating_sub(sent) as usize;
+                if left < n {
+                    let _ = to.write_all(&buf[..left]);
+                    close(&from, &to);
+                    return;
+                }
+            }
+        }
+        sent += n as u64;
+        if to.write_all(&buf[..n]).is_err() {
+            close(&from, &to);
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------
+
+/// The acceptance pin: a replica bootstrapped from a live primary and
+/// caught up through mid-ingest writes, then promoted after the
+/// primary "dies", answers Knn/TopK/ApproxTopK/Estimate byte-
+/// identically to a primary restarted from disk (`kill -9` semantics:
+/// state rebuilt from snapshot + WAL with no graceful shutdown).
+#[test]
+fn replication_kill9_promote_equals_restarted_primary() {
+    let dir = temp_dir("kill9");
+    let p_cfg = primary_cfg(&dir);
+    let p_addr = spawn_server(p_cfg.clone(), 128);
+    let mut client = SketchClient::connect_with_retry(&p_addr, 5).unwrap();
+    let mut g = Pcg64::new(0xFA11, 0);
+
+    // Acked writes before the replica exists: singles + bulk + removes.
+    for i in 0..80 {
+        client.register(&format!("v{i:03}"), vec_of(&mut g, 24)).unwrap();
+    }
+    let ids: Vec<String> = (0..40).map(|i| format!("b{i:02}")).collect();
+    let vectors: Vec<Vec<f32>> = (0..40).map(|_| vec_of(&mut g, 24)).collect();
+    assert_eq!(client.register_batch_in(None, ids, vectors).unwrap(), 40);
+    for i in (0..30).step_by(3) {
+        client.remove(&format!("v{i:03}")).unwrap();
+    }
+
+    // Replica comes up cold: snapshot bootstrap, then WAL tail.
+    let replica = ServiceState::open(projector(128), &replica_cfg(&p_addr)).unwrap();
+    wait_caught_up(&replica, 110, "initial bootstrap + catch-up");
+    let r_state = replica.replica.as_ref().unwrap().clone();
+    assert!(r_state.bootstraps() >= 1);
+
+    // Mid-ingest: more acked writes (overwrites included) while the
+    // replica tails the WAL.
+    for i in 0..40 {
+        client.register(&format!("w{i:03}"), vec_of(&mut g, 24)).unwrap();
+    }
+    client.register("v001", vec_of(&mut g, 24)).unwrap(); // overwrite
+    client.remove("b07").unwrap();
+    wait_caught_up(&replica, 149, "mid-ingest catch-up");
+
+    // kill -9: rebuild a primary purely from disk while the original
+    // process is still alive — exactly a crashed primary's leftovers.
+    let restarted = ServiceState::open(projector(128), &p_cfg).unwrap();
+    assert_eq!(dump(&replica.store), dump(&restarted.store));
+
+    // Fail over: the replica becomes the writable primary.
+    match replica.handle(Request::Promote) {
+        Response::Promoted { was_replica } => assert!(was_replica),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Every read path answers byte-identically.
+    for q in 0..5 {
+        let v = vec_of(&mut g, 24);
+        assert_eq!(
+            replica.handle(Request::Knn {
+                vector: v.clone(),
+                n: 10
+            }),
+            restarted.handle(Request::Knn { vector: v, n: 10 }),
+            "knn query {q}"
+        );
+    }
+    let batch: Vec<Vec<f32>> = (0..4).map(|_| vec_of(&mut g, 24)).collect();
+    assert_eq!(
+        replica.handle(Request::TopK {
+            vectors: batch.clone(),
+            n: 5
+        }),
+        restarted.handle(Request::TopK {
+            vectors: batch.clone(),
+            n: 5
+        })
+    );
+    assert_eq!(
+        replica.handle(Request::ApproxTopK {
+            vectors: batch.clone(),
+            n: 5,
+            probes: 2
+        }),
+        restarted.handle(Request::ApproxTopK {
+            vectors: batch,
+            n: 5,
+            probes: 2
+        })
+    );
+    for (a, b) in [("v001", "v002"), ("b00", "b39"), ("w000", "v050")] {
+        assert_eq!(
+            replica.handle(Request::Estimate {
+                a: a.into(),
+                b: b.into()
+            }),
+            restarted.handle(Request::Estimate {
+                a: a.into(),
+                b: b.into()
+            }),
+            "{a}/{b}"
+        );
+    }
+
+    // Promoted: writes are accepted again.
+    match replica.handle(Request::Register {
+        id: "post-failover".into(),
+        vector: vec_of(&mut g, 24),
+    }) {
+        Response::Registered { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The harness proper: the replication stream runs through a proxy
+/// that truncates responses mid-frame, blackholes the link, and
+/// injects latency. The replica must reconnect with bounded backoff,
+/// never apply a torn record, and converge to the primary's exact
+/// byte state once the network heals.
+#[test]
+fn replication_rides_out_truncation_drops_and_flapping() {
+    let dir = temp_dir("faults");
+    let p_cfg = primary_cfg(&dir);
+    let p_addr = spawn_server(p_cfg.clone(), 64);
+    let mut client = SketchClient::connect_with_retry(&p_addr, 5).unwrap();
+    let mut g = Pcg64::new(0xBAD, 1);
+    for i in 0..120 {
+        client.register(&format!("v{i:03}"), vec_of(&mut g, 16)).unwrap();
+    }
+
+    let proxy = Proxy::spawn(p_addr.clone());
+    // Phase 1: every primary→replica stream dies after ~600 bytes —
+    // mid-bootstrap, mid-frame. The replica must keep retrying.
+    proxy.ctl.cut_after.store(600, Ordering::Relaxed);
+    let replica = ServiceState::open(projector(64), &replica_cfg(&proxy.addr())).unwrap();
+    let ctl = proxy.ctl.clone();
+    wait_for("several truncated attempts", Duration::from_secs(30), || {
+        ctl.conns.load(Ordering::Relaxed) >= 4
+    });
+    // Torn transfers must never leak partial state into the store.
+    assert_eq!(replica.store.len(), 0, "torn bootstrap must apply nothing");
+
+    // Heal: the very same replica (no restart) bootstraps and catches
+    // up through reconnect + backoff alone.
+    proxy.ctl.cut_after.store(0, Ordering::Relaxed);
+    wait_caught_up(&replica, 120, "catch-up after truncation heals");
+
+    // Phase 2: latency only — a slow network is not a fault.
+    proxy.ctl.delay_ms.store(20, Ordering::Relaxed);
+    for i in 0..20 {
+        client.register(&format!("s{i:02}"), vec_of(&mut g, 16)).unwrap();
+    }
+    wait_caught_up(&replica, 140, "catch-up through injected latency");
+    proxy.ctl.delay_ms.store(0, Ordering::Relaxed);
+
+    // Phase 3: a flapping network — repeated blackhole windows with
+    // acked writes landing while the link is down.
+    for round in 0..3usize {
+        proxy.ctl.drop_all.store(true, Ordering::Relaxed);
+        for i in 0..10 {
+            client
+                .register(&format!("f{round}{i:02}"), vec_of(&mut g, 16))
+                .unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(150));
+        proxy.ctl.drop_all.store(false, Ordering::Relaxed);
+        wait_caught_up(&replica, 140 + (round + 1) * 10, "catch-up after flap");
+    }
+    let r_state = replica.replica.as_ref().unwrap();
+    assert!(
+        r_state.reconnects() >= 3,
+        "flapping must surface as reconnects (saw {})",
+        r_state.reconnects()
+    );
+
+    // Convergence is byte-exact against the primary's durable state.
+    let restarted = ServiceState::open(projector(64), &p_cfg).unwrap();
+    assert_eq!(dump(&replica.store), dump(&restarted.store));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The lag-cap path: a replica that falls behind further than
+/// `--repl-lag-cap` loses its WAL position (the primary retires the
+/// pinned segments rather than hoard unbounded log) and must recover
+/// by re-bootstrapping from a fresh snapshot — automatically.
+#[test]
+fn replication_lag_cap_forces_rebootstrap() {
+    let dir = temp_dir("lagcap");
+    let mut p_cfg = primary_cfg(&dir);
+    p_cfg.repl_lag_cap = 4096; // tiny: a few hundred records overflow it
+    let p_addr = spawn_server(p_cfg.clone(), 64);
+    let mut client = SketchClient::connect_with_retry(&p_addr, 5).unwrap();
+    let mut g = Pcg64::new(0xCAB, 2);
+    for i in 0..50 {
+        client.register(&format!("v{i:03}"), vec_of(&mut g, 16)).unwrap();
+    }
+
+    let proxy = Proxy::spawn(p_addr.clone());
+    let mut r_cfg = replica_cfg(&proxy.addr());
+    r_cfg.repl_lag_cap = 4096;
+    let replica = ServiceState::open(projector(64), &r_cfg).unwrap();
+    wait_caught_up(&replica, 50, "initial catch-up");
+    let r_state = replica.replica.as_ref().unwrap().clone();
+    let initial_bootstraps = r_state.bootstraps();
+    assert!(initial_bootstraps >= 1);
+
+    // Cut the link, then push far more WAL than the cap allows and
+    // checkpoint: the primary must retire the replica's pinned
+    // segments instead of holding unbounded log.
+    proxy.ctl.drop_all.store(true, Ordering::Relaxed);
+    for i in 0..600 {
+        client.register(&format!("z{i:04}"), vec_of(&mut g, 16)).unwrap();
+    }
+    client.persist().unwrap(); // checkpoint → rotate + gated retire
+
+    // Heal: the replica's resume position is gone; the primary answers
+    // with a bootstrap in the same round trip and the replica rebuilds.
+    proxy.ctl.drop_all.store(false, Ordering::Relaxed);
+    wait_caught_up(&replica, 650, "re-bootstrap past the lag cap");
+    assert!(
+        r_state.bootstraps() > initial_bootstraps,
+        "a lag-capped replica must re-bootstrap (still {} bootstrap(s))",
+        r_state.bootstraps()
+    );
+
+    let restarted = ServiceState::open(projector(64), &p_cfg).unwrap();
+    assert_eq!(dump(&replica.store), dump(&restarted.store));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A replica served over real TCP: answers reads, rejects writes with
+/// a redirect to the primary, reports lag through `StatsDetailed`, and
+/// flips writable on `crp promote` — plus /healthz and /readyz on the
+/// metrics listener.
+#[test]
+fn replica_over_tcp_serves_reads_rejects_writes_and_promotes() {
+    let dir = temp_dir("tcp");
+    let p_addr = spawn_server(primary_cfg(&dir), 64);
+    let mut p_client = SketchClient::connect_with_retry(&p_addr, 5).unwrap();
+    let mut g = Pcg64::new(0x7C9, 3);
+    for i in 0..50 {
+        p_client.register(&format!("v{i:03}"), vec_of(&mut g, 16)).unwrap();
+    }
+
+    // Pick a port for the replica's metrics/health listener (bind :0,
+    // note the port, release it — the tiny reuse race is acceptable in
+    // tests).
+    let metrics_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut r_cfg = replica_cfg(&p_addr);
+    r_cfg.metrics_addr = Some(metrics_addr.clone());
+    let r_addr = spawn_server(r_cfg, 64);
+    let mut r_client = SketchClient::connect_with_retry(&r_addr, 5).unwrap();
+
+    // Reads always answered; writes rejected with the redirect.
+    r_client.ping().unwrap();
+    let err = r_client
+        .register("nope", vec_of(&mut g, 16))
+        .expect_err("replica must reject writes")
+        .to_string();
+    assert!(err.contains("read-only"), "{err}");
+    assert!(err.contains(&p_addr), "redirect must name the primary: {err}");
+    assert!(err.contains("promote"), "{err}");
+
+    // Catch-up is observable through the replication stats tail.
+    wait_for("replica catch-up over TCP", Duration::from_secs(30), || {
+        let st = r_client.stats_detailed().unwrap();
+        let caught = st.per_collection.iter().any(|c| c.rows == 50);
+        let r = st.replication.expect("replica must report replication");
+        assert!(r.active);
+        assert_eq!(r.primary, p_addr);
+        caught && r.lag_bytes == 0 && r.lag_records == 0
+    });
+    // A caught-up replica answers the same top hit as the primary.
+    let q = vec_of(&mut g, 16);
+    assert_eq!(
+        r_client.knn(q.clone(), 5).unwrap(),
+        p_client.knn(q, 5).unwrap()
+    );
+
+    // Health endpoints on the metrics listener.
+    let http_get = |path: &str| -> String {
+        let mut s = TcpStream::connect(&metrics_addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+    assert!(http_get("/healthz").starts_with("HTTP/1.1 200 OK"));
+    let ready = http_get("/readyz");
+    assert!(ready.starts_with("HTTP/1.1 200 OK"), "{ready}");
+    assert!(ready.contains("replica of"), "{ready}");
+    let page = http_get("/metrics");
+    assert!(page.contains("crp_replication_lag_bytes 0"), "missing lag gauge");
+    assert!(page.contains("crp_replication_active 1"), "missing active gauge");
+
+    // Promote over TCP: writes start succeeding, idempotently.
+    assert!(r_client.promote().unwrap());
+    r_client.register("post-promote", vec_of(&mut g, 16)).unwrap();
+    assert!(!r_client.promote().unwrap(), "second promote is a no-op");
+    let still_ready = http_get("/readyz");
+    assert!(still_ready.starts_with("HTTP/1.1 200 OK"), "{still_ready}");
+    std::fs::remove_dir_all(&dir).ok();
+}
