@@ -65,6 +65,24 @@ impl Bench {
         self.results.push((name.to_string(), median, throughput));
     }
 
+    /// Record an externally measured result (latency percentiles, whole
+    /// phases timed by the caller) into the same report and JSON
+    /// trajectory [`Bench::run`] feeds. Honors the substring filter.
+    #[allow(dead_code)]
+    pub fn record(&mut self, name: &str, ns_per_iter: f64, items_per_sec: f64) {
+        if let Some(fil) = &self.filter {
+            if !name.contains(fil.as_str()) {
+                return;
+            }
+        }
+        println!(
+            "{name:<52} {:>14} ns/iter {:>16} items/s",
+            fmt_thousands(ns_per_iter as u64),
+            fmt_thousands(items_per_sec as u64)
+        );
+        self.results.push((name.to_string(), ns_per_iter, items_per_sec));
+    }
+
     pub fn finish(&self) {
         println!("\n{} benchmarks run", self.results.len());
     }

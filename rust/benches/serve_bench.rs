@@ -4,10 +4,12 @@
 #[path = "harness/mod.rs"]
 mod harness;
 
-use crp::coordinator::server::{serve, ServerConfig};
+use crp::coordinator::server::{serve, ServerConfig, ServerMode};
 use crp::coordinator::SketchClient;
 use crp::projection::{ProjectionConfig, Projector};
+use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::Instant;
 
 fn main() {
     let mut b = harness::Bench::new();
@@ -226,8 +228,106 @@ batching-policy ablation (8 closed-loop clients, dim 256):");
         );
     }
 
+    // Connection scaling: ping RTT percentiles at a fixed offered load
+    // while N open connections are held, per serve mode. Thread mode
+    // may degrade or refuse outright at the top end (one OS thread per
+    // connection); the reactor front-end is expected to stay flat —
+    // both outcomes are recorded.
+    {
+        let raised = crp::coordinator::reactor::raise_nofile_limit();
+        println!("\nconnection scaling (held connections vs ping RTT; nofile limit {raised:?}):");
+        println!(
+            "{:<10} {:>8} {:>12} {:>12} {:>12}",
+            "mode", "conns", "req/s", "p50_us", "p99_us"
+        );
+        for mode in [ServerMode::Threads, ServerMode::Reactor] {
+            for &conns in &[64usize, 512, 4096] {
+                match conn_scale_run(mode, conns) {
+                    Ok((rps, p50, p99)) => {
+                        println!(
+                            "{:<10} {:>8} {:>12.0} {:>12} {:>12}",
+                            mode.label(),
+                            conns,
+                            rps,
+                            p50 / 1000,
+                            p99 / 1000
+                        );
+                        let name = format!("serve/conn-scale/{}/{conns}", mode.label());
+                        b.record(&format!("{name}/p50"), p50 as f64, rps);
+                        b.record(&format!("{name}/p99"), p99 as f64, rps);
+                    }
+                    Err(e) => println!("{:<10} {:>8}  failed: {e}", mode.label(), conns),
+                }
+            }
+        }
+    }
+
     b.finish_json(std::path::Path::new(concat!(
         env!("CARGO_MANIFEST_DIR"),
         "/../BENCH_scan.json"
     )));
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
+}
+
+/// Hold `conns` open connections against a fresh server in `mode` and
+/// drive a fixed load of ping round trips round-robin across them.
+/// Returns (req/s, p50 ns, p99 ns); any refusal (accept thread spawn,
+/// fd exhaustion, connection cap) surfaces as the error string.
+fn conn_scale_run(mode: ServerMode, conns: usize) -> Result<(f64, u64, u64), String> {
+    use crp::coordinator::protocol::{self, Request};
+
+    let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+        k: 256,
+        seed: 1,
+        ..Default::default()
+    }));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        server_mode: mode,
+        max_conns: conns + 8,
+        ..Default::default()
+    };
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    let addr = rx
+        .recv()
+        .map_err(|_| "server died before binding".to_string())?
+        .to_string();
+
+    let mut pool = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let s = TcpStream::connect(&addr).map_err(|e| format!("connect {i}/{conns}: {e}"))?;
+        s.set_nodelay(true).map_err(|e| e.to_string())?;
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .map_err(|e| e.to_string())?;
+        pool.push(s);
+    }
+
+    let ping = Request::Ping.encode();
+    let total = conns.max(3000);
+    let mut lat = Vec::with_capacity(total);
+    let mut frame = Vec::new();
+    let t0 = Instant::now();
+    for i in 0..total {
+        let s = &mut pool[i % conns];
+        let t = Instant::now();
+        protocol::write_frame(s, &ping).map_err(|e| format!("write: {e}"))?;
+        protocol::read_frame_into(s, &mut frame).map_err(|e| format!("read: {e}"))?;
+        lat.push(t.elapsed().as_nanos() as u64);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    lat.sort_unstable();
+    Ok((
+        total as f64 / elapsed,
+        percentile(&lat, 0.50),
+        percentile(&lat, 0.99),
+    ))
 }

@@ -53,6 +53,9 @@ pub struct SketchBatcher {
     tx: mpsc::Sender<Job>,
     pub coding: CodingParams,
     pub k: usize,
+    /// Shared with the worker: `sketch` raises the queue-depth gauge
+    /// before handing a job over, `flush` lowers it per executed batch.
+    metrics: Arc<Metrics>,
 }
 
 impl SketchBatcher {
@@ -66,23 +69,37 @@ impl SketchBatcher {
         let (tx, rx) = mpsc::channel::<Job>();
         let k = projector.cfg.k;
         let coding_worker = coding.clone();
+        let metrics_worker = metrics.clone();
         std::thread::Builder::new()
             .name("crp-batcher".into())
-            .spawn(move || batch_loop(rx, projector, coding_worker, cfg, metrics))
+            .spawn(move || batch_loop(rx, projector, coding_worker, cfg, metrics_worker))
             .expect("spawn batcher thread");
-        SketchBatcher { tx, coding, k }
+        SketchBatcher {
+            tx,
+            coding,
+            k,
+            metrics,
+        }
     }
 
     /// Submit a vector; blocks until its batch has been projected and
     /// coded. Dimension may vary per call (padded internally).
     pub fn sketch(&self, vector: Vec<f32>) -> crate::Result<PackedCodes> {
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Job {
-                vector,
-                resp: resp_tx,
-            })
-            .map_err(|_| anyhow::anyhow!("batcher worker gone"))?;
+        use std::sync::atomic::Ordering;
+        self.metrics
+            .batcher_queue_depth
+            .fetch_add(1, Ordering::Relaxed);
+        let sent = self.tx.send(Job {
+            vector,
+            resp: resp_tx,
+        });
+        if sent.is_err() {
+            self.metrics
+                .batcher_queue_depth
+                .fetch_sub(1, Ordering::Relaxed);
+            anyhow::bail!("batcher worker gone");
+        }
         resp_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("batcher dropped job"))
@@ -142,6 +159,9 @@ fn flush(
     let x = projector.project_ragged(pending.iter().map(|j| j.vector.as_slice()), b);
     // Count the batch before releasing waiters so a client that reads
     // stats immediately after its response sees its own work reflected.
+    metrics
+        .batcher_queue_depth
+        .fetch_sub(b as u64, std::sync::atomic::Ordering::Relaxed);
     metrics
         .batches_executed
         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);

@@ -48,6 +48,11 @@ pub enum ReplPull {
 pub struct SketchClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Response frames land here via `read_frame_into`, reusing one
+    /// allocation across calls — the replication applier tails the
+    /// primary's WAL through this client, so its steady-state pull
+    /// loop stops allocating a fresh `Vec` per chunk too.
+    recv_buf: Vec<u8>,
 }
 
 impl SketchClient {
@@ -57,6 +62,7 @@ impl SketchClient {
         Ok(SketchClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            recv_buf: Vec::new(),
         })
     }
 
@@ -85,8 +91,8 @@ impl SketchClient {
 
     fn call(&mut self, req: &Request) -> crate::Result<Response> {
         protocol::write_frame(&mut self.writer, &req.encode())?;
-        let frame = protocol::read_frame(&mut self.reader)?;
-        Response::decode(&frame)
+        protocol::read_frame_into(&mut self.reader, &mut self.recv_buf)?;
+        Response::decode(&self.recv_buf)
     }
 
     fn bail(resp: Response) -> anyhow::Error {

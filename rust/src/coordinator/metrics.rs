@@ -100,6 +100,28 @@ pub struct Metrics {
     /// Full-path latency per request kind, recorded once per request
     /// by the connection loop (decode → handle → encode+write).
     pub requests: super::obs::RequestHistograms,
+    /// Vectors currently queued at the sketch batcher (gauge: `sketch`
+    /// increments before handing work to the batch thread, `flush`
+    /// decrements per executed job). Nonzero under concurrent register
+    /// load in either serve mode.
+    pub batcher_queue_depth: AtomicU64,
+    /// Reactor front-end (all zero in thread mode): epoll_wait returns.
+    pub reactor_polls: AtomicU64,
+    /// Readiness events delivered across all reactor ticks.
+    pub reactor_ready_events: AtomicU64,
+    /// Frames parsed out of reactor read buffers (≥ requests answered:
+    /// pipelined clients land several frames per readiness event).
+    pub reactor_frames: AtomicU64,
+    /// Register/TopK groups the reactor fused into one bulk call.
+    pub reactor_coalesced_batches: AtomicU64,
+    /// Requests dispatched per reactor tick (power-of-two buckets, a
+    /// count histogram — the "µs" of [`LatencyHistogram`] reads as
+    /// "requests" here), recorded only for ticks that dispatched work.
+    pub reactor_dispatch_batch: LatencyHistogram,
+    /// High-water mark of any reactor connection's pending write
+    /// buffer, bytes (the backpressure trigger; updated via
+    /// `fetch_max`).
+    pub reactor_write_buffer_hwm: AtomicU64,
 }
 
 impl Metrics {
@@ -128,6 +150,23 @@ impl Metrics {
             maintenance_wakeups: self.maintenance_wakeups.load(Ordering::Relaxed),
             connections: self.connections.load(Ordering::Relaxed),
             ..Default::default()
+        }
+    }
+
+    /// The reactor/batcher section for `StatsDetailed` — filled in
+    /// both serve modes (thread mode reports zero reactor counters but
+    /// a live batcher queue depth, keeping the PR-6 follow-up series
+    /// observable everywhere).
+    pub fn reactor_stats(&self) -> super::protocol::ReactorStats {
+        super::protocol::ReactorStats {
+            ready_events: self.reactor_ready_events.load(Ordering::Relaxed),
+            polls: self.reactor_polls.load(Ordering::Relaxed),
+            frames: self.reactor_frames.load(Ordering::Relaxed),
+            coalesced_batches: self.reactor_coalesced_batches.load(Ordering::Relaxed),
+            p50_dispatch: self.reactor_dispatch_batch.percentile_us(0.50),
+            p99_dispatch: self.reactor_dispatch_batch.percentile_us(0.99),
+            write_buffer_hwm: self.reactor_write_buffer_hwm.load(Ordering::Relaxed),
+            batcher_queue_depth: self.batcher_queue_depth.load(Ordering::Relaxed),
         }
     }
 

@@ -10,7 +10,12 @@
 //!
 //! ```text
 //!  TCP (length-prefixed binary frames)
-//!   └── server  — bounded connection loop (--max-conns), frame codec
+//!   └── server  — front-end (--server-mode, --max-conns): blocking
+//!        │        thread-per-connection loop (the oracle, default) or
+//!        │        the epoll reactor (one thread, 10k+ connections,
+//!        │        pipelined zero-copy framing, Register/TopK
+//!        │        coalescing, write backpressure — see `reactor`);
+//!        │        byte-identical responses either way
 //!        └── router — request dispatch; legacy frames → "default",
 //!             │       Scoped frames → named collection
 //!             └── registry — named collections, created/dropped at
@@ -59,6 +64,7 @@ pub mod protocol;
 pub mod store;
 pub mod batcher;
 pub mod metrics;
+pub mod reactor;
 pub mod registry;
 pub mod server;
 pub mod client;
@@ -76,5 +82,5 @@ pub use registry::{
     Collection, CollectionOptions, CollectionSpec, Registry, RegistryConfig, DEFAULT_COLLECTION,
 };
 pub use replication::{ReplicaState, ReplicationConfig, Replicator};
-pub use server::{serve, ServerConfig};
+pub use server::{serve, ServerConfig, ServerMode};
 pub use store::{DrainSignal, SketchStore};

@@ -112,6 +112,36 @@ pub fn render(metrics: &Metrics, registry: &Registry, replica: Option<&ReplicaSt
     type_line(&mut out, "crp_collections", "gauge");
     gauge(&mut out, "crp_collections", "", registry.len() as u64);
 
+    // Reactor front-end + batcher pressure. Counters stay zero under
+    // `--server-mode threads`; the batcher queue depth is live in both
+    // modes. All are exported unconditionally so dashboards keep one
+    // query across modes.
+    for (name, v) in [
+        ("crp_reactor_polls", &metrics.reactor_polls),
+        ("crp_reactor_ready_events", &metrics.reactor_ready_events),
+        ("crp_reactor_frames", &metrics.reactor_frames),
+        ("crp_reactor_coalesced_batches", &metrics.reactor_coalesced_batches),
+    ] {
+        type_line(&mut out, name, "counter");
+        gauge(&mut out, name, "", v.load(Ordering::Relaxed));
+    }
+    for (name, v) in [
+        ("crp_reactor_write_buffer_hwm", &metrics.reactor_write_buffer_hwm),
+        ("crp_batcher_queue_depth", &metrics.batcher_queue_depth),
+    ] {
+        type_line(&mut out, name, "gauge");
+        gauge(&mut out, name, "", v.load(Ordering::Relaxed));
+    }
+    // Dispatch batch size per reactor tick (a count histogram on the
+    // same power-of-two buckets the latency series use).
+    type_line(&mut out, "crp_reactor_dispatch_batch_size", "histogram");
+    latency_hist(
+        &mut out,
+        "crp_reactor_dispatch_batch_size",
+        "",
+        &metrics.reactor_dispatch_batch,
+    );
+
     // Per-kind request counters + full-path latency histograms. The
     // counter duplicates each histogram's `_count` under the name
     // dashboards expect for rate() queries.
@@ -292,6 +322,13 @@ mod tests {
                 kind.label()
             );
         }
+        // Reactor + batcher series render (zeroed) even in thread mode.
+        assert!(text.contains("# TYPE crp_reactor_ready_events counter"));
+        assert!(text.contains("crp_reactor_ready_events 0"));
+        assert!(text.contains("crp_reactor_write_buffer_hwm 0"));
+        assert!(text.contains("crp_batcher_queue_depth 0"));
+        assert!(text.contains("# TYPE crp_reactor_dispatch_batch_size histogram"));
+        assert!(text.contains("crp_reactor_dispatch_batch_size_count 0"));
         assert!(text.contains("# TYPE crp_request_duration_us histogram"));
         assert!(text.contains("crp_request_duration_us_count{kind=\"knn\"} 2"));
         assert!(text.contains("crp_request_duration_us_sum{kind=\"knn\"} 5100"));

@@ -271,6 +271,43 @@ pub struct ReplicationStats {
     pub reconnects: u64,
 }
 
+/// Reactor front-end counters, as carried in the fourth optional
+/// `StatsDetailed` section. Unlike the earlier sections this one is
+/// introduced by [`REACTOR_SECTION_SENTINEL`] rather than position
+/// alone, because the replication section before it has no count or
+/// presence prefix of its own (it opens with a length-prefixed string,
+/// and the sentinel can never be a valid string length inside a frame
+/// bounded by [`MAX_FRAME`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReactorStats {
+    /// epoll readiness events delivered to the reactor so far.
+    pub ready_events: u64,
+    /// epoll_wait returns (reactor ticks).
+    pub polls: u64,
+    /// Frames parsed out of reactor read buffers (≥ requests answered:
+    /// pipelined clients land several frames per readiness event).
+    pub frames: u64,
+    /// Register/TopK groups the reactor fused into one bulk call.
+    pub coalesced_batches: u64,
+    /// Requests dispatched per tick, p50/p99 over non-idle ticks
+    /// (power-of-two buckets, like every histogram here).
+    pub p50_dispatch: u64,
+    pub p99_dispatch: u64,
+    /// High-water mark of any connection's pending write buffer, bytes
+    /// (the backpressure trigger).
+    pub write_buffer_hwm: u64,
+    /// Vectors currently queued at the sketch batcher (gauge; nonzero
+    /// in both serve modes — the PR-6 follow-up series).
+    pub batcher_queue_depth: u64,
+}
+
+/// Introduces the reactor section of a `Stats` frame. `u32::MAX` is
+/// impossible as the string length that would otherwise sit at this
+/// position (the replication section's `primary` field), since string
+/// lengths are validated against the payload size and no payload
+/// reaches 4 GiB under [`MAX_FRAME`].
+pub const REACTOR_SECTION_SENTINEL: u32 = u32::MAX;
+
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StatsSnapshot {
     pub registered: u64,
@@ -321,15 +358,27 @@ pub struct StatsSnapshot {
     /// the wire (as zero counts if need be). Primaries never carry it,
     /// so their `StatsDetailed` frames stay byte-identical to PR 6.
     pub replication: Option<ReplicationStats>,
+    /// Reactor front-end counters — `Some` only on `StatsDetailed`
+    /// answers from PR 8+ servers. Rides as a fourth section after
+    /// `replication`, introduced by [`REACTOR_SECTION_SENTINEL`] so
+    /// the decoder can tell it apart from a replication tail; its
+    /// presence forces the per-collection/per-request sections onto
+    /// the wire (as zero counts), but never fabricates a replication
+    /// section. Plain `Stats` answers never carry it.
+    pub reactor: Option<ReactorStats>,
 }
 
 // ---- encoding primitives ----------------------------------------------
 
-struct Enc(Vec<u8>);
+/// Byte sink for payload encoding. Borrows the caller's buffer so the
+/// reactor's write path can append frame after frame into one reused
+/// allocation; `encode()` hands it a fresh `Vec` and keeps its old
+/// signature.
+struct Enc<'a>(&'a mut Vec<u8>);
 
-impl Enc {
-    fn new(tag: u8) -> Self {
-        Enc(vec![tag])
+impl Enc<'_> {
+    fn tag(&mut self, t: u8) {
+        self.0.push(t);
     }
     fn u8(&mut self, v: u8) {
         self.0.push(v);
@@ -413,49 +462,52 @@ impl<'a> Dec<'a> {
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append this request's payload encoding (no length prefix) to
+    /// `out`, reusing its allocation. `encode` delegates here.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut e = Enc(out);
         match self {
             Request::Register { id, vector } => {
-                let mut e = Enc::new(0);
+                e.tag(0);
                 e.str(id);
                 e.f32s(vector);
-                e.0
             }
             Request::Estimate { a, b } => {
-                let mut e = Enc::new(1);
+                e.tag(1);
                 e.str(a);
                 e.str(b);
-                e.0
             }
             Request::EstimateVec { id, vector } => {
-                let mut e = Enc::new(2);
+                e.tag(2);
                 e.str(id);
                 e.f32s(vector);
-                e.0
             }
             Request::Knn { vector, n } => {
-                let mut e = Enc::new(3);
+                e.tag(3);
                 e.f32s(vector);
                 e.u32(*n);
-                e.0
             }
-            Request::Stats => Enc::new(4).0,
+            Request::Stats => e.tag(4),
             Request::StatsDetailed => {
-                let mut e = Enc::new(4);
+                e.tag(4);
                 e.u8(1);
-                e.0
             }
-            Request::Ping => Enc::new(5).0,
+            Request::Ping => e.tag(5),
             Request::TopK { vectors, n } => {
-                let mut e = Enc::new(6);
+                e.tag(6);
                 e.u32(vectors.len() as u32);
                 for v in vectors {
                     e.f32s(v);
                 }
                 e.u32(*n);
-                e.0
             }
             Request::RegisterBatch { ids, vectors } => {
-                let mut e = Enc::new(7);
+                e.tag(7);
                 e.u32(ids.len() as u32);
                 for id in ids {
                     e.str(id);
@@ -464,14 +516,12 @@ impl Request {
                 for v in vectors {
                     e.f32s(v);
                 }
-                e.0
             }
             Request::Remove { id } => {
-                let mut e = Enc::new(8);
+                e.tag(8);
                 e.str(id);
-                e.0
             }
-            Request::Persist => Enc::new(9).0,
+            Request::Persist => e.tag(9),
             Request::CreateCollection {
                 name,
                 scheme,
@@ -481,7 +531,7 @@ impl Request {
                 seed,
                 checkpoint_every,
             } => {
-                let mut e = Enc::new(10);
+                e.tag(10);
                 e.str(name);
                 e.u8(scheme.wire_code());
                 e.f64(*w);
@@ -489,50 +539,44 @@ impl Request {
                 e.u64(*k);
                 e.u64(*seed);
                 e.u64(*checkpoint_every);
-                e.0
             }
             Request::DropCollection { name } => {
-                let mut e = Enc::new(11);
+                e.tag(11);
                 e.str(name);
-                e.0
             }
-            Request::ListCollections => Enc::new(12).0,
+            Request::ListCollections => e.tag(12),
             Request::Scoped { collection, inner } => {
-                let mut e = Enc::new(13);
+                e.tag(13);
                 e.str(collection);
-                e.0.extend_from_slice(&inner.encode());
-                e.0
+                inner.encode_into(e.0);
             }
             Request::ApproxTopK { vectors, n, probes } => {
-                let mut e = Enc::new(14);
+                e.tag(14);
                 e.u32(vectors.len() as u32);
                 for v in vectors {
                     e.f32s(v);
                 }
                 e.u32(*n);
                 e.u32(*probes);
-                e.0
             }
-            Request::MetricsText => Enc::new(15).0,
+            Request::MetricsText => e.tag(15),
             Request::ReplSync {
                 collection,
                 replica,
                 segment,
                 offset,
             } => {
-                let mut e = Enc::new(16);
+                e.tag(16);
                 e.str(collection);
                 e.str(replica);
                 e.u64(*segment);
                 e.u64(*offset);
-                e.0
             }
             Request::SlowQueries { max } => {
-                let mut e = Enc::new(17);
+                e.tag(17);
                 e.u32(*max);
-                e.0
             }
-            Request::Promote => Enc::new(18).0,
+            Request::Promote => e.tag(18),
         }
     }
 
@@ -669,34 +713,42 @@ impl Request {
 
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append this response's payload encoding (no length prefix) to
+    /// `out`, reusing its allocation — the reactor encodes every
+    /// response this way, straight into the connection's write buffer
+    /// (see [`append_frame`]). `encode` delegates here.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut e = Enc(out);
         match self {
             Response::Registered { id } => {
-                let mut e = Enc::new(0);
+                e.tag(0);
                 e.str(id);
-                e.0
             }
             Response::Estimate {
                 rho,
                 std_err,
                 p_hat,
             } => {
-                let mut e = Enc::new(1);
+                e.tag(1);
                 e.f64(*rho);
                 e.f64(*std_err);
                 e.f64(*p_hat);
-                e.0
             }
             Response::Knn { hits } => {
-                let mut e = Enc::new(2);
+                e.tag(2);
                 e.u32(hits.len() as u32);
                 for h in hits {
                     e.str(&h.id);
                     e.f64(h.rho);
                 }
-                e.0
             }
             Response::Stats(s) => {
-                let mut e = Enc::new(3);
+                e.tag(3);
                 e.u64(s.registered);
                 e.u64(s.estimates);
                 e.u64(s.knn_queries);
@@ -728,8 +780,8 @@ impl Response {
                 // NOT decodable by clients predating a section it
                 // carries (their `done()` rejects the extra tail) —
                 // an accepted break; see Request::StatsDetailed.
-                let has_repl = s.replication.is_some();
-                if !s.per_collection.is_empty() || !s.per_request.is_empty() || has_repl {
+                let has_tail = s.replication.is_some() || s.reactor.is_some();
+                if !s.per_collection.is_empty() || !s.per_request.is_empty() || has_tail {
                     e.u32(s.per_collection.len() as u32);
                     for c in &s.per_collection {
                         e.str(&c.name);
@@ -739,7 +791,7 @@ impl Response {
                         e.u64(c.index_buckets);
                     }
                 }
-                if !s.per_request.is_empty() || has_repl {
+                if !s.per_request.is_empty() || has_tail {
                     e.u32(s.per_request.len() as u32);
                     for r in &s.per_request {
                         e.str(&r.kind);
@@ -758,32 +810,40 @@ impl Response {
                     e.u64(r.bootstraps);
                     e.u64(r.reconnects);
                 }
-                e.0
+                if let Some(r) = &s.reactor {
+                    // Sentinel first: the decoder peeks it to tell this
+                    // section from a replication tail (see ReactorStats).
+                    e.u32(REACTOR_SECTION_SENTINEL);
+                    e.u64(r.ready_events);
+                    e.u64(r.polls);
+                    e.u64(r.frames);
+                    e.u64(r.coalesced_batches);
+                    e.u64(r.p50_dispatch);
+                    e.u64(r.p99_dispatch);
+                    e.u64(r.write_buffer_hwm);
+                    e.u64(r.batcher_queue_depth);
+                }
             }
-            Response::Pong => Enc::new(4).0,
+            Response::Pong => e.tag(4),
             Response::Error { message } => {
-                let mut e = Enc::new(5);
+                e.tag(5);
                 e.str(message);
-                e.0
             }
             Response::RegisteredBatch { count } => {
-                let mut e = Enc::new(7);
+                e.tag(7);
                 e.u64(*count);
-                e.0
             }
             Response::Removed { existed } => {
-                let mut e = Enc::new(8);
+                e.tag(8);
                 e.u8(u8::from(*existed));
-                e.0
             }
             Response::Persisted { rows, wal_bytes } => {
-                let mut e = Enc::new(9);
+                e.tag(9);
                 e.u64(*rows);
                 e.u64(*wal_bytes);
-                e.0
             }
             Response::TopK { results } => {
-                let mut e = Enc::new(6);
+                e.tag(6);
                 e.u32(results.len() as u32);
                 for hits in results {
                     e.u32(hits.len() as u32);
@@ -792,10 +852,9 @@ impl Response {
                         e.f64(h.rho);
                     }
                 }
-                e.0
             }
             Response::Collections { collections } => {
-                let mut e = Enc::new(10);
+                e.tag(10);
                 e.u32(collections.len() as u32);
                 for c in collections {
                     e.str(&c.name);
@@ -807,22 +866,18 @@ impl Response {
                     e.u64(c.rows);
                     e.u8(u8::from(c.durable));
                 }
-                e.0
             }
             Response::CollectionCreated { name } => {
-                let mut e = Enc::new(11);
+                e.tag(11);
                 e.str(name);
-                e.0
             }
             Response::CollectionDropped { existed } => {
-                let mut e = Enc::new(12);
+                e.tag(12);
                 e.u8(u8::from(*existed));
-                e.0
             }
             Response::MetricsText { text } => {
-                let mut e = Enc::new(13);
+                e.tag(13);
                 e.str(text);
-                e.0
             }
             Response::ReplRecords {
                 segment,
@@ -832,14 +887,13 @@ impl Response {
                 primary_records,
                 bytes,
             } => {
-                let mut e = Enc::new(14);
+                e.tag(14);
                 e.u64(*segment);
                 e.u64(*next_segment);
                 e.u64(*next_offset);
                 e.u64(*behind_bytes);
                 e.u64(*primary_records);
                 e.bytes(bytes);
-                e.0
             }
             Response::ReplBootstrap {
                 segment,
@@ -847,15 +901,14 @@ impl Response {
                 primary_records,
                 snapshot,
             } => {
-                let mut e = Enc::new(15);
+                e.tag(15);
                 e.u64(*segment);
                 e.u64(*offset);
                 e.u64(*primary_records);
                 e.bytes(snapshot);
-                e.0
             }
             Response::SlowQueries { entries } => {
-                let mut e = Enc::new(16);
+                e.tag(16);
                 e.u32(entries.len() as u32);
                 for q in entries {
                     e.u64(q.seq);
@@ -864,12 +917,10 @@ impl Response {
                     e.u64(q.total_us);
                     e.u64(q.candidates);
                 }
-                e.0
             }
             Response::Promoted { was_replica } => {
-                let mut e = Enc::new(17);
+                e.tag(17);
                 e.u8(u8::from(*was_replica));
-                e.0
             }
         }
     }
@@ -918,6 +969,7 @@ impl Response {
                     per_collection: Vec::new(),
                     per_request: Vec::new(),
                     replication: None,
+                    reactor: None,
                 };
                 // Optional per-collection section: absent in frames
                 // from pre-breakdown servers.
@@ -950,8 +1002,17 @@ impl Response {
                     }
                 }
                 // Optional replication section: present only in
-                // `StatsDetailed` frames from replicas.
-                if d.pos < buf.len() {
+                // `StatsDetailed` frames from replicas. The reactor
+                // section behind it opens with REACTOR_SECTION_SENTINEL
+                // — impossible as the string length that starts a
+                // replication section — so one peeked u32 tells the
+                // tails apart (a primary's frame can carry the reactor
+                // section without fabricating a replication one).
+                let at_sentinel = |d: &Dec| {
+                    buf.len() - d.pos >= 4
+                        && buf[d.pos..d.pos + 4] == REACTOR_SECTION_SENTINEL.to_le_bytes()
+                };
+                if d.pos < buf.len() && !at_sentinel(&d) {
                     let primary = d.str()?;
                     let active = d.u8()?;
                     anyhow::ensure!(active <= 1, "bad bool byte {active}");
@@ -963,6 +1024,24 @@ impl Response {
                         lag_seconds: d.f64()?,
                         bootstraps: d.u64()?,
                         reconnects: d.u64()?,
+                    });
+                }
+                // Optional reactor section: sentinel-introduced (PR 8).
+                if d.pos < buf.len() {
+                    let sent = d.u32()?;
+                    anyhow::ensure!(
+                        sent == REACTOR_SECTION_SENTINEL,
+                        "bad reactor section sentinel {sent:#x}"
+                    );
+                    s.reactor = Some(ReactorStats {
+                        ready_events: d.u64()?,
+                        polls: d.u64()?,
+                        frames: d.u64()?,
+                        coalesced_batches: d.u64()?,
+                        p50_dispatch: d.u64()?,
+                        p99_dispatch: d.u64()?,
+                        write_buffer_hwm: d.u64()?,
+                        batcher_queue_depth: d.u64()?,
                     });
                 }
                 Response::Stats(s)
@@ -1078,13 +1157,42 @@ impl Response {
 
 /// Read one frame from a blocking reader.
 pub fn read_frame<R: Read>(r: &mut R) -> crate::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    read_frame_into(r, &mut buf)?;
+    Ok(buf)
+}
+
+/// [`read_frame`] into a caller-owned buffer, reusing its allocation
+/// across requests (the per-request `Vec` was measurable at fan-in).
+/// The buffer is cleared first; on success it holds exactly the
+/// payload. Steady state costs zero allocations once the buffer has
+/// grown to the connection's largest frame.
+pub fn read_frame_into<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> crate::Result<()> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf);
     anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
-    let mut buf = vec![0u8; len as usize];
-    r.read_exact(&mut buf)?;
-    Ok(buf)
+    buf.clear();
+    buf.resize(len as usize, 0);
+    r.read_exact(buf)?;
+    Ok(())
+}
+
+/// Append `resp` to `out` as one length-prefixed frame: reserve the
+/// 4-byte header, encode the payload in place, patch the length. The
+/// reactor's gathered-write path — no intermediate payload `Vec`, no
+/// flush; `out` accumulates frames until the socket drains it.
+pub fn append_frame(out: &mut Vec<u8>, resp: &Response) -> crate::Result<()> {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    resp.encode_into(out);
+    let payload = out.len() - start - 4;
+    if payload > MAX_FRAME as usize {
+        out.truncate(start);
+        anyhow::bail!("frame too large: {payload}");
+    }
+    out[start..start + 4].copy_from_slice(&(payload as u32).to_le_bytes());
+    Ok(())
 }
 
 /// Write one frame.
@@ -1609,6 +1717,149 @@ mod tests {
         let enc = pr6.encode();
         assert_eq!(Response::decode(&enc).unwrap(), pr6);
         assert!(!enc.is_empty());
+    }
+
+    /// PR8 wire pins: the sentinel-introduced reactor stats tail.
+    /// Frames without it stay byte-identical to the PR 7 layout; with
+    /// it, the decoder must find it after any combination of the three
+    /// earlier sections — including the replication-less primary case
+    /// the sentinel exists for.
+    #[test]
+    fn reactor_stats_tail() {
+        let reactor = ReactorStats {
+            ready_events: 1000,
+            polls: 400,
+            frames: 1200,
+            coalesced_batches: 37,
+            p50_dispatch: 4,
+            p99_dispatch: 32,
+            write_buffer_hwm: 1 << 20,
+            batcher_queue_depth: 5,
+        };
+        // Reactor tail alone (a primary): zero-count per-collection and
+        // per-request sections, NO replication section, then the
+        // sentinel.
+        let stats = Response::Stats(StatsSnapshot {
+            kernel: "swar".into(),
+            reactor: Some(reactor.clone()),
+            ..Default::default()
+        });
+        let bytes = stats.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), stats);
+        let bare = Response::Stats(StatsSnapshot {
+            kernel: "swar".into(),
+            ..Default::default()
+        })
+        .encode();
+        assert_eq!(&bytes[bare.len()..bare.len() + 4], &0u32.to_le_bytes());
+        assert_eq!(&bytes[bare.len() + 4..bare.len() + 8], &0u32.to_le_bytes());
+        assert_eq!(&bytes[bare.len() + 8..bare.len() + 12], &[0xFF; 4]);
+        // Exactly sentinel + 8 u64s follow — no hidden replication
+        // section was fabricated.
+        assert_eq!(bytes.len(), bare.len() + 8 + 4 + 8 * 8);
+
+        // All four sections together (a replica) round-trip.
+        let full = Response::Stats(StatsSnapshot {
+            kernel: "avx2".into(),
+            per_collection: vec![CollectionStats {
+                name: "web".into(),
+                rows: 9,
+                ..Default::default()
+            }],
+            per_request: vec![RequestLatency {
+                kind: "knn".into(),
+                count: 2,
+                mean_us: 10.0,
+                p50_us: 8,
+                p99_us: 32,
+            }],
+            replication: Some(ReplicationStats {
+                primary: "p:1".into(),
+                active: true,
+                lag_bytes: 64,
+                lag_records: 1,
+                lag_seconds: 0.5,
+                bootstraps: 1,
+                reconnects: 0,
+            }),
+            reactor: Some(reactor),
+            ..Default::default()
+        });
+        assert_eq!(Response::decode(&full.encode()).unwrap(), full);
+
+        // PR 7 shapes are untouched: no reactor field → no sentinel,
+        // and old replication-tail frames still decode (pinned again
+        // here against the new peek logic).
+        let pr7 = Response::Stats(StatsSnapshot {
+            kernel: "swar".into(),
+            replication: Some(ReplicationStats {
+                primary: "127.0.0.1:4100".into(),
+                active: true,
+                lag_bytes: 2048,
+                lag_records: 17,
+                lag_seconds: 0.25,
+                bootstraps: 1,
+                reconnects: 3,
+            }),
+            ..Default::default()
+        });
+        let enc = pr7.encode();
+        assert!(!enc.windows(4).any(|w| w == [0xFF; 4]), "no sentinel");
+        assert_eq!(Response::decode(&enc).unwrap(), pr7);
+
+        // A truncated reactor section is a truncated frame, not a
+        // default.
+        let mut torn = stats.encode();
+        torn.truncate(torn.len() - 3);
+        assert!(Response::decode(&torn).is_err());
+    }
+
+    /// Satellite pins: the buffer-reusing framing variants are
+    /// byte-identical to their allocating originals, and `encode_into`
+    /// appends (never clobbers) so frames can be gathered.
+    #[test]
+    fn frame_reuse_variants_match_originals() {
+        let resp = Response::Knn {
+            hits: vec![KnnHit {
+                id: "a".into(),
+                rho: 0.5,
+            }],
+        };
+        // encode_into ≡ encode, appended after existing bytes.
+        let mut out = vec![9u8, 9];
+        resp.encode_into(&mut out);
+        assert_eq!(&out[..2], &[9, 9]);
+        assert_eq!(&out[2..], resp.encode().as_slice());
+        let req = Request::Scoped {
+            collection: "c".into(),
+            inner: Box::new(Request::Knn {
+                vector: vec![1.0, 2.0],
+                n: 3,
+            }),
+        };
+        let mut rout = Vec::new();
+        req.encode_into(&mut rout);
+        assert_eq!(rout, req.encode());
+
+        // append_frame ≡ write_frame, and gathers back-to-back frames
+        // that read_frame_into consumes one at a time with one reused
+        // buffer.
+        let mut gathered = Vec::new();
+        append_frame(&mut gathered, &resp).unwrap();
+        append_frame(&mut gathered, &Response::Pong).unwrap();
+        let mut expect = Vec::new();
+        write_frame(&mut expect, &resp.encode()).unwrap();
+        write_frame(&mut expect, &Response::Pong.encode()).unwrap();
+        assert_eq!(gathered, expect);
+        let mut cursor = std::io::Cursor::new(gathered);
+        let mut buf = vec![0xAAu8; 3]; // stale content must be cleared
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(Response::decode(&buf).unwrap(), resp);
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(Response::decode(&buf).unwrap(), Response::Pong);
+        // Oversized header rejected through the _into path too.
+        let mut cursor = std::io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(read_frame_into(&mut cursor, &mut buf).is_err());
     }
 
     #[test]

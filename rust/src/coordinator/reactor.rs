@@ -1,0 +1,1198 @@
+//! Event-driven serving front-end: one epoll loop that holds every
+//! connection in a single thread.
+//!
+//! The thread-per-connection path in `server.rs` is the oracle — this
+//! module exists so fan-in stops being bounded by OS threads. Design:
+//!
+//! - **Nonblocking accept + epoll readiness.** The kernel interface is
+//!   raw `epoll_pwait`/`epoll_ctl` syscalls (`std::arch::asm!`, gated to
+//!   linux x86_64/aarch64 — no `libc`/`mio` in the dependency budget);
+//!   socket reads and writes go through the std `TcpStream` in
+//!   nonblocking mode.
+//! - **Zero-copy framing.** Each connection owns a grow-only read
+//!   buffer; frames are parsed in place (`Request::decode` takes
+//!   `&[u8]`) and the consumed prefix is reclaimed with `copy_within` —
+//!   no per-request `Vec`. Responses encode straight into the
+//!   connection's write buffer via [`protocol::append_frame`]. At
+//!   steady state a fixed-size request (e.g. `Ping`) costs zero heap
+//!   allocations end to end.
+//! - **Pipelining.** Every complete frame in the buffer is decoded and
+//!   dispatched in one tick; responses are appended in arrival order,
+//!   so per-connection request/response order matches the blocking path
+//!   exactly.
+//! - **Coalescing.** `Register` (and scoped `Register`) requests that
+//!   arrive in the same tick for the same collection fuse into one
+//!   [`Collection::register_batch`] call — one projection, one WAL
+//!   record — and each member still receives its own `Registered{id}`
+//!   frame. `TopK` requests with the same `(collection, n)` fuse into
+//!   one `scan_topk_batch` sweep and the results are split back.
+//!   Fusion only ever consumes the *front* run of each connection's
+//!   queue, so per-connection program order (and therefore state) is
+//!   preserved. Aggregate counters (`batches_executed`,
+//!   `mean_batch_size`) legitimately differ from thread mode; response
+//!   bytes do not.
+//! - **Backpressure.** Responses gather in a per-connection write
+//!   buffer flushed on writability. Past [`HIGH_WATER`] pending bytes
+//!   the connection's read interest is dropped (a slow reader stops
+//!   generating new work); reads resume under [`LOW_WATER`].
+//! - **Limits.** `--max-conns` is enforced exactly like thread mode
+//!   (one clean `Error` frame, then close). `--conn-timeout` is a
+//!   blocking-path feature: the reactor's defense against idle/slow
+//!   peers is backpressure plus the connection cap, not per-socket
+//!   timeouts.
+//!
+//! Error-path caveat, documented rather than papered over: if a *fused*
+//! bulk register fails (WAL I/O error mid-batch), every member receives
+//! the batch error frame, whose message differs from the per-request
+//! error thread mode would produce. Healthy-path responses are pinned
+//! byte-identical across modes by `tests/serve.rs`.
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    //! Minimal raw-syscall epoll + rlimit bindings. Numbers and ABI per
+    //! `asm/unistd_64.h` (x86_64) and the generic 64-bit table
+    //! (aarch64); both arches use `epoll_pwait` with a null sigmask so
+    //! one 6-argument entry point covers everything.
+
+    use std::arch::asm;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: usize = 0x80000;
+    const EINTR: isize = -4;
+    const RLIMIT_NOFILE: usize = 7;
+
+    /// Kernel `struct epoll_event`: packed on x86_64 (the kernel ABI
+    /// has no padding there), naturally aligned elsewhere.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy, Default)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const CLOSE: usize = 3;
+        pub const EPOLL_CTL: usize = 233;
+        pub const EPOLL_PWAIT: usize = 281;
+        pub const EPOLL_CREATE1: usize = 291;
+        pub const PRLIMIT64: usize = 302;
+    }
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const EPOLL_CREATE1: usize = 20;
+        pub const EPOLL_CTL: usize = 21;
+        pub const EPOLL_PWAIT: usize = 22;
+        pub const CLOSE: usize = 57;
+        pub const PRLIMIT64: usize = 261;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack, preserves_flags)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        asm!(
+            "svc 0",
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            in("x8") n,
+            options(nostack, preserves_flags)
+        );
+        ret
+    }
+
+    fn check(ret: isize, what: &str) -> crate::Result<usize> {
+        anyhow::ensure!(ret >= 0, "{what} failed: errno {}", -ret);
+        Ok(ret as usize)
+    }
+
+    pub fn epoll_create1() -> crate::Result<i32> {
+        let r = unsafe { syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) };
+        Ok(check(r, "epoll_create1")? as i32)
+    }
+
+    pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, events: u32, data: u64) -> crate::Result<()> {
+        let mut ev = EpollEvent { events, data };
+        let r = unsafe {
+            syscall6(
+                nr::EPOLL_CTL,
+                epfd as usize,
+                op as usize,
+                fd as usize,
+                &mut ev as *mut EpollEvent as usize,
+                0,
+                0,
+            )
+        };
+        check(r, "epoll_ctl")?;
+        Ok(())
+    }
+
+    /// Wait for readiness; retries `EINTR` internally. `timeout_ms` -1
+    /// blocks indefinitely.
+    pub fn epoll_wait(
+        epfd: i32,
+        events: &mut [EpollEvent],
+        timeout_ms: i32,
+    ) -> crate::Result<usize> {
+        loop {
+            let r = unsafe {
+                syscall6(
+                    nr::EPOLL_PWAIT,
+                    epfd as usize,
+                    events.as_mut_ptr() as usize,
+                    events.len(),
+                    timeout_ms as isize as usize,
+                    0, // null sigmask: plain epoll_wait semantics
+                    8,
+                )
+            };
+            if r == EINTR {
+                continue;
+            }
+            return check(r, "epoll_wait");
+        }
+    }
+
+    pub fn close(fd: i32) {
+        let _ = unsafe { syscall6(nr::CLOSE, fd as usize, 0, 0, 0, 0, 0) };
+    }
+
+    #[repr(C)]
+    struct Rlimit64 {
+        cur: u64,
+        max: u64,
+    }
+
+    /// Best-effort `RLIMIT_NOFILE` raise (soft → hard) so a single
+    /// process can hold thousands of sockets without root. Returns the
+    /// resulting soft limit, or `None` if even reading it failed.
+    pub fn raise_nofile_limit() -> Option<u64> {
+        let mut old = Rlimit64 { cur: 0, max: 0 };
+        let r = unsafe {
+            syscall6(
+                nr::PRLIMIT64,
+                0,
+                RLIMIT_NOFILE,
+                0,
+                &mut old as *mut Rlimit64 as usize,
+                0,
+                0,
+            )
+        };
+        if r < 0 {
+            return None;
+        }
+        if old.cur >= old.max {
+            return Some(old.cur);
+        }
+        let new = Rlimit64 {
+            cur: old.max,
+            max: old.max,
+        };
+        let r = unsafe {
+            syscall6(
+                nr::PRLIMIT64,
+                0,
+                RLIMIT_NOFILE,
+                &new as *const Rlimit64 as usize,
+                0,
+                0,
+                0,
+            )
+        };
+        Some(if r < 0 { old.cur } else { new.cur })
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use std::collections::VecDeque;
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use super::sys;
+    use crate::coordinator::obs;
+    use crate::coordinator::protocol::{self, Request, Response};
+    use crate::coordinator::registry::{Collection, DEFAULT_COLLECTION, MAX_BULK_CELLS};
+    use crate::coordinator::server::{observe_request, reject_connection, ServiceState};
+
+    /// Pending write bytes past which a connection's read interest is
+    /// dropped (the backpressure trigger).
+    const HIGH_WATER: usize = 1 << 20;
+    /// Pending write bytes under which a paused connection resumes
+    /// reading (hysteresis against MOD churn at the boundary).
+    const LOW_WATER: usize = 64 * 1024;
+    /// Stack chunk for socket reads (copied into the connection buffer;
+    /// `extend_from_slice` into existing capacity allocates nothing).
+    const READ_CHUNK: usize = 16 * 1024;
+    /// Per-connection read budget per tick: a firehose peer yields the
+    /// loop after this many bytes and level-triggered epoll re-arms it.
+    const MAX_TICK_READ: usize = 256 * 1024;
+    /// Readiness events drained per `epoll_wait`.
+    const MAX_EVENTS: usize = 1024;
+    /// Fused-group member cap (also the fused-TopK total-query cap).
+    const MAX_FUSE: usize = 256;
+    /// The listener's epoll token; connections use their slab index.
+    const LISTENER_TOKEN: u64 = u64::MAX;
+
+    /// One decoded-but-undispatched request (or its decode error).
+    enum Pending {
+        Req { req: Request, decode_us: u64 },
+        Bad { message: String, decode_us: u64 },
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        peer: String,
+        /// Read buffer; valid bytes are `rbuf[rpos..]`.
+        rbuf: Vec<u8>,
+        rpos: usize,
+        /// Gathered response frames; unsent bytes are `wbuf[wpos..]`.
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// Frames parsed this tick, awaiting dispatch.
+        queue: VecDeque<Pending>,
+        /// Currently-registered epoll interest bits.
+        interest: u32,
+        /// Read interest dropped by backpressure.
+        paused: bool,
+    }
+
+    impl Conn {
+        fn pending_write(&self) -> usize {
+            self.wbuf.len() - self.wpos
+        }
+    }
+
+    /// A fused-group member: which connection it came from, how it was
+    /// scoped (meta parity with thread mode), and its share of the
+    /// fused work.
+    struct FuseMember {
+        tok: usize,
+        scope: Option<String>,
+        decode_us: u64,
+        /// Queries contributed (TopK fusion; always 1 for Register).
+        count: usize,
+    }
+
+    struct Reactor {
+        epfd: i32,
+        listener: TcpListener,
+        state: Arc<ServiceState>,
+        max_conns: usize,
+        conns: Vec<Option<Conn>>,
+        free: Vec<usize>,
+        /// Tokens freed mid-tick; recycled only at tick end so a stale
+        /// queued event can never act on a just-accepted connection.
+        pending_free: Vec<usize>,
+        /// Connections that parsed at least one frame this tick.
+        active: Vec<usize>,
+        events: Vec<sys::EpollEvent>,
+        /// Requests answered this tick (the dispatch-batch histogram
+        /// sample).
+        tick_dispatched: u64,
+    }
+
+    impl Drop for Reactor {
+        fn drop(&mut self) {
+            sys::close(self.epfd);
+        }
+    }
+
+    /// Run the reactor until the epoll loop errors. Mirrors the thread
+    /// mode contract: never returns in healthy operation.
+    pub(crate) fn serve_reactor(
+        listener: TcpListener,
+        state: Arc<ServiceState>,
+        max_conns: usize,
+    ) -> crate::Result<()> {
+        listener.set_nonblocking(true)?;
+        let epfd = sys::epoll_create1()?;
+        let mut r = Reactor {
+            epfd,
+            listener,
+            state,
+            max_conns,
+            conns: Vec::new(),
+            free: Vec::new(),
+            pending_free: Vec::new(),
+            active: Vec::new(),
+            events: vec![sys::EpollEvent::default(); MAX_EVENTS],
+            tick_dispatched: 0,
+        };
+        sys::epoll_ctl(
+            r.epfd,
+            sys::EPOLL_CTL_ADD,
+            r.listener.as_raw_fd(),
+            sys::EPOLLIN,
+            LISTENER_TOKEN,
+        )?;
+        obs::log::info(
+            "crp::server",
+            "reactor front-end up",
+            &[("max_conns", r.max_conns.to_string())],
+        );
+        r.run()
+    }
+
+    impl Reactor {
+        fn run(&mut self) -> crate::Result<()> {
+            loop {
+                let mut events = std::mem::take(&mut self.events);
+                let n = sys::epoll_wait(self.epfd, &mut events, -1)?;
+                self.state.metrics.reactor_polls.fetch_add(1, Ordering::Relaxed);
+                self.state
+                    .metrics
+                    .reactor_ready_events
+                    .fetch_add(n as u64, Ordering::Relaxed);
+                for ev in &events[..n] {
+                    let (bits, tok) = (ev.events, ev.data);
+                    if tok == LISTENER_TOKEN {
+                        self.accept_ready();
+                    } else {
+                        self.conn_event(tok as usize, bits);
+                    }
+                }
+                self.events = events;
+                self.dispatch();
+                let active = std::mem::take(&mut self.active);
+                for &t in &active {
+                    if self.conns.get(t).is_some_and(|c| c.is_some()) {
+                        self.flush_writes(t);
+                    }
+                }
+                self.active = active;
+                self.active.clear();
+                self.free.append(&mut self.pending_free);
+            }
+        }
+
+        fn accept_ready(&mut self) {
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, addr)) => {
+                        if self.max_conns > 0
+                            && self.state.metrics.connections.load(Ordering::Relaxed)
+                                >= self.max_conns as u64
+                        {
+                            // Accepted sockets are blocking (O_NONBLOCK
+                            // does not inherit), so the thread-mode
+                            // rejection path works unchanged.
+                            let _ = reject_connection(stream, self.max_conns);
+                            continue;
+                        }
+                        if self.register_conn(stream, addr.to_string()).is_err() {
+                            continue;
+                        }
+                        self.state.metrics.connections.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        // Transient accept failure (EMFILE under fd
+                        // pressure, aborted handshake): log and let the
+                        // next readiness tick retry.
+                        obs::log::warn("crp::server", "accept failed", &[("error", e.to_string())]);
+                        break;
+                    }
+                }
+            }
+        }
+
+        fn register_conn(&mut self, stream: TcpStream, peer: String) -> crate::Result<()> {
+            stream.set_nonblocking(true)?;
+            stream.set_nodelay(true)?;
+            let tok = match self.free.pop() {
+                Some(t) => t,
+                None => {
+                    self.conns.push(None);
+                    self.conns.len() - 1
+                }
+            };
+            let interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+            let fd = stream.as_raw_fd();
+            let added = sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_ADD, fd, interest, tok as u64);
+            if let Err(e) = added {
+                self.free.push(tok);
+                return Err(e);
+            }
+            self.conns[tok] = Some(Conn {
+                stream,
+                peer,
+                rbuf: Vec::new(),
+                rpos: 0,
+                wbuf: Vec::new(),
+                wpos: 0,
+                queue: VecDeque::new(),
+                interest,
+                paused: false,
+            });
+            Ok(())
+        }
+
+        fn conn_event(&mut self, tok: usize, bits: u32) {
+            if !matches!(self.conns.get(tok), Some(Some(_))) {
+                return; // closed earlier this tick
+            }
+            if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+                self.close(tok, "socket error/hangup");
+                return;
+            }
+            if bits & sys::EPOLLOUT != 0 && !self.flush_writes(tok) {
+                return;
+            }
+            if bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+                self.read_ready(tok);
+            }
+        }
+
+        fn read_ready(&mut self, tok: usize) {
+            let mut tmp = [0u8; READ_CHUNK];
+            let mut budget = MAX_TICK_READ;
+            loop {
+                let Some(conn) = self.conns[tok].as_mut() else {
+                    return;
+                };
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        self.close(tok, "peer closed");
+                        return;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&tmp[..n]);
+                        budget = budget.saturating_sub(n);
+                        if budget == 0 || n < tmp.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        let reason = e.to_string();
+                        self.close(tok, &reason);
+                        return;
+                    }
+                }
+            }
+            self.parse_frames(tok);
+        }
+
+        /// Decode every complete frame in the read buffer, in place.
+        /// Pipelined clients land several per call.
+        fn parse_frames(&mut self, tok: usize) {
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return;
+            };
+            let mut newly = 0u64;
+            let mut oversized = None;
+            loop {
+                let avail = conn.rbuf.len() - conn.rpos;
+                if avail < 4 {
+                    break;
+                }
+                let len =
+                    u32::from_le_bytes(conn.rbuf[conn.rpos..conn.rpos + 4].try_into().unwrap());
+                if len > protocol::MAX_FRAME {
+                    // Same contract as the blocking path's read_frame:
+                    // an impossible header ends the connection.
+                    oversized = Some(len);
+                    break;
+                }
+                let need = 4 + len as usize;
+                if avail < need {
+                    break;
+                }
+                let t0 = Instant::now();
+                let parsed = match Request::decode(&conn.rbuf[conn.rpos + 4..conn.rpos + need]) {
+                    Ok(req) => Pending::Req {
+                        req,
+                        decode_us: t0.elapsed().as_micros() as u64,
+                    },
+                    Err(e) => Pending::Bad {
+                        message: format!("bad request: {e}"),
+                        decode_us: t0.elapsed().as_micros() as u64,
+                    },
+                };
+                conn.rpos += need;
+                conn.queue.push_back(parsed);
+                newly += 1;
+            }
+            // Reclaim the consumed prefix; the buffer itself is kept.
+            if conn.rpos > 0 {
+                let len = conn.rbuf.len();
+                if conn.rpos == len {
+                    conn.rbuf.clear();
+                } else {
+                    conn.rbuf.copy_within(conn.rpos.., 0);
+                    conn.rbuf.truncate(len - conn.rpos);
+                }
+                conn.rpos = 0;
+            }
+            if newly > 0 {
+                self.state
+                    .metrics
+                    .reactor_frames
+                    .fetch_add(newly, Ordering::Relaxed);
+                if !self.active.contains(&tok) {
+                    self.active.push(tok);
+                }
+            }
+            if let Some(len) = oversized {
+                // Dispatch what decoded cleanly first (their responses
+                // still flush), then hang up like thread mode does.
+                let reason = format!("frame too large: {len}");
+                self.dispatch();
+                self.flush_writes(tok);
+                self.close(tok, &reason);
+            }
+        }
+
+        /// Drain every connection's parsed-request queue, fusing
+        /// same-collection `Register` runs and same-`(collection, n)`
+        /// `TopK` runs across connections into the bulk paths.
+        fn dispatch(&mut self) {
+            let replica_active = self
+                .state
+                .replica
+                .as_ref()
+                .is_some_and(|r| r.is_active());
+            let active = std::mem::take(&mut self.active);
+            for &tok in &active {
+                loop {
+                    let Some(head) = self.conns[tok].as_mut().and_then(|c| c.queue.pop_front())
+                    else {
+                        break;
+                    };
+                    match head {
+                        Pending::Bad { message, decode_us } => {
+                            self.respond_bad(tok, message, decode_us)
+                        }
+                        Pending::Req { req, decode_us } => match req {
+                            // Register fusion is a write: on an active
+                            // replica route through the router so every
+                            // member gets the exact redirect error.
+                            Request::Register { id, vector } if !replica_active => {
+                                self.fuse_register(&active, tok, None, id, vector, decode_us)
+                            }
+                            Request::Scoped { collection, inner }
+                                if !replica_active
+                                    && matches!(*inner, Request::Register { .. }) =>
+                            {
+                                if let Request::Register { id, vector } = *inner {
+                                    self.fuse_register(
+                                        &active,
+                                        tok,
+                                        Some(collection),
+                                        id,
+                                        vector,
+                                        decode_us,
+                                    );
+                                }
+                            }
+                            Request::TopK { vectors, n } => {
+                                self.fuse_topk(&active, tok, None, vectors, n, decode_us)
+                            }
+                            Request::Scoped { collection, inner }
+                                if matches!(*inner, Request::TopK { .. }) =>
+                            {
+                                if let Request::TopK { vectors, n } = *inner {
+                                    self.fuse_topk(
+                                        &active,
+                                        tok,
+                                        Some(collection),
+                                        vectors,
+                                        n,
+                                        decode_us,
+                                    );
+                                }
+                            }
+                            other => self.respond_one(tok, other, decode_us),
+                        },
+                    }
+                }
+            }
+            self.active = active;
+            if self.tick_dispatched > 0 {
+                // Count histogram: the "µs" axis reads as requests/tick.
+                self.state
+                    .metrics
+                    .reactor_dispatch_batch
+                    .record(self.tick_dispatched);
+                self.tick_dispatched = 0;
+            }
+        }
+
+        /// Route one request through the shared router (identical to a
+        /// thread-mode request) and gather its response.
+        fn respond_one(&mut self, tok: usize, req: Request, decode_us: u64) {
+            let h0 = Instant::now();
+            let (resp, meta) = self.state.handle_traced(req);
+            let handle_us = h0.elapsed().as_micros() as u64;
+            self.push_response(tok, &resp, &meta, decode_us, handle_us);
+        }
+
+        fn respond_bad(&mut self, tok: usize, message: String, decode_us: u64) {
+            let resp = Response::Error { message };
+            let meta = obs::ReqMeta {
+                kind: obs::RequestKind::Admin,
+                collection: None,
+                candidates: None,
+            };
+            self.push_response(tok, &resp, &meta, decode_us, 0);
+        }
+
+        /// Encode one response into the connection's write buffer and
+        /// record the request's full-path metrics (thread-mode parity:
+        /// histogram, slow-query ring, sampled trace).
+        fn push_response(
+            &mut self,
+            tok: usize,
+            resp: &Response,
+            meta: &obs::ReqMeta,
+            decode_us: u64,
+            handle_us: u64,
+        ) {
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return;
+            };
+            let w0 = Instant::now();
+            let appended = protocol::append_frame(&mut conn.wbuf, resp).is_ok();
+            let write_us = w0.elapsed().as_micros() as u64;
+            let pending = conn.pending_write() as u64;
+            if !appended {
+                // A response over the frame cap fails the write on the
+                // blocking path too; the connection cannot continue.
+                self.close(tok, "response frame too large");
+                return;
+            }
+            self.tick_dispatched += 1;
+            self.state
+                .metrics
+                .reactor_write_buffer_hwm
+                .fetch_max(pending, Ordering::Relaxed);
+            let total_us = (decode_us + handle_us + write_us).max(1);
+            observe_request(&self.state, meta, total_us, decode_us, handle_us, write_us);
+        }
+
+        /// Resolve a fusion target; `None` means the collection is
+        /// unknown and the caller must replay through the router for
+        /// the exact per-request error bytes.
+        fn fuse_target(&self, scope: Option<&str>) -> Option<Arc<Collection>> {
+            self.state
+                .registry
+                .get(scope.unwrap_or(DEFAULT_COLLECTION))
+        }
+
+        fn fuse_register(
+            &mut self,
+            active: &[usize],
+            tok: usize,
+            scope: Option<String>,
+            id: String,
+            vector: Vec<f32>,
+            decode_us: u64,
+        ) {
+            let Some(col) = self.fuse_target(scope.as_deref()) else {
+                self.respond_one(tok, rewrap(scope, Request::Register { id, vector }), decode_us);
+                return;
+            };
+            let mut ids = Vec::new();
+            let mut vecs = Vec::new();
+            let mut members = Vec::new();
+            let mut maxd = vector.len().max(1);
+            ids.push(id);
+            vecs.push(vector);
+            members.push(FuseMember {
+                tok,
+                scope,
+                decode_us,
+                count: 1,
+            });
+            self.pull_registers(tok, &col.name, &mut ids, &mut vecs, &mut members, &mut maxd);
+            for &other in active {
+                if other != tok {
+                    let name = &col.name;
+                    self.pull_registers(other, name, &mut ids, &mut vecs, &mut members, &mut maxd);
+                }
+            }
+            if members.len() == 1 {
+                // Nothing to fuse with this tick: the per-request path
+                // keeps single-register metrics identical to thread mode.
+                let m = members.pop().unwrap();
+                let req = Request::Register {
+                    id: ids.pop().unwrap(),
+                    vector: vecs.pop().unwrap(),
+                };
+                self.respond_one(m.tok, rewrap(m.scope, req), m.decode_us);
+                return;
+            }
+            let b = members.len() as u64;
+            let echo_ids = ids.clone();
+            let h0 = Instant::now();
+            let resp = col.register_batch(ids, vecs);
+            let handle_each = (h0.elapsed().as_micros() as u64 / b).max(1);
+            self.state
+                .metrics
+                .reactor_coalesced_batches
+                .fetch_add(1, Ordering::Relaxed);
+            let fused_ok = matches!(resp, Response::RegisteredBatch { .. });
+            for (m, id) in members.into_iter().zip(echo_ids) {
+                let meta = obs::ReqMeta {
+                    kind: obs::RequestKind::Register,
+                    collection: m.scope,
+                    candidates: None,
+                };
+                if fused_ok {
+                    let one = Response::Registered { id };
+                    self.push_response(m.tok, &one, &meta, m.decode_us, handle_each);
+                } else {
+                    self.push_response(m.tok, &resp, &meta, m.decode_us, handle_each);
+                }
+            }
+        }
+
+        /// Pop the leading run of same-collection `Register` requests
+        /// off one connection's queue into the fused batch. Only the
+        /// front run is taken, so program order within the connection
+        /// is untouched.
+        fn pull_registers(
+            &mut self,
+            tok: usize,
+            name: &str,
+            ids: &mut Vec<String>,
+            vecs: &mut Vec<Vec<f32>>,
+            members: &mut Vec<FuseMember>,
+            maxd: &mut usize,
+        ) {
+            loop {
+                if members.len() >= MAX_FUSE {
+                    return;
+                }
+                let Some(conn) = self.conns[tok].as_mut() else {
+                    return;
+                };
+                let dim = match conn.queue.front() {
+                    Some(Pending::Req {
+                        req: Request::Register { vector, .. },
+                        ..
+                    }) if name == DEFAULT_COLLECTION => vector.len().max(1),
+                    Some(Pending::Req {
+                        req: Request::Scoped { collection, inner },
+                        ..
+                    }) if collection == name => match inner.as_ref() {
+                        Request::Register { vector, .. } => vector.len().max(1),
+                        _ => return,
+                    },
+                    _ => return,
+                };
+                // Keep the fused batch inside the bulk workspace the
+                // members would individually never hit.
+                if (members.len() + 1) * dim.max(*maxd) > MAX_BULK_CELLS {
+                    return;
+                }
+                let Some(Pending::Req { req, decode_us }) = conn.queue.pop_front() else {
+                    return;
+                };
+                let (scope, id, vector) = match req {
+                    Request::Register { id, vector } => (None, id, vector),
+                    Request::Scoped { collection, inner } => match *inner {
+                        Request::Register { id, vector } => (Some(collection), id, vector),
+                        other => {
+                            // Defensive: restore anything unexpected.
+                            conn.queue.push_front(Pending::Req {
+                                req: Request::Scoped {
+                                    collection,
+                                    inner: Box::new(other),
+                                },
+                                decode_us,
+                            });
+                            return;
+                        }
+                    },
+                    other => {
+                        conn.queue.push_front(Pending::Req {
+                            req: other,
+                            decode_us,
+                        });
+                        return;
+                    }
+                };
+                *maxd = (*maxd).max(vector.len().max(1));
+                ids.push(id);
+                vecs.push(vector);
+                members.push(FuseMember {
+                    tok,
+                    scope,
+                    decode_us,
+                    count: 1,
+                });
+            }
+        }
+
+        fn fuse_topk(
+            &mut self,
+            active: &[usize],
+            tok: usize,
+            scope: Option<String>,
+            vectors: Vec<Vec<f32>>,
+            n: u32,
+            decode_us: u64,
+        ) {
+            let Some(col) = self.fuse_target(scope.as_deref()) else {
+                self.respond_one(tok, rewrap(scope, Request::TopK { vectors, n }), decode_us);
+                return;
+            };
+            let mut all = vectors;
+            let mut members = vec![FuseMember {
+                tok,
+                scope,
+                decode_us,
+                count: all.len(),
+            }];
+            self.pull_topk(tok, &col.name, n, &mut all, &mut members);
+            for &other in active {
+                if other != tok {
+                    self.pull_topk(other, &col.name, n, &mut all, &mut members);
+                }
+            }
+            if members.len() == 1 {
+                let m = members.pop().unwrap();
+                let req = Request::TopK { vectors: all, n };
+                self.respond_one(m.tok, rewrap(m.scope, req), m.decode_us);
+                return;
+            }
+            let b = members.len() as u64;
+            let h0 = Instant::now();
+            let resp = col.topk(all, n);
+            let handle_each = (h0.elapsed().as_micros() as u64 / b).max(1);
+            self.state
+                .metrics
+                .reactor_coalesced_batches
+                .fetch_add(1, Ordering::Relaxed);
+            match resp {
+                Response::TopK { results } => {
+                    let mut it = results.into_iter();
+                    for m in members {
+                        let chunk: Vec<_> = it.by_ref().take(m.count).collect();
+                        let meta = obs::ReqMeta {
+                            kind: obs::RequestKind::TopK,
+                            collection: m.scope,
+                            candidates: None,
+                        };
+                        let one = Response::TopK { results: chunk };
+                        self.push_response(m.tok, &one, &meta, m.decode_us, handle_each);
+                    }
+                }
+                err => {
+                    // A sketch failure surfaces the same
+                    // `sketch failed: ...` message per-request topk
+                    // would produce (the failing vector may belong to
+                    // another member; the message text is identical).
+                    for m in members {
+                        let meta = obs::ReqMeta {
+                            kind: obs::RequestKind::TopK,
+                            collection: m.scope,
+                            candidates: None,
+                        };
+                        self.push_response(m.tok, &err, &meta, m.decode_us, handle_each);
+                    }
+                }
+            }
+        }
+
+        /// Pop the leading run of same-`(collection, n)` `TopK`
+        /// requests off one connection's queue into the fused sweep.
+        fn pull_topk(
+            &mut self,
+            tok: usize,
+            name: &str,
+            n: u32,
+            all: &mut Vec<Vec<f32>>,
+            members: &mut Vec<FuseMember>,
+        ) {
+            loop {
+                let Some(conn) = self.conns[tok].as_mut() else {
+                    return;
+                };
+                let extra = match conn.queue.front() {
+                    Some(Pending::Req {
+                        req: Request::TopK { vectors, n: n2 },
+                        ..
+                    }) if name == DEFAULT_COLLECTION && *n2 == n => vectors.len(),
+                    Some(Pending::Req {
+                        req: Request::Scoped { collection, inner },
+                        ..
+                    }) if collection == name => match inner.as_ref() {
+                        Request::TopK { vectors, n: n2 } if *n2 == n => vectors.len(),
+                        _ => return,
+                    },
+                    _ => return,
+                };
+                if all.len() + extra > MAX_FUSE || members.len() >= MAX_FUSE {
+                    return;
+                }
+                let Some(Pending::Req { req, decode_us }) = conn.queue.pop_front() else {
+                    return;
+                };
+                let (scope, vectors) = match req {
+                    Request::TopK { vectors, .. } => (None, vectors),
+                    Request::Scoped { collection, inner } => match *inner {
+                        Request::TopK { vectors, .. } => (Some(collection), vectors),
+                        other => {
+                            conn.queue.push_front(Pending::Req {
+                                req: Request::Scoped {
+                                    collection,
+                                    inner: Box::new(other),
+                                },
+                                decode_us,
+                            });
+                            return;
+                        }
+                    },
+                    other => {
+                        conn.queue.push_front(Pending::Req {
+                            req: other,
+                            decode_us,
+                        });
+                        return;
+                    }
+                };
+                members.push(FuseMember {
+                    tok,
+                    scope,
+                    decode_us,
+                    count: vectors.len(),
+                });
+                all.extend(vectors);
+            }
+        }
+
+        /// Flush as much of the write buffer as the socket accepts,
+        /// then recompute epoll interest (write interest while bytes
+        /// remain; read interest unless backpressured). Returns false
+        /// if the connection closed.
+        fn flush_writes(&mut self, tok: usize) -> bool {
+            loop {
+                let Some(conn) = self.conns[tok].as_mut() else {
+                    return false;
+                };
+                if conn.pending_write() == 0 {
+                    break;
+                }
+                let wpos = conn.wpos;
+                match conn.stream.write(&conn.wbuf[wpos..]) {
+                    Ok(0) => {
+                        self.close(tok, "peer stopped accepting writes");
+                        return false;
+                    }
+                    Ok(n) => conn.wpos += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        let reason = e.to_string();
+                        self.close(tok, &reason);
+                        return false;
+                    }
+                }
+            }
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return false;
+            };
+            // Reclaim sent bytes; the allocation is kept for reuse.
+            if conn.wpos == conn.wbuf.len() {
+                conn.wbuf.clear();
+                conn.wpos = 0;
+            } else if conn.wpos >= LOW_WATER {
+                let len = conn.wbuf.len();
+                conn.wbuf.copy_within(conn.wpos.., 0);
+                conn.wbuf.truncate(len - conn.wpos);
+                conn.wpos = 0;
+            }
+            self.update_interest(tok);
+            true
+        }
+
+        fn update_interest(&mut self, tok: usize) {
+            let epfd = self.epfd;
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return;
+            };
+            let pending = conn.pending_write();
+            // Hysteresis: pause reading at the high-water mark, resume
+            // only once the peer has drained under the low-water mark.
+            conn.paused = pending >= HIGH_WATER || (conn.paused && pending > LOW_WATER);
+            let mut want = sys::EPOLLRDHUP;
+            if !conn.paused {
+                want |= sys::EPOLLIN;
+            }
+            if pending > 0 {
+                want |= sys::EPOLLOUT;
+            }
+            if want != conn.interest
+                && sys::epoll_ctl(
+                    epfd,
+                    sys::EPOLL_CTL_MOD,
+                    conn.stream.as_raw_fd(),
+                    want,
+                    tok as u64,
+                )
+                .is_ok()
+            {
+                conn.interest = want;
+            }
+        }
+
+        fn close(&mut self, tok: usize, reason: &str) {
+            if let Some(conn) = self.conns[tok].take() {
+                // A closed peer is the normal end of every connection —
+                // debug, never warn (same contract as thread mode).
+                obs::log::debug(
+                    "crp::server",
+                    "connection closed",
+                    &[("peer", conn.peer.clone()), ("reason", reason.to_string())],
+                );
+                self.state.metrics.connections.fetch_sub(1, Ordering::Relaxed);
+                self.pending_free.push(tok);
+                // Dropping the stream closes the fd, which also removes
+                // it from the epoll interest list.
+                drop(conn);
+            }
+        }
+    }
+
+    fn rewrap(scope: Option<String>, inner: Request) -> Request {
+        match scope {
+            Some(collection) => Request::Scoped {
+                collection,
+                inner: Box::new(inner),
+            },
+            None => inner,
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        /// The raw-syscall epoll layer drives real sockets: readiness
+        /// surfaces for written data and MOD rewrites interest.
+        #[test]
+        fn epoll_syscalls_drive_socket_readiness() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut client = TcpStream::connect(addr).unwrap();
+            let (server, _) = listener.accept().unwrap();
+
+            let epfd = sys::epoll_create1().unwrap();
+            sys::epoll_ctl(epfd, sys::EPOLL_CTL_ADD, server.as_raw_fd(), sys::EPOLLIN, 42).unwrap();
+            let mut events = vec![sys::EpollEvent::default(); 8];
+            // Nothing written yet: a zero-timeout wait reports nothing.
+            assert_eq!(sys::epoll_wait(epfd, &mut events, 0).unwrap(), 0);
+            client.write_all(b"ping").unwrap();
+            let n = sys::epoll_wait(epfd, &mut events, 1000).unwrap();
+            assert_eq!(n, 1);
+            // Copy packed fields out before asserting (no references
+            // into a packed struct).
+            let (bits, data) = (events[0].events, events[0].data);
+            assert_eq!(data, 42);
+            assert_ne!(bits & sys::EPOLLIN, 0);
+            // MOD to write-only interest: the pending read bytes no
+            // longer wake the loop; an idle socket is writable.
+            sys::epoll_ctl(epfd, sys::EPOLL_CTL_MOD, server.as_raw_fd(), sys::EPOLLOUT, 7).unwrap();
+            let n = sys::epoll_wait(epfd, &mut events, 1000).unwrap();
+            assert_eq!(n, 1);
+            let (bits, data) = (events[0].events, events[0].data);
+            assert_eq!(data, 7);
+            assert_ne!(bits & sys::EPOLLOUT, 0);
+            assert_eq!(bits & sys::EPOLLIN, 0);
+            sys::close(epfd);
+        }
+
+        #[test]
+        fn nofile_limit_is_readable_and_raisable() {
+            let lim = sys::raise_nofile_limit().expect("prlimit64 works on linux");
+            assert!(lim >= 1, "soft NOFILE limit {lim}");
+            // Idempotent: a second call reports the same (now soft ==
+            // hard) limit.
+            assert_eq!(sys::raise_nofile_limit(), Some(lim));
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) use imp::serve_reactor;
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub use sys::raise_nofile_limit;
+
+/// `--server-mode reactor` needs epoll; everywhere else the flag fails
+/// fast with a clear error instead of a degraded emulation.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub(crate) fn serve_reactor(
+    _listener: std::net::TcpListener,
+    _state: std::sync::Arc<crate::coordinator::server::ServiceState>,
+    _max_conns: usize,
+) -> crate::Result<()> {
+    anyhow::bail!(
+        "--server-mode reactor requires linux on x86_64/aarch64 (epoll); \
+         use --server-mode threads"
+    )
+}
+
+/// No-op off linux: the connection-scaling bench degrades gracefully.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn raise_nofile_limit() -> Option<u64> {
+    None
+}

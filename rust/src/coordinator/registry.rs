@@ -71,7 +71,7 @@ const MAX_NAME: usize = 64;
 /// `RegisterBatch` may demand. Vectors are padded to the batch's max
 /// dimension, so without this cap a frame mixing one huge vector with
 /// many tiny ones would force an allocation quadratic in frame size.
-const MAX_BULK_CELLS: usize = 1 << 24; // 64 MiB of f32 workspace
+pub(crate) const MAX_BULK_CELLS: usize = 1 << 24; // 64 MiB of f32 workspace
 
 /// The coding configuration a collection is created with — everything
 /// recorded in the MANIFEST and needed to rebuild it from disk.

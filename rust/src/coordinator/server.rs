@@ -1,5 +1,9 @@
-//! TCP server: bounded thread-per-connection loop + request router over
-//! the collection registry.
+//! TCP server: request router over the collection registry, fronted by
+//! either the bounded thread-per-connection loop (the oracle, default)
+//! or the epoll reactor (`--server-mode reactor`, see
+//! [`crate::coordinator::reactor`]). Both front-ends call the same
+//! [`ServiceState::handle_traced`] router and produce byte-identical
+//! responses.
 
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -23,10 +27,48 @@ use crate::estimator::CollisionEstimator;
 use crate::projection::Projector;
 use crate::scan::EpochConfig;
 
+/// Connection front-end selection (`--server-mode`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServerMode {
+    /// Blocking thread-per-connection loop: one OS thread per client,
+    /// the correctness oracle and the default.
+    #[default]
+    Threads,
+    /// Event-driven epoll reactor: every connection multiplexed onto
+    /// one thread, with pipelining, request coalescing, and
+    /// write-buffer backpressure. Linux x86_64/aarch64 only.
+    Reactor,
+}
+
+impl std::str::FromStr for ServerMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "threads" => Ok(ServerMode::Threads),
+            "reactor" => Ok(ServerMode::Reactor),
+            other => anyhow::bail!("unknown server mode {other:?} (expected threads|reactor)"),
+        }
+    }
+}
+
+impl ServerMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServerMode::Threads => "threads",
+            ServerMode::Reactor => "reactor",
+        }
+    }
+}
+
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub addr: String,
+    /// Connection front-end: blocking threads (default) or the epoll
+    /// reactor. Responses are byte-identical across modes; only
+    /// scalability (and the aggregate batching counters) differ.
+    pub server_mode: ServerMode,
     /// Coding of the `default` collection (the one legacy no-namespace
     /// requests hit). Further collections are created at runtime.
     pub coding: CodingParams,
@@ -92,6 +134,7 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:7474".to_string(),
+            server_mode: ServerMode::default(),
             coding: CodingParams::new(crate::coding::Scheme::TwoBit, 0.75),
             batcher: BatcherConfig::default(),
             epoch: EpochConfig::default(),
@@ -631,12 +674,15 @@ impl ServiceState {
         }
         if detail {
             st.per_request = self.metrics.per_request();
-            // Only replicas carry the replication tail; a primary's
-            // detailed answer stays byte-identical to the previous
-            // format (see the StatsSnapshot encoding contract).
+            // Only replicas carry the replication tail (see the
+            // StatsSnapshot encoding contract).
             if let Some(r) = &self.replica {
                 st.replication = Some(r.stats());
             }
+            // The reactor/batcher section rides in both serve modes:
+            // thread mode reports zero reactor counters but a live
+            // batcher queue depth.
+            st.reactor = Some(self.metrics.reactor_stats());
         }
         if let Some(arena) = self.default.store.arena() {
             st.kernel = arena.kernel_kind().label().to_string();
@@ -716,6 +762,12 @@ pub fn serve(
         }
         None => None,
     };
+    if cfg.server_mode == ServerMode::Reactor {
+        // The reactor owns the listener from here; it shares the
+        // router, metrics endpoint, and shutdown story with thread
+        // mode and differs only in connection scheduling.
+        return crate::coordinator::reactor::serve_reactor(listener, state, cfg.max_conns);
+    }
     for stream in listener.incoming() {
         let stream = stream?;
         if cfg.max_conns > 0
@@ -739,7 +791,7 @@ pub fn serve(
     Ok(())
 }
 
-fn reject_connection(stream: TcpStream, max_conns: usize) -> crate::Result<()> {
+pub(crate) fn reject_connection(stream: TcpStream, max_conns: usize) -> crate::Result<()> {
     let mut writer = std::io::BufWriter::new(stream);
     let resp = Response::Error {
         message: format!("connection limit reached ({max_conns}); retry later"),
@@ -759,20 +811,22 @@ fn handle_connection(stream: TcpStream, state: Arc<ServiceState>) -> crate::Resu
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let mut writer = std::io::BufWriter::new(stream);
+    // Frame and response buffers live for the whole connection: steady
+    // state reads and writes allocate nothing once both have grown to
+    // the connection's largest frame.
+    let mut frame = Vec::new();
+    let mut out = Vec::new();
     loop {
-        let frame = match protocol::read_frame(&mut reader) {
-            Ok(f) => f,
-            Err(e) => {
-                // A closed peer is the normal end of every connection,
-                // not an incident — debug, never warn.
-                obs::log::debug(
-                    "crp::server",
-                    "connection closed",
-                    &[("peer", peer.clone()), ("reason", e.to_string())],
-                );
-                return Ok(());
-            }
-        };
+        if let Err(e) = protocol::read_frame_into(&mut reader, &mut frame) {
+            // A closed peer is the normal end of every connection,
+            // not an incident — debug, never warn.
+            obs::log::debug(
+                "crp::server",
+                "connection closed",
+                &[("peer", peer.clone()), ("reason", e.to_string())],
+            );
+            return Ok(());
+        }
         // Full-path timing starts once a frame is in hand: decode →
         // route/handle → encode+write, the whole server-side latency a
         // client observes past its own socket.
@@ -795,40 +849,54 @@ fn handle_connection(stream: TcpStream, state: Arc<ServiceState>) -> crate::Resu
         };
         let handle_us = h0.elapsed().as_micros() as u64;
         let w0 = Instant::now();
-        protocol::write_frame(&mut writer, &resp.encode())?;
+        out.clear();
+        resp.encode_into(&mut out);
+        protocol::write_frame(&mut writer, &out)?;
         let write_us = w0.elapsed().as_micros() as u64;
         let total_us = (decode_us + handle_us + write_us).max(1);
-        state.metrics.requests.hist(meta.kind).record(total_us);
+        observe_request(&state, &meta, total_us, decode_us, handle_us, write_us);
+    }
+}
 
-        // Exactly one line per request: a slow-query warning when the
-        // threshold fires, else a sampled debug trace.
-        if state.obs.slow_query_us > 0 && total_us >= state.obs.slow_query_us {
-            state.metrics.slow_queries.fetch_add(1, Ordering::Relaxed);
-            // Retained in the ring too, so `crp slow` can fetch the
-            // recent offenders after the stderr lines scroll away.
-            state.slow_ring.push(
-                meta.kind,
-                meta.collection.as_deref().unwrap_or(DEFAULT_COLLECTION),
-                total_us,
-                meta.candidates.unwrap_or(0),
-            );
-            let mut fields = obs::stage_fields(&meta, total_us, decode_us, handle_us, write_us);
-            // The kernel tier is resolved lazily — only slow queries
-            // pay the registry lookup.
-            let name = meta.collection.as_deref().unwrap_or(DEFAULT_COLLECTION);
-            if let Some(c) = state.registry.get(name) {
-                if let Some(arena) = c.store.arena() {
-                    fields.push(("kernel", arena.kernel_kind().label().to_string()));
-                }
+/// Per-request accounting shared by both front-ends: the full-path
+/// latency histogram, then exactly one log line per request — a
+/// slow-query warning when the threshold fires, else a sampled debug
+/// trace.
+pub(crate) fn observe_request(
+    state: &ServiceState,
+    meta: &obs::ReqMeta,
+    total_us: u64,
+    decode_us: u64,
+    handle_us: u64,
+    write_us: u64,
+) {
+    state.metrics.requests.hist(meta.kind).record(total_us);
+    if state.obs.slow_query_us > 0 && total_us >= state.obs.slow_query_us {
+        state.metrics.slow_queries.fetch_add(1, Ordering::Relaxed);
+        // Retained in the ring too, so `crp slow` can fetch the
+        // recent offenders after the stderr lines scroll away.
+        state.slow_ring.push(
+            meta.kind,
+            meta.collection.as_deref().unwrap_or(DEFAULT_COLLECTION),
+            total_us,
+            meta.candidates.unwrap_or(0),
+        );
+        let mut fields = obs::stage_fields(meta, total_us, decode_us, handle_us, write_us);
+        // The kernel tier is resolved lazily — only slow queries
+        // pay the registry lookup.
+        let name = meta.collection.as_deref().unwrap_or(DEFAULT_COLLECTION);
+        if let Some(c) = state.registry.get(name) {
+            if let Some(arena) = c.store.arena() {
+                fields.push(("kernel", arena.kernel_kind().label().to_string()));
             }
-            obs::log::warn("crp::slow_query", "slow request", &fields);
-        } else if state.obs.should_trace() {
-            obs::log::debug(
-                "crp::trace",
-                "request",
-                &obs::stage_fields(&meta, total_us, decode_us, handle_us, write_us),
-            );
         }
+        obs::log::warn("crp::slow_query", "slow request", &fields);
+    } else if state.obs.should_trace() {
+        obs::log::debug(
+            "crp::trace",
+            "request",
+            &obs::stage_fields(meta, total_us, decode_us, handle_us, write_us),
+        );
     }
 }
 

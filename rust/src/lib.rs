@@ -83,8 +83,16 @@
 //!   over the same protocol (`crp serve --replicate-from`), reconnect
 //!   with jittered exponential backoff, re-bootstrap automatically
 //!   past the primary's segment-retention lag cap, expose their lag as
-//!   gauges, and fail over via `crp promote`. Python never runs on the
-//!   request path.
+//!   gauges, and fail over via `crp promote`. The TCP front-end is
+//!   selectable (`--server-mode`): the default blocking
+//!   thread-per-connection loop, or a single-threaded epoll reactor
+//!   ([`coordinator::reactor`]) that holds 10k+ connections —
+//!   nonblocking accept, frames parsed in place from per-connection
+//!   buffers, pipelined dispatch, concurrent Register/TopK coalesced
+//!   into the bulk engine paths, gathered writes with per-connection
+//!   backpressure — answering byte-identically to the blocking oracle
+//!   with no per-request allocation at steady state. Python never runs
+//!   on the request path.
 //!
 //! ## Analysis stack
 //!

@@ -149,6 +149,7 @@ COMMANDS:
   serve        --addr A --k K --scheme S --w W [--pjrt]
                [--drain-threshold N]  ingest-epoch size before a bulk fold
                [--max-conns N]        concurrent-connection cap (0 = unlimited)
+               [--server-mode M]      threads (default) or reactor — see SERVING
                [--data-dir DIR]       durable multi-collection root: every
                  collection persists under DIR/<name>/{snap,wal} and a
                  CRC-checked DIR/MANIFEST records each collection's coding
@@ -235,6 +236,24 @@ APPROX SEARCH:
   stores fall back to it automatically. At 1e5 rows expect order-of-
   magnitude fewer scored rows at recall@10 >= 0.9 for rho >= 0.9
   neighbors (see `crp topk --approx` and scan_bench).
+
+SERVING:
+  --server-mode picks the TCP front-end; both modes speak the same
+  frame protocol and answer byte-identically. `threads` (the default)
+  spawns one blocking thread per connection — simple, debuggable, and
+  the mode that honors --conn-timeout-ms idle disconnects. `reactor`
+  runs a single-threaded epoll event loop (linux x86_64/aarch64 only):
+  nonblocking accept, frames parsed in place out of per-connection
+  read buffers, pipelined requests dispatched per readiness event,
+  concurrently-arriving Register/TopK requests coalesced into the
+  engine's bulk paths, and gathered response writes with backpressure
+  (a slow reader stops being polled for input past 1 MiB of queued
+  responses, so it never stalls other connections). The reactor holds
+  10k+ connections with flat tail latency and no per-request heap
+  allocation at steady state; the crp_reactor_* series on /metrics
+  (ready events, dispatch batch size, write-buffer high water,
+  coalesced batches) and `crp stats` show it working. --max-conns
+  caps both modes.
 
 COLLECTIONS:
   One server process serves many named collections, each with its own
@@ -372,6 +391,8 @@ fn main() -> crp::Result<()> {
             let w: f64 = a.get("w", 0.75)?;
             let drain_threshold: usize = a.get("drain-threshold", 4096)?;
             let max_conns: usize = a.get("max-conns", 1024)?;
+            let server_mode: crp::coordinator::ServerMode =
+                a.get("server-mode", Default::default())?;
             let fsync = crp::coordinator::FsyncPolicy::parse(&a.get_str("fsync", "os"))?;
             let checkpoint_every: u64 = a.get("checkpoint-every", 100_000u64)?;
             let cfg = ProjectionConfig {
@@ -391,10 +412,11 @@ fn main() -> crp::Result<()> {
             eprintln!(
                 "serving on {addr} (k={k}, scheme={}, w={w}, pjrt_active={}, \
                  scan_kernel={}, drain_threshold={drain_threshold}, \
-                 max_conns={max_conns})",
+                 max_conns={max_conns}, server_mode={})",
                 scheme.label(),
                 projector.pjrt_active(),
-                kernel.kind().label()
+                kernel.kind().label(),
+                server_mode.label()
             );
             let data_dir = a.get_opt("data-dir").map(std::path::PathBuf::from);
             let durability = durability_config(&a, checkpoint_every, fsync)?;
@@ -444,6 +466,7 @@ fn main() -> crp::Result<()> {
                 fsync,
                 checkpoint_every,
                 max_conns,
+                server_mode,
                 metrics_addr: a.get_opt("metrics-addr").map(str::to_string),
                 log_level: a.get_opt("log-level").map(str::to_string),
                 slow_query_us: a.get("slow-query-us", 0u64)?,
@@ -775,6 +798,18 @@ fn print_stats(st: &crp::coordinator::protocol::StatsSnapshot) {
     println!("maintenance_wakeups:  {}", st.maintenance_wakeups);
     println!("connections:          {}", st.connections);
     println!("collections:          {}", st.collections);
+    if let Some(r) = &st.reactor {
+        println!(
+            "reactor:              {} polls, {} ready events, {} frames, \
+             {} coalesced batches",
+            r.polls, r.ready_events, r.frames, r.coalesced_batches
+        );
+        println!(
+            "reactor_dispatch:     p50={} p99={} (per tick); write_hwm={} bytes, \
+             batcher_queue={}",
+            r.p50_dispatch, r.p99_dispatch, r.write_buffer_hwm, r.batcher_queue_depth
+        );
+    }
     if let Some(r) = &st.replication {
         println!(
             "replication:          {} of {} (lag {} bytes / {} records, {:.1}s behind, \

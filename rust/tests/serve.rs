@@ -1,0 +1,460 @@
+//! Serving front-end tests: the epoll reactor answering byte-identically
+//! to the blocking thread-per-connection oracle (sequential and
+//! pipelined, including the coalesced bulk paths), framing edge cases
+//! (slowloris, torn and oversized frames), and the reactor observability
+//! counters reaching `StatsDetailed`.
+//!
+//! Run standalone with `cargo test --release -q serve` (CI does).
+#![cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+
+use std::io::{BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crp::coding::Scheme;
+use crp::coordinator::protocol::{self, Request, Response};
+use crp::coordinator::server::{serve, ServerConfig, ServerMode};
+use crp::coordinator::SketchClient;
+use crp::mathx::Pcg64;
+use crp::projection::{ProjectionConfig, Projector};
+
+fn spawn_server(mode: ServerMode) -> String {
+    let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+        k: 64,
+        seed: 7,
+        ..Default::default()
+    }));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        server_mode: mode,
+        ..Default::default()
+    };
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    rx.recv()
+        .expect("server thread exited before reporting its bound address")
+        .to_string()
+}
+
+fn vec_of(g: &mut Pcg64, dim: usize) -> Vec<f32> {
+    (0..dim).map(|_| g.next_f64() as f32 - 0.5).collect()
+}
+
+/// Send `script` over one raw connection and return the raw response
+/// frame payloads, in order. Pipelined mode writes every request before
+/// reading anything, so the reactor sees the whole burst at once and
+/// exercises its fused dispatch paths.
+fn run_script(addr: &str, script: &[Request], pipelined: bool) -> Vec<Vec<u8>> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut responses = Vec::with_capacity(script.len());
+    if pipelined {
+        let mut burst = Vec::new();
+        for req in script {
+            let payload = req.encode();
+            burst.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            burst.extend_from_slice(&payload);
+        }
+        stream.write_all(&burst).unwrap();
+    }
+    for req in script {
+        if !pipelined {
+            protocol::write_frame(&mut stream, &req.encode()).unwrap();
+        }
+        let mut frame = Vec::new();
+        protocol::read_frame_into(&mut reader, &mut frame)
+            .unwrap_or_else(|e| panic!("no response to {req:?}: {e}"));
+        responses.push(frame);
+    }
+    responses
+}
+
+/// The value of an unlabeled series on the exposition page.
+fn metric_value(text: &str, series: &str) -> Option<u64> {
+    text.lines().find_map(|l| {
+        l.strip_prefix(series)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .map(|v| v as u64)
+    })
+}
+
+/// Requests whose answers carry timing- or mode-dependent fields
+/// (latency percentiles, batch-size aggregates, reactor counters) are
+/// compared structurally; everything else must match byte for byte.
+fn timing_dependent(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Stats | Request::StatsDetailed | Request::MetricsText | Request::ReplSync { .. }
+    )
+}
+
+fn compare_structural(req: &Request, threads: &[u8], reactor: &[u8]) {
+    let a = Response::decode(threads).unwrap();
+    let b = Response::decode(reactor).unwrap();
+    match (a, b) {
+        (Response::Stats(x), Response::Stats(y)) => {
+            assert_eq!(x.registered, y.registered, "{req:?}");
+            assert_eq!(x.knn_queries, y.knn_queries, "{req:?}");
+            assert_eq!(x.collections, y.collections, "{req:?}");
+            assert_eq!(x.per_collection.len(), y.per_collection.len(), "{req:?}");
+            for (cx, cy) in x.per_collection.iter().zip(&y.per_collection) {
+                assert_eq!(cx.name, cy.name);
+                assert_eq!(cx.rows, cy.rows, "{} rows diverged", cx.name);
+            }
+        }
+        (Response::MetricsText { text: tx }, Response::MetricsText { text: ty }) => {
+            for series in ["crp_registered_total", "crp_knn_queries_total", "crp_collections"] {
+                assert_eq!(
+                    metric_value(&tx, series),
+                    metric_value(&ty, series),
+                    "{series} diverged across serve modes"
+                );
+            }
+            // Both pages carry the reactor series; only the reactor's
+            // are live.
+            for t in [&tx, &ty] {
+                assert!(t.contains("# TYPE crp_reactor_ready_events counter"));
+                assert!(t.contains("# TYPE crp_batcher_queue_depth gauge"));
+            }
+            assert_eq!(metric_value(&tx, "crp_reactor_frames"), Some(0));
+            assert!(metric_value(&ty, "crp_reactor_frames").unwrap() > 0);
+        }
+        (Response::Error { message: ma }, Response::Error { message: mb }) => {
+            assert_eq!(ma, mb, "{req:?}");
+        }
+        (
+            Response::ReplBootstrap { snapshot: sa, .. },
+            Response::ReplBootstrap { snapshot: sb, .. },
+        ) => {
+            assert_eq!(sa, sb, "{req:?}: bootstrap images diverged");
+        }
+        (x, y) => {
+            assert_eq!(
+                std::mem::discriminant(&x),
+                std::mem::discriminant(&y),
+                "{req:?}: {x:?} vs {y:?}"
+            );
+        }
+    }
+}
+
+/// A deterministic script covering every request kind: data path
+/// (scoped and legacy), admin, errors, replication probes, and the
+/// introspection frames.
+fn full_script() -> Vec<Request> {
+    let mut g = Pcg64::new(42, 11);
+    let mut sc = vec![Request::Ping];
+    for i in 0..12 {
+        sc.push(Request::Register {
+            id: format!("a{i}"),
+            vector: vec_of(&mut g, 24),
+        });
+    }
+    sc.push(Request::RegisterBatch {
+        ids: (0..8).map(|i| format!("b{i}")).collect(),
+        vectors: (0..8).map(|_| vec_of(&mut g, 24)).collect(),
+    });
+    sc.push(Request::Estimate {
+        a: "a0".into(),
+        b: "a1".into(),
+    });
+    sc.push(Request::EstimateVec {
+        id: "a2".into(),
+        vector: vec_of(&mut g, 24),
+    });
+    sc.push(Request::Knn {
+        vector: vec_of(&mut g, 24),
+        n: 5,
+    });
+    sc.push(Request::TopK {
+        vectors: vec![vec_of(&mut g, 24), vec_of(&mut g, 24)],
+        n: 3,
+    });
+    sc.push(Request::ApproxTopK {
+        vectors: vec![vec_of(&mut g, 24)],
+        n: 3,
+        probes: 2,
+    });
+    sc.push(Request::Remove { id: "a3".into() });
+    sc.push(Request::Remove { id: "a3".into() }); // existed = false
+    sc.push(Request::CreateCollection {
+        name: "web".into(),
+        scheme: Scheme::OneBit,
+        w: 0.0,
+        bits: 0,
+        k: 64,
+        seed: 5,
+        checkpoint_every: 0,
+    });
+    for i in 0..6 {
+        sc.push(Request::Scoped {
+            collection: "web".into(),
+            inner: Box::new(Request::Register {
+                id: format!("w{i}"),
+                vector: vec_of(&mut g, 16),
+            }),
+        });
+    }
+    sc.push(Request::Scoped {
+        collection: "web".into(),
+        inner: Box::new(Request::TopK {
+            vectors: vec![vec_of(&mut g, 16)],
+            n: 2,
+        }),
+    });
+    // Unknown-collection errors must come back byte-identical too (the
+    // reactor rebuilds these requests out of its fusion scan).
+    sc.push(Request::Scoped {
+        collection: "nope".into(),
+        inner: Box::new(Request::Register {
+            id: "x".into(),
+            vector: vec_of(&mut g, 16),
+        }),
+    });
+    sc.push(Request::Scoped {
+        collection: "nope".into(),
+        inner: Box::new(Request::TopK {
+            vectors: vec![vec_of(&mut g, 16)],
+            n: 2,
+        }),
+    });
+    sc.push(Request::ListCollections);
+    sc.push(Request::SlowQueries { max: 0 });
+    sc.push(Request::Persist); // no durability → deterministic error
+    sc.push(Request::Promote); // primary → was_replica = false
+    sc.push(Request::ReplSync {
+        collection: "default".into(),
+        replica: "probe".into(),
+        segment: 0,
+        offset: 0,
+    });
+    sc.push(Request::Stats);
+    sc.push(Request::StatsDetailed);
+    sc.push(Request::MetricsText);
+    sc.push(Request::Ping);
+    sc
+}
+
+/// The dual-mode oracle pin: one deterministic script covering every
+/// request kind, answered by a thread-mode and a reactor-mode server.
+/// Deterministic answers must match byte for byte; timing-dependent
+/// frames (stats, metrics, replication probes) must agree structurally.
+#[test]
+fn serve_reactor_answers_byte_identical_to_thread_oracle() {
+    let script = full_script();
+    let threads = run_script(&spawn_server(ServerMode::Threads), &script, false);
+    let reactor = run_script(&spawn_server(ServerMode::Reactor), &script, false);
+    assert_eq!(threads.len(), reactor.len());
+    for ((req, a), b) in script.iter().zip(&threads).zip(&reactor) {
+        if timing_dependent(req) {
+            compare_structural(req, a, b);
+        } else {
+            assert_eq!(a, b, "response to {req:?} diverged across serve modes");
+        }
+    }
+}
+
+/// A fusion-heavy deterministic script: consecutive Registers (the
+/// coalesced bulk-register path), a Register→Remove→Register triplet on
+/// one id (program order must survive fusion), consecutive TopKs (the
+/// fused batch scan), scoped runs, and an unknown-collection error in
+/// the middle of a fusable run.
+fn fusion_script() -> Vec<Request> {
+    let mut g = Pcg64::new(7, 3);
+    let mut sc = vec![Request::Ping];
+    for i in 0..16 {
+        sc.push(Request::Register {
+            id: format!("f{i}"),
+            vector: vec_of(&mut g, 24),
+        });
+    }
+    sc.push(Request::Remove { id: "f0".into() });
+    sc.push(Request::Register {
+        id: "f0".into(),
+        vector: vec_of(&mut g, 24),
+    });
+    for _ in 0..4 {
+        sc.push(Request::TopK {
+            vectors: vec![vec_of(&mut g, 24)],
+            n: 3,
+        });
+    }
+    sc.push(Request::CreateCollection {
+        name: "web".into(),
+        scheme: Scheme::TwoBit,
+        w: 0.75,
+        bits: 0,
+        k: 64,
+        seed: 9,
+        checkpoint_every: 0,
+    });
+    for i in 0..6 {
+        sc.push(Request::Scoped {
+            collection: "web".into(),
+            inner: Box::new(Request::Register {
+                id: format!("w{i}"),
+                vector: vec_of(&mut g, 16),
+            }),
+        });
+    }
+    sc.push(Request::Scoped {
+        collection: "nope".into(),
+        inner: Box::new(Request::Register {
+            id: "x".into(),
+            vector: vec_of(&mut g, 16),
+        }),
+    });
+    for _ in 0..2 {
+        sc.push(Request::Scoped {
+            collection: "web".into(),
+            inner: Box::new(Request::TopK {
+                vectors: vec![vec_of(&mut g, 16)],
+                n: 2,
+            }),
+        });
+    }
+    sc.push(Request::Knn {
+        vector: vec_of(&mut g, 24),
+        n: 4,
+    });
+    sc.push(Request::Estimate {
+        a: "f1".into(),
+        b: "f2".into(),
+    });
+    sc.push(Request::Ping);
+    sc
+}
+
+/// Pipelined ≡ sequential, and reactor ≡ thread oracle under pipelining:
+/// the whole burst lands in one readiness event, the reactor fuses what
+/// it can, and every response byte still matches a server that handled
+/// the same frames strictly one at a time.
+#[test]
+fn serve_pipelined_responses_match_sequential_byte_for_byte() {
+    let script = fusion_script();
+    let seq_reactor = run_script(&spawn_server(ServerMode::Reactor), &script, false);
+    let pip_threads = run_script(&spawn_server(ServerMode::Threads), &script, true);
+
+    // The reactor only fuses frames that arrive within one readiness
+    // event; retry the burst on fresh servers until the stats show at
+    // least one coalesced batch, so the fused paths are genuinely the
+    // ones being byte-compared.
+    let mut fused = 0u64;
+    for attempt in 0..20 {
+        let addr = spawn_server(ServerMode::Reactor);
+        let pip_reactor = run_script(&addr, &script, true);
+        assert_eq!(pip_reactor, seq_reactor, "pipelined != sequential (attempt {attempt})");
+        assert_eq!(pip_reactor, pip_threads, "reactor != thread oracle (attempt {attempt})");
+        let st = SketchClient::connect(&addr).unwrap().stats_detailed().unwrap();
+        let r = st.reactor.expect("StatsDetailed must carry the reactor section");
+        assert!(r.frames >= script.len() as u64, "parsed {} < {} frames", r.frames, script.len());
+        assert!(r.polls > 0 && r.ready_events > 0);
+        fused = r.coalesced_batches;
+        if fused > 0 {
+            assert!(r.p99_dispatch >= 1, "non-idle ticks must record dispatch sizes");
+            assert!(r.write_buffer_hwm > 0, "responses must have queued in the write buffer");
+            break;
+        }
+    }
+    assert!(fused > 0, "20 pipelined bursts never landed in one tick");
+}
+
+/// Slowloris isolation: a peer dribbling one byte every 10 ms must not
+/// stall anyone else. A fast client completes dozens of round trips in
+/// far less time than the dribble takes, and the slow connection still
+/// gets its correct answer at the end.
+#[test]
+fn serve_slowloris_never_stalls_other_connections() {
+    let addr = spawn_server(ServerMode::Reactor);
+    let payload = Request::Register {
+        id: "slow".into(),
+        vector: vec![0.25; 8],
+    }
+    .encode();
+    let mut framed = (payload.len() as u32).to_le_bytes().to_vec();
+    framed.extend_from_slice(&payload);
+
+    let slow_addr = addr.clone();
+    let slow = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&slow_addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        let start = Instant::now();
+        for b in &framed {
+            s.write_all(std::slice::from_ref(b)).unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let mut frame = Vec::new();
+        protocol::read_frame_into(&mut s, &mut frame).unwrap();
+        (frame, start.elapsed())
+    });
+
+    // Give the dribble a head start so the fast client genuinely
+    // overlaps it.
+    std::thread::sleep(Duration::from_millis(30));
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let ping = Request::Ping.encode();
+    let start = Instant::now();
+    let mut frame = Vec::new();
+    for _ in 0..30 {
+        protocol::write_frame(&mut stream, &ping).unwrap();
+        protocol::read_frame_into(&mut reader, &mut frame).unwrap();
+        assert_eq!(Response::decode(&frame).unwrap(), Response::Pong);
+    }
+    let fast_elapsed = start.elapsed();
+
+    let (slow_frame, slow_elapsed) = slow.join().unwrap();
+    assert_eq!(
+        Response::decode(&slow_frame).unwrap(),
+        Response::Registered { id: "slow".into() }
+    );
+    assert!(
+        fast_elapsed < slow_elapsed / 2,
+        "30 fast round trips took {fast_elapsed:?} against a {slow_elapsed:?} slowloris"
+    );
+}
+
+/// Torn and oversized frames close the one bad connection cleanly —
+/// no response bytes, no stuck state — and the server keeps answering
+/// everyone else.
+#[test]
+fn serve_torn_and_oversized_frames_close_cleanly() {
+    let addr = spawn_server(ServerMode::Reactor);
+
+    // Half a length header, then EOF.
+    let mut torn_header = TcpStream::connect(&addr).unwrap();
+    torn_header.write_all(&[7, 0]).unwrap();
+    torn_header.shutdown(Shutdown::Write).unwrap();
+
+    // A full header promising 100 bytes, 10 delivered, then EOF.
+    let mut torn_payload = TcpStream::connect(&addr).unwrap();
+    torn_payload.write_all(&100u32.to_le_bytes()).unwrap();
+    torn_payload.write_all(&[0u8; 10]).unwrap();
+    torn_payload.shutdown(Shutdown::Write).unwrap();
+
+    // A header past MAX_FRAME: the server hangs up without reading on.
+    let mut oversized = TcpStream::connect(&addr).unwrap();
+    oversized.write_all(&(protocol::MAX_FRAME + 1).to_le_bytes()).unwrap();
+
+    let mut buf = [0u8; 16];
+    for (label, s) in [
+        ("torn header", &mut torn_header),
+        ("torn payload", &mut torn_payload),
+        ("oversized", &mut oversized),
+    ] {
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(s.read(&mut buf).unwrap(), 0, "{label}: expected a clean close");
+    }
+
+    // The server is still healthy for new connections.
+    let mut c = SketchClient::connect(&addr).unwrap();
+    c.ping().unwrap();
+    let st = c.stats_detailed().unwrap();
+    assert_eq!(st.connections, 1, "closed connections must release their slots");
+}

@@ -1,0 +1,112 @@
+//! The reactor's zero-allocation pin: at steady state, a fixed-size
+//! request costs the serving path no heap allocation at all — reads
+//! land in the connection's grown buffer, decode borrows the frame,
+//! the response encodes into retained write-buffer capacity, and the
+//! counters are plain atomics.
+//!
+//! The test installs a counting global allocator and measures windows
+//! of round trips against an in-process reactor server. Background
+//! threads (maintenance wakes every 200 ms) allocate occasionally, so
+//! the assertion is on the *minimum* delta across many short windows:
+//! if the request path itself allocated, every window would be nonzero.
+//!
+//! This lives in its own test binary so concurrently running tests
+//! can't allocate into the measurement windows. The `serve_` name keeps
+//! it inside CI's `cargo test --release -q serve` step.
+#![cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Counts every allocation and reallocation; frees are not counted
+/// (a path that frees must have allocated somewhere already).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+#[test]
+fn serve_reactor_steady_state_allocates_nothing_per_request() {
+    use crp::coordinator::protocol::{self, Request, Response};
+    use crp::coordinator::server::{serve, ServerConfig, ServerMode};
+    use crp::projection::{ProjectionConfig, Projector};
+
+    let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+        k: 64,
+        seed: 7,
+        ..Default::default()
+    }));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        server_mode: ServerMode::Reactor,
+        ..Default::default()
+    };
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = serve(projector, cfg, Some(tx));
+    });
+    let addr = rx.recv().unwrap().to_string();
+
+    // Pre-encoded request frame and a reused response buffer: the
+    // client side of the loop is allocation-free too, so any window
+    // delta is the server's (same process, same allocator).
+    let payload = Request::Ping.encode();
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut resp = Vec::with_capacity(256);
+
+    // Warm up: grow the connection's read/write buffers and the
+    // client's response buffer to their steady-state sizes.
+    for _ in 0..100 {
+        stream.write_all(&frame).unwrap();
+        protocol::read_frame_into(&mut stream, &mut resp).unwrap();
+    }
+    assert_eq!(Response::decode(&resp).unwrap(), Response::Pong);
+
+    let mut min_delta = u64::MAX;
+    let mut deltas = Vec::with_capacity(40);
+    for _ in 0..40 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..25 {
+            stream.write_all(&frame).unwrap();
+            protocol::read_frame_into(&mut stream, &mut resp).unwrap();
+        }
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        deltas.push(delta);
+        min_delta = min_delta.min(delta);
+    }
+    assert_eq!(
+        min_delta, 0,
+        "every 25-request window allocated — the reactor request path \
+         is not allocation-free: {deltas:?}"
+    );
+}
