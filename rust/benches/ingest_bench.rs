@@ -1,9 +1,11 @@
 //! Ingest-path throughput for the epoch-buffered store: steady-state
 //! overwrite puts (drains amortized at the epoch threshold), the fused
-//! bulk `put_rows` path, and put latency while a scanner floods the read
+//! bulk `put_rows` path, put latency while a scanner floods the read
 //! side — the case the seed design serialized behind the arena write
-//! lock. Results merge into the repo-root `BENCH_scan.json` alongside
-//! `scan_bench`'s numbers.
+//! lock — and the sparse projection front-end (dense GEMM vs the
+//! O(nnz·k) gather kernel vs the sign-sparse add/sub matrix at
+//! d = 2^20). Results merge into the repo-root `BENCH_scan.json`
+//! alongside `scan_bench`'s numbers.
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -123,8 +125,93 @@ fn main() {
     });
     std::fs::remove_dir_all(&dir).ok();
 
+    // Sparse projection front-end at the paper's scale: d = 2^20, k =
+    // 256, CSR rows at 0.1% / 1% / 5% density. The dense baseline pays
+    // O(d·k) per row regardless of content (timed externally over a few
+    // rows — it is orders of magnitude slower); the gather kernel pays
+    // O(nnz·k) for byte-identical codes, and the sign-sparse matrix
+    // drops the multiplies on top of that.
+    sparse_phase(&mut b);
+
     b.finish_json(std::path::Path::new(concat!(
         env!("CARGO_MANIFEST_DIR"),
         "/../BENCH_scan.json"
     )));
+}
+
+/// One CSR batch of `rows` random sorted rows with `nnz` nonzeros each
+/// over `d` columns.
+fn random_csr(g: &mut Pcg64, rows: usize, d: usize, nnz: usize) -> crp::data::CsrMatrix {
+    let mut csr = crp::data::CsrMatrix::with_capacity(rows, rows * nnz, d);
+    let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+    for _ in 0..rows {
+        idx.clear();
+        while idx.len() < nnz {
+            idx.push(g.next_below(d as u64) as u32);
+            if idx.len() == nnz {
+                idx.sort_unstable();
+                idx.dedup();
+            }
+        }
+        let val: Vec<f32> = idx.iter().map(|_| g.next_f64() as f32 - 0.5).collect();
+        csr.push_row(&idx, &val);
+    }
+    csr
+}
+
+fn sparse_phase(b: &mut harness::Bench) {
+    use crp::coding::{BatchEncoder, CodingParams, Scheme};
+    use crp::projection::{MatrixKind, ProjectionConfig, Projector};
+
+    let (d, k) = (1usize << 20, 256usize);
+    let params = CodingParams::new(Scheme::TwoBit, 0.75);
+    let gaussian = Projector::new_cpu(ProjectionConfig {
+        k,
+        seed: 7,
+        ..Default::default()
+    });
+    let signs = Projector::new_cpu(ProjectionConfig {
+        k,
+        seed: 7,
+        kind: MatrixKind::SignSparse { s: 4 },
+        ..Default::default()
+    });
+    let mut g = Pcg64::new(41, 0);
+    let mut out: Vec<u64> = Vec::new();
+
+    // Dense baseline: project + encode 2 densified 1%-density rows,
+    // timed externally (one row costs d·k = 2^28 mults plus tile
+    // generation — far too slow for the adaptive harness loop).
+    let csr1 = random_csr(&mut g, 2, d, d / 100);
+    let mut enc = BatchEncoder::new(params.clone(), k);
+    let dense: Vec<f32> = (0..csr1.rows()).flat_map(|r| csr1.row_dense(r)).collect();
+    let t0 = std::time::Instant::now();
+    let x = gaussian.project_batch(&dense, csr1.rows(), d);
+    enc.encode_pack_batch_into(&x, csr1.rows(), &mut out);
+    let dense_ns = t0.elapsed().as_nanos() as f64 / csr1.rows() as f64;
+    b.record(
+        "sparse/encode-dense-baseline/d1M-nnz1pct",
+        dense_ns,
+        1e9 / dense_ns,
+    );
+
+    // Gather kernel at three densities: same codes, O(nnz·k) work.
+    for (tag, frac) in [("0.1pct", 1000usize), ("1pct", 100), ("5pct", 20)] {
+        let rows = 16usize;
+        let csr = random_csr(&mut g, rows, d, d / frac);
+        let mut enc = BatchEncoder::new(params.clone(), k);
+        b.run(
+            &format!("sparse/encode-csr-gather/d1M-nnz{tag}"),
+            rows as u64,
+            || enc.encode_csr(&gaussian, &csr, &mut out),
+        );
+    }
+
+    // Sign-sparse matrix at 1%: add/sub only, no Gaussian row gen.
+    let rows = 64usize;
+    let csr = random_csr(&mut g, rows, d, d / 100);
+    let mut enc = BatchEncoder::new(params, k);
+    b.run("sparse/encode-csr-sign/d1M-nnz1pct", rows as u64, || {
+        enc.encode_csr(&signs, &csr, &mut out)
+    });
 }

@@ -24,6 +24,7 @@ fn main() {
         d_tile: 1024,
         b_tile: 64,
         max_cached_tiles: 8,
+        ..Default::default()
     };
     let pure = Projector::new_cpu(cfg.clone());
     let pjrt = Projector::new_pjrt(cfg, rt.clone());

@@ -41,8 +41,16 @@ impl Default for BatcherConfig {
     }
 }
 
+/// One queued vector, in whichever form the caller holds it. Sparse
+/// jobs skip densification entirely: they project at O(nnz·k) through
+/// the gather kernel inside the same flush as their dense batchmates.
+enum JobInput {
+    Dense(Vec<f32>),
+    Sparse { indices: Vec<u32>, values: Vec<f32> },
+}
+
 struct Job {
-    vector: Vec<f32>,
+    input: JobInput,
     resp: mpsc::SyncSender<PackedCodes>,
 }
 
@@ -85,13 +93,35 @@ impl SketchBatcher {
     /// Submit a vector; blocks until its batch has been projected and
     /// coded. Dimension may vary per call (padded internally).
     pub fn sketch(&self, vector: Vec<f32>) -> crate::Result<PackedCodes> {
+        self.submit(JobInput::Dense(vector))
+    }
+
+    /// Submit one sparse vector as sorted (indices, values) triplets;
+    /// blocks like [`SketchBatcher::sketch`] and returns byte-identical
+    /// codes to sketching the densified vector — the projection replays
+    /// the dense kernel's operation sequence over the nonzeros only.
+    pub fn sketch_sparse(&self, indices: Vec<u32>, values: Vec<f32>) -> crate::Result<PackedCodes> {
+        anyhow::ensure!(
+            indices.len() == values.len(),
+            "indices {} != values {}",
+            indices.len(),
+            values.len()
+        );
+        anyhow::ensure!(
+            indices.windows(2).all(|w| w[0] < w[1]),
+            "sparse indices must be strictly increasing"
+        );
+        self.submit(JobInput::Sparse { indices, values })
+    }
+
+    fn submit(&self, input: JobInput) -> crate::Result<PackedCodes> {
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
         use std::sync::atomic::Ordering;
         self.metrics
             .batcher_queue_depth
             .fetch_add(1, Ordering::Relaxed);
         let sent = self.tx.send(Job {
-            vector,
+            input,
             resp: resp_tx,
         });
         if sent.is_err() {
@@ -118,6 +148,10 @@ fn batch_loop(
     // computed once (they are part of the hash function) and the code
     // scratch is reused, instead of reallocating both per flush.
     let mut encoder = BatchEncoder::new(coding, projector.cfg.k);
+    // Sparse-job scratch (projected row + gathered matrix rows), also
+    // reused across flushes.
+    let mut xrow = vec![0.0f32; projector.cfg.k];
+    let mut gather = Vec::new();
     loop {
         // Wait for the first job of a batch.
         let first = match rx.recv() {
@@ -140,15 +174,28 @@ fn batch_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        flush(&mut pending, &projector, &mut encoder, &metrics);
+        flush(
+            &mut pending,
+            &projector,
+            &mut encoder,
+            &mut xrow,
+            &mut gather,
+            &metrics,
+        );
     }
 }
 
-/// Execute one batch synchronously.
+/// Execute one batch synchronously. Dense members run through the
+/// batched ragged projector; sparse members replay the same kernel
+/// per-row over their nonzeros. Rows project independently (padding
+/// and batchmates never change a row's bits), so a mixed batch is
+/// byte-identical to an all-dense one.
 fn flush(
     pending: &mut Vec<Job>,
     projector: &Projector,
     encoder: &mut BatchEncoder,
+    xrow: &mut [f32],
+    gather: &mut Vec<f32>,
     metrics: &Metrics,
 ) {
     if pending.is_empty() {
@@ -156,7 +203,17 @@ fn flush(
     }
     let b = pending.len();
     let k = encoder.k();
-    let x = projector.project_ragged(pending.iter().map(|j| j.vector.as_slice()), b);
+    let n_dense = pending
+        .iter()
+        .filter(|j| matches!(j.input, JobInput::Dense(_)))
+        .count();
+    let x = projector.project_ragged(
+        pending.iter().filter_map(|j| match &j.input {
+            JobInput::Dense(v) => Some(v.as_slice()),
+            JobInput::Sparse { .. } => None,
+        }),
+        n_dense,
+    );
     // Count the batch before releasing waiters so a client that reads
     // stats immediately after its response sees its own work reflected.
     metrics
@@ -168,8 +225,20 @@ fn flush(
     metrics
         .vectors_projected
         .fetch_add(b as u64, std::sync::atomic::Ordering::Relaxed);
-    for (row, job) in pending.drain(..).enumerate() {
-        let packed = encoder.encode_pack(&x[row * k..(row + 1) * k]);
+    let mut drow = 0usize;
+    for job in pending.drain(..) {
+        let packed = match job.input {
+            JobInput::Dense(_) => {
+                let p = encoder.encode_pack(&x[drow * k..(drow + 1) * k]);
+                drow += 1;
+                p
+            }
+            JobInput::Sparse { indices, values } => {
+                xrow.fill(0.0);
+                projector.project_csr_row_into(&indices, &values, gather, xrow);
+                encoder.encode_pack(xrow)
+            }
+        };
         let _ = job.resp.send(packed);
     }
 }
@@ -279,6 +348,31 @@ mod tests {
         );
         assert_eq!(a, want_a);
         assert_eq!(c, want_c);
+    }
+
+    #[test]
+    fn sparse_job_matches_densified_dense_job() {
+        let (b, _) = mk(24, 4, 30);
+        let indices = vec![2u32, 7, 90];
+        let values = vec![0.5f32, -1.25, 2.0];
+        let mut dense = vec![0.0f32; 91];
+        for (&i, &v) in indices.iter().zip(&values) {
+            dense[i as usize] = v;
+        }
+        // Submit both concurrently so they share one mixed flush.
+        let b1 = b.clone();
+        let (i2, v2) = (indices.clone(), values.clone());
+        let h1 = std::thread::spawn(move || b1.sketch_sparse(i2, v2).unwrap());
+        let b2 = b.clone();
+        let h2 = std::thread::spawn(move || b2.sketch(dense).unwrap());
+        let (sparse, densified) = (h1.join().unwrap(), h2.join().unwrap());
+        assert_eq!(sparse, densified);
+        // An all-zero sparse vector is fine (projects to zeros).
+        let empty = b.sketch_sparse(vec![], vec![]).unwrap();
+        assert_eq!(empty, b.sketch(vec![]).unwrap());
+        // Bad shapes are rejected before queueing.
+        assert!(b.sketch_sparse(vec![3, 1], vec![1.0, 2.0]).is_err());
+        assert!(b.sketch_sparse(vec![1], vec![]).is_err());
     }
 
     #[test]

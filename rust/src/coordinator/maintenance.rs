@@ -182,6 +182,7 @@ mod tests {
             w: 0.0,
             k: 32,
             seed: 9,
+            kind: crate::projection::MatrixKind::Gaussian,
         };
         registry
             .create("second", second_spec, CollectionOptions::for_spec(&second_spec))

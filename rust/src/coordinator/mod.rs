@@ -5,16 +5,22 @@
 //! projects them (dynamic batching onto the fixed AOT artifact shapes),
 //! codes them with that collection's scheme, and stores only the packed
 //! codes — the paper's storage story made operational, with the coding
-//! choice made *per workload*. Queries then estimate similarities or
-//! scan for near neighbors purely over the compact codes.
+//! choice made *per workload*. Sparse inputs skip densification
+//! entirely: `RegisterSparse` frames carry CSR batches (validated at
+//! every decode boundary) that are projected at O(nnz·k) by the gather
+//! kernel in [`crate::projection::sparse`], producing codes
+//! byte-identical to the dense path; collections created with a
+//! sign-sparse matrix kind drop the Gaussian multiplies too. Queries
+//! then estimate similarities or scan for near neighbors purely over
+//! the compact codes.
 //!
 //! ```text
 //!  TCP (length-prefixed binary frames)
 //!   └── server  — front-end (--server-mode, --max-conns): blocking
 //!        │        thread-per-connection loop (the oracle, default) or
 //!        │        the epoll reactor (one thread, 10k+ connections,
-//!        │        pipelined zero-copy framing, Register/TopK
-//!        │        coalescing, write backpressure — see `reactor`);
+//!        │        pipelined zero-copy framing, Register/RegisterSparse/
+//!        │        TopK coalescing, write backpressure — see `reactor`);
 //!        │        byte-identical responses either way
 //!        └── router — request dispatch; legacy frames → "default",
 //!             │       Scoped frames → named collection
@@ -24,7 +30,10 @@
 //!                  ├── batcher     — per collection: groups projection
 //!                  │                 work into (b_tile)-sized batches
 //!                  │                 with a deadline, executes on the
-//!                  │                 Projector (PJRT or pure Rust)
+//!                  │                 Projector (PJRT or pure Rust);
+//!                  │                 CSR rows take the fused O(nnz·k)
+//!                  │                 encode_csr path, byte-identical
+//!                  │                 to densify-then-project
 //!                  ├── store       — per collection: sharded map
 //!                  │                 id → PackedCodes, mirrored into an
 //!                  │                 epoch-buffered scan arena

@@ -173,6 +173,18 @@ pub fn render(metrics: &Metrics, registry: &Registry, replica: Option<&ReplicaSt
     // Per-collection engine state, straight off the registry. `list()`
     // is sorted by name, so scrapes are stable.
     let collections = registry.list();
+
+    // Sparse-ingest row weight: nonzeros per CSR row, per collection (a
+    // count histogram — the power-of-two buckets read as nnz, not µs).
+    type_line(&mut out, "crp_ingest_nnz", "histogram");
+    for c in &collections {
+        latency_hist(
+            &mut out,
+            "crp_ingest_nnz",
+            &format!("collection=\"{}\"", c.name),
+            &c.ingest_nnz,
+        );
+    }
     for (name, kind, get) in [
         (
             "crp_collection_rows",
@@ -334,6 +346,10 @@ mod tests {
         assert!(text.contains("crp_request_duration_us_sum{kind=\"knn\"} 5100"));
         // The in-memory default collection renders its gauges.
         assert!(text.contains("crp_collection_rows{collection=\"default\"} 0"));
+        // Sparse ingest renders per collection, zeroed before any
+        // RegisterSparse traffic.
+        assert!(text.contains("# TYPE crp_ingest_nnz histogram"));
+        assert!(text.contains("crp_ingest_nnz_count{collection=\"default\"} 0"));
         // No durability → no WAL series body, but the TYPE line stays.
         assert!(text.contains("# TYPE crp_wal_append_us histogram"));
         assert!(!text.contains("crp_wal_append_us_count"));

@@ -37,6 +37,7 @@ use super::protocol::Request;
 pub enum RequestKind {
     Register,
     RegisterBatch,
+    RegisterSparse,
     Remove,
     Estimate,
     Knn,
@@ -47,9 +48,10 @@ pub enum RequestKind {
 }
 
 /// Every kind, in exposition order.
-pub const REQUEST_KINDS: [RequestKind; 9] = [
+pub const REQUEST_KINDS: [RequestKind; 10] = [
     RequestKind::Register,
     RequestKind::RegisterBatch,
+    RequestKind::RegisterSparse,
     RequestKind::Remove,
     RequestKind::Estimate,
     RequestKind::Knn,
@@ -66,6 +68,7 @@ impl RequestKind {
         match self {
             RequestKind::Register => "register",
             RequestKind::RegisterBatch => "register_batch",
+            RequestKind::RegisterSparse => "register_sparse",
             RequestKind::Remove => "remove",
             RequestKind::Estimate => "estimate",
             RequestKind::Knn => "knn",
@@ -84,6 +87,7 @@ impl RequestKind {
             Request::Scoped { inner, .. } => RequestKind::of(inner),
             Request::Register { .. } => RequestKind::Register,
             Request::RegisterBatch { .. } => RequestKind::RegisterBatch,
+            Request::RegisterSparse { .. } => RequestKind::RegisterSparse,
             Request::Remove { .. } => RequestKind::Remove,
             Request::Estimate { .. } | Request::EstimateVec { .. } => RequestKind::Estimate,
             Request::Knn { .. } => RequestKind::Knn,
@@ -111,6 +115,7 @@ impl RequestKind {
 pub struct RequestHistograms {
     register: LatencyHistogram,
     register_batch: LatencyHistogram,
+    register_sparse: LatencyHistogram,
     remove: LatencyHistogram,
     estimate: LatencyHistogram,
     knn: LatencyHistogram,
@@ -125,6 +130,7 @@ impl RequestHistograms {
         match kind {
             RequestKind::Register => &self.register,
             RequestKind::RegisterBatch => &self.register_batch,
+            RequestKind::RegisterSparse => &self.register_sparse,
             RequestKind::Remove => &self.remove,
             RequestKind::Estimate => &self.estimate,
             RequestKind::Knn => &self.knn,
@@ -277,6 +283,13 @@ mod tests {
                 vectors: vec![]
             }),
             RequestKind::RegisterBatch
+        );
+        assert_eq!(
+            RequestKind::of(&Request::RegisterSparse {
+                ids: vec![],
+                csr: crate::data::sparse::CsrMatrix::with_capacity(0, 0, 4)
+            }),
+            RequestKind::RegisterSparse
         );
         assert_eq!(
             RequestKind::of(&Request::Remove { id: "x".into() }),

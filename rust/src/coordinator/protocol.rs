@@ -20,6 +20,8 @@
 use std::io::{Read, Write};
 
 use crate::coding::Scheme;
+use crate::data::sparse::CsrMatrix;
+use crate::projection::MatrixKind;
 
 /// Maximum accepted frame size (guards the server against bad clients).
 pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
@@ -56,6 +58,15 @@ pub enum Request {
         ids: Vec<String>,
         vectors: Vec<Vec<f32>>,
     },
+    /// Bulk sparse registration: `ids[i]` stores the sketch of row `i`
+    /// of the CSR batch. The server projects each row at O(nnz·k)
+    /// through the gather kernel, producing codes byte-identical to
+    /// densifying the rows and sending `RegisterBatch` — the sparse
+    /// frame is a transport + compute optimization, never a semantic
+    /// one. The CSR structure is validated at the decode boundary
+    /// ([`crate::data::sparse::CsrMatrix::validate`]), so a crafted
+    /// frame errors cleanly instead of panicking downstream.
+    RegisterSparse { ids: Vec<String>, csr: CsrMatrix },
     /// Drop the sketch stored under `id` (logged to the WAL like any
     /// other mutation when durability is enabled).
     Remove { id: String },
@@ -87,6 +98,9 @@ pub enum Request {
     /// `checkpoint_every` sets the collection's own checkpoint cadence
     /// (0 = the server's global `--checkpoint-every`); it rides as an
     /// optional frame tail, so pre-cadence client frames still decode.
+    /// `kind` picks the projection matrix family; non-Gaussian kinds
+    /// ride as a second optional tail after `checkpoint_every`, so a
+    /// Gaussian create stays byte-identical to the pre-sparse frame.
     CreateCollection {
         name: String,
         scheme: Scheme,
@@ -95,6 +109,7 @@ pub enum Request {
         k: u64,
         seed: u64,
         checkpoint_every: u64,
+        kind: MatrixKind,
     },
     /// Drop a named collection (its durable state is deleted).
     DropCollection { name: String },
@@ -402,6 +417,12 @@ impl Enc<'_> {
             self.0.extend_from_slice(&x.to_le_bytes());
         }
     }
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
     fn bytes(&mut self, b: &[u8]) {
         self.u32(b.len() as u32);
         self.0.extend_from_slice(b);
@@ -447,6 +468,15 @@ impl<'a> Dec<'a> {
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u32s(&mut self) -> crate::Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n * 4 <= self.buf.len(), "bad u32-array length");
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
     fn bytes(&mut self) -> crate::Result<Vec<u8>> {
@@ -530,6 +560,7 @@ impl Request {
                 k,
                 seed,
                 checkpoint_every,
+                kind,
             } => {
                 e.tag(10);
                 e.str(name);
@@ -539,6 +570,12 @@ impl Request {
                 e.u64(*k);
                 e.u64(*seed);
                 e.u64(*checkpoint_every);
+                // Optional tail: Gaussian (the default) is omitted so
+                // pre-sparse create frames stay byte-identical.
+                if *kind != MatrixKind::Gaussian {
+                    e.u8(kind.code());
+                    e.u32(kind.param());
+                }
             }
             Request::DropCollection { name } => {
                 e.tag(11);
@@ -577,6 +614,20 @@ impl Request {
                 e.u32(*max);
             }
             Request::Promote => e.tag(18),
+            Request::RegisterSparse { ids, csr } => {
+                e.tag(19);
+                e.u32(ids.len() as u32);
+                for id in ids {
+                    e.str(id);
+                }
+                e.u64(csr.cols as u64);
+                e.u32(csr.indptr.len() as u32);
+                for &p in &csr.indptr {
+                    e.u32(p as u32);
+                }
+                e.u32s(&csr.indices);
+                e.f32s(&csr.values);
+            }
         }
     }
 
@@ -658,6 +709,15 @@ impl Request {
                 // Optional tail: frames from pre-cadence clients end at
                 // `seed` and mean "use the server's global cadence".
                 let checkpoint_every = if d.pos < buf.len() { d.u64()? } else { 0 };
+                // Second optional tail: pre-sparse frames (and Gaussian
+                // creates from new clients) end here.
+                let kind = if d.pos < buf.len() {
+                    let code = d.u8()?;
+                    let param = d.u32()?;
+                    MatrixKind::from_wire(code, param)?
+                } else {
+                    MatrixKind::Gaussian
+                };
                 Request::CreateCollection {
                     name,
                     scheme,
@@ -666,6 +726,7 @@ impl Request {
                     k,
                     seed,
                     checkpoint_every,
+                    kind,
                 }
             }
             11 => Request::DropCollection { name: d.str()? },
@@ -704,6 +765,34 @@ impl Request {
             },
             17 => Request::SlowQueries { max: d.u32()? },
             18 => Request::Promote,
+            19 => {
+                let n_ids = d.u32()? as usize;
+                anyhow::ensure!(n_ids * 4 <= buf.len(), "bad id count");
+                let mut ids = Vec::with_capacity(n_ids);
+                for _ in 0..n_ids {
+                    ids.push(d.str()?);
+                }
+                let cols = d.u64()? as usize;
+                let indptr: Vec<usize> = d.u32s()?.into_iter().map(|p| p as usize).collect();
+                let indices = d.u32s()?;
+                let values = d.f32s()?;
+                let csr = CsrMatrix {
+                    indptr,
+                    indices,
+                    values,
+                    cols,
+                };
+                // Decode-boundary validation: a crafted frame errors
+                // here instead of panicking on slice indexing later.
+                csr.validate()?;
+                anyhow::ensure!(
+                    ids.len() == csr.rows(),
+                    "ids {} != rows {}",
+                    ids.len(),
+                    csr.rows()
+                );
+                Request::RegisterSparse { ids, csr }
+            }
             t => anyhow::bail!("unknown request tag {t}"),
         };
         d.done()?;
@@ -1214,6 +1303,15 @@ mod tests {
         assert_eq!(r, back);
     }
 
+    /// A small well-formed CSR batch: 3 rows over 10 columns.
+    fn sample_csr() -> CsrMatrix {
+        let mut m = CsrMatrix::with_capacity(3, 5, 10);
+        m.push_row(&[0, 3, 7], &[1.0, -2.0, 0.5]);
+        m.push_row(&[9], &[4.0]);
+        m.push_row(&[], &[]);
+        m
+    }
+
     fn roundtrip_resp(r: Response) {
         let enc = r.encode();
         let back = Response::decode(&enc).unwrap();
@@ -1277,6 +1375,25 @@ mod tests {
             k: 1024,
             seed: 42,
             checkpoint_every: 50_000,
+            kind: MatrixKind::Gaussian,
+        });
+        roundtrip_req(Request::CreateCollection {
+            name: "sparse-text".into(),
+            scheme: Scheme::OneBit,
+            w: 0.0,
+            bits: 1,
+            k: 256,
+            seed: 7,
+            checkpoint_every: 0,
+            kind: MatrixKind::SignSparse { s: 100 },
+        });
+        roundtrip_req(Request::RegisterSparse {
+            ids: vec!["a".into(), "β".into(), "c".into()],
+            csr: sample_csr(),
+        });
+        roundtrip_req(Request::RegisterSparse {
+            ids: vec![],
+            csr: CsrMatrix::with_capacity(0, 0, 0),
         });
         roundtrip_req(Request::DropCollection { name: "old".into() });
         roundtrip_req(Request::ListCollections);
@@ -1324,6 +1441,10 @@ mod tests {
             Request::RegisterBatch {
                 ids: vec!["a".into()],
                 vectors: vec![vec![2.0]],
+            },
+            Request::RegisterSparse {
+                ids: vec!["a".into(), "b".into(), "c".into()],
+                csr: sample_csr(),
             },
             Request::Remove { id: "x".into() },
             Request::Persist,
@@ -1458,6 +1579,7 @@ mod tests {
             k: 64,
             seed: 9,
             checkpoint_every: 0,
+            kind: MatrixKind::Gaussian,
         };
         let mut old_frame = with_tail.encode();
         assert_eq!(old_frame[0], 10);
@@ -1812,6 +1934,95 @@ mod tests {
         let mut torn = stats.encode();
         torn.truncate(torn.len() - 3);
         assert!(Response::decode(&torn).is_err());
+    }
+
+    /// PR9 wire pins: the sparse-ingest frame owns tag 19, a Gaussian
+    /// `CreateCollection` stays byte-identical to the pre-sparse
+    /// layout (the kind tail is omitted, not zero-encoded), and a
+    /// malformed CSR frame errors at decode instead of panicking
+    /// downstream.
+    #[test]
+    fn sparse_frames_and_matrix_kind_tail() {
+        let sparse = Request::RegisterSparse {
+            ids: vec!["a".into(), "b".into(), "c".into()],
+            csr: sample_csr(),
+        };
+        assert_eq!(sparse.encode()[0], 19);
+
+        // Gaussian create: frame ends right after `checkpoint_every` —
+        // tag | str name | u8 scheme | f64 w | u32 bits | u64 k |
+        // u64 seed | u64 cadence. No kind tail.
+        let gaussian = Request::CreateCollection {
+            name: "c".into(),
+            scheme: Scheme::TwoBit,
+            w: 0.75,
+            bits: 2,
+            k: 64,
+            seed: 9,
+            checkpoint_every: 10,
+            kind: MatrixKind::Gaussian,
+        };
+        let genc = gaussian.encode();
+        assert_eq!(genc.len(), 1 + (4 + 1) + 1 + 8 + 4 + 8 + 8 + 8);
+        // A sign-sparse create appends exactly u8 code + u32 s.
+        let signed = Request::CreateCollection {
+            name: "c".into(),
+            scheme: Scheme::TwoBit,
+            w: 0.75,
+            bits: 2,
+            k: 64,
+            seed: 9,
+            checkpoint_every: 10,
+            kind: MatrixKind::SignSparse { s: 64 },
+        };
+        let senc = signed.encode();
+        assert_eq!(senc.len(), genc.len() + 5);
+        assert_eq!(&senc[..genc.len()], genc.as_slice());
+        // Unknown kind code / degenerate s reject at decode.
+        let mut bad = senc.clone();
+        bad[genc.len()] = 9;
+        assert!(Request::decode(&bad).is_err());
+        let mut bad = senc.clone();
+        bad[genc.len() + 1..].copy_from_slice(&0u32.to_le_bytes());
+        assert!(Request::decode(&bad).is_err());
+        // A partial kind tail is a truncated frame, not a default.
+        let mut torn = senc.clone();
+        torn.truncate(torn.len() - 2);
+        assert!(Request::decode(&torn).is_err());
+
+        // Malformed CSR payloads: every corruption errors cleanly.
+        let good = sparse.encode();
+        assert!(Request::decode(&good).is_ok());
+        // ids count disagreeing with the row count.
+        let mismatched = Request::RegisterSparse {
+            ids: vec!["only-one".into()],
+            csr: sample_csr(),
+        };
+        assert!(Request::decode(&mismatched.encode()).is_err());
+        // Out-of-range column index.
+        let mut csr = sample_csr();
+        csr.indices[1] = 10;
+        let oob = Request::RegisterSparse {
+            ids: vec!["a".into(), "b".into(), "c".into()],
+            csr,
+        };
+        assert!(Request::decode(&oob.encode()).is_err());
+        // Unsorted indices within a row.
+        let mut csr = sample_csr();
+        csr.indices[1] = 0;
+        let unsorted = Request::RegisterSparse {
+            ids: vec!["a".into(), "b".into(), "c".into()],
+            csr,
+        };
+        assert!(Request::decode(&unsorted.encode()).is_err());
+        // indptr end disagreeing with nnz.
+        let mut csr = sample_csr();
+        *csr.indptr.last_mut().unwrap() = 2;
+        let torn_ptr = Request::RegisterSparse {
+            ids: vec!["a".into(), "b".into(), "c".into()],
+            csr,
+        };
+        assert!(Request::decode(&torn_ptr.encode()).is_err());
     }
 
     /// Satellite pins: the buffer-reusing framing variants are

@@ -24,8 +24,12 @@
 //!   arrive in the same tick for the same collection fuse into one
 //!   [`Collection::register_batch`] call — one projection, one WAL
 //!   record — and each member still receives its own `Registered{id}`
-//!   frame. `TopK` requests with the same `(collection, n)` fuse into
-//!   one `scan_topk_batch` sweep and the results are split back.
+//!   frame. `RegisterSparse` runs fuse the same way: CSR frames for the
+//!   same collection concatenate into one
+//!   [`Collection::register_sparse`] call and each member gets its own
+//!   `RegisteredBatch` frame with its own row count. `TopK` requests
+//!   with the same `(collection, n)` fuse into one `scan_topk_batch`
+//!   sweep and the results are split back.
 //!   Fusion only ever consumes the *front* run of each connection's
 //!   queue, so per-connection program order (and therefore state) is
 //!   preserved. Aggregate counters (`batches_executed`,
@@ -267,6 +271,7 @@ mod imp {
     use crate::coordinator::protocol::{self, Request, Response};
     use crate::coordinator::registry::{Collection, DEFAULT_COLLECTION, MAX_BULK_CELLS};
     use crate::coordinator::server::{observe_request, reject_connection, ServiceState};
+    use crate::data::sparse::CsrMatrix;
 
     /// Pending write bytes past which a connection's read interest is
     /// dropped (the backpressure trigger).
@@ -323,7 +328,8 @@ mod imp {
         tok: usize,
         scope: Option<String>,
         decode_us: u64,
-        /// Queries contributed (TopK fusion; always 1 for Register).
+        /// Work items contributed: queries for TopK fusion, CSR rows
+        /// for RegisterSparse fusion, always 1 for Register.
         count: usize,
     }
 
@@ -641,6 +647,26 @@ mod imp {
                                     );
                                 }
                             }
+                            // Sparse bulk ingest fuses like Register:
+                            // CSR frames concatenate into one call.
+                            Request::RegisterSparse { ids, csr } if !replica_active => {
+                                self.fuse_register_sparse(&active, tok, None, ids, csr, decode_us)
+                            }
+                            Request::Scoped { collection, inner }
+                                if !replica_active
+                                    && matches!(*inner, Request::RegisterSparse { .. }) =>
+                            {
+                                if let Request::RegisterSparse { ids, csr } = *inner {
+                                    self.fuse_register_sparse(
+                                        &active,
+                                        tok,
+                                        Some(collection),
+                                        ids,
+                                        csr,
+                                        decode_us,
+                                    );
+                                }
+                            }
                             Request::TopK { vectors, n } => {
                                 self.fuse_topk(&active, tok, None, vectors, n, decode_us)
                             }
@@ -878,6 +904,171 @@ mod imp {
                     decode_us,
                     count: 1,
                 });
+            }
+        }
+
+        fn fuse_register_sparse(
+            &mut self,
+            active: &[usize],
+            tok: usize,
+            scope: Option<String>,
+            ids: Vec<String>,
+            csr: CsrMatrix,
+            decode_us: u64,
+        ) {
+            let Some(col) = self.fuse_target(scope.as_deref()) else {
+                let req = Request::RegisterSparse { ids, csr };
+                self.respond_one(tok, rewrap(scope, req), decode_us);
+                return;
+            };
+            if ids.len() != csr.rows() {
+                // A malformed frame replays through the router for the
+                // exact per-request error instead of poisoning a fuse.
+                let req = Request::RegisterSparse { ids, csr };
+                self.respond_one(tok, rewrap(scope, req), decode_us);
+                return;
+            }
+            let mut all_ids = ids;
+            let mut merged = csr;
+            let mut members = vec![FuseMember {
+                tok,
+                scope,
+                decode_us,
+                count: merged.rows(),
+            }];
+            // Per-frame nnz, parallel to `members` (each member's
+            // slow-query candidates magnitude — thread-mode parity).
+            let mut nnzs = vec![merged.nnz() as u64];
+            self.pull_register_sparse(tok, &col, &mut all_ids, &mut merged, &mut members, &mut nnzs);
+            for &other in active {
+                if other != tok {
+                    self.pull_register_sparse(
+                        other, &col, &mut all_ids, &mut merged, &mut members, &mut nnzs,
+                    );
+                }
+            }
+            if members.len() == 1 {
+                let m = members.pop().unwrap();
+                let req = Request::RegisterSparse {
+                    ids: all_ids,
+                    csr: merged,
+                };
+                self.respond_one(m.tok, rewrap(m.scope, req), m.decode_us);
+                return;
+            }
+            let b = members.len() as u64;
+            let h0 = Instant::now();
+            let resp = col.register_sparse(all_ids, merged);
+            let handle_each = (h0.elapsed().as_micros() as u64 / b).max(1);
+            self.state
+                .metrics
+                .reactor_coalesced_batches
+                .fetch_add(1, Ordering::Relaxed);
+            let fused_ok = matches!(resp, Response::RegisteredBatch { .. });
+            for (m, nnz) in members.into_iter().zip(nnzs) {
+                let meta = obs::ReqMeta {
+                    kind: obs::RequestKind::RegisterSparse,
+                    collection: m.scope,
+                    candidates: Some(nnz),
+                };
+                if fused_ok {
+                    let one = Response::RegisteredBatch {
+                        count: m.count as u64,
+                    };
+                    self.push_response(m.tok, &one, &meta, m.decode_us, handle_each);
+                } else {
+                    self.push_response(m.tok, &resp, &meta, m.decode_us, handle_each);
+                }
+            }
+        }
+
+        /// Pop the leading run of same-collection `RegisterSparse`
+        /// requests off one connection's queue into the fused CSR batch
+        /// (indices/values concatenate; indptr re-offsets). Only the
+        /// front run is taken, so program order within the connection
+        /// is untouched.
+        fn pull_register_sparse(
+            &mut self,
+            tok: usize,
+            col: &Arc<Collection>,
+            ids: &mut Vec<String>,
+            merged: &mut CsrMatrix,
+            members: &mut Vec<FuseMember>,
+            nnzs: &mut Vec<u64>,
+        ) {
+            let name = &col.name;
+            loop {
+                if members.len() >= MAX_FUSE {
+                    return;
+                }
+                let Some(conn) = self.conns[tok].as_mut() else {
+                    return;
+                };
+                let (rows, nnz) = match conn.queue.front() {
+                    Some(Pending::Req {
+                        req: Request::RegisterSparse { ids, csr },
+                        ..
+                    }) if name == DEFAULT_COLLECTION && ids.len() == csr.rows() => {
+                        (csr.rows(), csr.nnz())
+                    }
+                    Some(Pending::Req {
+                        req: Request::Scoped { collection, inner },
+                        ..
+                    }) if collection == name => match inner.as_ref() {
+                        Request::RegisterSparse { ids, csr } if ids.len() == csr.rows() => {
+                            (csr.rows(), csr.nnz())
+                        }
+                        _ => return,
+                    },
+                    _ => return,
+                };
+                // Keep the fused batch inside the bulk guards the
+                // members would individually never hit: the nnz budget
+                // and the projected-output workspace.
+                if merged.nnz() + nnz > MAX_BULK_CELLS
+                    || (merged.rows() + rows).saturating_mul(col.k) > MAX_BULK_CELLS
+                {
+                    return;
+                }
+                let Some(Pending::Req { req, decode_us }) = conn.queue.pop_front() else {
+                    return;
+                };
+                let (scope, frame_ids, csr) = match req {
+                    Request::RegisterSparse { ids, csr } => (None, ids, csr),
+                    Request::Scoped { collection, inner } => match *inner {
+                        Request::RegisterSparse { ids, csr } => (Some(collection), ids, csr),
+                        other => {
+                            conn.queue.push_front(Pending::Req {
+                                req: Request::Scoped {
+                                    collection,
+                                    inner: Box::new(other),
+                                },
+                                decode_us,
+                            });
+                            return;
+                        }
+                    },
+                    other => {
+                        conn.queue.push_front(Pending::Req {
+                            req: other,
+                            decode_us,
+                        });
+                        return;
+                    }
+                };
+                let base = merged.nnz();
+                merged.indices.extend_from_slice(&csr.indices);
+                merged.values.extend_from_slice(&csr.values);
+                merged.indptr.extend(csr.indptr.iter().skip(1).map(|&p| base + p));
+                merged.cols = merged.cols.max(csr.cols);
+                ids.extend(frame_ids);
+                members.push(FuseMember {
+                    tok,
+                    scope,
+                    decode_us,
+                    count: csr.rows(),
+                });
+                nnzs.push(csr.nnz() as u64);
             }
         }
 

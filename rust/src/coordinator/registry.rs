@@ -45,20 +45,25 @@ use std::time::Instant;
 use crate::coding::{BatchEncoder, CodingParams, PackedCodes, Scheme};
 use crate::coordinator::batcher::{BatcherConfig, SketchBatcher};
 use crate::coordinator::durability::{crc32_update, Durability, DurabilityConfig, FsyncPolicy};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{LatencyHistogram, Metrics};
 use crate::coordinator::protocol::{CollectionInfo, KnnHit, Response};
 use crate::coordinator::store::{DrainSignal, SketchStore};
+use crate::data::sparse::CsrMatrix;
 use crate::estimator::CollisionEstimator;
 use crate::lsh::IndexConfig;
-use crate::projection::{ProjectionConfig, Projector};
+use crate::projection::{MatrixKind, ProjectionConfig, Projector};
 use crate::scan::EpochConfig;
 
 /// Name of the implicit collection legacy (no-namespace) frames route to.
 pub const DEFAULT_COLLECTION: &str = "default";
 
-/// Registry MANIFEST file magic (version in the name: `CRPMANI2` adds
-/// per-collection options — checkpoint cadence + index shape).
-pub const MANIFEST_MAGIC: &[u8; 8] = b"CRPMANI2";
+/// Registry MANIFEST file magic (version in the name: `CRPMANI3` adds
+/// the projection matrix kind — family code + parameter — per entry).
+pub const MANIFEST_MAGIC: &[u8; 8] = b"CRPMANI3";
+
+/// The PR-5 MANIFEST magic; still readable (entries carry options but
+/// no matrix kind, which defaults to Gaussian).
+pub const MANIFEST_MAGIC_V2: &[u8; 8] = b"CRPMANI2";
 
 /// The PR-4 MANIFEST magic; still readable (entries carry no options,
 /// which default from the spec).
@@ -84,6 +89,11 @@ pub struct CollectionSpec {
     pub k: usize,
     /// Seed of the collection's virtual projection matrix.
     pub seed: u64,
+    /// Projection matrix family (Gaussian or very-sparse ±1). Part of
+    /// the coding identity — two collections differing only in kind
+    /// produce incomparable sketches — so it is MANIFEST-recorded and
+    /// drift-checked like scheme/w/k/seed.
+    pub kind: MatrixKind,
 }
 
 impl CollectionSpec {
@@ -115,6 +125,9 @@ impl CollectionSpec {
                 self.w
             ),
         }
+        if let MatrixKind::SignSparse { s } = self.kind {
+            anyhow::ensure!(s >= 1, "sign-sparse density parameter s must be >= 1");
+        }
         Ok(())
     }
 
@@ -124,6 +137,7 @@ impl CollectionSpec {
             && self.w.to_bits() == other.w.to_bits()
             && self.k == other.k
             && self.seed == other.seed
+            && self.kind == other.kind
     }
 }
 
@@ -173,6 +187,10 @@ pub struct Collection {
     pub estimator: CollisionEstimator,
     pub batcher: SketchBatcher,
     pub durability: Option<Arc<Durability>>,
+    /// Nonzeros per sparse-ingested row (a count histogram — the "µs"
+    /// of [`LatencyHistogram`] reads as "nonzeros" here). Only
+    /// `RegisterSparse` traffic lands in it.
+    pub ingest_nnz: LatencyHistogram,
     projector: Arc<Projector>,
     bulk: Mutex<BulkIngest>,
     metrics: Arc<Metrics>,
@@ -204,6 +222,12 @@ impl Collection {
             projector.cfg.seed,
             spec.k,
             spec.seed
+        );
+        anyhow::ensure!(
+            projector.cfg.kind == spec.kind,
+            "projector matrix kind {} does not match collection spec kind {}",
+            projector.cfg.kind,
+            spec.kind
         );
         let coding = spec.coding();
         let batcher = SketchBatcher::spawn(
@@ -237,6 +261,7 @@ impl Collection {
             batcher,
             store,
             durability,
+            ingest_nnz: LatencyHistogram::default(),
             projector,
             bulk: Mutex::new(BulkIngest {
                 encoder: BatchEncoder::new(coding, spec.k),
@@ -563,6 +588,69 @@ impl Collection {
             },
         }
     }
+
+    /// The sparse bulk-ingest path: each CSR row is projected at
+    /// O(nnz·k) through the gather kernel (never densified), encoded,
+    /// and packed into the same reused word buffer as
+    /// [`Collection::register_batch`] — one WAL record, one bulk arena
+    /// insert. Sketches are byte-identical to densifying the rows and
+    /// calling `register_batch` (pinned by the sparse proptests).
+    pub(crate) fn register_sparse(&self, ids: Vec<String>, csr: CsrMatrix) -> Response {
+        if ids.len() != csr.rows() {
+            return Response::Error {
+                message: format!(
+                    "ids/rows length mismatch ({} vs {})",
+                    ids.len(),
+                    csr.rows()
+                ),
+            };
+        }
+        if ids.is_empty() {
+            return Response::RegisteredBatch { count: 0 };
+        }
+        let t0 = Instant::now();
+        let b = csr.rows();
+        // The sparse analogue of the dense workspace cap: the frame's
+        // own size bounds nnz, but the projected output is b·k cells
+        // regardless of sparsity, so both terms are guarded.
+        if csr.nnz() > MAX_BULK_CELLS || b.saturating_mul(self.k) > MAX_BULK_CELLS {
+            return Response::Error {
+                message: format!(
+                    "sparse batch of {b} rows / {} nonzeros exceeds the bulk \
+                     workspace limit of {MAX_BULK_CELLS} cells",
+                    csr.nnz()
+                ),
+            };
+        }
+        let stored = {
+            let mut bulk = self.bulk.lock().unwrap();
+            let BulkIngest { encoder, words } = &mut *bulk;
+            encoder.encode_csr(&self.projector, &csr, words);
+            let words: &[u64] = words;
+            match &self.durability {
+                Some(d) => d.log_put_rows(&ids, words, || self.store.put_rows(&ids, words)),
+                None => self.store.put_rows(&ids, words),
+            }
+        };
+        match stored {
+            Ok(()) => {
+                self.metrics.registered.fetch_add(b as u64, Ordering::Relaxed);
+                self.metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.vectors_projected.fetch_add(b as u64, Ordering::Relaxed);
+                self.metrics
+                    .register_latency
+                    .record_n((t0.elapsed().as_micros() as u64 / b as u64).max(1), b as u64);
+                for row in 0..b {
+                    let (idx, _) = csr.row(row);
+                    self.ingest_nnz.record(idx.len() as u64);
+                }
+                Response::RegisteredBatch { count: b as u64 }
+            }
+            Err(e) => Response::Error {
+                message: format!("sparse register failed: {e}"),
+            },
+        }
+    }
 }
 
 /// How the registry builds its collections.
@@ -614,6 +702,7 @@ impl Registry {
             w: default_coding.w,
             k: default_projector.cfg.k,
             seed: default_projector.cfg.seed,
+            kind: default_projector.cfg.kind,
         };
         default_spec.validate()?;
         let reg = Arc::new(Registry {
@@ -721,6 +810,7 @@ impl Registry {
             None => Arc::new(Projector::new_cpu(ProjectionConfig {
                 k: spec.k,
                 seed: spec.seed,
+                kind: spec.kind,
                 ..Default::default()
             })),
         };
@@ -907,21 +997,22 @@ fn manifest_path(root: &Path) -> PathBuf {
 /// deterministic bytes):
 ///
 /// ```text
-/// magic "CRPMANI2" | u32 n |
+/// magic "CRPMANI3" | u32 n |
 ///   n × ( u32 name_len | name | u8 scheme | f64 w | u32 bits | u64 k | u64 seed
-///         | u64 checkpoint_every | u32 bands | u32 band_bits | u32 probes )
+///         | u64 checkpoint_every | u32 bands | u32 band_bits | u32 probes
+///         | u8 kind | u32 kind_param )
 /// | u32 crc32 (everything after the magic)
 /// ```
 ///
-/// `CRPMANI1` files (no per-entry options) are still read; options
-/// default from each entry's spec.
+/// `CRPMANI2` files (no matrix kind; defaults to Gaussian) and
+/// `CRPMANI1` files (no per-entry options either) are still read.
 fn write_manifest(
     path: &Path,
     entries: &[(String, CollectionSpec, CollectionOptions)],
 ) -> crate::Result<()> {
     let mut sorted: Vec<&(String, CollectionSpec, CollectionOptions)> = entries.iter().collect();
     sorted.sort_by(|a, b| a.0.cmp(&b.0));
-    let mut payload = Vec::with_capacity(16 + entries.len() * 68);
+    let mut payload = Vec::with_capacity(16 + entries.len() * 73);
     payload.extend_from_slice(&(sorted.len() as u32).to_le_bytes());
     for (name, spec, opts) in sorted {
         payload.extend_from_slice(&(name.len() as u32).to_le_bytes());
@@ -935,6 +1026,8 @@ fn write_manifest(
         payload.extend_from_slice(&(opts.index.bands as u32).to_le_bytes());
         payload.extend_from_slice(&opts.index.band_bits.to_le_bytes());
         payload.extend_from_slice(&(opts.index.probes as u32).to_le_bytes());
+        payload.push(spec.kind.code());
+        payload.extend_from_slice(&spec.kind.param().to_le_bytes());
     }
     let mut bytes = Vec::with_capacity(12 + payload.len());
     bytes.extend_from_slice(MANIFEST_MAGIC);
@@ -961,11 +1054,14 @@ fn read_manifest(
     let bytes = std::fs::read(path)?;
     anyhow::ensure!(
         bytes.len() >= MANIFEST_MAGIC.len() + 8
-            && (&bytes[..8] == MANIFEST_MAGIC || &bytes[..8] == MANIFEST_MAGIC_V1),
+            && (&bytes[..8] == MANIFEST_MAGIC
+                || &bytes[..8] == MANIFEST_MAGIC_V2
+                || &bytes[..8] == MANIFEST_MAGIC_V1),
         "not a CRP registry MANIFEST: {}",
         path.display()
     );
-    let v2 = &bytes[..8] == MANIFEST_MAGIC;
+    let v3 = &bytes[..8] == MANIFEST_MAGIC;
+    let v2 = v3 || &bytes[..8] == MANIFEST_MAGIC_V2;
     let payload = &bytes[8..bytes.len() - 4];
     let want = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
     anyhow::ensure!(
@@ -1012,24 +1108,44 @@ fn read_manifest(
         let bits = c.u32()?;
         let k = c.u64()? as usize;
         let seed = c.u64()?;
-        let spec = CollectionSpec { scheme, w, k, seed };
+        let raw_opts = if v2 {
+            Some((
+                c.u64()?,
+                IndexConfig {
+                    bands: c.u32()? as usize,
+                    band_bits: c.u32()?,
+                    probes: c.u32()? as usize,
+                },
+            ))
+        } else {
+            None
+        };
+        let kind = if v3 {
+            let code = c.take(1)?[0];
+            let param = c.u32()?;
+            MatrixKind::from_wire(code, param)?
+        } else {
+            MatrixKind::Gaussian
+        };
+        let spec = CollectionSpec {
+            scheme,
+            w,
+            k,
+            seed,
+            kind,
+        };
         spec.validate()?;
         anyhow::ensure!(
             bits == spec.bits(),
             "MANIFEST entry {name:?} records {bits} bit(s)/code but its scheme packs {}",
             spec.bits()
         );
-        let opts = if v2 {
-            CollectionOptions {
-                checkpoint_every: c.u64()?,
-                index: IndexConfig {
-                    bands: c.u32()? as usize,
-                    band_bits: c.u32()?,
-                    probes: c.u32()? as usize,
-                },
-            }
-        } else {
-            CollectionOptions::for_spec(&spec)
+        let opts = match raw_opts {
+            Some((checkpoint_every, index)) => CollectionOptions {
+                checkpoint_every,
+                index,
+            },
+            None => CollectionOptions::for_spec(&spec),
         };
         opts.validate(&spec)?;
         out.push((name, spec, opts));
@@ -1043,7 +1159,13 @@ mod tests {
     use super::*;
 
     fn spec(scheme: Scheme, w: f64, k: usize, seed: u64) -> CollectionSpec {
-        CollectionSpec { scheme, w, k, seed }
+        CollectionSpec {
+            scheme,
+            w,
+            k,
+            seed,
+            kind: MatrixKind::Gaussian,
+        }
     }
 
     fn temp_dir(tag: &str) -> PathBuf {
@@ -1081,13 +1203,21 @@ mod tests {
                 spec(Scheme::OneBit, 0.0, 512, 7),
                 CollectionOptions::for_spec(&spec(Scheme::OneBit, 0.0, 512, 7)),
             ),
+            (
+                "sparse-text".to_string(),
+                CollectionSpec {
+                    kind: MatrixKind::SignSparse { s: 128 },
+                    ..spec(Scheme::TwoBit, 0.75, 64, 5)
+                },
+                CollectionOptions::for_spec(&spec(Scheme::TwoBit, 0.75, 64, 5)),
+            ),
         ];
         write_manifest(&path, &entries).unwrap();
         let mut back = read_manifest(&path).unwrap();
         back.sort_by(|a, b| a.0.cmp(&b.0));
         let mut want = entries.clone();
         want.sort_by(|a, b| a.0.cmp(&b.0));
-        assert_eq!(back.len(), 3);
+        assert_eq!(back.len(), 4);
         for ((bn, bs, bo), (wn, ws, wo)) in back.iter().zip(&want) {
             assert_eq!(bn, wn);
             assert!(bs.matches(ws), "{bn}");
@@ -1104,6 +1234,43 @@ mod tests {
         // Garbage is rejected by the magic.
         std::fs::write(&path, b"not a manifest").unwrap();
         assert!(read_manifest(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A PR-5..8 era `CRPMANI2` file (options but no matrix kind)
+    /// still reads; the kind defaults to Gaussian.
+    #[test]
+    fn manifest_v2_files_still_read() {
+        let dir = temp_dir("manifest_v2");
+        let path = dir.join("MANIFEST");
+        let s = spec(Scheme::Uniform, 1.0, 128, 11);
+        let opts = CollectionOptions {
+            checkpoint_every: 12_345,
+            ..CollectionOptions::for_spec(&s)
+        };
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&4u32.to_le_bytes());
+        payload.extend_from_slice(b"uni4");
+        payload.push(s.scheme.wire_code());
+        payload.extend_from_slice(&s.w.to_le_bytes());
+        payload.extend_from_slice(&s.bits().to_le_bytes());
+        payload.extend_from_slice(&(s.k as u64).to_le_bytes());
+        payload.extend_from_slice(&s.seed.to_le_bytes());
+        payload.extend_from_slice(&opts.checkpoint_every.to_le_bytes());
+        payload.extend_from_slice(&(opts.index.bands as u32).to_le_bytes());
+        payload.extend_from_slice(&opts.index.band_bits.to_le_bytes());
+        payload.extend_from_slice(&(opts.index.probes as u32).to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MANIFEST_MAGIC_V2);
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&crc32_update(0, &payload).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let back = read_manifest(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].0, "uni4");
+        assert!(back[0].1.matches(&s), "kind must default to Gaussian");
+        assert_eq!(back[0].2, opts);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1222,5 +1389,66 @@ mod tests {
         assert_eq!(reg.len(), 1);
         // In-memory registries have nothing to checkpoint.
         assert!(reg.checkpoint_all().unwrap().is_none());
+    }
+
+    /// Sparse ingest stores the exact words dense ingest would, the
+    /// per-row nnz histogram fills, and the guards reject malformed or
+    /// oversized batches.
+    #[test]
+    fn register_sparse_matches_dense_and_guards() {
+        let metrics = Arc::new(Metrics::default());
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 64,
+            seed: 3,
+            ..Default::default()
+        }));
+        let reg = Registry::open(
+            RegistryConfig {
+                root: None,
+                epoch: EpochConfig::default(),
+                batcher: BatcherConfig::default(),
+                checkpoint_every: 0,
+                fsync: FsyncPolicy::Os,
+            },
+            metrics,
+            projector,
+            CodingParams::new(Scheme::TwoBit, 0.75),
+            None,
+        )
+        .unwrap();
+        let c = reg.get(DEFAULT_COLLECTION).unwrap();
+        let mut csr = CsrMatrix::with_capacity(2, 4, 50);
+        csr.push_row(&[0, 7, 49], &[1.0, -2.0, 0.5]);
+        csr.push_row(&[3], &[4.0]);
+        let dense: Vec<Vec<f32>> = (0..2).map(|r| csr.row_dense(r)).collect();
+        let r = c.register_sparse(vec!["s0".into(), "s1".into()], csr.clone());
+        assert_eq!(r, Response::RegisteredBatch { count: 2 });
+        let r = c.register_batch(vec!["d0".into(), "d1".into()], dense);
+        assert_eq!(r, Response::RegisteredBatch { count: 2 });
+        for (s, d) in [("s0", "d0"), ("s1", "d1")] {
+            assert_eq!(c.store.get(s), c.store.get(d), "{s} vs {d}");
+        }
+        assert_eq!(c.ingest_nnz.count(), 2);
+        // ids/rows mismatch errors; an empty batch is a zero-count ack.
+        assert!(matches!(
+            c.register_sparse(vec!["x".into()], csr),
+            Response::Error { .. }
+        ));
+        assert_eq!(
+            c.register_sparse(vec![], CsrMatrix::with_capacity(0, 0, 10)),
+            Response::RegisteredBatch { count: 0 }
+        );
+        // A sign-sparse collection serves the same path end to end.
+        let ss = CollectionSpec {
+            kind: MatrixKind::SignSparse { s: 4 },
+            ..spec(Scheme::OneBit, 0.0, 32, 9)
+        };
+        let sc = reg.create("signs", ss, CollectionOptions::for_spec(&ss)).unwrap();
+        let mut m = CsrMatrix::with_capacity(1, 2, 20);
+        m.push_row(&[2, 19], &[1.0, -1.0]);
+        let densified = vec![m.row_dense(0)];
+        sc.register_sparse(vec!["a".into()], m);
+        sc.register_batch(vec!["b".into()], densified);
+        assert_eq!(sc.store.get("a"), sc.store.get("b"));
     }
 }

@@ -395,6 +395,7 @@ impl ServiceState {
                     req,
                     Request::Register { .. }
                         | Request::RegisterBatch { .. }
+                        | Request::RegisterSparse { .. }
                         | Request::Remove { .. }
                         | Request::Persist
                         | Request::CreateCollection { .. }
@@ -448,12 +449,14 @@ impl ServiceState {
                 k,
                 seed,
                 checkpoint_every,
+                kind,
             } => {
                 let spec = CollectionSpec {
                     scheme,
                     w,
                     k: k as usize,
                     seed,
+                    kind,
                 };
                 if bits != 0 && bits != spec.bits() {
                     return Response::Error {
@@ -515,6 +518,16 @@ impl ServiceState {
             },
             Request::RegisterBatch { ids, vectors } => match self.resolve(collection) {
                 Ok(c) => c.register_batch(ids, vectors),
+                Err(resp) => resp,
+            },
+            Request::RegisterSparse { ids, csr } => match self.resolve(collection) {
+                Ok(c) => {
+                    // Ingest cost scales with nnz, so that is the
+                    // candidates-style magnitude the slow-query line
+                    // carries for sparse batches.
+                    *candidates = Some(csr.nnz() as u64);
+                    c.register_sparse(ids, csr)
+                }
                 Err(resp) => resp,
             },
             Request::Remove { id } => match self.resolve(collection) {
@@ -1098,6 +1111,76 @@ mod tests {
     }
 
     #[test]
+    fn register_sparse_matches_per_vector_dense_register() {
+        use crate::data::sparse::CsrMatrix;
+
+        let s = state(256);
+        let d = 300usize;
+        let mut g = crate::mathx::Pcg64::new(41, 0);
+        let mut csr = CsrMatrix::with_capacity(12, 0, d);
+        for row in 0..12usize {
+            let nnz = row % 5; // includes empty rows
+            let mut cols: Vec<u32> = Vec::new();
+            while cols.len() < nnz {
+                let c = g.next_below(d as u64) as u32;
+                if !cols.contains(&c) {
+                    cols.push(c);
+                }
+            }
+            cols.sort_unstable();
+            let vals: Vec<f32> = cols
+                .iter()
+                .map(|_| (g.next_f64() as f32 - 0.5) * 4.0)
+                .collect();
+            csr.push_row(&cols, &vals);
+        }
+        for r in 0..csr.rows() {
+            s.handle(Request::Register {
+                id: format!("dense{r}"),
+                vector: csr.row_dense(r),
+            });
+        }
+        let ids: Vec<String> = (0..csr.rows()).map(|r| format!("sparse{r}")).collect();
+        let (resp, meta) = s.handle_traced(Request::RegisterSparse {
+            ids: ids.clone(),
+            csr: csr.clone(),
+        });
+        match resp {
+            Response::RegisteredBatch { count } => assert_eq!(count, 12),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(meta.kind, obs::RequestKind::RegisterSparse);
+        assert_eq!(meta.candidates, Some(csr.nnz() as u64));
+        // The O(nnz) gather path must produce byte-identical sketches.
+        for r in 0..csr.rows() {
+            assert_eq!(
+                s.store.get(&format!("sparse{r}")),
+                s.store.get(&format!("dense{r}")),
+                "row {r}"
+            );
+        }
+        // Mismatched id/row counts are a clean error, not a panic.
+        match s.handle(Request::RegisterSparse {
+            ids: vec!["one".into()],
+            csr,
+        }) {
+            Response::Error { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // Scoped routing errors cleanly on unknown collections too.
+        match s.handle(Request::Scoped {
+            collection: "ghost".into(),
+            inner: Box::new(Request::RegisterSparse {
+                ids: vec![],
+                csr: CsrMatrix::with_capacity(0, 0, 4),
+            }),
+        }) {
+            Response::Error { message } => assert!(message.contains("ghost"), "{message}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
     fn approx_topk_routes_and_falls_back_to_exact_on_small_stores() {
         let s = state(128);
         let mut g = crate::mathx::Pcg64::new(3, 3);
@@ -1326,6 +1409,14 @@ mod tests {
                 vector: vec![1.0; 16],
             },
             Request::Remove { id: "a".into() },
+            Request::RegisterSparse {
+                ids: vec!["s".into()],
+                csr: {
+                    let mut m = crate::data::sparse::CsrMatrix::with_capacity(1, 2, 16);
+                    m.push_row(&[1, 5], &[1.0, -1.0]);
+                    m
+                },
+            },
             Request::Persist,
             Request::DropCollection { name: "x".into() },
         ] {
@@ -1432,6 +1523,7 @@ mod tests {
             k: 32,
             seed: 1,
             checkpoint_every: 0,
+            kind: crate::projection::MatrixKind::Gaussian,
         }) {
             Response::Error { message } => {
                 assert!(message.contains("4 bit"), "{message}")
@@ -1446,6 +1538,7 @@ mod tests {
             k: 32,
             seed: 1,
             checkpoint_every: 0,
+            kind: crate::projection::MatrixKind::Gaussian,
         }) {
             Response::CollectionCreated { name } => assert_eq!(name, "u4"),
             other => panic!("unexpected {other:?}"),

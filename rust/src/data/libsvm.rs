@@ -17,60 +17,76 @@ pub fn read_libsvm(path: impl AsRef<Path>, cols: usize) -> crate::Result<Dataset
     parse_libsvm(reader, cols, path.as_ref().display().to_string())
 }
 
-/// Parse libsvm-format text from any reader.
-pub fn parse_libsvm(reader: impl BufRead, cols: usize, name: String) -> crate::Result<Dataset> {
-    let mut rows: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+/// Parse libsvm-format text from any reader, streaming line by line
+/// into the CSR buffers directly (one reused line buffer — no
+/// whole-file read, no per-row intermediate vectors).
+///
+/// Indices on the wire are 1-based (the libsvm convention) and are
+/// shifted to 0-based storage here; an explicit `0:` index is rejected
+/// rather than silently wrapped. Unsorted or duplicate column indices
+/// are rejected with a line-numbered error — silently re-sorting would
+/// mask producer bugs and duplicate mass.
+pub fn parse_libsvm(mut reader: impl BufRead, cols: usize, name: String) -> crate::Result<Dataset> {
+    let mut x = CsrMatrix::with_capacity(0, 0, cols);
     let mut labels = Vec::new();
     let mut max_idx = 0u32;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
+    let mut buf = String::new();
+    let mut lineno = 0usize;
+    loop {
+        buf.clear();
+        if reader.read_line(&mut buf)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let line = buf.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
         let mut parts = line.split_ascii_whitespace();
         let label: f32 = parts
             .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: empty"))?
             .parse()
-            .map_err(|e| anyhow::anyhow!("line {}: bad label: {e}", lineno + 1))?;
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad label: {e}"))?;
         labels.push(if label > 0.0 { 1.0 } else { -1.0 });
-        let mut idx = Vec::new();
-        let mut val = Vec::new();
+        let mut prev: Option<u32> = None;
         for tok in parts {
             let (i, v) = tok
                 .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {}: bad token {tok:?}", lineno + 1))?;
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: bad token {tok:?}"))?;
             let i: u32 = i
                 .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad index: {e}", lineno + 1))?;
-            anyhow::ensure!(i >= 1, "line {}: libsvm indices are 1-based", lineno + 1);
+                .map_err(|e| anyhow::anyhow!("line {lineno}: bad index: {e}"))?;
+            anyhow::ensure!(
+                i >= 1,
+                "line {lineno}: libsvm indices are 1-based (index 0 seen)"
+            );
+            let i = i - 1;
+            if let Some(p) = prev {
+                anyhow::ensure!(
+                    i != p,
+                    "line {lineno}: duplicate column index {}",
+                    i + 1
+                );
+                anyhow::ensure!(
+                    i > p,
+                    "line {lineno}: unsorted column index {} after {}",
+                    i + 1,
+                    p + 1
+                );
+            }
+            prev = Some(i);
             let v: f32 = v
                 .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad value: {e}", lineno + 1))?;
-            idx.push(i - 1);
-            val.push(v);
+                .map_err(|e| anyhow::anyhow!("line {lineno}: bad value: {e}"))?;
+            x.indices.push(i);
+            x.values.push(v);
+            max_idx = max_idx.max(i);
         }
-        // Sort by index (libsvm files are usually sorted; be tolerant).
-        let mut order: Vec<usize> = (0..idx.len()).collect();
-        order.sort_by_key(|&p| idx[p]);
-        let idx: Vec<u32> = order.iter().map(|&p| idx[p]).collect();
-        let val: Vec<f32> = order.iter().map(|&p| val[p]).collect();
-        if let Some(&m) = idx.last() {
-            max_idx = max_idx.max(m);
-        }
-        rows.push((idx, val));
+        x.indptr.push(x.indices.len());
     }
-    let cols = if cols > 0 {
-        cols
-    } else {
-        max_idx as usize + 1
-    };
-    let nnz = rows.iter().map(|(i, _)| i.len()).sum();
-    let mut x = CsrMatrix::with_capacity(rows.len(), nnz, cols);
-    for (idx, val) in &rows {
-        x.push_row(idx, val);
-    }
+    x.cols = if cols > 0 { cols } else { max_idx as usize + 1 };
+    x.validate()?; // e.g. a forced `cols` smaller than an index seen
     let ds = Dataset { x, y: labels, name };
     ds.validate()?;
     Ok(ds)
@@ -108,23 +124,50 @@ mod tests {
     }
 
     #[test]
-    fn unsorted_indices_tolerated() {
-        let text = "+1 5:1.0 2:2.0\n";
-        let ds = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap();
-        assert_eq!(ds.x.row(0).0, &[1u32, 4][..]);
-        assert_eq!(ds.x.row(0).1, &[2.0f32, 1.0][..]);
+    fn unsorted_indices_rejected_with_line_number() {
+        let text = "+1 1:1.0\n+1 5:1.0 2:2.0\n";
+        let err = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("unsorted"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_indices_rejected_with_line_number() {
+        let text = "+1 1:1.0\n-1 2:1.0 3:0.5 3:0.25\n";
+        let err = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("duplicate"), "{msg}");
     }
 
     #[test]
     fn rejects_zero_based() {
         let text = "+1 0:1.0\n";
-        assert!(parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).is_err());
+        let err = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap_err();
+        assert!(err.to_string().contains("1-based"), "{err}");
     }
 
     #[test]
     fn rejects_garbage() {
         assert!(parse_libsvm(std::io::Cursor::new("+1 abc\n"), 0, "t".into()).is_err());
         assert!(parse_libsvm(std::io::Cursor::new("xyz 1:1\n"), 0, "t".into()).is_err());
+        // Malformed tokens with line numbers in the error.
+        for (text, needle) in [
+            ("+1 1:\n", "line 1"),          // empty value
+            ("+1 :1.0\n", "line 1"),        // empty index
+            ("+1 1:1\n-1 x:2\n", "line 2"), // non-numeric index
+            ("+1 1:1\n-1 2:y\n", "line 2"), // non-numeric value
+        ] {
+            let err = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap_err();
+            assert!(err.to_string().contains(needle), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn forced_cols_smaller_than_seen_index_errors_cleanly() {
+        let text = "+1 50:1.0\n";
+        assert!(parse_libsvm(std::io::Cursor::new(text), 10, "t".into()).is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Compressed sparse row matrices and labeled datasets.
 
 /// CSR matrix with f32 values and u32 column indices.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CsrMatrix {
     /// Row start offsets, length `rows + 1`.
     pub indptr: Vec<usize>,
@@ -89,6 +89,47 @@ impl CsrMatrix {
             }
         }
         dot
+    }
+
+    /// Structural consistency check: indptr non-empty, starts at 0,
+    /// monotone, and ends at the nnz count; indices/values parallel;
+    /// per-row indices strictly increasing and below `cols`. Called at
+    /// every protocol decode boundary so a crafted frame errors cleanly
+    /// instead of panicking on slice indexing downstream.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.indptr.is_empty(), "indptr must hold at least [0]");
+        anyhow::ensure!(self.indptr[0] == 0, "indptr must start at 0");
+        anyhow::ensure!(
+            self.indptr.windows(2).all(|w| w[0] <= w[1]),
+            "indptr must be monotone non-decreasing"
+        );
+        anyhow::ensure!(
+            *self.indptr.last().unwrap() == self.indices.len(),
+            "indptr end {} != nnz {}",
+            self.indptr.last().unwrap(),
+            self.indices.len()
+        );
+        anyhow::ensure!(
+            self.indices.len() == self.values.len(),
+            "indices {} != values {}",
+            self.indices.len(),
+            self.values.len()
+        );
+        for r in 0..self.rows() {
+            let idx = &self.indices[self.indptr[r]..self.indptr[r + 1]];
+            anyhow::ensure!(
+                idx.windows(2).all(|w| w[0] < w[1]),
+                "row {r}: indices must be strictly increasing"
+            );
+            if let Some(&last) = idx.last() {
+                anyhow::ensure!(
+                    (last as usize) < self.cols,
+                    "row {r}: index {last} >= cols {}",
+                    self.cols
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Materialize a row densely (for the dense projection path).
@@ -190,6 +231,48 @@ mod tests {
     fn out_of_range_index_rejected() {
         let mut m = CsrMatrix::with_capacity(1, 1, 5);
         m.push_row(&[5], &[1.0]);
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_and_empty() {
+        sample().validate().unwrap();
+        CsrMatrix::with_capacity(0, 0, 10).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_each_inconsistency() {
+        let good = sample();
+        // Empty indptr (what a zeroed/default decode would produce).
+        let m = CsrMatrix {
+            indptr: vec![],
+            ..good.clone()
+        };
+        assert!(m.validate().is_err());
+        // indptr not starting at 0.
+        let mut m = good.clone();
+        m.indptr[0] = 1;
+        assert!(m.validate().is_err());
+        // Non-monotone indptr.
+        let mut m = good.clone();
+        m.indptr[1] = 4;
+        m.indptr[2] = 2;
+        assert!(m.validate().is_err());
+        // indptr end disagreeing with nnz.
+        let mut m = good.clone();
+        *m.indptr.last_mut().unwrap() = 99;
+        assert!(m.validate().is_err());
+        // indices/values length mismatch.
+        let mut m = good.clone();
+        m.values.pop();
+        assert!(m.validate().is_err());
+        // Unsorted / duplicate indices within a row.
+        let mut m = good.clone();
+        m.indices[1] = 0;
+        assert!(m.validate().is_err());
+        // Column index out of range.
+        let mut m = good.clone();
+        m.indices[4] = 10;
+        assert!(m.validate().is_err());
     }
 
     #[test]

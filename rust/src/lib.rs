@@ -29,7 +29,20 @@
 //!   AOT artifacts via PJRT; [`projection`] tiles arbitrary workloads onto
 //!   the fixed artifact shapes; [`coordinator`] serves sketch/similarity
 //!   requests over TCP with dynamic batching and a fused
-//!   project→quantize→pack bulk-ingest path ([`coding::BatchEncoder`]);
+//!   project→quantize→pack bulk-ingest path ([`coding::BatchEncoder`]).
+//!   Sparse inputs ingest at O(nnz) ([`projection::sparse`]): CSR
+//!   batches travel the wire as `RegisterSparse` frames
+//!   ([`data::CsrMatrix`], validated at every decode boundary), are
+//!   coalesced by the reactor like dense registers, and are projected by
+//!   a gather kernel that touches only the stored-row tiles named by
+//!   each row's nonzeros — replaying the dense kernel's accumulation
+//!   order exactly, so the packed codes are **byte-identical** to
+//!   densify-then-project. Collections can opt into a seeded
+//!   sign-sparse matrix ([`projection::MatrixKind::SignSparse`],
+//!   Achlioptas-style ±1 entries, add/sub only, recorded in the
+//!   MANIFEST) to drop the Gaussian row generation too; `crp register
+//!   --libsvm FILE` bulk-loads standard sparse datasets through this
+//!   path.
 //!   [`scan`] answers `Knn` and batched `TopK` queries with a columnar
 //!   code arena swept by runtime-dispatched collision kernels (AVX-512
 //!   `vpopcntq` → AVX2 → SSE2 → portable SWAR, all byte-identical;

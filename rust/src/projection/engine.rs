@@ -10,8 +10,9 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use super::gemm::{axpy, gemm_acc};
+use super::gemm::gemm_acc;
 use super::matrix::RowMatrix;
+use super::sparse::{accumulate_sign_row, MatrixKind};
 use crate::runtime::{ArtifactId, PjrtRuntime};
 
 /// Which compute path executes the projection contraction.
@@ -47,6 +48,10 @@ pub struct ProjectionConfig {
     pub b_tile: usize,
     /// Max R-tiles kept in the tile cache (each is `d_tile·k` f32).
     pub max_cached_tiles: usize,
+    /// Which matrix the projection draws from (Gaussian by default;
+    /// [`MatrixKind::SignSparse`] trades estimator variance for
+    /// multiply-free O(nnz) ingest).
+    pub kind: MatrixKind,
 }
 
 impl Default for ProjectionConfig {
@@ -57,6 +62,7 @@ impl Default for ProjectionConfig {
             d_tile: 1024,
             b_tile: 64,
             max_cached_tiles: 64,
+            kind: MatrixKind::Gaussian,
         }
     }
 }
@@ -106,6 +112,9 @@ impl Projector {
 
     /// True when the PJRT path will actually be used for batch work.
     pub fn pjrt_active(&self) -> bool {
+        if self.cfg.kind != MatrixKind::Gaussian {
+            return false; // sign-sparse runs its own CPU kernel
+        }
         match &self.backend {
             Backend::Pure => false,
             Backend::Pjrt(rt) => rt.has(&ArtifactId::proj_acc(
@@ -162,6 +171,22 @@ impl Projector {
     /// Project a row-major batch `u[b, d]` → `x[b, k]`.
     pub fn project_batch(&self, u: &[f32], b: usize, d: usize) -> Vec<f32> {
         assert_eq!(u.len(), b * d);
+        if let MatrixKind::SignSparse { s } = self.cfg.kind {
+            // Dense input on a sign-sparse collection runs the same
+            // per-nonzero kernel the CSR path uses (ascending column
+            // order), so the two ingest paths are bit-identical.
+            let k = self.cfg.k;
+            let mut acc = vec![0.0f32; b * k];
+            for row in 0..b {
+                let arow = &mut acc[row * k..(row + 1) * k];
+                for (di, &v) in u[row * d..(row + 1) * d].iter().enumerate() {
+                    if v != 0.0 {
+                        accumulate_sign_row(self.cfg.seed, s, di, v, arow);
+                    }
+                }
+            }
+            return acc;
+        }
         match &self.backend {
             Backend::Pjrt(rt) => {
                 let id = ArtifactId::proj_acc(self.cfg.b_tile, self.cfg.d_tile, self.cfg.k);
@@ -242,21 +267,49 @@ impl Projector {
     }
 
     /// Project a sparse vector given as parallel (indices, values): only
-    /// the touched rows of `R` are generated. This is the path for the
-    /// high-dimensional sparse datasets of Section 6 (URL: D ≈ 3.2M).
+    /// the touched rows of `R` are generated, so cost is O(nnz·k), not
+    /// O(d·k). This is the path for the high-dimensional sparse datasets
+    /// of Section 6 (URL: D ≈ 3.2M). Byte-identical to projecting the
+    /// densified vector through [`Projector::project_batch`].
     pub fn project_sparse(&self, idx: &[u32], val: &[f32]) -> Vec<f32> {
-        assert_eq!(idx.len(), val.len());
-        let k = self.cfg.k;
-        let mut acc = vec![0.0f32; k];
-        let mut row = vec![0.0f32; k];
-        for (&i, &v) in idx.iter().zip(val) {
-            if v == 0.0 {
-                continue;
-            }
-            self.matrix.fill_row(i as usize, &mut row);
-            axpy(v, &row, &mut acc);
-        }
+        let mut acc = vec![0.0f32; self.cfg.k];
+        let mut scratch = Vec::new();
+        self.project_csr_row_into(idx, val, &mut scratch, &mut acc);
         acc
+    }
+
+    /// Allocation-free core of [`Projector::project_sparse`]: accumulate
+    /// one CSR row (strictly increasing `idx`) into a caller-zeroed
+    /// `acc` of length `k`, reusing `scratch` across calls. Dispatches
+    /// on [`ProjectionConfig::kind`]; both kinds replay the exact
+    /// operation sequence of their dense-input counterpart, keeping the
+    /// sparse and dense ingest paths bit-identical.
+    pub fn project_csr_row_into(
+        &self,
+        idx: &[u32],
+        val: &[f32],
+        scratch: &mut Vec<f32>,
+        acc: &mut [f32],
+    ) {
+        assert_eq!(idx.len(), val.len());
+        match self.cfg.kind {
+            MatrixKind::Gaussian => super::sparse::project_csr_row_into(
+                &self.matrix,
+                self.cfg.d_tile,
+                idx,
+                val,
+                scratch,
+                acc,
+            ),
+            MatrixKind::SignSparse { s } => {
+                assert_eq!(acc.len(), self.cfg.k, "accumulator width mismatch");
+                for (&i, &v) in idx.iter().zip(val) {
+                    if v != 0.0 {
+                        accumulate_sign_row(self.cfg.seed, s, i as usize, v, acc);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -277,6 +330,7 @@ mod tests {
             d_tile: dt,
             b_tile: 4,
             max_cached_tiles: 8,
+            kind: MatrixKind::Gaussian,
         }
     }
 
@@ -316,9 +370,33 @@ mod tests {
         }
         let xs = p.project_sparse(&idx, &val);
         let xd = p.project_dense(&dense);
-        for (a, b) in xs.iter().zip(&xd) {
-            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        // Bit-identical, not merely close: the gather kernel replays the
+        // dense GEMM's exact operation sequence.
+        assert_eq!(xs, xd);
+    }
+
+    #[test]
+    fn sign_sparse_dense_and_csr_inputs_agree_bitwise() {
+        let p = Projector::new_cpu(ProjectionConfig {
+            kind: MatrixKind::SignSparse { s: 3 },
+            ..cfg(32, 64)
+        });
+        let d = 500usize;
+        let mut dense = vec![0.0f32; d];
+        let idx = vec![0u32, 63, 64, 128, 499];
+        let val = vec![1.0f32, -0.5, 2.0, 0.125, -4.0];
+        for (&i, &v) in idx.iter().zip(&val) {
+            dense[i as usize] = v;
         }
+        let xs = p.project_sparse(&idx, &val);
+        let xd = p.project_dense(&dense);
+        assert_eq!(xs, xd);
+        // Batch membership must not change a row's projection.
+        let mut two = dense.clone();
+        two.extend_from_slice(&dense);
+        let xb = p.project_batch(&two, 2, d);
+        assert_eq!(&xb[..32], xs.as_slice());
+        assert_eq!(&xb[32..], xs.as_slice());
     }
 
     #[test]
@@ -361,6 +439,7 @@ mod tests {
             d_tile: 64,
             b_tile: 4,
             max_cached_tiles: 4,
+            kind: MatrixKind::Gaussian,
         });
         let d = 32;
         let (u, v) = crate::data::pairs::unit_pair_with_rho(d, 0.7, 99);
@@ -379,6 +458,7 @@ mod tests {
             d_tile: 16,
             b_tile: 2,
             max_cached_tiles: 2,
+            kind: MatrixKind::Gaussian,
         });
         let u = randv(200, 6);
         let a = p.project_dense(&u);

@@ -9,12 +9,17 @@
 //!
 //! * [`matrix`] — seeded row-wise generation of `R`, tile assembly.
 //! * [`gemm`] — cache-blocked dense `U[B,D] · R[D,k]` (pure Rust).
+//! * [`sparse`] — O(nnz) kernels: the gather kernel (bit-identical to
+//!   the dense GEMM on densified input) and the opt-in very-sparse ±1
+//!   matrix ([`MatrixKind::SignSparse`], add/sub only).
 //! * [`engine`] — the [`Projector`]: dense/sparse/batched projection,
 //!   optionally dispatching D-tiles to the AOT PJRT artifact.
 
 pub mod matrix;
 pub mod gemm;
+pub mod sparse;
 pub mod engine;
 
 pub use engine::{Backend, ProjectionConfig, Projector};
 pub use matrix::RowMatrix;
+pub use sparse::MatrixKind;

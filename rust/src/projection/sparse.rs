@@ -1,0 +1,321 @@
+//! Sparse projection kernels: O(nnz) per row instead of O(d).
+//!
+//! Two engines live here:
+//!
+//! * **Gather kernel** ([`project_csr_row_into`]) — projects one CSR row
+//!   against the standard Gaussian [`RowMatrix`] by generating only the
+//!   rows of `R` its nonzeros touch. The accumulation replays the dense
+//!   GEMM's operation sequence *exactly* (same quad grouping, same
+//!   skip condition, same [`axpy4`]/[`axpy`] bodies, same order), so the
+//!   packed codes downstream are byte-identical to the dense path on
+//!   the densified vector — pinned by tests here and in
+//!   `tests/proptests.rs`.
+//! * **Sign-sparse kernel** ([`accumulate_sign_row`]) — an opt-in
+//!   very-sparse ±1 matrix (`MatrixKind::SignSparse { s }`, entries
+//!   +1/−1 each with probability `1/(2s)`, else 0 — arXiv 2006.16180 /
+//!   the classic very-sparse-projection trick) where every accumulation
+//!   is an add or subtract, no multiplies. Dense and sparse inputs on a
+//!   sign-sparse collection run the *same* per-nonzero kernel, so the
+//!   two ingest paths stay bit-identical to each other.
+//!
+//! ## Why the gather kernel is bit-exact
+//!
+//! The dense path pads each row to `d_tile` and hands tiles to
+//! `gemm_acc`, which walks the contraction in quads of four aligned
+//! columns (skipping all-zero quads) and finishes each tile with
+//! single-column tails when `d_tile % 4 != 0`. Quads never straddle the
+//! 64-wide cache blocks (64 % 4 == 0), so a local column `li` belongs
+//! to a quad iff `(li / 4) * 4 + 4 <= d_tile`. Columns absent from the
+//! CSR row are zeros in the dense padded buffer; quads containing no
+//! nonzero are skipped by the all-zero test on both paths, which also
+//! makes the result independent of the batch's padded width. f32
+//! addition is deterministic, so replaying the identical operation
+//! sequence on identical operands reproduces identical bits.
+
+use super::gemm::{axpy, axpy4};
+use super::matrix::RowMatrix;
+use crate::mathx::Pcg64;
+
+/// Which projection matrix a collection draws its rows from.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MatrixKind {
+    /// Dense Gaussian `r_ij ~ N(0,1)` (the paper's Eq. (1); default).
+    #[default]
+    Gaussian,
+    /// Very sparse ±1 matrix: `r_ij ∈ {+1, 0, −1}` with
+    /// `P(±1) = 1/(2s)`, so each column touches ~`k/s` accumulators and
+    /// every touch is an add/sub. Trades estimator variance for ingest
+    /// speed on sparse corpora.
+    SignSparse { s: u32 },
+}
+
+impl MatrixKind {
+    /// Wire/manifest discriminant.
+    pub fn code(self) -> u8 {
+        match self {
+            MatrixKind::Gaussian => 0,
+            MatrixKind::SignSparse { .. } => 1,
+        }
+    }
+
+    /// Wire/manifest parameter (`s`; 0 for Gaussian).
+    pub fn param(self) -> u32 {
+        match self {
+            MatrixKind::Gaussian => 0,
+            MatrixKind::SignSparse { s } => s,
+        }
+    }
+
+    /// Inverse of [`MatrixKind::code`]/[`MatrixKind::param`].
+    pub fn from_wire(code: u8, param: u32) -> crate::Result<MatrixKind> {
+        match code {
+            0 => Ok(MatrixKind::Gaussian),
+            1 => {
+                anyhow::ensure!(param >= 1, "sign-sparse s must be >= 1, got {param}");
+                Ok(MatrixKind::SignSparse { s: param })
+            }
+            other => anyhow::bail!("unknown matrix kind {other}"),
+        }
+    }
+}
+
+impl std::fmt::Display for MatrixKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MatrixKind::Gaussian => write!(f, "gaussian"),
+            MatrixKind::SignSparse { s } => write!(f, "sign-sparse(s={s})"),
+        }
+    }
+}
+
+/// Stream-id offset separating sign-row streams from the Gaussian
+/// R-row streams (`0x52…`) and every other user of a collection seed.
+const SIGN_STREAM_BASE: u64 = 0x53_0000_0000; // 'S'
+
+/// `acc += v · sign_row(seed, s, row)` — the sign-sparse accumulation:
+/// one uniform draw per coordinate, an add or a subtract where the draw
+/// lands in the ±1 mass, no multiplies. Both the dense and the CSR
+/// ingest paths call this per nonzero in ascending column order, so
+/// they produce bit-identical projections.
+pub fn accumulate_sign_row(seed: u64, s: u32, row: usize, v: f32, acc: &mut [f32]) {
+    let mut g = Pcg64::new(seed, SIGN_STREAM_BASE + row as u64);
+    let half = 1.0 / (2.0 * s as f64);
+    let full = 2.0 * half;
+    for a in acc.iter_mut() {
+        let u = g.next_f64();
+        if u < half {
+            *a += v;
+        } else if u < full {
+            *a -= v;
+        }
+    }
+}
+
+/// Materialize sign row `row` as ±1/0 f32s (tests and oracles only —
+/// the hot path never builds it).
+pub fn sign_row(seed: u64, s: u32, row: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k];
+    accumulate_sign_row(seed, s, row, 1.0, &mut out);
+    out
+}
+
+/// Project one CSR row (`idx` strictly increasing, parallel `val`)
+/// against the Gaussian `matrix`, accumulating into `acc` (length `k`,
+/// caller-zeroed), touching only the `R` rows the nonzeros name.
+///
+/// `scratch` holds the up-to-four gathered `R` rows (resized to `4·k`);
+/// reuse it across calls to stay allocation-free per row. `d_tile` must
+/// be the projector's configured tile width — the quad/tail split
+/// inside each tile depends on it (see the module docs).
+pub fn project_csr_row_into(
+    matrix: &RowMatrix,
+    d_tile: usize,
+    idx: &[u32],
+    val: &[f32],
+    scratch: &mut Vec<f32>,
+    acc: &mut [f32],
+) {
+    let k = matrix.k;
+    assert_eq!(acc.len(), k, "accumulator width mismatch");
+    assert_eq!(idx.len(), val.len());
+    debug_assert!(
+        idx.windows(2).all(|w| w[0] < w[1]),
+        "CSR row indices must be strictly increasing"
+    );
+    scratch.resize(4 * k, 0.0);
+    let (r01, r23) = scratch.split_at_mut(2 * k);
+    let (r0, r1) = r01.split_at_mut(k);
+    let (r2, r3) = r23.split_at_mut(k);
+    // Local columns below this form quads; the rest are tile tails.
+    let quad_end = d_tile / 4 * 4;
+    let n = idx.len();
+    let mut p = 0usize;
+    while p < n {
+        // One tile's run of nonzeros: [p, tile_hi).
+        let tile = idx[p] as usize / d_tile;
+        let base = tile * d_tile;
+        let mut tile_hi = p;
+        while tile_hi < n && (idx[tile_hi] as usize) < base + d_tile {
+            tile_hi += 1;
+        }
+        // Quads, ascending — exactly the dense kernel's traversal.
+        let mut i = p;
+        while i < tile_hi && (idx[i] as usize) < base + quad_end {
+            let col0 = base + (idx[i] as usize - base) / 4 * 4;
+            let mut a = [0.0f32; 4];
+            while i < tile_hi && (idx[i] as usize) < col0 + 4 {
+                a[idx[i] as usize - col0] = val[i];
+                i += 1;
+            }
+            // Same skip the dense path applies to all-zero quads
+            // (explicit zeros stored in the CSR hit it too).
+            if a[0] != 0.0 || a[1] != 0.0 || a[2] != 0.0 || a[3] != 0.0 {
+                matrix.fill_row(col0, r0);
+                matrix.fill_row(col0 + 1, r1);
+                matrix.fill_row(col0 + 2, r2);
+                matrix.fill_row(col0 + 3, r3);
+                axpy4(a[0], r0, a[1], r1, a[2], r2, a[3], r3, acc);
+            }
+        }
+        // Tile-tail singles (only when d_tile % 4 != 0), ascending.
+        while i < tile_hi {
+            let v = val[i];
+            if v != 0.0 {
+                matrix.fill_row(idx[i] as usize, r0);
+                axpy(v, r0, acc);
+            }
+            i += 1;
+        }
+        p = tile_hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::{ProjectionConfig, Projector};
+
+    fn sparse_row(seed: u64, d: usize, nnz: usize) -> (Vec<u32>, Vec<f32>) {
+        let mut g = Pcg64::new(seed, 9);
+        let mut cols: Vec<u32> = Vec::new();
+        while cols.len() < nnz {
+            let c = g.next_below(d as u64) as u32;
+            if !cols.contains(&c) {
+                cols.push(c);
+            }
+        }
+        cols.sort_unstable();
+        let vals = cols
+            .iter()
+            .map(|_| (g.next_f64() as f32 - 0.5) * 4.0)
+            .collect();
+        (cols, vals)
+    }
+
+    fn densify(idx: &[u32], val: &[f32], d: usize) -> Vec<f32> {
+        let mut u = vec![0.0f32; d];
+        for (&i, &v) in idx.iter().zip(val) {
+            u[i as usize] = v;
+        }
+        u
+    }
+
+    #[test]
+    fn gather_is_bit_identical_to_dense_gemm() {
+        // Tile widths cover the quad-only case, dt % 4 != 0 tails, a
+        // tile smaller than a quad, and multi-tile rows.
+        for &(k, dt, d, nnz) in &[
+            (16usize, 32usize, 200usize, 7usize),
+            (24, 30, 200, 11),  // dt % 4 != 0: per-tile singles
+            (8, 3, 50, 9),      // dt < 4: singles only
+            (33, 64, 1000, 40), // many tiles, ragged k
+            (16, 32, 64, 0),    // empty row
+        ] {
+            let p = Projector::new_cpu(ProjectionConfig {
+                k,
+                seed: 11,
+                d_tile: dt,
+                b_tile: 4,
+                max_cached_tiles: 8,
+                ..Default::default()
+            });
+            let (idx, val) = sparse_row(k as u64 ^ d as u64, d, nnz);
+            let dense = p.project_batch(&densify(&idx, &val, d), 1, d.max(1));
+            let mut acc = vec![0.0f32; k];
+            let mut scratch = Vec::new();
+            project_csr_row_into(p.matrix(), dt, &idx, &val, &mut scratch, &mut acc);
+            assert_eq!(acc, dense, "k={k} dt={dt} d={d} nnz={nnz}");
+        }
+    }
+
+    #[test]
+    fn gather_independent_of_padded_width() {
+        // The dense batch pads rows to the longest vector in the batch;
+        // the gather result must match regardless of that width.
+        let p = Projector::new_cpu(ProjectionConfig {
+            k: 16,
+            seed: 5,
+            d_tile: 32,
+            ..Default::default()
+        });
+        let (idx, val) = sparse_row(3, 100, 12);
+        for &d in &[100usize, 128, 500] {
+            let dense = p.project_batch(&densify(&idx, &val, d), 1, d);
+            let mut acc = vec![0.0f32; 16];
+            let mut scratch = Vec::new();
+            project_csr_row_into(p.matrix(), 32, &idx, &val, &mut scratch, &mut acc);
+            assert_eq!(acc, dense, "d={d}");
+        }
+    }
+
+    #[test]
+    fn explicit_zero_values_change_nothing() {
+        let p = Projector::new_cpu(ProjectionConfig {
+            k: 12,
+            seed: 8,
+            d_tile: 16,
+            ..Default::default()
+        });
+        let idx = vec![1u32, 2, 17, 40];
+        let val = vec![1.5f32, 0.0, -2.0, 0.0];
+        let mut with_zeros = vec![0.0f32; 12];
+        let mut scratch = Vec::new();
+        project_csr_row_into(p.matrix(), 16, &idx, &val, &mut scratch, &mut with_zeros);
+        let mut without = vec![0.0f32; 12];
+        project_csr_row_into(p.matrix(), 16, &[1, 17], &[1.5, -2.0], &mut scratch, &mut without);
+        assert_eq!(with_zeros, without);
+    }
+
+    #[test]
+    fn sign_rows_deterministic_with_expected_density() {
+        let (seed, s, k) = (7u64, 4u32, 4096usize);
+        assert_eq!(sign_row(seed, s, 3, k), sign_row(seed, s, 3, k));
+        assert_ne!(sign_row(seed, s, 3, k), sign_row(seed, s, 4, k));
+        assert_ne!(sign_row(seed, s, 3, k), sign_row(seed + 1, s, 3, k));
+        let row = sign_row(seed, s, 0, k);
+        assert!(row.iter().all(|&v| v == 0.0 || v == 1.0 || v == -1.0));
+        let nonzero = row.iter().filter(|&&v| v != 0.0).count() as f64 / k as f64;
+        let want = 1.0 / s as f64;
+        assert!((nonzero - want).abs() < 0.03, "density {nonzero} vs {want}");
+    }
+
+    #[test]
+    fn sign_accumulate_matches_materialized_row() {
+        let (seed, s, k) = (21u64, 8u32, 130usize);
+        let row = sign_row(seed, s, 5, k);
+        let mut acc = vec![0.5f32; k];
+        accumulate_sign_row(seed, s, 5, -1.25, &mut acc);
+        for (j, (&a, &r)) in acc.iter().zip(&row).enumerate() {
+            assert_eq!(a, 0.5 + (-1.25) * r, "coord {j}");
+        }
+    }
+
+    #[test]
+    fn matrix_kind_wire_roundtrip() {
+        for kind in [MatrixKind::Gaussian, MatrixKind::SignSparse { s: 3 }] {
+            assert_eq!(MatrixKind::from_wire(kind.code(), kind.param()).unwrap(), kind);
+        }
+        assert!(MatrixKind::from_wire(2, 0).is_err());
+        assert!(MatrixKind::from_wire(1, 0).is_err()); // s = 0 invalid
+    }
+}

@@ -17,7 +17,7 @@ use crp::coordinator::server::{serve, ServerConfig, ServiceState};
 use crp::coordinator::store::SketchStore;
 use crp::coordinator::SketchClient;
 use crp::mathx::Pcg64;
-use crp::projection::{ProjectionConfig, Projector};
+use crp::projection::{MatrixKind, ProjectionConfig, Projector};
 
 fn temp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("crp_collections_{tag}_{}", std::process::id()));
@@ -99,6 +99,7 @@ fn collections_isolate_same_ids_across_schemes() {
         k: 128,
         seed: 11,
         checkpoint_every: 0,
+        kind: MatrixKind::Gaussian,
     }) {
         Response::CollectionCreated { name } => assert_eq!(name, "u4"),
         other => panic!("unexpected {other:?}"),
@@ -211,6 +212,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 k: 32,
                 seed: 0,
                 checkpoint_every: 0,
+                kind: MatrixKind::Gaussian,
             },
             "characters",
         ),
@@ -223,6 +225,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 k: 32,
                 seed: 0,
                 checkpoint_every: 0,
+                kind: MatrixKind::Gaussian,
             },
             "already exists",
         ),
@@ -235,6 +238,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 k: 32,
                 seed: 0,
                 checkpoint_every: 0,
+                kind: MatrixKind::Gaussian,
             },
             "reserved",
         ),
@@ -247,6 +251,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 k: 32,
                 seed: 0,
                 checkpoint_every: 0,
+                kind: MatrixKind::Gaussian,
             },
             "bin width",
         ),
@@ -259,6 +264,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 k: 0,
                 seed: 0,
                 checkpoint_every: 0,
+                kind: MatrixKind::Gaussian,
             },
             "outside",
         ),
@@ -271,6 +277,7 @@ fn collections_shape_and_name_errors_are_clean() {
                 k: 32,
                 seed: 0,
                 checkpoint_every: 0,
+                kind: MatrixKind::Gaussian,
             },
             "2 bit",
         ),
@@ -352,6 +359,7 @@ fn collections_kill9_recovery_via_manifest() {
             k,
             seed,
             checkpoint_every: 0,
+            kind: MatrixKind::Gaussian,
         }) {
             Response::CollectionCreated { .. } => {}
             other => panic!("create {name}: unexpected {other:?}"),
@@ -491,6 +499,7 @@ fn collections_drop_then_recreate_reuses_directory() {
         k: 64,
         seed: 3,
         checkpoint_every: 0,
+        kind: MatrixKind::Gaussian,
     }) {
         Response::CollectionCreated { .. } => {}
         other => panic!("unexpected {other:?}"),
@@ -517,6 +526,7 @@ fn collections_drop_then_recreate_reuses_directory() {
         k: 64,
         seed: 9,
         checkpoint_every: 0,
+        kind: MatrixKind::Gaussian,
     }) {
         Response::CollectionCreated { .. } => {}
         other => panic!("unexpected {other:?}"),
@@ -639,6 +649,7 @@ fn collections_per_collection_checkpoint_cadence() {
         k: 48,
         seed: 2,
         checkpoint_every: 5,
+        kind: MatrixKind::Gaussian,
     }) {
         Response::CollectionCreated { .. } => {}
         other => panic!("unexpected {other:?}"),

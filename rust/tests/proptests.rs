@@ -15,6 +15,10 @@
 //!   through the epoch-buffer/sealed-arena split ≡ a fully drained
 //!   arena; bulk `put_rows` ≡ per-vector puts; and `put` completes while
 //!   a reader holds the sealed side (the seed design deadlocked here)
+//! * sparse ingest: a CSR row through the O(nnz·k) gather path stores
+//!   byte-identical packed codes to the dense path (all coding widths,
+//!   Gaussian and sign-sparse matrices), and TopK over TCP answers
+//!   byte-identically whichever path ingested the corpus
 
 use crp::coding::{
     collision_count, collision_count_packed, expand_to_sparse, pack_codes, unpack_codes,
@@ -681,6 +685,182 @@ fn prop_batched_equals_sequential() {
         let x = direct_proj.project_dense(v);
         let want = pack_codes(&coding.encode(&x), coding.bits_per_code());
         assert_eq!(*got, want);
+    }
+}
+
+/// Random sparse rows: strictly increasing indices over `cols` columns
+/// (each column kept with probability ~1/4), plus the densified copies.
+fn rand_sparse_rows(
+    g: &mut Pcg64,
+    rows: usize,
+    cols: usize,
+) -> (crp::data::CsrMatrix, Vec<Vec<f32>>) {
+    let mut csr = crp::data::CsrMatrix::with_capacity(rows, 0, cols);
+    let mut dense = Vec::with_capacity(rows);
+    let (mut idx, mut val) = (Vec::new(), Vec::new());
+    for _ in 0..rows {
+        idx.clear();
+        val.clear();
+        let mut d = vec![0.0f32; cols];
+        for c in 0..cols {
+            if g.next_below(4) == 0 {
+                let v = (g.next_f64() as f32 - 0.5) * 2.0;
+                idx.push(c as u32);
+                val.push(v);
+                d[c] = v;
+            }
+        }
+        csr.push_row(&idx, &val);
+        dense.push(d);
+    }
+    (csr, dense)
+}
+
+#[test]
+fn prop_register_sparse_codes_byte_identical_to_dense() {
+    use crp::coordinator::protocol::{Request, Response};
+    use crp::coordinator::server::{ServerConfig, ServiceState};
+    use crp::projection::{MatrixKind, ProjectionConfig, Projector};
+    use std::sync::Arc;
+
+    // The tentpole pin: a CSR row through the O(nnz·k) gather path must
+    // store the exact packed bytes the dense O(d·k) path stores — for
+    // every coding width and for both matrix families.
+    let mut case = 0u64;
+    for (scheme, w) in [
+        (Scheme::OneBit, 0.0),
+        (Scheme::TwoBit, 0.75),
+        (Scheme::Uniform, 0.75),
+    ] {
+        for kind in [MatrixKind::Gaussian, MatrixKind::SignSparse { s: 3 }] {
+            let cfg = ServerConfig {
+                coding: CodingParams::new(scheme, w),
+                ..Default::default()
+            };
+            let state = ServiceState::new(
+                Arc::new(Projector::new_cpu(ProjectionConfig {
+                    k: 96,
+                    seed: 5,
+                    kind,
+                    ..Default::default()
+                })),
+                &cfg,
+            );
+            for _ in 0..6 {
+                let mut g = rng(0x5BA12E ^ case);
+                let rows = 1 + g.next_below(12) as usize;
+                let cols = 1 + g.next_below(300) as usize;
+                let (csr, dense) = rand_sparse_rows(&mut g, rows, cols);
+                for (i, d) in dense.iter().enumerate() {
+                    state.handle(Request::Register {
+                        id: format!("d{case}-{i}"),
+                        vector: d.clone(),
+                    });
+                }
+                let ids: Vec<String> =
+                    (0..rows).map(|i| format!("s{case}-{i}")).collect();
+                match state.handle(Request::RegisterSparse { ids, csr }) {
+                    Response::RegisteredBatch { count } => {
+                        assert_eq!(count, rows as u64, "case {case}")
+                    }
+                    other => panic!("case {case}: {other:?}"),
+                }
+                for i in 0..rows {
+                    let ds = state.store.get(&format!("d{case}-{i}"));
+                    let ss = state.store.get(&format!("s{case}-{i}"));
+                    assert!(ds.is_some(), "case {case} row {i}");
+                    assert_eq!(
+                        ds, ss,
+                        "case {case} row {i}: sparse codes != dense codes \
+                         (scheme {scheme:?}, kind {kind:?})"
+                    );
+                }
+                case += 1;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_ingest_topk_over_tcp_matches_dense_ingest() {
+    use crp::coordinator::protocol::{read_frame_into, write_frame, Request};
+    use crp::coordinator::server::{serve, ServerConfig};
+    use crp::projection::{ProjectionConfig, Projector};
+    use std::io::BufReader;
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    // Two identically-configured thread-mode servers: one ingests the
+    // densified rows over RegisterBatch, the other the CSR triplets
+    // over RegisterSparse. Every subsequent TopK answer must come back
+    // byte-identical, across the 1/2/4-bit schemes.
+    let spawn = |scheme: Scheme, w: f64| -> String {
+        let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
+            k: 64,
+            seed: 9,
+            ..Default::default()
+        }));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            coding: CodingParams::new(scheme, w),
+            ..Default::default()
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = serve(projector, cfg, Some(tx));
+        });
+        rx.recv().expect("server failed to bind").to_string()
+    };
+    let ask = |addr: &str, reqs: &[Request]| -> Vec<Vec<u8>> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut frames = Vec::with_capacity(reqs.len());
+        let mut frame = Vec::new();
+        for req in reqs {
+            write_frame(&mut stream, &req.encode()).unwrap();
+            read_frame_into(&mut reader, &mut frame).unwrap();
+            frames.push(frame.clone());
+        }
+        frames
+    };
+
+    for (case, (scheme, w)) in [
+        (Scheme::OneBit, 0.0),
+        (Scheme::TwoBit, 0.75),
+        (Scheme::Uniform, 0.75),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut g = rng(0x7C9 ^ case as u64);
+        let rows = 40usize;
+        let cols = 48usize;
+        let (csr, dense) = rand_sparse_rows(&mut g, rows, cols);
+        let ids: Vec<String> = (0..rows).map(|i| format!("r{i:03}")).collect();
+        let queries: Vec<Request> = (0..5)
+            .map(|_| Request::TopK {
+                vectors: vec![rand_f32s(&mut g, cols, 1.0)],
+                n: 8,
+            })
+            .collect();
+
+        let addr_dense = spawn(scheme, w);
+        let addr_sparse = spawn(scheme, w);
+        ask(
+            &addr_dense,
+            &[Request::RegisterBatch {
+                ids: ids.clone(),
+                vectors: dense,
+            }],
+        );
+        ask(&addr_sparse, &[Request::RegisterSparse { ids, csr }]);
+        let a = ask(&addr_dense, &queries);
+        let b = ask(&addr_sparse, &queries);
+        assert_eq!(
+            a, b,
+            "case {case}: TopK diverged between dense and sparse ingest \
+             (scheme {scheme:?})"
+        );
     }
 }
 

@@ -16,8 +16,9 @@ use crp::coding::Scheme;
 use crp::coordinator::protocol::{self, Request, Response};
 use crp::coordinator::server::{serve, ServerConfig, ServerMode};
 use crp::coordinator::SketchClient;
+use crp::data::CsrMatrix;
 use crp::mathx::Pcg64;
-use crp::projection::{ProjectionConfig, Projector};
+use crp::projection::{MatrixKind, ProjectionConfig, Projector};
 
 fn spawn_server(mode: ServerMode) -> String {
     let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
@@ -41,6 +42,25 @@ fn spawn_server(mode: ServerMode) -> String {
 
 fn vec_of(g: &mut Pcg64, dim: usize) -> Vec<f32> {
     (0..dim).map(|_| g.next_f64() as f32 - 0.5).collect()
+}
+
+/// `rows` random CSR rows over `cols` columns, roughly 1/3 dense (some
+/// rows come out empty — the protocol must carry those too).
+fn csr_of(g: &mut Pcg64, rows: usize, cols: usize) -> CsrMatrix {
+    let mut csr = CsrMatrix::with_capacity(rows, 0, cols);
+    let (mut idx, mut val) = (Vec::new(), Vec::new());
+    for _ in 0..rows {
+        idx.clear();
+        val.clear();
+        for c in 0..cols as u32 {
+            if g.next_below(3) == 0 {
+                idx.push(c);
+                val.push(g.next_f64() as f32 - 0.5);
+            }
+        }
+        csr.push_row(&idx, &val);
+    }
+    csr
 }
 
 /// Send `script` over one raw connection and return the raw response
@@ -190,6 +210,7 @@ fn full_script() -> Vec<Request> {
         k: 64,
         seed: 5,
         checkpoint_every: 0,
+        kind: MatrixKind::Gaussian,
     });
     for i in 0..6 {
         sc.push(Request::Scoped {
@@ -200,6 +221,31 @@ fn full_script() -> Vec<Request> {
             }),
         });
     }
+    // Sparse ingest: bare (default collection), scoped, the
+    // unknown-collection error, and an ids/rows shape mismatch — every
+    // response must come back byte-identical across serve modes.
+    sc.push(Request::RegisterSparse {
+        ids: (0..5).map(|i| format!("sp{i}")).collect(),
+        csr: csr_of(&mut g, 5, 24),
+    });
+    sc.push(Request::Scoped {
+        collection: "web".into(),
+        inner: Box::new(Request::RegisterSparse {
+            ids: (0..3).map(|i| format!("wsp{i}")).collect(),
+            csr: csr_of(&mut g, 3, 16),
+        }),
+    });
+    sc.push(Request::Scoped {
+        collection: "nope".into(),
+        inner: Box::new(Request::RegisterSparse {
+            ids: vec!["x".into()],
+            csr: csr_of(&mut g, 1, 16),
+        }),
+    });
+    sc.push(Request::RegisterSparse {
+        ids: vec!["short".into()],
+        csr: csr_of(&mut g, 2, 24),
+    });
     sc.push(Request::Scoped {
         collection: "web".into(),
         inner: Box::new(Request::TopK {
@@ -220,6 +266,33 @@ fn full_script() -> Vec<Request> {
         collection: "nope".into(),
         inner: Box::new(Request::TopK {
             vectors: vec![vec_of(&mut g, 16)],
+            n: 2,
+        }),
+    });
+    // A sign-sparse collection created over the wire: the optional
+    // matrix-kind tail must decode the same in both modes, and sparse
+    // rows land in it like any other.
+    sc.push(Request::CreateCollection {
+        name: "signs".into(),
+        scheme: Scheme::TwoBit,
+        w: 0.75,
+        bits: 0,
+        k: 64,
+        seed: 8,
+        checkpoint_every: 0,
+        kind: MatrixKind::SignSparse { s: 4 },
+    });
+    sc.push(Request::Scoped {
+        collection: "signs".into(),
+        inner: Box::new(Request::RegisterSparse {
+            ids: (0..4).map(|i| format!("sg{i}")).collect(),
+            csr: csr_of(&mut g, 4, 32),
+        }),
+    });
+    sc.push(Request::Scoped {
+        collection: "signs".into(),
+        inner: Box::new(Request::TopK {
+            vectors: vec![vec_of(&mut g, 32)],
             n: 2,
         }),
     });
@@ -284,6 +357,32 @@ fn fusion_script() -> Vec<Request> {
             n: 3,
         });
     }
+    // A run of consecutive RegisterSparse frames: the reactor merges
+    // the CSR batches into one bulk ingest but still owes each frame
+    // its own row count. One id ("sp0") repeats across two frames with
+    // different rows — program order must survive the merge (the later
+    // frame's row wins, exactly as in thread mode).
+    for f in 0..5 {
+        sc.push(Request::RegisterSparse {
+            ids: (0..3).map(|i| format!("sp{}", f * 3 + i)).collect(),
+            csr: csr_of(&mut g, 3, 24),
+        });
+    }
+    sc.push(Request::RegisterSparse {
+        ids: vec!["sp0".into()],
+        csr: csr_of(&mut g, 1, 24),
+    });
+    // A shape-mismatched frame inside the fusable run: it must break
+    // out of the merge and answer its own error without poisoning the
+    // frames around it.
+    sc.push(Request::RegisterSparse {
+        ids: vec!["bad".into()],
+        csr: csr_of(&mut g, 2, 24),
+    });
+    sc.push(Request::RegisterSparse {
+        ids: (0..3).map(|i| format!("sq{i}")).collect(),
+        csr: csr_of(&mut g, 3, 24),
+    });
     sc.push(Request::CreateCollection {
         name: "web".into(),
         scheme: Scheme::TwoBit,
@@ -292,6 +391,7 @@ fn fusion_script() -> Vec<Request> {
         k: 64,
         seed: 9,
         checkpoint_every: 0,
+        kind: MatrixKind::Gaussian,
     });
     for i in 0..6 {
         sc.push(Request::Scoped {
@@ -299,6 +399,17 @@ fn fusion_script() -> Vec<Request> {
             inner: Box::new(Request::Register {
                 id: format!("w{i}"),
                 vector: vec_of(&mut g, 16),
+            }),
+        });
+    }
+    // Scoped RegisterSparse runs fuse per collection like scoped
+    // Registers do.
+    for f in 0..3 {
+        sc.push(Request::Scoped {
+            collection: "web".into(),
+            inner: Box::new(Request::RegisterSparse {
+                ids: (0..2).map(|i| format!("wsp{}", f * 2 + i)).collect(),
+                csr: csr_of(&mut g, 2, 16),
             }),
         });
     }
