@@ -229,35 +229,81 @@ batching-policy ablation (8 closed-loop clients, dim 256):");
     }
 
     // Connection scaling: ping RTT percentiles at a fixed offered load
-    // while N open connections are held, per serve mode. Thread mode
-    // may degrade or refuse outright at the top end (one OS thread per
-    // connection); the reactor front-end is expected to stay flat —
-    // both outcomes are recorded.
+    // while N open connections are held, per front-end layout. Thread
+    // mode may degrade or refuse outright at the top end (one OS thread
+    // per connection); the reactor layouts are expected to stay flat,
+    // and the sharded layout to pull ahead once one loop saturates —
+    // all outcomes are recorded. Eight concurrent closed-loop client
+    // threads drive the load so multi-loop parallelism can show.
     {
         let raised = crp::coordinator::reactor::raise_nofile_limit();
         println!("\nconnection scaling (held connections vs ping RTT; nofile limit {raised:?}):");
         println!(
-            "{:<10} {:>8} {:>12} {:>12} {:>12}",
-            "mode", "conns", "req/s", "p50_us", "p99_us"
+            "{:<12} {:>8} {:>12} {:>12} {:>12}",
+            "layout", "conns", "req/s", "p50_us", "p99_us"
         );
-        for mode in [ServerMode::Threads, ServerMode::Reactor] {
-            for &conns in &[64usize, 512, 4096] {
-                match conn_scale_run(mode, conns) {
+        // (label, mode, reactor_threads, reactor_workers)
+        let layouts: &[(&str, ServerMode, usize, usize)] = &[
+            ("threads", ServerMode::Threads, 0, 0),
+            ("reactor1-w0", ServerMode::Reactor, 0, 0),
+            ("reactor1-w2", ServerMode::Reactor, 0, 2),
+            ("reactor4-w0", ServerMode::Reactor, 4, 0),
+            ("reactor4-w2", ServerMode::Reactor, 4, 2),
+        ];
+        let mut results: Vec<(&str, usize, f64)> = Vec::new();
+        for &(label, mode, threads, workers) in layouts {
+            for &conns in &[64usize, 512, 4096, 16384] {
+                match conn_scale_run(mode, threads, workers, conns) {
                     Ok((rps, p50, p99)) => {
                         println!(
-                            "{:<10} {:>8} {:>12.0} {:>12} {:>12}",
-                            mode.label(),
+                            "{:<12} {:>8} {:>12.0} {:>12} {:>12}",
+                            label,
                             conns,
                             rps,
                             p50 / 1000,
                             p99 / 1000
                         );
-                        let name = format!("serve/conn-scale/{}/{conns}", mode.label());
+                        let name = format!("serve/conn-scale/{label}/{conns}");
                         b.record(&format!("{name}/p50"), p50 as f64, rps);
                         b.record(&format!("{name}/p99"), p99 as f64, rps);
+                        results.push((label, conns, rps));
                     }
-                    Err(e) => println!("{:<10} {:>8}  failed: {e}", mode.label(), conns),
+                    Err(e) => println!("{:<12} {:>8}  failed: {e}", label, conns),
                 }
+            }
+        }
+        // Scaling headline: sharded vs single-loop throughput at the
+        // largest connection count both layouts completed.
+        let best = |label: &str| {
+            results
+                .iter()
+                .filter(|(l, _, _)| *l == label)
+                .max_by_key(|(_, conns, _)| *conns)
+                .copied()
+        };
+        if let (Some((_, c4, r4)), Some((_, c1, r1))) = (best("reactor4-w0"), best("reactor1-w0"))
+        {
+            let conns = c4.min(c1);
+            let at = |label: &str, conns: usize| {
+                results
+                    .iter()
+                    .find(|(l, c, _)| *l == label && *c == conns)
+                    .map(|&(_, _, r)| r)
+            };
+            if let (Some(r4), Some(r1)) = (at("reactor4-w0", conns), at("reactor1-w0", conns)) {
+                println!(
+                    "\nscaling headline: reactor x4 {:.0} req/s vs x1 {:.0} req/s \
+                     at {} conns ({:.2}x)",
+                    r4,
+                    r1,
+                    conns,
+                    r4 / r1
+                );
+            } else {
+                println!(
+                    "\nscaling headline: reactor x4 {r4:.0} req/s @ {c4} conns vs \
+                     x1 {r1:.0} req/s @ {c1} conns (no shared conn count)"
+                );
             }
         }
     }
@@ -275,11 +321,18 @@ fn percentile(sorted: &[u64], p: f64) -> u64 {
     sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
 }
 
-/// Hold `conns` open connections against a fresh server in `mode` and
-/// drive a fixed load of ping round trips round-robin across them.
-/// Returns (req/s, p50 ns, p99 ns); any refusal (accept thread spawn,
-/// fd exhaustion, connection cap) surfaces as the error string.
-fn conn_scale_run(mode: ServerMode, conns: usize) -> Result<(f64, u64, u64), String> {
+/// Hold `conns` open connections against a fresh server laid out as
+/// `(mode, reactor_threads, workers)` and drive a fixed load of ping
+/// round trips from 8 concurrent closed-loop client threads, each
+/// cycling its own share of the pool. Returns (req/s, p50 ns, p99 ns);
+/// any refusal (accept thread spawn, fd exhaustion, connection cap)
+/// surfaces as the error string.
+fn conn_scale_run(
+    mode: ServerMode,
+    reactor_threads: usize,
+    workers: usize,
+    conns: usize,
+) -> Result<(f64, u64, u64), String> {
     use crp::coordinator::protocol::{self, Request};
 
     let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
@@ -290,6 +343,8 @@ fn conn_scale_run(mode: ServerMode, conns: usize) -> Result<(f64, u64, u64), Str
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         server_mode: mode,
+        reactor_threads,
+        reactor_workers: workers,
         max_conns: conns + 8,
         ..Default::default()
     };
@@ -311,22 +366,39 @@ fn conn_scale_run(mode: ServerMode, conns: usize) -> Result<(f64, u64, u64), Str
         pool.push(s);
     }
 
-    let ping = Request::Ping.encode();
-    let total = conns.max(3000);
-    let mut lat = Vec::with_capacity(total);
-    let mut frame = Vec::new();
+    // Split the pool across the drivers; each driver round-robins its
+    // own share so every held connection sees traffic.
+    let drivers = 8usize.min(conns);
+    let per_driver_conns = conns / drivers;
+    let total = conns.max(8000);
+    let per_driver_reqs = total / drivers;
+    let mut handles = Vec::with_capacity(drivers);
     let t0 = Instant::now();
-    for i in 0..total {
-        let s = &mut pool[i % conns];
-        let t = Instant::now();
-        protocol::write_frame(s, &ping).map_err(|e| format!("write: {e}"))?;
-        protocol::read_frame_into(s, &mut frame).map_err(|e| format!("read: {e}"))?;
-        lat.push(t.elapsed().as_nanos() as u64);
+    for _ in 0..drivers {
+        let share: Vec<TcpStream> = pool.drain(..per_driver_conns.min(pool.len())).collect();
+        handles.push(std::thread::spawn(move || -> Result<Vec<u64>, String> {
+            let ping = Request::Ping.encode();
+            let mut share = share;
+            let mut lat = Vec::with_capacity(per_driver_reqs);
+            let mut frame = Vec::new();
+            for i in 0..per_driver_reqs {
+                let s = &mut share[i % share.len()];
+                let t = Instant::now();
+                protocol::write_frame(s, &ping).map_err(|e| format!("write: {e}"))?;
+                protocol::read_frame_into(s, &mut frame).map_err(|e| format!("read: {e}"))?;
+                lat.push(t.elapsed().as_nanos() as u64);
+            }
+            Ok(lat)
+        }));
+    }
+    let mut lat = Vec::with_capacity(total);
+    for h in handles {
+        lat.extend(h.join().map_err(|_| "driver panicked".to_string())??);
     }
     let elapsed = t0.elapsed().as_secs_f64();
     lat.sort_unstable();
     Ok((
-        total as f64 / elapsed,
+        lat.len() as f64 / elapsed,
         percentile(&lat, 0.50),
         percentile(&lat, 0.99),
     ))

@@ -122,6 +122,32 @@ pub struct Metrics {
     /// buffer, bytes (the backpressure trigger; updated via
     /// `fetch_max`).
     pub reactor_write_buffer_hwm: AtomicU64,
+    /// Fused runs handed to the worker pool instead of executing
+    /// inline on the loop thread (`--reactor-workers > 0` only; always
+    /// ≤ `reactor_coalesced_batches`).
+    pub reactor_offloaded_batches: AtomicU64,
+    /// Offloaded runs currently in flight across all loops (gauge:
+    /// incremented at submission, decremented when the completion is
+    /// applied).
+    pub reactor_worker_queue_depth: AtomicU64,
+    /// Per-loop metric shards, installed by the reactor front-end at
+    /// startup (empty in thread mode). Loops update their shard *and*
+    /// the unlabeled aggregates above, so existing series are unbroken.
+    reactor_loops: std::sync::Mutex<Vec<std::sync::Arc<ReactorLoopMetrics>>>,
+}
+
+/// One reactor loop's share of the front-end counters, exported as
+/// `crp_reactor_*{reactor="i"}` and as the `per_loop` rows of
+/// `StatsDetailed`'s reactor section.
+#[derive(Debug, Default)]
+pub struct ReactorLoopMetrics {
+    pub ready_events: AtomicU64,
+    pub polls: AtomicU64,
+    pub frames: AtomicU64,
+    pub coalesced_batches: AtomicU64,
+    pub offloaded_batches: AtomicU64,
+    /// Connections currently owned by this loop (gauge).
+    pub connections: AtomicU64,
 }
 
 impl Metrics {
@@ -153,11 +179,44 @@ impl Metrics {
         }
     }
 
+    /// Install `n` per-loop metric shards for the reactor front-end
+    /// and return them in loop order. Called once at reactor startup;
+    /// thread mode never calls it, keeping `StatsDetailed`'s reactor
+    /// section in its legacy byte-pinned shape there.
+    pub fn install_reactor_loops(
+        &self,
+        n: usize,
+    ) -> Vec<std::sync::Arc<ReactorLoopMetrics>> {
+        let shards: Vec<_> = (0..n)
+            .map(|_| std::sync::Arc::new(ReactorLoopMetrics::default()))
+            .collect();
+        *self.reactor_loops.lock().unwrap() = shards.clone();
+        shards
+    }
+
+    /// The installed per-loop shards, in loop order (empty in thread
+    /// mode). Cloned `Arc`s: cheap, and safe to read off-thread.
+    pub fn reactor_loop_shards(&self) -> Vec<std::sync::Arc<ReactorLoopMetrics>> {
+        self.reactor_loops.lock().unwrap().clone()
+    }
+
     /// The reactor/batcher section for `StatsDetailed` — filled in
     /// both serve modes (thread mode reports zero reactor counters but
     /// a live batcher queue depth, keeping the PR-6 follow-up series
     /// observable everywhere).
     pub fn reactor_stats(&self) -> super::protocol::ReactorStats {
+        let per_loop = self
+            .reactor_loop_shards()
+            .iter()
+            .map(|s| super::protocol::ReactorLoopStats {
+                ready_events: s.ready_events.load(Ordering::Relaxed),
+                polls: s.polls.load(Ordering::Relaxed),
+                frames: s.frames.load(Ordering::Relaxed),
+                coalesced_batches: s.coalesced_batches.load(Ordering::Relaxed),
+                offloaded_batches: s.offloaded_batches.load(Ordering::Relaxed),
+                connections: s.connections.load(Ordering::Relaxed),
+            })
+            .collect();
         super::protocol::ReactorStats {
             ready_events: self.reactor_ready_events.load(Ordering::Relaxed),
             polls: self.reactor_polls.load(Ordering::Relaxed),
@@ -167,6 +226,9 @@ impl Metrics {
             p99_dispatch: self.reactor_dispatch_batch.percentile_us(0.99),
             write_buffer_hwm: self.reactor_write_buffer_hwm.load(Ordering::Relaxed),
             batcher_queue_depth: self.batcher_queue_depth.load(Ordering::Relaxed),
+            offloaded_batches: self.reactor_offloaded_batches.load(Ordering::Relaxed),
+            worker_queue_depth: self.reactor_worker_queue_depth.load(Ordering::Relaxed),
+            per_loop,
         }
     }
 
@@ -284,5 +346,29 @@ mod tests {
         m.batches_executed.store(4, Ordering::Relaxed);
         m.vectors_projected.store(100, Ordering::Relaxed);
         assert!((m.snapshot().mean_batch_size - 25.0).abs() < 1e-9);
+    }
+
+    /// Per-loop shards: absent until installed (thread mode keeps the
+    /// legacy reactor section), then surfaced per loop in order in
+    /// `reactor_stats`.
+    #[test]
+    fn reactor_loop_shards_surface_in_stats() {
+        let m = Metrics::default();
+        assert!(m.reactor_loop_shards().is_empty());
+        assert!(m.reactor_stats().per_loop.is_empty());
+        let shards = m.install_reactor_loops(3);
+        assert_eq!(shards.len(), 3);
+        shards[1].frames.fetch_add(7, Ordering::Relaxed);
+        shards[2].offloaded_batches.fetch_add(2, Ordering::Relaxed);
+        m.reactor_offloaded_batches.fetch_add(2, Ordering::Relaxed);
+        let st = m.reactor_stats();
+        assert_eq!(st.per_loop.len(), 3);
+        assert_eq!(st.per_loop[0].frames, 0);
+        assert_eq!(st.per_loop[1].frames, 7);
+        assert_eq!(st.per_loop[2].offloaded_batches, 2);
+        assert_eq!(st.offloaded_batches, 2);
+        // Re-install replaces the shard set (fresh server, fresh loops).
+        assert_eq!(m.install_reactor_loops(1).len(), 1);
+        assert_eq!(m.reactor_stats().per_loop.len(), 1);
     }
 }

@@ -18,10 +18,13 @@
 //!  TCP (length-prefixed binary frames)
 //!   └── server  — front-end (--server-mode, --max-conns): blocking
 //!        │        thread-per-connection loop (the oracle, default) or
-//!        │        the epoll reactor (one thread, 10k+ connections,
-//!        │        pipelined zero-copy framing, Register/RegisterSparse/
-//!        │        TopK coalescing, write backpressure — see `reactor`);
-//!        │        byte-identical responses either way
+//!        │        the sharded epoll reactor (--reactor-threads
+//!        │        SO_REUSEPORT loops, 10k+ connections each, pipelined
+//!        │        zero-copy framing, Register/RegisterSparse/TopK
+//!        │        coalescing, write backpressure, idle sweep, and a
+//!        │        --reactor-workers pool running fused bulk work
+//!        │        off-loop — see `reactor`); byte-identical responses
+//!        │        either way
 //!        └── router — request dispatch; legacy frames → "default",
 //!             │       Scoped frames → named collection
 //!             └── registry — named collections, created/dropped at

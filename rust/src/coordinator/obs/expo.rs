@@ -115,22 +115,60 @@ pub fn render(metrics: &Metrics, registry: &Registry, replica: Option<&ReplicaSt
     // Reactor front-end + batcher pressure. Counters stay zero under
     // `--server-mode threads`; the batcher queue depth is live in both
     // modes. All are exported unconditionally so dashboards keep one
-    // query across modes.
-    for (name, v) in [
-        ("crp_reactor_polls", &metrics.reactor_polls),
-        ("crp_reactor_ready_events", &metrics.reactor_ready_events),
-        ("crp_reactor_frames", &metrics.reactor_frames),
-        ("crp_reactor_coalesced_batches", &metrics.reactor_coalesced_batches),
+    // query across modes. With `--reactor-threads N` the unlabeled
+    // series stay the cross-loop aggregates, and each loop's shard
+    // adds a `{reactor="i"}`-labeled breakdown under the same TYPE
+    // header (absent in thread/single-loop mode, not zero).
+    let shards = metrics.reactor_loop_shards();
+    for (name, v, per) in [
+        (
+            "crp_reactor_polls",
+            &metrics.reactor_polls,
+            (|s: &crate::coordinator::metrics::ReactorLoopMetrics| &s.polls)
+                as fn(&crate::coordinator::metrics::ReactorLoopMetrics) -> &std::sync::atomic::AtomicU64,
+        ),
+        ("crp_reactor_ready_events", &metrics.reactor_ready_events, |s| {
+            &s.ready_events
+        }),
+        ("crp_reactor_frames", &metrics.reactor_frames, |s| &s.frames),
+        ("crp_reactor_coalesced_batches", &metrics.reactor_coalesced_batches, |s| {
+            &s.coalesced_batches
+        }),
+        ("crp_reactor_offloaded_batches", &metrics.reactor_offloaded_batches, |s| {
+            &s.offloaded_batches
+        }),
     ] {
         type_line(&mut out, name, "counter");
         gauge(&mut out, name, "", v.load(Ordering::Relaxed));
+        for (i, s) in shards.iter().enumerate() {
+            gauge(
+                &mut out,
+                name,
+                &format!("reactor=\"{i}\""),
+                per(s).load(Ordering::Relaxed),
+            );
+        }
     }
     for (name, v) in [
         ("crp_reactor_write_buffer_hwm", &metrics.reactor_write_buffer_hwm),
+        ("crp_reactor_worker_queue_depth", &metrics.reactor_worker_queue_depth),
         ("crp_batcher_queue_depth", &metrics.batcher_queue_depth),
     ] {
         type_line(&mut out, name, "gauge");
         gauge(&mut out, name, "", v.load(Ordering::Relaxed));
+    }
+    // Per-loop connection gauge: meaningful only when sharded, so the
+    // series (TYPE line included) appears only with installed shards.
+    if !shards.is_empty() {
+        type_line(&mut out, "crp_reactor_connections", "gauge");
+        for (i, s) in shards.iter().enumerate() {
+            gauge(
+                &mut out,
+                "crp_reactor_connections",
+                &format!("reactor=\"{i}\""),
+                s.connections.load(Ordering::Relaxed),
+            );
+        }
     }
     // Dispatch batch size per reactor tick (a count histogram on the
     // same power-of-two buckets the latency series use).
@@ -338,7 +376,13 @@ mod tests {
         assert!(text.contains("# TYPE crp_reactor_ready_events counter"));
         assert!(text.contains("crp_reactor_ready_events 0"));
         assert!(text.contains("crp_reactor_write_buffer_hwm 0"));
+        assert!(text.contains("crp_reactor_offloaded_batches 0"));
+        assert!(text.contains("crp_reactor_worker_queue_depth 0"));
         assert!(text.contains("crp_batcher_queue_depth 0"));
+        // No shards installed → no per-loop labels, and the per-loop
+        // connections gauge is absent entirely (not zero).
+        assert!(!text.contains("reactor=\""));
+        assert!(!text.contains("crp_reactor_connections"));
         assert!(text.contains("# TYPE crp_reactor_dispatch_batch_size histogram"));
         assert!(text.contains("crp_reactor_dispatch_batch_size_count 0"));
         assert!(text.contains("# TYPE crp_request_duration_us histogram"));
@@ -411,6 +455,45 @@ mod tests {
         assert!(text.contains("crp_collection_drains_total{collection=\"default\"} 1"));
         assert!(text.contains("crp_drain_fold_us_count{collection=\"default\"} 1"));
         assert!(text.contains("# TYPE crp_approx_candidates histogram"));
+    }
+
+    #[test]
+    fn reactor_shards_render_labeled_series_next_to_aggregates() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = mem_registry(metrics.clone());
+        let shards = metrics.install_reactor_loops(2);
+        shards[0]
+            .frames
+            .fetch_add(5, std::sync::atomic::Ordering::Relaxed);
+        shards[1]
+            .frames
+            .fetch_add(3, std::sync::atomic::Ordering::Relaxed);
+        shards[1]
+            .connections
+            .fetch_add(4, std::sync::atomic::Ordering::Relaxed);
+        shards[0]
+            .offloaded_batches
+            .fetch_add(2, std::sync::atomic::Ordering::Relaxed);
+        // Loops also bump the unlabeled aggregate on the hot path.
+        metrics
+            .reactor_frames
+            .fetch_add(8, std::sync::atomic::Ordering::Relaxed);
+
+        let text = render(&metrics, &reg, None);
+        // Aggregate stays unlabeled; shard rows ride under it.
+        assert!(text.contains("crp_reactor_frames 8"));
+        assert!(text.contains("crp_reactor_frames{reactor=\"0\"} 5"));
+        assert!(text.contains("crp_reactor_frames{reactor=\"1\"} 3"));
+        assert!(text.contains("crp_reactor_offloaded_batches{reactor=\"0\"} 2"));
+        // Per-loop connections gauge appears once sharded.
+        assert!(text.contains("# TYPE crp_reactor_connections gauge"));
+        assert!(text.contains("crp_reactor_connections{reactor=\"0\"} 0"));
+        assert!(text.contains("crp_reactor_connections{reactor=\"1\"} 4"));
+        // Exactly one TYPE header per series, labeled rows included.
+        assert_eq!(
+            text.matches("# TYPE crp_reactor_frames counter").count(),
+            1
+        );
     }
 
     #[test]

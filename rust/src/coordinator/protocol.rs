@@ -314,6 +314,31 @@ pub struct ReactorStats {
     /// Vectors currently queued at the sketch batcher (gauge; nonzero
     /// in both serve modes — the PR-6 follow-up series).
     pub batcher_queue_depth: u64,
+    /// Fused bulk runs handed to the worker pool instead of executing
+    /// on the loop (0 with `--reactor-workers 0`).
+    pub offloaded_batches: u64,
+    /// Jobs currently queued or running in the worker pool (gauge).
+    pub worker_queue_depth: u64,
+    /// Per-event-loop breakdown, loop index order. Empty in thread
+    /// mode and on pre-PR-10 servers; its presence (or a nonzero
+    /// offload counter) adds the extension block after the eight
+    /// legacy counters — see the encoder for the layout rule.
+    pub per_loop: Vec<ReactorLoopStats>,
+}
+
+/// One event loop's share of the reactor counters (PR 10: the reactor
+/// is sharded across `--reactor-threads` SO_REUSEPORT loops). Carried
+/// inside the [`ReactorStats`] extension block; the aggregate fields
+/// above remain the cross-loop sums, so old clients lose nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReactorLoopStats {
+    pub ready_events: u64,
+    pub polls: u64,
+    pub frames: u64,
+    pub coalesced_batches: u64,
+    pub offloaded_batches: u64,
+    /// Open connections on this loop right now (gauge).
+    pub connections: u64,
 }
 
 /// Introduces the reactor section of a `Stats` frame. `u32::MAX` is
@@ -911,6 +936,29 @@ impl Response {
                     e.u64(r.p99_dispatch);
                     e.u64(r.write_buffer_hwm);
                     e.u64(r.batcher_queue_depth);
+                    // PR 10 extension: worker-pool counters plus the
+                    // per-loop breakdown. Omitted entirely when empty
+                    // so a single-loop, no-worker server (and thread
+                    // mode, which never fills these) stays
+                    // byte-identical to the PR 8 section — decoders
+                    // detect it purely by frame length, since this is
+                    // the final section.
+                    let has_ext = r.offloaded_batches > 0
+                        || r.worker_queue_depth > 0
+                        || !r.per_loop.is_empty();
+                    if has_ext {
+                        e.u64(r.offloaded_batches);
+                        e.u64(r.worker_queue_depth);
+                        e.u32(r.per_loop.len() as u32);
+                        for l in &r.per_loop {
+                            e.u64(l.ready_events);
+                            e.u64(l.polls);
+                            e.u64(l.frames);
+                            e.u64(l.coalesced_batches);
+                            e.u64(l.offloaded_batches);
+                            e.u64(l.connections);
+                        }
+                    }
                 }
             }
             Response::Pong => e.tag(4),
@@ -1122,7 +1170,7 @@ impl Response {
                         sent == REACTOR_SECTION_SENTINEL,
                         "bad reactor section sentinel {sent:#x}"
                     );
-                    s.reactor = Some(ReactorStats {
+                    let mut r = ReactorStats {
                         ready_events: d.u64()?,
                         polls: d.u64()?,
                         frames: d.u64()?,
@@ -1131,7 +1179,30 @@ impl Response {
                         p99_dispatch: d.u64()?,
                         write_buffer_hwm: d.u64()?,
                         batcher_queue_depth: d.u64()?,
-                    });
+                        ..Default::default()
+                    };
+                    // PR 10 extension, detected by leftover bytes: the
+                    // reactor section is always last, so a PR 8 frame
+                    // ends exactly here.
+                    if d.pos < buf.len() {
+                        r.offloaded_batches = d.u64()?;
+                        r.worker_queue_depth = d.u64()?;
+                        let n_loops = d.u32()? as usize;
+                        anyhow::ensure!(n_loops * 8 <= buf.len(), "bad loop count");
+                        let mut per_loop = Vec::with_capacity(n_loops);
+                        for _ in 0..n_loops {
+                            per_loop.push(ReactorLoopStats {
+                                ready_events: d.u64()?,
+                                polls: d.u64()?,
+                                frames: d.u64()?,
+                                coalesced_batches: d.u64()?,
+                                offloaded_batches: d.u64()?,
+                                connections: d.u64()?,
+                            });
+                        }
+                        r.per_loop = per_loop;
+                    }
+                    s.reactor = Some(r);
                 }
                 Response::Stats(s)
             }
@@ -1857,6 +1928,7 @@ mod tests {
             p99_dispatch: 32,
             write_buffer_hwm: 1 << 20,
             batcher_queue_depth: 5,
+            ..Default::default()
         };
         // Reactor tail alone (a primary): zero-count per-collection and
         // per-request sections, NO replication section, then the
@@ -1933,6 +2005,80 @@ mod tests {
         // default.
         let mut torn = stats.encode();
         torn.truncate(torn.len() - 3);
+        assert!(Response::decode(&torn).is_err());
+    }
+
+    /// PR10 wire pins: the reactor section's multi-loop extension
+    /// (worker-pool counters + per-loop breakdown) rides after the
+    /// eight PR 8 counters, detected by frame length alone. A reactor
+    /// snapshot with no offload and no loop shards must stay
+    /// byte-identical to the PR 8 encoding.
+    #[test]
+    fn reactor_multi_loop_extension() {
+        let legacy = ReactorStats {
+            ready_events: 10,
+            polls: 5,
+            frames: 12,
+            coalesced_batches: 2,
+            ..Default::default()
+        };
+        let extended = ReactorStats {
+            offloaded_batches: 7,
+            worker_queue_depth: 1,
+            per_loop: vec![
+                ReactorLoopStats {
+                    ready_events: 6,
+                    polls: 3,
+                    frames: 8,
+                    coalesced_batches: 2,
+                    offloaded_batches: 7,
+                    connections: 4,
+                },
+                ReactorLoopStats::default(),
+            ],
+            ..legacy.clone()
+        };
+        let snap = |r: ReactorStats| {
+            Response::Stats(StatsSnapshot {
+                kernel: "swar".into(),
+                reactor: Some(r),
+                ..Default::default()
+            })
+        };
+
+        // Legacy shape: extension absent, PR 8 length pin still holds.
+        let legacy_bytes = snap(legacy.clone()).encode();
+        let bare = Response::Stats(StatsSnapshot {
+            kernel: "swar".into(),
+            ..Default::default()
+        })
+        .encode();
+        assert_eq!(legacy_bytes.len(), bare.len() + 8 + 4 + 8 * 8);
+        assert_eq!(Response::decode(&legacy_bytes).unwrap(), snap(legacy.clone()));
+
+        // Extended shape: legacy prefix byte-identical, extension
+        // appended (2 u64s + count + 2 loops × 6 u64s), round-trips.
+        let ext_bytes = snap(extended.clone()).encode();
+        assert_eq!(&ext_bytes[..legacy_bytes.len()], &legacy_bytes[..]);
+        assert_eq!(
+            ext_bytes.len(),
+            legacy_bytes.len() + 8 + 8 + 4 + 2 * 6 * 8
+        );
+        assert_eq!(Response::decode(&ext_bytes).unwrap(), snap(extended));
+
+        // A nonzero offload counter alone forces the extension even
+        // with no per-loop shards (single loop + workers).
+        let off_only = ReactorStats {
+            offloaded_batches: 3,
+            ..legacy
+        };
+        let off_bytes = snap(off_only.clone()).encode();
+        assert_eq!(off_bytes.len(), legacy_bytes.len() + 8 + 8 + 4);
+        assert_eq!(Response::decode(&off_bytes).unwrap(), snap(off_only));
+
+        // A truncated extension is a truncated frame.
+        let mut torn = ext_bytes;
+        torn.truncate(torn.len() - 5);
         assert!(Response::decode(&torn).is_err());
     }
 

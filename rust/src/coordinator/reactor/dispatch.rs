@@ -1,0 +1,744 @@
+//! The shared dispatch layer: drains parsed-request queues, fuses
+//! same-collection `Register`/`RegisterSparse` runs and
+//! same-`(collection, n)` `TopK` runs across a loop's connections into
+//! the bulk engine paths, and — when a worker-pool lane is attached —
+//! hands the fused run off the loop thread.
+//!
+//! Fusion only ever consumes the *front* run of each connection's
+//! queue, so per-connection program order (and therefore state) is
+//! preserved. Offload keeps that guarantee with two rules:
+//!
+//! - A connection with an offloaded run in flight (`blocked > 0`) is
+//!   *parked*: its queue is not dispatched and it is skipped as a
+//!   fusion donor until the completion is applied. The in-flight acks
+//!   are always written before anything queued behind them.
+//! - Completions are drained in submission order (the lane is a FIFO
+//!   served by a single worker), so fused runs retire exactly as if
+//!   they had executed inline.
+//!
+//! A fused run offloads only when the lane has a free in-flight slot;
+//! otherwise it executes inline on the loop thread — same calls, same
+//! response bytes. Single-member groups always stay inline so
+//! unfusable traffic keeps thread-mode latency and metrics.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::loop_core::{rewrap, Pending, Reactor};
+use super::pool::{self, BulkJob};
+use crate::coordinator::obs;
+use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::registry::{Collection, DEFAULT_COLLECTION, MAX_BULK_CELLS};
+use crate::data::sparse::CsrMatrix;
+
+/// Fused-group member cap (also the fused-TopK total-query cap).
+const MAX_FUSE: usize = 256;
+
+/// A fused-group member: which connection it came from (token plus the
+/// slot generation valid at fuse time), how it was scoped (meta parity
+/// with thread mode), and its share of the fused work.
+pub(super) struct FuseMember {
+    pub tok: usize,
+    /// Slot generation at fuse time: a completion whose member
+    /// generation no longer matches hit a closed/recycled slot and is
+    /// dropped.
+    pub gen: u64,
+    pub scope: Option<String>,
+    pub decode_us: u64,
+    /// Work items contributed: queries for TopK fusion, CSR rows
+    /// for RegisterSparse fusion, always 1 for Register.
+    pub count: usize,
+}
+
+/// What a fused run owes each member once the bulk call returns.
+pub(super) enum BulkDone {
+    /// Per-member `Registered{id}` echoes.
+    Register { echo_ids: Vec<String> },
+    /// Per-member `RegisteredBatch{count}`; `nnzs` parallels members
+    /// (each member's slow-query candidates magnitude).
+    Sparse { nnzs: Vec<u64> },
+    /// Split the fused result rows back by member `count`.
+    TopK,
+}
+
+/// An offloaded fused run awaiting its completion.
+pub(super) struct InFlight {
+    pub seq: u64,
+    pub members: Vec<FuseMember>,
+    pub done: BulkDone,
+}
+
+impl Reactor {
+    fn member(&self, tok: usize, scope: Option<String>, decode_us: u64, count: usize) -> FuseMember {
+        FuseMember {
+            tok,
+            gen: self.gens[tok],
+            scope,
+            decode_us,
+            count,
+        }
+    }
+
+    /// Drain every connection's parsed-request queue, fusing
+    /// same-collection `Register` runs and same-`(collection, n)`
+    /// `TopK` runs across connections into the bulk paths.
+    pub(super) fn dispatch(&mut self) {
+        let replica_active = self.state.replica.as_ref().is_some_and(|r| r.is_active());
+        let active = std::mem::take(&mut self.active);
+        for &tok in &active {
+            loop {
+                // Parked while an offloaded run is in flight: the
+                // completion must write its acks first.
+                match self.conns.get(tok) {
+                    Some(Some(c)) if c.blocked == 0 => {}
+                    _ => break,
+                }
+                let Some(head) = self.conns[tok].as_mut().and_then(|c| c.queue.pop_front())
+                else {
+                    break;
+                };
+                match head {
+                    Pending::Bad { message, decode_us } => {
+                        self.respond_bad(tok, message, decode_us)
+                    }
+                    Pending::Req { req, decode_us } => match req {
+                        // Register fusion is a write: on an active
+                        // replica route through the router so every
+                        // member gets the exact redirect error.
+                        Request::Register { id, vector } if !replica_active => {
+                            self.fuse_register(&active, tok, None, id, vector, decode_us)
+                        }
+                        Request::Scoped { collection, inner }
+                            if !replica_active && matches!(*inner, Request::Register { .. }) =>
+                        {
+                            if let Request::Register { id, vector } = *inner {
+                                self.fuse_register(
+                                    &active,
+                                    tok,
+                                    Some(collection),
+                                    id,
+                                    vector,
+                                    decode_us,
+                                );
+                            }
+                        }
+                        // Sparse bulk ingest fuses like Register:
+                        // CSR frames concatenate into one call.
+                        Request::RegisterSparse { ids, csr } if !replica_active => {
+                            self.fuse_register_sparse(&active, tok, None, ids, csr, decode_us)
+                        }
+                        Request::Scoped { collection, inner }
+                            if !replica_active
+                                && matches!(*inner, Request::RegisterSparse { .. }) =>
+                        {
+                            if let Request::RegisterSparse { ids, csr } = *inner {
+                                self.fuse_register_sparse(
+                                    &active,
+                                    tok,
+                                    Some(collection),
+                                    ids,
+                                    csr,
+                                    decode_us,
+                                );
+                            }
+                        }
+                        Request::TopK { vectors, n } => {
+                            self.fuse_topk(&active, tok, None, vectors, n, decode_us)
+                        }
+                        Request::Scoped { collection, inner }
+                            if matches!(*inner, Request::TopK { .. }) =>
+                        {
+                            if let Request::TopK { vectors, n } = *inner {
+                                self.fuse_topk(&active, tok, Some(collection), vectors, n, decode_us);
+                            }
+                        }
+                        other => self.respond_one(tok, other, decode_us),
+                    },
+                }
+            }
+        }
+        self.active = active;
+        if self.tick_dispatched > 0 {
+            // Count histogram: the "µs" axis reads as requests/tick.
+            self.state
+                .metrics
+                .reactor_dispatch_batch
+                .record(self.tick_dispatched);
+            self.tick_dispatched = 0;
+        }
+    }
+
+    /// Resolve a fusion target; `None` means the collection is
+    /// unknown and the caller must replay through the router for
+    /// the exact per-request error bytes.
+    fn fuse_target(&self, scope: Option<&str>) -> Option<Arc<Collection>> {
+        self.state.registry.get(scope.unwrap_or(DEFAULT_COLLECTION))
+    }
+
+    /// Run a fused group: off-loop through the lane when a slot is
+    /// free, inline otherwise. Either way the bulk call, the response
+    /// bytes, and the per-member metrics are identical.
+    fn execute_bulk(&mut self, job: BulkJob, members: Vec<FuseMember>, done: BulkDone) {
+        self.state
+            .metrics
+            .reactor_coalesced_batches
+            .fetch_add(1, Ordering::Relaxed);
+        self.shard.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+        let b = members.len() as u64;
+        let mut job = job;
+        if self.inflight < pool::MAX_INFLIGHT {
+            if let Some(lane) = self.lane.clone() {
+                match lane.sub.push(pool::Submission {
+                    seq: self.next_seq,
+                    job,
+                }) {
+                    Ok(()) => {
+                        for m in &members {
+                            if let Some(c) = self.conns[m.tok].as_mut() {
+                                c.blocked += 1;
+                            }
+                        }
+                        self.pending_bulk.push_back(InFlight {
+                            seq: self.next_seq,
+                            members,
+                            done,
+                        });
+                        self.next_seq += 1;
+                        self.inflight += 1;
+                        let m = &self.state.metrics;
+                        m.reactor_offloaded_batches.fetch_add(1, Ordering::Relaxed);
+                        m.reactor_worker_queue_depth.fetch_add(1, Ordering::Relaxed);
+                        self.shard.offloaded_batches.fetch_add(1, Ordering::Relaxed);
+                        lane.worker_wake.signal();
+                        return;
+                    }
+                    // Ring full (slots outran MAX_INFLIGHT bookkeeping
+                    // cannot happen, but stay safe): run inline.
+                    Err(back) => job = back.job,
+                }
+            }
+        }
+        let h0 = Instant::now();
+        let resp = job.run();
+        let handle_each = (h0.elapsed().as_micros() as u64 / b).max(1);
+        self.finish_bulk(members, done, resp, handle_each);
+    }
+
+    /// Apply completions in submission order. Members whose slot
+    /// generation moved on (connection closed, slot possibly recycled)
+    /// are dropped; everyone else gets exactly the frame the inline
+    /// path would have written.
+    pub(super) fn drain_completions(&mut self) {
+        let Some(lane) = self.lane.clone() else {
+            return;
+        };
+        lane.comp_wake.drain();
+        while let Some(c) = lane.comp.pop() {
+            let Some(inf) = self.pending_bulk.pop_front() else {
+                debug_assert!(false, "completion without a pending submission");
+                return;
+            };
+            debug_assert_eq!(inf.seq, c.seq, "completions retire in submission order");
+            self.inflight -= 1;
+            self.state
+                .metrics
+                .reactor_worker_queue_depth
+                .fetch_sub(1, Ordering::Relaxed);
+            for m in &inf.members {
+                if self.gens[m.tok] == m.gen {
+                    if let Some(conn) = self.conns[m.tok].as_mut() {
+                        conn.blocked = conn.blocked.saturating_sub(1);
+                    }
+                    // Unparked: dispatch + flush this tick.
+                    self.mark_active(m.tok);
+                }
+            }
+            let b = inf.members.len() as u64;
+            let handle_each = (c.handle_us / b.max(1)).max(1);
+            self.finish_bulk(inf.members, inf.done, c.resp, handle_each);
+        }
+    }
+
+    /// Write each member's share of a fused result. Dead members
+    /// (generation mismatch) still consume their share of the split so
+    /// the remaining members stay aligned.
+    fn finish_bulk(
+        &mut self,
+        members: Vec<FuseMember>,
+        done: BulkDone,
+        resp: Response,
+        handle_each: u64,
+    ) {
+        match done {
+            BulkDone::Register { echo_ids } => {
+                let fused_ok = matches!(resp, Response::RegisteredBatch { .. });
+                for (m, id) in members.into_iter().zip(echo_ids) {
+                    if self.gens[m.tok] != m.gen {
+                        continue;
+                    }
+                    let meta = obs::ReqMeta {
+                        kind: obs::RequestKind::Register,
+                        collection: m.scope,
+                        candidates: None,
+                    };
+                    if fused_ok {
+                        let one = Response::Registered { id };
+                        self.push_response(m.tok, &one, &meta, m.decode_us, handle_each);
+                    } else {
+                        self.push_response(m.tok, &resp, &meta, m.decode_us, handle_each);
+                    }
+                }
+            }
+            BulkDone::Sparse { nnzs } => {
+                let fused_ok = matches!(resp, Response::RegisteredBatch { .. });
+                for (m, nnz) in members.into_iter().zip(nnzs) {
+                    if self.gens[m.tok] != m.gen {
+                        continue;
+                    }
+                    let meta = obs::ReqMeta {
+                        kind: obs::RequestKind::RegisterSparse,
+                        collection: m.scope,
+                        candidates: Some(nnz),
+                    };
+                    if fused_ok {
+                        let one = Response::RegisteredBatch {
+                            count: m.count as u64,
+                        };
+                        self.push_response(m.tok, &one, &meta, m.decode_us, handle_each);
+                    } else {
+                        self.push_response(m.tok, &resp, &meta, m.decode_us, handle_each);
+                    }
+                }
+            }
+            BulkDone::TopK => match resp {
+                Response::TopK { results } => {
+                    let mut it = results.into_iter();
+                    for m in members {
+                        let chunk: Vec<_> = it.by_ref().take(m.count).collect();
+                        if self.gens[m.tok] != m.gen {
+                            continue;
+                        }
+                        let meta = obs::ReqMeta {
+                            kind: obs::RequestKind::TopK,
+                            collection: m.scope,
+                            candidates: None,
+                        };
+                        let one = Response::TopK { results: chunk };
+                        self.push_response(m.tok, &one, &meta, m.decode_us, handle_each);
+                    }
+                }
+                err => {
+                    // A sketch failure surfaces the same
+                    // `sketch failed: ...` message per-request topk
+                    // would produce (the failing vector may belong to
+                    // another member; the message text is identical).
+                    for m in members {
+                        if self.gens[m.tok] != m.gen {
+                            continue;
+                        }
+                        let meta = obs::ReqMeta {
+                            kind: obs::RequestKind::TopK,
+                            collection: m.scope,
+                            candidates: None,
+                        };
+                        self.push_response(m.tok, &err, &meta, m.decode_us, handle_each);
+                    }
+                }
+            },
+        }
+    }
+
+    fn fuse_register(
+        &mut self,
+        active: &[usize],
+        tok: usize,
+        scope: Option<String>,
+        id: String,
+        vector: Vec<f32>,
+        decode_us: u64,
+    ) {
+        let Some(col) = self.fuse_target(scope.as_deref()) else {
+            self.respond_one(tok, rewrap(scope, Request::Register { id, vector }), decode_us);
+            return;
+        };
+        let mut ids = Vec::new();
+        let mut vecs = Vec::new();
+        let mut members = Vec::new();
+        let mut maxd = vector.len().max(1);
+        ids.push(id);
+        vecs.push(vector);
+        members.push(self.member(tok, scope, decode_us, 1));
+        self.pull_registers(tok, &col.name, &mut ids, &mut vecs, &mut members, &mut maxd);
+        for &other in active {
+            if other != tok {
+                let name = &col.name;
+                self.pull_registers(other, name, &mut ids, &mut vecs, &mut members, &mut maxd);
+            }
+        }
+        if members.len() == 1 {
+            // Nothing to fuse with this tick: the per-request path
+            // keeps single-register metrics identical to thread mode.
+            let m = members.pop().unwrap();
+            let req = Request::Register {
+                id: ids.pop().unwrap(),
+                vector: vecs.pop().unwrap(),
+            };
+            self.respond_one(m.tok, rewrap(m.scope, req), m.decode_us);
+            return;
+        }
+        let echo_ids = ids.clone();
+        self.execute_bulk(
+            BulkJob::Register { col, ids, vecs },
+            members,
+            BulkDone::Register { echo_ids },
+        );
+    }
+
+    /// Pop the leading run of same-collection `Register` requests
+    /// off one connection's queue into the fused batch. Only the
+    /// front run is taken, so program order within the connection
+    /// is untouched.
+    fn pull_registers(
+        &mut self,
+        tok: usize,
+        name: &str,
+        ids: &mut Vec<String>,
+        vecs: &mut Vec<Vec<f32>>,
+        members: &mut Vec<FuseMember>,
+        maxd: &mut usize,
+    ) {
+        loop {
+            if members.len() >= MAX_FUSE {
+                return;
+            }
+            let gen = self.gens[tok];
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return;
+            };
+            if conn.blocked > 0 {
+                // Parked behind an offloaded run: its front frame must
+                // not retire before the in-flight acks.
+                return;
+            }
+            let dim = match conn.queue.front() {
+                Some(Pending::Req {
+                    req: Request::Register { vector, .. },
+                    ..
+                }) if name == DEFAULT_COLLECTION => vector.len().max(1),
+                Some(Pending::Req {
+                    req: Request::Scoped { collection, inner },
+                    ..
+                }) if collection == name => match inner.as_ref() {
+                    Request::Register { vector, .. } => vector.len().max(1),
+                    _ => return,
+                },
+                _ => return,
+            };
+            // Keep the fused batch inside the bulk workspace the
+            // members would individually never hit.
+            if (members.len() + 1) * dim.max(*maxd) > MAX_BULK_CELLS {
+                return;
+            }
+            let Some(Pending::Req { req, decode_us }) = conn.queue.pop_front() else {
+                return;
+            };
+            let (scope, id, vector) = match req {
+                Request::Register { id, vector } => (None, id, vector),
+                Request::Scoped { collection, inner } => match *inner {
+                    Request::Register { id, vector } => (Some(collection), id, vector),
+                    other => {
+                        // Defensive: restore anything unexpected.
+                        conn.queue.push_front(Pending::Req {
+                            req: Request::Scoped {
+                                collection,
+                                inner: Box::new(other),
+                            },
+                            decode_us,
+                        });
+                        return;
+                    }
+                },
+                other => {
+                    conn.queue.push_front(Pending::Req {
+                        req: other,
+                        decode_us,
+                    });
+                    return;
+                }
+            };
+            *maxd = (*maxd).max(vector.len().max(1));
+            ids.push(id);
+            vecs.push(vector);
+            members.push(FuseMember {
+                tok,
+                gen,
+                scope,
+                decode_us,
+                count: 1,
+            });
+        }
+    }
+
+    fn fuse_register_sparse(
+        &mut self,
+        active: &[usize],
+        tok: usize,
+        scope: Option<String>,
+        ids: Vec<String>,
+        csr: CsrMatrix,
+        decode_us: u64,
+    ) {
+        let Some(col) = self.fuse_target(scope.as_deref()) else {
+            let req = Request::RegisterSparse { ids, csr };
+            self.respond_one(tok, rewrap(scope, req), decode_us);
+            return;
+        };
+        if ids.len() != csr.rows() {
+            // A malformed frame replays through the router for the
+            // exact per-request error instead of poisoning a fuse.
+            let req = Request::RegisterSparse { ids, csr };
+            self.respond_one(tok, rewrap(scope, req), decode_us);
+            return;
+        }
+        let mut all_ids = ids;
+        let mut merged = csr;
+        let rows = merged.rows();
+        let mut members = vec![self.member(tok, scope, decode_us, rows)];
+        // Per-frame nnz, parallel to `members` (each member's
+        // slow-query candidates magnitude — thread-mode parity).
+        let mut nnzs = vec![merged.nnz() as u64];
+        self.pull_register_sparse(tok, &col, &mut all_ids, &mut merged, &mut members, &mut nnzs);
+        for &other in active {
+            if other != tok {
+                self.pull_register_sparse(
+                    other, &col, &mut all_ids, &mut merged, &mut members, &mut nnzs,
+                );
+            }
+        }
+        if members.len() == 1 {
+            let m = members.pop().unwrap();
+            let req = Request::RegisterSparse {
+                ids: all_ids,
+                csr: merged,
+            };
+            self.respond_one(m.tok, rewrap(m.scope, req), m.decode_us);
+            return;
+        }
+        self.execute_bulk(
+            BulkJob::RegisterSparse {
+                col,
+                ids: all_ids,
+                csr: merged,
+            },
+            members,
+            BulkDone::Sparse { nnzs },
+        );
+    }
+
+    /// Pop the leading run of same-collection `RegisterSparse`
+    /// requests off one connection's queue into the fused CSR batch
+    /// (indices/values concatenate; indptr re-offsets). Only the
+    /// front run is taken, so program order within the connection
+    /// is untouched.
+    fn pull_register_sparse(
+        &mut self,
+        tok: usize,
+        col: &Arc<Collection>,
+        ids: &mut Vec<String>,
+        merged: &mut CsrMatrix,
+        members: &mut Vec<FuseMember>,
+        nnzs: &mut Vec<u64>,
+    ) {
+        let name = &col.name;
+        loop {
+            if members.len() >= MAX_FUSE {
+                return;
+            }
+            let gen = self.gens[tok];
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return;
+            };
+            if conn.blocked > 0 {
+                return;
+            }
+            let (rows, nnz) = match conn.queue.front() {
+                Some(Pending::Req {
+                    req: Request::RegisterSparse { ids, csr },
+                    ..
+                }) if name == DEFAULT_COLLECTION && ids.len() == csr.rows() => {
+                    (csr.rows(), csr.nnz())
+                }
+                Some(Pending::Req {
+                    req: Request::Scoped { collection, inner },
+                    ..
+                }) if collection == name => match inner.as_ref() {
+                    Request::RegisterSparse { ids, csr } if ids.len() == csr.rows() => {
+                        (csr.rows(), csr.nnz())
+                    }
+                    _ => return,
+                },
+                _ => return,
+            };
+            // Keep the fused batch inside the bulk guards the
+            // members would individually never hit: the nnz budget
+            // and the projected-output workspace.
+            if merged.nnz() + nnz > MAX_BULK_CELLS
+                || (merged.rows() + rows).saturating_mul(col.k) > MAX_BULK_CELLS
+            {
+                return;
+            }
+            let Some(Pending::Req { req, decode_us }) = conn.queue.pop_front() else {
+                return;
+            };
+            let (scope, frame_ids, csr) = match req {
+                Request::RegisterSparse { ids, csr } => (None, ids, csr),
+                Request::Scoped { collection, inner } => match *inner {
+                    Request::RegisterSparse { ids, csr } => (Some(collection), ids, csr),
+                    other => {
+                        conn.queue.push_front(Pending::Req {
+                            req: Request::Scoped {
+                                collection,
+                                inner: Box::new(other),
+                            },
+                            decode_us,
+                        });
+                        return;
+                    }
+                },
+                other => {
+                    conn.queue.push_front(Pending::Req {
+                        req: other,
+                        decode_us,
+                    });
+                    return;
+                }
+            };
+            let base = merged.nnz();
+            merged.indices.extend_from_slice(&csr.indices);
+            merged.values.extend_from_slice(&csr.values);
+            merged.indptr.extend(csr.indptr.iter().skip(1).map(|&p| base + p));
+            merged.cols = merged.cols.max(csr.cols);
+            ids.extend(frame_ids);
+            members.push(FuseMember {
+                tok,
+                gen,
+                scope,
+                decode_us,
+                count: csr.rows(),
+            });
+            nnzs.push(csr.nnz() as u64);
+        }
+    }
+
+    fn fuse_topk(
+        &mut self,
+        active: &[usize],
+        tok: usize,
+        scope: Option<String>,
+        vectors: Vec<Vec<f32>>,
+        n: u32,
+        decode_us: u64,
+    ) {
+        let Some(col) = self.fuse_target(scope.as_deref()) else {
+            self.respond_one(tok, rewrap(scope, Request::TopK { vectors, n }), decode_us);
+            return;
+        };
+        let mut all = vectors;
+        let count = all.len();
+        let mut members = vec![self.member(tok, scope, decode_us, count)];
+        self.pull_topk(tok, &col.name, n, &mut all, &mut members);
+        for &other in active {
+            if other != tok {
+                self.pull_topk(other, &col.name, n, &mut all, &mut members);
+            }
+        }
+        if members.len() == 1 {
+            let m = members.pop().unwrap();
+            let req = Request::TopK { vectors: all, n };
+            self.respond_one(m.tok, rewrap(m.scope, req), m.decode_us);
+            return;
+        }
+        self.execute_bulk(
+            BulkJob::TopK {
+                col,
+                vectors: all,
+                n,
+            },
+            members,
+            BulkDone::TopK,
+        );
+    }
+
+    /// Pop the leading run of same-`(collection, n)` `TopK`
+    /// requests off one connection's queue into the fused sweep.
+    fn pull_topk(
+        &mut self,
+        tok: usize,
+        name: &str,
+        n: u32,
+        all: &mut Vec<Vec<f32>>,
+        members: &mut Vec<FuseMember>,
+    ) {
+        loop {
+            let gen = self.gens[tok];
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return;
+            };
+            if conn.blocked > 0 {
+                return;
+            }
+            let extra = match conn.queue.front() {
+                Some(Pending::Req {
+                    req: Request::TopK { vectors, n: n2 },
+                    ..
+                }) if name == DEFAULT_COLLECTION && *n2 == n => vectors.len(),
+                Some(Pending::Req {
+                    req: Request::Scoped { collection, inner },
+                    ..
+                }) if collection == name => match inner.as_ref() {
+                    Request::TopK { vectors, n: n2 } if *n2 == n => vectors.len(),
+                    _ => return,
+                },
+                _ => return,
+            };
+            if all.len() + extra > MAX_FUSE || members.len() >= MAX_FUSE {
+                return;
+            }
+            let Some(Pending::Req { req, decode_us }) = conn.queue.pop_front() else {
+                return;
+            };
+            let (scope, vectors) = match req {
+                Request::TopK { vectors, .. } => (None, vectors),
+                Request::Scoped { collection, inner } => match *inner {
+                    Request::TopK { vectors, .. } => (Some(collection), vectors),
+                    other => {
+                        conn.queue.push_front(Pending::Req {
+                            req: Request::Scoped {
+                                collection,
+                                inner: Box::new(other),
+                            },
+                            decode_us,
+                        });
+                        return;
+                    }
+                },
+                other => {
+                    conn.queue.push_front(Pending::Req {
+                        req: other,
+                        decode_us,
+                    });
+                    return;
+                }
+            };
+            members.push(FuseMember {
+                tok,
+                gen,
+                scope,
+                decode_us,
+                count: vectors.len(),
+            });
+            all.extend(vectors);
+        }
+    }
+}

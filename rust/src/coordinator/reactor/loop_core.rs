@@ -1,0 +1,656 @@
+//! The per-loop reactor core: one epoll loop owning one SO_REUSEPORT
+//! listener and every connection the kernel hashed to it.
+//!
+//! Everything here is PR 8's single-loop machinery, unchanged per
+//! connection — nonblocking accept, in-place frame parsing, pipelined
+//! dispatch, gathered writes with high/low-water backpressure — plus
+//! three additions for the sharded front-end:
+//!
+//! - **Completion drain.** When a worker-pool lane is attached, the
+//!   lane's completion eventfd lives in this loop's epoll; offloaded
+//!   fused runs complete through [`super::dispatch`] in submission
+//!   order.
+//! - **Idle sweep.** With `--conn-timeout-ms` set, `epoll_pwait` gets a
+//!   finite timeout (a quarter of the timeout, clamped to 10..=250ms)
+//!   and a coarse wheel sweep closes connections idle past the limit —
+//!   tick granularity, zero allocation, no per-connection timers.
+//! - **Stop flags.** A shared trip flag (set when a sibling loop
+//!   errors) and an optional caller-provided shutdown flag end the loop
+//!   cleanly: connections close, slots release, `run` returns `Ok`.
+//!
+//! Connection slots carry a generation counter so a completion for a
+//! closed (and possibly re-used) slot is dropped instead of answering
+//! the wrong peer.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::dispatch::InFlight;
+use super::{pool, sys};
+use crate::coordinator::metrics::ReactorLoopMetrics;
+use crate::coordinator::obs;
+use crate::coordinator::protocol::{self, Request, Response};
+use crate::coordinator::server::{observe_request, reject_connection, ServiceState};
+
+/// Pending write bytes past which a connection's read interest is
+/// dropped (the backpressure trigger).
+pub(super) const HIGH_WATER: usize = 1 << 20;
+/// Pending write bytes under which a paused connection resumes
+/// reading (hysteresis against MOD churn at the boundary).
+pub(super) const LOW_WATER: usize = 64 * 1024;
+/// Stack chunk for socket reads (copied into the connection buffer;
+/// `extend_from_slice` into existing capacity allocates nothing).
+const READ_CHUNK: usize = 16 * 1024;
+/// Per-connection read budget per tick: a firehose peer yields the
+/// loop after this many bytes and level-triggered epoll re-arms it.
+const MAX_TICK_READ: usize = 256 * 1024;
+/// Readiness events drained per `epoll_wait`.
+const MAX_EVENTS: usize = 1024;
+/// The listener's epoll token; connections use their slab index.
+const LISTENER_TOKEN: u64 = u64::MAX;
+/// The worker-lane completion eventfd's token.
+const COMPLETION_TOKEN: u64 = u64::MAX - 1;
+
+/// One decoded-but-undispatched request (or its decode error).
+pub(super) enum Pending {
+    Req { req: Request, decode_us: u64 },
+    Bad { message: String, decode_us: u64 },
+}
+
+pub(super) struct Conn {
+    pub(super) stream: TcpStream,
+    pub(super) peer: String,
+    /// Read buffer; valid bytes are `rbuf[rpos..]`.
+    pub(super) rbuf: Vec<u8>,
+    pub(super) rpos: usize,
+    /// Gathered response frames; unsent bytes are `wbuf[wpos..]`.
+    pub(super) wbuf: Vec<u8>,
+    pub(super) wpos: usize,
+    /// Frames parsed this tick, awaiting dispatch.
+    pub(super) queue: VecDeque<Pending>,
+    /// Currently-registered epoll interest bits.
+    pub(super) interest: u32,
+    /// Read interest dropped by backpressure.
+    pub(super) paused: bool,
+    /// Offloaded fused runs this connection is a member of. While
+    /// nonzero the queue stays parked (program order: the in-flight
+    /// acks must be written first) and the connection is skipped as a
+    /// fusion donor.
+    pub(super) blocked: u32,
+    /// Last byte-level activity (read or write progress), for the
+    /// coarse idle sweep.
+    pub(super) last_active: Instant,
+}
+
+impl Conn {
+    pub(super) fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// Per-loop configuration, fixed at spawn.
+pub(super) struct LoopConfig {
+    pub idx: usize,
+    pub max_conns: usize,
+    pub conn_timeout: Option<Duration>,
+    /// Caller-provided clean-shutdown flag.
+    pub external_stop: Option<Arc<AtomicBool>>,
+    /// Shared trip flag: set by any loop that errors so siblings drain.
+    pub trip: Arc<AtomicBool>,
+    /// True only for the unsharded `--reactor-threads 0` loop with no
+    /// stop flag and no timeout: keeps the exact PR-8 behavior of
+    /// blocking indefinitely in `epoll_pwait`.
+    pub block_forever: bool,
+}
+
+pub(super) struct Reactor {
+    pub(super) epfd: i32,
+    pub(super) listener: TcpListener,
+    pub(super) state: Arc<ServiceState>,
+    pub(super) cfg: LoopConfig,
+    /// This loop's metric shard (labeled `reactor="idx"` in expo).
+    pub(super) shard: Arc<ReactorLoopMetrics>,
+    /// Worker-pool lane, when `--reactor-workers > 0`.
+    pub(super) lane: Option<Arc<pool::LoopLane>>,
+    pub(super) conns: Vec<Option<Conn>>,
+    /// Slot generations: bumped on close so stale completions for a
+    /// recycled slot are discarded.
+    pub(super) gens: Vec<u64>,
+    pub(super) free: Vec<usize>,
+    /// Tokens freed mid-tick; recycled only at tick end so a stale
+    /// queued event can never act on a just-accepted connection.
+    pub(super) pending_free: Vec<usize>,
+    /// Connections that parsed at least one frame this tick (or had an
+    /// offload completion applied — either way they need dispatch and
+    /// a flush).
+    pub(super) active: Vec<usize>,
+    pub(super) events: Vec<sys::EpollEvent>,
+    /// Requests answered this tick (the dispatch-batch histogram
+    /// sample).
+    pub(super) tick_dispatched: u64,
+    /// Offloaded runs awaiting completion, in submission order.
+    pub(super) pending_bulk: VecDeque<InFlight>,
+    pub(super) inflight: usize,
+    pub(super) next_seq: u64,
+    /// Next idle-sweep deadline (set iff `conn_timeout` is).
+    next_sweep: Option<Instant>,
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        sys::close(self.epfd);
+    }
+}
+
+/// Run one event loop to completion on the current thread. Returns
+/// `Ok` only on a clean stop-flag shutdown; errors otherwise (and the
+/// caller trips the shared flag so sibling loops drain too).
+pub(super) fn run_loop(
+    listener: TcpListener,
+    state: Arc<ServiceState>,
+    shard: Arc<ReactorLoopMetrics>,
+    lane: Option<Arc<pool::LoopLane>>,
+    cfg: LoopConfig,
+) -> crate::Result<()> {
+    listener.set_nonblocking(true)?;
+    let epfd = sys::epoll_create1()?;
+    let next_sweep = cfg.conn_timeout.map(|_| Instant::now());
+    let mut r = Reactor {
+        epfd,
+        listener,
+        state,
+        cfg,
+        shard,
+        lane,
+        conns: Vec::new(),
+        gens: Vec::new(),
+        free: Vec::new(),
+        pending_free: Vec::new(),
+        active: Vec::new(),
+        events: vec![sys::EpollEvent::default(); MAX_EVENTS],
+        tick_dispatched: 0,
+        pending_bulk: VecDeque::new(),
+        inflight: 0,
+        next_seq: 0,
+        next_sweep,
+    };
+    sys::epoll_ctl(
+        r.epfd,
+        sys::EPOLL_CTL_ADD,
+        r.listener.as_raw_fd(),
+        sys::EPOLLIN,
+        LISTENER_TOKEN,
+    )?;
+    if let Some(lane) = &r.lane {
+        sys::epoll_ctl(
+            r.epfd,
+            sys::EPOLL_CTL_ADD,
+            lane.comp_wake.raw(),
+            sys::EPOLLIN,
+            COMPLETION_TOKEN,
+        )?;
+    }
+    r.run()
+}
+
+impl Reactor {
+    fn poll_timeout_ms(&self) -> i32 {
+        if let Some(t) = self.cfg.conn_timeout {
+            // A quarter of the idle timeout bounds sweep lag at 25%
+            // of the configured limit; the clamp keeps ticks humane.
+            (t.as_millis() as i64 / 4).clamp(10, 250) as i32
+        } else if self.cfg.block_forever {
+            -1
+        } else {
+            250
+        }
+    }
+
+    fn should_stop(&self) -> bool {
+        self.cfg.trip.load(Ordering::Relaxed)
+            || self
+                .cfg
+                .external_stop
+                .as_ref()
+                .is_some_and(|f| f.load(Ordering::Relaxed))
+    }
+
+    fn run(&mut self) -> crate::Result<()> {
+        loop {
+            let timeout = self.poll_timeout_ms();
+            let mut events = std::mem::take(&mut self.events);
+            let n = sys::epoll_wait(self.epfd, &mut events, timeout)?;
+            let m = &self.state.metrics;
+            m.reactor_polls.fetch_add(1, Ordering::Relaxed);
+            m.reactor_ready_events.fetch_add(n as u64, Ordering::Relaxed);
+            self.shard.polls.fetch_add(1, Ordering::Relaxed);
+            self.shard.ready_events.fetch_add(n as u64, Ordering::Relaxed);
+            if self.should_stop() {
+                self.events = events;
+                self.close_all("server shutdown");
+                return Ok(());
+            }
+            for ev in &events[..n] {
+                let (bits, tok) = (ev.events, ev.data);
+                match tok {
+                    LISTENER_TOKEN => self.accept_ready(),
+                    COMPLETION_TOKEN => self.drain_completions(),
+                    _ => self.conn_event(tok as usize, bits),
+                }
+            }
+            self.events = events;
+            self.sweep_idle();
+            self.dispatch();
+            let active = std::mem::take(&mut self.active);
+            for &t in &active {
+                if self.conns.get(t).is_some_and(|c| c.is_some()) {
+                    self.flush_writes(t);
+                }
+            }
+            self.active = active;
+            self.active.clear();
+            self.free.append(&mut self.pending_free);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, addr)) => {
+                    if self.cfg.max_conns > 0
+                        && self.state.metrics.connections.load(Ordering::Relaxed)
+                            >= self.cfg.max_conns as u64
+                    {
+                        // Accepted sockets are blocking (O_NONBLOCK
+                        // does not inherit), so the thread-mode
+                        // rejection path works unchanged.
+                        let _ = reject_connection(stream, self.cfg.max_conns);
+                        continue;
+                    }
+                    if self.register_conn(stream, addr.to_string()).is_err() {
+                        continue;
+                    }
+                    self.state.metrics.connections.fetch_add(1, Ordering::Relaxed);
+                    self.shard.connections.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient accept failure (EMFILE under fd
+                    // pressure, aborted handshake): log and let the
+                    // next readiness tick retry.
+                    obs::log::warn("crp::server", "accept failed", &[("error", e.to_string())]);
+                    break;
+                }
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream, peer: String) -> crate::Result<()> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true)?;
+        let tok = match self.free.pop() {
+            Some(t) => t,
+            None => {
+                self.conns.push(None);
+                self.gens.push(0);
+                self.conns.len() - 1
+            }
+        };
+        let interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+        let fd = stream.as_raw_fd();
+        let added = sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_ADD, fd, interest, tok as u64);
+        if let Err(e) = added {
+            self.free.push(tok);
+            return Err(e);
+        }
+        self.conns[tok] = Some(Conn {
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            queue: VecDeque::new(),
+            interest,
+            paused: false,
+            blocked: 0,
+            last_active: Instant::now(),
+        });
+        Ok(())
+    }
+
+    fn conn_event(&mut self, tok: usize, bits: u32) {
+        if !matches!(self.conns.get(tok), Some(Some(_))) {
+            return; // closed earlier this tick
+        }
+        if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+            self.close(tok, "socket error/hangup");
+            return;
+        }
+        if bits & sys::EPOLLOUT != 0 && !self.flush_writes(tok) {
+            return;
+        }
+        if bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+            self.read_ready(tok);
+        }
+    }
+
+    fn read_ready(&mut self, tok: usize) {
+        let mut tmp = [0u8; READ_CHUNK];
+        let mut budget = MAX_TICK_READ;
+        loop {
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return;
+            };
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.close(tok, "peer closed");
+                    return;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&tmp[..n]);
+                    conn.last_active = Instant::now();
+                    budget = budget.saturating_sub(n);
+                    if budget == 0 || n < tmp.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    let reason = e.to_string();
+                    self.close(tok, &reason);
+                    return;
+                }
+            }
+        }
+        self.parse_frames(tok);
+    }
+
+    /// Decode every complete frame in the read buffer, in place.
+    /// Pipelined clients land several per call.
+    fn parse_frames(&mut self, tok: usize) {
+        let Some(conn) = self.conns[tok].as_mut() else {
+            return;
+        };
+        let mut newly = 0u64;
+        let mut oversized = None;
+        loop {
+            let avail = conn.rbuf.len() - conn.rpos;
+            if avail < 4 {
+                break;
+            }
+            let len = u32::from_le_bytes(conn.rbuf[conn.rpos..conn.rpos + 4].try_into().unwrap());
+            if len > protocol::MAX_FRAME {
+                // Same contract as the blocking path's read_frame:
+                // an impossible header ends the connection.
+                oversized = Some(len);
+                break;
+            }
+            let need = 4 + len as usize;
+            if avail < need {
+                break;
+            }
+            let t0 = Instant::now();
+            let parsed = match Request::decode(&conn.rbuf[conn.rpos + 4..conn.rpos + need]) {
+                Ok(req) => Pending::Req {
+                    req,
+                    decode_us: t0.elapsed().as_micros() as u64,
+                },
+                Err(e) => Pending::Bad {
+                    message: format!("bad request: {e}"),
+                    decode_us: t0.elapsed().as_micros() as u64,
+                },
+            };
+            conn.rpos += need;
+            conn.queue.push_back(parsed);
+            newly += 1;
+        }
+        // Reclaim the consumed prefix; the buffer itself is kept.
+        if conn.rpos > 0 {
+            let len = conn.rbuf.len();
+            if conn.rpos == len {
+                conn.rbuf.clear();
+            } else {
+                conn.rbuf.copy_within(conn.rpos.., 0);
+                conn.rbuf.truncate(len - conn.rpos);
+            }
+            conn.rpos = 0;
+        }
+        if newly > 0 {
+            self.state
+                .metrics
+                .reactor_frames
+                .fetch_add(newly, Ordering::Relaxed);
+            self.shard.frames.fetch_add(newly, Ordering::Relaxed);
+            self.mark_active(tok);
+        }
+        if let Some(len) = oversized {
+            // Dispatch what decoded cleanly first (their responses
+            // still flush), then hang up like thread mode does.
+            let reason = format!("frame too large: {len}");
+            self.dispatch();
+            self.flush_writes(tok);
+            self.close(tok, &reason);
+        }
+    }
+
+    pub(super) fn mark_active(&mut self, tok: usize) {
+        if !self.active.contains(&tok) {
+            self.active.push(tok);
+        }
+    }
+
+    /// Close connections idle past `--conn-timeout-ms`. Coarse by
+    /// design: runs at most once per sweep tick (a quarter of the
+    /// timeout), so a connection lives at most ~1.25× the configured
+    /// limit. Connections that are mid-offload or still owe responses
+    /// are not idle and are left alone.
+    fn sweep_idle(&mut self) {
+        let Some(timeout) = self.cfg.conn_timeout else {
+            return;
+        };
+        let now = Instant::now();
+        match self.next_sweep {
+            Some(at) if now < at => return,
+            _ => {}
+        }
+        self.next_sweep = Some(now + timeout / 4);
+        for tok in 0..self.conns.len() {
+            let idle = match &self.conns[tok] {
+                Some(c) => {
+                    c.blocked == 0
+                        && c.queue.is_empty()
+                        && c.pending_write() == 0
+                        && now.duration_since(c.last_active) >= timeout
+                }
+                None => false,
+            };
+            if idle {
+                self.close(tok, "idle timeout");
+            }
+        }
+    }
+
+    /// Route one request through the shared router (identical to a
+    /// thread-mode request) and gather its response.
+    pub(super) fn respond_one(&mut self, tok: usize, req: Request, decode_us: u64) {
+        let h0 = Instant::now();
+        let (resp, meta) = self.state.handle_traced(req);
+        let handle_us = h0.elapsed().as_micros() as u64;
+        self.push_response(tok, &resp, &meta, decode_us, handle_us);
+    }
+
+    pub(super) fn respond_bad(&mut self, tok: usize, message: String, decode_us: u64) {
+        let resp = Response::Error { message };
+        let meta = obs::ReqMeta {
+            kind: obs::RequestKind::Admin,
+            collection: None,
+            candidates: None,
+        };
+        self.push_response(tok, &resp, &meta, decode_us, 0);
+    }
+
+    /// Encode one response into the connection's write buffer and
+    /// record the request's full-path metrics (thread-mode parity:
+    /// histogram, slow-query ring, sampled trace).
+    pub(super) fn push_response(
+        &mut self,
+        tok: usize,
+        resp: &Response,
+        meta: &obs::ReqMeta,
+        decode_us: u64,
+        handle_us: u64,
+    ) {
+        let Some(conn) = self.conns[tok].as_mut() else {
+            return;
+        };
+        let w0 = Instant::now();
+        let appended = protocol::append_frame(&mut conn.wbuf, resp).is_ok();
+        let write_us = w0.elapsed().as_micros() as u64;
+        let pending = conn.pending_write() as u64;
+        if !appended {
+            // A response over the frame cap fails the write on the
+            // blocking path too; the connection cannot continue.
+            self.close(tok, "response frame too large");
+            return;
+        }
+        self.tick_dispatched += 1;
+        self.state
+            .metrics
+            .reactor_write_buffer_hwm
+            .fetch_max(pending, Ordering::Relaxed);
+        let total_us = (decode_us + handle_us + write_us).max(1);
+        observe_request(&self.state, meta, total_us, decode_us, handle_us, write_us);
+    }
+
+    /// Flush as much of the write buffer as the socket accepts,
+    /// then recompute epoll interest (write interest while bytes
+    /// remain; read interest unless backpressured). Returns false
+    /// if the connection closed.
+    pub(super) fn flush_writes(&mut self, tok: usize) -> bool {
+        loop {
+            let Some(conn) = self.conns[tok].as_mut() else {
+                return false;
+            };
+            if conn.pending_write() == 0 {
+                break;
+            }
+            let wpos = conn.wpos;
+            match conn.stream.write(&conn.wbuf[wpos..]) {
+                Ok(0) => {
+                    self.close(tok, "peer stopped accepting writes");
+                    return false;
+                }
+                Ok(n) => {
+                    conn.wpos += n;
+                    conn.last_active = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    let reason = e.to_string();
+                    self.close(tok, &reason);
+                    return false;
+                }
+            }
+        }
+        let Some(conn) = self.conns[tok].as_mut() else {
+            return false;
+        };
+        // Reclaim sent bytes; the allocation is kept for reuse.
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        } else if conn.wpos >= LOW_WATER {
+            let len = conn.wbuf.len();
+            conn.wbuf.copy_within(conn.wpos.., 0);
+            conn.wbuf.truncate(len - conn.wpos);
+            conn.wpos = 0;
+        }
+        self.update_interest(tok);
+        true
+    }
+
+    fn update_interest(&mut self, tok: usize) {
+        let epfd = self.epfd;
+        let Some(conn) = self.conns[tok].as_mut() else {
+            return;
+        };
+        let pending = conn.pending_write();
+        // Hysteresis: pause reading at the high-water mark, resume
+        // only once the peer has drained under the low-water mark.
+        conn.paused = pending >= HIGH_WATER || (conn.paused && pending > LOW_WATER);
+        let mut want = sys::EPOLLRDHUP;
+        if !conn.paused {
+            want |= sys::EPOLLIN;
+        }
+        if pending > 0 {
+            want |= sys::EPOLLOUT;
+        }
+        if want != conn.interest
+            && sys::epoll_ctl(
+                epfd,
+                sys::EPOLL_CTL_MOD,
+                conn.stream.as_raw_fd(),
+                want,
+                tok as u64,
+            )
+            .is_ok()
+        {
+            conn.interest = want;
+        }
+    }
+
+    pub(super) fn close(&mut self, tok: usize, reason: &str) {
+        if let Some(conn) = self.conns[tok].take() {
+            // A closed peer is the normal end of every connection —
+            // debug, never warn (same contract as thread mode).
+            obs::log::debug(
+                "crp::server",
+                "connection closed",
+                &[("peer", conn.peer.clone()), ("reason", reason.to_string())],
+            );
+            self.state.metrics.connections.fetch_sub(1, Ordering::Relaxed);
+            self.shard.connections.fetch_sub(1, Ordering::Relaxed);
+            // Invalidate any in-flight offload membership for this
+            // slot: a later completion finds the generation bumped and
+            // drops the member instead of answering a recycled slot.
+            self.gens[tok] += 1;
+            self.pending_free.push(tok);
+            // Dropping the stream closes the fd, which also removes
+            // it from the epoll interest list.
+            drop(conn);
+        }
+    }
+
+    fn close_all(&mut self, reason: &str) {
+        for tok in 0..self.conns.len() {
+            if self.conns[tok].is_some() {
+                self.close(tok, reason);
+            }
+        }
+        self.free.append(&mut self.pending_free);
+        obs::log::info(
+            "crp::server",
+            "reactor loop stopped",
+            &[("reactor", self.cfg.idx.to_string())],
+        );
+    }
+}
+
+pub(super) fn rewrap(scope: Option<String>, inner: Request) -> Request {
+    match scope {
+        Some(collection) => Request::Scoped {
+            collection,
+            inner: Box::new(inner),
+        },
+        None => inner,
+    }
+}

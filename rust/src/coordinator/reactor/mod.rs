@@ -1,0 +1,213 @@
+//! Event-driven serving front-end: N sharded epoll loops (SO_REUSEPORT)
+//! with an optional bounded worker pool for off-loop bulk dispatch.
+//!
+//! The thread-per-connection path in `server.rs` is the oracle — this
+//! module exists so fan-in stops being bounded by OS threads, and (as
+//! of the multi-reactor front-end) so the front-end stops being bounded
+//! by one core. Layout:
+//!
+//! - [`sys`] — raw syscalls (`std::arch::asm!`, gated to linux
+//!   x86_64/aarch64 — no `libc`/`mio` in the dependency budget): epoll,
+//!   rlimit, SO_REUSEPORT socket setup, eventfd.
+//! - [`loop_core`] — the per-loop reactor: accept, in-place framing,
+//!   pipelining, write backpressure, the coarse idle sweep, clean
+//!   shutdown. One instance per listener, one thread per instance.
+//! - [`dispatch`] — the shared dispatch layer: request routing plus
+//!   Register/RegisterSparse/TopK fusion, and the offload path that
+//!   hands fused runs to the worker pool.
+//! - [`pool`] — the bounded worker pool: per-loop SPSC submission and
+//!   completion rings with eventfd wakeups, loop `i` statically served
+//!   by worker `i % W` so ordering needs no sequencer.
+//!
+//! Sharding model: `--reactor-threads N` binds N SO_REUSEPORT listeners
+//! on the same address; the kernel hashes incoming connections across
+//! the accept queues, so the loops share *nothing* on the hot path — no
+//! accept lock, no cross-loop handoff, per-loop connection slabs and
+//! metric shards. `--reactor-threads 0` keeps PR 8's single loop on a
+//! normally-bound listener, byte-identical in behavior and in
+//! `StatsDetailed` legacy framing. Each loop independently preserves
+//! PR 8's guarantees: responses byte-identical to the blocking oracle,
+//! zero steady-state allocation per request, per-connection program
+//! order.
+//!
+//! Worker offload (`--reactor-workers W`, default 0 = inline): fused
+//! bulk runs — the only requests whose handle time is unbounded — are
+//! pushed to an SPSC ring and executed off-loop while the loop keeps
+//! parsing and writing. Per-connection program order and per-frame ack
+//! order are preserved: a connection with an offloaded run in flight is
+//! parked until the completion (drained in submission order) writes its
+//! acks. Everything else — Ping, Estimate, Stats, admin — stays inline
+//! at loop latency.
+//!
+//! Error-path caveat, documented rather than papered over: if a *fused*
+//! bulk register fails (WAL I/O error mid-batch), every member receives
+//! the batch error frame, whose message differs from the per-request
+//! error thread mode would produce. Healthy-path responses are pinned
+//! byte-identical across modes by `tests/serve.rs`.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Reactor front-end options, carried from `ServerConfig` by `serve`.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct ReactorOptions {
+    /// Global connection cap (0 = unlimited), shared across loops.
+    pub max_conns: usize,
+    /// Worker-pool size; 0 executes fused runs inline on the loop.
+    pub workers: usize,
+    /// Idle-disconnect limit, enforced by the per-loop coarse sweep.
+    pub conn_timeout: Option<Duration>,
+    /// Cooperative shutdown: when set to true, every loop closes its
+    /// connections, workers join, and `serve` returns `Ok`.
+    pub shutdown: Option<Arc<AtomicBool>>,
+}
+
+/// Default loop count for `--reactor-threads`: enough to matter, small
+/// enough not to strand cores the engine needs.
+pub fn default_reactor_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod dispatch;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod loop_core;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod pool;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys;
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub use sys::raise_nofile_limit;
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) use sys::bind_reuseport_group;
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use super::{loop_core, pool, ReactorOptions};
+    use crate::coordinator::obs;
+    use crate::coordinator::server::ServiceState;
+
+    /// Run the reactor front-end: one event loop per listener, each on
+    /// its own thread, plus the shared worker pool. Never returns in
+    /// healthy operation unless `opts.shutdown` is tripped; then every
+    /// loop drains, workers join, and the result is `Ok`.
+    pub(crate) fn serve_reactor(
+        listeners: Vec<TcpListener>,
+        state: Arc<ServiceState>,
+        opts: ReactorOptions,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(!listeners.is_empty(), "reactor needs at least one listener");
+        let n = listeners.len();
+        let shards = state.metrics.install_reactor_loops(n);
+        let (workers, lanes) = if opts.workers > 0 {
+            let (p, lanes) = pool::WorkerPool::spawn(n, opts.workers)?;
+            (Some(p), lanes.into_iter().map(Some).collect())
+        } else {
+            (None, vec![None; n])
+        };
+        // Tripped by the first loop that errors so siblings drain too.
+        let trip = Arc::new(AtomicBool::new(false));
+        obs::log::info(
+            "crp::server",
+            "reactor front-end up",
+            &[
+                ("loops", n.to_string()),
+                ("workers", opts.workers.to_string()),
+                ("max_conns", opts.max_conns.to_string()),
+            ],
+        );
+        let mut handles = Vec::with_capacity(n);
+        for (i, ((listener, shard), lane)) in listeners
+            .into_iter()
+            .zip(shards)
+            .zip(lanes)
+            .enumerate()
+        {
+            let state = state.clone();
+            let trip = trip.clone();
+            let cfg = loop_core::LoopConfig {
+                idx: i,
+                max_conns: opts.max_conns,
+                conn_timeout: opts.conn_timeout,
+                external_stop: opts.shutdown.clone(),
+                trip: trip.clone(),
+                block_forever: n == 1 && opts.shutdown.is_none() && opts.conn_timeout.is_none(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("crp-reactor-{i}"))
+                    .spawn(move || {
+                        let r = loop_core::run_loop(listener, state, shard, lane, cfg);
+                        if r.is_err() {
+                            trip.store(true, Ordering::SeqCst);
+                        }
+                        r
+                    })?,
+            );
+        }
+        let mut first_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert_with(|| anyhow::anyhow!("reactor loop panicked"));
+                }
+            }
+        }
+        if let Some(p) = workers {
+            p.shutdown();
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) use imp::serve_reactor;
+
+/// `--server-mode reactor` needs epoll; everywhere else the flag fails
+/// fast with a clear error instead of a degraded emulation.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub(crate) fn serve_reactor(
+    _listeners: Vec<std::net::TcpListener>,
+    _state: std::sync::Arc<crate::coordinator::server::ServiceState>,
+    _opts: ReactorOptions,
+) -> crate::Result<()> {
+    anyhow::bail!(
+        "--server-mode reactor requires linux on x86_64/aarch64 (epoll); \
+         use --server-mode threads"
+    )
+}
+
+/// SO_REUSEPORT sharding is a linux feature like the reactor itself.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub(crate) fn bind_reuseport_group(
+    _addr: &str,
+    _n: usize,
+) -> crate::Result<Vec<std::net::TcpListener>> {
+    anyhow::bail!(
+        "--server-mode reactor requires linux on x86_64/aarch64 (epoll); \
+         use --server-mode threads"
+    )
+}
+
+/// No-op off linux: the connection-scaling bench degrades gracefully.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn raise_nofile_limit() -> Option<u64> {
+    None
+}

@@ -1,0 +1,300 @@
+//! Bounded worker pool for off-loop execution of *fused* bulk work.
+//!
+//! Topology: loop `i` submits exclusively to worker `i % W`, so every
+//! ring is strictly single-producer/single-consumer and a loop's jobs
+//! execute in submission order with no cross-thread reordering — which
+//! is what preserves per-connection program order and per-frame ack
+//! order without any sequencing logic beyond a FIFO.
+//!
+//! One lane per loop:
+//!
+//! ```text
+//!  loop i ── sub ring ──▶ worker (i % W)    wake: worker eventfd
+//!  loop i ◀── comp ring ── worker (i % W)   wake: lane comp eventfd
+//! ```
+//!
+//! The submission eventfd belongs to the *worker* (one blocking-read
+//! wait fd per worker, shared by all its lanes); the completion eventfd
+//! belongs to the *lane* and is registered in the owning loop's epoll,
+//! so completions wake the loop exactly like socket readiness. Rings
+//! are bounded: the loop never holds more than [`MAX_INFLIGHT`] jobs in
+//! flight per lane (falling back to inline execution past that), so the
+//! completion ring — sized [`RING_CAP`] ≥ `MAX_INFLIGHT` — can never
+//! overflow.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::sys::EventFd;
+use crate::coordinator::protocol::Response;
+use crate::coordinator::registry::Collection;
+use crate::data::sparse::CsrMatrix;
+
+/// Ring capacity per direction, per lane.
+pub(super) const RING_CAP: usize = 64;
+/// Jobs a loop may have in flight per lane before it executes fused
+/// runs inline instead (bounds completion-ring occupancy at half cap).
+pub(super) const MAX_INFLIGHT: usize = 32;
+
+/// A fixed-capacity single-producer/single-consumer ring. `push` is
+/// only ever called from one thread and `pop` from one other; the
+/// head/tail indices use acquire/release pairs so the consumer observes
+/// fully-written slots and the producer observes fully-taken ones.
+pub(super) struct Spsc<T> {
+    slots: Box<[UnsafeCell<Option<T>>]>,
+    /// Next slot to pop (consumer-owned; producer only loads).
+    head: AtomicUsize,
+    /// Next slot to push (producer-owned; consumer only loads).
+    tail: AtomicUsize,
+}
+
+// Safety: the SPSC protocol gives each slot a single owner at any
+// time — the producer owns `[tail, head+cap)`, the consumer owns
+// `[head, tail)` — so the UnsafeCell accesses never race.
+unsafe impl<T: Send> Send for Spsc<T> {}
+unsafe impl<T: Send> Sync for Spsc<T> {}
+
+impl<T> Spsc<T> {
+    pub fn with_capacity(cap: usize) -> Self {
+        Spsc {
+            slots: (0..cap).map(|_| UnsafeCell::new(None)).collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    /// Producer side. Returns the value back when the ring is full.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == self.slots.len() {
+            return Err(v);
+        }
+        unsafe { *self.slots[tail % self.slots.len()].get() = Some(v) };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side.
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let v = unsafe { (*self.slots[head % self.slots.len()].get()).take() };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        v
+    }
+}
+
+/// A fused bulk run, detached from the loop so a worker can execute it.
+/// Runs exactly the calls the inline path would make.
+pub(super) enum BulkJob {
+    Register {
+        col: Arc<Collection>,
+        ids: Vec<String>,
+        vecs: Vec<Vec<f32>>,
+    },
+    RegisterSparse {
+        col: Arc<Collection>,
+        ids: Vec<String>,
+        csr: CsrMatrix,
+    },
+    TopK {
+        col: Arc<Collection>,
+        vectors: Vec<Vec<f32>>,
+        n: u32,
+    },
+}
+
+impl BulkJob {
+    pub fn run(self) -> Response {
+        match self {
+            BulkJob::Register { col, ids, vecs } => col.register_batch(ids, vecs),
+            BulkJob::RegisterSparse { col, ids, csr } => col.register_sparse(ids, csr),
+            BulkJob::TopK { col, vectors, n } => col.topk(vectors, n),
+        }
+    }
+}
+
+pub(super) struct Submission {
+    pub seq: u64,
+    pub job: BulkJob,
+}
+
+pub(super) struct Completion {
+    pub seq: u64,
+    pub resp: Response,
+    /// Worker-measured execution time for the whole fused run.
+    pub handle_us: u64,
+}
+
+/// One loop's pair of rings plus wake fds. Shared (via `Arc`) between
+/// the owning loop thread and its statically-assigned worker.
+pub(super) struct LoopLane {
+    pub sub: Spsc<Submission>,
+    pub comp: Spsc<Completion>,
+    /// The assigned worker's wait fd (blocking): signaled on submit.
+    pub worker_wake: Arc<EventFd>,
+    /// The loop's completion fd (nonblocking, epoll-registered):
+    /// signaled by the worker after each completion push.
+    pub comp_wake: EventFd,
+}
+
+/// The worker threads plus everything needed to join them.
+pub(super) struct WorkerPool {
+    stop: Arc<AtomicBool>,
+    wakes: Vec<Arc<EventFd>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads serving `loops` lanes (lane `i` →
+    /// worker `i % workers`). Returns the pool and the per-loop lanes.
+    pub fn spawn(loops: usize, workers: usize) -> crate::Result<(WorkerPool, Vec<Arc<LoopLane>>)> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let wakes: Vec<Arc<EventFd>> = (0..workers)
+            .map(|_| EventFd::new(false).map(Arc::new))
+            .collect::<crate::Result<_>>()?;
+        let lanes: Vec<Arc<LoopLane>> = (0..loops)
+            .map(|i| {
+                Ok(Arc::new(LoopLane {
+                    sub: Spsc::with_capacity(RING_CAP),
+                    comp: Spsc::with_capacity(RING_CAP),
+                    worker_wake: wakes[i % workers].clone(),
+                    comp_wake: EventFd::new(true)?,
+                }))
+            })
+            .collect::<crate::Result<_>>()?;
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let mine: Vec<Arc<LoopLane>> = lanes
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % workers == w)
+                .map(|(_, l)| l.clone())
+                .collect();
+            let wake = wakes[w].clone();
+            let stop = stop.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("crp-worker-{w}"))
+                    .spawn(move || worker_main(&mine, &wake, &stop))?,
+            );
+        }
+        Ok((
+            WorkerPool {
+                stop,
+                wakes,
+                handles,
+            },
+            lanes,
+        ))
+    }
+
+    /// Stop and join every worker. In-flight jobs finish; queued jobs
+    /// are drained and executed (their completions go unread — by the
+    /// time this runs, every loop has already closed its connections).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in &self.wakes {
+            w.signal();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(lanes: &[Arc<LoopLane>], wake: &EventFd, stop: &AtomicBool) {
+    loop {
+        wake.drain(); // blocks until a loop signals (or shutdown does)
+        loop {
+            let mut did = false;
+            for lane in lanes {
+                while let Some(sub) = lane.sub.pop() {
+                    let t0 = Instant::now();
+                    let resp = sub.job.run();
+                    let handle_us = t0.elapsed().as_micros() as u64;
+                    // Cannot fail: per-lane in-flight is capped at
+                    // MAX_INFLIGHT < RING_CAP by the submitting loop.
+                    let pushed = lane.comp.push(Completion {
+                        seq: sub.seq,
+                        resp,
+                        handle_us,
+                    });
+                    debug_assert!(pushed.is_ok(), "completion ring overflow");
+                    lane.comp_wake.signal();
+                    did = true;
+                }
+            }
+            if !did {
+                break;
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spsc_ring_is_fifo_and_bounded() {
+        let ring: Spsc<u32> = Spsc::with_capacity(4);
+        assert_eq!(ring.pop(), None);
+        for i in 0..4 {
+            ring.push(i).unwrap();
+        }
+        assert_eq!(ring.push(99), Err(99), "full ring rejects");
+        for i in 0..4 {
+            assert_eq!(ring.pop(), Some(i), "FIFO order");
+        }
+        assert_eq!(ring.pop(), None);
+        // Wraps: indices keep running past capacity.
+        for round in 0..10u32 {
+            ring.push(round).unwrap();
+            assert_eq!(ring.pop(), Some(round));
+        }
+    }
+
+    #[test]
+    fn spsc_ring_survives_cross_thread_handoff() {
+        let ring: Arc<Spsc<u64>> = Arc::new(Spsc::with_capacity(8));
+        let n = 10_000u64;
+        let producer = {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    let mut v = i;
+                    loop {
+                        match ring.push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                }
+            })
+        };
+        let mut expect = 0u64;
+        while expect < n {
+            if let Some(v) = ring.pop() {
+                assert_eq!(v, expect, "values arrive in order, none lost");
+                expect += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        producer.join().unwrap();
+    }
+}

@@ -69,6 +69,21 @@ pub struct ServerConfig {
     /// reactor. Responses are byte-identical across modes; only
     /// scalability (and the aggregate batching counters) differ.
     pub server_mode: ServerMode,
+    /// Reactor sharding (`--reactor-threads`): bind this many
+    /// SO_REUSEPORT listeners, each driven by its own epoll loop
+    /// thread. 0 (the default here; the CLI defaults to
+    /// `min(4, cores)`) keeps the PR 8 single loop on a normally-bound
+    /// listener. Ignored in thread mode.
+    pub reactor_threads: usize,
+    /// Worker-pool size for off-loop execution of fused bulk runs
+    /// (`--reactor-workers`); 0 (default) executes them inline on the
+    /// loop thread. Ignored in thread mode.
+    pub reactor_workers: usize,
+    /// Cooperative shutdown flag for the reactor front-end: when some
+    /// other thread stores `true`, every loop closes its connections,
+    /// workers join, and `serve` returns `Ok`. `None` (default) runs
+    /// until the listener errors, as thread mode always does.
+    pub shutdown: Option<Arc<std::sync::atomic::AtomicBool>>,
     /// Coding of the `default` collection (the one legacy no-namespace
     /// requests hit). Further collections are created at runtime.
     pub coding: CodingParams,
@@ -135,6 +150,9 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:7474".to_string(),
             server_mode: ServerMode::default(),
+            reactor_threads: 0,
+            reactor_workers: 0,
+            shutdown: None,
             coding: CodingParams::new(crate::coding::Scheme::TwoBit, 0.75),
             batcher: BatcherConfig::default(),
             epoch: EpochConfig::default(),
@@ -721,8 +739,16 @@ pub fn serve(
     cfg: ServerConfig,
     ready: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
 ) -> crate::Result<()> {
-    let listener = TcpListener::bind(&cfg.addr)?;
-    let addr = listener.local_addr()?;
+    // Multi-reactor mode binds N SO_REUSEPORT listeners on the same
+    // address so the kernel spreads connections across the per-thread
+    // event loops; every other mode binds exactly one normal listener.
+    let multi = cfg.server_mode == ServerMode::Reactor && cfg.reactor_threads > 0;
+    let listeners = if multi {
+        crate::coordinator::reactor::bind_reuseport_group(&cfg.addr, cfg.reactor_threads)?
+    } else {
+        vec![TcpListener::bind(&cfg.addr)?]
+    };
+    let addr = listeners[0].local_addr()?;
     if let Some(tx) = ready {
         let _ = tx.send(addr);
     }
@@ -776,11 +802,21 @@ pub fn serve(
         None => None,
     };
     if cfg.server_mode == ServerMode::Reactor {
-        // The reactor owns the listener from here; it shares the
+        // The reactor owns the listeners from here; it shares the
         // router, metrics endpoint, and shutdown story with thread
         // mode and differs only in connection scheduling.
-        return crate::coordinator::reactor::serve_reactor(listener, state, cfg.max_conns);
+        return crate::coordinator::reactor::serve_reactor(
+            listeners,
+            state,
+            crate::coordinator::reactor::ReactorOptions {
+                max_conns: cfg.max_conns,
+                workers: cfg.reactor_workers,
+                conn_timeout: cfg.conn_timeout,
+                shutdown: cfg.shutdown.clone(),
+            },
+        );
     }
+    let listener = listeners.into_iter().next().expect("one listener bound");
     for stream in listener.incoming() {
         let stream = stream?;
         if cfg.max_conns > 0

@@ -42,54 +42,141 @@ pub fn parse_libsvm(mut reader: impl BufRead, cols: usize, name: String) -> crat
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let mut parts = line.split_ascii_whitespace();
-        let label: f32 = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {lineno}: empty"))?
-            .parse()
-            .map_err(|e| anyhow::anyhow!("line {lineno}: bad label: {e}"))?;
-        labels.push(if label > 0.0 { 1.0 } else { -1.0 });
-        let mut prev: Option<u32> = None;
-        for tok in parts {
-            let (i, v) = tok
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {lineno}: bad token {tok:?}"))?;
-            let i: u32 = i
-                .parse()
-                .map_err(|e| anyhow::anyhow!("line {lineno}: bad index: {e}"))?;
-            anyhow::ensure!(
-                i >= 1,
-                "line {lineno}: libsvm indices are 1-based (index 0 seen)"
-            );
-            let i = i - 1;
-            if let Some(p) = prev {
-                anyhow::ensure!(
-                    i != p,
-                    "line {lineno}: duplicate column index {}",
-                    i + 1
-                );
-                anyhow::ensure!(
-                    i > p,
-                    "line {lineno}: unsorted column index {} after {}",
-                    i + 1,
-                    p + 1
-                );
-            }
-            prev = Some(i);
-            let v: f32 = v
-                .parse()
-                .map_err(|e| anyhow::anyhow!("line {lineno}: bad value: {e}"))?;
-            x.indices.push(i);
-            x.values.push(v);
-            max_idx = max_idx.max(i);
-        }
-        x.indptr.push(x.indices.len());
+        labels.push(parse_row(line, lineno, &mut x, &mut max_idx)?);
     }
     x.cols = if cols > 0 { cols } else { max_idx as usize + 1 };
     x.validate()?; // e.g. a forced `cols` smaller than an index seen
     let ds = Dataset { x, y: labels, name };
     ds.validate()?;
     Ok(ds)
+}
+
+/// Parse one non-blank libsvm line, appending the row to `x` (indices,
+/// values, and the closing indptr entry) and widening `max_idx`.
+/// Returns the ±1-coerced label. Shared by the whole-file parser above
+/// and the chunked streaming reader below so both enforce identical
+/// token / ordering / 1-based-index rules.
+fn parse_row(
+    line: &str,
+    lineno: usize,
+    x: &mut CsrMatrix,
+    max_idx: &mut u32,
+) -> crate::Result<f32> {
+    let mut parts = line.split_ascii_whitespace();
+    let label: f32 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("line {lineno}: empty"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("line {lineno}: bad label: {e}"))?;
+    let mut prev: Option<u32> = None;
+    for tok in parts {
+        let (i, v) = tok
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: bad token {tok:?}"))?;
+        let i: u32 = i
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad index: {e}"))?;
+        anyhow::ensure!(
+            i >= 1,
+            "line {lineno}: libsvm indices are 1-based (index 0 seen)"
+        );
+        let i = i - 1;
+        if let Some(p) = prev {
+            anyhow::ensure!(i != p, "line {lineno}: duplicate column index {}", i + 1);
+            anyhow::ensure!(
+                i > p,
+                "line {lineno}: unsorted column index {} after {}",
+                i + 1,
+                p + 1
+            );
+        }
+        prev = Some(i);
+        let v: f32 = v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad value: {e}"))?;
+        x.indices.push(i);
+        x.values.push(v);
+        *max_idx = (*max_idx).max(i);
+    }
+    x.indptr.push(x.indices.len());
+    Ok(if label > 0.0 { 1.0 } else { -1.0 })
+}
+
+/// Chunked streaming libsvm reader: yields CSR batches of at most
+/// `chunk` rows as the file is read, so bulk ingest never materializes
+/// the whole dataset — peak memory is one chunk plus the line buffer,
+/// regardless of file size.
+///
+/// When `cols` is 0 each chunk's `cols` is the running max index seen
+/// *so far* (monotone across chunks); a forced `cols` pins every chunk
+/// and rejects any larger index at the chunk that contains it, exactly
+/// like [`parse_libsvm`]. Line numbers in errors are file-absolute.
+pub struct LibsvmChunks<R: BufRead> {
+    reader: R,
+    /// Forced column count (0 = infer from the running max index).
+    cols: usize,
+    chunk: usize,
+    max_idx: u32,
+    buf: String,
+    lineno: usize,
+    done: bool,
+}
+
+impl LibsvmChunks<std::io::BufReader<std::fs::File>> {
+    /// Open a file for chunked streaming.
+    pub fn open(path: impl AsRef<Path>, cols: usize, chunk: usize) -> crate::Result<Self> {
+        let file = std::fs::File::open(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("open {:?}: {e}", path.as_ref()))?;
+        Ok(Self::new(std::io::BufReader::new(file), cols, chunk))
+    }
+}
+
+impl<R: BufRead> LibsvmChunks<R> {
+    pub fn new(reader: R, cols: usize, chunk: usize) -> Self {
+        LibsvmChunks {
+            reader,
+            cols,
+            chunk: chunk.max(1),
+            max_idx: 0,
+            buf: String::new(),
+            lineno: 0,
+            done: false,
+        }
+    }
+
+    /// The next batch: up to `chunk` rows as a validated [`CsrMatrix`]
+    /// plus their ±1 labels, or `None` at end of input.
+    pub fn next_chunk(&mut self) -> crate::Result<Option<(CsrMatrix, Vec<f32>)>> {
+        if self.done {
+            return Ok(None);
+        }
+        let mut x = CsrMatrix::with_capacity(self.chunk, 0, self.cols);
+        let mut labels = Vec::with_capacity(self.chunk);
+        while labels.len() < self.chunk {
+            self.buf.clear();
+            if self.reader.read_line(&mut self.buf)? == 0 {
+                self.done = true;
+                break;
+            }
+            self.lineno += 1;
+            let line = self.buf.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let lineno = self.lineno;
+            labels.push(parse_row(line, lineno, &mut x, &mut self.max_idx)?);
+        }
+        if labels.is_empty() {
+            return Ok(None);
+        }
+        x.cols = if self.cols > 0 {
+            self.cols
+        } else {
+            self.max_idx as usize + 1
+        };
+        x.validate()?;
+        Ok(Some((x, labels)))
+    }
 }
 
 /// Write a dataset in libsvm format.
@@ -189,5 +276,72 @@ mod tests {
         let text = "+1 1:1.0\n";
         let ds = parse_libsvm(std::io::Cursor::new(text), 100, "t".into()).unwrap();
         assert_eq!(ds.x.cols, 100);
+    }
+
+    /// Chunked streaming must agree exactly with the whole-file parse:
+    /// concatenated chunk rows = dataset rows, labels included,
+    /// comments and blanks skipped without consuming chunk capacity.
+    #[test]
+    fn chunks_concatenate_to_whole_file_parse() {
+        let text = "+1 1:0.5 3:1.5\n# comment\n-1 2:2.0\n\n+1 1:1.0\n-1 4:0.25\n+1 2:0.125\n";
+        let whole = parse_libsvm(std::io::Cursor::new(text), 0, "t".into()).unwrap();
+        for chunk in [1usize, 2, 3, 100] {
+            let mut rd = LibsvmChunks::new(std::io::Cursor::new(text), 0, chunk);
+            let mut rows = 0usize;
+            let mut labels = Vec::new();
+            while let Some((x, y)) = rd.next_chunk().unwrap() {
+                assert!(x.rows() <= chunk, "chunk {chunk} overflowed: {}", x.rows());
+                assert_eq!(x.rows(), y.len());
+                for r in 0..x.rows() {
+                    assert_eq!(x.row(r), whole.x.row(rows + r), "row {} chunk {chunk}", rows + r);
+                }
+                rows += x.rows();
+                labels.extend(y);
+            }
+            assert_eq!(rows, whole.len(), "chunk {chunk}");
+            assert_eq!(labels, whole.y, "chunk {chunk}");
+            assert!(rd.next_chunk().unwrap().is_none(), "EOF is sticky");
+        }
+    }
+
+    /// Inferred cols grow monotonically with the running max index;
+    /// forced cols pin every chunk.
+    #[test]
+    fn chunk_cols_track_running_max() {
+        let text = "+1 1:1.0\n+1 7:1.0\n+1 3:1.0\n";
+        let mut rd = LibsvmChunks::new(std::io::Cursor::new(text), 0, 1);
+        assert_eq!(rd.next_chunk().unwrap().unwrap().0.cols, 1);
+        assert_eq!(rd.next_chunk().unwrap().unwrap().0.cols, 7);
+        // Running max is sticky even though this row only touches col 3.
+        assert_eq!(rd.next_chunk().unwrap().unwrap().0.cols, 7);
+        assert!(rd.next_chunk().unwrap().is_none());
+
+        let mut rd = LibsvmChunks::new(std::io::Cursor::new(text), 100, 2);
+        assert_eq!(rd.next_chunk().unwrap().unwrap().0.cols, 100);
+        assert_eq!(rd.next_chunk().unwrap().unwrap().0.cols, 100);
+    }
+
+    /// Errors carry file-absolute line numbers and surface at the
+    /// chunk containing the bad line — prior chunks are delivered.
+    #[test]
+    fn chunk_errors_use_absolute_line_numbers() {
+        let text = "+1 1:1.0\n+1 2:1.0\n+1 5:1.0 2:2.0\n";
+        let mut rd = LibsvmChunks::new(std::io::Cursor::new(text), 0, 2);
+        assert_eq!(rd.next_chunk().unwrap().unwrap().0.rows(), 2);
+        let err = rd.next_chunk().unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("unsorted"), "{err}");
+
+        // A forced-cols violation errors at its chunk too.
+        let mut rd = LibsvmChunks::new(std::io::Cursor::new("+1 1:1\n+1 50:1\n"), 10, 1);
+        assert!(rd.next_chunk().unwrap().is_some());
+        assert!(rd.next_chunk().is_err());
+    }
+
+    /// Empty input (or all comments) yields no chunks, not an empty one.
+    #[test]
+    fn empty_input_yields_no_chunks() {
+        let mut rd = LibsvmChunks::new(std::io::Cursor::new("# nothing\n\n"), 0, 8);
+        assert!(rd.next_chunk().unwrap().is_none());
     }
 }

@@ -98,14 +98,20 @@
 //!   past the primary's segment-retention lag cap, expose their lag as
 //!   gauges, and fail over via `crp promote`. The TCP front-end is
 //!   selectable (`--server-mode`): the default blocking
-//!   thread-per-connection loop, or a single-threaded epoll reactor
-//!   ([`coordinator::reactor`]) that holds 10k+ connections —
-//!   nonblocking accept, frames parsed in place from per-connection
-//!   buffers, pipelined dispatch, concurrent Register/TopK coalesced
-//!   into the bulk engine paths, gathered writes with per-connection
-//!   backpressure — answering byte-identically to the blocking oracle
-//!   with no per-request allocation at steady state. Python never runs
-//!   on the request path.
+//!   thread-per-connection loop, or the sharded epoll reactor
+//!   ([`coordinator::reactor`]) — `--reactor-threads N` event loops,
+//!   each with its own SO_REUSEPORT listener so the kernel spreads
+//!   connections across them with nothing shared on the hot path, each
+//!   loop holding 10k+ connections (nonblocking accept, frames parsed
+//!   in place from per-connection buffers, pipelined dispatch,
+//!   concurrent Register/RegisterSparse/TopK coalesced into the bulk
+//!   engine paths, gathered writes with per-connection backpressure,
+//!   coarse idle sweep honoring `--conn-timeout-ms`), with
+//!   `--reactor-workers` optionally running fused bulk work off-loop
+//!   through SPSC rings + eventfd wakeups while program and ack order
+//!   hold — answering byte-identically to the blocking oracle with no
+//!   per-request allocation at steady state. Python never runs on the
+//!   request path.
 //!
 //! ## Analysis stack
 //!

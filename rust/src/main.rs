@@ -150,6 +150,11 @@ COMMANDS:
                [--drain-threshold N]  ingest-epoch size before a bulk fold
                [--max-conns N]        concurrent-connection cap (0 = unlimited)
                [--server-mode M]      threads (default) or reactor — see SERVING
+               [--reactor-threads N]  reactor event loops, each with its
+                 own SO_REUSEPORT listener (default min(4, cores);
+                 0 = the single pre-sharding loop)
+               [--reactor-workers N]  worker threads executing fused
+                 bulk runs off the event loops (0 = inline, the default)
                [--data-dir DIR]       durable multi-collection root: every
                  collection persists under DIR/<name>/{snap,wal} and a
                  CRC-checked DIR/MANIFEST records each collection's coding
@@ -197,7 +202,9 @@ COMMANDS:
                --libsvm FILE [--chunk N] [--id-prefix P] [--dim D]
                bulk sparse ingest: stream a libsvm/svmlight file
                through RegisterSparse frames of N rows (default 1024),
-               row r stored as id \"<P><r>\" (see SPARSE INGEST)
+               parsed and shipped chunk by chunk (peak memory is one
+               chunk; the summary reports peak RSS), row r stored as
+               id \"<P><r>\" (see SPARSE INGEST)
   recover      --snapshot F --wal-dir D   replay a snapshot + WAL offline
                and print recovery stats (rows, records, torn tail)
   bench-serve  --addr A --n N --dim D --connections C [--collection C]
@@ -267,20 +274,30 @@ SPARSE INGEST:
 SERVING:
   --server-mode picks the TCP front-end; both modes speak the same
   frame protocol and answer byte-identically. `threads` (the default)
-  spawns one blocking thread per connection — simple, debuggable, and
-  the mode that honors --conn-timeout-ms idle disconnects. `reactor`
-  runs a single-threaded epoll event loop (linux x86_64/aarch64 only):
+  spawns one blocking thread per connection — simple and debuggable.
+  `reactor` runs epoll event loops (linux x86_64/aarch64 only):
   nonblocking accept, frames parsed in place out of per-connection
   read buffers, pipelined requests dispatched per readiness event,
-  concurrently-arriving Register/TopK requests coalesced into the
-  engine's bulk paths, and gathered response writes with backpressure
-  (a slow reader stops being polled for input past 1 MiB of queued
-  responses, so it never stalls other connections). The reactor holds
-  10k+ connections with flat tail latency and no per-request heap
-  allocation at steady state; the crp_reactor_* series on /metrics
-  (ready events, dispatch batch size, write-buffer high water,
-  coalesced batches) and `crp stats` show it working. --max-conns
-  caps both modes.
+  concurrently-arriving Register/RegisterSparse/TopK requests
+  coalesced into the engine's bulk paths, and gathered response
+  writes with backpressure (a slow reader stops being polled for
+  input past 1 MiB of queued responses, so it never stalls other
+  connections). --reactor-threads N (default min(4, cores)) shards
+  the front-end: N event loops each bind their own SO_REUSEPORT
+  listener, so the kernel spreads connections across loops with no
+  shared accept lock and the loops share nothing on the hot path;
+  0 keeps the original single loop. --reactor-workers W hands fused
+  bulk runs to a bounded worker pool over per-loop SPSC rings with
+  eventfd wakeups — the loop keeps parsing and writing while heavy
+  ingest/scan work runs off-loop, with per-connection program order
+  and per-frame ack order preserved (0 = run them inline). Each loop
+  holds 10k+ connections with flat tail latency and no per-request
+  heap allocation at steady state; the crp_reactor_* series on
+  /metrics (aggregate plus a {reactor=\"i\"} breakdown per loop,
+  offloaded batches, worker queue depth) and `crp stats` show it
+  working. --max-conns caps both modes globally; --conn-timeout-ms
+  idle disconnects are honored in both (the reactor sweeps idle
+  connections off a coarse timer).
 
 COLLECTIONS:
   One server process serves many named collections, each with its own
@@ -420,6 +437,11 @@ fn main() -> crp::Result<()> {
             let max_conns: usize = a.get("max-conns", 1024)?;
             let server_mode: crp::coordinator::ServerMode =
                 a.get("server-mode", Default::default())?;
+            let reactor_threads: usize = a.get(
+                "reactor-threads",
+                crp::coordinator::reactor::default_reactor_threads(),
+            )?;
+            let reactor_workers: usize = a.get("reactor-workers", 0usize)?;
             let fsync = crp::coordinator::FsyncPolicy::parse(&a.get_str("fsync", "os"))?;
             let checkpoint_every: u64 = a.get("checkpoint-every", 100_000u64)?;
             let cfg = ProjectionConfig {
@@ -439,7 +461,8 @@ fn main() -> crp::Result<()> {
             eprintln!(
                 "serving on {addr} (k={k}, scheme={}, w={w}, pjrt_active={}, \
                  scan_kernel={}, drain_threshold={drain_threshold}, \
-                 max_conns={max_conns}, server_mode={})",
+                 max_conns={max_conns}, server_mode={}, reactor_threads={reactor_threads}, \
+                 reactor_workers={reactor_workers})",
                 scheme.label(),
                 projector.pjrt_active(),
                 kernel.kind().label(),
@@ -494,6 +517,8 @@ fn main() -> crp::Result<()> {
                 checkpoint_every,
                 max_conns,
                 server_mode,
+                reactor_threads,
+                reactor_workers,
                 metrics_addr: a.get_opt("metrics-addr").map(str::to_string),
                 log_level: a.get_opt("log-level").map(str::to_string),
                 slow_query_us: a.get("slow-query-us", 0u64)?,
@@ -834,44 +859,49 @@ fn register_libsvm(
     let chunk: usize = a.get("chunk", 1024)?;
     anyhow::ensure!(chunk >= 1, "--chunk must be >= 1");
     let prefix = a.get_str("id-prefix", "row");
-    let ds = crp::data::libsvm::read_libsvm(path, dim)?;
-    let (rows, nnz) = (ds.x.rows(), ds.x.nnz());
-    anyhow::ensure!(rows > 0, "{path}: no rows to register");
+    // Chunks ship as they are parsed — the file is never materialized
+    // as one Dataset, so peak memory is one --chunk batch no matter
+    // how large the input is (the ingest summary reports peak RSS).
+    let mut chunks = crp::data::libsvm::LibsvmChunks::open(path, dim, chunk)?;
     let mut client = crp::coordinator::SketchClient::connect_with_retry(addr, 5)?;
     let t0 = std::time::Instant::now();
-    let mut sent = 0usize;
-    while sent < rows {
-        let end = (sent + chunk).min(rows);
-        let mut csr = crp::data::sparse::CsrMatrix::with_capacity(
-            end - sent,
-            ds.x.indptr[end] - ds.x.indptr[sent],
-            ds.x.cols,
-        );
-        let mut ids = Vec::with_capacity(end - sent);
-        for r in sent..end {
-            let (idx, val) = ds.x.row(r);
-            csr.push_row(idx, val);
-            ids.push(format!("{prefix}{r}"));
-        }
+    let mut rows = 0usize;
+    let mut nnz = 0usize;
+    let mut cols = 0usize;
+    while let Some((csr, _labels)) = chunks.next_chunk()? {
+        let n = csr.rows();
+        let ids: Vec<String> = (rows..rows + n).map(|r| format!("{prefix}{r}")).collect();
+        nnz += csr.nnz();
+        cols = cols.max(csr.cols);
         let acked = client.register_sparse_in(collection, ids, csr)?;
         anyhow::ensure!(
-            acked as usize == end - sent,
-            "short RegisterSparse ack: {acked} of {}",
-            end - sent
+            acked as usize == n,
+            "short RegisterSparse ack: {acked} of {n}"
         );
-        sent = end;
+        rows += n;
     }
+    anyhow::ensure!(rows > 0, "{path}: no rows to register");
     let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let rss = peak_rss_kb()
+        .map(|kb| format!("{:.1} MiB", kb as f64 / 1024.0))
+        .unwrap_or_else(|| "n/a".into());
     println!(
-        "registered {rows} sparse rows ({nnz} nonzeros, d={}) from {path} into \
-         collection {:?} in {:.2}s  ({:.0} rows/s, {:.0} nnz/s)",
-        ds.x.cols,
+        "registered {rows} sparse rows ({nnz} nonzeros, d={cols}) from {path} into \
+         collection {:?} in {:.2}s  ({:.0} rows/s, {:.0} nnz/s, peak RSS {rss})",
         collection.unwrap_or("default"),
         dt,
         rows as f64 / dt,
         nnz as f64 / dt
     );
     Ok(())
+}
+
+/// Peak resident set size of this process in KiB, off /proc (`VmHWM`).
+/// `None` where /proc isn't available — the caller prints "n/a".
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_ascii_whitespace().nth(1)?.parse().ok()
 }
 
 /// One full `crp stats` page: aggregate counters, the per-request-kind
@@ -906,6 +936,20 @@ fn print_stats(st: &crp::coordinator::protocol::StatsSnapshot) {
              batcher_queue={}",
             r.p50_dispatch, r.p99_dispatch, r.write_buffer_hwm, r.batcher_queue_depth
         );
+        if r.offloaded_batches > 0 || r.worker_queue_depth > 0 {
+            println!(
+                "reactor_workers:      {} offloaded batches, {} in flight",
+                r.offloaded_batches, r.worker_queue_depth
+            );
+        }
+        for (i, l) in r.per_loop.iter().enumerate() {
+            println!(
+                "  loop {i}:             {} conns, {} polls, {} ready events, \
+                 {} frames, {} coalesced, {} offloaded",
+                l.connections, l.polls, l.ready_events, l.frames,
+                l.coalesced_batches, l.offloaded_batches
+            );
+        }
     }
     if let Some(r) = &st.replication {
         println!(

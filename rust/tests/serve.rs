@@ -1,10 +1,15 @@
 //! Serving front-end tests: the epoll reactor answering byte-identically
 //! to the blocking thread-per-connection oracle (sequential and
 //! pipelined, including the coalesced bulk paths), framing edge cases
-//! (slowloris, torn and oversized frames), and the reactor observability
-//! counters reaching `StatsDetailed`.
+//! (slowloris, torn and oversized frames), the reactor observability
+//! counters reaching `StatsDetailed`, and the PR-10 sharded front-end:
+//! multi-loop oracle equivalence, worker-pool offload ordering, idle
+//! disconnects, and cooperative shutdown.
 //!
-//! Run standalone with `cargo test --release -q serve` (CI does).
+//! Run standalone with `cargo test --release -q serve` (CI does, twice:
+//! once as-is and once under `CRP_SERVE_MODE=reactor-multi`, which
+//! re-runs every reactor-mode server here as 4 SO_REUSEPORT loops + 2
+//! workers).
 #![cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
 
 use std::io::{BufReader, Read, Write};
@@ -20,24 +25,47 @@ use crp::data::CsrMatrix;
 use crp::mathx::Pcg64;
 use crp::projection::{MatrixKind, ProjectionConfig, Projector};
 
-fn spawn_server(mode: ServerMode) -> String {
+/// Spawn a server with `mode` plus config tweaks, returning its bound
+/// address and the serve-thread handle (joinable after a cooperative
+/// shutdown; every other test just drops it).
+///
+/// `CRP_SERVE_MODE=reactor-multi` (the CI matrix leg) upgrades every
+/// reactor-mode server to 4 SO_REUSEPORT loops + 2 workers, so the
+/// whole suite — oracle comparisons included — re-runs against the
+/// sharded front-end. Thread-mode servers are the oracle and are never
+/// reconfigured.
+fn spawn_server_cfg(
+    mode: ServerMode,
+    tweak: impl FnOnce(&mut ServerConfig),
+) -> (String, std::thread::JoinHandle<crp::Result<()>>) {
     let projector = Arc::new(Projector::new_cpu(ProjectionConfig {
         k: 64,
         seed: 7,
         ..Default::default()
     }));
-    let cfg = ServerConfig {
+    let mut cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         server_mode: mode,
         ..Default::default()
     };
+    if mode == ServerMode::Reactor
+        && std::env::var("CRP_SERVE_MODE").as_deref() == Ok("reactor-multi")
+    {
+        cfg.reactor_threads = 4;
+        cfg.reactor_workers = 2;
+    }
+    tweak(&mut cfg);
     let (tx, rx) = std::sync::mpsc::channel();
-    std::thread::spawn(move || {
-        let _ = serve(projector, cfg, Some(tx));
-    });
-    rx.recv()
+    let handle = std::thread::spawn(move || serve(projector, cfg, Some(tx)));
+    let addr = rx
+        .recv()
         .expect("server thread exited before reporting its bound address")
-        .to_string()
+        .to_string();
+    (addr, handle)
+}
+
+fn spawn_server(mode: ServerMode) -> String {
+    spawn_server_cfg(mode, |_| {}).0
 }
 
 fn vec_of(g: &mut Pcg64, dim: usize) -> Vec<f32> {
@@ -568,4 +596,236 @@ fn serve_torn_and_oversized_frames_close_cleanly() {
     c.ping().unwrap();
     let st = c.stats_detailed().unwrap();
     assert_eq!(st.connections, 1, "closed connections must release their slots");
+}
+
+/// The sharded front-end is held to the same oracle as the single
+/// loop: 4 SO_REUSEPORT loops answer the full request-kind script byte
+/// for byte (one connection lands on one loop, so per-connection
+/// semantics are untouched by sharding), and `StatsDetailed` carries
+/// the per-loop breakdown with the aggregates equal to the shard sums.
+#[test]
+fn serve_multi_reactor_answers_byte_identical_to_thread_oracle() {
+    let script = full_script();
+    let threads = run_script(&spawn_server(ServerMode::Threads), &script, false);
+    let (addr, _h) = spawn_server_cfg(ServerMode::Reactor, |c| {
+        c.reactor_threads = 4;
+        c.reactor_workers = 0;
+    });
+    let multi = run_script(&addr, &script, false);
+    assert_eq!(threads.len(), multi.len());
+    for ((req, a), b) in script.iter().zip(&threads).zip(&multi) {
+        if timing_dependent(req) {
+            compare_structural(req, a, b);
+        } else {
+            assert_eq!(a, b, "response to {req:?} diverged under --reactor-threads 4");
+        }
+    }
+    let st = SketchClient::connect(&addr).unwrap().stats_detailed().unwrap();
+    let r = st.reactor.expect("reactor section present");
+    assert_eq!(r.per_loop.len(), 4, "one shard per loop");
+    assert_eq!(
+        r.per_loop.iter().map(|l| l.frames).sum::<u64>(),
+        r.frames,
+        "aggregate frames must equal the shard sum"
+    );
+    assert!(
+        r.per_loop.iter().map(|l| l.connections).sum::<u64>() >= 1,
+        "the stats connection itself is owned by some loop"
+    );
+}
+
+/// Worker-pool offload: a pipelined fusion-heavy burst against
+/// `--reactor-workers 2` must still answer byte-identically to the
+/// thread oracle — per-connection program order and per-frame ack
+/// order survive the off-loop execution — and the offload counters
+/// must show the pool actually ran fused batches. Fusion needs the
+/// burst to land in one readiness event, so the offload attempt is
+/// retried on fresh servers like the inline fusion test above.
+#[test]
+fn serve_workers_offload_fused_runs_byte_identical() {
+    let script = fusion_script();
+    let oracle = run_script(&spawn_server(ServerMode::Threads), &script, false);
+    let mut offloaded = 0u64;
+    for attempt in 0..20 {
+        let (addr, _h) = spawn_server_cfg(ServerMode::Reactor, |c| {
+            c.reactor_workers = 2;
+        });
+        let got = run_script(&addr, &script, true);
+        assert_eq!(got.len(), oracle.len());
+        for ((req, a), b) in script.iter().zip(&oracle).zip(&got) {
+            if timing_dependent(req) {
+                compare_structural(req, a, b);
+            } else {
+                assert_eq!(
+                    a, b,
+                    "response to {req:?} diverged under worker offload (attempt {attempt})"
+                );
+            }
+        }
+        let st = SketchClient::connect(&addr).unwrap().stats_detailed().unwrap();
+        let r = st.reactor.expect("reactor section present");
+        offloaded = r.offloaded_batches;
+        if offloaded > 0 {
+            assert!(
+                r.coalesced_batches >= offloaded,
+                "every offloaded batch was coalesced first"
+            );
+            assert_eq!(r.worker_queue_depth, 0, "queue drains once the burst is answered");
+            break;
+        }
+    }
+    assert!(offloaded > 0, "20 pipelined bursts never offloaded a fused run");
+}
+
+/// Cross-loop isolation: with 4 loops, a slowloris dribbling its frame
+/// must not stall a fast client — whichever loops the kernel hashes
+/// the two connections onto (same or different), the fast client's
+/// round trips complete while the dribble is still in progress.
+#[test]
+fn serve_multi_loop_slowloris_never_stalls_fast_client() {
+    let (addr, _h) = spawn_server_cfg(ServerMode::Reactor, |c| {
+        c.reactor_threads = 4;
+    });
+    let payload = Request::Register {
+        id: "slow".into(),
+        vector: vec![0.25; 8],
+    }
+    .encode();
+    let mut framed = (payload.len() as u32).to_le_bytes().to_vec();
+    framed.extend_from_slice(&payload);
+
+    let slow_addr = addr.clone();
+    let slow = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&slow_addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        let start = Instant::now();
+        for b in &framed {
+            s.write_all(std::slice::from_ref(b)).unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let mut frame = Vec::new();
+        protocol::read_frame_into(&mut s, &mut frame).unwrap();
+        (frame, start.elapsed())
+    });
+
+    std::thread::sleep(Duration::from_millis(30));
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let ping = Request::Ping.encode();
+    let start = Instant::now();
+    let mut frame = Vec::new();
+    for _ in 0..30 {
+        protocol::write_frame(&mut stream, &ping).unwrap();
+        protocol::read_frame_into(&mut reader, &mut frame).unwrap();
+        assert_eq!(Response::decode(&frame).unwrap(), Response::Pong);
+    }
+    let fast_elapsed = start.elapsed();
+
+    let (slow_frame, slow_elapsed) = slow.join().unwrap();
+    assert_eq!(
+        Response::decode(&slow_frame).unwrap(),
+        Response::Registered { id: "slow".into() }
+    );
+    assert!(
+        fast_elapsed < slow_elapsed / 2,
+        "30 fast round trips took {fast_elapsed:?} against a {slow_elapsed:?} slowloris"
+    );
+}
+
+/// Idle disconnect (the reactor now honors `--conn-timeout-ms` via its
+/// coarse sweep): an idle connection is closed after the timeout while
+/// a connection that keeps pipelining requests through the same window
+/// is left alone.
+#[test]
+fn serve_reactor_idle_timeout_closes_idle_but_not_active() {
+    let (addr, _h) = spawn_server_cfg(ServerMode::Reactor, |c| {
+        c.conn_timeout = Some(Duration::from_millis(300));
+    });
+
+    // The idle connection: sends one ping (so it's fully established
+    // and counted), then goes quiet.
+    let mut idle = TcpStream::connect(&addr).unwrap();
+    idle.set_nodelay(true).unwrap();
+    let mut idle_reader = BufReader::new(idle.try_clone().unwrap());
+    let ping = Request::Ping.encode();
+    let mut frame = Vec::new();
+    protocol::write_frame(&mut idle, &ping).unwrap();
+    protocol::read_frame_into(&mut idle_reader, &mut frame).unwrap();
+
+    // The active connection pings through the whole idle window.
+    let mut active = TcpStream::connect(&addr).unwrap();
+    active.set_nodelay(true).unwrap();
+    let mut active_reader = BufReader::new(active.try_clone().unwrap());
+    for _ in 0..15 {
+        protocol::write_frame(&mut active, &ping).unwrap();
+        protocol::read_frame_into(&mut active_reader, &mut frame).unwrap();
+        assert_eq!(Response::decode(&frame).unwrap(), Response::Pong);
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // 1.5 s of activity has passed — the idle peer must be gone (EOF,
+    // not a hang; the sweep runs off the epoll timeout, so give it
+    // slack but bound the wait).
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 16];
+    assert_eq!(
+        idle.read(&mut buf).unwrap(),
+        0,
+        "idle connection should be closed by the timeout sweep"
+    );
+
+    // The active connection survived the sweep.
+    protocol::write_frame(&mut active, &ping).unwrap();
+    protocol::read_frame_into(&mut active_reader, &mut frame).unwrap();
+    assert_eq!(Response::decode(&frame).unwrap(), Response::Pong);
+}
+
+/// Cooperative shutdown: tripping the flag makes every loop close its
+/// connections, the workers join, and `serve` itself returns `Ok` —
+/// no leaked threads, no error, and the port stops accepting.
+#[test]
+fn serve_shutdown_joins_all_loops_and_workers() {
+    let flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let (addr, handle) = spawn_server_cfg(ServerMode::Reactor, {
+        let flag = flag.clone();
+        move |c| {
+            c.reactor_threads = 4;
+            c.reactor_workers = 2;
+            c.shutdown = Some(flag);
+        }
+    });
+
+    // The server works before the trip.
+    let mut c = SketchClient::connect(&addr).unwrap();
+    c.ping().unwrap();
+    let st = c.stats_detailed().unwrap();
+    assert_eq!(
+        st.reactor.expect("reactor section").per_loop.len(),
+        4,
+        "all four loops came up"
+    );
+
+    flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    // Loops poll with a finite timeout when a shutdown flag is set, so
+    // the whole front-end (loops + workers) joins promptly and clean.
+    handle
+        .join()
+        .expect("serve thread must not panic")
+        .expect("cooperative shutdown must return Ok");
+
+    // Our pre-shutdown connection was closed by the drain, and the
+    // listeners are gone: a fresh connect must fail outright or be
+    // reset before answering.
+    let dead = TcpStream::connect(&addr).and_then(|mut s| {
+        s.set_read_timeout(Some(Duration::from_secs(2)))?;
+        protocol::write_frame(&mut s, &Request::Ping.encode())?;
+        let mut buf = [0u8; 4];
+        match s.read(&mut buf) {
+            Ok(0) => Err(std::io::Error::new(std::io::ErrorKind::ConnectionAborted, "eof")),
+            Ok(_) => Ok(()),
+            Err(e) => Err(e),
+        }
+    });
+    assert!(dead.is_err(), "the shut-down server must stop answering");
 }

@@ -12,7 +12,9 @@
 //!
 //! This lives in its own test binary so concurrently running tests
 //! can't allocate into the measurement windows. The `serve_` name keeps
-//! it inside CI's `cargo test --release -q serve` step.
+//! it inside CI's `cargo test --release -q serve` step, and the sharded
+//! leg (`CRP_SERVE_MODE=reactor-multi`) re-runs it standalone against
+//! 4 loops + 2 workers.
 #![cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
 
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -62,11 +64,18 @@ fn serve_reactor_steady_state_allocates_nothing_per_request() {
         seed: 7,
         ..Default::default()
     }));
-    let cfg = ServerConfig {
+    let mut cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         server_mode: ServerMode::Reactor,
         ..Default::default()
     };
+    // CI's sharded leg re-runs the pin against the multi-loop + worker
+    // layout: the loop that owns this connection must stay just as
+    // allocation-free (Ping never offloads, so workers sit idle).
+    if std::env::var("CRP_SERVE_MODE").as_deref() == Ok("reactor-multi") {
+        cfg.reactor_threads = 4;
+        cfg.reactor_workers = 2;
+    }
     let (tx, rx) = std::sync::mpsc::channel();
     std::thread::spawn(move || {
         let _ = serve(projector, cfg, Some(tx));
